@@ -1,0 +1,79 @@
+//! Ablation: **LOD on vs off** (DESIGN.md §10) — the paper's claim that
+//! LOD compression collapses an exponential delay-path space to
+//! logarithmic (§II-C.2) while preserving classification.
+//!
+//! Sweeps the class-sum range and reports: delay-line stages (hardware
+//! cost), worst-case race time, and argmax fidelity of the compressed
+//! encoding vs the exact linear encoding.
+//!
+//! Run: `cargo bench --bench ablation_lod`
+
+use tsetlin_td::sim::{TechParams, Time};
+use tsetlin_td::timedomain::lod;
+use tsetlin_td::util::{SplitMix64, Table};
+
+fn main() {
+    let tech = TechParams::tsmc65_proposed();
+    let e = tech.fine_bits;
+
+    let mut t = Table::new(vec![
+        "max sum",
+        "linear stages",
+        "LOD stages",
+        "compression",
+        "linear worst delay (ns)",
+        "LOD worst delay (ns)",
+    ]);
+    for pow in [4u32, 6, 8, 10, 12, 14] {
+        let max_sum = 1u64 << pow;
+        let linear_stages = max_sum;
+        let lod_stages = lod::lod_stage_count(max_sum, e);
+        let tau = tech.tau();
+        let linear_delay = Time::fs(max_sum * tau.as_fs());
+        let lod_delay = lod::lod_delay(max_sum, e, tau);
+        t.row(vec![
+            max_sum.to_string(),
+            linear_stages.to_string(),
+            lod_stages.to_string(),
+            format!("{:.0}x", linear_stages as f64 / lod_stages as f64),
+            format!("{:.2}", linear_delay.as_ns_f64()),
+            format!("{:.2}", lod_delay.as_ns_f64()),
+        ]);
+    }
+    println!("== Ablation: LOD compression vs linear delay encoding ==");
+    println!("{}", t.render());
+
+    // Fidelity: fraction of random (S,M) pairs whose pairwise order under
+    // the LOD-compressed differential objective matches exact argmax.
+    let mut rng = SplitMix64::new(99);
+    let mut t2 = Table::new(vec!["sum range", "pairwise order agreement %"]);
+    for range in [16u64, 32, 64, 128, 256] {
+        let mut agree = 0u64;
+        let trials = 20_000u64;
+        for _ in 0..trials {
+            let (s1, m1) = (rng.next_below(range), rng.next_below(range));
+            let (s2, m2) = (rng.next_below(range), rng.next_below(range));
+            let exact = (m1 as i64 - s1 as i64).cmp(&(m2 as i64 - s2 as i64));
+            let g = |v: u64| lod::lod_delay_units(v, e) as i64;
+            let comp = (g(m1) - g(s1)).cmp(&(g(m2) - g(s2)));
+            if exact == comp || exact == std::cmp::Ordering::Equal {
+                agree += 1;
+            }
+        }
+        t2.row(vec![
+            format!("0..{range}"),
+            format!("{:.1}", 100.0 * agree as f64 / trials as f64),
+        ]);
+    }
+    println!("== LOD ordering fidelity (the cost of log compression) ==");
+    println!("{}", t2.render());
+    println!(
+        "note: disagreements concentrate where |M−S| is small relative to the\n\
+         magnitude scale — the quantisation the paper accepts for log path length."
+    );
+
+    // Structural claims.
+    assert!(lod::lod_stage_count(1 << 12, e) <= 16);
+    assert!((1u64 << 12) / lod::lod_stage_count(1 << 12, e) > 200);
+    println!("shape assertions: OK (exponential -> logarithmic path)");
+}

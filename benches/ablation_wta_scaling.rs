@@ -1,0 +1,95 @@
+//! Ablation: **WTA topology scaling** (Table I's trade-off swept wide) —
+//! latency, energy and cell count for TBA vs Mesh as the class count
+//! grows, including behaviour under close races (metastability stress).
+//!
+//! Run: `cargo bench --bench ablation_wta_scaling`
+
+use tsetlin_td::sim::energy::TechParams;
+use tsetlin_td::sim::{Circuit, Logic, NetId, Time};
+use tsetlin_td::util::Table;
+use tsetlin_td::wta::{self, analysis, WtaKind};
+
+/// Race with a configurable winner margin; returns (winner==0, decision ps).
+fn stress_race(kind: WtaKind, m: usize, margin_ps: u64, tech: &TechParams) -> (bool, f64) {
+    let mut c = Circuit::new(tech.clone());
+    let races: Vec<NetId> = (0..m)
+        .map(|i| c.net_init(format!("race{i}"), Logic::Zero))
+        .collect();
+    let arb = wta::build(&mut c, kind, "wta", &races);
+    c.init_components();
+    c.run_to_quiescence().unwrap();
+    let t0 = Time::ps(100);
+    for (i, &r) in races.iter().enumerate() {
+        let d = if i == 0 {
+            t0
+        } else {
+            t0 + Time::ps(margin_ps * i as u64)
+        };
+        c.drive(r, Logic::One, d);
+    }
+    let grants = arb.grants.clone();
+    let decided = c
+        .run_while(Time::ns(10_000), |cc| {
+            grants.iter().any(|g| cc.value(*g) == Logic::One)
+        })
+        .unwrap();
+    assert!(decided);
+    let winner0 = c.value(grants[0]) == Logic::One;
+    (winner0, c.now().since(t0).as_ps_f64())
+}
+
+fn main() {
+    let tech = TechParams::tsmc65_digital();
+    let mut t = Table::new(vec![
+        "m",
+        "TBA cells",
+        "Mesh cells",
+        "TBA latency (ps)",
+        "Mesh latency (ps)",
+        "TBA energy (fJ)",
+        "Mesh energy (fJ)",
+    ]);
+    for m in [2usize, 4, 8, 16, 32] {
+        t.row(vec![
+            m.to_string(),
+            analysis::tba_analysis(m, &tech).cell_count.to_string(),
+            analysis::mesh_analysis(m, &tech).cell_count.to_string(),
+            format!("{:.0}", analysis::measured_latency(WtaKind::Tba, m, &tech).as_ps_f64()),
+            format!("{:.0}", analysis::measured_latency(WtaKind::Mesh, m, &tech).as_ps_f64()),
+            format!("{:.1}", analysis::measured_energy_fj(WtaKind::Tba, m, &tech)),
+            format!("{:.1}", analysis::measured_energy_fj(WtaKind::Mesh, m, &tech)),
+        ]);
+    }
+    println!("== WTA scaling: tree vs mesh ==");
+    println!("{}", t.render());
+
+    // Metastability stress: shrink the margin and watch decisions slow
+    // but stay correct (first arrival) and one-hot.
+    let mut t2 = Table::new(vec![
+        "margin (ps)",
+        "TBA correct",
+        "TBA decision (ps)",
+        "Mesh correct",
+        "Mesh decision (ps)",
+    ]);
+    for margin in [200u64, 50, 20, 8, 2] {
+        let (ok_t, lat_t) = stress_race(WtaKind::Tba, 4, margin, &tech);
+        let (ok_m, lat_m) = stress_race(WtaKind::Mesh, 4, margin, &tech);
+        t2.row(vec![
+            margin.to_string(),
+            ok_t.to_string(),
+            format!("{lat_t:.0}"),
+            ok_m.to_string(),
+            format!("{lat_m:.0}"),
+        ]);
+    }
+    println!("== Close-race stress (m=4, decreasing winner margin) ==");
+    println!("{}", t2.render());
+
+    // Wide-margin races must always pick the first arrival.
+    for m in [4usize, 8, 16] {
+        assert!(stress_race(WtaKind::Tba, m, 300, &tech).0);
+        assert!(stress_race(WtaKind::Mesh, m, 300, &tech).0);
+    }
+    println!("shape assertions: OK");
+}

@@ -1,0 +1,48 @@
+//! Regenerates the waveform figures (**Figs. 6, 7, 8**) as VCD files
+//! under `waves/`, and verifies the Fig. 6 property: for the Iris input
+//! sequence, the DT-domain classifications grant the target classes
+//! (2, 0, 1, 1).
+//!
+//! Run: `cargo bench --bench fig_waveforms` (then open in GTKWave)
+
+use tsetlin_td::arch::proposed_cotm::ProposedCotm;
+use tsetlin_td::arch::proposed_tm::ProposedMulticlass;
+use tsetlin_td::arch::waveforms;
+use tsetlin_td::arch::Architecture;
+use tsetlin_td::tm::{cotm_train::train_cotm, data, train::train_multiclass, TmParams};
+use tsetlin_td::wta::WtaKind;
+
+fn main() {
+    std::fs::create_dir_all("waves").expect("mkdir waves");
+    for line in waveforms::dump_all("waves").expect("dump") {
+        println!("wrote {line}");
+    }
+
+    // Fig. 6 semantic check: the (2, 0, 1, 1) target sequence.
+    let d = data::iris().unwrap();
+    let (tr, _) = d.split(0.8, 42);
+    let m = train_multiclass(TmParams::iris_paper(), &tr, 60, 2).unwrap();
+    let cm = train_cotm(TmParams::iris_paper(), &tr, 150, 3).unwrap();
+    let mut prop_mc = ProposedMulticlass::new(m, WtaKind::Tba).unwrap();
+    let mut prop_co = ProposedCotm::new(cm, WtaKind::Tba).unwrap();
+
+    let idx = [
+        d.labels.iter().position(|&l| l == 2).unwrap(),
+        d.labels.iter().position(|&l| l == 0).unwrap(),
+        d.labels.iter().position(|&l| l == 1).unwrap(),
+        d.labels.iter().rposition(|&l| l == 1).unwrap(),
+    ];
+    let targets = [2usize, 0, 1, 1];
+    let mut mc_preds = Vec::new();
+    let mut co_preds = Vec::new();
+    for &i in &idx {
+        mc_preds.push(prop_mc.infer(&d.features[i]).unwrap().predicted);
+        co_preds.push(prop_co.infer(&d.features[i]).unwrap().predicted);
+    }
+    println!("fig6 target sequence {targets:?}");
+    println!("  multiclass DT predictions: {mc_preds:?}");
+    println!("  cotm       DT predictions: {co_preds:?}");
+    assert_eq!(mc_preds, targets, "multiclass DT must predict (2,0,1,1)");
+    assert_eq!(co_preds, targets, "CoTM DT must predict (2,0,1,1)");
+    println!("fig6 sequence check: OK");
+}

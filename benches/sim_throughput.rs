@@ -1,0 +1,125 @@
+//! Host-performance bench for the L3 hot paths (the §Perf targets in
+//! EXPERIMENTS.md): event-simulator throughput (events/s), per-inference
+//! wall time of every architecture, and coordinator serving throughput.
+//!
+//! Run: `cargo bench --bench sim_throughput`
+
+use std::time::Instant;
+
+use tsetlin_td::arch::digital::{
+    async_bd_cotm, async_bd_multiclass, sync_cotm, sync_multiclass,
+};
+use tsetlin_td::arch::proposed_cotm::ProposedCotm;
+use tsetlin_td::arch::proposed_tm::ProposedMulticlass;
+use tsetlin_td::arch::Architecture;
+use tsetlin_td::config::ServeConfig;
+use tsetlin_td::coordinator::{Backend, CoordinatorServer, InferRequest};
+use tsetlin_td::sim::energy::TechParams;
+use tsetlin_td::sim::{Circuit, Logic, Time};
+use tsetlin_td::tm::{cotm_train::train_cotm, data, train::train_multiclass, TmParams};
+use tsetlin_td::util::Table;
+use tsetlin_td::wta::WtaKind;
+
+/// Raw event-queue throughput: a long inverter chain pulsed repeatedly.
+fn event_throughput() -> f64 {
+    use tsetlin_td::gates::basic::{Gate, GateOp};
+    let tech = TechParams::tsmc65_digital();
+    let mut c = Circuit::new(tech.clone());
+    let mut prev = c.net("n0");
+    let input = prev;
+    for i in 0..2_000 {
+        let out = c.net(format!("n{}", i + 1));
+        c.add(
+            Box::new(Gate::new(format!("inv{i}"), GateOp::Inv, vec![prev], out, &tech)),
+            vec![prev],
+        );
+        prev = out;
+    }
+    let t0 = Instant::now();
+    for k in 0..200u64 {
+        let v = if k % 2 == 0 { Logic::One } else { Logic::Zero };
+        c.drive(input, v, Time::ps(1));
+        c.run_to_quiescence().unwrap();
+    }
+    c.events_processed() as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    println!("== L3 host-performance profile ==");
+    let evs = event_throughput();
+    println!("event-sim throughput: {:.2} M events/s", evs / 1e6);
+
+    let d = data::iris().expect("iris");
+    let (tr, _) = d.split(0.8, 42);
+    let m = train_multiclass(TmParams::iris_paper(), &tr, 60, 2).unwrap();
+    let cm = train_cotm(TmParams::iris_paper(), &tr, 150, 3).unwrap();
+
+    let mut t = Table::new(vec![
+        "architecture",
+        "host us/infer",
+        "sim events/infer",
+        "host inferences/s",
+    ]);
+    let mut archs: Vec<Box<dyn Architecture>> = vec![
+        Box::new(sync_multiclass(m.clone())),
+        Box::new(async_bd_multiclass(m.clone())),
+        Box::new(ProposedMulticlass::new(m.clone(), WtaKind::Tba).unwrap()),
+        Box::new(sync_cotm(cm.clone())),
+        Box::new(async_bd_cotm(cm.clone())),
+        Box::new(ProposedCotm::new(cm.clone(), WtaKind::Tba).unwrap()),
+    ];
+    for a in archs.iter_mut() {
+        // warmup
+        for x in d.features.iter().take(10) {
+            a.infer(x).unwrap();
+        }
+        let t0 = Instant::now();
+        let mut events = 0u64;
+        let n = 300usize;
+        for i in 0..n {
+            events += a.infer(&d.features[i % d.len()]).unwrap().sim_events;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        t.row(vec![
+            a.name().to_string(),
+            format!("{:.1}", dt * 1e6 / n as f64),
+            format!("{:.0}", events as f64 / n as f64),
+            format!("{:.0}", n as f64 / dt),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Coordinator serving throughput (simulated backends, no golden —
+    // benches must run without artifacts too).
+    let cfg = ServeConfig { workers: 4, ..ServeConfig::default() };
+    let srv = CoordinatorServer::new(&cfg, m, cm, false).unwrap();
+    let n = 2_000usize;
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n);
+    let backends = [
+        Backend::ProposedMulticlass,
+        Backend::ProposedCotm,
+        Backend::AsyncBdMulticlass,
+        Backend::AsyncBdCotm,
+    ];
+    for i in 0..n {
+        if let Ok(rx) = srv.submit(InferRequest {
+            features: d.features[i % d.len()].clone(),
+            backend: backends[i % backends.len()],
+        }) {
+            pending.push(rx);
+        }
+    }
+    let served = pending
+        .into_iter()
+        .filter(|rx| rx.recv().map(|r| r.is_ok()).unwrap_or(false))
+        .count();
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "coordinator: {served}/{n} served in {:.2}s = {:.0} req/s (4 workers)",
+        dt,
+        served as f64 / dt
+    );
+    println!("{}", srv.stats().render());
+    srv.shutdown();
+}

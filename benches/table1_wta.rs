@@ -1,0 +1,57 @@
+//! Regenerates **Table I** (theoretical analysis of WTA implementations)
+//! plus measured latency/energy from the event simulator.
+//!
+//! Run: `cargo bench --bench table1_wta`
+
+use tsetlin_td::sim::TechParams;
+use tsetlin_td::util::Table;
+use tsetlin_td::wta::{analysis, WtaKind};
+
+fn main() {
+    let tech = TechParams::tsmc65_digital();
+    let mut t = Table::new(vec![
+        "Config.",
+        "m",
+        "Arbitration Depth",
+        "Cell Count",
+        "Latency theory (ps)",
+        "Latency measured (ps)",
+        "Energy measured (fJ)",
+    ]);
+    for m in [2usize, 3, 4, 8, 16, 32, 64] {
+        for kind in [WtaKind::Tba, WtaKind::Mesh] {
+            let a = match kind {
+                WtaKind::Tba => analysis::tba_analysis(m, &tech),
+                WtaKind::Mesh => analysis::mesh_analysis(m, &tech),
+            };
+            t.row(vec![
+                match kind {
+                    WtaKind::Tba => "TBA".to_string(),
+                    WtaKind::Mesh => "Mesh-Like".to_string(),
+                },
+                m.to_string(),
+                a.arbitration_depth.to_string(),
+                a.cell_count.to_string(),
+                format!("{:.0}", a.latency_theory.as_ps_f64()),
+                format!("{:.0}", analysis::measured_latency(kind, m, &tech).as_ps_f64()),
+                format!("{:.1}", analysis::measured_energy_fj(kind, m, &tech)),
+            ]);
+        }
+    }
+    println!("== Table I — WTA implementations (theory vs event-sim) ==");
+    println!("{}", t.render());
+
+    // Table I's structural claims.
+    let t8 = analysis::tba_analysis(8, &tech);
+    let m8 = analysis::mesh_analysis(8, &tech);
+    assert_eq!(t8.arbitration_depth, 3); // log2 m
+    assert_eq!(t8.cell_count, 7); // m-1
+    assert_eq!(m8.arbitration_depth, 7); // m-1
+    assert_eq!(m8.cell_count, 28); // m(m-1)/2
+    assert!(
+        analysis::measured_energy_fj(WtaKind::Mesh, 16, &tech)
+            > analysis::measured_energy_fj(WtaKind::Tba, 16, &tech),
+        "mesh cell count must cost energy"
+    );
+    println!("shape assertions: OK");
+}

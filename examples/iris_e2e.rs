@@ -1,0 +1,163 @@
+//! **End-to-end driver** (DESIGN.md §8): the full three-layer stack on
+//! the paper's real workload.
+//!
+//! 1. Train a multi-class TM and a CoTM on the real Iris dataset
+//!    (F=16 booleanised features, C=12 clauses, K=3 classes — §III-A).
+//! 2. Functional verification: all six event-driven hardware
+//!    architectures agree with the software reference, and the
+//!    AOT-compiled L2 JAX/Pallas golden model (via PJRT) agrees
+//!    bit-exactly with the rust reference — the paper's "all logically
+//!    equivalent implementations achieve identical accuracy".
+//! 3. Reproduce Table IV on the trained models.
+//! 4. Serve a batched request stream through the coordinator (golden
+//!    functional path + simulated paths) and report latency/throughput.
+//!
+//! Results are recorded in EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example iris_e2e`
+
+use std::time::Instant;
+
+use tsetlin_td::arch::digital::{
+    async_bd_cotm, async_bd_multiclass, sync_cotm, sync_multiclass,
+};
+use tsetlin_td::arch::metrics::{evaluate, render_table_iv};
+use tsetlin_td::arch::proposed_cotm::ProposedCotm;
+use tsetlin_td::arch::proposed_tm::ProposedMulticlass;
+use tsetlin_td::arch::Architecture;
+use tsetlin_td::config::ServeConfig;
+use tsetlin_td::coordinator::{Backend, CoordinatorServer, InferRequest};
+use tsetlin_td::tm::{cotm_train::train_cotm, data, infer, train::train_multiclass, TmParams};
+use tsetlin_td::util::SplitMix64;
+use tsetlin_td::wta::WtaKind;
+
+fn main() -> tsetlin_td::Result<()> {
+    println!("=== 1. Train on real Iris (150 samples, 16 bool features, 3 classes) ===");
+    let d = data::iris()?;
+    let (tr, te) = d.split(0.8, 42);
+    let m = train_multiclass(TmParams::iris_paper(), &tr, 60, 2)?;
+    let cm = train_cotm(TmParams::iris_paper(), &tr, 150, 3)?;
+    println!(
+        "multiclass TM: train {:.1}% / test {:.1}%",
+        100.0 * infer::multiclass_accuracy(&m, &tr.features, &tr.labels),
+        100.0 * infer::multiclass_accuracy(&m, &te.features, &te.labels)
+    );
+    println!(
+        "CoTM:          train {:.1}% / test {:.1}%",
+        100.0 * infer::cotm_accuracy(&cm, &tr.features, &tr.labels),
+        100.0 * infer::cotm_accuracy(&cm, &te.features, &te.labels)
+    );
+
+    println!("\n=== 2. Functional verification across all implementations ===");
+    let mut archs: Vec<Box<dyn Architecture>> = vec![
+        Box::new(sync_multiclass(m.clone())),
+        Box::new(async_bd_multiclass(m.clone())),
+        Box::new(ProposedMulticlass::new(m.clone(), WtaKind::Tba)?),
+        Box::new(sync_cotm(cm.clone())),
+        Box::new(async_bd_cotm(cm.clone())),
+        Box::new(ProposedCotm::new(cm.clone(), WtaKind::Tba)?),
+    ];
+    for a in archs.iter_mut() {
+        let mut agree = 0usize;
+        let mut acc = 0usize;
+        for (x, &y) in d.features.iter().zip(&d.labels) {
+            let r = a.infer(x)?;
+            let exact = infer::predict_argmax(&r.class_sums);
+            // A WTA tie may grant a different *maximiser* — equally correct.
+            if r.predicted == exact || r.class_sums[r.predicted] == r.class_sums[exact] {
+                agree += 1;
+            }
+            if r.predicted == y {
+                acc += 1;
+            }
+        }
+        println!(
+            "{:24} argmax agreement {:5.1}%   accuracy {:5.1}%",
+            a.name(),
+            100.0 * agree as f64 / d.len() as f64,
+            100.0 * acc as f64 / d.len() as f64
+        );
+    }
+
+    let with_golden = std::path::Path::new("artifacts/manifest.json").exists();
+    if with_golden {
+        println!("\n=== 2b. Golden model (AOT JAX/Pallas via PJRT) vs rust reference ===");
+        let svc = tsetlin_td::runtime::GoldenService::spawn(
+            "artifacts".into(),
+            tsetlin_td::runtime::golden::GoldenModels {
+                multiclass_include: m.include_f32(),
+                cotm_include: cm.include_f32(),
+                cotm_weights: cm.weights_f32(),
+            },
+        )?;
+        let rows: Vec<Vec<f32>> = d
+            .features
+            .iter()
+            .map(|r| r.iter().map(|&b| b as u8 as f32).collect())
+            .collect();
+        let mut mism = 0usize;
+        for (family, reference) in [("multiclass_tm", true), ("cotm", false)] {
+            let out = svc.infer_batch(family, rows.clone())?;
+            for (i, (sums, _)) in out.iter().enumerate() {
+                let want = if reference {
+                    infer::multiclass_class_sums(&m, &d.features[i])
+                } else {
+                    infer::cotm_class_sums(&cm, &d.features[i])
+                };
+                let got: Vec<i32> = sums.iter().map(|&x| x as i32).collect();
+                if got != want {
+                    mism += 1;
+                }
+            }
+            println!("{family}: {} samples, {mism} mismatches", out.len());
+        }
+        assert_eq!(mism, 0, "golden model must match bit-exactly");
+    } else {
+        println!("\n(artifacts/ missing — run `make artifacts` for the golden-model check)");
+    }
+
+    println!("\n=== 3. Table IV on the trained models ===");
+    let mut rows = Vec::new();
+    for a in archs.iter_mut() {
+        rows.push(evaluate(a.as_mut(), &d.features, &d.labels)?);
+    }
+    println!("{}", render_table_iv(&rows));
+
+    println!("=== 4. Serve a batched request stream through the coordinator ===");
+    let cfg = ServeConfig { workers: 4, max_batch: 16, ..ServeConfig::default() };
+    let srv = CoordinatorServer::new(&cfg, m, cm, with_golden)?;
+    let n = 1000usize;
+    let mut rng = SplitMix64::new(5);
+    let backends: Vec<Backend> = Backend::ALL
+        .iter()
+        .copied()
+        .filter(|b| with_golden || !b.is_golden())
+        .collect();
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n);
+    for i in 0..n {
+        let b = backends[rng.index(backends.len())];
+        match srv.submit(InferRequest {
+            features: d.features[i % d.len()].clone(),
+            backend: b,
+        }) {
+            Ok(rx) => pending.push(rx),
+            Err(_) => {} // backpressure: counted in stats
+        }
+    }
+    let ok = pending
+        .into_iter()
+        .filter(|rx| rx.recv().map(|r| r.is_ok()).unwrap_or(false))
+        .count();
+    let dt = t0.elapsed();
+    println!(
+        "served {ok}/{n} requests in {:.1} ms -> {:.0} req/s",
+        dt.as_secs_f64() * 1e3,
+        ok as f64 / dt.as_secs_f64()
+    );
+    println!("{}", srv.stats().render());
+    srv.shutdown();
+
+    println!("\niris_e2e OK");
+    Ok(())
+}

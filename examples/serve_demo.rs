@@ -1,0 +1,104 @@
+//! Serving-coordinator demo: a mixed request stream across every
+//! backend, with dynamic batching on the golden (AOT/PJRT) path,
+//! per-backend routing, worker-pool hardware simulation, and
+//! backpressure.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_demo`
+//! (works without artifacts too: `--no-golden` falls back automatically)
+
+use std::time::Instant;
+
+use tsetlin_td::config::ServeConfig;
+use tsetlin_td::coordinator::{Backend, CoordinatorServer, InferRequest};
+use tsetlin_td::tm::{cotm_train::train_cotm, data, train::train_multiclass, TmParams};
+use tsetlin_td::util::SplitMix64;
+
+fn main() -> tsetlin_td::Result<()> {
+    let d = data::iris()?;
+    let (tr, _) = d.split(0.8, 42);
+    let m = train_multiclass(TmParams::iris_paper(), &tr, 60, 2)?;
+    let cm = train_cotm(TmParams::iris_paper(), &tr, 150, 3)?;
+
+    let with_golden = std::path::Path::new("artifacts/manifest.json").exists();
+    let cfg = ServeConfig {
+        workers: 4,
+        max_batch: 16,
+        batch_timeout_us: 300,
+        queue_depth: 512,
+        ..ServeConfig::default()
+    };
+    println!("coordinator config: {cfg:?}");
+    let srv = CoordinatorServer::new(&cfg, m, cm, with_golden)?;
+
+    // Phase 1: golden-path burst — watch the batcher coalesce.
+    if with_golden {
+        println!("\n-- phase 1: 256-request golden burst (dynamic batching) --");
+        let t0 = Instant::now();
+        let pending: Vec<_> = (0..256)
+            .filter_map(|i| {
+                srv.submit(InferRequest {
+                    features: d.features[i % d.len()].clone(),
+                    backend: if i % 2 == 0 {
+                        Backend::GoldenMulticlass
+                    } else {
+                        Backend::GoldenCotm
+                    },
+                })
+                .ok()
+            })
+            .collect();
+        let ok = pending
+            .into_iter()
+            .filter(|rx| rx.recv().map(|r| r.is_ok()).unwrap_or(false))
+            .count();
+        println!(
+            "golden burst: {ok}/256 in {:.1} ms; {}",
+            t0.elapsed().as_secs_f64() * 1e3,
+            srv.stats().render()
+        );
+    }
+
+    // Phase 2: mixed hardware-model traffic with per-request energy.
+    println!("\n-- phase 2: mixed hardware-simulation traffic --");
+    let mut rng = SplitMix64::new(3);
+    let hw: Vec<Backend> = Backend::ALL.iter().copied().filter(|b| !b.is_golden()).collect();
+    let t0 = Instant::now();
+    let mut per_backend: std::collections::BTreeMap<&str, (usize, f64)> = Default::default();
+    let mut pending = Vec::new();
+    for i in 0..600 {
+        let b = *rng.pick_slice(&hw);
+        if let Ok(rx) = srv.submit(InferRequest {
+            features: d.features[i % d.len()].clone(),
+            backend: b,
+        }) {
+            pending.push(rx);
+        }
+    }
+    for rx in pending {
+        if let Ok(Ok(r)) = rx.recv() {
+            let e = per_backend.entry(r.backend.name()).or_default();
+            e.0 += 1;
+            e.1 += r.hw_energy_fj.unwrap_or(0.0);
+        }
+    }
+    println!("mixed phase took {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    for (name, (count, energy)) in &per_backend {
+        println!(
+            "  {name:24} {count:4} reqs, mean hardware energy {:.0} fJ/inf",
+            energy / *count as f64
+        );
+    }
+
+    println!("\nfinal stats: {}", srv.stats().render());
+    srv.shutdown();
+    Ok(())
+}
+
+trait PickSlice {
+    fn pick_slice<'a, T>(&mut self, xs: &'a [T]) -> &'a T;
+}
+impl PickSlice for SplitMix64 {
+    fn pick_slice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.index(xs.len())]
+    }
+}

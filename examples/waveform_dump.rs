@@ -1,0 +1,16 @@
+//! Dump the paper's waveform figures (Figs. 6–8) as VCD files.
+//!
+//! Run: `cargo run --release --example waveform_dump [out_dir]`
+//! View: `gtkwave waves/fig6a_multiclass_dt.vcd`
+
+use tsetlin_td::arch::waveforms;
+
+fn main() -> tsetlin_td::Result<()> {
+    let out_dir = std::env::args().nth(1).unwrap_or_else(|| "waves".into());
+    std::fs::create_dir_all(&out_dir)?;
+    for line in waveforms::dump_all(&out_dir)? {
+        println!("wrote {line}");
+    }
+    println!("\nopen with GTKWave, e.g.: gtkwave {out_dir}/fig6b_cotm_dt.vcd");
+    Ok(())
+}

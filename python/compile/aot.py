@@ -1,0 +1,121 @@
+"""AOT lowering: JAX (L2+L1) -> HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).  The text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Lowering path: jax.jit(fn).lower(...) -> stablehlo -> XlaComputation
+(``return_tuple=True``) -> ``as_hlo_text()``.  The rust side unwraps the
+1-tuple with ``to_tuple1()``.
+
+Run once at build time (``make artifacts``); the rust binary is
+self-contained afterwards.  A ``manifest.json`` sidecar records every
+artifact's entry shapes so the rust runtime can validate inputs without
+parsing HLO.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts \
+            [--features 16 --clauses 12 --classes 3 --batches 1,16,64]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax computation -> HLO text via stablehlo round-trip."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_artifacts(out_dir: str, features: int, clauses: int, classes: int,
+                    batches: list[int]) -> dict:
+    """Lower every model variant; returns the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {
+        "version": 1,
+        "literal_order": "interleaved",  # [x0, !x0, x1, !x1, ...]
+        "features": features,
+        "clauses": clauses,
+        "classes": classes,
+        "artifacts": {},
+    }
+    twof = 2 * features
+
+    def emit(name: str, fn, args, arg_shapes, out_shape):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": arg_shapes,
+            "out": out_shape,
+        }
+        print(f"  {name}.hlo.txt  ({len(text)} chars)")
+
+    for b in batches:
+        emit(
+            f"multiclass_tm_b{b}",
+            model.multiclass_tm_infer,
+            (f32(b, features), f32(classes, clauses, twof)),
+            [[b, features], [classes, clauses, twof]],
+            [b, classes],
+        )
+        emit(
+            f"cotm_b{b}",
+            model.cotm_infer,
+            (f32(b, features), f32(clauses, twof), f32(classes, clauses)),
+            [[b, features], [clauses, twof], [classes, clauses]],
+            [b, classes],
+        )
+        emit(
+            f"clause_only_b{b}",
+            model.clause_only,
+            (f32(b, features), f32(clauses, twof)),
+            [[b, features], [clauses, twof]],
+            [b, clauses],
+        )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--features", type=int, default=16,
+                    help="booleanised input features F (paper Iris: 16)")
+    ap.add_argument("--clauses", type=int, default=12,
+                    help="clauses per class (TM) / shared clauses (CoTM)")
+    ap.add_argument("--classes", type=int, default=3)
+    ap.add_argument("--batches", default="1,16,64",
+                    help="comma-separated batch sizes to lower")
+    args = ap.parse_args()
+    batches = [int(x) for x in args.batches.split(",")]
+    print(f"lowering artifacts -> {args.out_dir} "
+          f"(F={args.features} C={args.clauses} K={args.classes} B={batches})")
+    lower_artifacts(args.out_dir, args.features, args.clauses, args.classes,
+                    batches)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: class-sum accumulation (Eq. 1 / Eq. 2 of the paper).
+
+Two variants:
+
+* ``class_sum_weighted`` — CoTM (Eq. 2): clause outputs (B, C) contracted
+  against a signed weight matrix (K, C).  This is the binary-MAC the paper
+  moves into the time domain; on TPU it is an MXU-shaped matmul
+  (B × C)·(C × K) in f32.
+* ``class_sum_multiclass`` — vanilla multi-class TM (Eq. 1): alternating
+  ±1 polarity inside each class group, expressed as the same contraction
+  with a constant ±1 weight layout so both variants share one kernel body.
+
+Keeping the contraction in a single Pallas kernel (rather than composing
+jnp ops) mirrors the paper's single delay-accumulation module: one fused
+pass over the clause outputs, no intermediate (B, K, C) tensor in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matvec_kernel(cl_ref, w_ref, out_ref):
+    """(B, C) · (C, K) -> (B, K), accumulated in f32 on the MXU."""
+    out_ref[...] = jnp.dot(
+        cl_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@jax.jit
+def class_sum_weighted(clauses: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """CoTM class sums: clauses (B, C) × weights (K, C) -> sums (B, K)."""
+    b, c = clauses.shape
+    k = weights.shape[0]
+    return pl.pallas_call(
+        _matvec_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=True,
+    )(clauses, weights.T.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes",))
+def class_sum_multiclass(clauses: jnp.ndarray, *, num_classes: int) -> jnp.ndarray:
+    """Multi-class TM class sums via the shared contraction kernel.
+
+    clauses: (B, K*C) grouped per class; polarity alternates +,−,+,− within
+    each class group (Eq. 1).  Builds the equivalent block-diagonal ±1
+    weight matrix (K, K*C) once (it is constant-folded by XLA) and reuses
+    the weighted kernel.
+    """
+    b, total = clauses.shape
+    per_class = total // num_classes
+    polarity = jnp.where(jnp.arange(per_class) % 2 == 0, 1.0, -1.0)  # (C,)
+    eye = jnp.eye(num_classes, dtype=jnp.float32)  # (K, K)
+    weights = (eye[:, :, None] * polarity[None, None, :]).reshape(
+        num_classes, total
+    )  # (K, K*C) block-diagonal ±1
+    return class_sum_weighted(clauses, weights)

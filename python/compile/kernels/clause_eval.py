@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: Tsetlin-machine clause evaluation.
+
+The compute hot-spot of TM inference (Algorithm 2 of the paper) is the
+conjunction of included literals for every clause:
+
+    clause_j(X) = AND_l ( literal_l OR NOT include_{j,l} )
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper realises
+this as per-clause AND planes in 65 nm CMOS; on TPU the same computation is
+a masked max-reduction tiled for VMEM.  BlockSpec tiles the *clause*
+dimension so each grid step holds one (CLAUSE_TILE × 2F) include block and
+the full (B × 2F) literal panel resident in VMEM — the analogue of the
+paper's clause-parallel logic planes.  The batch panel is re-used across
+all clause tiles (it is the smaller operand), so HBM traffic is
+    2F·(B + NC) + B·NC   elements per call, the streaming lower bound.
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU numbers are estimated analytically in DESIGN.md §9.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Clause-dimension tile.  128 matches the TPU lane width so the
+# max-reduction vectorises across the full VPU register; the Iris model
+# (NC = 36) pads to a single tile.
+CLAUSE_TILE = 128
+
+
+def _clause_kernel(lit_ref, inc_ref, out_ref):
+    """One grid step: literals (B, 2F) × include-tile (TC, 2F) -> (B, TC).
+
+    violated[b, j] = max_l include[j, l] * (1 - lit[b, l])
+    out[b, j]      = (1 - violated) * nonempty[j]
+    """
+    lit = lit_ref[...]  # (B, 2F)
+    inc = inc_ref[...]  # (TC, 2F)
+    # (B, 1, 2F) against (1, TC, 2F) — broadcast, then reduce over literals.
+    violated = jnp.max(inc[None, :, :] * (1.0 - lit[:, None, :]), axis=-1)
+    nonempty = (jnp.sum(inc, axis=-1) > 0.0).astype(lit.dtype)  # (TC,)
+    out_ref[...] = (1.0 - violated) * nonempty[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("clause_tile",))
+def clause_eval(
+    literals: jnp.ndarray,
+    include: jnp.ndarray,
+    *,
+    clause_tile: int = CLAUSE_TILE,
+) -> jnp.ndarray:
+    """Evaluate all clauses: literals (B, 2F), include (NC, 2F) -> (B, NC).
+
+    Pads NC up to a multiple of ``clause_tile`` (padded clauses have empty
+    include masks, so they evaluate to 0 and are sliced away).
+    """
+    b, twof = literals.shape
+    nc = include.shape[0]
+    tiles = pl.cdiv(nc, clause_tile)
+    padded = tiles * clause_tile
+    if padded != nc:
+        include = jnp.pad(include, ((0, padded - nc), (0, 0)))
+
+    out = pl.pallas_call(
+        _clause_kernel,
+        grid=(tiles,),
+        in_specs=[
+            # Literal panel: full block, re-read each step (resident in VMEM).
+            pl.BlockSpec((b, twof), lambda i: (0, 0)),
+            # Include tile: marches along the clause dimension.
+            pl.BlockSpec((clause_tile, twof), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, clause_tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, padded), literals.dtype),
+        interpret=True,
+    )(literals, include)
+    return out[:, :nc]
+
+
+def make_literals_kernel(features: jnp.ndarray) -> jnp.ndarray:
+    """(B, F) -> (B, 2F) interleaved literals, as a tiny Pallas kernel.
+
+    Literal generation is a pure wiring stage in the paper's hardware
+    (Algorithm 2 lines 8–11); here it is a stack+reshape in VMEM.
+    """
+    b, f = features.shape
+
+    def _kernel(x_ref, o_ref):
+        x = x_ref[...]
+        lits = jnp.stack([x, 1.0 - x], axis=-1).reshape(x.shape[0], 2 * x.shape[1])
+        o_ref[...] = lits
+
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((b, 2 * f), features.dtype),
+        interpret=True,
+    )(features)

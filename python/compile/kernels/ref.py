@@ -1,0 +1,94 @@
+"""Pure-jnp oracle for the Pallas kernels and the full TM models.
+
+This module is the single source of functional truth for the whole stack:
+
+* the Pallas kernels in ``clause_eval.py`` / ``class_sum.py`` are asserted
+  against these functions by ``python/tests/``;
+* the rust event-driven hardware architectures are asserted against the
+  AOT-compiled L2 model, which itself is asserted against this oracle —
+  mirroring the paper's claim that *"all logically equivalent TM
+  implementations achieve identical inference accuracy"* (§III-A).
+
+Conventions
+-----------
+* ``features``: float32 (B, F) with values in {0.0, 1.0}.
+* ``include``:  float32 (..., 2F) in {0.0, 1.0}; literal order is
+  ``[x0, ¬x0, x1, ¬x1, ...]`` — *interleaved*, matching Algorithm 2 of the
+  paper (``literal[2i] = feature[i]; literal[2i+1] = ¬feature[i]``).
+* Empty clauses (no includes) output **0 during inference** — the standard
+  TM inference convention (they output 1 only during training).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_literals(features: jnp.ndarray) -> jnp.ndarray:
+    """(B, F) {0,1} features -> (B, 2F) interleaved literals.
+
+    literal[:, 2i] = x_i ; literal[:, 2i+1] = NOT x_i  (Algorithm 2).
+    """
+    b, f = features.shape
+    lits = jnp.stack([features, 1.0 - features], axis=-1)  # (B, F, 2)
+    return lits.reshape(b, 2 * f)
+
+
+def clause_outputs(literals: jnp.ndarray, include: jnp.ndarray) -> jnp.ndarray:
+    """Evaluate conjunctive clauses.
+
+    literals: (B, 2F); include: (NC, 2F)  ->  (B, NC) in {0,1}.
+
+    A clause fires iff every *included* literal is 1:
+        out = NOT OR_l( include_l AND NOT literal_l )   AND   (clause non-empty)
+    """
+    violated = jnp.max(
+        include[None, :, :] * (1.0 - literals[:, None, :]), axis=-1
+    )  # (B, NC): 1 if any included literal is 0
+    nonempty = (jnp.sum(include, axis=-1) > 0).astype(literals.dtype)  # (NC,)
+    return (1.0 - violated) * nonempty[None, :]
+
+
+def class_sums_multiclass(clauses: jnp.ndarray, num_classes: int) -> jnp.ndarray:
+    """Multi-class TM class sums (Eq. 1).
+
+    clauses: (B, K*C) grouped per class; within a class clause j has
+    polarity + for even j and − for odd j.  Returns (B, K) float32.
+    """
+    b, total = clauses.shape
+    per_class = total // num_classes
+    grouped = clauses.reshape(b, num_classes, per_class)
+    polarity = jnp.where(jnp.arange(per_class) % 2 == 0, 1.0, -1.0)
+    return jnp.sum(grouped * polarity[None, None, :], axis=-1)
+
+
+def class_sums_cotm(clauses: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """CoTM class sums (Eq. 2): clauses (B, C) · weights (K, C) -> (B, K)."""
+    return clauses @ weights.T
+
+
+def multiclass_tm_infer(features: jnp.ndarray, include: jnp.ndarray) -> jnp.ndarray:
+    """Full multi-class TM forward: returns class sums (B, K).
+
+    include: (K, C, 2F) — per-class clause include masks, clause j polarity
+    alternates (+,−,+,−,...) inside each class, per Eq. 1.
+    """
+    k, c, twof = include.shape
+    lits = make_literals(features)
+    flat = include.reshape(k * c, twof)
+    cl = clause_outputs(lits, flat)  # (B, K*C)
+    return class_sums_multiclass(cl, k)
+
+
+def cotm_infer(
+    features: jnp.ndarray, include: jnp.ndarray, weights: jnp.ndarray
+) -> jnp.ndarray:
+    """Full CoTM forward: include (C, 2F), weights (K, C) -> sums (B, K)."""
+    lits = make_literals(features)
+    cl = clause_outputs(lits, include)  # (B, C)
+    return class_sums_cotm(cl, weights)
+
+
+def predict(class_sums: jnp.ndarray) -> jnp.ndarray:
+    """argmax with lowest-index tie-break (matches the rust WTA grant rule)."""
+    return jnp.argmax(class_sums, axis=-1)

@@ -1,0 +1,51 @@
+"""L2: JAX functional models of multi-class TM and CoTM inference.
+
+These are the "golden models" of the paper's §III-A functional
+verification: the same classification function the hardware computes
+(Eq. 1 for multi-class TM, Eq. 2 for CoTM), written in JAX on top of the
+L1 Pallas kernels, AOT-lowered once by ``aot.py`` and executed from the
+rust coordinator via PJRT.  Python never runs on the request path.
+
+Shapes (fixed at lowering time, one artifact per model variant):
+    features: f32 (B, F)   in {0,1}
+    include:  f32 (K, C, 2F) for multi-class, (C, 2F) for CoTM
+    weights:  f32 (K, C)     CoTM only (signed integers stored as f32)
+Returns f32 (B, K) class sums; argmax/WTA happens downstream in rust,
+matching the paper where argmax is the WTA arbiter, a separate block.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.clause_eval import clause_eval, make_literals_kernel
+from .kernels.class_sum import class_sum_multiclass, class_sum_weighted
+
+
+def multiclass_tm_infer(features: jnp.ndarray, include: jnp.ndarray):
+    """Multi-class TM forward (Eq. 1): -> class sums f32 (B, K)."""
+    k, c, twof = include.shape
+    lits = make_literals_kernel(features)
+    clauses = clause_eval(lits, include.reshape(k * c, twof))
+    return (class_sum_multiclass(clauses, num_classes=k),)
+
+
+def cotm_infer(features: jnp.ndarray, include: jnp.ndarray, weights: jnp.ndarray):
+    """CoTM forward (Eq. 2): -> class sums f32 (B, K)."""
+    lits = make_literals_kernel(features)
+    clauses = clause_eval(lits, include)
+    return (class_sum_weighted(clauses, weights),)
+
+
+def clause_only(features: jnp.ndarray, include: jnp.ndarray):
+    """Clause-evaluation stage alone: -> clause outputs f32 (B, NC).
+
+    Exported as its own artifact so the rust *hybrid* path can run literal
+    generation + clause evaluation functionally while simulating the
+    time-domain classification stage event-by-event (the paper's split:
+    "literal generation and clause output are carried out in the digital
+    domain; the class sum and argmax functions are converted to the time
+    domain").
+    """
+    lits = make_literals_kernel(features)
+    return (clause_eval(lits, include),)

@@ -1,0 +1,153 @@
+"""Kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and random boolean masks; every Pallas kernel
+(interpret=True) must agree with ref.py exactly (these are {0,1}/small-int
+computations in f32, so equality is exact, no tolerance needed).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.clause_eval import clause_eval, make_literals_kernel
+from compile.kernels.class_sum import class_sum_multiclass, class_sum_weighted
+
+# Keep hypothesis example counts modest: interpret-mode pallas is slow.
+FAST = settings(max_examples=20, deadline=None)
+
+
+def rand_bits(rng, *shape):
+    return rng.integers(0, 2, size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------- literals
+
+
+@given(st.integers(1, 8), st.integers(1, 24), st.integers(0, 2**32 - 1))
+@FAST
+def test_make_literals_matches_ref(b, f, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rand_bits(rng, b, f))
+    got = make_literals_kernel(x)
+    want = ref.make_literals(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_literals_interleaved_order():
+    # literal[2i] = x_i, literal[2i+1] = !x_i  (Algorithm 2)
+    x = jnp.asarray([[1.0, 0.0, 1.0]])
+    lits = np.asarray(make_literals_kernel(x))
+    np.testing.assert_array_equal(lits, [[1, 0, 0, 1, 1, 0]])
+
+
+# ---------------------------------------------------------------- clauses
+
+
+@given(
+    st.integers(1, 6),     # batch
+    st.integers(1, 12),    # features
+    st.integers(1, 40),    # clauses (crosses no tile boundary: padding path)
+    st.integers(0, 2**32 - 1),
+)
+@FAST
+def test_clause_eval_matches_ref(b, f, nc, seed):
+    rng = np.random.default_rng(seed)
+    lits = jnp.asarray(rand_bits(rng, b, 2 * f))
+    inc = jnp.asarray(rand_bits(rng, nc, 2 * f))
+    got = clause_eval(lits, inc)
+    want = ref.clause_outputs(lits, inc)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_clause_eval_crosses_tile_boundary():
+    # NC > CLAUSE_TILE exercises the multi-tile grid path.
+    rng = np.random.default_rng(7)
+    lits = jnp.asarray(rand_bits(rng, 3, 8))
+    inc = jnp.asarray(rand_bits(rng, 300, 8))
+    got = clause_eval(lits, inc, clause_tile=128)
+    want = ref.clause_outputs(lits, inc)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_clause_eval_small_tile():
+    rng = np.random.default_rng(8)
+    lits = jnp.asarray(rand_bits(rng, 2, 6))
+    inc = jnp.asarray(rand_bits(rng, 10, 6))
+    got = clause_eval(lits, inc, clause_tile=4)  # 3 tiles, padded last
+    want = ref.clause_outputs(lits, inc)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_empty_clause_outputs_zero():
+    # Inference convention: clauses with no includes output 0.
+    lits = jnp.asarray([[1.0, 0.0, 1.0, 0.0]])
+    inc = jnp.zeros((3, 4), jnp.float32)
+    out = np.asarray(clause_eval(lits, inc))
+    np.testing.assert_array_equal(out, np.zeros((1, 3)))
+
+
+def test_full_include_requires_all_literals():
+    # A clause including x0 and !x0 can never fire on boolean input.
+    lits = ref.make_literals(jnp.asarray([[1.0], [0.0]]))
+    inc = jnp.ones((1, 2), jnp.float32)
+    out = np.asarray(clause_eval(lits, inc))
+    np.testing.assert_array_equal(out, np.zeros((2, 1)))
+
+
+def test_tautology_free_single_literal_clause():
+    # include only x0: fires exactly when x0 = 1.
+    lits = ref.make_literals(jnp.asarray([[1.0], [0.0]]))
+    inc = jnp.asarray([[1.0, 0.0]])
+    out = np.asarray(clause_eval(lits, inc))
+    np.testing.assert_array_equal(out, [[1.0], [0.0]])
+
+
+# --------------------------------------------------------------- class sums
+
+
+@given(
+    st.integers(1, 6),     # batch
+    st.integers(1, 30),    # clauses
+    st.integers(2, 8),     # classes
+    st.integers(0, 2**32 - 1),
+)
+@FAST
+def test_class_sum_weighted_matches_ref(b, c, k, seed):
+    rng = np.random.default_rng(seed)
+    cl = jnp.asarray(rand_bits(rng, b, c))
+    w = jnp.asarray(rng.integers(-8, 9, size=(k, c)).astype(np.float32))
+    got = class_sum_weighted(cl, w)
+    want = ref.class_sums_cotm(cl, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    st.integers(1, 6),     # batch
+    st.integers(1, 10),    # clauses per class
+    st.integers(2, 6),     # classes
+    st.integers(0, 2**32 - 1),
+)
+@FAST
+def test_class_sum_multiclass_matches_ref(b, c, k, seed):
+    rng = np.random.default_rng(seed)
+    cl = jnp.asarray(rand_bits(rng, b, k * c))
+    got = class_sum_multiclass(cl, num_classes=k)
+    want = ref.class_sums_multiclass(cl, k)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_multiclass_polarity_alternation():
+    # One class, clauses [1, 1]: +1 - 1 = 0; clauses [1, 0]: +1.
+    cl = jnp.asarray([[1.0, 1.0], [1.0, 0.0]])
+    got = np.asarray(class_sum_multiclass(cl, num_classes=1))
+    np.testing.assert_array_equal(got, [[0.0], [1.0]])
+
+
+def test_weighted_sum_signed_weights():
+    # CoTM signed weights: clause fires against class 0, for class 1.
+    cl = jnp.asarray([[1.0]])
+    w = jnp.asarray([[-3.0], [5.0]])
+    got = np.asarray(class_sum_weighted(cl, w))
+    np.testing.assert_array_equal(got, [[-3.0, 5.0]])

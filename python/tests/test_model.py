@@ -1,0 +1,86 @@
+"""L2 model vs oracle, plus end-to-end functional sanity on TM semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+FAST = settings(max_examples=15, deadline=None)
+
+
+def rand_bits(rng, *shape):
+    return rng.integers(0, 2, size=shape).astype(np.float32)
+
+
+@given(st.integers(1, 4), st.integers(1, 8), st.integers(1, 6),
+       st.integers(2, 4), st.integers(0, 2**32 - 1))
+@FAST
+def test_multiclass_model_matches_ref(b, f, c, k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rand_bits(rng, b, f))
+    inc = jnp.asarray(rand_bits(rng, k, c, 2 * f))
+    (got,) = model.multiclass_tm_infer(x, inc)
+    want = ref.multiclass_tm_infer(x, inc)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.integers(1, 4), st.integers(1, 8), st.integers(1, 10),
+       st.integers(2, 4), st.integers(0, 2**32 - 1))
+@FAST
+def test_cotm_model_matches_ref(b, f, c, k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rand_bits(rng, b, f))
+    inc = jnp.asarray(rand_bits(rng, c, 2 * f))
+    w = jnp.asarray(rng.integers(-7, 8, size=(k, c)).astype(np.float32))
+    (got,) = model.cotm_infer(x, inc, w)
+    want = ref.cotm_infer(x, inc, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_clause_only_matches_ref():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rand_bits(rng, 5, 16))
+    inc = jnp.asarray(rand_bits(rng, 12, 32))
+    (got,) = model.clause_only(x, inc)
+    want = ref.clause_outputs(ref.make_literals(x), inc)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_hand_worked_multiclass_example():
+    """2 features, 2 classes, 2 clauses/class, worked by hand.
+
+    Class 0: clause0 (+) includes x0;      clause1 (−) includes !x1.
+    Class 1: clause0 (+) includes !x0;     clause1 (−) includes x1.
+    Input x = [1, 0]:
+      class0 = +1 (x0=1) − 1 (!x1=1)  = 0
+      class1 = +0 (!x0=0) − 0 (x1=0)  = 0
+    Input x = [1, 1]:
+      class0 = +1 − 0 = 1 ; class1 = 0 − 1 = −1  -> predicts class 0
+    """
+    inc = np.zeros((2, 2, 4), np.float32)
+    inc[0, 0, 0] = 1  # class0 clause0: x0
+    inc[0, 1, 3] = 1  # class0 clause1: !x1
+    inc[1, 0, 1] = 1  # class1 clause0: !x0
+    inc[1, 1, 2] = 1  # class1 clause1: x1
+    x = jnp.asarray([[1.0, 0.0], [1.0, 1.0]])
+    (sums,) = model.multiclass_tm_infer(x, jnp.asarray(inc))
+    np.testing.assert_array_equal(np.asarray(sums), [[0.0, 0.0], [1.0, -1.0]])
+    assert ref.predict(sums)[1] == 0
+
+
+def test_hand_worked_cotm_example():
+    """Shared clauses with signed weights (Eq. 2), worked by hand."""
+    inc = np.zeros((2, 4), np.float32)
+    inc[0, 0] = 1  # clause0: x0
+    inc[1, 2] = 1  # clause1: x1
+    w = jnp.asarray([[3.0, -2.0], [-1.0, 4.0]])
+    x = jnp.asarray([[1.0, 1.0], [1.0, 0.0], [0.0, 0.0]])
+    (sums,) = model.cotm_infer(x, jnp.asarray(inc), w)
+    # x=[1,1]: clauses [1,1] -> class sums [3-2, -1+4] = [1, 3]
+    # x=[1,0]: clauses [1,0] -> [3, -1]
+    # x=[0,0]: clauses [0,0] -> [0, 0]
+    np.testing.assert_array_equal(
+        np.asarray(sums), [[1.0, 3.0], [3.0, -1.0], [0.0, 0.0]]
+    )

@@ -1,0 +1,288 @@
+//! Analytic digital-datapath block models: per-block propagation delay,
+//! switching energy (activity-based), and gate-equivalent area.
+//!
+//! Philosophy (DESIGN.md §6): energy is `transitions × E_gate(V)`. Each
+//! block tracks its previous input/output vectors and charges only for
+//! bits that actually toggled — so feeding the same sample twice costs
+//! (almost) nothing in the async designs, while the synchronous design
+//! still pays its clock tree every cycle. Glitching inside multi-level
+//! logic is approximated by the `GLITCH_FACTOR` multiplier on
+//! combinational blocks (deeper logic glitches more), one of the
+//! classic costs the paper's time-domain conversion eliminates.
+//!
+//! Delay models: ripple-style arithmetic (area-lean, typical for edge
+//! accelerators): an n-bit add is `(n + depth)` full-adder stages of
+//! `2·d_nand`; comparators likewise. Clause AND-planes are `log₂`-depth
+//! trees of 2-input ANDs.
+
+use crate::sim::energy::{GateKind, TechParams};
+use crate::sim::Time;
+
+/// Glitch multiplier for multi-level combinational blocks.
+pub const GLITCH_FACTOR: f64 = 1.25;
+
+/// Hamming distance between two bool slices (activity).
+pub fn toggles(prev: &[bool], cur: &[bool]) -> usize {
+    debug_assert_eq!(prev.len(), cur.len());
+    prev.iter().zip(cur).filter(|(a, b)| a != b).count()
+}
+
+/// A block evaluation result.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BlockCost {
+    pub delay: Time,
+    pub energy_fj: f64,
+}
+
+/// Shared timing/energy formulas over a tech corner.
+#[derive(Debug, Clone)]
+pub struct Blocks {
+    pub tech: TechParams,
+}
+
+impl Blocks {
+    pub fn new(tech: TechParams) -> Blocks {
+        Blocks { tech }
+    }
+
+    fn d_nand(&self) -> f64 {
+        self.tech.gate_delay(GateKind::Nand).as_ps_f64()
+    }
+    fn e_nand(&self) -> f64 {
+        self.tech.gate_energy_fj(GateKind::Nand)
+    }
+    fn e_inv(&self) -> f64 {
+        self.tech.gate_energy_fj(GateKind::Inv)
+    }
+
+    // ---------------------------------------------------------- literal
+
+    /// Literal generation (Algorithm 2 lines 8–11): F inverters, plus
+    /// wiring fan-out to the clause planes.
+    /// Energy: each toggled feature flips x and ¬x lines.
+    pub fn literal_gen(&self, feature_toggles: usize) -> BlockCost {
+        BlockCost {
+            delay: self.tech.gate_delay(GateKind::Inv),
+            energy_fj: feature_toggles as f64 * 2.0 * self.e_inv(),
+        }
+    }
+
+    /// Gate-equivalents of the literal stage for F features.
+    pub fn literal_gen_ge(&self, features: usize) -> f64 {
+        features as f64 * 0.5
+    }
+
+    // ----------------------------------------------------------- clause
+
+    /// One clause AND-plane over `includes` literals (tree of 2-input
+    /// ANDs). `lit_toggles` = toggled *included* literals this cycle.
+    pub fn clause_plane(&self, includes: usize, lit_toggles: usize) -> BlockCost {
+        let depth = (includes.max(1) as f64).log2().ceil().max(1.0);
+        BlockCost {
+            delay: Time::from_ps_f64(depth * self.d_nand() * self.tech.dscale_rel()),
+            // A toggled literal propagates ~depth/2 levels on average.
+            energy_fj: lit_toggles as f64 * (depth * 0.5).max(1.0) * self.e_nand()
+                * GLITCH_FACTOR,
+        }
+    }
+
+    /// Gate-equivalents of one clause plane.
+    pub fn clause_plane_ge(&self, includes: usize) -> f64 {
+        includes.saturating_sub(1).max(1) as f64
+    }
+
+    /// Worst-case clause-stage delay over all planes (pipeline sizing).
+    pub fn clause_stage_delay(&self, max_includes: usize) -> Time {
+        self.clause_plane(max_includes.max(2), 0).delay
+    }
+
+    // ------------------------------------------------------- arithmetic
+
+    /// Population-count tree of `n` one-bit inputs (multi-class class
+    /// sums): depth ⌈log₂n⌉ of full-adders (2·d_nand each). One-bit
+    /// operands keep the per-toggle energy low — the reason the paper's
+    /// multi-class baseline is already far more efficient than CoTM.
+    pub fn popcount(&self, n: usize, input_toggles: usize) -> BlockCost {
+        let depth = (n.max(2) as f64).log2().ceil();
+        let fa_count = n.saturating_sub(1) as f64;
+        BlockCost {
+            delay: Time::from_ps_f64(depth * 2.0 * self.d_nand() * self.tech.dscale_rel()),
+            // A toggled one-bit input ripples through ~depth FAs.
+            energy_fj: input_toggles as f64 * depth * 1.0 * self.e_nand() * GLITCH_FACTOR
+                + fa_count * 0.1 * self.e_nand(), // idle glitch floor
+        }
+    }
+
+    /// Ripple subtractor / adder of `bits` (full adders).
+    pub fn ripple_add(&self, bits: usize, operand_toggles: usize) -> BlockCost {
+        BlockCost {
+            delay: Time::from_ps_f64(bits as f64 * 2.0 * self.d_nand() * self.tech.dscale_rel()),
+            energy_fj: operand_toggles as f64 * 2.5 * self.e_nand() * GLITCH_FACTOR,
+        }
+    }
+
+    /// Signed weighted adder tree (CoTM Eq. 2): `n` operands of `bits`
+    /// width, carry-save compression inside the tree (0.5× the naive
+    /// ripple sum of level widths) with a final ripple merge.
+    ///
+    /// Energy: a toggled multi-bit operand switches ~bits wires at every
+    /// one of the ⌈log₂n⌉ levels, and signed (two's-complement) carry
+    /// chains glitch hard — the `CARRY_GLITCH` multiplier. This is the
+    /// dominant arithmetic cost the proposed design splits away.
+    pub fn signed_adder_tree(&self, n: usize, bits: usize, operand_toggles: usize) -> BlockCost {
+        const CARRY_GLITCH: f64 = 1.6;
+        let depth = (n.max(2) as f64).log2().ceil();
+        let total_bits: f64 = (0..depth as usize).map(|l| (bits + l) as f64).sum();
+        BlockCost {
+            delay: Time::from_ps_f64(
+                0.5 * total_bits * 2.0 * self.d_nand() * self.tech.dscale_rel(),
+            ),
+            energy_fj: operand_toggles as f64 * bits as f64 * depth * 2.5 * self.e_nand()
+                * GLITCH_FACTOR
+                * CARRY_GLITCH,
+        }
+    }
+
+    /// Unsigned magnitude accumulator (proposed CoTM's S/M split): same
+    /// tree without sign-extension rows — ~70% of the signed cost, and
+    /// the two trees (S and M) run in parallel so the delay is one tree.
+    pub fn unsigned_adder_tree(&self, n: usize, bits: usize, operand_toggles: usize) -> BlockCost {
+        let signed = self.signed_adder_tree(n, bits, operand_toggles);
+        BlockCost {
+            delay: signed.delay.scale(0.7),
+            energy_fj: signed.energy_fj * 0.7,
+        }
+    }
+
+    /// Weight-selection MUX matrix (binary multiplication matrix,
+    /// §II-C.1): `clauses × classes` MUXes of `bits` width.
+    pub fn weight_mux(&self, clause_toggles: usize, classes: usize, bits: usize) -> BlockCost {
+        let e_mux = self.tech.gate_energy_fj(GateKind::Mux2);
+        BlockCost {
+            delay: self.tech.gate_delay(GateKind::Mux2),
+            energy_fj: clause_toggles as f64 * classes as f64 * bits as f64 * 0.5 * e_mux,
+        }
+    }
+
+    /// Magnitude-comparator argmax tree over `k` sums of `bits` width
+    /// (the block the paper's WTA replaces): ⌈log₂k⌉ serial ripple
+    /// comparisons.
+    pub fn argmax_tree(&self, k: usize, bits: usize, sum_toggles: usize) -> BlockCost {
+        let depth = (k.max(2) as f64).log2().ceil();
+        BlockCost {
+            delay: Time::from_ps_f64(
+                depth * bits as f64 * 2.0 * self.d_nand() * self.tech.dscale_rel(),
+            ),
+            // A toggled sum bit re-evaluates its comparator column at
+            // every tree level; borrow chains glitch like carries.
+            energy_fj: sum_toggles as f64 * depth * bits as f64 * 0.6 * self.e_nand()
+                * GLITCH_FACTOR
+                + (k - 1) as f64 * bits as f64 * 0.3 * self.e_nand(),
+        }
+    }
+
+    /// LOD priority encoder + fine normaliser (Algorithm 4 in digital
+    /// logic): ~2·bits gates, log-depth.
+    pub fn lod_encoder(&self, bits: usize, value_toggles: usize) -> BlockCost {
+        let depth = (bits.max(2) as f64).log2().ceil() + 1.0;
+        BlockCost {
+            delay: Time::from_ps_f64(depth * self.d_nand() * self.tech.dscale_rel()),
+            energy_fj: value_toggles as f64 * 2.0 * self.e_nand(),
+        }
+    }
+
+    /// Pipeline register bank: `bits` flops clocked once.
+    /// `data_toggles` of them also switch their slave latch.
+    pub fn register_bank(&self, bits: usize, data_toggles: usize) -> BlockCost {
+        let e_dff = self.tech.gate_energy_fj(GateKind::Dff);
+        BlockCost {
+            delay: self.tech.gate_delay(GateKind::Dff),
+            energy_fj: bits as f64 * 0.5 * e_dff + data_toggles as f64 * 0.5 * e_dff,
+        }
+    }
+
+    /// Clock-tree energy for one cycle over `flops` leaves (sync only —
+    /// paid every cycle regardless of activity).
+    pub fn clock_tree_cycle(&self, flops: usize) -> f64 {
+        flops as f64 * self.tech.e_clktree_fj * self.tech.vscale()
+    }
+
+    /// TA-state / weight memory read: `bits` read per inference.
+    pub fn memory_read(&self, bits: usize) -> f64 {
+        bits as f64 * self.tech.e_mem_bit_fj * self.tech.vscale()
+    }
+}
+
+impl TechParams {
+    /// Relative delay scale vs the 1.2 V reference corner (used by the
+    /// analytic blocks; event-sim components scale via `gate_delay`).
+    pub fn dscale_rel(&self) -> f64 {
+        self.dscale()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blocks() -> Blocks {
+        Blocks::new(TechParams::tsmc65_digital())
+    }
+
+    #[test]
+    fn no_toggles_no_combinational_energy() {
+        let b = blocks();
+        assert_eq!(b.literal_gen(0).energy_fj, 0.0);
+        assert_eq!(b.weight_mux(0, 3, 4).energy_fj, 0.0);
+        // popcount keeps a small glitch floor but far below active cost
+        let idle = b.popcount(12, 0).energy_fj;
+        let active = b.popcount(12, 6).energy_fj;
+        assert!(idle < 0.2 * active);
+    }
+
+    #[test]
+    fn energy_monotone_in_activity() {
+        let b = blocks();
+        assert!(b.clause_plane(8, 4).energy_fj > b.clause_plane(8, 1).energy_fj);
+        assert!(b.signed_adder_tree(12, 4, 8).energy_fj > b.signed_adder_tree(12, 4, 2).energy_fj);
+    }
+
+    #[test]
+    fn delay_grows_with_width_and_depth() {
+        let b = blocks();
+        assert!(b.signed_adder_tree(12, 4, 0).delay > b.popcount(6, 0).delay);
+        assert!(b.argmax_tree(8, 8, 0).delay > b.argmax_tree(2, 8, 0).delay);
+        assert!(b.ripple_add(8, 0).delay > b.ripple_add(4, 0).delay);
+    }
+
+    #[test]
+    fn unsigned_tree_cheaper_than_signed() {
+        let b = blocks();
+        let s = b.signed_adder_tree(12, 4, 6);
+        let u = b.unsigned_adder_tree(12, 4, 6);
+        assert!(u.delay < s.delay);
+        assert!(u.energy_fj < s.energy_fj);
+    }
+
+    #[test]
+    fn proposed_corner_cheaper_energy_slower_delay() {
+        let hi = Blocks::new(TechParams::tsmc65_digital());
+        let lo = Blocks::new(TechParams::tsmc65_proposed());
+        let e_hi = hi.popcount(12, 6).energy_fj;
+        let e_lo = lo.popcount(12, 6).energy_fj;
+        assert!(e_lo < e_hi);
+        assert!(lo.popcount(12, 6).delay > hi.popcount(12, 6).delay);
+    }
+
+    #[test]
+    fn toggles_counts_hamming() {
+        assert_eq!(toggles(&[true, false, true], &[true, true, false]), 2);
+    }
+
+    #[test]
+    fn clock_tree_independent_of_activity() {
+        let b = blocks();
+        // the sync tax: function of flop count only
+        assert_eq!(b.clock_tree_cycle(100), 100.0 * 6.0);
+    }
+}

@@ -1,0 +1,553 @@
+//! Pure-digital baseline architectures (paper §III-A): functionally
+//! identical synchronous and asynchronous bundled-data pipelines for the
+//! multi-class TM and the CoTM, following Algorithms 1–3.
+//!
+//! Pipeline (paper Fig. 1): three stages —
+//!   S1 literal generation + clause evaluation (fire0)
+//!   S2 class-sum arithmetic (fire1)
+//!   S3 argmax comparison (fire2)
+//!
+//! Synchronous: one global clock at `T = worst_stage × (1+sync_margin) +
+//! skew + t_dff`; the clock tree toggles every flop every cycle whether
+//! or not data moved. Asynchronous BD: per-stage click controllers with
+//! matched delays `stage × (1+bd_margin)`; idle stages burn nothing.
+//! These cost differences — not the datapath, which is identical — are
+//! exactly the comparison Table IV draws.
+
+use crate::arch::datapath::{toggles, Blocks};
+use crate::arch::{Architecture, InferenceReport};
+use crate::sim::energy::GateKind;
+use crate::sim::{TechParams, Time};
+use crate::tm::infer::{
+    cotm_class_sums, cotm_clause_outputs, multiclass_clause_outputs, predict_argmax,
+};
+use crate::tm::{CoTmModel, MultiClassTmModel};
+
+/// Control style of a digital pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControlStyle {
+    Synchronous,
+    AsyncBundledData,
+}
+
+/// Bit width needed for a signed magnitude `max_abs`.
+fn signed_bits(max_abs: i64) -> usize {
+    (64 - (max_abs.unsigned_abs().max(1)).leading_zeros()) as usize + 1
+}
+
+/// Per-token click-element control energy (2×XOR + AND + 2×DFF).
+fn click_energy_fj(tech: &TechParams) -> f64 {
+    2.0 * tech.gate_energy_fj(GateKind::Xor)
+        + tech.gate_energy_fj(GateKind::And)
+        + 2.0 * tech.gate_energy_fj(GateKind::Dff)
+}
+
+/// Click control latency overhead per stage (decision + phase register).
+fn click_overhead(tech: &TechParams) -> Time {
+    tech.gate_delay(GateKind::Xor) + tech.gate_delay(GateKind::And) + tech.gate_delay(GateKind::Dff)
+}
+
+/// Shared scaffolding for the four digital architectures.
+struct DigitalCore {
+    blocks: Blocks,
+    style: ControlStyle,
+    /// Worst-case per-stage combinational delays [S1, S2, S3].
+    stage_delays: [Time; 3],
+    /// Pipeline flop count (clock-tree leaves).
+    flops: usize,
+    gate_equivalents: f64,
+    prev_features: Option<Vec<bool>>,
+    prev_clauses: Option<Vec<bool>>,
+    prev_sums: Option<Vec<i32>>,
+}
+
+impl DigitalCore {
+    fn clock_period(&self) -> Time {
+        let tech = &self.blocks.tech;
+        let worst = self.stage_delays.iter().copied().max().unwrap();
+        worst.scale(1.0 + tech.sync_margin)
+            + Time::from_ps_f64(tech.clock_skew_ps)
+            + tech.gate_delay(GateKind::Dff)
+    }
+
+    fn bd_cycle(&self) -> Time {
+        let tech = &self.blocks.tech;
+        let worst = self.stage_delays.iter().copied().max().unwrap();
+        worst.scale(1.0 + tech.bd_margin) + click_overhead(tech)
+    }
+
+    fn cycle_time(&self) -> Time {
+        match self.style {
+            ControlStyle::Synchronous => self.clock_period(),
+            ControlStyle::AsyncBundledData => self.bd_cycle(),
+        }
+    }
+
+    /// Latency of one token through the 3-stage pipeline.
+    fn pipeline_latency(&self) -> Time {
+        match self.style {
+            ControlStyle::Synchronous => self.clock_period().scale(3.0),
+            ControlStyle::AsyncBundledData => {
+                let tech = &self.blocks.tech;
+                let mut t = Time::ZERO;
+                for d in self.stage_delays {
+                    t += d.scale(1.0 + tech.bd_margin) + click_overhead(tech);
+                }
+                t
+            }
+        }
+    }
+
+    /// Control + register energy for moving one token through the
+    /// pipeline (3 stage boundaries), given per-bank data toggles.
+    fn control_energy(&self, bank_bits: &[usize], bank_toggles: &[usize]) -> f64 {
+        let tech = &self.blocks.tech;
+        let mut e = 0.0;
+        for (bits, tog) in bank_bits.iter().zip(bank_toggles) {
+            e += self.blocks.register_bank(*bits, *tog).energy_fj;
+        }
+        match self.style {
+            ControlStyle::Synchronous => {
+                // Steady state: one clock cycle charged per inference,
+                // over ALL flops (activity-independent — the sync tax).
+                e += self.blocks.clock_tree_cycle(self.flops);
+            }
+            ControlStyle::AsyncBundledData => {
+                // Three click elements fire once per token.
+                e += 3.0 * click_energy_fj(tech);
+            }
+        }
+        e
+    }
+}
+
+// ====================================================== multi-class TM
+
+/// Digital multi-class TM pipeline (sync or async BD).
+pub struct DigitalMulticlass {
+    model: MultiClassTmModel,
+    core: DigitalCore,
+    name: &'static str,
+}
+
+impl DigitalMulticlass {
+    pub fn new(model: MultiClassTmModel, style: ControlStyle, tech: TechParams) -> Self {
+        let blocks = Blocks::new(tech);
+        let p = &model.params;
+        let (f, c, k) = (p.features, p.clauses, p.classes);
+        let sum_bits = signed_bits((c / 2) as i64);
+
+        let max_includes = model
+            .clauses
+            .iter()
+            .flatten()
+            .map(|cl| cl.included_count())
+            .max()
+            .unwrap_or(1)
+            .max(2);
+        // S1: literals + clause planes.
+        let s1 = blocks.literal_gen(0).delay + blocks.clause_stage_delay(max_includes);
+        // S2: two popcounts (parallel) + subtract, per class (parallel).
+        let s2 = blocks.popcount(c / 2, 0).delay + blocks.ripple_add(sum_bits, 0).delay;
+        // S3: argmax comparator tree.
+        let s3 = blocks.argmax_tree(k, sum_bits, 0).delay;
+
+        let flops = 2 * f + k * c + k * sum_bits + (k.next_power_of_two().trailing_zeros() as usize).max(1);
+        let ge = blocks.literal_gen_ge(f)
+            + model
+                .clauses
+                .iter()
+                .flatten()
+                .map(|cl| blocks.clause_plane_ge(cl.included_count().max(1)))
+                .sum::<f64>()
+            + (k * c) as f64 * 2.5          // popcount trees
+            + (k * sum_bits) as f64 * 2.5   // subtractors
+            + (k - 1) as f64 * sum_bits as f64 * 2.0 // comparators
+            + flops as f64 * 6.0;
+        DigitalMulticlass {
+            name: match style {
+                ControlStyle::Synchronous => "multiclass-sync",
+                ControlStyle::AsyncBundledData => "multiclass-async-bd",
+            },
+            model,
+            core: DigitalCore {
+                blocks,
+                style,
+                stage_delays: [s1, s2, s3],
+                flops,
+                gate_equivalents: ge,
+                prev_features: None,
+                prev_clauses: None,
+                prev_sums: None,
+            },
+        }
+    }
+}
+
+impl Architecture for DigitalMulticlass {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn infer(&mut self, features: &[bool]) -> crate::Result<InferenceReport> {
+        let p = &self.model.params;
+        if features.len() != p.features {
+            return Err(crate::Error::model(format!(
+                "feature width {} != {}",
+                features.len(),
+                p.features
+            )));
+        }
+        let b = &self.core.blocks;
+        let feat_tog = self
+            .core
+            .prev_features
+            .as_deref()
+            .map_or(features.len(), |prev| toggles(prev, features));
+
+        // S1: literals + clause planes.
+        let mut energy = b.literal_gen(feat_tog).energy_fj;
+        let clause_out_2d = multiclass_clause_outputs(&self.model, features);
+        let clause_out: Vec<bool> = clause_out_2d.iter().flatten().copied().collect();
+        // Activity: toggled included literals per plane ≈ include-masked
+        // feature toggles; approximate with per-plane fraction.
+        let lits_tog = 2 * feat_tog;
+        for class in &self.model.clauses {
+            for cl in class {
+                let inc = cl.included_count();
+                let plane_tog = (lits_tog * inc) / (2 * p.features).max(1);
+                energy += b.clause_plane(inc.max(1), plane_tog).energy_fj;
+            }
+        }
+        // TA-state memory read (include masks).
+        energy += b.memory_read(p.classes * p.clauses * 2 * p.features);
+
+        let clause_tog = self
+            .core
+            .prev_clauses
+            .as_deref()
+            .map_or(clause_out.len(), |prev| toggles(prev, &clause_out));
+
+        // S2: popcount + subtract per class.
+        let sums: Vec<i32> = crate::tm::infer::multiclass_class_sums(&self.model, features);
+        let sum_bits = signed_bits((p.clauses / 2) as i64);
+        let per_class_tog = clause_tog.div_ceil(p.classes);
+        for _ in 0..p.classes {
+            energy += b.popcount(p.clauses / 2, per_class_tog).energy_fj * 2.0;
+            energy += b.ripple_add(sum_bits, per_class_tog.min(sum_bits)).energy_fj;
+        }
+
+        // S3: argmax.
+        let sum_tog: usize = self.core.prev_sums.as_ref().map_or(p.classes * sum_bits, |prev| {
+            prev.iter()
+                .zip(&sums)
+                .map(|(a, b)| (a ^ b).count_ones() as usize)
+                .sum()
+        });
+        energy += b.argmax_tree(p.classes, sum_bits, sum_tog).energy_fj;
+
+        // Control + registers.
+        let bank_bits = [
+            p.classes * p.clauses,
+            p.classes * sum_bits,
+            (p.classes.next_power_of_two().trailing_zeros() as usize).max(1),
+        ];
+        let bank_tog = [clause_tog, sum_tog, 1];
+        energy += self.core.control_energy(&bank_bits, &bank_tog);
+
+        let predicted = predict_argmax(&sums);
+        self.core.prev_features = Some(features.to_vec());
+        self.core.prev_clauses = Some(clause_out);
+        self.core.prev_sums = Some(sums.clone());
+        Ok(InferenceReport {
+            predicted,
+            class_sums: sums,
+            latency: self.core.pipeline_latency(),
+            energy_fj: energy,
+            sim_events: 0,
+        })
+    }
+
+    fn cycle_time(&self) -> Time {
+        self.core.cycle_time()
+    }
+
+    fn tech(&self) -> &TechParams {
+        &self.core.blocks.tech
+    }
+
+    fn gate_equivalents(&self) -> f64 {
+        self.core.gate_equivalents
+    }
+
+    fn shape(&self) -> (usize, usize, usize) {
+        let p = &self.model.params;
+        (p.features, p.clauses, p.classes)
+    }
+}
+
+// =============================================================== CoTM
+
+/// Digital CoTM pipeline (sync or async BD).
+pub struct DigitalCotm {
+    model: CoTmModel,
+    core: DigitalCore,
+    name: &'static str,
+    weight_bits: usize,
+    sum_bits: usize,
+}
+
+impl DigitalCotm {
+    pub fn new(model: CoTmModel, style: ControlStyle, tech: TechParams) -> Self {
+        let blocks = Blocks::new(tech);
+        let p = &model.params;
+        let (f, c, k) = (p.features, p.clauses, p.classes);
+        let weight_bits = signed_bits(p.max_weight as i64);
+        let sum_bits = signed_bits((p.max_weight as i64) * c as i64);
+
+        let max_includes = model
+            .clauses
+            .iter()
+            .map(|cl| cl.included_count())
+            .max()
+            .unwrap_or(1)
+            .max(2);
+        let s1 = blocks.literal_gen(0).delay + blocks.clause_stage_delay(max_includes);
+        // S2: weight mux + signed weighted adder tree.
+        let s2 = blocks.weight_mux(0, k, weight_bits).delay
+            + blocks.signed_adder_tree(c, weight_bits, 0).delay;
+        let s3 = blocks.argmax_tree(k, sum_bits, 0).delay;
+
+        let flops = 2 * f + c + k * sum_bits + (k.next_power_of_two().trailing_zeros() as usize).max(1);
+        let ge = blocks.literal_gen_ge(f)
+            + model
+                .clauses
+                .iter()
+                .map(|cl| blocks.clause_plane_ge(cl.included_count().max(1)))
+                .sum::<f64>()
+            + (c * k * weight_bits) as f64 * 1.4      // weight mux matrix
+            + (k * c * weight_bits) as f64 * 2.5      // adder trees
+            + (k - 1) as f64 * sum_bits as f64 * 2.0  // comparators
+            + flops as f64 * 6.0;
+        DigitalCotm {
+            name: match style {
+                ControlStyle::Synchronous => "cotm-sync",
+                ControlStyle::AsyncBundledData => "cotm-async-bd",
+            },
+            model,
+            core: DigitalCore {
+                blocks,
+                style,
+                stage_delays: [s1, s2, s3],
+                flops,
+                gate_equivalents: ge,
+                prev_features: None,
+                prev_clauses: None,
+                prev_sums: None,
+            },
+            weight_bits,
+            sum_bits,
+        }
+    }
+}
+
+impl Architecture for DigitalCotm {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn infer(&mut self, features: &[bool]) -> crate::Result<InferenceReport> {
+        let p = &self.model.params;
+        if features.len() != p.features {
+            return Err(crate::Error::model(format!(
+                "feature width {} != {}",
+                features.len(),
+                p.features
+            )));
+        }
+        let b = &self.core.blocks;
+        let feat_tog = self
+            .core
+            .prev_features
+            .as_deref()
+            .map_or(features.len(), |prev| toggles(prev, features));
+        let mut energy = b.literal_gen(feat_tog).energy_fj;
+
+        let clause_out = cotm_clause_outputs(&self.model, features);
+        let lits_tog = 2 * feat_tog;
+        for cl in &self.model.clauses {
+            let inc = cl.included_count();
+            let plane_tog = (lits_tog * inc) / (2 * p.features).max(1);
+            energy += b.clause_plane(inc.max(1), plane_tog).energy_fj;
+        }
+        energy += b.memory_read(p.clauses * 2 * p.features); // include masks
+        energy += b.memory_read(p.classes * p.clauses * self.weight_bits); // weights
+
+        let clause_tog = self
+            .core
+            .prev_clauses
+            .as_deref()
+            .map_or(clause_out.len(), |prev| toggles(prev, &clause_out));
+
+        // S2: weight mux + signed adder tree per class.
+        energy += b.weight_mux(clause_tog, p.classes, self.weight_bits).energy_fj;
+        for _ in 0..p.classes {
+            energy += b
+                .signed_adder_tree(p.clauses, self.weight_bits, clause_tog)
+                .energy_fj;
+        }
+
+        let sums = cotm_class_sums(&self.model, features);
+        let sum_tog: usize = self
+            .core
+            .prev_sums
+            .as_ref()
+            .map_or(p.classes * self.sum_bits, |prev| {
+                prev.iter()
+                    .zip(&sums)
+                    .map(|(a, b)| (a ^ b).count_ones() as usize)
+                    .sum()
+            });
+        energy += b.argmax_tree(p.classes, self.sum_bits, sum_tog).energy_fj;
+
+        let bank_bits = [
+            p.clauses,
+            p.classes * self.sum_bits,
+            (p.classes.next_power_of_two().trailing_zeros() as usize).max(1),
+        ];
+        let bank_tog = [clause_tog, sum_tog, 1];
+        energy += self.core.control_energy(&bank_bits, &bank_tog);
+
+        let predicted = predict_argmax(&sums);
+        self.core.prev_features = Some(features.to_vec());
+        self.core.prev_clauses = Some(clause_out);
+        self.core.prev_sums = Some(sums.clone());
+        Ok(InferenceReport {
+            predicted,
+            class_sums: sums,
+            latency: self.core.pipeline_latency(),
+            energy_fj: energy,
+            sim_events: 0,
+        })
+    }
+
+    fn cycle_time(&self) -> Time {
+        self.core.cycle_time()
+    }
+
+    fn tech(&self) -> &TechParams {
+        &self.core.blocks.tech
+    }
+
+    fn gate_equivalents(&self) -> f64 {
+        self.core.gate_equivalents
+    }
+
+    fn shape(&self) -> (usize, usize, usize) {
+        let p = &self.model.params;
+        (p.features, p.clauses, p.classes)
+    }
+}
+
+/// Convenience constructors matching the paper's four baselines.
+pub fn sync_multiclass(model: MultiClassTmModel) -> DigitalMulticlass {
+    DigitalMulticlass::new(model, ControlStyle::Synchronous, TechParams::tsmc65_digital())
+}
+pub fn async_bd_multiclass(model: MultiClassTmModel) -> DigitalMulticlass {
+    DigitalMulticlass::new(model, ControlStyle::AsyncBundledData, TechParams::tsmc65_digital())
+}
+pub fn sync_cotm(model: CoTmModel) -> DigitalCotm {
+    DigitalCotm::new(model, ControlStyle::Synchronous, TechParams::tsmc65_digital())
+}
+pub fn async_bd_cotm(model: CoTmModel) -> DigitalCotm {
+    DigitalCotm::new(model, ControlStyle::AsyncBundledData, TechParams::tsmc65_digital())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::data;
+    use crate::tm::{cotm_train::train_cotm, train::train_multiclass, TmParams};
+
+    fn models() -> (MultiClassTmModel, CoTmModel, data::Dataset) {
+        let d = data::iris().unwrap();
+        let (tr, _) = d.split(0.8, 42);
+        let m = train_multiclass(TmParams::iris_paper(), &tr, 30, 2).unwrap();
+        let cm = train_cotm(TmParams::iris_paper(), &tr, 30, 3).unwrap();
+        (m, cm, d)
+    }
+
+    #[test]
+    fn predictions_match_software_reference() {
+        let (m, cm, d) = models();
+        let mut s = sync_multiclass(m.clone());
+        let mut a = async_bd_multiclass(m.clone());
+        let mut sc = sync_cotm(cm.clone());
+        let mut ac = async_bd_cotm(cm.clone());
+        for x in d.features.iter().take(40) {
+            let want_mc = predict_argmax(&crate::tm::infer::multiclass_class_sums(&m, x));
+            let want_co = predict_argmax(&cotm_class_sums(&cm, x));
+            assert_eq!(s.infer(x).unwrap().predicted, want_mc);
+            assert_eq!(a.infer(x).unwrap().predicted, want_mc);
+            assert_eq!(sc.infer(x).unwrap().predicted, want_co);
+            assert_eq!(ac.infer(x).unwrap().predicted, want_co);
+        }
+    }
+
+    #[test]
+    fn async_beats_sync_cycle_time() {
+        let (m, cm, _) = models();
+        assert!(async_bd_multiclass(m.clone()).cycle_time() < sync_multiclass(m).cycle_time());
+        assert!(async_bd_cotm(cm.clone()).cycle_time() < sync_cotm(cm).cycle_time());
+    }
+
+    #[test]
+    fn cotm_has_longer_critical_path_than_multiclass() {
+        // Weighted signed arithmetic is deeper than popcounts (the reason
+        // the paper's CoTM baselines clock slower).
+        let (m, cm, _) = models();
+        assert!(sync_cotm(cm).cycle_time() > sync_multiclass(m).cycle_time());
+    }
+
+    #[test]
+    fn sync_pays_clock_even_when_idle_input_repeats() {
+        let (m, _, d) = models();
+        let x = &d.features[0];
+        let mut s = sync_multiclass(m.clone());
+        let mut a = async_bd_multiclass(m);
+        let _ = s.infer(x).unwrap();
+        let _ = a.infer(x).unwrap();
+        // Second identical sample: near-zero datapath activity.
+        let es = s.infer(x).unwrap().energy_fj;
+        let ea = a.infer(x).unwrap().energy_fj;
+        // Sync still pays the full clock tree; async pays only clicks.
+        assert!(
+            es > 2.0 * ea,
+            "sync idle energy {es} should far exceed async {ea}"
+        );
+    }
+
+    #[test]
+    fn energy_depends_on_input_activity() {
+        let (m, _, d) = models();
+        let mut a = async_bd_multiclass(m);
+        let _ = a.infer(&d.features[0]).unwrap();
+        let repeat = a.infer(&d.features[0]).unwrap().energy_fj;
+        let fresh = a.infer(&d.features[97]).unwrap().energy_fj;
+        assert!(fresh > repeat, "fresh {fresh} <= repeat {repeat}");
+    }
+
+    #[test]
+    fn latency_spans_three_stages() {
+        let (m, _, _) = models();
+        let s = sync_multiclass(m);
+        assert_eq!(s.pipeline_latency_for_test(), s.cycle_time().scale(3.0));
+    }
+}
+
+#[cfg(test)]
+impl DigitalMulticlass {
+    fn pipeline_latency_for_test(&self) -> Time {
+        self.core.pipeline_latency()
+    }
+}

@@ -1,0 +1,143 @@
+//! Evaluation metrics (paper §III-B, Eqs. 3–4) and batch evaluation
+//! producing Table IV rows.
+
+use crate::arch::Architecture;
+use crate::sim::Time;
+use crate::util::stats::Summary;
+
+/// Eq. 3: `Throughput = 2·F·C·K·f_infer`, in GOp/s.
+pub fn throughput_gops(features: usize, clauses: usize, classes: usize, f_infer_hz: f64) -> f64 {
+    2.0 * features as f64 * clauses as f64 * classes as f64 * f_infer_hz / 1e9
+}
+
+/// Eq. 4: `EnergyEfficiency = Throughput / (1000·P)`, in TOp/J, with
+/// throughput in GOp/s and `P` in watts.
+pub fn energy_efficiency_tops_per_j(throughput_gops: f64, power_w: f64) -> f64 {
+    throughput_gops / (1000.0 * power_w)
+}
+
+/// A measured Table IV row.
+#[derive(Debug, Clone)]
+pub struct PerfRow {
+    pub implementation: String,
+    /// Mean per-inference cycle (initiation interval).
+    pub cycle: Time,
+    pub f_infer_mhz: f64,
+    pub throughput_gops: f64,
+    /// Mean dynamic+leakage power (µW).
+    pub power_uw: f64,
+    pub energy_eff_tops_per_j: f64,
+    /// Mean per-inference energy (fJ).
+    pub energy_per_inference_fj: f64,
+    pub accuracy: f64,
+    pub latency: Summary,
+}
+
+/// Run `arch` over a dataset and compute its Table IV row.
+pub fn evaluate(
+    arch: &mut dyn Architecture,
+    xs: &[Vec<bool>],
+    ys: &[usize],
+) -> crate::Result<PerfRow> {
+    assert_eq!(xs.len(), ys.len());
+    let mut energy_fj = 0.0;
+    let mut correct = 0usize;
+    let mut latencies = Vec::with_capacity(xs.len());
+    for (x, &y) in xs.iter().zip(ys) {
+        let r = arch.infer(x)?;
+        energy_fj += r.energy_fj;
+        latencies.push(r.latency.as_ps_f64());
+        if r.predicted == y {
+            correct += 1;
+        }
+    }
+    let n = xs.len() as f64;
+    let cycle = arch.cycle_time();
+    let f_infer_hz = 1.0 / cycle.as_secs_f64();
+    let (f, c, k) = arch.shape();
+    let tp = throughput_gops(f, c, k, f_infer_hz);
+
+    // Power: dynamic energy per inference over the cycle, plus leakage.
+    let e_dyn_j = energy_fj * 1e-15 / n;
+    let p_dyn_w = e_dyn_j / cycle.as_secs_f64();
+    let p_leak_w = arch.leakage_power_nw() * 1e-9;
+    let p_w = p_dyn_w + p_leak_w;
+
+    Ok(PerfRow {
+        implementation: arch.name().to_string(),
+        cycle,
+        f_infer_mhz: f_infer_hz / 1e6,
+        throughput_gops: tp,
+        power_uw: p_w * 1e6,
+        energy_eff_tops_per_j: energy_efficiency_tops_per_j(tp, p_w),
+        energy_per_inference_fj: energy_fj / n,
+        accuracy: correct as f64 / n,
+        latency: Summary::of(&latencies).unwrap(),
+    })
+}
+
+/// Render rows as the paper's Table IV.
+pub fn render_table_iv(rows: &[PerfRow]) -> String {
+    let mut t = crate::util::Table::new(vec![
+        "Implementation",
+        "Cycle (ps)",
+        "f_infer (MHz)",
+        "Throughput (GOp/s)",
+        "Power (uW)",
+        "Energy Eff. (TOp/J)",
+        "E/inf (fJ)",
+        "Accuracy",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.implementation.clone(),
+            format!("{:.0}", r.cycle.as_ps_f64()),
+            format!("{:.1}", r.f_infer_mhz),
+            format!("{:.1}", r.throughput_gops),
+            format!("{:.1}", r.power_uw),
+            format!("{:.1}", r.energy_eff_tops_per_j),
+            format!("{:.0}", r.energy_per_inference_fj),
+            format!("{:.3}", r.accuracy),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq3_worked_example() {
+        // F=16, C=12, K=3 at 330 MHz: 2·16·12·3 = 1152 ops/inference;
+        // 1152 × 330e6 = 380 GOp/s — the paper's sync multi-class row.
+        let tp = throughput_gops(16, 12, 3, 330e6);
+        assert!((tp - 380.16).abs() < 0.01, "tp={tp}");
+    }
+
+    #[test]
+    fn eq4_worked_example() {
+        // 380 GOp/s at 400 µW -> 380/(1000·4e-4) = 950 TOp/J (the paper's
+        // 948.61 with their exact power).
+        let ee = energy_efficiency_tops_per_j(380.0, 400.6e-6);
+        assert!((ee - 948.6).abs() < 1.0, "ee={ee}");
+    }
+
+    #[test]
+    fn table_renders() {
+        let rows = vec![PerfRow {
+            implementation: "test".into(),
+            cycle: Time::ps(500),
+            f_infer_mhz: 2000.0,
+            throughput_gops: 100.0,
+            power_uw: 50.0,
+            energy_eff_tops_per_j: 2000.0,
+            energy_per_inference_fj: 25.0,
+            accuracy: 0.95,
+            latency: Summary::of(&[1.0, 2.0]).unwrap(),
+        }];
+        let s = render_table_iv(&rows);
+        assert!(s.contains("test"));
+        assert!(s.contains("Energy Eff."));
+    }
+}

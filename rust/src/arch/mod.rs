@@ -1,0 +1,69 @@
+//! The six inference architectures of the paper's evaluation:
+//!
+//! | | multi-class TM | CoTM |
+//! |---|---|---|
+//! | synchronous digital | [`digital::SyncMulticlass`] | [`digital::SyncCotm`] |
+//! | asynchronous BD digital | [`digital::AsyncBdMulticlass`] | [`digital::AsyncBdCotm`] |
+//! | proposed (digital-time-domain) | [`proposed_tm::ProposedMulticlass`] | [`proposed_cotm::ProposedCotm`] |
+//!
+//! Modelling split (DESIGN.md §3): the *datapath* blocks (literal
+//! generation, clause planes, adder trees, comparators, weight muxes)
+//! use analytic switching-activity timing/energy models
+//! ([`datapath`]); the *control fabric and time-domain classification* —
+//! clicks, C-elements, delay rails, TDC, DCDE, Mutex/WTA races — run in
+//! the discrete-event simulator, because that is where the paper's
+//! contribution (and all the interesting dynamics: races, metastability,
+//! RTZ recovery) lives.
+
+pub mod datapath;
+pub mod digital;
+pub mod metrics;
+pub mod proposed_cotm;
+pub mod proposed_tm;
+pub mod waveforms;
+
+use crate::sim::{TechParams, Time};
+
+/// Outcome of one inference through a hardware model.
+#[derive(Debug, Clone)]
+pub struct InferenceReport {
+    pub predicted: usize,
+    /// Class sums as the architecture's datapath sees them (digital
+    /// architectures: exact Eq. 1/2 sums; proposed: derived pre-race sums
+    /// for observability).
+    pub class_sums: Vec<i32>,
+    /// Input-accept → decision latency.
+    pub latency: Time,
+    /// Dynamic energy consumed by this inference (fJ), incl. control.
+    pub energy_fj: f64,
+    /// Simulator events processed (0 for fully analytic paths).
+    pub sim_events: u64,
+}
+
+/// A complete inference architecture with hardware cost semantics.
+pub trait Architecture {
+    /// Short identifier, e.g. `"multiclass-sync"`.
+    fn name(&self) -> &'static str;
+
+    /// Run one inference.
+    fn infer(&mut self, features: &[bool]) -> crate::Result<InferenceReport>;
+
+    /// Minimum initiation interval (pipeline cycle) — the steady-state
+    /// per-inference period that Eq. 3's `f_infer` is the reciprocal of.
+    fn cycle_time(&self) -> Time;
+
+    /// Technology corner this architecture is implemented in.
+    fn tech(&self) -> &TechParams;
+
+    /// Total gate-equivalents (leakage accounting + area reporting).
+    fn gate_equivalents(&self) -> f64;
+
+    /// Static leakage power in nW at the operating corner.
+    fn leakage_power_nw(&self) -> f64 {
+        let t = self.tech();
+        self.gate_equivalents() * t.leak_nw_per_ge * (t.voltage / t.vref)
+    }
+
+    /// Model shape: (features, clauses, classes) for Eq. 3.
+    fn shape(&self) -> (usize, usize, usize);
+}

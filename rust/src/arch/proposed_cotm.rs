@@ -1,0 +1,340 @@
+//! Proposed CoTM architecture: hybrid digital-time-domain (paper Fig. 3).
+//!
+//! Digital front-end (1.0 V, click-controlled): literals, shared clause
+//! pool, binary multiplication (weight-mux) matrix, and the *split*
+//! accumulation — all negative clause contributions into `S`, all
+//! positive into `M` — as two parallel unsigned trees (cheaper and
+//! shallower than the baseline's signed tree), then the LOD priority
+//! encoders.
+//!
+//! Time-domain back-end (event-simulated): per class a differential
+//! delay path programmed with the LOD codes of (S, M), a Vernier TDC
+//! digitising the rail interval to `dc`, a C-element completion
+//! rendezvous, per-class DCDE single-rail replay, and WTA arbitration —
+//! [`crate::timedomain::CotmRaceUnit`].
+//!
+//! Pipelining note: the rails/TDC phase of sample *n* overlaps the
+//! digital S/M computation of sample *n+1* (paper Fig. 3's fire1/fire2
+//! split), so the initiation interval is `max(digital stage, race
+//! latency)` with RTZ recovery hidden behind the digital stage — unlike
+//! the multi-class design where a single fully-time-domain
+//! classification path exposes its recovery. This is why the paper's
+//! CoTM gains throughput (+20% vs BD) while the multi-class variant
+//! trades some (−21%).
+
+use crate::arch::datapath::{toggles, Blocks};
+use crate::arch::{Architecture, InferenceReport};
+use crate::sim::energy::GateKind;
+use crate::sim::{Circuit, TechParams, Time};
+use crate::timedomain::CotmRaceUnit;
+use crate::tm::infer::cotm_clause_outputs;
+use crate::tm::CoTmModel;
+use crate::util::stats::Welford;
+use crate::wta::WtaKind;
+
+/// The proposed hybrid DT-domain CoTM.
+pub struct ProposedCotm {
+    model: CoTmModel,
+    blocks: Blocks,
+    circuit: Circuit,
+    race: CotmRaceUnit,
+    digital_stage: Time,
+    gate_equivalents: f64,
+    weight_bits: usize,
+    prev_features: Option<Vec<bool>>,
+    prev_clauses: Option<Vec<bool>>,
+    race_latency: Welford,
+    race_cycle: Welford,
+}
+
+impl ProposedCotm {
+    pub fn new(model: CoTmModel, wta_kind: WtaKind) -> crate::Result<Self> {
+        Self::with_tech(model, wta_kind, TechParams::tsmc65_proposed())
+    }
+
+    pub fn with_tech(
+        model: CoTmModel,
+        wta_kind: WtaKind,
+        tech: TechParams,
+    ) -> crate::Result<Self> {
+        model.validate()?;
+        let p = model.params.clone();
+        let blocks = Blocks::new(tech.clone());
+        let mut circuit = Circuit::new(tech.clone());
+        let max_sum = (p.clauses as u64) * (p.max_weight as u64);
+        let race = CotmRaceUnit::build(&mut circuit, "cotm", p.classes, max_sum, wta_kind);
+        circuit.init_components();
+        circuit.run_to_quiescence()?;
+
+        let weight_bits =
+            (64 - (p.max_weight as u64).max(1).leading_zeros()) as usize + 1;
+        let sum_bits = (64 - max_sum.max(1).leading_zeros()) as usize;
+        let max_includes = model
+            .clauses
+            .iter()
+            .map(|cl| cl.included_count())
+            .max()
+            .unwrap_or(1)
+            .max(2);
+        // Digital stage: the deeper of (S1 literals+clauses) and (S2
+        // weight-mux + unsigned S/M trees + LOD) bounds the BD matched
+        // delay of the front-end pipeline.
+        let s1 = blocks.literal_gen(0).delay + blocks.clause_stage_delay(max_includes);
+        let s2 = blocks.weight_mux(0, p.classes, weight_bits).delay
+            + blocks.unsigned_adder_tree(p.clauses, weight_bits, 0).delay
+            + blocks.lod_encoder(sum_bits, 0).delay;
+        let click = tech.gate_delay(GateKind::Xor)
+            + tech.gate_delay(GateKind::And)
+            + tech.gate_delay(GateKind::Dff);
+        let digital_stage = s1.max(s2).scale(1.0 + tech.bd_margin) + click;
+
+        let ge = blocks.literal_gen_ge(p.features)
+            + model
+                .clauses
+                .iter()
+                .map(|cl| blocks.clause_plane_ge(cl.included_count().max(1)))
+                .sum::<f64>()
+            + (p.clauses * p.classes * weight_bits) as f64 * 1.4 // weight mux
+            + 2.0 * (p.classes * p.clauses * weight_bits) as f64 * 1.75 // S/M trees
+            + (p.classes * sum_bits) as f64 * 2.0 // LOD encoders
+            + circuit.energy.gate_equivalents
+            + 17.4 * 2.0 // clicks
+            + 10.0; // 4→2 interface
+
+        Ok(ProposedCotm {
+            model,
+            blocks,
+            circuit,
+            race,
+            digital_stage,
+            gate_equivalents: ge,
+            weight_bits,
+            prev_features: None,
+            prev_clauses: None,
+            race_latency: Welford::default(),
+            race_cycle: Welford::default(),
+        })
+    }
+
+    /// Split clause contributions into (S, M) per class (the paper's
+    /// "sign contributions into S, magnitude contributions into M").
+    fn split_sums(&self, clause_outs: &[bool]) -> Vec<(u64, u64)> {
+        self.model
+            .weights
+            .iter()
+            .map(|row| {
+                let mut s = 0u64;
+                let mut m = 0u64;
+                for (&w, &fired) in row.iter().zip(clause_outs) {
+                    if fired {
+                        if w >= 0 {
+                            m += w as u64;
+                        } else {
+                            s += (-w) as u64;
+                        }
+                    }
+                }
+                (s, m)
+            })
+            .collect()
+    }
+}
+
+impl Architecture for ProposedCotm {
+    fn name(&self) -> &'static str {
+        "cotm-proposed"
+    }
+
+    fn infer(&mut self, features: &[bool]) -> crate::Result<InferenceReport> {
+        let p = self.model.params.clone();
+        if features.len() != p.features {
+            return Err(crate::Error::model("feature width mismatch"));
+        }
+        let b = &self.blocks;
+        let feat_tog = self
+            .prev_features
+            .as_deref()
+            .map_or(features.len(), |prev| toggles(prev, features));
+
+        // ---- digital front-end (analytic, 1.0 V) ----
+        let mut energy = b.literal_gen(feat_tog).energy_fj;
+        let lits_tog = 2 * feat_tog;
+        for cl in &self.model.clauses {
+            let inc = cl.included_count();
+            let plane_tog = (lits_tog * inc) / (2 * p.features).max(1);
+            energy += b.clause_plane(inc.max(1), plane_tog).energy_fj;
+        }
+        energy += b.memory_read(p.clauses * 2 * p.features);
+        energy += b.memory_read(p.classes * p.clauses * self.weight_bits);
+
+        let clause_outs = cotm_clause_outputs(&self.model, features);
+        let clause_tog = self
+            .prev_clauses
+            .as_deref()
+            .map_or(clause_outs.len(), |prev| toggles(prev, &clause_outs));
+        energy += b.weight_mux(clause_tog, p.classes, self.weight_bits).energy_fj;
+        let max_sum = (p.clauses as i64) * (p.max_weight as i64);
+        let sum_bits = (64 - (max_sum as u64).max(1).leading_zeros()) as usize;
+        for _ in 0..p.classes {
+            // Two parallel unsigned trees (S and M): each sees ~half the
+            // clause activity.
+            energy += 2.0
+                * b.unsigned_adder_tree(p.clauses, self.weight_bits, clause_tog.div_ceil(2))
+                    .energy_fj;
+            energy += b.lod_encoder(sum_bits, clause_tog.min(sum_bits)).energy_fj;
+        }
+        // Click controllers + 4→2 interface per token.
+        energy += 2.0
+            * (2.0 * b.tech.gate_energy_fj(GateKind::Xor)
+                + b.tech.gate_energy_fj(GateKind::And)
+                + 2.0 * b.tech.gate_energy_fj(GateKind::Dff));
+        energy += b.tech.gate_energy_fj(GateKind::CElement)
+            + b.tech.gate_energy_fj(GateKind::Tff);
+
+        // ---- time-domain back-end (event simulation) ----
+        let sums = self.split_sums(&clause_outs);
+        let e_before = self.circuit.energy.total_dynamic_fj();
+        let ev_before = self.circuit.events_processed();
+        let t0 = self.circuit.now();
+        let (winner, race_latency) = self.race.classify(&mut self.circuit, &sums)?;
+        let race_cycle = self.circuit.now().since(t0);
+        energy += self.circuit.energy.total_dynamic_fj() - e_before;
+        let sim_events = self.circuit.events_processed() - ev_before;
+
+        self.race_latency.push(race_latency.as_ps_f64());
+        self.race_cycle.push(race_cycle.as_ps_f64());
+        self.prev_features = Some(features.to_vec());
+        self.prev_clauses = Some(clause_outs);
+
+        let class_sums: Vec<i32> = sums.iter().map(|&(s, m)| m as i32 - s as i32).collect();
+        Ok(InferenceReport {
+            predicted: winner,
+            class_sums,
+            latency: self.digital_stage + race_latency,
+            energy_fj: energy,
+            sim_events,
+        })
+    }
+
+    fn cycle_time(&self) -> Time {
+        // fire1/fire2 overlap: rails+TDC of sample n run while the
+        // digital stage computes n+1; RTZ recovery hides likewise. The
+        // initiation interval is the slower of the digital stage and the
+        // mean race *decision* latency.
+        let race = if self.race_latency.count() > 0 {
+            Time::from_ps_f64(self.race_latency.mean())
+        } else {
+            let t = &self.blocks.tech;
+            // Estimate: rails (~kmax segments) + TDC + SR + WTA.
+            t.tau().scale(8.0 * t.dscale())
+        };
+        self.digital_stage.max(race)
+    }
+
+    fn tech(&self) -> &TechParams {
+        &self.blocks.tech
+    }
+
+    fn gate_equivalents(&self) -> f64 {
+        self.gate_equivalents
+    }
+
+    fn shape(&self) -> (usize, usize, usize) {
+        let p = &self.model.params;
+        (p.features, p.clauses, p.classes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::EnergyKind;
+    use crate::tm::data;
+    use crate::tm::infer::{cotm_class_sums, predict_argmax};
+    use crate::tm::{cotm_train::train_cotm, TmParams};
+
+    fn model() -> (CoTmModel, data::Dataset) {
+        let d = data::iris().unwrap();
+        let (tr, _) = d.split(0.8, 42);
+        let m = train_cotm(TmParams::iris_paper(), &tr, 60, 3).unwrap();
+        (m, d)
+    }
+
+    #[test]
+    fn class_sums_match_software_reference() {
+        let (m, d) = model();
+        let mut arch = ProposedCotm::new(m.clone(), WtaKind::Tba).unwrap();
+        for x in d.features.iter().take(20) {
+            let r = arch.infer(x).unwrap();
+            assert_eq!(r.class_sums, cotm_class_sums(&m, x));
+        }
+    }
+
+    #[test]
+    fn prediction_agreement_with_exact_argmax_on_iris() {
+        // LOD compression is monotone but log-scaled; on a trained model
+        // the winner margin is usually large. Require high agreement and
+        // that any disagreement is a near-tie in the exact sums.
+        let (m, d) = model();
+        let mut arch = ProposedCotm::new(m.clone(), WtaKind::Tba).unwrap();
+        let mut agree = 0usize;
+        let n = 80usize;
+        for x in d.features.iter().take(n) {
+            let r = arch.infer(x).unwrap();
+            let sums = cotm_class_sums(&m, x);
+            let exact = predict_argmax(&sums);
+            if r.predicted == exact {
+                agree += 1;
+            } else {
+                let margin = sums[exact] - sums[r.predicted];
+                assert!(
+                    margin <= 3,
+                    "large-margin disagreement: sums={sums:?} got={} exact={exact}",
+                    r.predicted
+                );
+            }
+        }
+        assert!(agree * 100 >= n * 90, "agreement {agree}/{n}");
+    }
+
+    #[test]
+    fn race_energy_is_time_domain() {
+        let (m, d) = model();
+        let mut arch = ProposedCotm::new(m, WtaKind::Tba).unwrap();
+        for x in d.features.iter().take(5) {
+            arch.infer(x).unwrap();
+        }
+        let led = &arch.circuit.energy;
+        assert!(led.dynamic_fj(EnergyKind::DelayLine) > 0.0);
+        assert!(led.dynamic_fj(EnergyKind::Tdc) > 0.0);
+        assert!(led.dynamic_fj(EnergyKind::Arbiter) > 0.0);
+        assert!(led.dynamic_fj(EnergyKind::Handshake) > 0.0); // C-element
+        assert_eq!(led.dynamic_fj(EnergyKind::ClockTree), 0.0);
+    }
+
+    #[test]
+    fn split_sums_reconstruct_signed_sum() {
+        let (m, d) = model();
+        let arch = ProposedCotm::new(m.clone(), WtaKind::Tba).unwrap();
+        for x in d.features.iter().take(30) {
+            let outs = cotm_clause_outputs(&m, x);
+            let split = arch.split_sums(&outs);
+            let exact = cotm_class_sums(&m, x);
+            for (k, &(s, mm)) in split.iter().enumerate() {
+                assert_eq!(mm as i32 - s as i32, exact[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_inferences_reuse_the_unit() {
+        let (m, d) = model();
+        let mut arch = ProposedCotm::new(m, WtaKind::Mesh).unwrap();
+        let a = arch.infer(&d.features[0]).unwrap();
+        let b = arch.infer(&d.features[0]).unwrap();
+        // Same input -> same prediction; the second costs less digital
+        // energy (no datapath toggles) though race energy recurs.
+        assert_eq!(a.predicted, b.predicted);
+        assert!(b.energy_fj < a.energy_fj);
+    }
+}

@@ -1,0 +1,220 @@
+//! Handshake protocol monitors — checker components that assert protocol
+//! legality during simulation (the software analogue of SVA protocol
+//! assertions in the paper's verification flow). Used by integration
+//! tests and by the failure-injection suite.
+//!
+//! Monitors publish their counters through shared [`Counters`] handles so
+//! tests can inspect them after the monitor is boxed into the circuit.
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use crate::sim::{Component, Ctx, Logic, NetId};
+
+/// Shared observation counters for a protocol monitor.
+#[derive(Debug, Clone, Default)]
+pub struct Counters {
+    pub violations: Rc<Cell<u64>>,
+    pub transactions: Rc<Cell<u64>>,
+    pub outstanding: Rc<Cell<i64>>,
+}
+
+impl Counters {
+    pub fn new() -> Counters {
+        Counters::default()
+    }
+    fn violate(&self) {
+        self.violations.set(self.violations.get() + 1);
+    }
+    fn complete(&self) {
+        self.transactions.set(self.transactions.get() + 1);
+    }
+}
+
+/// Two-phase (transition-signalling) monitor: every transition on
+/// `req`/`ack` is an event; legality = strict req/ack alternation.
+pub struct TwoPhaseMonitor {
+    name: String,
+    req: NetId,
+    ack: NetId,
+    pub counters: Counters,
+}
+
+impl TwoPhaseMonitor {
+    pub fn new(name: impl Into<String>, req: NetId, ack: NetId, counters: Counters) -> Self {
+        TwoPhaseMonitor { name: name.into(), req, ack, counters }
+    }
+}
+
+impl Component for TwoPhaseMonitor {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn on_input(&mut self, pin: usize, ctx: &mut Ctx) {
+        let v = if pin == 0 { ctx.get(self.req) } else { ctx.get(self.ack) };
+        if !v.is_defined() {
+            return;
+        }
+        let out = &self.counters.outstanding;
+        if pin == 0 {
+            out.set(out.get() + 1);
+            if out.get() > 1 {
+                self.counters.violate(); // second req before ack
+            }
+        } else {
+            out.set(out.get() - 1);
+            if out.get() < 0 {
+                self.counters.violate(); // ack without req
+            } else {
+                self.counters.complete();
+            }
+        }
+    }
+
+    fn gate_equivalents(&self) -> f64 {
+        0.0 // testbench artefact, not silicon
+    }
+}
+
+/// Four-phase (return-to-zero) monitor: legal per-transaction sequence is
+/// `req↑ ack↑ req↓ ack↓`.
+pub struct FourPhaseMonitor {
+    name: String,
+    req: NetId,
+    ack: NetId,
+    state: u8, // 0 idle, 1 req↑, 2 ack↑, 3 req↓ (awaiting ack↓)
+    pub counters: Counters,
+}
+
+impl FourPhaseMonitor {
+    pub fn new(name: impl Into<String>, req: NetId, ack: NetId, counters: Counters) -> Self {
+        FourPhaseMonitor { name: name.into(), req, ack, state: 0, counters }
+    }
+
+    /// Whether observed levels are consistent with the current state
+    /// (filters notifications that carry no edge for this monitor).
+    fn consistent(&self, req: Logic, ack: Logic) -> bool {
+        match self.state {
+            0 => req == Logic::Zero && ack == Logic::Zero,
+            1 => req == Logic::One && ack == Logic::Zero,
+            2 => req == Logic::One && ack == Logic::One,
+            3 => req == Logic::Zero && ack == Logic::One,
+            _ => false,
+        }
+    }
+}
+
+impl Component for FourPhaseMonitor {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn on_input(&mut self, pin: usize, ctx: &mut Ctx) {
+        let req = ctx.get(self.req);
+        let ack = ctx.get(self.ack);
+        if !req.is_defined() || !ack.is_defined() {
+            return;
+        }
+        match (self.state, pin) {
+            (0, 0) if req == Logic::One => self.state = 1,
+            (1, 1) if ack == Logic::One => self.state = 2,
+            (2, 0) if req == Logic::Zero => self.state = 3,
+            (3, 1) if ack == Logic::Zero => {
+                self.state = 0;
+                self.counters.complete();
+            }
+            _ if self.consistent(req, ack) => {}
+            _ => self.counters.violate(),
+        }
+    }
+
+    fn gate_equivalents(&self) -> f64 {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::energy::TechParams;
+    use crate::sim::{Circuit, Time};
+
+    #[test]
+    fn two_phase_alternation_is_clean() {
+        let mut c = Circuit::new(TechParams::tsmc65_digital());
+        let req = c.net_init("req", Logic::Zero);
+        let ack = c.net_init("ack", Logic::Zero);
+        let ctr = Counters::new();
+        c.add(
+            Box::new(TwoPhaseMonitor::new("mon", req, ack, ctr.clone())),
+            vec![req, ack],
+        );
+        let mut t = Time::ps(10);
+        for i in 0..4 {
+            let v = if i % 2 == 0 { Logic::One } else { Logic::Zero };
+            c.drive(req, v, t);
+            t += Time::ps(10);
+            c.drive(ack, v, t);
+            t += Time::ps(10);
+        }
+        c.run_to_quiescence().unwrap();
+        assert_eq!(ctr.violations.get(), 0);
+        assert_eq!(ctr.transactions.get(), 4);
+        assert_eq!(ctr.outstanding.get(), 0);
+    }
+
+    #[test]
+    fn two_phase_double_req_flags_violation() {
+        let mut c = Circuit::new(TechParams::tsmc65_digital());
+        let req = c.net_init("req", Logic::Zero);
+        let ack = c.net_init("ack", Logic::Zero);
+        let ctr = Counters::new();
+        c.add(
+            Box::new(TwoPhaseMonitor::new("mon", req, ack, ctr.clone())),
+            vec![req, ack],
+        );
+        c.drive(req, Logic::One, Time::ps(10));
+        c.drive(req, Logic::Zero, Time::ps(20)); // second token, no ack
+        c.run_to_quiescence().unwrap();
+        assert_eq!(ctr.violations.get(), 1);
+    }
+
+    #[test]
+    fn four_phase_full_transaction_counted() {
+        let mut c = Circuit::new(TechParams::tsmc65_digital());
+        let req = c.net_init("req", Logic::Zero);
+        let ack = c.net_init("ack", Logic::Zero);
+        let ctr = Counters::new();
+        c.add(
+            Box::new(FourPhaseMonitor::new("mon", req, ack, ctr.clone())),
+            vec![req, ack],
+        );
+        for base in [10u64, 100] {
+            c.drive(req, Logic::One, Time::ps(base));
+            c.drive(ack, Logic::One, Time::ps(base + 10));
+            c.drive(req, Logic::Zero, Time::ps(base + 20));
+            c.drive(ack, Logic::Zero, Time::ps(base + 30));
+        }
+        c.run_to_quiescence().unwrap();
+        assert_eq!(ctr.violations.get(), 0);
+        assert_eq!(ctr.transactions.get(), 2);
+    }
+
+    #[test]
+    fn four_phase_early_ack_drop_is_violation() {
+        let mut c = Circuit::new(TechParams::tsmc65_digital());
+        let req = c.net_init("req", Logic::Zero);
+        let ack = c.net_init("ack", Logic::Zero);
+        let ctr = Counters::new();
+        c.add(
+            Box::new(FourPhaseMonitor::new("mon", req, ack, ctr.clone())),
+            vec![req, ack],
+        );
+        c.drive(req, Logic::One, Time::ps(10));
+        c.drive(ack, Logic::One, Time::ps(20));
+        c.drive(ack, Logic::Zero, Time::ps(30)); // ack↓ before req↓
+        c.run_to_quiescence().unwrap();
+        assert!(ctr.violations.get() >= 1);
+    }
+}

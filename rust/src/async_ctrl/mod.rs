@@ -1,0 +1,11 @@
+//! Asynchronous control fabric: click-element pipeline controllers
+//! (two-phase bundled-data, Fig. 2 / Algorithm 1), handshake protocol
+//! monitors, and the four-to-two phase interface (§II-C.5).
+
+pub mod click;
+pub mod handshake;
+pub mod phase_iface;
+
+pub use click::ClickElement;
+pub use handshake::{FourPhaseMonitor, TwoPhaseMonitor};
+pub use phase_iface::Phase4To2;

@@ -1,0 +1,187 @@
+//! Four-to-two phase interface (paper §II-C.5).
+//!
+//! The classification module is four-phase QDI (launch/return-to-zero
+//! controlled by Muller C-elements); the TM pipeline controller is
+//! two-phase bundled data. The boundary is bridged by:
+//!
+//! * request side — a two-phase toggle on `req2` produces a four-phase
+//!   `req4↑`; the module's completion (`done4↑`) lets `req4` return to
+//!   zero (C-element discipline);
+//! * acknowledge side — a TFF converts the four-phase `done4` pulse into
+//!   a two-phase `ack2` toggle.
+
+use crate::sim::energy::{EnergyKind, GateKind};
+use crate::sim::{Component, Ctx, Logic, NetId, Time};
+
+/// Behavioural 4↔2 phase bridge.
+/// Pins: `[req2, done4, rst]`; outputs: `req4` (RTZ level), `ack2` (toggle).
+pub struct Phase4To2 {
+    name: String,
+    req2: NetId,
+    done4: NetId,
+    rst: NetId,
+    req4: NetId,
+    ack2: NetId,
+    last_req2: Logic,
+    last_done4: Logic,
+    ack_phase: bool,
+    delay: Time,
+    e_fj: f64,
+    pub launches: u64,
+}
+
+impl Phase4To2 {
+    pub fn new(
+        name: impl Into<String>,
+        req2: NetId,
+        done4: NetId,
+        rst: NetId,
+        req4: NetId,
+        ack2: NetId,
+        tech: &crate::sim::TechParams,
+    ) -> Phase4To2 {
+        Phase4To2 {
+            name: name.into(),
+            req2,
+            done4,
+            rst,
+            req4,
+            ack2,
+            last_req2: Logic::Zero,
+            last_done4: Logic::Zero,
+            ack_phase: false,
+            delay: tech.gate_delay(GateKind::CElement),
+            e_fj: tech.gate_energy_fj(GateKind::CElement)
+                + tech.gate_energy_fj(GateKind::Tff),
+            launches: 0,
+        }
+    }
+}
+
+impl Component for Phase4To2 {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn init(&mut self, ctx: &mut Ctx) {
+        ctx.schedule(self.req4, Logic::Zero, Time::ZERO);
+        ctx.schedule(self.ack2, Logic::Zero, Time::ZERO);
+    }
+
+    fn on_input(&mut self, pin: usize, ctx: &mut Ctx) {
+        if ctx.get(self.rst) == Logic::One {
+            self.last_req2 = Logic::Zero;
+            self.last_done4 = Logic::Zero;
+            self.ack_phase = false;
+            ctx.schedule_if_changed(self.req4, Logic::Zero, self.delay);
+            ctx.schedule_if_changed(self.ack2, Logic::Zero, self.delay);
+            return;
+        }
+        match pin {
+            0 => {
+                // Two-phase request: any defined toggle launches req4↑.
+                let v = ctx.get(self.req2);
+                if v.is_defined() && v != self.last_req2 {
+                    self.last_req2 = v;
+                    self.launches += 1;
+                    ctx.spend(EnergyKind::Handshake, self.e_fj);
+                    ctx.schedule(self.req4, Logic::One, self.delay);
+                }
+            }
+            1 => {
+                let v = ctx.get(self.done4);
+                let rising = self.last_done4 == Logic::Zero && v == Logic::One;
+                let falling = self.last_done4 == Logic::One && v == Logic::Zero;
+                if v.is_defined() {
+                    self.last_done4 = v;
+                }
+                if rising {
+                    // Completion: return req4 to zero and toggle ack2 (TFF).
+                    self.ack_phase = !self.ack_phase;
+                    ctx.spend(EnergyKind::Handshake, self.e_fj);
+                    ctx.schedule(self.req4, Logic::Zero, self.delay);
+                    ctx.schedule(
+                        self.ack2,
+                        Logic::from_bool(self.ack_phase),
+                        self.delay + self.delay,
+                    );
+                } else if falling {
+                    // RTZ of done completes the four-phase cycle; nothing
+                    // to emit on the two-phase side.
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn gate_equivalents(&self) -> f64 {
+        10.0 // C-element + TFF + glue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::energy::TechParams;
+    use crate::sim::Circuit;
+
+    fn fixture() -> (Circuit, NetId, NetId, NetId, NetId) {
+        let t = TechParams::tsmc65_digital();
+        let mut c = Circuit::new(t.clone());
+        let req2 = c.net_init("req2", Logic::Zero);
+        let done4 = c.net_init("done4", Logic::Zero);
+        let rst = c.net_init("rst", Logic::Zero);
+        let req4 = c.net("req4");
+        let ack2 = c.net("ack2");
+        c.add(
+            Box::new(Phase4To2::new("if", req2, done4, rst, req4, ack2, &t)),
+            vec![req2, done4, rst],
+        );
+        c.init_components();
+        c.run_to_quiescence().unwrap();
+        (c, req2, done4, req4, ack2)
+    }
+
+    #[test]
+    fn toggle_launches_four_phase_request() {
+        let (mut c, req2, _done4, req4, _ack2) = fixture();
+        c.drive(req2, Logic::One, Time::ps(10));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(req4), Logic::One);
+    }
+
+    #[test]
+    fn done_returns_req_to_zero_and_toggles_ack() {
+        let (mut c, req2, done4, req4, ack2) = fixture();
+        c.drive(req2, Logic::One, Time::ps(10));
+        c.run_to_quiescence().unwrap();
+        c.drive(done4, Logic::One, Time::ps(10));
+        c.drive(done4, Logic::Zero, Time::ps(40));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(req4), Logic::Zero);
+        assert_eq!(c.value(ack2), Logic::One); // first toggle
+
+        // Second transaction: req2 toggles back to 0.
+        c.drive(req2, Logic::Zero, Time::ps(10));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(req4), Logic::One);
+        c.drive(done4, Logic::One, Time::ps(10));
+        c.drive(done4, Logic::Zero, Time::ps(40));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(ack2), Logic::Zero); // second toggle
+    }
+
+    #[test]
+    fn both_req2_polarities_launch() {
+        let (mut c, req2, done4, req4, _ack2) = fixture();
+        for (i, v) in [Logic::One, Logic::Zero, Logic::One].iter().enumerate() {
+            c.drive(req2, *v, Time::ps(10));
+            c.run_to_quiescence().unwrap();
+            assert_eq!(c.value(req4), Logic::One, "launch {i}");
+            c.drive(done4, Logic::One, Time::ps(10));
+            c.drive(done4, Logic::Zero, Time::ps(40));
+            c.run_to_quiescence().unwrap();
+            assert_eq!(c.value(req4), Logic::Zero, "rtz {i}");
+        }
+    }
+}

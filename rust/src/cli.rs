@@ -1,0 +1,128 @@
+//! Hand-rolled CLI argument parsing (no clap offline).
+//!
+//! Grammar: `tmtd <subcommand> [--flag value] [--switch]`.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line: subcommand, flags, positional args.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut it = raw.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut args = Args { command, ..Args::default() };
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::config("bare `--` not supported"));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    args.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("bad value for --{name}: {v:?}"))),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+}
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+tmtd — event-driven digital-time-domain Tsetlin machine inference
+
+USAGE: tmtd <command> [options]
+
+COMMANDS:
+  train      Train models on a dataset and save them
+             --dataset iris|xor|blobs  --out-dir models/ --epochs N --seed N
+  infer      Run one inference through a backend
+             --backend <name> --model-dir models/ --sample N
+  eval       Evaluate all six architectures (Table IV)
+             --epochs N --seed N [--wta tba|mesh]
+  table1     WTA theoretical + measured analysis (Table I)
+  table3     State-of-the-art comparison (Table III)
+  table4     Alias of `eval`
+  waveform   Dump VCD waveforms for Figs. 6-8  --out-dir waves/
+  serve      Run the serving coordinator demo
+             --config serve.toml --requests N [--no-golden]
+  selfcheck  Train + verify every backend agrees on Iris
+  help       Show this text
+
+Backends: golden-multiclass golden-cotm multiclass-sync multiclass-async-bd
+          multiclass-proposed cotm-sync cotm-async-bd cotm-proposed
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = parse("train --dataset iris --epochs 60 models/");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.flag("dataset"), Some("iris"));
+        assert_eq!(a.flag_parse("epochs", 0usize).unwrap(), 60);
+        assert_eq!(a.positional, vec!["models/"]);
+    }
+
+    #[test]
+    fn equals_form_and_switches() {
+        let a = parse("serve --config=serve.toml --no-golden");
+        assert_eq!(a.flag("config"), Some("serve.toml"));
+        assert!(a.switch("no-golden"));
+        assert!(!a.switch("verbose"));
+    }
+
+    #[test]
+    fn trailing_switch_not_eaten_by_flag() {
+        let a = parse("x --alpha --beta");
+        assert!(a.switch("alpha"));
+        assert!(a.switch("beta"));
+    }
+
+    #[test]
+    fn bad_parse_value_is_error() {
+        let a = parse("x --n abc");
+        assert!(a.flag_parse("n", 1usize).is_err());
+    }
+}

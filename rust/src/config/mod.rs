@@ -1,0 +1,151 @@
+//! Configuration: a minimal TOML-subset parser (no external crates
+//! offline) plus typed configuration structures for the serving
+//! coordinator and experiment harnesses.
+
+pub mod json;
+pub mod toml;
+
+pub use json::Json;
+pub use toml::TomlDoc;
+
+use crate::error::Result;
+use crate::wta::WtaKind;
+
+/// Serving coordinator configuration (`tmtd serve --config <file>`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Worker threads for hardware-simulation backends.
+    pub workers: usize,
+    /// Dynamic batcher: max batch (must be one of the AOT batch sizes).
+    pub max_batch: usize,
+    /// Dynamic batcher: flush timeout in microseconds.
+    pub batch_timeout_us: u64,
+    /// Bounded request queue depth (backpressure threshold).
+    pub queue_depth: usize,
+    /// Artifacts directory (AOT outputs).
+    pub artifacts_dir: String,
+    /// WTA topology for the proposed architectures.
+    pub wta: WtaKind,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 4,
+            max_batch: 16,
+            batch_timeout_us: 200,
+            queue_depth: 1024,
+            artifacts_dir: "artifacts".into(),
+            wta: WtaKind::Tba,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Parse from a TOML document:
+    ///
+    /// ```toml
+    /// [coordinator]
+    /// workers = 4
+    /// max_batch = 16
+    /// batch_timeout_us = 200
+    /// queue_depth = 1024
+    /// artifacts_dir = "artifacts"
+    /// wta = "tba"
+    /// ```
+    pub fn from_toml(doc: &TomlDoc) -> Result<ServeConfig> {
+        let mut cfg = ServeConfig::default();
+        if let Some(v) = doc.get("coordinator", "workers") {
+            cfg.workers = v.as_int()? as usize;
+        }
+        if let Some(v) = doc.get("coordinator", "max_batch") {
+            cfg.max_batch = v.as_int()? as usize;
+        }
+        if let Some(v) = doc.get("coordinator", "batch_timeout_us") {
+            cfg.batch_timeout_us = v.as_int()? as u64;
+        }
+        if let Some(v) = doc.get("coordinator", "queue_depth") {
+            cfg.queue_depth = v.as_int()? as usize;
+        }
+        if let Some(v) = doc.get("coordinator", "artifacts_dir") {
+            cfg.artifacts_dir = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.get("coordinator", "wta") {
+            cfg.wta = match v.as_str()? {
+                "tba" => WtaKind::Tba,
+                "mesh" => WtaKind::Mesh,
+                other => {
+                    return Err(crate::Error::config(format!(
+                        "unknown wta kind {other:?} (expected tba|mesh)"
+                    )))
+                }
+            };
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<ServeConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&TomlDoc::parse(&text)?)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            return Err(crate::Error::config("workers must be >= 1"));
+        }
+        if self.max_batch == 0 {
+            return Err(crate::Error::config("max_batch must be >= 1"));
+        }
+        if self.queue_depth < self.max_batch {
+            return Err(crate::Error::config(
+                "queue_depth must be >= max_batch (backpressure would deadlock)",
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        assert!(ServeConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let doc = TomlDoc::parse(
+            r#"
+            [coordinator]
+            workers = 8
+            max_batch = 64
+            batch_timeout_us = 500
+            queue_depth = 2048
+            artifacts_dir = "custom/artifacts"
+            wta = "mesh"
+            "#,
+        )
+        .unwrap();
+        let cfg = ServeConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.workers, 8);
+        assert_eq!(cfg.max_batch, 64);
+        assert_eq!(cfg.wta, WtaKind::Mesh);
+        assert_eq!(cfg.artifacts_dir, "custom/artifacts");
+    }
+
+    #[test]
+    fn rejects_bad_wta() {
+        let doc = TomlDoc::parse("[coordinator]\nwta = \"ring\"\n").unwrap();
+        assert!(ServeConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn rejects_queue_smaller_than_batch() {
+        let doc =
+            TomlDoc::parse("[coordinator]\nmax_batch = 64\nqueue_depth = 8\n").unwrap();
+        assert!(ServeConfig::from_toml(&doc).is_err());
+    }
+}

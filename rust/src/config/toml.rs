@@ -1,0 +1,174 @@
+//! Minimal TOML-subset parser: `[section]` headers and
+//! `key = value` lines where value is a string, integer, float or bool.
+//! Comments (`#`) and blank lines are ignored. No nested tables, arrays
+//! or multi-line strings — the config surface deliberately stays small.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A scalar TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    String(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::String(s) => Ok(s),
+            other => Err(Error::config(format!("expected string, got {other:?}"))),
+        }
+    }
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            other => Err(Error::config(format!("expected integer, got {other:?}"))),
+        }
+    }
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            other => Err(Error::config(format!("expected float, got {other:?}"))),
+        }
+    }
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => Err(Error::config(format!("expected bool, got {other:?}"))),
+        }
+    }
+}
+
+/// A parsed document: section → key → value. Keys before any section
+/// header land in the `""` section.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::config(format!("line {}: unterminated section", lineno + 1)))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                Error::config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            let value = parse_value(value.trim())
+                .map_err(|e| Error::config(format!("line {}: {e}", lineno + 1)))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> std::result::Result<TomlValue, String> {
+    if let Some(stripped) = text.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(TomlValue::String(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = text.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value {text:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = TomlDoc::parse(
+            r#"
+            top = 1
+            [a]
+            s = "hello"   # trailing comment
+            n = 42
+            f = 2.5
+            b = true
+            [b]
+            s = "wor#ld"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top").unwrap().as_int().unwrap(), 1);
+        assert_eq!(doc.get("a", "s").unwrap().as_str().unwrap(), "hello");
+        assert_eq!(doc.get("a", "n").unwrap().as_int().unwrap(), 42);
+        assert_eq!(doc.get("a", "f").unwrap().as_float().unwrap(), 2.5);
+        assert!(doc.get("a", "b").unwrap().as_bool().unwrap());
+        assert_eq!(doc.get("b", "s").unwrap().as_str().unwrap(), "wor#ld");
+    }
+
+    #[test]
+    fn int_coerces_to_float_not_vice_versa() {
+        let doc = TomlDoc::parse("x = 3\ny = 3.5\n").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_float().unwrap(), 3.0);
+        assert!(doc.get("", "y").unwrap().as_int().is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(TomlDoc::parse("[unclosed\n").is_err());
+        assert!(TomlDoc::parse("novalue\n").is_err());
+        assert!(TomlDoc::parse("x = \"open\n").is_err());
+    }
+
+    #[test]
+    fn missing_returns_none() {
+        let doc = TomlDoc::parse("[a]\nx = 1\n").unwrap();
+        assert!(doc.get("a", "y").is_none());
+        assert!(doc.get("z", "x").is_none());
+    }
+}

@@ -1,0 +1,200 @@
+//! Dynamic batcher: coalesces single-sample requests into batches for
+//! the fixed-batch AOT artifacts — flush on size or age, whichever
+//! comes first (the standard serving trade-off between throughput and
+//! tail latency).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::stats::ServerStats;
+use crate::error::{Error, Result};
+
+/// An item waiting in a batch.
+pub struct Pending<T, R> {
+    pub item: T,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<Result<R>>,
+}
+
+/// Dynamic batcher thread over items `T` with per-item replies `R`.
+pub struct DynamicBatcher<T: Send + 'static, R: Send + 'static> {
+    tx: Option<mpsc::Sender<Pending<T, R>>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl<T: Send + 'static, R: Send + 'static> DynamicBatcher<T, R> {
+    /// `flush(batch) -> per-item results` runs on the batcher thread —
+    /// non-`Send` state (e.g. the PJRT service handle) may live in the
+    /// closure's captured environment as it is moved in once.
+    pub fn new<F>(
+        max_batch: usize,
+        timeout: Duration,
+        stats: Arc<ServerStats>,
+        mut flush: F,
+    ) -> Result<DynamicBatcher<T, R>>
+    where
+        F: FnMut(Vec<&T>) -> Vec<Result<R>> + Send + 'static,
+    {
+        if max_batch == 0 {
+            return Err(Error::coordinator("max_batch must be >= 1"));
+        }
+        let (tx, rx) = mpsc::channel::<Pending<T, R>>();
+        let handle = std::thread::Builder::new()
+            .name("tmtd-batcher".into())
+            .spawn(move || {
+                let mut queue: Vec<Pending<T, R>> = Vec::new();
+                loop {
+                    // Wait bounded by the oldest item's remaining age.
+                    let wait = if let Some(oldest) = queue.first() {
+                        timeout.saturating_sub(oldest.enqueued.elapsed())
+                    } else {
+                        // Idle: block until something arrives.
+                        match rx.recv() {
+                            Ok(p) => {
+                                queue.push(p);
+                                continue;
+                            }
+                            Err(_) => break, // shut down: drain below
+                        }
+                    };
+                    match rx.recv_timeout(wait) {
+                        Ok(p) => queue.push(p),
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            // Final drain after senders vanish.
+                            Self::run_flush(&mut queue, &mut flush, &stats);
+                            break;
+                        }
+                    }
+                    let oldest_expired = queue
+                        .first()
+                        .is_some_and(|p| p.enqueued.elapsed() >= timeout);
+                    if queue.len() >= max_batch || oldest_expired {
+                        let take = queue.len().min(max_batch);
+                        let mut batch: Vec<Pending<T, R>> = queue.drain(..take).collect();
+                        Self::run_flush(&mut batch, &mut flush, &stats);
+                    }
+                }
+            })
+            .map_err(|e| Error::coordinator(format!("spawn batcher: {e}")))?;
+        Ok(DynamicBatcher { tx: Some(tx), handle: Some(handle) })
+    }
+
+    fn run_flush<F>(batch: &mut Vec<Pending<T, R>>, flush: &mut F, stats: &ServerStats)
+    where
+        F: FnMut(Vec<&T>) -> Vec<Result<R>>,
+    {
+        if batch.is_empty() {
+            return;
+        }
+        stats.record_batch(batch.len());
+        let items: Vec<&T> = batch.iter().map(|p| &p.item).collect();
+        let mut results = flush(items);
+        // Arity mismatch from the flush fn = internal error for everyone.
+        if results.len() != batch.len() {
+            for p in batch.drain(..) {
+                let _ = p
+                    .reply
+                    .send(Err(Error::coordinator("batch flush arity mismatch")));
+            }
+            return;
+        }
+        for p in batch.drain(..) {
+            let _ = p.reply.send(results.remove(0));
+        }
+    }
+
+    /// Enqueue one item; the reply arrives on the returned channel.
+    pub fn submit(&self, item: T) -> Result<mpsc::Receiver<Result<R>>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .ok_or_else(|| Error::coordinator("batcher shut down"))?
+            .send(Pending { item, enqueued: Instant::now(), reply: reply_tx })
+            .map_err(|_| Error::coordinator("batcher thread exited"))?;
+        Ok(reply_rx)
+    }
+
+    pub fn shutdown(mut self) {
+        self.tx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<T: Send + 'static, R: Send + 'static> Drop for DynamicBatcher<T, R> {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_batcher(
+        max_batch: usize,
+        timeout_ms: u64,
+    ) -> (DynamicBatcher<u32, (u32, usize)>, Arc<ServerStats>) {
+        let stats = Arc::new(ServerStats::new());
+        let b = DynamicBatcher::new(
+            max_batch,
+            Duration::from_millis(timeout_ms),
+            Arc::clone(&stats),
+            |items: Vec<&u32>| {
+                let n = items.len();
+                items.into_iter().map(|&x| Ok((x, n))).collect()
+            },
+        )
+        .unwrap();
+        (b, stats)
+    }
+
+    #[test]
+    fn flushes_on_size() {
+        let (b, stats) = echo_batcher(4, 10_000);
+        let rxs: Vec<_> = (0..4u32).map(|i| b.submit(i).unwrap()).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let (x, n) = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+            assert_eq!(x, i as u32);
+            assert_eq!(n, 4, "flushed as one full batch");
+        }
+        assert_eq!(stats.snapshot().batches_flushed, 1);
+    }
+
+    #[test]
+    fn flushes_on_timeout() {
+        let (b, stats) = echo_batcher(64, 30);
+        let rx = b.submit(7).unwrap();
+        let (x, n) = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!((x, n), (7, 1));
+        assert_eq!(stats.snapshot().batches_flushed, 1);
+    }
+
+    #[test]
+    fn drains_on_shutdown() {
+        let (b, _stats) = echo_batcher(64, 60_000);
+        let rx = b.submit(3).unwrap();
+        b.shutdown(); // must flush the pending item rather than drop it
+        let (x, _) = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!(x, 3);
+    }
+
+    #[test]
+    fn oversize_stream_splits_into_batches() {
+        let (b, stats) = echo_batcher(8, 20);
+        let rxs: Vec<_> = (0..20u32).map(|i| b.submit(i).unwrap()).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        }
+        let snap = stats.snapshot();
+        assert!(snap.batches_flushed >= 3, "batches={}", snap.batches_flushed);
+        assert_eq!(snap.batched_requests.max(20), 20);
+    }
+}

@@ -1,0 +1,33 @@
+//! Serving coordinator — the event-driven L3 shell around the inference
+//! backends.
+//!
+//! Routing ([`router`]): every request names a [`router::Backend`] —
+//! either the XLA *golden/functional path* (AOT artifacts via PJRT,
+//! dynamically batched) or one of the six *hardware-model paths*
+//! (event-simulated architectures). The golden path is what a
+//! production deployment would serve from; the hardware paths are the
+//! paper's evaluation targets, served through the same front door so
+//! the equivalence checks and benchmarks exercise identical plumbing.
+//!
+//! Batching ([`batcher`]): golden requests are coalesced by a dynamic
+//! batcher (flush on size or timeout) onto the fixed-batch AOT
+//! artifacts, padding the tail — the standard serving pattern.
+//!
+//! Concurrency ([`pool`]): hardware models are not `Send` (they embed
+//! `Rc`-coded delay elements), so each worker thread *builds its own*
+//! architecture set from the (Send) trained models and pulls jobs from
+//! a shared queue. The PJRT runtime is likewise thread-pinned
+//! ([`crate::runtime::GoldenService`]).
+//!
+//! Backpressure: a bounded in-flight budget; submissions beyond it are
+//! rejected immediately ([`ServerStats::rejected`] counts them).
+
+pub mod batcher;
+pub mod pool;
+pub mod router;
+pub mod server;
+pub mod stats;
+
+pub use router::{Backend, InferRequest, InferResponse};
+pub use server::CoordinatorServer;
+pub use stats::{ServerStats, StatsSnapshot};

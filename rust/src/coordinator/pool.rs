@@ -1,0 +1,146 @@
+//! Worker thread pool (no tokio offline): a shared job queue drained by
+//! N workers. Each worker runs a caller-provided *state factory* once at
+//! start-up, so non-`Send` per-worker state (the hardware architecture
+//! instances with their `Rc` delay codes) lives entirely inside its
+//! thread.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+
+/// A job parameterised over per-worker state `S`.
+pub type Job<S> = Box<dyn FnOnce(&mut S) + Send>;
+
+/// Fixed-size worker pool with per-worker state.
+pub struct WorkerPool<S: 'static> {
+    tx: Option<mpsc::Sender<Job<S>>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl<S: 'static> WorkerPool<S> {
+    /// Spawn `n` workers; `factory(worker_index)` builds each worker's
+    /// state inside its own thread (the factory itself must be Send).
+    pub fn new<F>(n: usize, factory: F) -> Result<WorkerPool<S>>
+    where
+        F: Fn(usize) -> S + Send + Sync + 'static,
+    {
+        if n == 0 {
+            return Err(Error::coordinator("worker pool needs >= 1 worker"));
+        }
+        let (tx, rx) = mpsc::channel::<Job<S>>();
+        let rx = Arc::new(Mutex::new(rx));
+        let factory = Arc::new(factory);
+        let mut handles = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            let factory = Arc::clone(&factory);
+            let handle = std::thread::Builder::new()
+                .name(format!("tmtd-worker-{i}"))
+                .spawn(move || {
+                    let mut state = factory(i);
+                    loop {
+                        let job = {
+                            let guard = rx.lock().expect("pool queue poisoned");
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(&mut state),
+                            Err(_) => break, // all senders dropped
+                        }
+                    }
+                })
+                .map_err(|e| Error::coordinator(format!("spawn worker: {e}")))?;
+            handles.push(handle);
+        }
+        Ok(WorkerPool { tx: Some(tx), handles })
+    }
+
+    /// Enqueue a job.
+    pub fn submit(&self, job: Job<S>) -> Result<()> {
+        self.tx
+            .as_ref()
+            .ok_or_else(|| Error::coordinator("pool shut down"))?
+            .send(job)
+            .map_err(|_| Error::coordinator("pool workers exited"))
+    }
+
+    /// Drop the queue and join all workers.
+    pub fn shutdown(mut self) {
+        self.tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<S: 'static> Drop for WorkerPool<S> {
+    fn drop(&mut self) {
+        self.tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_jobs_on_all_workers() {
+        let pool: WorkerPool<usize> = WorkerPool::new(4, |i| i).unwrap();
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.submit(Box::new(move |_state| {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            }))
+            .unwrap();
+        }
+        for _ in 0..100 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn per_worker_state_is_isolated() {
+        // Each worker increments its own counter; totals must equal jobs.
+        let pool: WorkerPool<u64> = WorkerPool::new(3, |_| 0u64).unwrap();
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..60 {
+            let tx = tx.clone();
+            pool.submit(Box::new(move |state| {
+                *state += 1;
+                let _ = tx.send(*state);
+            }))
+            .unwrap();
+        }
+        let mut seen = Vec::new();
+        for _ in 0..60 {
+            seen.push(rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap());
+        }
+        // Per-worker counters never exceed the job total and are > 0.
+        assert!(seen.iter().all(|&v| v >= 1 && v <= 60));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        assert!(WorkerPool::<u8>::new(0, |_| 0u8).is_err());
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let pool: WorkerPool<()> = WorkerPool::new(2, |_| ()).unwrap();
+        pool.submit(Box::new(|_| {})).unwrap();
+        pool.shutdown(); // must not hang
+    }
+}

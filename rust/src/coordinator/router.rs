@@ -1,0 +1,104 @@
+//! Request/response types and backend routing targets.
+
+use crate::sim::Time;
+
+/// Where a request should execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// Functional path: AOT multi-class TM artifact via PJRT (batched).
+    GoldenMulticlass,
+    /// Functional path: AOT CoTM artifact via PJRT (batched).
+    GoldenCotm,
+    /// Event-simulated hardware models.
+    SyncMulticlass,
+    AsyncBdMulticlass,
+    ProposedMulticlass,
+    SyncCotm,
+    AsyncBdCotm,
+    ProposedCotm,
+}
+
+impl Backend {
+    pub const ALL: [Backend; 8] = [
+        Backend::GoldenMulticlass,
+        Backend::GoldenCotm,
+        Backend::SyncMulticlass,
+        Backend::AsyncBdMulticlass,
+        Backend::ProposedMulticlass,
+        Backend::SyncCotm,
+        Backend::AsyncBdCotm,
+        Backend::ProposedCotm,
+    ];
+
+    pub fn is_golden(self) -> bool {
+        matches!(self, Backend::GoldenMulticlass | Backend::GoldenCotm)
+    }
+
+    /// AOT artifact family for golden backends.
+    pub fn family(self) -> Option<&'static str> {
+        match self {
+            Backend::GoldenMulticlass => Some("multiclass_tm"),
+            Backend::GoldenCotm => Some("cotm"),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::GoldenMulticlass => "golden-multiclass",
+            Backend::GoldenCotm => "golden-cotm",
+            Backend::SyncMulticlass => "multiclass-sync",
+            Backend::AsyncBdMulticlass => "multiclass-async-bd",
+            Backend::ProposedMulticlass => "multiclass-proposed",
+            Backend::SyncCotm => "cotm-sync",
+            Backend::AsyncBdCotm => "cotm-async-bd",
+            Backend::ProposedCotm => "cotm-proposed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Backend> {
+        Backend::ALL.iter().copied().find(|b| b.name() == s)
+    }
+}
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    pub features: Vec<bool>,
+    pub backend: Backend,
+}
+
+/// One inference response.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    pub backend: Backend,
+    pub predicted: usize,
+    pub class_sums: Vec<i32>,
+    /// Modelled hardware latency (simulated backends only).
+    pub hw_latency: Option<Time>,
+    /// Modelled per-inference energy in fJ (simulated backends only).
+    pub hw_energy_fj: Option<f64>,
+    /// Wall-clock service time (host), microseconds.
+    pub service_us: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for b in Backend::ALL {
+            assert_eq!(Backend::parse(b.name()), Some(b));
+        }
+        assert_eq!(Backend::parse("bogus"), None);
+    }
+
+    #[test]
+    fn golden_families() {
+        assert_eq!(Backend::GoldenCotm.family(), Some("cotm"));
+        assert_eq!(Backend::SyncCotm.family(), None);
+        assert!(Backend::GoldenMulticlass.is_golden());
+        assert!(!Backend::ProposedCotm.is_golden());
+    }
+}

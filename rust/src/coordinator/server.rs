@@ -1,0 +1,407 @@
+//! The coordinator server: one front door over all backends.
+//!
+//! * Golden requests → dynamic batcher thread → PJRT golden service
+//!   (thread-pinned runtime).
+//! * Hardware-model requests → worker pool; each worker owns its own six
+//!   architecture instances built from the trained models.
+//! * Bounded in-flight budget; excess submissions are rejected
+//!   immediately (backpressure).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::arch::digital::{
+    async_bd_cotm, async_bd_multiclass, sync_cotm, sync_multiclass, DigitalCotm,
+    DigitalMulticlass,
+};
+use crate::arch::proposed_cotm::ProposedCotm;
+use crate::arch::proposed_tm::ProposedMulticlass;
+use crate::arch::Architecture;
+use crate::config::ServeConfig;
+use crate::coordinator::batcher::DynamicBatcher;
+use crate::coordinator::pool::WorkerPool;
+use crate::coordinator::router::{Backend, InferRequest, InferResponse};
+use crate::coordinator::stats::{ServerStats, StatsSnapshot};
+use crate::error::{Error, Result};
+use crate::runtime::golden::{GoldenModels, GoldenService};
+use crate::tm::{CoTmModel, MultiClassTmModel};
+
+/// Per-worker architecture set (lives inside its worker thread; the
+/// architectures embed `Rc` state and are deliberately not `Send`).
+pub struct WorkerState {
+    sync_mc: DigitalMulticlass,
+    async_mc: DigitalMulticlass,
+    proposed_mc: ProposedMulticlass,
+    sync_co: DigitalCotm,
+    async_co: DigitalCotm,
+    proposed_co: ProposedCotm,
+}
+
+impl WorkerState {
+    fn arch(&mut self, b: Backend) -> &mut dyn Architecture {
+        match b {
+            Backend::SyncMulticlass => &mut self.sync_mc,
+            Backend::AsyncBdMulticlass => &mut self.async_mc,
+            Backend::ProposedMulticlass => &mut self.proposed_mc,
+            Backend::SyncCotm => &mut self.sync_co,
+            Backend::AsyncBdCotm => &mut self.async_co,
+            Backend::ProposedCotm => &mut self.proposed_co,
+            _ => unreachable!("golden backends are batched, not pooled"),
+        }
+    }
+}
+
+/// A request travelling to the golden batcher.
+struct GoldenItem {
+    features: Vec<f32>,
+}
+
+/// The coordinator server.
+pub struct CoordinatorServer {
+    pool: Option<WorkerPool<WorkerState>>,
+    /// Keeps the PJRT thread alive for the batchers' clients.
+    _golden: Option<GoldenService>,
+    /// One batcher per golden family (they hit different artifacts).
+    batcher_mc: Option<DynamicBatcher<GoldenItem, (Vec<f32>, usize)>>,
+    batcher_co: Option<DynamicBatcher<GoldenItem, (Vec<f32>, usize)>>,
+    stats: Arc<ServerStats>,
+    in_flight: Arc<AtomicU64>,
+    queue_depth: u64,
+    features: usize,
+}
+
+impl CoordinatorServer {
+    /// Build the server. `golden` is optional: without artifacts on disk
+    /// the golden backends report errors but the simulated backends work.
+    pub fn new(
+        cfg: &ServeConfig,
+        mc_model: MultiClassTmModel,
+        cotm_model: CoTmModel,
+        with_golden: bool,
+    ) -> Result<CoordinatorServer> {
+        cfg.validate()?;
+        let features = mc_model.params.features;
+        if cotm_model.params.features != features {
+            return Err(Error::coordinator("model feature widths differ"));
+        }
+        let stats = Arc::new(ServerStats::new());
+
+        // Worker pool: each worker builds its own architecture set.
+        let wta = cfg.wta;
+        let mc = mc_model.clone();
+        let co = cotm_model.clone();
+        let pool = WorkerPool::new(cfg.workers, move |_i| WorkerState {
+            sync_mc: sync_multiclass(mc.clone()),
+            async_mc: async_bd_multiclass(mc.clone()),
+            proposed_mc: ProposedMulticlass::new(mc.clone(), wta)
+                .expect("valid multiclass model"),
+            sync_co: sync_cotm(co.clone()),
+            async_co: async_bd_cotm(co.clone()),
+            proposed_co: ProposedCotm::new(co.clone(), wta).expect("valid cotm model"),
+        })?;
+
+        // Golden path: one PJRT service thread + a batcher per family.
+        let (golden, batcher_mc, batcher_co) = if with_golden {
+            let svc = GoldenService::spawn(
+                cfg.artifacts_dir.clone(),
+                GoldenModels {
+                    multiclass_include: mc_model.include_f32(),
+                    cotm_include: cotm_model.include_f32(),
+                    cotm_weights: cotm_model.weights_f32(),
+                },
+            )?;
+            let timeout = Duration::from_micros(cfg.batch_timeout_us);
+            let mk = |family: &'static str,
+                      client: crate::runtime::golden::GoldenClient,
+                      stats: Arc<ServerStats>| {
+                DynamicBatcher::new(cfg.max_batch, timeout, stats, move |items: Vec<&GoldenItem>| {
+                    let rows: Vec<Vec<f32>> =
+                        items.iter().map(|i| i.features.clone()).collect();
+                    match client.infer_batch(family, rows) {
+                        Ok(out) => out.into_iter().map(Ok).collect(),
+                        Err(e) => items
+                            .iter()
+                            .map(|_| Err(Error::coordinator(format!("golden: {e}"))))
+                            .collect(),
+                    }
+                })
+            };
+            let b_mc = mk("multiclass_tm", svc.client(), Arc::clone(&stats))?;
+            let b_co = mk("cotm", svc.client(), Arc::clone(&stats))?;
+            (Some(svc), Some(b_mc), Some(b_co))
+        } else {
+            (None, None, None)
+        };
+
+        Ok(CoordinatorServer {
+            pool: Some(pool),
+            _golden: golden,
+            batcher_mc,
+            batcher_co,
+            stats,
+            in_flight: Arc::new(AtomicU64::new(0)),
+            queue_depth: cfg.queue_depth as u64,
+            features,
+        })
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    /// Fails fast with a backpressure error when the in-flight budget is
+    /// exhausted.
+    pub fn submit(&self, req: InferRequest) -> Result<mpsc::Receiver<Result<InferResponse>>> {
+        if req.features.len() != self.features {
+            return Err(Error::coordinator(format!(
+                "feature width {} != {}",
+                req.features.len(),
+                self.features
+            )));
+        }
+        // Backpressure gate.
+        let inflight = self.in_flight.fetch_add(1, Ordering::SeqCst);
+        if inflight >= self.queue_depth {
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::coordinator("backpressure: queue depth exceeded"));
+        }
+        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+
+        if req.backend.is_golden() {
+            let batcher = match req.backend {
+                Backend::GoldenMulticlass => self.batcher_mc.as_ref(),
+                _ => self.batcher_co.as_ref(),
+            }
+            .ok_or_else(|| {
+                self.in_flight.fetch_sub(1, Ordering::SeqCst);
+                Error::coordinator("golden path disabled (no artifacts)")
+            })?;
+            let item = GoldenItem {
+                features: req.features.iter().map(|&b| b as u8 as f32).collect(),
+            };
+            let backend = req.backend;
+            let inner_rx = batcher.submit(item)?;
+            // Adapter thread-free reply: wrap in a relay channel so the
+            // caller sees an InferResponse.
+            let (tx, rx) = mpsc::channel();
+            let stats = Arc::clone(&self.stats);
+            let in_flight = Arc::clone(&self.in_flight);
+            // The relay must not block submit(): spawn a lightweight
+            // forwarder (these are short-lived and cheap).
+            std::thread::spawn(move || {
+                let result = inner_rx
+                    .recv()
+                    .map_err(|_| Error::coordinator("golden reply dropped"))
+                    .and_then(|r| r)
+                    .map(|(sums, pred)| {
+                        let service_us = t0.elapsed().as_secs_f64() * 1e6;
+                        stats.record_latency_us(service_us);
+                        stats.completed.fetch_add(1, Ordering::Relaxed);
+                        InferResponse {
+                            backend,
+                            predicted: pred,
+                            class_sums: sums.iter().map(|&x| x as i32).collect(),
+                            hw_latency: None,
+                            hw_energy_fj: None,
+                            service_us,
+                        }
+                    })
+                    .map_err(|e| {
+                        stats.failed.fetch_add(1, Ordering::Relaxed);
+                        e
+                    });
+                in_flight.fetch_sub(1, Ordering::SeqCst);
+                let _ = tx.send(result);
+            });
+            Ok(rx)
+        } else {
+            let (tx, rx) = mpsc::channel();
+            let stats = Arc::clone(&self.stats);
+            let in_flight = Arc::clone(&self.in_flight);
+            let backend = req.backend;
+            let features = req.features;
+            self.pool
+                .as_ref()
+                .ok_or_else(|| Error::coordinator("pool shut down"))?
+                .submit(Box::new(move |state: &mut WorkerState| {
+                    let result = state
+                        .arch(backend)
+                        .infer(&features)
+                        .map(|r| {
+                            let service_us = t0.elapsed().as_secs_f64() * 1e6;
+                            stats.record_latency_us(service_us);
+                            stats.completed.fetch_add(1, Ordering::Relaxed);
+                            InferResponse {
+                                backend,
+                                predicted: r.predicted,
+                                class_sums: r.class_sums,
+                                hw_latency: Some(r.latency),
+                                hw_energy_fj: Some(r.energy_fj),
+                                service_us,
+                            }
+                        })
+                        .map_err(|e| {
+                            stats.failed.fetch_add(1, Ordering::Relaxed);
+                            e
+                        });
+                    in_flight.fetch_sub(1, Ordering::SeqCst);
+                    let _ = tx.send(result);
+                }))?;
+            Ok(rx)
+        }
+    }
+
+    /// Submit and block for the response.
+    pub fn infer(&self, req: InferRequest) -> Result<InferResponse> {
+        let rx = self.submit(req)?;
+        rx.recv()
+            .map_err(|_| Error::coordinator("response channel closed"))?
+    }
+
+    pub fn stats(&self) -> StatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Graceful shutdown: drain workers and batchers.
+    pub fn shutdown(mut self) {
+        if let Some(p) = self.pool.take() {
+            p.shutdown();
+        }
+        if let Some(b) = self.batcher_mc.take() {
+            b.shutdown();
+        }
+        if let Some(b) = self.batcher_co.take() {
+            b.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::{cotm_train::train_cotm, data, train::train_multiclass, TmParams};
+
+    fn server(with_golden: bool, cfg: Option<ServeConfig>) -> (CoordinatorServer, data::Dataset) {
+        let d = data::iris().unwrap();
+        let (tr, _) = d.split(0.8, 42);
+        let m = train_multiclass(TmParams::iris_paper(), &tr, 20, 2).unwrap();
+        let cm = train_cotm(TmParams::iris_paper(), &tr, 20, 3).unwrap();
+        let cfg = cfg.unwrap_or(ServeConfig { workers: 2, ..ServeConfig::default() });
+        (
+            CoordinatorServer::new(&cfg, m, cm, with_golden).unwrap(),
+            d,
+        )
+    }
+
+    #[test]
+    fn serves_all_simulated_backends() {
+        let (srv, d) = server(false, None);
+        for b in [
+            Backend::SyncMulticlass,
+            Backend::AsyncBdMulticlass,
+            Backend::ProposedMulticlass,
+            Backend::SyncCotm,
+            Backend::AsyncBdCotm,
+            Backend::ProposedCotm,
+        ] {
+            let r = srv
+                .infer(InferRequest { features: d.features[0].clone(), backend: b })
+                .unwrap();
+            assert_eq!(r.backend, b);
+            assert!(r.hw_latency.is_some());
+            assert!(r.hw_energy_fj.unwrap() > 0.0);
+        }
+        assert_eq!(srv.stats().completed, 6);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn golden_disabled_errors_cleanly() {
+        let (srv, d) = server(false, None);
+        let err = srv
+            .infer(InferRequest {
+                features: d.features[0].clone(),
+                backend: Backend::GoldenCotm,
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("golden path disabled"), "{err}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn rejects_wrong_feature_width() {
+        let (srv, _) = server(false, None);
+        assert!(srv
+            .submit(InferRequest { features: vec![true; 3], backend: Backend::SyncCotm })
+            .is_err());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_beyond_queue_depth() {
+        let cfg = ServeConfig {
+            workers: 1,
+            queue_depth: 16,
+            max_batch: 16,
+            ..ServeConfig::default()
+        };
+        let (srv, d) = server(false, Some(cfg));
+        let mut receivers = Vec::new();
+        let mut rejected = 0;
+        for i in 0..200 {
+            match srv.submit(InferRequest {
+                features: d.features[i % d.len()].clone(),
+                backend: Backend::ProposedCotm,
+            }) {
+                Ok(rx) => receivers.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "expected backpressure rejections");
+        for rx in receivers {
+            let _ = rx.recv_timeout(std::time::Duration::from_secs(30));
+        }
+        assert_eq!(srv.stats().rejected as usize, rejected);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn concurrent_mixed_load_is_consistent() {
+        let (srv, d) = server(false, None);
+        let mut receivers = Vec::new();
+        for i in 0..30 {
+            let backend = if i % 2 == 0 {
+                Backend::AsyncBdMulticlass
+            } else {
+                Backend::ProposedMulticlass
+            };
+            receivers.push((
+                i,
+                srv.submit(InferRequest {
+                    features: d.features[i % d.len()].clone(),
+                    backend,
+                })
+                .unwrap(),
+            ));
+        }
+        for (i, rx) in receivers {
+            let r = rx
+                .recv_timeout(std::time::Duration::from_secs(30))
+                .unwrap()
+                .unwrap();
+            // Both backends implement the same model: sums must agree
+            // with the software reference.
+            let want = crate::tm::infer::multiclass_class_sums(
+                &{
+                    let dset = data::iris().unwrap();
+                    let (tr, _) = dset.split(0.8, 42);
+                    train_multiclass(TmParams::iris_paper(), &tr, 20, 2).unwrap()
+                },
+                &d.features[i % d.len()],
+            );
+            assert_eq!(r.class_sums, want, "request {i}");
+        }
+        srv.shutdown();
+    }
+}

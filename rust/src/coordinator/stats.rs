@@ -1,0 +1,125 @@
+//! Serving statistics: lock-light counters + latency accumulators.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::Summary;
+
+/// Shared server counters (cheap to clone via `Arc`).
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches_flushed: AtomicU64,
+    pub batched_requests: AtomicU64,
+    /// End-to-end latencies in microseconds (bounded ring).
+    latencies_us: Mutex<Vec<f64>>,
+    /// Flushed batch sizes (bounded ring).
+    batch_sizes: Mutex<Vec<f64>>,
+}
+
+const RING: usize = 100_000;
+
+impl ServerStats {
+    pub fn new() -> ServerStats {
+        ServerStats::default()
+    }
+
+    pub fn record_latency_us(&self, us: f64) {
+        let mut v = self.latencies_us.lock().unwrap();
+        if v.len() >= RING {
+            let idx = v.len() % RING;
+            v[idx % RING] = us;
+        } else {
+            v.push(us);
+        }
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches_flushed.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+        let mut v = self.batch_sizes.lock().unwrap();
+        if v.len() < RING {
+            v.push(size as f64);
+        }
+    }
+
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches_flushed: self.batches_flushed.load(Ordering::Relaxed),
+            batched_requests: self.batched_requests.load(Ordering::Relaxed),
+            mean_batch_size: {
+                let b = self.batch_sizes.lock().unwrap();
+                Summary::of(&b).map(|s| s.mean).unwrap_or(0.0)
+            },
+            latency_us: Summary::of(&self.latencies_us.lock().unwrap()),
+        }
+    }
+}
+
+/// A point-in-time view of the counters.
+#[derive(Debug, Clone)]
+pub struct StatsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub failed: u64,
+    pub batches_flushed: u64,
+    pub batched_requests: u64,
+    pub mean_batch_size: f64,
+    pub latency_us: Option<Summary>,
+}
+
+impl StatsSnapshot {
+    pub fn render(&self) -> String {
+        let lat = self
+            .latency_us
+            .as_ref()
+            .map(|l| {
+                format!(
+                    "latency_us p50={:.1} p95={:.1} p99={:.1} max={:.1}",
+                    l.p50, l.p95, l.p99, l.max
+                )
+            })
+            .unwrap_or_else(|| "latency: n/a".into());
+        format!(
+            "submitted={} completed={} rejected={} failed={} batches={} mean_batch={:.2} {}",
+            self.submitted,
+            self.completed,
+            self.rejected,
+            self.failed,
+            self.batches_flushed,
+            self.mean_batch_size,
+            lat
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let s = ServerStats::new();
+        s.submitted.fetch_add(3, Ordering::Relaxed);
+        s.completed.fetch_add(2, Ordering::Relaxed);
+        s.record_batch(16);
+        s.record_batch(8);
+        s.record_latency_us(100.0);
+        s.record_latency_us(200.0);
+        let snap = s.snapshot();
+        assert_eq!(snap.submitted, 3);
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.batches_flushed, 2);
+        assert_eq!(snap.mean_batch_size, 12.0);
+        assert_eq!(snap.latency_us.as_ref().unwrap().count, 2);
+        assert!(snap.render().contains("batches=2"));
+    }
+}

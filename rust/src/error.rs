@@ -1,0 +1,72 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for every subsystem of the crate.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Configuration file / value errors (parser in [`crate::config`]).
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Simulator invariant violations (e.g. event scheduled in the past).
+    #[error("simulation error: {0}")]
+    Sim(String),
+
+    /// Netlist construction errors (dangling pins, double drivers, ...).
+    #[error("netlist error: {0}")]
+    Netlist(String),
+
+    /// TM model shape / parameter errors.
+    #[error("model error: {0}")]
+    Model(String),
+
+    /// AOT artifact loading / manifest errors.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT runtime failures (compile / execute / literal marshalling).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator / serving failures (queue closed, worker died, ...).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    #[error("i/o error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+impl Error {
+    /// Shorthand constructors used throughout the crate.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    pub fn sim(msg: impl Into<String>) -> Self {
+        Error::Sim(msg.into())
+    }
+    pub fn netlist(msg: impl Into<String>) -> Self {
+        Error::Netlist(msg.into())
+    }
+    pub fn model(msg: impl Into<String>) -> Self {
+        Error::Model(msg.into())
+    }
+    pub fn artifact(msg: impl Into<String>) -> Self {
+        Error::Artifact(msg.into())
+    }
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Error::Runtime(msg.into())
+    }
+    pub fn coordinator(msg: impl Into<String>) -> Self {
+        Error::Coordinator(msg.into())
+    }
+}

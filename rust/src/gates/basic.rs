@@ -1,0 +1,212 @@
+//! Combinational primitives: INV/BUF/AND/OR/NAND/NOR/XOR/XNOR/MUX2.
+
+use crate::sim::energy::{EnergyKind, GateKind};
+use crate::sim::{Component, Ctx, Logic, NetId, Time};
+
+/// Boolean function selector for [`Gate`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateOp {
+    Inv,
+    Buf,
+    And,
+    Or,
+    Nand,
+    Nor,
+    Xor,
+    Xnor,
+    /// `output = sel ? b : a`; pins are `[a, b, sel]`.
+    Mux2,
+}
+
+impl GateOp {
+    pub fn gate_kind(self) -> GateKind {
+        match self {
+            GateOp::Inv => GateKind::Inv,
+            GateOp::Buf => GateKind::Buf,
+            GateOp::And => GateKind::And,
+            GateOp::Or => GateKind::Or,
+            GateOp::Nand => GateKind::Nand,
+            GateOp::Nor => GateKind::Nor,
+            GateOp::Xor => GateKind::Xor,
+            GateOp::Xnor => GateKind::Xnor,
+            GateOp::Mux2 => GateKind::Mux2,
+        }
+    }
+
+    /// Evaluate over three-valued inputs.
+    pub fn eval(self, ins: &[Logic]) -> Logic {
+        match self {
+            GateOp::Inv => ins[0].not(),
+            GateOp::Buf => ins[0],
+            GateOp::And => ins.iter().copied().fold(Logic::One, Logic::and),
+            GateOp::Nand => ins.iter().copied().fold(Logic::One, Logic::and).not(),
+            GateOp::Or => ins.iter().copied().fold(Logic::Zero, Logic::or),
+            GateOp::Nor => ins.iter().copied().fold(Logic::Zero, Logic::or).not(),
+            GateOp::Xor => ins.iter().copied().fold(Logic::Zero, Logic::xor),
+            GateOp::Xnor => ins.iter().copied().fold(Logic::Zero, Logic::xor).not(),
+            GateOp::Mux2 => match ins[2] {
+                Logic::Zero => ins[0],
+                Logic::One => ins[1],
+                Logic::X => {
+                    // If both data inputs agree the output is defined.
+                    if ins[0] == ins[1] {
+                        ins[0]
+                    } else {
+                        Logic::X
+                    }
+                }
+            },
+        }
+    }
+}
+
+/// A combinational gate instance.
+pub struct Gate {
+    name: String,
+    op: GateOp,
+    inputs: Vec<NetId>,
+    output: NetId,
+    delay: Time,
+    energy_fj: f64,
+    energy_kind: EnergyKind,
+}
+
+impl Gate {
+    /// Create with delay/energy from the tech parameters.
+    pub fn new(
+        name: impl Into<String>,
+        op: GateOp,
+        inputs: Vec<NetId>,
+        output: NetId,
+        tech: &crate::sim::TechParams,
+    ) -> Gate {
+        if op == GateOp::Mux2 {
+            assert_eq!(inputs.len(), 3, "mux2 needs [a, b, sel]");
+        }
+        if matches!(op, GateOp::Inv | GateOp::Buf) {
+            assert_eq!(inputs.len(), 1);
+        }
+        Gate {
+            name: name.into(),
+            op,
+            inputs,
+            output,
+            delay: tech.gate_delay(op.gate_kind()),
+            energy_fj: tech.gate_energy_fj(op.gate_kind()),
+            energy_kind: EnergyKind::Logic,
+        }
+    }
+
+    /// Attribute this gate's switching to a non-default energy category
+    /// (e.g. handshake logic inside a click element).
+    pub fn with_energy_kind(mut self, kind: EnergyKind) -> Gate {
+        self.energy_kind = kind;
+        self
+    }
+}
+
+impl Component for Gate {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn on_input(&mut self, _pin: usize, ctx: &mut Ctx) {
+        let ins: Vec<Logic> = self.inputs.iter().map(|n| ctx.get(*n)).collect();
+        let v = self.op.eval(&ins);
+        if ctx.get(self.output) != v {
+            ctx.spend(self.energy_kind, self.energy_fj);
+            ctx.schedule(self.output, v, self.delay);
+        }
+    }
+
+    fn gate_equivalents(&self) -> f64 {
+        match self.op {
+            GateOp::Inv | GateOp::Buf => 0.5,
+            GateOp::Xor | GateOp::Xnor => 2.2,
+            GateOp::Mux2 => 1.4,
+            _ => 1.0 + 0.5 * (self.inputs.len().saturating_sub(2)) as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::energy::TechParams;
+    use crate::sim::Circuit;
+
+    fn two_input_truth(op: GateOp, table: [(bool, bool, bool); 4]) {
+        for (a, b, want) in table {
+            let mut c = Circuit::new(TechParams::tsmc65_digital());
+            let na = c.net_init("a", Logic::from_bool(a));
+            let nb = c.net_init("b", Logic::from_bool(b));
+            let no = c.net("o");
+            c.add(
+                Box::new(Gate::new("g", op, vec![na, nb], no, &c.tech.clone())),
+                vec![na, nb],
+            );
+            // Re-drive `a` to its value's complement then back, to trigger
+            // evaluation deterministically from a defined state.
+            c.drive(na, Logic::from_bool(!a), Time::ps(1));
+            c.drive(na, Logic::from_bool(a), Time::ps(50));
+            c.run_to_quiescence().unwrap();
+            assert_eq!(
+                c.value(no),
+                Logic::from_bool(want),
+                "{op:?}({a},{b}) != {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn and_truth() {
+        two_input_truth(
+            GateOp::And,
+            [(false, false, false), (false, true, false), (true, false, false), (true, true, true)],
+        );
+    }
+
+    #[test]
+    fn nand_truth() {
+        two_input_truth(
+            GateOp::Nand,
+            [(false, false, true), (false, true, true), (true, false, true), (true, true, false)],
+        );
+    }
+
+    #[test]
+    fn xor_truth() {
+        two_input_truth(
+            GateOp::Xor,
+            [(false, false, false), (false, true, true), (true, false, true), (true, true, false)],
+        );
+    }
+
+    #[test]
+    fn mux_selects() {
+        let tech = TechParams::tsmc65_digital();
+        let mut c = Circuit::new(tech);
+        let a = c.net_init("a", Logic::Zero);
+        let b = c.net_init("b", Logic::One);
+        let s = c.net_init("s", Logic::Zero);
+        let o = c.net("o");
+        let t = c.tech.clone();
+        c.add(
+            Box::new(Gate::new("m", GateOp::Mux2, vec![a, b, s], o, &t)),
+            vec![a, b, s],
+        );
+        c.drive(s, Logic::One, Time::ps(1));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(o), Logic::One);
+        c.drive(s, Logic::Zero, Time::ps(1));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(o), Logic::Zero);
+    }
+
+    #[test]
+    fn x_propagation_through_and() {
+        // One input X, other 1 -> X out; other 0 -> 0 out (controlling).
+        assert_eq!(GateOp::And.eval(&[Logic::X, Logic::One]), Logic::X);
+        assert_eq!(GateOp::And.eval(&[Logic::X, Logic::Zero]), Logic::Zero);
+    }
+}

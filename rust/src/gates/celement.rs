@@ -1,0 +1,159 @@
+//! Muller C-element (paper Table II) — the state-holding rendezvous
+//! element of asynchronous design: output rises only when *all* inputs
+//! are 1, falls only when all are 0, holds otherwise.
+
+use crate::sim::energy::{EnergyKind, GateKind};
+use crate::sim::{Component, Ctx, Logic, NetId, Time};
+
+/// N-input Muller C-element. Pins: the N inputs in order.
+pub struct CElement {
+    name: String,
+    inputs: Vec<NetId>,
+    output: NetId,
+    delay: Time,
+    energy_fj: f64,
+    energy_kind: EnergyKind,
+    state: Logic,
+}
+
+impl CElement {
+    pub fn new(
+        name: impl Into<String>,
+        inputs: Vec<NetId>,
+        output: NetId,
+        tech: &crate::sim::TechParams,
+    ) -> CElement {
+        assert!(inputs.len() >= 2, "C-element needs >= 2 inputs");
+        CElement {
+            name: name.into(),
+            inputs,
+            output,
+            delay: tech.gate_delay(GateKind::CElement),
+            energy_fj: tech.gate_energy_fj(GateKind::CElement),
+            energy_kind: EnergyKind::Handshake,
+            state: Logic::Zero,
+        }
+    }
+
+    pub fn with_energy_kind(mut self, kind: EnergyKind) -> CElement {
+        self.energy_kind = kind;
+        self
+    }
+
+    /// Set the power-on state (defaults to 0).
+    pub fn with_initial(mut self, v: Logic) -> CElement {
+        self.state = v;
+        self
+    }
+}
+
+impl Component for CElement {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn init(&mut self, ctx: &mut Ctx) {
+        ctx.schedule(self.output, self.state, Time::ZERO);
+    }
+
+    fn on_input(&mut self, _pin: usize, ctx: &mut Ctx) {
+        let all_one = self.inputs.iter().all(|n| ctx.get(*n) == Logic::One);
+        let all_zero = self.inputs.iter().all(|n| ctx.get(*n) == Logic::Zero);
+        let next = if all_one {
+            Logic::One
+        } else if all_zero {
+            Logic::Zero
+        } else {
+            self.state // hold (Table II: c_prev)
+        };
+        if next != self.state {
+            self.state = next;
+            ctx.spend(self.energy_kind, self.energy_fj);
+            ctx.schedule(self.output, next, self.delay);
+        }
+    }
+
+    fn gate_equivalents(&self) -> f64 {
+        3.0 + 0.5 * (self.inputs.len().saturating_sub(2)) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::energy::TechParams;
+    use crate::sim::Circuit;
+
+    fn fixture() -> (Circuit, NetId, NetId, NetId) {
+        let mut c = Circuit::new(TechParams::tsmc65_digital());
+        let a = c.net_init("a", Logic::Zero);
+        let b = c.net_init("b", Logic::Zero);
+        let o = c.net("c");
+        let t = c.tech.clone();
+        c.add(
+            Box::new(CElement::new("ce", vec![a, b], o, &t)),
+            vec![a, b],
+        );
+        c.init_components();
+        c.run_to_quiescence().unwrap();
+        (c, a, b, o)
+    }
+
+    #[test]
+    fn truth_table_ii() {
+        let (mut c, a, b, o) = fixture();
+        assert_eq!(c.value(o), Logic::Zero);
+        // 0,1 -> holds 0
+        c.drive(b, Logic::One, Time::ps(1));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(o), Logic::Zero);
+        // 1,1 -> 1
+        c.drive(a, Logic::One, Time::ps(1));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(o), Logic::One);
+        // 1,0 -> holds 1
+        c.drive(b, Logic::Zero, Time::ps(1));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(o), Logic::One);
+        // 0,0 -> 0
+        c.drive(a, Logic::Zero, Time::ps(1));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(o), Logic::Zero);
+    }
+
+    #[test]
+    fn three_input_rendezvous() {
+        let mut c = Circuit::new(TechParams::tsmc65_digital());
+        let ins: Vec<NetId> = (0..3).map(|i| c.net_init(format!("i{i}"), Logic::Zero)).collect();
+        let o = c.net("c");
+        let t = c.tech.clone();
+        c.add(
+            Box::new(CElement::new("ce3", ins.clone(), o, &t)),
+            ins.clone(),
+        );
+        c.init_components();
+        c.run_to_quiescence().unwrap();
+        for (k, n) in ins.iter().enumerate() {
+            c.drive(*n, Logic::One, Time::ps(1));
+            c.run_to_quiescence().unwrap();
+            let want = if k == 2 { Logic::One } else { Logic::Zero };
+            assert_eq!(c.value(o), want, "after raising input {k}");
+        }
+    }
+
+    #[test]
+    fn energy_charged_only_on_state_change() {
+        let (mut c, a, b, _o) = fixture();
+        let e0 = c.energy.dynamic_fj(EnergyKind::Handshake);
+        // a toggles alone: state holds, no energy.
+        c.drive(a, Logic::One, Time::ps(1));
+        c.drive(a, Logic::Zero, Time::ps(100));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.energy.dynamic_fj(EnergyKind::Handshake), e0);
+        // full rendezvous: one rise = one charge.
+        c.drive(a, Logic::One, Time::ps(1));
+        c.drive(b, Logic::One, Time::ps(2));
+        c.run_to_quiescence().unwrap();
+        assert!(c.energy.dynamic_fj(EnergyKind::Handshake) > e0);
+    }
+}

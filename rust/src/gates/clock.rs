@@ -1,0 +1,131 @@
+//! Clock generator for the synchronous baselines.
+//!
+//! The clock is an ordinary net in the event-driven simulator; the
+//! synchronous architecture's defining cost — the tree toggling every
+//! cycle whether or not data moved — is charged here per edge pair,
+//! scaled by the number of leaf flops served.
+
+use crate::sim::energy::EnergyKind;
+use crate::sim::{Component, Ctx, Logic, NetId, Time};
+
+/// Free-running clock: drives `clk` with a 50% duty cycle.
+pub struct ClockGen {
+    name: String,
+    clk: NetId,
+    half_period: Time,
+    /// Leaf flops served by the tree; tree energy = leaves × e_clktree per cycle.
+    leaves: usize,
+    e_tree_per_cycle_fj: f64,
+    running: bool,
+    /// Stop after this absolute time (simulation horizon).
+    pub stop_at: Time,
+}
+
+impl ClockGen {
+    pub fn new(
+        name: impl Into<String>,
+        clk: NetId,
+        period: Time,
+        leaves: usize,
+        tech: &crate::sim::TechParams,
+    ) -> ClockGen {
+        assert!(period.as_fs() >= 2, "period too small");
+        ClockGen {
+            name: name.into(),
+            clk,
+            half_period: Time::fs(period.as_fs() / 2),
+            leaves,
+            e_tree_per_cycle_fj: tech.e_clktree_fj * tech.vscale(),
+            running: false,
+            stop_at: Time::ns(1_000_000),
+        }
+    }
+
+    pub fn with_stop_at(mut self, t: Time) -> ClockGen {
+        self.stop_at = t;
+        self
+    }
+}
+
+impl Component for ClockGen {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn init(&mut self, ctx: &mut Ctx) {
+        self.running = true;
+        ctx.schedule(self.clk, Logic::Zero, Time::ZERO);
+        ctx.schedule(self.clk, Logic::One, self.half_period);
+    }
+
+    /// Self-retriggering: the generator is wired with its own output as
+    /// pin 0, so each edge schedules the next.
+    fn on_input(&mut self, _pin: usize, ctx: &mut Ctx) {
+        if !self.running || ctx.now >= self.stop_at {
+            return;
+        }
+        let cur = ctx.get(self.clk);
+        // Tree energy: charge half per edge (rising+falling = one cycle).
+        ctx.spend(
+            EnergyKind::ClockTree,
+            0.5 * self.e_tree_per_cycle_fj * self.leaves as f64,
+        );
+        ctx.schedule(self.clk, cur.not(), self.half_period);
+    }
+
+    fn gate_equivalents(&self) -> f64 {
+        // Clock buffers: ~1 GE per 4 leaves plus the oscillator.
+        4.0 + self.leaves as f64 * 0.25
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::energy::TechParams;
+    use crate::sim::Circuit;
+
+    #[test]
+    fn toggles_at_period() {
+        let t = TechParams::tsmc65_digital();
+        let mut c = Circuit::new(t.clone());
+        let clk = c.net("clk");
+        let g = ClockGen::new("ck", clk, Time::ns(1), 8, &t).with_stop_at(Time::ns(10));
+        c.add(Box::new(g), vec![clk]);
+        c.init_components();
+        c.run_until(Time::ns(10)).unwrap();
+        // 10 ns at 1 ns period = ~20 edges.
+        let n = c.transitions(clk);
+        assert!((18..=22).contains(&n), "transitions={n}");
+    }
+
+    #[test]
+    fn tree_energy_scales_with_leaves() {
+        let t = TechParams::tsmc65_digital();
+        let run = |leaves: usize| {
+            let mut c = Circuit::new(t.clone());
+            let clk = c.net("clk");
+            let g = ClockGen::new("ck", clk, Time::ns(1), leaves, &t)
+                .with_stop_at(Time::ns(5));
+            c.add(Box::new(g), vec![clk]);
+            c.init_components();
+            c.run_until(Time::ns(5)).unwrap();
+            c.energy.dynamic_fj(EnergyKind::ClockTree)
+        };
+        let e8 = run(8);
+        let e16 = run(16);
+        assert!((e16 / e8 - 2.0).abs() < 0.01, "e8={e8} e16={e16}");
+    }
+
+    #[test]
+    fn stops_at_horizon() {
+        let t = TechParams::tsmc65_digital();
+        let mut c = Circuit::new(t.clone());
+        let clk = c.net("clk");
+        let g = ClockGen::new("ck", clk, Time::ns(1), 1, &t).with_stop_at(Time::ns(3));
+        c.add(Box::new(g), vec![clk]);
+        c.init_components();
+        c.run_to_quiescence().unwrap();
+        assert!(c.now() <= Time::ns(4));
+    }
+}

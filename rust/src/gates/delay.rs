@@ -1,0 +1,231 @@
+//! Time-domain delay primitives: fixed delay elements and the
+//! digitally-controlled delay element (DCDE) of §II-C.3.
+//!
+//! These are the paper's "weak-capacitance" nodes: an event traversing a
+//! delay stage costs `e_delay_stage_fj` — an order of magnitude below a
+//! std-cell transition — which is the physical basis of the architecture's
+//! energy advantage.
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use crate::sim::energy::EnergyKind;
+use crate::sim::{Component, Ctx, NetId, Time};
+
+/// Fixed-delay element: output follows input after `delay`; energy is
+/// charged per *stage* traversed (delay / τ stages, ≥ 1).
+pub struct DelayElement {
+    name: String,
+    input: NetId,
+    output: NetId,
+    delay: Time,
+    stages: f64,
+    stage_energy_fj: f64,
+    /// Gaussian PVT jitter σ as fraction of nominal (0 disables).
+    jitter_sigma: f64,
+    jitter_rng: Option<crate::util::SplitMix64>,
+}
+
+impl DelayElement {
+    pub fn new(
+        name: impl Into<String>,
+        input: NetId,
+        output: NetId,
+        delay: Time,
+        tech: &crate::sim::TechParams,
+    ) -> DelayElement {
+        let stages = (delay.as_ps_f64() / tech.tau_ps).max(1.0);
+        DelayElement {
+            name: name.into(),
+            input,
+            output,
+            delay,
+            stages,
+            stage_energy_fj: tech.e_delay_stage_fj * tech.vscale(),
+            jitter_sigma: tech.pvt_sigma,
+            jitter_rng: if tech.pvt_sigma > 0.0 {
+                Some(crate::util::SplitMix64::new(0xD31A))
+            } else {
+                None
+            },
+        }
+    }
+
+    /// Reseed the PVT jitter stream (per-instance decorrelation).
+    pub fn with_jitter_seed(mut self, seed: u64) -> DelayElement {
+        if self.jitter_sigma > 0.0 {
+            self.jitter_rng = Some(crate::util::SplitMix64::new(seed));
+        }
+        self
+    }
+
+    fn effective_delay(&mut self) -> Time {
+        match (&mut self.jitter_rng, self.jitter_sigma) {
+            (Some(rng), s) if s > 0.0 => {
+                let factor = (1.0 + s * rng.next_gaussian()).max(0.05);
+                self.delay.scale(factor)
+            }
+            _ => self.delay,
+        }
+    }
+}
+
+impl Component for DelayElement {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn on_input(&mut self, _pin: usize, ctx: &mut Ctx) {
+        let v = ctx.get(self.input);
+        ctx.spend(EnergyKind::DelayLine, self.stage_energy_fj * self.stages);
+        let d = self.effective_delay();
+        ctx.schedule(self.output, v, d);
+    }
+
+    fn gate_equivalents(&self) -> f64 {
+        0.3 * self.stages
+    }
+}
+
+/// Shared, runtime-writable delay code — the interface between the
+/// Vernier TDC (writer) and the DCDE (reader) in the CoTM path.
+pub type DelayCode = Rc<Cell<u64>>;
+
+/// Digitally-controlled delay element: delay = `base + code × step`,
+/// where `code` is written at runtime by an upstream component (TDC).
+///
+/// Implementations in silicon are multiplexed delay segments or
+/// current-starved inverters ([12], [15]–[17]); energetically it is a
+/// delay line of `code` unit stages.
+pub struct Dcde {
+    name: String,
+    input: NetId,
+    output: NetId,
+    code: DelayCode,
+    base: Time,
+    step: Time,
+    stage_energy_fj: f64,
+}
+
+impl Dcde {
+    pub fn new(
+        name: impl Into<String>,
+        input: NetId,
+        output: NetId,
+        code: DelayCode,
+        base: Time,
+        step: Time,
+        tech: &crate::sim::TechParams,
+    ) -> Dcde {
+        Dcde {
+            name: name.into(),
+            input,
+            output,
+            code,
+            base,
+            step,
+            stage_energy_fj: tech.e_delay_stage_fj * tech.vscale(),
+        }
+    }
+}
+
+impl Component for Dcde {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn on_input(&mut self, _pin: usize, ctx: &mut Ctx) {
+        let v = ctx.get(self.input);
+        let code = self.code.get();
+        let delay = self.base + self.step.scale(code as f64);
+        // Energy ∝ traversed stages (code), plus the base stage.
+        ctx.spend(
+            EnergyKind::DelayLine,
+            self.stage_energy_fj * (1.0 + code as f64),
+        );
+        ctx.schedule(self.output, v, delay);
+    }
+
+    fn gate_equivalents(&self) -> f64 {
+        2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::energy::TechParams;
+    use crate::sim::{Circuit, Logic};
+
+    #[test]
+    fn delays_by_nominal() {
+        let mut c = Circuit::new(TechParams::tsmc65_digital());
+        let i = c.net_init("i", Logic::Zero);
+        let o = c.net("o");
+        let t = c.tech.clone();
+        c.add(
+            Box::new(DelayElement::new("d", i, o, Time::ps(250), &t)),
+            vec![i],
+        );
+        c.drive(i, Logic::One, Time::ps(10));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(o), Logic::One);
+        assert_eq!(c.now(), Time::ps(260));
+    }
+
+    #[test]
+    fn energy_scales_with_stage_count() {
+        let t = TechParams::tsmc65_digital();
+        let mut c = Circuit::new(t.clone());
+        let i = c.net_init("i", Logic::Zero);
+        let o1 = c.net("o1");
+        let o2 = c.net("o2");
+        c.add(Box::new(DelayElement::new("d1", i, o1, Time::ps(100), &t)), vec![i]);
+        c.add(Box::new(DelayElement::new("d4", i, o2, Time::ps(400), &t)), vec![i]);
+        c.drive(i, Logic::One, Time::ps(1));
+        c.run_to_quiescence().unwrap();
+        let e = c.energy.dynamic_fj(EnergyKind::DelayLine);
+        // 1 stage + 4 stages = 5 × 0.08 fJ
+        assert!((e - 5.0 * 0.08).abs() < 1e-9, "e={e}");
+    }
+
+    #[test]
+    fn dcde_tracks_runtime_code() {
+        let t = TechParams::tsmc65_digital();
+        let mut c = Circuit::new(t.clone());
+        let i = c.net_init("i", Logic::Zero);
+        let o = c.net("o");
+        let code: DelayCode = Rc::new(Cell::new(0));
+        c.add(
+            Box::new(Dcde::new("dc", i, o, code.clone(), Time::ps(50), Time::ps(10), &t)),
+            vec![i],
+        );
+        code.set(7);
+        c.drive(i, Logic::One, Time::ps(0));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.now(), Time::ps(120)); // 50 + 7×10
+
+        code.set(2);
+        c.drive(i, Logic::Zero, Time::ps(0));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.now(), Time::ps(190)); // 120 + 50 + 2×10
+    }
+
+    #[test]
+    fn jitter_perturbs_but_stays_positive() {
+        let mut t = TechParams::tsmc65_digital();
+        t.pvt_sigma = 0.1;
+        let mut c = Circuit::new(t.clone());
+        let i = c.net_init("i", Logic::Zero);
+        let o = c.net("o");
+        c.add(
+            Box::new(DelayElement::new("d", i, o, Time::ps(100), &t).with_jitter_seed(99)),
+            vec![i],
+        );
+        c.drive(i, Logic::One, Time::ps(0));
+        c.run_to_quiescence().unwrap();
+        let arr = c.now();
+        assert!(arr > Time::ps(50) && arr < Time::ps(150), "arr={arr}");
+        assert_ne!(arr, Time::ps(100)); // jitter actually applied
+    }
+}

@@ -1,0 +1,239 @@
+//! Sequential primitives: D flip-flop and T flip-flop.
+
+use crate::sim::energy::{EnergyKind, GateKind};
+use crate::sim::{Component, Ctx, Logic, NetId, Time};
+
+/// Rising-edge D flip-flop with async active-high reset.
+/// Pins: `[d, clk, rst]`.
+pub struct Dff {
+    name: String,
+    d: NetId,
+    clk: NetId,
+    rst: NetId,
+    q: NetId,
+    delay: Time,
+    energy_fj: f64,
+    energy_kind: EnergyKind,
+    last_clk: Logic,
+}
+
+impl Dff {
+    pub fn new(
+        name: impl Into<String>,
+        d: NetId,
+        clk: NetId,
+        rst: NetId,
+        q: NetId,
+        tech: &crate::sim::TechParams,
+    ) -> Dff {
+        Dff {
+            name: name.into(),
+            d,
+            clk,
+            rst,
+            q,
+            delay: tech.gate_delay(GateKind::Dff),
+            energy_fj: tech.gate_energy_fj(GateKind::Dff),
+            energy_kind: EnergyKind::Sequential,
+            last_clk: Logic::X,
+        }
+    }
+
+    pub fn with_energy_kind(mut self, kind: EnergyKind) -> Dff {
+        self.energy_kind = kind;
+        self
+    }
+}
+
+impl Component for Dff {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn init(&mut self, ctx: &mut Ctx) {
+        // Latch the power-on clock level so the first real edge is seen.
+        self.last_clk = ctx.get(self.clk);
+    }
+
+    fn on_input(&mut self, pin: usize, ctx: &mut Ctx) {
+        // pin 2 = rst
+        if pin == 2 || ctx.get(self.rst) == Logic::One {
+            if ctx.get(self.rst) == Logic::One && ctx.get(self.q) != Logic::Zero {
+                ctx.spend(self.energy_kind, self.energy_fj * 0.5);
+                ctx.schedule(self.q, Logic::Zero, self.delay);
+            }
+            self.last_clk = ctx.get(self.clk);
+            return;
+        }
+        if pin == 1 {
+            let clk = ctx.get(self.clk);
+            let rising = self.last_clk == Logic::Zero && clk == Logic::One;
+            self.last_clk = clk;
+            if rising {
+                let d = ctx.get(self.d);
+                // Clock pin toggles cost energy even without a Q change
+                // (internal master latch) — half the captured-edge cost.
+                ctx.spend(self.energy_kind, self.energy_fj * 0.5);
+                if d != ctx.get(self.q) && d.is_defined() {
+                    ctx.spend(self.energy_kind, self.energy_fj * 0.5);
+                    ctx.schedule(self.q, d, self.delay);
+                }
+            }
+        }
+        // pin 0 (d) changes don't propagate until a clock edge.
+    }
+
+    fn gate_equivalents(&self) -> f64 {
+        6.0
+    }
+}
+
+/// Toggle flip-flop with async reset: output inverts on every rising edge
+/// of `t`. Pins: `[t, rst]`. Used as the paper's four-to-two phase
+/// interface element (§II-C.5).
+pub struct Tff {
+    name: String,
+    t: NetId,
+    rst: NetId,
+    q: NetId,
+    delay: Time,
+    energy_fj: f64,
+    energy_kind: EnergyKind,
+    last_t: Logic,
+    state: Logic,
+}
+
+impl Tff {
+    pub fn new(
+        name: impl Into<String>,
+        t: NetId,
+        rst: NetId,
+        q: NetId,
+        tech: &crate::sim::TechParams,
+    ) -> Tff {
+        Tff {
+            name: name.into(),
+            t,
+            rst,
+            q,
+            delay: tech.gate_delay(GateKind::Tff),
+            energy_fj: tech.gate_energy_fj(GateKind::Tff),
+            energy_kind: EnergyKind::Sequential,
+            last_t: Logic::X,
+            state: Logic::Zero,
+        }
+    }
+
+    pub fn with_energy_kind(mut self, kind: EnergyKind) -> Tff {
+        self.energy_kind = kind;
+        self
+    }
+}
+
+impl Component for Tff {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn init(&mut self, ctx: &mut Ctx) {
+        self.last_t = ctx.get(self.t);
+        ctx.schedule(self.q, Logic::Zero, Time::ZERO);
+    }
+
+    fn on_input(&mut self, pin: usize, ctx: &mut Ctx) {
+        if pin == 1 || ctx.get(self.rst) == Logic::One {
+            if self.state != Logic::Zero {
+                self.state = Logic::Zero;
+                ctx.spend(self.energy_kind, self.energy_fj * 0.5);
+                ctx.schedule(self.q, Logic::Zero, self.delay);
+            }
+            self.last_t = ctx.get(self.t);
+            return;
+        }
+        let t = ctx.get(self.t);
+        let rising = self.last_t == Logic::Zero && t == Logic::One;
+        self.last_t = t;
+        if rising {
+            self.state = self.state.not();
+            if self.state == Logic::X {
+                self.state = Logic::One; // from reset state it's defined
+            }
+            ctx.spend(self.energy_kind, self.energy_fj);
+            ctx.schedule(self.q, self.state, self.delay);
+        }
+    }
+
+    fn gate_equivalents(&self) -> f64 {
+        6.5
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::energy::TechParams;
+    use crate::sim::Circuit;
+
+    fn dff_fixture() -> (Circuit, NetId, NetId, NetId, NetId) {
+        let mut c = Circuit::new(TechParams::tsmc65_digital());
+        let d = c.net_init("d", Logic::Zero);
+        let clk = c.net_init("clk", Logic::Zero);
+        let rst = c.net_init("rst", Logic::Zero);
+        let q = c.net("q");
+        let t = c.tech.clone();
+        c.add(
+            Box::new(Dff::new("ff", d, clk, rst, q, &t)),
+            vec![d, clk, rst],
+        );
+        c.init_components();
+        c.run_to_quiescence().unwrap();
+        (c, d, clk, rst, q)
+    }
+
+    #[test]
+    fn captures_on_rising_edge_only() {
+        let (mut c, d, clk, _rst, q) = dff_fixture();
+        c.drive(d, Logic::One, Time::ps(1));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(q), Logic::X); // no edge yet
+        c.drive(clk, Logic::One, Time::ps(1)); // rising edge
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(q), Logic::One);
+        c.drive(d, Logic::Zero, Time::ps(1));
+        c.drive(clk, Logic::Zero, Time::ps(2)); // falling edge: no capture
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(q), Logic::One);
+    }
+
+    #[test]
+    fn reset_clears_q() {
+        let (mut c, d, clk, rst, q) = dff_fixture();
+        c.drive(d, Logic::One, Time::ps(1));
+        c.drive(clk, Logic::One, Time::ps(5));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(q), Logic::One);
+        c.drive(rst, Logic::One, Time::ps(1));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(q), Logic::Zero);
+    }
+
+    #[test]
+    fn tff_toggles_per_rising_edge() {
+        let mut c = Circuit::new(TechParams::tsmc65_digital());
+        let t = c.net_init("t", Logic::Zero);
+        let rst = c.net_init("rst", Logic::Zero);
+        let q = c.net("q");
+        let tech = c.tech.clone();
+        c.add(Box::new(Tff::new("tff", t, rst, q, &tech)), vec![t, rst]);
+        c.init_components();
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(q), Logic::Zero);
+        for i in 0..4u64 {
+            c.drive(t, Logic::One, Time::ps(1));
+            c.drive(t, Logic::Zero, Time::ps(50));
+            c.run_to_quiescence().unwrap();
+            let expect = if i % 2 == 0 { Logic::One } else { Logic::Zero };
+            assert_eq!(c.value(q), expect, "toggle {i}");
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! Gate-level component library.
+//!
+//! Primitives carry their own nominal delay and per-transition switching
+//! energy from [`crate::sim::TechParams`]; composite cells (Mutex,
+//! C-element, click) are the paper's asynchronous building blocks.
+//!
+//! Energy attribution note: a gate spends its switching energy when it
+//! *schedules* an output transition that differs from the output net's
+//! present value. If a later input change re-schedules the opposite value
+//! before the first arrives, both count — which is faithful: glitches
+//! charge real CMOS nodes too, and glitch power is precisely one of the
+//! costs the paper's time-domain approach avoids.
+
+pub mod basic;
+pub mod celement;
+pub mod clock;
+pub mod delay;
+pub mod dff;
+pub mod mutex;
+
+pub use basic::{Gate, GateOp};
+pub use celement::CElement;
+pub use clock::ClockGen;
+pub use delay::{Dcde, DelayElement};
+pub use dff::{Dff, Tff};
+pub use mutex::Mutex;

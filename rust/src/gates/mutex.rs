@@ -1,0 +1,465 @@
+//! Mutual-exclusion element (paper Fig. 5): a cross-coupled-NAND SR latch
+//! with a metastability filter. Grants exactly one of two competing
+//! requests; on near-simultaneous arrivals the latch dwells in
+//! metastability for `t_res = τ_m · ln(Δ₀ / Δt)` before resolving —
+//! the standard analytic model (DESIGN.md §Substitutions).
+//!
+//! Two models are provided:
+//! * [`Mutex`] — behavioural primitive used inside WTA arbiters. The
+//!   decision is *deferred*: the first arrival schedules a grant after
+//!   the latch's nominal set time; a competitor arriving inside that
+//!   vulnerability window re-opens the decision and adds the
+//!   metastability dwell, so close races genuinely slow the grant — the
+//!   behaviour Table I's latency column and [19] describe.
+//! * [`build_gate_level`] — the literal Fig. 5 netlist (cross-coupled
+//!   NANDs + filter) for functional cross-validation on well-separated
+//!   inputs (an exact-tie would oscillate at gate level, which is exactly
+//!   why real Mutexes need the analogue filter the behavioural model
+//!   captures).
+
+use crate::sim::energy::{EnergyKind, GateKind};
+use crate::sim::{Circuit, Component, Ctx, Logic, NetId, Time};
+
+use super::basic::{Gate, GateOp};
+
+/// Behavioural Mutex. Pins: `[r1, r2, tick]` where `tick` is a private
+/// self-scheduling net (created by [`Mutex::build`]); outputs `[g1, g2]`.
+///
+/// Four-phase protocol: a grant is issued while its request is high and
+/// the other grant is low; dropping the request releases the grant.
+pub struct Mutex {
+    name: String,
+    r1: NetId,
+    r2: NetId,
+    g1: NetId,
+    g2: NetId,
+    tick: NetId,
+    base_delay: Time,
+    energy_fj: f64,
+    /// Metastability time constant τ_m.
+    tau_m: Time,
+    /// Δ₀: arrival-gap scale below which the penalty applies. Also the
+    /// decision window during which a competitor re-opens the race.
+    window: Time,
+    arrival1: Option<Time>,
+    arrival2: Option<Time>,
+    /// Side tentatively or definitely owning the grant (0 = none).
+    owner: u8,
+    /// Whether the owner's grant output has been driven high.
+    granted: bool,
+    /// Extra metastability dwell to insert before granting.
+    extra: Time,
+    /// Count of metastable resolutions (observability for tests/benches).
+    pub metastable_events: u64,
+}
+
+/// Shared handle for observing mutex internals after boxing.
+pub type MutexStats = std::rc::Rc<std::cell::Cell<u64>>;
+
+impl Mutex {
+    /// Instantiate a Mutex in `c`: creates the grant outputs and the
+    /// private tick net, wires the pins, returns `(g1, g2)`.
+    pub fn build(c: &mut Circuit, name: &str, r1: NetId, r2: NetId) -> (NetId, NetId) {
+        let g1 = c.net(format!("{name}.g1"));
+        let g2 = c.net(format!("{name}.g2"));
+        let tick = c.net_init(format!("{name}.tick"), Logic::Zero);
+        let tech = c.tech.clone();
+        let m = Mutex::new(name, r1, r2, g1, g2, tick, &tech);
+        c.add(Box::new(m), vec![r1, r2, tick]);
+        (g1, g2)
+    }
+
+    pub fn new(
+        name: impl Into<String>,
+        r1: NetId,
+        r2: NetId,
+        g1: NetId,
+        g2: NetId,
+        tick: NetId,
+        tech: &crate::sim::TechParams,
+    ) -> Mutex {
+        Mutex {
+            name: name.into(),
+            r1,
+            r2,
+            g1,
+            g2,
+            tick,
+            // Nominal grant latency: SR latch (NAND) + filter stage.
+            base_delay: tech.gate_delay(GateKind::Nand) + tech.gate_delay(GateKind::Inv),
+            energy_fj: 2.0 * tech.gate_energy_fj(GateKind::Nand)
+                + 2.0 * tech.gate_energy_fj(GateKind::Inv),
+            tau_m: Time::from_ps_f64(tech.mutex_tau_ps * tech.dscale()),
+            window: Time::from_ps_f64(4.0 * tech.mutex_tau_ps),
+            arrival1: None,
+            arrival2: None,
+            owner: 0,
+            granted: false,
+            extra: Time::ZERO,
+            metastable_events: 0,
+        }
+    }
+
+    /// Metastability penalty for an arrival gap `dt`:
+    /// `τ_m · ln(Δ₀/Δt)`, zero outside the window.
+    ///
+    /// An *exact* tie at femtosecond resolution is a quantisation
+    /// artefact of the nominal-corner simulator (integer-coded delay
+    /// chains produce identical nominal delays); in silicon the two
+    /// paths always differ by ~ps of device mismatch. Exact ties are
+    /// therefore charged the dwell expected for a ~1 ps arrival spread,
+    /// `τ_m · ln(Δ₀ / 1ps)`, rather than an unbounded value.
+    fn meta_penalty(&self, dt: Time) -> Time {
+        if dt >= self.window {
+            return Time::ZERO;
+        }
+        let dt_eff = dt.max(Time::PS); // silicon mismatch floor
+        let ratio = self.window.as_fs() as f64 / dt_eff.as_fs() as f64;
+        self.tau_m.scale(ratio.ln().max(0.0))
+    }
+
+    /// Schedule a decision tick as a 1 fs *pulse* rather than a toggle:
+    /// multiple pending ticks may land out of order (a handover tick can
+    /// be due before an earlier-scheduled dwell tick), and a toggle
+    /// scheme would then produce a same-value event that the simulator
+    /// rightly suppresses — silently wedging the decision. Pulses always
+    /// produce edges; the decision handler is idempotent, so a collapsed
+    /// double-rise costs nothing.
+    fn schedule_tick(&mut self, ctx: &mut Ctx, delay: Time) {
+        ctx.schedule(self.tick, Logic::One, delay);
+        ctx.schedule(self.tick, Logic::Zero, delay + Time::FS);
+    }
+
+    /// Begin (or restart) a decision for `side`.
+    fn open_decision(&mut self, ctx: &mut Ctx, side: u8) {
+        self.owner = side;
+        self.granted = false;
+        self.extra = Time::ZERO;
+        self.schedule_tick(ctx, self.base_delay);
+    }
+
+    fn grant_net(&self, side: u8) -> NetId {
+        if side == 1 {
+            self.g1
+        } else {
+            self.g2
+        }
+    }
+}
+
+impl Component for Mutex {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn init(&mut self, ctx: &mut Ctx) {
+        ctx.schedule(self.g1, Logic::Zero, Time::ZERO);
+        ctx.schedule(self.g2, Logic::Zero, Time::ZERO);
+    }
+
+    fn on_input(&mut self, pin: usize, ctx: &mut Ctx) {
+        match pin {
+            0 | 1 => {
+                let side = pin as u8 + 1;
+                let (req, other_arrival) = if pin == 0 {
+                    (ctx.get(self.r1), self.arrival2)
+                } else {
+                    (ctx.get(self.r2), self.arrival1)
+                };
+                match req {
+                    Logic::One => {
+                        let now = ctx.now;
+                        if pin == 0 {
+                            self.arrival1 = Some(now);
+                        } else {
+                            self.arrival2 = Some(now);
+                        }
+                        if self.owner == 0 {
+                            // Uncontended (so far): tentative decision.
+                            self.open_decision(ctx, side);
+                        } else if !self.granted {
+                            // Competitor inside the decision window:
+                            // metastability dwell proportional to the gap.
+                            let dt = now.since(other_arrival.unwrap_or(now));
+                            let p = self.meta_penalty(dt);
+                            if p > Time::ZERO {
+                                self.metastable_events += 1;
+                                self.extra = self.extra.max(p);
+                            }
+                        }
+                        // If already granted to the other side, this
+                        // request simply queues (arrival recorded).
+                    }
+                    _ => {
+                        if pin == 0 {
+                            self.arrival1 = None;
+                        } else {
+                            self.arrival2 = None;
+                        }
+                        if self.owner == side {
+                            // Four-phase release.
+                            let was_granted = self.granted;
+                            self.owner = 0;
+                            self.granted = false;
+                            if was_granted {
+                                ctx.spend(EnergyKind::Arbiter, self.energy_fj * 0.5);
+                                ctx.schedule(
+                                    self.grant_net(side),
+                                    Logic::Zero,
+                                    self.base_delay,
+                                );
+                            }
+                            // Hand over to a waiting competitor.
+                            let waiter = if side == 1 { self.arrival2 } else { self.arrival1 };
+                            if waiter.is_some() {
+                                self.open_decision(ctx, 3 - side);
+                            }
+                        }
+                    }
+                }
+            }
+            2 => {
+                // Decision tick: act on the rising edge only.
+                if ctx.get(self.tick) != Logic::One {
+                    return;
+                }
+                if self.owner == 0 || self.granted {
+                    return;
+                }
+                if self.extra > Time::ZERO {
+                    // Consume the metastability dwell, then re-tick.
+                    let dwell = self.extra;
+                    self.extra = Time::ZERO;
+                    self.schedule_tick(ctx, dwell);
+                    return;
+                }
+                // Verify the owner still requests (may have withdrawn).
+                let still = match self.owner {
+                    1 => self.arrival1.is_some(),
+                    _ => self.arrival2.is_some(),
+                };
+                if !still {
+                    let other_waiting = match self.owner {
+                        1 => self.arrival2.is_some(),
+                        _ => self.arrival1.is_some(),
+                    };
+                    let other = 3 - self.owner;
+                    self.owner = 0;
+                    if other_waiting {
+                        self.open_decision(ctx, other);
+                    }
+                    return;
+                }
+                self.granted = true;
+                ctx.spend(EnergyKind::Arbiter, self.energy_fj);
+                ctx.schedule(self.grant_net(self.owner), Logic::One, Time::ZERO);
+            }
+            _ => {}
+        }
+    }
+
+    fn gate_equivalents(&self) -> f64 {
+        4.0
+    }
+}
+
+/// Nets exposed by the gate-level Fig. 5 Mutex.
+pub struct GateLevelMutex {
+    pub r1: NetId,
+    pub r2: NetId,
+    pub g1: NetId,
+    pub g2: NetId,
+}
+
+/// Build the literal Fig. 5 netlist: cross-coupled NANDs + an
+/// inverter/AND metastability-filter stage. The caller must pulse both
+/// requests to 0 once at start-up to settle the latch out of X.
+pub fn build_gate_level(c: &mut Circuit, prefix: &str) -> GateLevelMutex {
+    let tech = c.tech.clone();
+    let r1 = c.net(format!("{prefix}.r1"));
+    let r2 = c.net(format!("{prefix}.r2"));
+    let q1 = c.net(format!("{prefix}.q1"));
+    let q2 = c.net(format!("{prefix}.q2"));
+    let g1 = c.net(format!("{prefix}.g1"));
+    let g2 = c.net(format!("{prefix}.g2"));
+    // SR latch: q1 = NAND(r1, q2); q2 = NAND(r2, q1).
+    c.add(
+        Box::new(
+            Gate::new(format!("{prefix}.nand1"), GateOp::Nand, vec![r1, q2], q1, &tech)
+                .with_energy_kind(EnergyKind::Arbiter),
+        ),
+        vec![r1, q2],
+    );
+    c.add(
+        Box::new(
+            Gate::new(format!("{prefix}.nand2"), GateOp::Nand, vec![r2, q1], q2, &tech)
+                .with_energy_kind(EnergyKind::Arbiter),
+        ),
+        vec![r2, q1],
+    );
+    // Filter: grant_i = NOT q_i AND q_other.
+    let q1n = c.net(format!("{prefix}.q1n"));
+    let q2n = c.net(format!("{prefix}.q2n"));
+    c.add(
+        Box::new(
+            Gate::new(format!("{prefix}.inv1"), GateOp::Inv, vec![q1], q1n, &tech)
+                .with_energy_kind(EnergyKind::Arbiter),
+        ),
+        vec![q1],
+    );
+    c.add(
+        Box::new(
+            Gate::new(format!("{prefix}.inv2"), GateOp::Inv, vec![q2], q2n, &tech)
+                .with_energy_kind(EnergyKind::Arbiter),
+        ),
+        vec![q2],
+    );
+    c.add(
+        Box::new(
+            Gate::new(format!("{prefix}.and1"), GateOp::And, vec![q1n, q2], g1, &tech)
+                .with_energy_kind(EnergyKind::Arbiter),
+        ),
+        vec![q1n, q2],
+    );
+    c.add(
+        Box::new(
+            Gate::new(format!("{prefix}.and2"), GateOp::And, vec![q2n, q1], g2, &tech)
+                .with_energy_kind(EnergyKind::Arbiter),
+        ),
+        vec![q2n, q1],
+    );
+    GateLevelMutex { r1, r2, g1, g2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::energy::TechParams;
+
+    fn behavioural() -> (Circuit, NetId, NetId, NetId, NetId) {
+        let mut c = Circuit::new(TechParams::tsmc65_digital());
+        let r1 = c.net_init("r1", Logic::Zero);
+        let r2 = c.net_init("r2", Logic::Zero);
+        let (g1, g2) = Mutex::build(&mut c, "mx", r1, r2);
+        c.init_components();
+        c.run_to_quiescence().unwrap();
+        (c, r1, r2, g1, g2)
+    }
+
+    #[test]
+    fn first_arrival_wins() {
+        let (mut c, r1, r2, g1, g2) = behavioural();
+        c.drive(r1, Logic::One, Time::ps(10));
+        c.drive(r2, Logic::One, Time::ps(500)); // well separated
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(g1), Logic::One);
+        assert_eq!(c.value(g2), Logic::Zero);
+    }
+
+    #[test]
+    fn release_hands_over_to_waiter() {
+        let (mut c, r1, r2, g1, g2) = behavioural();
+        c.drive(r1, Logic::One, Time::ps(10));
+        c.drive(r2, Logic::One, Time::ps(500));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(g1), Logic::One);
+        assert_eq!(c.value(g2), Logic::Zero);
+        // r1 releases; r2 pending -> g2 granted.
+        c.drive(r1, Logic::Zero, Time::ps(10));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(g1), Logic::Zero);
+        assert_eq!(c.value(g2), Logic::One);
+    }
+
+    #[test]
+    fn close_arrivals_pay_metastability_penalty() {
+        // Gap of 1 ps inside the 48 ps window -> extra resolution delay.
+        let (mut c, r1, r2, g1, _g2) = behavioural();
+        c.drive(r1, Logic::One, Time::ps(100));
+        c.drive(r2, Logic::One, Time::ps(101));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(g1), Logic::One);
+        let grant_time = c.now();
+        // Nominal latency = d_nand + d_inv = 40 ps; dwell must add
+        // τ_m·ln(48/1) ≈ 46 ps on top.
+        assert!(
+            grant_time > Time::ps(100) + Time::ps(40) + Time::ps(20),
+            "grant at {grant_time}, expected metastability dwell"
+        );
+    }
+
+    #[test]
+    fn distant_arrivals_have_no_penalty() {
+        let (mut c, r1, r2, g1, _g2) = behavioural();
+        c.drive(r1, Logic::One, Time::ps(100));
+        c.drive(r2, Logic::One, Time::ps(300)); // outside 48 ps window
+        c.run_while(Time::ps(500), |c| c.value(g1) == Logic::One)
+            .unwrap();
+        // Grant exactly at nominal latency.
+        assert_eq!(c.now(), Time::ps(140));
+    }
+
+    #[test]
+    fn exact_tie_resolves_deterministically() {
+        let (mut c, r1, r2, g1, g2) = behavioural();
+        c.drive(r1, Logic::One, Time::ps(100));
+        c.drive(r2, Logic::One, Time::ps(100));
+        c.run_to_quiescence().unwrap();
+        // Exactly one grant; side 1 (first scheduled) wins the model tie.
+        assert_eq!(c.value(g1), Logic::One);
+        assert_eq!(c.value(g2), Logic::Zero);
+    }
+
+    #[test]
+    fn never_both_granted() {
+        for gap in [0u64, 1, 5, 20, 100, 1000] {
+            let (mut c, r1, r2, g1, g2) = behavioural();
+            c.drive(r1, Logic::One, Time::ps(50));
+            c.drive(r2, Logic::One, Time::ps(50 + gap));
+            c.run_to_quiescence().unwrap();
+            let both = c.value(g1) == Logic::One && c.value(g2) == Logic::One;
+            assert!(!both, "mutual exclusion violated at gap {gap}ps");
+            // And exactly one granted (requests held high):
+            let any = c.value(g1) == Logic::One || c.value(g2) == Logic::One;
+            assert!(any, "no grant at gap {gap}ps");
+        }
+    }
+
+    #[test]
+    fn withdrawn_request_before_grant_passes_to_other() {
+        let (mut c, r1, r2, g1, g2) = behavioural();
+        // r1 arrives, then withdraws 10 ps later (before the 40 ps set
+        // time elapses); r2 arrives during the gap.
+        c.drive(r1, Logic::One, Time::ps(100));
+        c.drive(r2, Logic::One, Time::ps(105));
+        c.drive(r1, Logic::Zero, Time::ps(110));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(g1), Logic::Zero);
+        assert_eq!(c.value(g2), Logic::One);
+    }
+
+    #[test]
+    fn gate_level_matches_behavioural_when_separated() {
+        let mut c = Circuit::new(TechParams::tsmc65_digital());
+        let m = build_gate_level(&mut c, "mx");
+        // Settle the latch out of X.
+        c.drive(m.r1, Logic::Zero, Time::ps(1));
+        c.drive(m.r2, Logic::Zero, Time::ps(1));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(m.g1), Logic::Zero);
+        assert_eq!(c.value(m.g2), Logic::Zero);
+        // Request 1 wins.
+        c.drive(m.r1, Logic::One, Time::ps(300));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(m.g1), Logic::One);
+        assert_eq!(c.value(m.g2), Logic::Zero);
+        // Second request queues; release hands over.
+        c.drive(m.r2, Logic::One, Time::ps(10));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(m.g2), Logic::Zero);
+        c.drive(m.r1, Logic::Zero, Time::ps(10));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(m.g1), Logic::Zero);
+        assert_eq!(c.value(m.g2), Logic::One);
+    }
+}

@@ -1,0 +1,43 @@
+//! # tsetlin-td — Event-Driven Digital-Time-Domain Tsetlin Machine Inference
+//!
+//! A full software reproduction of *"Event-Driven Digital-Time-Domain
+//! Inference Architectures for Tsetlin Machines"* (Lan, Shafik, Yakovlev,
+//! 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: an event-driven
+//!   (picosecond-resolution, discrete-event) hardware simulator with
+//!   per-transition energy accounting, the asynchronous control fabric
+//!   (click elements, C-elements, Mutexes), the time-domain classification
+//!   machinery (LOD coarse/fine delay compression, differential delay
+//!   paths, Vernier TDC, Winner-Takes-All arbiters), six complete
+//!   inference architectures ({multi-class TM, CoTM} × {synchronous,
+//!   asynchronous bundled-data, proposed digital-time-domain}), a TM/CoTM
+//!   training substrate, and a serving coordinator that routes requests to
+//!   either the functional XLA path or any hardware model.
+//! * **L2/L1 (python/, build-time only)** — JAX + Pallas functional golden
+//!   model, AOT-lowered to `artifacts/*.hlo.txt` and executed here through
+//!   the PJRT CPU client ([`runtime`]); Python is never on the request path.
+//!
+//! Start with [`arch::Architecture`] for the hardware models,
+//! [`tm`] for the ML substrate, and [`coordinator`] for serving.
+
+pub mod arch;
+pub mod async_ctrl;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod gates;
+pub mod runtime;
+pub mod sim;
+pub mod testutil;
+pub mod timedomain;
+pub mod tm;
+pub mod util;
+pub mod wta;
+
+/// Evaluation metrics (Eq. 3/4 and Table IV evaluation) — alias of
+/// [`arch::metrics`].
+pub use arch::metrics;
+
+pub use error::{Error, Result};

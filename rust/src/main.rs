@@ -1,0 +1,321 @@
+//! `tmtd` — the leader binary: train, simulate, evaluate, serve.
+
+use tsetlin_td::arch::digital::{
+    async_bd_cotm, async_bd_multiclass, sync_cotm, sync_multiclass,
+};
+use tsetlin_td::arch::metrics::{evaluate, render_table_iv};
+use tsetlin_td::arch::proposed_cotm::ProposedCotm;
+use tsetlin_td::arch::proposed_tm::ProposedMulticlass;
+use tsetlin_td::arch::Architecture;
+use tsetlin_td::cli::{Args, USAGE};
+use tsetlin_td::config::ServeConfig;
+use tsetlin_td::coordinator::{Backend, CoordinatorServer, InferRequest};
+use tsetlin_td::sim::TechParams;
+use tsetlin_td::tm::{self, cotm_train::train_cotm, data, train::train_multiclass, TmParams};
+use tsetlin_td::util::SplitMix64;
+use tsetlin_td::wta::{analysis, WtaKind};
+use tsetlin_td::{Error, Result};
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "train" => cmd_train(args),
+        "infer" => cmd_infer(args),
+        "eval" | "table4" => cmd_eval(args),
+        "table1" => cmd_table1(args),
+        "table3" => cmd_table3(args),
+        "waveform" => cmd_waveform(args),
+        "serve" => cmd_serve(args),
+        "selfcheck" => cmd_selfcheck(args),
+        "help" | "" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(Error::config(format!("unknown command {other:?}\n\n{USAGE}"))),
+    }
+}
+
+fn load_dataset(name: &str, seed: u64) -> Result<data::Dataset> {
+    match name {
+        "iris" => data::iris(),
+        "xor" => Ok(data::xor_noise(400, 8, 0.05, seed)),
+        "blobs" => Ok(data::prototype_blobs(300, 16, 3, 0.05, seed)),
+        other => Err(Error::config(format!("unknown dataset {other:?}"))),
+    }
+}
+
+fn train_pair(
+    dataset: &data::Dataset,
+    epochs: usize,
+    seed: u64,
+) -> Result<(tm::MultiClassTmModel, tm::CoTmModel)> {
+    let params = TmParams {
+        features: dataset.num_features(),
+        classes: dataset.classes,
+        ..TmParams::iris_paper()
+    };
+    let (train, _) = dataset.split(0.8, 42);
+    let m = train_multiclass(params.clone(), &train, epochs, seed)?;
+    let cm = train_cotm(params, &train, epochs.max(100), seed + 1)?;
+    Ok((m, cm))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let dataset = load_dataset(&args.flag_or("dataset", "iris"), 7)?;
+    let epochs = args.flag_parse("epochs", 60usize)?;
+    let seed = args.flag_parse("seed", 2u64)?;
+    let out_dir = args.flag_or("out-dir", "models");
+    std::fs::create_dir_all(&out_dir)?;
+    let (m, cm) = train_pair(&dataset, epochs, seed)?;
+    let (tr, te) = dataset.split(0.8, 42);
+    println!(
+        "multiclass: train acc {:.3}, test acc {:.3}",
+        tm::infer::multiclass_accuracy(&m, &tr.features, &tr.labels),
+        tm::infer::multiclass_accuracy(&m, &te.features, &te.labels)
+    );
+    println!(
+        "cotm:       train acc {:.3}, test acc {:.3}",
+        tm::infer::cotm_accuracy(&cm, &tr.features, &tr.labels),
+        tm::infer::cotm_accuracy(&cm, &te.features, &te.labels)
+    );
+    tm::serde::save_multiclass(&m, format!("{out_dir}/multiclass.tm"))?;
+    tm::serde::save_cotm(&cm, format!("{out_dir}/cotm.tm"))?;
+    println!("saved {out_dir}/multiclass.tm and {out_dir}/cotm.tm");
+    Ok(())
+}
+
+fn wta_kind(args: &Args) -> Result<WtaKind> {
+    match args.flag_or("wta", "tba").as_str() {
+        "tba" => Ok(WtaKind::Tba),
+        "mesh" => Ok(WtaKind::Mesh),
+        other => Err(Error::config(format!("unknown --wta {other:?}"))),
+    }
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let model_dir = args.flag_or("model-dir", "models");
+    let backend = Backend::parse(&args.flag_or("backend", "cotm-proposed"))
+        .ok_or_else(|| Error::config("unknown --backend"))?;
+    let dataset = data::iris()?;
+    let sample = args.flag_parse("sample", 0usize)?;
+    if sample >= dataset.len() {
+        return Err(Error::config(format!("--sample out of range (<{})", dataset.len())));
+    }
+    let m = tm::serde::load_multiclass(format!("{model_dir}/multiclass.tm"))?;
+    let cm = tm::serde::load_cotm(format!("{model_dir}/cotm.tm"))?;
+    let cfg = ServeConfig { workers: 1, ..ServeConfig::default() };
+    let srv = CoordinatorServer::new(&cfg, m, cm, backend.is_golden())?;
+    let r = srv.infer(InferRequest { features: dataset.features[sample].clone(), backend })?;
+    println!(
+        "sample {sample}: predicted class {} (true {}), sums {:?}",
+        r.predicted, dataset.labels[sample], r.class_sums
+    );
+    if let Some(l) = r.hw_latency {
+        println!("hw latency {l}, energy {:.1} fJ", r.hw_energy_fj.unwrap_or(0.0));
+    }
+    srv.shutdown();
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let dataset = load_dataset(&args.flag_or("dataset", "iris"), 7)?;
+    let epochs = args.flag_parse("epochs", 60usize)?;
+    let seed = args.flag_parse("seed", 2u64)?;
+    let wta = wta_kind(args)?;
+    let (m, cm) = train_pair(&dataset, epochs, seed)?;
+    let mut archs: Vec<Box<dyn Architecture>> = vec![
+        Box::new(sync_multiclass(m.clone())),
+        Box::new(async_bd_multiclass(m.clone())),
+        Box::new(ProposedMulticlass::new(m.clone(), wta)?),
+        Box::new(sync_cotm(cm.clone())),
+        Box::new(async_bd_cotm(cm.clone())),
+        Box::new(ProposedCotm::new(cm.clone(), wta)?),
+    ];
+    let mut rows = Vec::new();
+    for a in archs.iter_mut() {
+        rows.push(evaluate(a.as_mut(), &dataset.features, &dataset.labels)?);
+    }
+    println!("Table IV — performance summary ({} / wta={})", dataset.name, wta.name());
+    println!("{}", render_table_iv(&rows));
+    Ok(())
+}
+
+fn cmd_table1(_args: &Args) -> Result<()> {
+    let tech = TechParams::tsmc65_digital();
+    let mut t = tsetlin_td::util::Table::new(vec![
+        "Config.",
+        "m",
+        "Arbitration Depth",
+        "Cell Count",
+        "Latency theory (ps)",
+        "Latency measured (ps)",
+    ]);
+    for m in [2usize, 3, 4, 8, 16, 32] {
+        let a = analysis::tba_analysis(m, &tech);
+        t.row(vec![
+            "TBA".to_string(),
+            m.to_string(),
+            a.arbitration_depth.to_string(),
+            a.cell_count.to_string(),
+            format!("{:.0}", a.latency_theory.as_ps_f64()),
+            format!(
+                "{:.0}",
+                analysis::measured_latency(WtaKind::Tba, m, &tech).as_ps_f64()
+            ),
+        ]);
+        let a = analysis::mesh_analysis(m, &tech);
+        t.row(vec![
+            "Mesh-Like".to_string(),
+            m.to_string(),
+            a.arbitration_depth.to_string(),
+            a.cell_count.to_string(),
+            format!("{:.0}", a.latency_theory.as_ps_f64()),
+            format!(
+                "{:.0}",
+                analysis::measured_latency(WtaKind::Mesh, m, &tech).as_ps_f64()
+            ),
+        ]);
+    }
+    println!("Table I — WTA implementations");
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_table3(args: &Args) -> Result<()> {
+    // Reported literature rows + our two measured columns.
+    let dataset = data::iris()?;
+    let (m, cm) = train_pair(&dataset, 60, 2)?;
+    let wta = wta_kind(args)?;
+    let mut prop_mc = ProposedMulticlass::new(m, wta)?;
+    let mut prop_co = ProposedCotm::new(cm, wta)?;
+    let r_mc = evaluate(&mut prop_mc, &dataset.features, &dataset.labels)?;
+    let r_co = evaluate(&mut prop_co, &dataset.features, &dataset.labels)?;
+    let mut t = tsetlin_td::util::Table::new(vec![
+        "Parameter", "[21]", "[4]", "[8]", "[11]", "Proposed (TM)", "Proposed (CoTM)",
+    ]);
+    t.row(vec!["Architecture", "Async QDI", "Async BD", "Sync", "Async QDI", "Async BD", "Async BD"]);
+    t.row(vec!["Computing Domain", "Digital", "Digital", "Time", "Digital", "Time", "Hybrid"]);
+    t.row(vec!["Technology (nm)", "65", "28", "65", "65", "65 (sim)", "65 (sim)"]);
+    t.row(vec!["Voltage (V)", "1.2", "0.9", "1.2", "1.2", "1.0", "1.0"]);
+    t.row(vec![
+        "Energy Eff. (TOp/J)".to_string(),
+        "1.87 (reported)".to_string(),
+        "0.42 (reported)".to_string(),
+        "116 (reported)".to_string(),
+        "873 (reported)".to_string(),
+        format!("{:.1} (measured)", r_mc.energy_eff_tops_per_j),
+        format!("{:.1} (measured)", r_co.energy_eff_tops_per_j),
+    ]);
+    t.row(vec!["ML Algorithm", "CNN", "SNN", "BNN", "Multi-class TM", "Multi-class TM", "CoTM"]);
+    println!("Table III — comparison with state-of-the-art (literature rows quoted from the paper)");
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_waveform(args: &Args) -> Result<()> {
+    let out_dir = args.flag_or("out-dir", "waves");
+    std::fs::create_dir_all(&out_dir)?;
+    let written = tsetlin_td::arch::waveforms::dump_all(&out_dir)?;
+    for w in written {
+        println!("wrote {w}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = match args.flag("config") {
+        Some(path) => ServeConfig::load(path)?,
+        None => ServeConfig::default(),
+    };
+    let with_golden = !args.switch("no-golden");
+    let n_requests = args.flag_parse("requests", 200usize)?;
+    let dataset = data::iris()?;
+    let (m, cm) = train_pair(&dataset, 60, 2)?;
+    let srv = CoordinatorServer::new(&cfg, m, cm, with_golden)?;
+    println!("serving {n_requests} mixed requests (golden={with_golden}) ...");
+    let mut rng = SplitMix64::new(1);
+    let backends: Vec<Backend> = Backend::ALL
+        .iter()
+        .copied()
+        .filter(|b| with_golden || !b.is_golden())
+        .collect();
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..n_requests {
+        let b = backends[rng.index(backends.len())];
+        match srv.submit(InferRequest {
+            features: dataset.features[i % dataset.len()].clone(),
+            backend: b,
+        }) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => eprintln!("rejected: {e}"),
+        }
+    }
+    let mut ok = 0usize;
+    for rx in pending {
+        if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "done: {ok}/{n_requests} ok in {:.1} ms ({:.0} req/s)",
+        dt.as_secs_f64() * 1e3,
+        ok as f64 / dt.as_secs_f64()
+    );
+    println!("{}", srv.stats().render());
+    srv.shutdown();
+    Ok(())
+}
+
+fn cmd_selfcheck(args: &Args) -> Result<()> {
+    let dataset = data::iris()?;
+    let (m, cm) = train_pair(&dataset, 60, 2)?;
+    let wta = wta_kind(args)?;
+    let mut archs: Vec<Box<dyn Architecture>> = vec![
+        Box::new(sync_multiclass(m.clone())),
+        Box::new(async_bd_multiclass(m.clone())),
+        Box::new(ProposedMulticlass::new(m.clone(), wta)?),
+        Box::new(sync_cotm(cm.clone())),
+        Box::new(async_bd_cotm(cm.clone())),
+        Box::new(ProposedCotm::new(cm.clone(), wta)?),
+    ];
+    let mut all_ok = true;
+    for a in archs.iter_mut() {
+        let mut agree = 0usize;
+        for x in &dataset.features {
+            let r = a.infer(x)?;
+            let exact = tm::infer::predict_argmax(&r.class_sums);
+            if r.predicted == exact || r.class_sums[r.predicted] == r.class_sums[exact] {
+                agree += 1;
+            }
+        }
+        let pct = 100.0 * agree as f64 / dataset.len() as f64;
+        println!("{:24} argmax agreement {pct:.1}%", a.name());
+        if pct < 95.0 {
+            all_ok = false;
+        }
+    }
+    if !all_ok {
+        return Err(Error::model("selfcheck failed: agreement below 95%"));
+    }
+    println!("selfcheck OK");
+    Ok(())
+}

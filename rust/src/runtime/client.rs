@@ -1,0 +1,174 @@
+//! PJRT CPU client wrapper: compile HLO-text artifacts once, execute
+//! many times. Adapted from /opt/xla-example/load_hlo (HLO *text* is the
+//! interchange format — xla_extension 0.5.1 rejects jax≥0.5 serialized
+//! protos with 64-bit instruction ids).
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+
+/// A loaded runtime: PJRT client + one compiled executable per artifact.
+/// NOT `Send` — own it on a dedicated thread (see [`super::golden`]).
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load every artifact in the manifest and compile it.
+    pub fn load(artifacts_dir: &str) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = HashMap::new();
+        for (name, meta) in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                meta.file
+                    .to_str()
+                    .ok_or_else(|| Error::artifact("non-UTF-8 artifact path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(Runtime { manifest, client, executables })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| Error::artifact(format!("unknown artifact {name:?}")))
+    }
+
+    /// Execute `name` with f32 row-major inputs matching the manifest
+    /// shapes; returns the flattened f32 output.
+    pub fn execute(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let meta = self.artifact(name)?;
+        if inputs.len() != meta.args.len() {
+            return Err(Error::runtime(format!(
+                "{name}: got {} inputs, expected {}",
+                inputs.len(),
+                meta.args.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs.iter().zip(&meta.args) {
+            let expected: usize = shape.iter().product();
+            if data.len() != expected {
+                return Err(Error::runtime(format!(
+                    "{name}: input size {} != shape {:?} ({expected})",
+                    data.len(),
+                    shape
+                )));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| Error::artifact(format!("artifact {name:?} not compiled")))?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute and reshape the (B, K) class-sum output into per-row
+    /// argmax predictions alongside the raw sums.
+    pub fn execute_class_sums(
+        &self,
+        name: &str,
+        inputs: &[Vec<f32>],
+    ) -> Result<(Vec<Vec<f32>>, Vec<usize>)> {
+        let meta = self.artifact(name)?;
+        let flat = self.execute(name, inputs)?;
+        let k = *meta.out.last().unwrap_or(&1);
+        let rows: Vec<Vec<f32>> = flat.chunks(k).map(|c| c.to_vec()).collect();
+        let preds = rows
+            .iter()
+            .map(|r| {
+                r.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect();
+        Ok((rows, preds))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These run only when `make artifacts` has produced real outputs
+    /// (always the case under `make test`).
+    fn runtime() -> Option<Runtime> {
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            Some(Runtime::load("artifacts").expect("runtime load"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_and_reports_platform() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.platform().to_lowercase().contains("cpu"));
+        assert!(rt.manifest.artifacts.len() >= 6);
+    }
+
+    #[test]
+    fn cotm_artifact_matches_rust_reference() {
+        let Some(rt) = runtime() else { return };
+        // Tiny deterministic CoTM; batch-1 artifact.
+        let m = rt.manifest.clone();
+        let (f, c, k) = (m.features, m.clauses, m.classes);
+        let mut rng = crate::util::SplitMix64::new(9);
+        let features: Vec<f32> = (0..f).map(|_| (rng.next_bool() as u8) as f32).collect();
+        let include: Vec<f32> = (0..c * 2 * f).map(|_| (rng.chance(0.2) as u8) as f32).collect();
+        let weights: Vec<f32> = (0..k * c).map(|_| (rng.next_below(15) as i64 - 7) as f32).collect();
+        let (sums, _) = rt
+            .execute_class_sums("cotm_b1", &[features.clone(), include.clone(), weights.clone()])
+            .unwrap();
+        // Rust reference.
+        let feats: Vec<bool> = features.iter().map(|&x| x == 1.0).collect();
+        let mut model = crate::tm::CoTmModel::zeroed(crate::tm::TmParams {
+            features: f,
+            clauses: c,
+            classes: k,
+            ..crate::tm::TmParams::iris_paper()
+        });
+        for j in 0..c {
+            for l in 0..2 * f {
+                model.clauses[j].include[l] = include[j * 2 * f + l] == 1.0;
+            }
+        }
+        for kk in 0..k {
+            for j in 0..c {
+                model.weights[kk][j] = weights[kk * c + j] as i32;
+            }
+        }
+        let want = crate::tm::infer::cotm_class_sums(&model, &feats);
+        let got: Vec<i32> = sums[0].iter().map(|&x| x as i32).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn rejects_wrong_input_arity_and_shape() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.execute("cotm_b1", &[vec![0.0; 16]]).is_err());
+        let bad = vec![vec![0.0; 3], vec![0.0; 3], vec![0.0; 3]];
+        assert!(rt.execute("cotm_b1", &bad).is_err());
+        assert!(rt.execute("nope", &[]).is_err());
+    }
+}

@@ -1,0 +1,239 @@
+//! Golden-model service: owns the (non-`Send`) PJRT runtime on a
+//! dedicated thread and serves batched class-sum requests over channels.
+//!
+//! This is the coordinator's "functional path": requests routed to the
+//! golden model are batched by the dynamic batcher and executed as one
+//! XLA call on the AOT-compiled artifact whose batch size fits (inputs
+//! are padded up; padding rows are discarded).
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+
+/// A batched execution request for one model family.
+pub struct GoldenRequest {
+    /// `"multiclass_tm"` or `"cotm"`.
+    pub family: String,
+    /// Row-major (n × F) features in {0,1}.
+    pub features: Vec<Vec<f32>>,
+    /// Reply channel: per-row (class sums, argmax).
+    pub reply: mpsc::Sender<Result<Vec<(Vec<f32>, usize)>>>,
+}
+
+enum Msg {
+    Run(GoldenRequest),
+    Shutdown,
+}
+
+/// Handle to the golden-model thread.
+pub struct GoldenService {
+    tx: mpsc::Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// A cloneable, `Send` client to the golden-model thread (the service
+/// handle itself owns the join handle; clients just carry a sender).
+#[derive(Clone)]
+pub struct GoldenClient {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl GoldenClient {
+    /// Submit a batch and wait for the reply.
+    pub fn infer_batch(
+        &self,
+        family: &str,
+        features: Vec<Vec<f32>>,
+    ) -> Result<Vec<(Vec<f32>, usize)>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Run(GoldenRequest {
+                family: family.to_string(),
+                features,
+                reply: reply_tx,
+            }))
+            .map_err(|_| Error::coordinator("golden service stopped"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::coordinator("golden service dropped reply"))?
+    }
+}
+
+/// Model parameters the service needs (flattened, f32).
+#[derive(Debug, Clone)]
+pub struct GoldenModels {
+    /// Multi-class include masks (K·C × 2F), or empty to disable.
+    pub multiclass_include: Vec<f32>,
+    /// CoTM include masks (C × 2F), or empty to disable.
+    pub cotm_include: Vec<f32>,
+    /// CoTM weights (K × C).
+    pub cotm_weights: Vec<f32>,
+}
+
+impl GoldenService {
+    /// Spawn the service thread: loads + compiles artifacts inside the
+    /// thread (the runtime is not `Send`), then serves requests.
+    pub fn spawn(artifacts_dir: String, models: GoldenModels) -> Result<GoldenService> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("golden-pjrt".into())
+            .spawn(move || {
+                let rt = match super::Runtime::load(&artifacts_dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(Msg::Run(req)) = rx.recv() {
+                    let result = run_batch(&rt, &models, &req);
+                    let _ = req.reply.send(result);
+                }
+            })
+            .map_err(|e| Error::coordinator(format!("spawn golden thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::coordinator("golden thread died during load"))??;
+        Ok(GoldenService { tx, handle: Some(handle) })
+    }
+
+    /// A cloneable `Send` client for use from other threads.
+    pub fn client(&self) -> GoldenClient {
+        GoldenClient { tx: self.tx.clone() }
+    }
+
+    /// Submit a batch and wait for the reply.
+    pub fn infer_batch(
+        &self,
+        family: &str,
+        features: Vec<Vec<f32>>,
+    ) -> Result<Vec<(Vec<f32>, usize)>> {
+        self.client().infer_batch(family, features)
+    }
+}
+
+impl Drop for GoldenService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_batch(
+    rt: &super::Runtime,
+    models: &GoldenModels,
+    req: &GoldenRequest,
+) -> Result<Vec<(Vec<f32>, usize)>> {
+    let n = req.features.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let meta = rt.manifest.artifact_for_batch(&req.family, n)?;
+    let b = meta.batch();
+    let f = rt.manifest.features;
+    let mut out = Vec::with_capacity(n);
+    // Chunk the request into artifact-sized batches, padding the last.
+    for chunk in req.features.chunks(b) {
+        let mut flat = Vec::with_capacity(b * f);
+        for row in chunk {
+            if row.len() != f {
+                return Err(Error::runtime(format!(
+                    "feature row width {} != {f}",
+                    row.len()
+                )));
+            }
+            flat.extend_from_slice(row);
+        }
+        flat.resize(b * f, 0.0); // pad rows with zeros
+        let inputs: Vec<Vec<f32>> = match req.family.as_str() {
+            "multiclass_tm" => vec![flat, models.multiclass_include.clone()],
+            "cotm" => vec![flat, models.cotm_include.clone(), models.cotm_weights.clone()],
+            other => return Err(Error::runtime(format!("unknown family {other:?}"))),
+        };
+        let (rows, preds) = rt.execute_class_sums(&meta.name, &inputs)?;
+        for (row, pred) in rows.into_iter().zip(preds).take(chunk.len()) {
+            out.push((row, pred));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::{cotm_train::train_cotm, data, train::train_multiclass, TmParams};
+
+    fn service() -> Option<(GoldenService, data::Dataset, crate::tm::MultiClassTmModel, crate::tm::CoTmModel)>
+    {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return None;
+        }
+        let d = data::iris().unwrap();
+        let (tr, _) = d.split(0.8, 42);
+        let m = train_multiclass(TmParams::iris_paper(), &tr, 30, 2).unwrap();
+        let cm = train_cotm(TmParams::iris_paper(), &tr, 30, 3).unwrap();
+        let svc = GoldenService::spawn(
+            "artifacts".into(),
+            GoldenModels {
+                multiclass_include: m.include_f32(),
+                cotm_include: cm.include_f32(),
+                cotm_weights: cm.weights_f32(),
+            },
+        )
+        .unwrap();
+        Some((svc, d, m, cm))
+    }
+
+    #[test]
+    fn golden_matches_rust_reference_multiclass() {
+        let Some((svc, d, m, _)) = service() else { return };
+        let rows: Vec<Vec<f32>> = d.features[..20]
+            .iter()
+            .map(|r| r.iter().map(|&b| b as u8 as f32).collect())
+            .collect();
+        let out = svc.infer_batch("multiclass_tm", rows).unwrap();
+        for (i, (sums, pred)) in out.iter().enumerate() {
+            let want = crate::tm::infer::multiclass_class_sums(&m, &d.features[i]);
+            let got: Vec<i32> = sums.iter().map(|&x| x as i32).collect();
+            assert_eq!(got, want, "row {i}");
+            assert_eq!(*pred, crate::tm::infer::predict_argmax(&want), "row {i}");
+        }
+    }
+
+    #[test]
+    fn golden_matches_rust_reference_cotm_with_padding() {
+        let Some((svc, d, _, cm)) = service() else { return };
+        // 5 rows forces the b16 artifact with 11 pad rows.
+        let rows: Vec<Vec<f32>> = d.features[..5]
+            .iter()
+            .map(|r| r.iter().map(|&b| b as u8 as f32).collect())
+            .collect();
+        let out = svc.infer_batch("cotm", rows).unwrap();
+        assert_eq!(out.len(), 5);
+        for (i, (sums, _)) in out.iter().enumerate() {
+            let want = crate::tm::infer::cotm_class_sums(&cm, &d.features[i]);
+            let got: Vec<i32> = sums.iter().map(|&x| x as i32).collect();
+            assert_eq!(got, want, "row {i}");
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let Some((svc, _, _, _)) = service() else { return };
+        assert!(svc.infer_batch("cotm", vec![]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn unknown_family_is_error() {
+        let Some((svc, d, _, _)) = service() else { return };
+        let row: Vec<f32> = d.features[0].iter().map(|&b| b as u8 as f32).collect();
+        assert!(svc.infer_batch("nope", vec![row]).is_err());
+    }
+}

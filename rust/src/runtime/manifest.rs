@@ -1,0 +1,176 @@
+//! `artifacts/manifest.json` — shapes and filenames of the AOT outputs,
+//! written by `python/compile/aot.py` alongside the HLO text files.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::Json;
+use crate::error::{Error, Result};
+
+/// One artifact's metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    /// Entry argument shapes, in order.
+    pub args: Vec<Vec<usize>>,
+    /// Output shape.
+    pub out: Vec<usize>,
+}
+
+impl ArtifactMeta {
+    /// Batch size (first dim of the first argument).
+    pub fn batch(&self) -> usize {
+        self.args.first().and_then(|s| s.first()).copied().unwrap_or(1)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub features: usize,
+    pub clauses: usize,
+    pub classes: usize,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let version = j.get("version")?.as_usize()?;
+        if version != 1 {
+            return Err(Error::artifact(format!("unsupported manifest version {version}")));
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, meta) in j.get("artifacts")?.as_object()? {
+            let args = meta
+                .get("args")?
+                .as_array()?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_array()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<Vec<usize>>>()
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let out = meta
+                .get("out")?
+                .as_array()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<Vec<usize>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file: dir.join(meta.get("file")?.as_str()?),
+                    args,
+                    out,
+                },
+            );
+        }
+        Ok(Manifest {
+            features: j.get("features")?.as_usize()?,
+            clauses: j.get("clauses")?.as_usize()?,
+            classes: j.get("classes")?.as_usize()?,
+            artifacts,
+        })
+    }
+
+    /// Available batch sizes for a model family (e.g. `"cotm"`),
+    /// ascending.
+    pub fn batches_for(&self, family: &str) -> Vec<usize> {
+        let prefix = format!("{family}_b");
+        let mut v: Vec<usize> = self
+            .artifacts
+            .keys()
+            .filter_map(|name| name.strip_prefix(&prefix)?.parse().ok())
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Pick the smallest artifact batch ≥ `n` (or the largest if none).
+    pub fn artifact_for_batch(&self, family: &str, n: usize) -> Result<&ArtifactMeta> {
+        let batches = self.batches_for(family);
+        if batches.is_empty() {
+            return Err(Error::artifact(format!("no artifacts for family {family:?}")));
+        }
+        let b = batches
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or(*batches.last().unwrap());
+        self.artifacts
+            .get(&format!("{family}_b{b}"))
+            .ok_or_else(|| Error::artifact(format!("missing artifact {family}_b{b}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1, "literal_order": "interleaved",
+        "features": 16, "clauses": 12, "classes": 3,
+        "artifacts": {
+            "cotm_b1":  {"file": "cotm_b1.hlo.txt",  "args": [[1,16],[12,32],[3,12]], "out": [1,3]},
+            "cotm_b16": {"file": "cotm_b16.hlo.txt", "args": [[16,16],[12,32],[3,12]], "out": [16,3]},
+            "multiclass_tm_b1": {"file": "m.hlo.txt", "args": [[1,16],[3,12,32]], "out": [1,3]}
+        }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(m.features, 16);
+        assert_eq!(m.artifacts.len(), 3);
+        let a = &m.artifacts["cotm_b16"];
+        assert_eq!(a.batch(), 16);
+        assert_eq!(a.file, PathBuf::from("/art/cotm_b16.hlo.txt"));
+    }
+
+    #[test]
+    fn batch_selection() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(m.batches_for("cotm"), vec![1, 16]);
+        assert_eq!(m.artifact_for_batch("cotm", 1).unwrap().batch(), 1);
+        assert_eq!(m.artifact_for_batch("cotm", 5).unwrap().batch(), 16);
+        // Larger than any: falls back to the largest.
+        assert_eq!(m.artifact_for_batch("cotm", 99).unwrap().batch(), 16);
+        assert!(m.artifact_for_batch("nonexistent", 1).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad, Path::new("/a")).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        // Integration check against the actual build output when it
+        // exists (CI runs `make artifacts` first).
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            let m = Manifest::load("artifacts").unwrap();
+            assert_eq!(m.features, 16);
+            assert!(!m.batches_for("multiclass_tm").is_empty());
+            assert!(!m.batches_for("cotm").is_empty());
+        }
+    }
+}

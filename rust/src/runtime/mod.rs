@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the XLA CPU client.
+//!
+//! This is the only place the crate touches XLA; Python never runs on
+//! the request path — `make artifacts` runs it once at build time.
+//!
+//! Threading: the `xla` crate's handles wrap raw pointers and are not
+//! `Send`, so [`golden::GoldenService`] owns the whole runtime on one
+//! dedicated thread and serves requests over channels.
+
+pub mod client;
+pub mod golden;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use golden::GoldenService;
+pub use manifest::{ArtifactMeta, Manifest};

@@ -1,0 +1,385 @@
+//! The circuit: netlist container + event-driven run loop.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::component::{Component, Ctx};
+use super::energy::{EnergyLedger, TechParams};
+use super::event::Event;
+use super::net::{Logic, NetId, NetInfo};
+use super::time::Time;
+use super::trace::VcdTracer;
+use crate::error::{Error, Result};
+
+/// An event-driven circuit: nets, components, a scheduler, energy
+/// accounting and optional VCD tracing.
+pub struct Circuit {
+    pub tech: TechParams,
+    nets: Vec<NetInfo>,
+    values: Vec<Logic>,
+    comps: Vec<Box<dyn Component>>,
+    /// comp index -> input net list (pin order).
+    inputs: Vec<Vec<NetId>>,
+    queue: BinaryHeap<Reverse<Event>>,
+    scheduled_buf: Vec<(NetId, Logic, Time)>,
+    now: Time,
+    seq: u64,
+    pub energy: EnergyLedger,
+    tracer: Option<VcdTracer>,
+    events_processed: u64,
+    /// Safety valve against runaway oscillation.
+    pub max_events: u64,
+}
+
+impl Circuit {
+    pub fn new(tech: TechParams) -> Circuit {
+        Circuit {
+            tech,
+            nets: Vec::new(),
+            values: Vec::new(),
+            comps: Vec::new(),
+            inputs: Vec::new(),
+            queue: BinaryHeap::new(),
+            scheduled_buf: Vec::new(),
+            now: Time::ZERO,
+            seq: 0,
+            energy: EnergyLedger::default(),
+            tracer: None,
+            events_processed: 0,
+            max_events: 50_000_000,
+        }
+    }
+
+    // ------------------------------------------------------------ build
+
+    /// Create a net, initially X.
+    pub fn net(&mut self, name: impl Into<String>) -> NetId {
+        let id = NetId(self.nets.len() as u32);
+        self.nets.push(NetInfo {
+            name: name.into(),
+            sinks: Vec::new(),
+            traced: false,
+            transitions: 0,
+        });
+        self.values.push(Logic::X);
+        id
+    }
+
+    /// Create a net with a defined initial value (no event generated).
+    pub fn net_init(&mut self, name: impl Into<String>, v: Logic) -> NetId {
+        let id = self.net(name);
+        self.values[id.index()] = v;
+        id
+    }
+
+    /// Add a component; `inputs` lists the nets feeding its pins in order.
+    pub fn add(&mut self, comp: Box<dyn Component>, inputs: Vec<NetId>) -> usize {
+        let ci = self.comps.len();
+        self.energy.gate_equivalents += comp.gate_equivalents();
+        for (pin, net) in inputs.iter().enumerate() {
+            self.nets[net.index()].sinks.push((ci, pin));
+        }
+        self.comps.push(comp);
+        self.inputs.push(inputs);
+        ci
+    }
+
+    /// Mark a net for VCD tracing.
+    pub fn trace(&mut self, net: NetId) {
+        self.nets[net.index()].traced = true;
+    }
+
+    /// Attach a VCD tracer (all `trace()`d nets are recorded).
+    pub fn attach_tracer(&mut self, mut tracer: VcdTracer) {
+        for (i, info) in self.nets.iter().enumerate() {
+            if info.traced {
+                tracer.declare(NetId(i as u32), &info.name);
+            }
+        }
+        self.tracer = Some(tracer);
+    }
+
+    /// Detach and return the tracer (to finalise the VCD file).
+    pub fn take_tracer(&mut self) -> Option<VcdTracer> {
+        self.tracer.take()
+    }
+
+    // ------------------------------------------------------------ drive
+
+    /// Externally drive a net at an absolute time ≥ now.
+    pub fn drive_at(&mut self, net: NetId, value: Logic, at: Time) -> Result<()> {
+        if at < self.now {
+            return Err(Error::sim(format!(
+                "drive_at {} in the past (now {})",
+                at, self.now
+            )));
+        }
+        self.push_event(at, net, value);
+        Ok(())
+    }
+
+    /// Externally drive a net `delay` after now.
+    pub fn drive(&mut self, net: NetId, value: Logic, delay: Time) {
+        self.push_event(self.now + delay, net, value);
+    }
+
+    fn push_event(&mut self, at: Time, net: NetId, value: Logic) {
+        let ev = Event { time: at, seq: self.seq, net, value };
+        self.seq += 1;
+        self.queue.push(Reverse(ev));
+    }
+
+    // -------------------------------------------------------------- run
+
+    /// Initialise all components (drives reset values etc.).
+    pub fn init_components(&mut self) {
+        for ci in 0..self.comps.len() {
+            let mut ctx = Ctx {
+                now: self.now,
+                values: &self.values,
+                scheduled: &mut self.scheduled_buf,
+                energy: &mut self.energy,
+            };
+            self.comps[ci].init(&mut ctx);
+            let buf: Vec<_> = self.scheduled_buf.drain(..).collect();
+            for (net, value, delay) in buf {
+                self.push_event(self.now + delay, net, value);
+            }
+        }
+    }
+
+    /// Current simulation time.
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Total events processed so far.
+    pub fn events_processed(&self) -> u64 {
+        self.events_processed
+    }
+
+    /// Value of a net.
+    pub fn value(&self, net: NetId) -> Logic {
+        self.values[net.index()]
+    }
+
+    /// Transition count of a net (activity).
+    pub fn transitions(&self, net: NetId) -> u64 {
+        self.nets[net.index()].transitions
+    }
+
+    /// Net name (for diagnostics).
+    pub fn net_name(&self, net: NetId) -> &str {
+        &self.nets[net.index()].name
+    }
+
+    /// Run until the queue empties or `until` is reached.
+    /// Returns the time of the last processed event.
+    pub fn run_until(&mut self, until: Time) -> Result<Time> {
+        while let Some(Reverse(ev)) = self.queue.peek().copied() {
+            if ev.time > until {
+                break;
+            }
+            self.queue.pop();
+            self.step_event(ev)?;
+        }
+        // Advance wall time to the horizon even if no event landed on it.
+        if self.now < until {
+            self.now = until;
+        }
+        Ok(self.now)
+    }
+
+    /// Run until the event queue is exhausted (or `max_events` trips).
+    pub fn run_to_quiescence(&mut self) -> Result<Time> {
+        while let Some(Reverse(ev)) = self.queue.pop() {
+            self.step_event(ev)?;
+        }
+        Ok(self.now)
+    }
+
+    /// Run until `predicate` returns true after an event, the queue
+    /// empties, or `deadline` passes. Returns true if predicate fired.
+    pub fn run_while(
+        &mut self,
+        deadline: Time,
+        mut predicate: impl FnMut(&Circuit) -> bool,
+    ) -> Result<bool> {
+        loop {
+            let ev = match self.queue.peek().copied() {
+                Some(Reverse(ev)) if ev.time <= deadline => {
+                    self.queue.pop();
+                    ev
+                }
+                _ => return Ok(false),
+            };
+            self.step_event(ev)?;
+            if predicate(self) {
+                return Ok(true);
+            }
+        }
+    }
+
+    fn step_event(&mut self, ev: Event) -> Result<()> {
+        debug_assert!(ev.time >= self.now, "event in the past");
+        self.now = ev.time;
+        self.events_processed += 1;
+        if self.events_processed > self.max_events {
+            return Err(Error::sim(format!(
+                "exceeded max_events={} (oscillation?) at t={}",
+                self.max_events, self.now
+            )));
+        }
+        let ni = ev.net.index();
+        let old = self.values[ni];
+        if old == ev.value {
+            return Ok(()); // no transition; transport-delay duplicate
+        }
+        self.values[ni] = ev.value;
+        self.nets[ni].transitions += 1;
+        if self.nets[ni].traced {
+            if let Some(tr) = &mut self.tracer {
+                tr.change(self.now, ev.net, ev.value);
+            }
+        }
+        // Notify sinks. The sink list is stable during a run (no dynamic
+        // connections), so index it directly — copying the (usize, usize)
+        // pair per iteration avoids both the per-event Vec clone and any
+        // aliasing with `comps` (hot path: §Perf in EXPERIMENTS.md).
+        let n_sinks = self.nets[ni].sinks.len();
+        for si in 0..n_sinks {
+            let (ci, pin) = self.nets[ni].sinks[si];
+            let mut ctx = Ctx {
+                now: self.now,
+                values: &self.values,
+                scheduled: &mut self.scheduled_buf,
+                energy: &mut self.energy,
+            };
+            self.comps[ci].on_input(pin, &mut ctx);
+            if !self.scheduled_buf.is_empty() {
+                // Reuse the buffer's allocation across events: take it,
+                // drain, put it back (capacity preserved).
+                let mut buf = std::mem::take(&mut self.scheduled_buf);
+                for (net, value, delay) in buf.drain(..) {
+                    self.push_event(self.now + delay, net, value);
+                }
+                self.scheduled_buf = buf;
+            }
+        }
+        Ok(())
+    }
+
+    /// Pending event count (diagnostics).
+    pub fn pending_events(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::energy::EnergyKind;
+
+    /// Minimal test component: inverter with fixed 10 ps delay.
+    struct TestInv {
+        input: NetId,
+        output: NetId,
+    }
+    impl Component for TestInv {
+        fn name(&self) -> &str {
+            "test_inv"
+        }
+        fn on_input(&mut self, _pin: usize, ctx: &mut Ctx) {
+            let v = ctx.get(self.input).not();
+            ctx.spend(EnergyKind::Logic, 0.6);
+            ctx.schedule(self.output, v, Time::ps(10));
+        }
+    }
+
+    fn inv_chain(n: usize) -> (Circuit, NetId, NetId) {
+        let mut c = Circuit::new(TechParams::tsmc65_digital());
+        let first = c.net("in");
+        let mut prev = first;
+        let mut last = first;
+        for i in 0..n {
+            let out = c.net(format!("n{i}"));
+            c.add(Box::new(TestInv { input: prev, output: out }), vec![prev]);
+            prev = out;
+            last = out;
+        }
+        (c, first, last)
+    }
+
+    #[test]
+    fn inverter_chain_propagates_with_delay() {
+        let (mut c, input, out) = inv_chain(4);
+        c.drive(input, Logic::Zero, Time::ZERO);
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(out), Logic::Zero); // 4 inversions of 0
+        assert_eq!(c.now(), Time::ps(40));
+    }
+
+    #[test]
+    fn energy_accumulates_per_transition() {
+        let (mut c, input, _) = inv_chain(3);
+        c.drive(input, Logic::Zero, Time::ZERO);
+        c.run_to_quiescence().unwrap();
+        // 3 inverters fire once each.
+        assert_eq!(c.energy.transitions(EnergyKind::Logic), 3);
+        assert!((c.energy.dynamic_fj(EnergyKind::Logic) - 1.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn same_value_event_is_not_a_transition() {
+        let (mut c, input, _) = inv_chain(1);
+        c.drive(input, Logic::Zero, Time::ZERO);
+        c.run_to_quiescence().unwrap();
+        let t0 = c.transitions(input);
+        c.drive(input, Logic::Zero, Time::ps(5));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.transitions(input), t0);
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        // Two events at the same instant are processed in schedule order.
+        let mut c = Circuit::new(TechParams::tsmc65_digital());
+        let a = c.net("a");
+        c.drive(a, Logic::One, Time::ps(5));
+        c.drive(a, Logic::Zero, Time::ps(5));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(a), Logic::Zero); // last scheduled wins the tie
+        assert_eq!(c.transitions(a), 2);
+    }
+
+    #[test]
+    fn drive_in_past_rejected() {
+        let (mut c, input, _) = inv_chain(1);
+        c.drive(input, Logic::One, Time::ps(10));
+        c.run_to_quiescence().unwrap();
+        assert!(c.drive_at(input, Logic::Zero, Time::ps(5)).is_err());
+    }
+
+    #[test]
+    fn max_events_trips_on_oscillator() {
+        // Ring oscillator: single inverter feeding itself.
+        let mut c = Circuit::new(TechParams::tsmc65_digital());
+        let n = c.net("ring");
+        c.add(Box::new(TestInv { input: n, output: n }), vec![n]);
+        c.max_events = 1000;
+        c.drive(n, Logic::Zero, Time::ZERO);
+        let err = c.run_to_quiescence().unwrap_err();
+        assert!(err.to_string().contains("max_events"));
+    }
+
+    #[test]
+    fn run_while_predicate_stops_early() {
+        let (mut c, input, out) = inv_chain(8);
+        c.drive(input, Logic::Zero, Time::ZERO);
+        let fired = c
+            .run_while(Time::ns(1), |c| c.value(out) != Logic::X)
+            .unwrap();
+        assert!(fired);
+        assert!(c.now() <= Time::ps(80));
+    }
+}

@@ -1,0 +1,72 @@
+//! Component trait and evaluation context.
+
+use super::energy::{EnergyKind, EnergyLedger};
+use super::net::{Logic, NetId};
+use super::time::Time;
+
+/// Evaluation context handed to a component when one of its inputs
+/// transitions. Provides read access to all net values, output
+/// scheduling, and energy attribution — everything a component may do.
+pub struct Ctx<'a> {
+    /// Current simulation time.
+    pub now: Time,
+    /// Values of all nets (indexed by `NetId::index()`).
+    pub(super) values: &'a [Logic],
+    /// Transitions to schedule: (net, value, delay from now).
+    pub(super) scheduled: &'a mut Vec<(NetId, Logic, Time)>,
+    pub(super) energy: &'a mut EnergyLedger,
+}
+
+impl<'a> Ctx<'a> {
+    /// Read a net's current value.
+    pub fn get(&self, net: NetId) -> Logic {
+        self.values[net.index()]
+    }
+
+    /// Read as bool, treating X as `false` (components that must see X
+    /// explicitly should use [`Ctx::get`]).
+    pub fn get_bool(&self, net: NetId) -> bool {
+        self.values[net.index()] == Logic::One
+    }
+
+    /// Schedule `net <- value` after `delay`.
+    pub fn schedule(&mut self, net: NetId, value: Logic, delay: Time) {
+        self.scheduled.push((net, value, delay));
+    }
+
+    /// Schedule only if the value differs from the net's current value
+    /// (cheap glitch suppression for level-sensitive logic).
+    pub fn schedule_if_changed(&mut self, net: NetId, value: Logic, delay: Time) {
+        if self.get(net) != value {
+            self.schedule(net, value, delay);
+        }
+    }
+
+    /// Attribute `fj` femtojoules of dynamic energy to `kind`.
+    pub fn spend(&mut self, kind: EnergyKind, fj: f64) {
+        self.energy.add(kind, fj);
+    }
+}
+
+/// A circuit component: evaluated when any connected input net changes.
+///
+/// Components range from single gates ([`crate::gates`]) to behavioural
+/// datapath blocks ([`crate::arch::datapath`]); both obey the same
+/// event-driven contract, so gate-level and block-level models compose in
+/// one netlist.
+pub trait Component {
+    /// Debug name (instance path).
+    fn name(&self) -> &str;
+
+    /// Called at t=0 so components can initialise outputs (e.g. drive a
+    /// known reset value). Default: do nothing.
+    fn init(&mut self, _ctx: &mut Ctx) {}
+
+    /// Input pin `pin` (index into the component's input list) changed.
+    fn on_input(&mut self, pin: usize, ctx: &mut Ctx);
+
+    /// Gate-equivalents for leakage accounting.
+    fn gate_equivalents(&self) -> f64 {
+        1.0
+    }
+}

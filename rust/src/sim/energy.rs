@@ -1,0 +1,400 @@
+//! Switching-energy and leakage accounting — the software stand-in for
+//! the paper's post-implementation power reports (DESIGN.md §6).
+//!
+//! First-order CMOS physics: every output transition of a gate charges or
+//! discharges that node's effective capacitance, costing `E = C·V²/2`
+//! (folded into a per-gate-type energy constant at the reference voltage);
+//! leakage accrues per gate-equivalent per unit time; a synchronous design
+//! additionally pays the clock tree every cycle on every flop. All
+//! constants are anchored to published 65 nm figures and scale as
+//! `(V/Vref)²` so the proposed design's 1.0 V operation is modelled.
+
+
+use super::time::Time;
+
+/// Categories used to attribute energy in reports (Table IV breakdowns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum EnergyKind {
+    /// Combinational std-cell switching (NAND/NOR/INV/...).
+    Logic,
+    /// Flip-flop clocking + data toggles.
+    Sequential,
+    /// Clock-tree distribution (synchronous designs only).
+    ClockTree,
+    /// Handshake control (click elements, C-elements) — async designs.
+    Handshake,
+    /// Time-domain delay elements (the weak-capacitance path).
+    DelayLine,
+    /// Arbitration (Mutex cells, WTA trees).
+    Arbiter,
+    /// Time-to-digital conversion.
+    Tdc,
+    /// Memory access (TA state / weight reads).
+    Memory,
+    /// Static leakage (accrued once per run from gate count × time).
+    Leakage,
+}
+
+impl EnergyKind {
+    /// Dense index for array-backed accounting (hot path: every gate
+    /// transition calls `EnergyLedger::add`).
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            EnergyKind::Logic => 0,
+            EnergyKind::Sequential => 1,
+            EnergyKind::ClockTree => 2,
+            EnergyKind::Handshake => 3,
+            EnergyKind::DelayLine => 4,
+            EnergyKind::Arbiter => 5,
+            EnergyKind::Tdc => 6,
+            EnergyKind::Memory => 7,
+            EnergyKind::Leakage => 8,
+        }
+    }
+
+    pub const ALL: [EnergyKind; 9] = [
+        EnergyKind::Logic,
+        EnergyKind::Sequential,
+        EnergyKind::ClockTree,
+        EnergyKind::Handshake,
+        EnergyKind::DelayLine,
+        EnergyKind::Arbiter,
+        EnergyKind::Tdc,
+        EnergyKind::Memory,
+        EnergyKind::Leakage,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EnergyKind::Logic => "logic",
+            EnergyKind::Sequential => "sequential",
+            EnergyKind::ClockTree => "clock-tree",
+            EnergyKind::Handshake => "handshake",
+            EnergyKind::DelayLine => "delay-line",
+            EnergyKind::Arbiter => "arbiter",
+            EnergyKind::Tdc => "tdc",
+            EnergyKind::Memory => "memory",
+            EnergyKind::Leakage => "leakage",
+        }
+    }
+}
+
+/// 65 nm technology parameters (anchors documented in DESIGN.md §6).
+#[derive(Debug, Clone)]
+pub struct TechParams {
+    /// Operating voltage (V). Baselines: 1.2 V; proposed designs: 1.0 V.
+    pub voltage: f64,
+    /// Reference voltage the energy constants below are quoted at.
+    pub vref: f64,
+    /// NAND2 switching energy per output transition at `vref` (fJ).
+    pub e_nand_fj: f64,
+    /// NOR2 switching energy (fJ).
+    pub e_nor_fj: f64,
+    /// Inverter switching energy (fJ).
+    pub e_inv_fj: f64,
+    /// XOR2 switching energy (fJ) — ~2.2 NAND equivalents.
+    pub e_xor_fj: f64,
+    /// D flip-flop energy per active clock edge (fJ).
+    pub e_dff_fj: f64,
+    /// Clock-tree energy per flop per cycle (fJ) — synchronous only.
+    pub e_clktree_fj: f64,
+    /// Delay-line stage energy per traversing event (fJ) — the paper's
+    /// weak-capacitance premise: far below a std-cell transition.
+    pub e_delay_stage_fj: f64,
+    /// SRAM/register-file read energy per bit (fJ).
+    pub e_mem_bit_fj: f64,
+    /// Leakage power per gate-equivalent (nW) at `vref`.
+    pub leak_nw_per_ge: f64,
+    /// Gate delays (ps) at `vref`.
+    pub d_nand_ps: f64,
+    pub d_nor_ps: f64,
+    pub d_inv_ps: f64,
+    pub d_xor_ps: f64,
+    pub d_dff_ps: f64,
+    /// Mutex intrinsic resolution time-constant τ_m (ps) for the
+    /// metastability model `t_res = τ_m · ln(Δ₀/Δt)`.
+    pub mutex_tau_ps: f64,
+    /// Coarse time-domain unit delay τ (ps), per §II-C.3.
+    pub tau_ps: f64,
+    /// Fine-delay resolution bits `e` (fine step = τ/2ᵉ).
+    pub fine_bits: u32,
+    /// Vernier TDC resolution (ps), per [14].
+    pub tdc_res_ps: f64,
+    /// Gaussian σ of PVT delay jitter as a fraction of nominal delay
+    /// (0.0 = nominal corner).
+    pub pvt_sigma: f64,
+    /// Synchronous clock-period margin over the worst-case stage delay
+    /// (PVT guard band + setup) — the tax the paper's Contradiction #1
+    /// identifies.
+    pub sync_margin: f64,
+    /// Clock skew + jitter allowance added to the period (ps).
+    pub clock_skew_ps: f64,
+    /// Bundled-data matched-delay margin (small: the matched line tracks
+    /// the datapath across PVT far better than a global clock).
+    pub bd_margin: f64,
+    /// Step of the multi-class Hamming race delay chain (ps per unit of
+    /// Hamming distance).
+    pub hamming_step_ps: f64,
+    /// Coarse unit delay τ of the *CoTM race unit* (ps). Smaller than the
+    /// generic τ: the CoTM rails traverse up to k_max segments per
+    /// classification, so short segments keep the race competitive with
+    /// the digital pipeline (§II-C.3's "short length" claim).
+    pub cotm_tau_ps: f64,
+    /// Single-rail DCDE segment length (ps per TDC code step). Decoupled
+    /// from the TDC resolution: `dc` indexes segments, it does not need
+    /// to reproduce the measured interval at full scale. Sized above the
+    /// Mutex metastability window's dwell spread so adjacent codes
+    /// arbitrate in order (a one-code gap may still tie — quantisation
+    /// the `ablation_fine_res` bench quantifies).
+    pub sr_step_ps: f64,
+}
+
+impl TechParams {
+    /// TSMC-65nm-class parameters at 1.2 V (digital baselines).
+    pub fn tsmc65_digital() -> TechParams {
+        TechParams {
+            voltage: 1.2,
+            vref: 1.2,
+            e_nand_fj: 1.0,
+            e_nor_fj: 1.1,
+            e_inv_fj: 0.6,
+            e_xor_fj: 2.2,
+            e_dff_fj: 4.0,
+            e_clktree_fj: 6.0,
+            e_delay_stage_fj: 0.08,
+            e_mem_bit_fj: 0.12,
+            leak_nw_per_ge: 0.5,
+            d_nand_ps: 25.0,
+            d_nor_ps: 30.0,
+            d_inv_ps: 15.0,
+            d_xor_ps: 45.0,
+            d_dff_ps: 80.0,
+            mutex_tau_ps: 12.0,
+            tau_ps: 100.0,
+            fine_bits: 4,
+            tdc_res_ps: 5.0,
+            pvt_sigma: 0.0,
+            sync_margin: 0.45,
+            clock_skew_ps: 60.0,
+            bd_margin: 0.08,
+            hamming_step_ps: 20.0,
+            cotm_tau_ps: 40.0,
+            sr_step_ps: 12.0,
+        }
+    }
+
+    /// Tech corner for the CoTM race unit: identical except the coarse
+    /// unit delay τ is the short `cotm_tau_ps` segment.
+    pub fn cotm_race_corner(&self) -> TechParams {
+        TechParams { tau_ps: self.cotm_tau_ps, ..self.clone() }
+    }
+
+    /// The proposed designs run at 1.0 V (paper Table III).
+    pub fn tsmc65_proposed() -> TechParams {
+        TechParams { voltage: 1.0, ..Self::tsmc65_digital() }
+    }
+
+    /// Voltage-scaling factor for energy: (V/Vref)².
+    pub fn vscale(&self) -> f64 {
+        (self.voltage / self.vref).powi(2)
+    }
+
+    /// Delay scaling with voltage: first-order alpha-power model — lower
+    /// V means slower gates; at 65 nm, ~1.3× slower at 1.0 V vs 1.2 V.
+    pub fn dscale(&self) -> f64 {
+        // alpha-power with alpha≈1.3, Vth≈0.35 V:
+        // d ∝ V / (V - Vth)^1.3, normalised to vref.
+        let vth = 0.35;
+        let num = self.voltage / (self.voltage - vth).powf(1.3);
+        let den = self.vref / (self.vref - vth).powf(1.3);
+        num / den
+    }
+
+    /// Energy (fJ) of a given gate kind per output transition, at the
+    /// operating voltage.
+    pub fn gate_energy_fj(&self, kind: GateKind) -> f64 {
+        let base = match kind {
+            GateKind::Nand | GateKind::And => self.e_nand_fj,
+            GateKind::Nor | GateKind::Or => self.e_nor_fj,
+            GateKind::Inv | GateKind::Buf => self.e_inv_fj,
+            GateKind::Xor | GateKind::Xnor => self.e_xor_fj,
+            GateKind::Mux2 => 1.4 * self.e_nand_fj,
+            GateKind::Dff | GateKind::Tff => self.e_dff_fj,
+            GateKind::CElement => 2.0 * self.e_nand_fj,
+            GateKind::DelayStage => self.e_delay_stage_fj,
+        };
+        base * self.vscale()
+    }
+
+    /// Nominal propagation delay of a gate kind at the operating voltage.
+    pub fn gate_delay(&self, kind: GateKind) -> Time {
+        let ps = match kind {
+            GateKind::Nand | GateKind::And => self.d_nand_ps,
+            GateKind::Nor | GateKind::Or => self.d_nor_ps,
+            GateKind::Inv | GateKind::Buf => self.d_inv_ps,
+            GateKind::Xor | GateKind::Xnor => self.d_xor_ps,
+            GateKind::Mux2 => 1.5 * self.d_nand_ps,
+            GateKind::Dff | GateKind::Tff => self.d_dff_ps,
+            GateKind::CElement => 2.0 * self.d_nand_ps,
+            GateKind::DelayStage => self.tau_ps,
+        };
+        Time::from_ps_f64(ps * self.dscale())
+    }
+
+    /// Fine delay step τ/2ᵉ.
+    pub fn fine_step(&self) -> Time {
+        Time::from_ps_f64(self.tau_ps / (1u64 << self.fine_bits) as f64)
+    }
+
+    /// Coarse delay unit τ.
+    pub fn tau(&self) -> Time {
+        Time::from_ps_f64(self.tau_ps)
+    }
+}
+
+/// Gate families recognised by the energy model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GateKind {
+    Nand,
+    Nor,
+    And,
+    Or,
+    Inv,
+    Buf,
+    Xor,
+    Xnor,
+    Mux2,
+    Dff,
+    Tff,
+    CElement,
+    DelayStage,
+}
+
+/// Accumulates energy by category over a simulation run.
+/// Array-backed: `add` is on the per-transition hot path (§Perf).
+#[derive(Debug, Clone, Default)]
+pub struct EnergyLedger {
+    dynamic_fj: [f64; 9],
+    transitions: [u64; 9],
+    /// Total gate-equivalents of the instantiated design (for leakage).
+    pub gate_equivalents: f64,
+}
+
+impl EnergyLedger {
+    #[inline]
+    pub fn add(&mut self, kind: EnergyKind, fj: f64) {
+        let i = kind.index();
+        self.dynamic_fj[i] += fj;
+        self.transitions[i] += 1;
+    }
+
+    pub fn dynamic_fj(&self, kind: EnergyKind) -> f64 {
+        self.dynamic_fj[kind.index()]
+    }
+
+    pub fn transitions(&self, kind: EnergyKind) -> u64 {
+        self.transitions[kind.index()]
+    }
+
+    /// Total dynamic energy (fJ) across categories.
+    pub fn total_dynamic_fj(&self) -> f64 {
+        self.dynamic_fj.iter().sum()
+    }
+
+    /// Leakage energy (fJ) over a span at the given tech corner.
+    /// `P_leak = GE × leak_nw_per_ge × (V/Vref)` (leakage ~linear in V to
+    /// first order around the operating point).
+    pub fn leakage_fj(&self, tech: &TechParams, span: Time) -> f64 {
+        let p_nw = self.gate_equivalents * tech.leak_nw_per_ge * (tech.voltage / tech.vref);
+        // nW × s = nJ; convert to fJ (×1e6).
+        p_nw * span.as_secs_f64() * 1.0e6
+    }
+
+    /// Total energy including leakage over `span`.
+    pub fn total_fj(&self, tech: &TechParams, span: Time) -> f64 {
+        self.total_dynamic_fj() + self.leakage_fj(tech, span)
+    }
+
+    /// Merge another ledger into this one (used when aggregating stages).
+    pub fn merge(&mut self, other: &EnergyLedger) {
+        for i in 0..9 {
+            self.dynamic_fj[i] += other.dynamic_fj[i];
+            self.transitions[i] += other.transitions[i];
+        }
+        self.gate_equivalents += other.gate_equivalents;
+    }
+
+    /// Per-category breakdown, largest first.
+    pub fn breakdown(&self) -> Vec<(EnergyKind, f64)> {
+        let mut v: Vec<(EnergyKind, f64)> = EnergyKind::ALL
+            .iter()
+            .map(|&k| (k, self.dynamic_fj[k.index()]))
+            .filter(|(_, e)| *e > 0.0)
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn voltage_scaling_quadratic() {
+        let hi = TechParams::tsmc65_digital();
+        let lo = TechParams::tsmc65_proposed();
+        let r = lo.gate_energy_fj(GateKind::Nand) / hi.gate_energy_fj(GateKind::Nand);
+        assert!((r - (1.0f64 / 1.2).powi(2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lower_voltage_is_slower() {
+        let hi = TechParams::tsmc65_digital();
+        let lo = TechParams::tsmc65_proposed();
+        assert!(lo.gate_delay(GateKind::Nand) > hi.gate_delay(GateKind::Nand));
+    }
+
+    #[test]
+    fn delay_stage_is_weak_capacitance() {
+        // The paper's core premise: a delay-line event costs far less than
+        // a std-cell transition.
+        let t = TechParams::tsmc65_digital();
+        assert!(t.gate_energy_fj(GateKind::DelayStage) < 0.2 * t.gate_energy_fj(GateKind::Nand));
+    }
+
+    #[test]
+    fn fine_step_is_tau_over_2e() {
+        let t = TechParams::tsmc65_digital();
+        assert_eq!(t.fine_step(), Time::from_ps_f64(6.25));
+    }
+
+    #[test]
+    fn ledger_accumulates_and_merges() {
+        let mut a = EnergyLedger::default();
+        a.add(EnergyKind::Logic, 2.0);
+        a.add(EnergyKind::Logic, 3.0);
+        a.gate_equivalents = 10.0;
+        let mut b = EnergyLedger::default();
+        b.add(EnergyKind::Arbiter, 1.0);
+        b.gate_equivalents = 5.0;
+        a.merge(&b);
+        assert_eq!(a.dynamic_fj(EnergyKind::Logic), 5.0);
+        assert_eq!(a.dynamic_fj(EnergyKind::Arbiter), 1.0);
+        assert_eq!(a.transitions(EnergyKind::Logic), 2);
+        assert_eq!(a.gate_equivalents, 15.0);
+    }
+
+    #[test]
+    fn leakage_scales_with_time_and_gates() {
+        let t = TechParams::tsmc65_digital();
+        let mut l = EnergyLedger::default();
+        l.gate_equivalents = 1000.0;
+        let e1 = l.leakage_fj(&t, Time::ns(10));
+        let e2 = l.leakage_fj(&t, Time::ns(20));
+        assert!((e2 / e1 - 2.0).abs() < 1e-9);
+        // 1000 GE × 0.5 nW = 500 nW; over 10 ns = 5e-15 J = 5 fJ.
+        assert!((e1 - 5.0).abs() < 1e-9, "e1={e1}");
+    }
+}

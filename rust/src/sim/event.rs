@@ -1,0 +1,43 @@
+//! Simulation events and their deterministic ordering.
+
+use super::net::{Logic, NetId};
+use super::time::Time;
+
+/// A scheduled net transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    pub time: Time,
+    /// Monotonic sequence number: ties at equal `time` are resolved in
+    /// scheduling order, making every run bit-reproducible.
+    pub seq: u64,
+    pub net: NetId,
+    pub value: Logic,
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap; Circuit wraps events in `Reverse`.
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_by_time_then_seq() {
+        let a = Event { time: Time::ps(1), seq: 5, net: NetId(0), value: Logic::One };
+        let b = Event { time: Time::ps(2), seq: 1, net: NetId(0), value: Logic::One };
+        let c = Event { time: Time::ps(1), seq: 6, net: NetId(1), value: Logic::Zero };
+        assert!(a < b);
+        assert!(a < c);
+        assert!(c < b);
+    }
+}

@@ -1,0 +1,29 @@
+//! Discrete-event digital/time-domain circuit simulator.
+//!
+//! This is the substrate that replaces the paper's Cadence AMS testbench
+//! (DESIGN.md §Substitutions): femtosecond-resolution event queue,
+//! three-valued logic, component netlists, per-transition switching-energy
+//! accounting, and VCD waveform tracing.
+//!
+//! The simulator is deliberately *event-driven* in exactly the paper's
+//! sense: nothing is evaluated on a clock grid; a component runs only when
+//! one of its input nets transitions, and time advances to the next
+//! scheduled event. A synchronous design is simulated by instantiating an
+//! explicit [`gates::clock::ClockGen`](crate::gates) component — the clock
+//! is an ordinary signal, and its energy cost is an ordinary measured
+//! quantity, which is precisely the comparison the paper draws.
+
+pub mod circuit;
+pub mod component;
+pub mod energy;
+pub mod event;
+pub mod net;
+pub mod time;
+pub mod trace;
+
+pub use circuit::Circuit;
+pub use component::{Component, Ctx};
+pub use energy::{EnergyKind, EnergyLedger, TechParams};
+pub use event::Event;
+pub use net::{Logic, NetId};
+pub use time::Time;

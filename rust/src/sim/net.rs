@@ -1,0 +1,142 @@
+//! Nets (signals) and three-valued logic.
+
+use std::fmt;
+
+/// Three-valued logic: 0, 1, and X (uninitialised / unknown).
+///
+/// X models power-on state; any gate seeing an X input produces X unless
+/// the output is forced by a controlling value (e.g. a NAND with one
+/// input at 0 outputs 1 regardless of the other input), matching standard
+/// HDL semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Logic {
+    Zero,
+    One,
+    X,
+}
+
+impl Logic {
+    pub fn from_bool(b: bool) -> Logic {
+        if b {
+            Logic::One
+        } else {
+            Logic::Zero
+        }
+    }
+
+    /// `Some(bool)` for defined values, `None` for X.
+    pub fn as_bool(self) -> Option<bool> {
+        match self {
+            Logic::Zero => Some(false),
+            Logic::One => Some(true),
+            Logic::X => None,
+        }
+    }
+
+    pub fn is_defined(self) -> bool {
+        self != Logic::X
+    }
+
+    /// Logical NOT with X propagation.
+    pub fn not(self) -> Logic {
+        match self {
+            Logic::Zero => Logic::One,
+            Logic::One => Logic::Zero,
+            Logic::X => Logic::X,
+        }
+    }
+
+    /// AND with controlling-0 semantics.
+    pub fn and(self, rhs: Logic) -> Logic {
+        match (self, rhs) {
+            (Logic::Zero, _) | (_, Logic::Zero) => Logic::Zero,
+            (Logic::One, Logic::One) => Logic::One,
+            _ => Logic::X,
+        }
+    }
+
+    /// OR with controlling-1 semantics.
+    pub fn or(self, rhs: Logic) -> Logic {
+        match (self, rhs) {
+            (Logic::One, _) | (_, Logic::One) => Logic::One,
+            (Logic::Zero, Logic::Zero) => Logic::Zero,
+            _ => Logic::X,
+        }
+    }
+
+    /// XOR (X-propagating).
+    pub fn xor(self, rhs: Logic) -> Logic {
+        match (self.as_bool(), rhs.as_bool()) {
+            (Some(a), Some(b)) => Logic::from_bool(a ^ b),
+            _ => Logic::X,
+        }
+    }
+}
+
+impl fmt::Display for Logic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Logic::Zero => write!(f, "0"),
+            Logic::One => write!(f, "1"),
+            Logic::X => write!(f, "x"),
+        }
+    }
+}
+
+/// Handle to a net in a [`crate::sim::Circuit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NetId(pub u32);
+
+impl NetId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Net metadata held by the circuit (values live in a parallel vector for
+/// borrow-friendly access during component evaluation).
+#[derive(Debug, Clone)]
+pub struct NetInfo {
+    pub name: String,
+    /// (component index, input pin) pairs notified on a value change.
+    pub sinks: Vec<(usize, usize)>,
+    /// Whether transitions on this net are recorded by the VCD tracer.
+    pub traced: bool,
+    /// Number of value changes observed (activity factor, for reports).
+    pub transitions: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn not_truth_table() {
+        assert_eq!(Logic::Zero.not(), Logic::One);
+        assert_eq!(Logic::One.not(), Logic::Zero);
+        assert_eq!(Logic::X.not(), Logic::X);
+    }
+
+    #[test]
+    fn and_controlling_zero() {
+        assert_eq!(Logic::Zero.and(Logic::X), Logic::Zero);
+        assert_eq!(Logic::X.and(Logic::Zero), Logic::Zero);
+        assert_eq!(Logic::One.and(Logic::X), Logic::X);
+        assert_eq!(Logic::One.and(Logic::One), Logic::One);
+    }
+
+    #[test]
+    fn or_controlling_one() {
+        assert_eq!(Logic::One.or(Logic::X), Logic::One);
+        assert_eq!(Logic::X.or(Logic::One), Logic::One);
+        assert_eq!(Logic::Zero.or(Logic::X), Logic::X);
+        assert_eq!(Logic::Zero.or(Logic::Zero), Logic::Zero);
+    }
+
+    #[test]
+    fn xor_propagates_x() {
+        assert_eq!(Logic::One.xor(Logic::Zero), Logic::One);
+        assert_eq!(Logic::One.xor(Logic::One), Logic::Zero);
+        assert_eq!(Logic::One.xor(Logic::X), Logic::X);
+    }
+}

@@ -1,0 +1,131 @@
+//! Simulation time: femtosecond-resolution monotonic timestamps.
+//!
+//! Femtoseconds in a `u64` cover ~5.1 hours of simulated time — vastly
+//! more than any inference run — while resolving the Vernier TDC's
+//! sub-picosecond residues and the fine delay step τ/2ᵉ (6.25 ps at the
+//! default τ = 100 ps, e = 4) without rounding.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in (or span of) simulated time, in femtoseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Time(pub u64);
+
+impl Time {
+    pub const ZERO: Time = Time(0);
+
+    /// One femtosecond.
+    pub const FS: Time = Time(1);
+    /// One picosecond.
+    pub const PS: Time = Time(1_000);
+    /// One nanosecond.
+    pub const NS: Time = Time(1_000_000);
+    /// One microsecond.
+    pub const US: Time = Time(1_000_000_000);
+
+    pub fn fs(v: u64) -> Time {
+        Time(v)
+    }
+    pub fn ps(v: u64) -> Time {
+        Time(v * 1_000)
+    }
+    pub fn ns(v: u64) -> Time {
+        Time(v * 1_000_000)
+    }
+
+    /// Construct from a (possibly fractional) picosecond value, rounding
+    /// to the nearest femtosecond.
+    pub fn from_ps_f64(ps: f64) -> Time {
+        assert!(ps >= 0.0, "negative time: {ps} ps");
+        Time((ps * 1_000.0).round() as u64)
+    }
+
+    pub fn as_fs(self) -> u64 {
+        self.0
+    }
+    pub fn as_ps_f64(self) -> f64 {
+        self.0 as f64 / 1_000.0
+    }
+    pub fn as_ns_f64(self) -> f64 {
+        self.0 as f64 / 1_000_000.0
+    }
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 * 1e-15
+    }
+
+    /// Saturating difference (span from `earlier` to `self`).
+    pub fn since(self, earlier: Time) -> Time {
+        Time(self.0.saturating_sub(earlier.0))
+    }
+
+    /// Scale a span by a dimensionless factor (used for margins/jitter).
+    pub fn scale(self, factor: f64) -> Time {
+        assert!(factor >= 0.0, "negative scale: {factor}");
+        Time((self.0 as f64 * factor).round() as u64)
+    }
+}
+
+impl Add for Time {
+    type Output = Time;
+    fn add(self, rhs: Time) -> Time {
+        Time(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for Time {
+    fn add_assign(&mut self, rhs: Time) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for Time {
+    type Output = Time;
+    fn sub(self, rhs: Time) -> Time {
+        Time(self.0.checked_sub(rhs.0).expect("time underflow"))
+    }
+}
+
+impl fmt::Display for Time {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= Time::NS.0 {
+            write!(f, "{:.3}ns", self.as_ns_f64())
+        } else if self.0 >= Time::PS.0 {
+            write!(f, "{:.3}ps", self.as_ps_f64())
+        } else {
+            write!(f, "{}fs", self.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_conversions() {
+        assert_eq!(Time::ps(1).as_fs(), 1_000);
+        assert_eq!(Time::ns(2), Time::ps(2_000));
+        assert_eq!(Time::from_ps_f64(6.25).as_fs(), 6_250);
+    }
+
+    #[test]
+    fn arithmetic() {
+        assert_eq!(Time::ps(5) + Time::ps(7), Time::ps(12));
+        assert_eq!(Time::ps(7) - Time::ps(5), Time::ps(2));
+        assert_eq!(Time::ps(10).scale(1.5), Time::ps(15));
+        assert_eq!(Time::ps(3).since(Time::ps(10)), Time::ZERO);
+    }
+
+    #[test]
+    #[should_panic(expected = "time underflow")]
+    fn subtraction_underflow_panics() {
+        let _ = Time::ps(1) - Time::ps(2);
+    }
+
+    #[test]
+    fn display_picks_unit() {
+        assert_eq!(format!("{}", Time::ps(1500)), "1.500ns");
+        assert_eq!(format!("{}", Time::fs(500)), "500fs");
+    }
+}

@@ -1,0 +1,138 @@
+//! VCD (Value Change Dump) waveform tracing — regenerates the paper's
+//! Figs. 6–8 as standard waveform files viewable in GTKWave.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use super::net::{Logic, NetId};
+use super::time::Time;
+
+/// Records value changes for declared nets and serialises to VCD.
+#[derive(Debug, Clone, Default)]
+pub struct VcdTracer {
+    /// net -> (identifier code, name)
+    vars: BTreeMap<NetId, (String, String)>,
+    /// (time, net, value), in occurrence order.
+    changes: Vec<(Time, NetId, Logic)>,
+    next_code: u32,
+}
+
+impl VcdTracer {
+    pub fn new() -> VcdTracer {
+        VcdTracer::default()
+    }
+
+    /// Declare a net for tracing. Called by `Circuit::attach_tracer`.
+    pub fn declare(&mut self, net: NetId, name: &str) {
+        let code = Self::code_for(self.next_code);
+        self.next_code += 1;
+        self.vars.insert(net, (code, sanitise(name)));
+    }
+
+    /// VCD identifier codes: printable ASCII 33..=126, base-94.
+    fn code_for(mut n: u32) -> String {
+        let mut s = String::new();
+        loop {
+            s.push((33 + (n % 94)) as u8 as char);
+            n /= 94;
+            if n == 0 {
+                break;
+            }
+        }
+        s
+    }
+
+    /// Record a change (only for declared nets).
+    pub fn change(&mut self, at: Time, net: NetId, value: Logic) {
+        if self.vars.contains_key(&net) {
+            self.changes.push((at, net, value));
+        }
+    }
+
+    pub fn change_count(&self) -> usize {
+        self.changes.len()
+    }
+
+    /// Render the VCD document as a string (1 fs timescale).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("$date repro: event-driven DT-domain TM $end\n");
+        out.push_str("$version tsetlin-td simulator $end\n");
+        out.push_str("$timescale 1fs $end\n");
+        out.push_str("$scope module top $end\n");
+        for (code, name) in self.vars.values() {
+            out.push_str(&format!("$var wire 1 {code} {name} $end\n"));
+        }
+        out.push_str("$upscope $end\n$enddefinitions $end\n");
+        // Initial dump: everything X.
+        out.push_str("$dumpvars\n");
+        for (code, _) in self.vars.values() {
+            out.push_str(&format!("x{code}\n"));
+        }
+        out.push_str("$end\n");
+        let mut last_t: Option<Time> = None;
+        for (t, net, v) in &self.changes {
+            if last_t != Some(*t) {
+                out.push_str(&format!("#{}\n", t.as_fs()));
+                last_t = Some(*t);
+            }
+            let (code, _) = &self.vars[net];
+            out.push_str(&format!("{v}{code}\n"));
+        }
+        out
+    }
+
+    /// Write the VCD to a file.
+    pub fn write_to(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.render().as_bytes())
+    }
+}
+
+/// VCD identifiers may not contain whitespace; swap awkward chars.
+fn sanitise(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_whitespace() || c == '$' { '_' } else { c })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_unique_and_printable() {
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..500 {
+            let c = VcdTracer::code_for(i);
+            assert!(c.bytes().all(|b| (33..=126).contains(&b)));
+            assert!(seen.insert(c));
+        }
+    }
+
+    #[test]
+    fn renders_header_and_changes() {
+        let mut t = VcdTracer::new();
+        t.declare(NetId(0), "req in");
+        t.declare(NetId(1), "ack");
+        t.change(Time::ps(1), NetId(0), Logic::One);
+        t.change(Time::ps(1), NetId(1), Logic::Zero);
+        t.change(Time::ps(3), NetId(0), Logic::Zero);
+        let s = t.render();
+        assert!(s.contains("$timescale 1fs $end"));
+        assert!(s.contains("req_in"));
+        assert!(s.contains("#1000\n"));
+        assert!(s.contains("#3000\n"));
+        // two changes share one timestamp line
+        assert_eq!(s.matches("#1000").count(), 1);
+    }
+
+    #[test]
+    fn undeclared_nets_are_ignored() {
+        let mut t = VcdTracer::new();
+        t.declare(NetId(0), "a");
+        t.change(Time::ps(1), NetId(9), Logic::One);
+        assert_eq!(t.change_count(), 0);
+    }
+}

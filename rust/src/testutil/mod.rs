@@ -1,0 +1,179 @@
+//! Mini property-based testing framework (proptest is unavailable
+//! offline). Deterministic: every case derives from a seeded
+//! [`SplitMix64`] stream, and failures report the case index + seed so
+//! they can be replayed exactly.
+//!
+//! ```no_run
+//! # // no_run: doctest executables do not inherit the crate's
+//! # // xla_extension rpath and fail to load libstdc++ offline.
+//! use tsetlin_td::testutil::{prop, Gen};
+//! prop("reverse twice is identity", 100, |g| {
+//!     let xs = g.vec(0..20, |g| g.u64(0..1000));
+//!     let mut twice = xs.clone();
+//!     twice.reverse();
+//!     twice.reverse();
+//!     assert_eq!(xs, twice);
+//! });
+//! ```
+
+use crate::util::SplitMix64;
+
+/// Random-case generator handed to property bodies.
+pub struct Gen {
+    rng: SplitMix64,
+    /// Human-readable log of drawn values (printed on failure).
+    pub draws: Vec<String>,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen { rng: SplitMix64::new(seed), draws: Vec::new() }
+    }
+
+    fn note(&mut self, label: &str, v: impl std::fmt::Debug) {
+        if self.draws.len() < 64 {
+            self.draws.push(format!("{label}={v:?}"));
+        }
+    }
+
+    /// u64 in `[range.start, range.end)`.
+    pub fn u64(&mut self, range: std::ops::Range<u64>) -> u64 {
+        assert!(range.end > range.start);
+        let v = range.start + self.rng.next_below(range.end - range.start);
+        self.note("u64", v);
+        v
+    }
+
+    /// usize in `[range.start, range.end)`.
+    pub fn usize(&mut self, range: std::ops::Range<usize>) -> usize {
+        self.u64(range.start as u64..range.end as u64) as usize
+    }
+
+    /// i64 in `[range.start, range.end)`.
+    pub fn i64(&mut self, range: std::ops::Range<i64>) -> i64 {
+        assert!(range.end > range.start);
+        let span = (range.end - range.start) as u64;
+        let v = range.start + self.rng.next_below(span) as i64;
+        self.note("i64", v);
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.next_bool();
+        self.note("bool", v);
+        v
+    }
+
+    /// f64 in `[0, 1)`.
+    pub fn f64_unit(&mut self) -> f64 {
+        let v = self.rng.next_f64();
+        self.note("f64", v);
+        v
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// A vector with random length in `len` of generated elements.
+    pub fn vec<T>(
+        &mut self,
+        len: std::ops::Range<usize>,
+        mut f: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
+        let n = self.usize(len);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// A boolean vector of exactly `n` elements.
+    pub fn bools(&mut self, n: usize) -> Vec<bool> {
+        (0..n).map(|_| self.rng.next_bool()).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+}
+
+/// Run `cases` random cases of a property. Panics (with seed and draw
+/// log) on the first failing case.
+pub fn prop(name: &str, cases: u64, mut body: impl FnMut(&mut Gen)) {
+    prop_seeded(name, cases, 0x7E57_CA5E, &mut body)
+}
+
+/// Like [`prop`] with an explicit base seed (replay a failure by pasting
+/// the seed from the panic message).
+pub fn prop_seeded(name: &str, cases: u64, base_seed: u64, body: &mut impl FnMut(&mut Gen)) {
+    for case in 0..cases {
+        let seed = base_seed ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property {name:?} failed at case {case} (seed {seed:#x}):\n  {msg}\n  draws: [{}]",
+                g.draws.join(", ")
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        prop("addition commutes", 50, |g| {
+            let a = g.u64(0..1000);
+            let b = g.u64(0..1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn reports_failure_with_seed() {
+        let r = std::panic::catch_unwind(|| {
+            prop("always fails above 5", 100, |g| {
+                let x = g.u64(0..100);
+                assert!(x <= 5, "x={x}");
+            });
+        });
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>().unwrap());
+        assert!(msg.contains("seed"), "{msg}");
+        assert!(msg.contains("draws"), "{msg}");
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mut first: Vec<u64> = Vec::new();
+        prop_seeded("record", 5, 42, &mut |g| {
+            first.push(g.u64(0..1_000_000));
+        });
+        let mut second: Vec<u64> = Vec::new();
+        prop_seeded("record", 5, 42, &mut |g| {
+            second.push(g.u64(0..1_000_000));
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        prop("ranges", 200, |g| {
+            let u = g.u64(10..20);
+            assert!((10..20).contains(&u));
+            let i = g.i64(-5..5);
+            assert!((-5..5).contains(&i));
+            let v = g.vec(0..4, |g| g.bool());
+            assert!(v.len() < 4);
+            let f = g.f64_unit();
+            assert!((0.0..1.0).contains(&f));
+        });
+    }
+}

@@ -1,0 +1,160 @@
+//! Differential delay path (paper Fig. 4).
+//!
+//! Two rails — `raceS` (sign/negative contributions) and `raceM`
+//! (magnitude/positive contributions) — are launched by a common
+//! `raceDR` event and arrive after LOD-compressed delays
+//! `k·τ + f·τ/2ᵉ`. The arrival *interval* encodes the signed class sum.
+//!
+//! Each rail is a [`Dcde`] whose code (in fine units, τ/2ᵉ) is written at
+//! classification time by the digital front-end; the path structure —
+//! coarse segments `s^k, m^k` plus an e-bit fine vernier — is what the
+//! energy model charges for.
+
+use crate::gates::delay::{Dcde, DelayCode};
+use crate::sim::{Circuit, NetId, Time};
+use crate::timedomain::lod;
+
+/// One class's differential delay path: shared launch, two coded rails.
+pub struct DiffDelayPath {
+    /// Launch input (raceDR).
+    pub launch: NetId,
+    /// Sign-rail output (raceS).
+    pub race_s: NetId,
+    /// Magnitude-rail output (raceM).
+    pub race_m: NetId,
+    code_s: DelayCode,
+    code_m: DelayCode,
+    fine_bits: u32,
+}
+
+impl DiffDelayPath {
+    /// Instantiate the path in `c` with `c.tech`'s τ/e parameters.
+    pub fn build(c: &mut Circuit, name: &str, launch: NetId) -> DiffDelayPath {
+        let tech = c.tech.clone();
+        Self::build_with_tech(c, name, launch, &tech)
+    }
+
+    /// Instantiate with an explicit corner (the CoTM race unit passes its
+    /// short-segment `cotm_race_corner`).
+    pub fn build_with_tech(
+        c: &mut Circuit,
+        name: &str,
+        launch: NetId,
+        tech: &crate::sim::TechParams,
+    ) -> DiffDelayPath {
+        let tech = tech.clone();
+        let race_s = c.net(format!("{name}.raceS"));
+        let race_m = c.net(format!("{name}.raceM"));
+        let code_s: DelayCode = DelayCode::default();
+        let code_m: DelayCode = DelayCode::default();
+        let fine = tech.fine_step();
+        // Base delay: one coarse segment so even code 0 has a defined
+        // launch-to-arrival time (the s⁰/m⁰ segment in Fig. 4).
+        let base = tech.tau();
+        c.add(
+            Box::new(Dcde::new(
+                format!("{name}.dcde_s"),
+                launch,
+                race_s,
+                code_s.clone(),
+                base,
+                fine,
+                &tech,
+            )),
+            vec![launch],
+        );
+        c.add(
+            Box::new(Dcde::new(
+                format!("{name}.dcde_m"),
+                launch,
+                race_m,
+                code_m.clone(),
+                base,
+                fine,
+                &tech,
+            )),
+            vec![launch],
+        );
+        DiffDelayPath {
+            launch,
+            race_s,
+            race_m,
+            code_s,
+            code_m,
+            fine_bits: tech.fine_bits,
+        }
+    }
+
+    /// Program the rails from the digitally pre-computed S (negative
+    /// magnitude) and M (positive magnitude) sums, applying the LOD
+    /// compression (Algorithm 4).
+    pub fn program(&self, s_sum: u64, m_sum: u64) {
+        self.code_s.set(lod::lod_delay_units(s_sum, self.fine_bits));
+        self.code_m.set(lod::lod_delay_units(m_sum, self.fine_bits));
+    }
+
+    /// The rails' programmed delays (for assertions / analysis).
+    pub fn programmed_delays(&self, tech: &crate::sim::TechParams) -> (Time, Time) {
+        let fine = tech.fine_step().as_fs();
+        let base = tech.tau();
+        (
+            base + Time::fs(self.code_s.get() * fine),
+            base + Time::fs(self.code_m.get() * fine),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::energy::TechParams;
+    use crate::sim::Logic;
+
+    #[test]
+    fn rails_arrive_at_lod_delays() {
+        let t = TechParams::tsmc65_digital();
+        let mut c = Circuit::new(t.clone());
+        let launch = c.net_init("raceDR", Logic::Zero);
+        let p = DiffDelayPath::build(&mut c, "cls0", launch);
+        p.program(3, 10); // S=3: k=1,f=8 -> 24 units; M=10: k=3,f=4 -> 52
+        c.drive(launch, Logic::One, Time::ZERO);
+        let mut t_s = Time::ZERO;
+        let mut t_m = Time::ZERO;
+        // run and capture arrival times
+        loop {
+            let before_s = c.value(p.race_s);
+            let before_m = c.value(p.race_m);
+            if !c.run_while(Time::ns(100), |cc| {
+                (before_s != cc.value(p.race_s)) || (before_m != cc.value(p.race_m))
+            }).unwrap() {
+                break;
+            }
+            if c.value(p.race_s) == Logic::One && t_s == Time::ZERO {
+                t_s = c.now();
+            }
+            if c.value(p.race_m) == Logic::One && t_m == Time::ZERO {
+                t_m = c.now();
+            }
+            if t_s != Time::ZERO && t_m != Time::ZERO {
+                break;
+            }
+        }
+        // base 100 ps + units × 6.25 ps
+        assert_eq!(t_s, Time::from_ps_f64(100.0 + 24.0 * 6.25));
+        assert_eq!(t_m, Time::from_ps_f64(100.0 + 52.0 * 6.25));
+        // Interval encodes the sum difference direction: M > S ⇒ the M
+        // rail arrives later here (bigger delay = bigger magnitude).
+        assert!(t_m > t_s);
+    }
+
+    #[test]
+    fn equal_sums_arrive_together() {
+        let t = TechParams::tsmc65_digital();
+        let mut c = Circuit::new(t.clone());
+        let launch = c.net_init("raceDR", Logic::Zero);
+        let p = DiffDelayPath::build(&mut c, "cls", launch);
+        p.program(5, 5);
+        let (ds, dm) = p.programmed_delays(&t);
+        assert_eq!(ds, dm);
+    }
+}

@@ -1,0 +1,120 @@
+//! Hamming-distance time-domain encoding for the multi-class TM ([12],
+//! §II-C: "comparing Hamming distances among different classes, where
+//! contributions from ones in positive clauses and zeros in negative
+//! clauses are considered equivalent").
+//!
+//! The per-class score counts agreeing clause outputs; the race delay is
+//! *linear* in the distance `C − score`, so the class with the highest
+//! class sum launches the earliest pulse and the WTA argmax is **exact**
+//! (unlike the CoTM's LOD-compressed path, which is monotone but
+//! quantised — see `timedomain::lod`).
+
+use crate::sim::Time;
+
+/// Per-class agreement score from clause outputs with alternating
+/// polarity (+ even, − odd): ones in positive clauses plus zeros in
+/// negative clauses. Range `0..=C`.
+pub fn hamming_score(clause_outputs: &[bool]) -> u32 {
+    clause_outputs
+        .iter()
+        .enumerate()
+        .map(|(j, &out)| {
+            let positive = j % 2 == 0;
+            (out == positive) as u32
+        })
+        .sum()
+}
+
+/// Class sum (Eq. 1) recovered from the score. With C/2 clauses of each
+/// polarity: `score = pos_fired + (C/2 − neg_fired) = sum + C/2`, hence
+/// `sum = score − C/2`. Monotone in the score, so racing on scores is
+/// racing on sums.
+pub fn score_to_class_sum(score: u32, clauses: u32) -> i32 {
+    score as i32 - (clauses / 2) as i32
+}
+
+/// Race delay in unit steps: distance `C − score` (highest score ⇒
+/// shortest delay ⇒ first arrival at the WTA).
+pub fn hamming_delay_units(score: u32, clauses: u32) -> u32 {
+    debug_assert!(score <= clauses);
+    clauses - score
+}
+
+/// Race delay as simulated time with unit step `step`.
+pub fn hamming_delay(score: u32, clauses: u32, step: Time) -> Time {
+    step.scale(hamming_delay_units(score, clauses) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn score_counts_agreements() {
+        // pos fired, neg silent, pos silent, neg fired -> 1+1+0+0 = 2.
+        assert_eq!(hamming_score(&[true, false, false, true]), 2);
+        // all agree.
+        assert_eq!(hamming_score(&[true, false, true, false]), 4);
+        // all disagree.
+        assert_eq!(hamming_score(&[false, true, false, true]), 0);
+    }
+
+    #[test]
+    fn score_recovers_class_sum() {
+        let mut rng = crate::util::SplitMix64::new(5);
+        for _ in 0..200 {
+            let c = 12usize;
+            let outs: Vec<bool> = (0..c).map(|_| rng.next_bool()).collect();
+            let direct: i32 = outs
+                .iter()
+                .enumerate()
+                .map(|(j, &o)| if j % 2 == 0 { o as i32 } else { -(o as i32) })
+                .sum();
+            let score = hamming_score(&outs);
+            assert_eq!(score_to_class_sum(score, c as u32), direct);
+        }
+    }
+
+    #[test]
+    fn higher_sum_means_shorter_delay() {
+        let c = 12;
+        let step = Time::ps(50);
+        let mut last = Time::ps(10_000);
+        for score in 0..=c {
+            let d = hamming_delay(score, c, step);
+            assert!(d < last, "delay must strictly decrease with score");
+            last = d;
+        }
+        assert_eq!(hamming_delay(c, c, step), Time::ZERO);
+        assert_eq!(hamming_delay(0, c, step), Time::ps(600));
+    }
+
+    #[test]
+    fn argmax_exactness_over_random_outputs() {
+        // Racing on scores must agree with argmax of Eq. 1 sums.
+        let mut rng = crate::util::SplitMix64::new(77);
+        for _ in 0..500 {
+            let c = 12usize;
+            let k = 3usize;
+            let outs: Vec<Vec<bool>> = (0..k)
+                .map(|_| (0..c).map(|_| rng.next_bool()).collect())
+                .collect();
+            let sums: Vec<i32> = outs
+                .iter()
+                .map(|o| {
+                    o.iter()
+                        .enumerate()
+                        .map(|(j, &b)| if j % 2 == 0 { b as i32 } else { -(b as i32) })
+                        .sum()
+                })
+                .collect();
+            let scores: Vec<u32> = outs.iter().map(|o| hamming_score(o)).collect();
+            // argmax over sums == argmax over scores (incl. tie-break).
+            let am_sum = crate::tm::infer::predict_argmax(&sums);
+            let am_score = crate::tm::infer::predict_argmax(
+                &scores.iter().map(|&s| s as i32).collect::<Vec<_>>(),
+            );
+            assert_eq!(am_sum, am_score);
+        }
+    }
+}

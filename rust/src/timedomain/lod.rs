@@ -1,0 +1,157 @@
+//! Leading-ones-detector coarse/fine delay extraction (Algorithm 4).
+//!
+//! An N-bit class sum would need an O(2ᴺ)-stage linear delay line; the
+//! LOD compresses it to a coarse index `k = ⌊log₂ v⌋` (one delay segment
+//! per octave) plus an `e`-bit normalised fine remainder `f`, so the path
+//! grows *logarithmically* with the sum range while keeping τ/2ᵉ
+//! resolution inside each octave.
+//!
+//! The resulting delay `k·τ + f·τ/2ᵉ` is monotone non-decreasing in `v`
+//! (proved by the property test below) with one known collision: v = 0
+//! and v = 1 both map to zero delay — an inherent quantisation artefact
+//! of Algorithm 4 that the ablation bench (`ablation_fine_res`)
+//! quantifies.
+
+use crate::sim::Time;
+
+/// Coarse/fine delay code produced by the LOD.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LodCode {
+    /// Coarse index: position of the leading one (0 for v ∈ {0, 1}).
+    pub k: u32,
+    /// Fine remainder, normalised to `e` bits.
+    pub f: u32,
+}
+
+/// Algorithm 4: extract `(k, f)` from `sum_value` with `e` fine bits.
+pub fn lod_extract(sum_value: u64, e: u32) -> LodCode {
+    if sum_value == 0 {
+        return LodCode { k: 0, f: 0 };
+    }
+    let k = 63 - sum_value.leading_zeros(); // leading-one position
+    let mask = (1u64 << k) - 1;
+    let mut f = sum_value & mask;
+    if k >= e {
+        f >>= k - e;
+    } else {
+        f <<= e - k;
+    }
+    LodCode { k, f: f as u32 }
+}
+
+/// Total delay in *fine units* (τ/2ᵉ): `k·2ᵉ + f`. This is the DCDE code
+/// the differential path programs.
+pub fn lod_delay_units(sum_value: u64, e: u32) -> u64 {
+    let code = lod_extract(sum_value, e);
+    (code.k as u64) << e | code.f as u64
+}
+
+/// Total delay as simulated time: `k·τ + f·τ/2ᵉ`.
+pub fn lod_delay(sum_value: u64, e: u32, tau: Time) -> Time {
+    let units = lod_delay_units(sum_value, e);
+    Time::fs(units * tau.as_fs() / (1u64 << e))
+}
+
+/// Linear (no-LOD) delay in fine units — the ablation baseline showing
+/// the exponential path growth the LOD removes: `v · 2ᵉ` fine units
+/// (i.e. v coarse segments).
+pub fn linear_delay_units(sum_value: u64, e: u32) -> u64 {
+    sum_value << e
+}
+
+/// Number of delay-line *stages* the code traverses (hardware cost):
+/// LOD path has `k` coarse + e fine stages; linear path has `v` stages.
+pub fn lod_stage_count(sum_value: u64, e: u32) -> u64 {
+    lod_extract(sum_value, e).k as u64 + e as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algorithm4_worked_examples() {
+        // v=1: k=0, f=0.
+        assert_eq!(lod_extract(1, 4), LodCode { k: 0, f: 0 });
+        // v=2 (10b): k=1, remainder 0, f = 0 << (4-1) = 0.
+        assert_eq!(lod_extract(2, 4), LodCode { k: 1, f: 0 });
+        // v=3 (11b): k=1, remainder 1, f = 1 << 3 = 8.
+        assert_eq!(lod_extract(3, 4), LodCode { k: 1, f: 8 });
+        // v=77 (1001101b): k=6, remainder 13, k>e: f = 13 >> 2 = 3.
+        assert_eq!(lod_extract(77, 4), LodCode { k: 6, f: 3 });
+        // v=0: defined as (0,0).
+        assert_eq!(lod_extract(0, 4), LodCode { k: 0, f: 0 });
+    }
+
+    #[test]
+    fn delay_units_monotone_nondecreasing() {
+        for e in [2u32, 4, 6] {
+            let mut prev = 0u64;
+            for v in 0..=4096u64 {
+                let d = lod_delay_units(v, e);
+                assert!(
+                    d >= prev,
+                    "non-monotone at v={v}, e={e}: {d} < {prev}"
+                );
+                prev = d;
+            }
+        }
+    }
+
+    #[test]
+    fn only_zero_one_collide_for_large_e() {
+        // For e >= needed resolution, distinct octave members separate.
+        let e = 6;
+        let d1 = lod_delay_units(1, e);
+        let d0 = lod_delay_units(0, e);
+        assert_eq!(d0, d1, "v=0 and v=1 are the known collision");
+        for v in 1..200u64 {
+            let a = lod_delay_units(v, e);
+            let b = lod_delay_units(v + 1, e);
+            if a == b {
+                // collisions allowed only when quantisation truncates
+                // inside an octave with span > 2^e
+                let k = 63 - (v + 1).leading_zeros();
+                assert!(k > e, "unexpected collision at v={v} (k={k})");
+            }
+        }
+    }
+
+    #[test]
+    fn logarithmic_compression_vs_linear() {
+        // Paper's claim: exponential path space -> logarithmic.
+        let e = 4;
+        let lod_stages = lod_stage_count(1 << 12, e);
+        let linear_stages = 1u64 << 12;
+        assert!(lod_stages <= 16);
+        assert!(linear_stages / lod_stages > 200);
+    }
+
+    #[test]
+    fn delay_matches_units_times_fine_step() {
+        let tau = Time::ps(100);
+        let e = 4;
+        for v in [0u64, 1, 3, 7, 42, 100] {
+            let d = lod_delay(v, e, tau);
+            let units = lod_delay_units(v, e);
+            assert_eq!(d.as_fs(), units * tau.as_fs() / 16);
+        }
+    }
+
+    #[test]
+    fn fine_resolution_bounds_relative_error() {
+        // Within an octave, quantised delay error < one fine step of the
+        // octave's scale: |delay(v)/τ − log-ish(v)| bounded by 2^-e · 2.
+        let e = 4;
+        let tau = Time::ps(100);
+        for v in 2..500u64 {
+            let k = 63 - v.leading_zeros();
+            let exact = k as f64 + (v as f64 / (1u64 << k) as f64 - 1.0);
+            let got = lod_delay(v, e, tau).as_ps_f64() / 100.0;
+            assert!(
+                (got - exact).abs() <= 1.0 / (1 << e) as f64 + 1e-9,
+                "v={v}: got {got}, exact {exact}"
+            );
+        }
+    }
+}

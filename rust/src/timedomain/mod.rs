@@ -1,0 +1,23 @@
+//! Time-domain computing blocks (paper §II-C):
+//!
+//! * [`lod`] — leading-ones-detector coarse/fine delay compression
+//!   (Algorithm 4): exponential delay range → logarithmic path length.
+//! * [`hamming`] — the multi-class TM Hamming-distance delay encoding
+//!   ([12]): linear, exact-argmax delay mapping.
+//! * [`delay_path`] — the differential delay path of Fig. 4 (S/M rails).
+//! * [`vernier`] — Vernier time-to-digital converter ([14]) digitising
+//!   the rail interval into a compact delay code `dc`.
+//! * [`race`] — the race control unit tying the CoTM classification
+//!   together: LOD → differential paths → TDC → DCDE single-rail race.
+
+pub mod delay_path;
+pub mod hamming;
+pub mod lod;
+pub mod race;
+pub mod vernier;
+
+pub use delay_path::DiffDelayPath;
+pub use hamming::{hamming_delay_units, hamming_score};
+pub use lod::{lod_delay, lod_delay_units, lod_extract, LodCode};
+pub use race::CotmRaceUnit;
+pub use vernier::VernierTdc;

@@ -1,0 +1,238 @@
+//! Vernier time-to-digital converter ([14], §II-C.3).
+//!
+//! Digitises the arrival interval of the differential rails into the
+//! compact delay code `dc` that programs the single-rail DCDE:
+//!
+//! `dc = round((t_S − t_M + offset) / resolution)`, clamped at ≥ 0.
+//!
+//! A larger class sum (M ≫ S) makes the M rail arrive *later* relative
+//! to S, giving a smaller `dc` and therefore an earlier single-rail
+//! arrival at the WTA — first arrival = argmax.
+//!
+//! The `offset` covers the most negative interval (all-sign, no
+//! magnitude) so `dc` is always representable; it cancels across classes
+//! because every class's SR path shares it.
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use crate::gates::delay::DelayCode;
+use crate::sim::energy::{EnergyKind, GateKind};
+use crate::sim::{Component, Ctx, Logic, NetId, Time};
+
+/// Vernier TDC component. Pins: `[race_s, race_m]`. Writes `dc` into the
+/// shared [`DelayCode`] and raises `done` once both rails arrived;
+/// returns `done` to zero when both rails return to zero (four-phase).
+pub struct VernierTdc {
+    name: String,
+    race_s: NetId,
+    race_m: NetId,
+    done: NetId,
+    dc_out: DelayCode,
+    offset: Time,
+    resolution: Time,
+    /// Build-time code floor: the guaranteed minimum raw code given the
+    /// offset and the maximum rail delay; subtracted from every
+    /// conversion so the SR paths stay short (ordering is unaffected —
+    /// it is a common constant). The race controller computes it.
+    floor_code: u64,
+    max_code: u64,
+    t_s: Option<Time>,
+    t_m: Option<Time>,
+    e_sample_fj: f64,
+    e_stage_fj: f64,
+    decision_delay: Time,
+    /// Observability: last emitted code.
+    pub last_code: Rc<Cell<u64>>,
+    pub conversions: u64,
+}
+
+impl VernierTdc {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: impl Into<String>,
+        race_s: NetId,
+        race_m: NetId,
+        done: NetId,
+        dc_out: DelayCode,
+        offset: Time,
+        tech: &crate::sim::TechParams,
+    ) -> VernierTdc {
+        VernierTdc {
+            name: name.into(),
+            race_s,
+            race_m,
+            done,
+            dc_out,
+            offset,
+            resolution: Time::from_ps_f64(tech.tdc_res_ps),
+            floor_code: 0,
+            // Vernier chain length bound: code saturates (paper's "short
+            // length" claim relies on LOD compression keeping this small).
+            max_code: 4096,
+            t_s: None,
+            t_m: None,
+            e_sample_fj: 2.0 * tech.gate_energy_fj(GateKind::Dff),
+            e_stage_fj: 2.0 * tech.e_delay_stage_fj * tech.vscale(),
+            decision_delay: tech.gate_delay(GateKind::CElement),
+            last_code: Rc::new(Cell::new(0)),
+            conversions: 0,
+        }
+    }
+
+    /// Set the common floor code (see field docs).
+    pub fn with_floor_code(mut self, floor: u64) -> VernierTdc {
+        self.floor_code = floor;
+        self
+    }
+
+    fn convert(&mut self, ctx: &mut Ctx) {
+        let (ts, tm) = match (self.t_s, self.t_m) {
+            (Some(a), Some(b)) => (a, b),
+            _ => return,
+        };
+        // interval = t_S − t_M + offset (may clamp at zero).
+        let shifted = (ts + self.offset).since(tm);
+        let code = (shifted.as_fs() + self.resolution.as_fs() / 2)
+            / self.resolution.as_fs();
+        let code = code.saturating_sub(self.floor_code).min(self.max_code);
+        self.dc_out.set(code);
+        self.last_code.set(code);
+        self.conversions += 1;
+        // Energy: two sampling flops + the vernier stages consumed.
+        ctx.spend(EnergyKind::Tdc, self.e_sample_fj + self.e_stage_fj * code as f64);
+        ctx.schedule(self.done, Logic::One, self.decision_delay);
+    }
+}
+
+impl Component for VernierTdc {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn init(&mut self, ctx: &mut Ctx) {
+        ctx.schedule(self.done, Logic::Zero, Time::ZERO);
+    }
+
+    fn on_input(&mut self, pin: usize, ctx: &mut Ctx) {
+        let (net, slot) = if pin == 0 {
+            (self.race_s, 0)
+        } else {
+            (self.race_m, 1)
+        };
+        match ctx.get(net) {
+            Logic::One => {
+                let t = ctx.now;
+                let was_complete = self.t_s.is_some() && self.t_m.is_some();
+                if slot == 0 {
+                    self.t_s.get_or_insert(t);
+                } else {
+                    self.t_m.get_or_insert(t);
+                }
+                if !was_complete && self.t_s.is_some() && self.t_m.is_some() {
+                    self.convert(ctx);
+                }
+            }
+            Logic::Zero => {
+                // Four-phase RTZ: when both rails are back to zero the
+                // converter re-arms and drops `done`.
+                if slot == 0 {
+                    self.t_s = None;
+                } else {
+                    self.t_m = None;
+                }
+                if self.t_s.is_none() && self.t_m.is_none() {
+                    ctx.schedule_if_changed(self.done, Logic::Zero, self.decision_delay);
+                }
+            }
+            Logic::X => {}
+        }
+    }
+
+    fn gate_equivalents(&self) -> f64 {
+        // Two sampling flops + arbiter + ~32 vernier stage pairs.
+        30.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::energy::TechParams;
+    use crate::sim::Circuit;
+
+    fn fixture(offset_ps: u64) -> (Circuit, NetId, NetId, NetId, DelayCode) {
+        let t = TechParams::tsmc65_digital();
+        let mut c = Circuit::new(t.clone());
+        let rs = c.net_init("raceS", Logic::Zero);
+        let rm = c.net_init("raceM", Logic::Zero);
+        let done = c.net("done");
+        let dc: DelayCode = DelayCode::default();
+        let tdc = VernierTdc::new("tdc", rs, rm, done, dc.clone(), Time::ps(offset_ps), &t);
+        c.add(Box::new(tdc), vec![rs, rm]);
+        c.init_components();
+        c.run_to_quiescence().unwrap();
+        (c, rs, rm, done, dc)
+    }
+
+    #[test]
+    fn digitises_positive_interval() {
+        let (mut c, rs, rm, done, dc) = fixture(0);
+        // S arrives 100 ps after M -> dc = 100/5 = 20.
+        c.drive(rm, Logic::One, Time::ps(50));
+        c.drive(rs, Logic::One, Time::ps(150));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(dc.get(), 20);
+        assert_eq!(c.value(done), Logic::One);
+    }
+
+    #[test]
+    fn clamps_negative_interval_to_zero() {
+        let (mut c, rs, rm, _done, dc) = fixture(0);
+        // M arrives after S and no offset -> clamped to 0.
+        c.drive(rs, Logic::One, Time::ps(50));
+        c.drive(rm, Logic::One, Time::ps(500));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(dc.get(), 0);
+    }
+
+    #[test]
+    fn offset_shifts_code() {
+        let (mut c, rs, rm, _done, dc) = fixture(200);
+        // t_S − t_M = −100 ps; +200 offset = 100 ps -> 20 ticks.
+        c.drive(rs, Logic::One, Time::ps(50));
+        c.drive(rm, Logic::One, Time::ps(150));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(dc.get(), 20);
+    }
+
+    #[test]
+    fn rtz_rearms_for_next_conversion() {
+        let (mut c, rs, rm, done, dc) = fixture(0);
+        c.drive(rm, Logic::One, Time::ps(10));
+        c.drive(rs, Logic::One, Time::ps(60));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(dc.get(), 10);
+        // Return to zero.
+        c.drive(rs, Logic::Zero, Time::ps(10));
+        c.drive(rm, Logic::Zero, Time::ps(12));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(c.value(done), Logic::Zero);
+        // Second conversion with a different interval.
+        c.drive(rm, Logic::One, Time::ps(10));
+        c.drive(rs, Logic::One, Time::ps(35));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(dc.get(), 5);
+        assert_eq!(c.value(done), Logic::One);
+    }
+
+    #[test]
+    fn quantisation_rounds_to_nearest() {
+        let (mut c, rs, rm, _done, dc) = fixture(0);
+        // 13 ps at 5 ps resolution -> round(2.6) = 3.
+        c.drive(rm, Logic::One, Time::ps(10));
+        c.drive(rs, Logic::One, Time::ps(23));
+        c.run_to_quiescence().unwrap();
+        assert_eq!(dc.get(), 3);
+    }
+}

@@ -1,0 +1,126 @@
+//! Feature booleanisation: thermometer (cumulative threshold) encoding.
+//!
+//! The paper's Iris configuration uses 16 boolean features for the 4 raw
+//! measurements — i.e. 4 quantile thresholds per feature, exactly what a
+//! fitted [`Booleanizer`] with `bits = 4` produces.
+
+use crate::error::{Error, Result};
+
+/// Thermometer encoder: per raw feature, `bits` thresholds chosen at
+/// training-set quantiles; bit b = (x >= threshold_b).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Booleanizer {
+    /// `[feature][bit]` thresholds, ascending.
+    pub thresholds: Vec<Vec<f32>>,
+}
+
+impl Booleanizer {
+    /// Fit thresholds at evenly spaced quantiles of each raw feature.
+    pub fn fit(raw: &[Vec<f32>], bits: usize) -> Result<Booleanizer> {
+        if raw.is_empty() {
+            return Err(Error::model("cannot fit booleanizer on empty data"));
+        }
+        let dims = raw[0].len();
+        if raw.iter().any(|r| r.len() != dims) {
+            return Err(Error::model("ragged raw feature rows"));
+        }
+        let n = raw.len();
+        let mut thresholds = Vec::with_capacity(dims);
+        for d in 0..dims {
+            let mut col: Vec<f32> = raw.iter().map(|r| r[d]).collect();
+            col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut ts = Vec::with_capacity(bits);
+            for b in 0..bits {
+                // Quantiles at (b+1)/(bits+1): e.g. bits=4 -> 20/40/60/80%.
+                let q = (b + 1) as f64 / (bits + 1) as f64;
+                let idx = ((n - 1) as f64 * q).round() as usize;
+                ts.push(col[idx]);
+            }
+            thresholds.push(ts);
+        }
+        Ok(Booleanizer { thresholds })
+    }
+
+    /// Number of boolean output features (dims × bits).
+    pub fn output_features(&self) -> usize {
+        self.thresholds.iter().map(|t| t.len()).sum()
+    }
+
+    /// Encode one raw sample.
+    pub fn encode(&self, raw: &[f32]) -> Result<Vec<bool>> {
+        if raw.len() != self.thresholds.len() {
+            return Err(Error::model(format!(
+                "raw dims {} != fitted dims {}",
+                raw.len(),
+                self.thresholds.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(self.output_features());
+        for (x, ts) in raw.iter().zip(&self.thresholds) {
+            for t in ts {
+                out.push(x >= t);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Encode a batch.
+    pub fn encode_all(&self, raw: &[Vec<f32>]) -> Result<Vec<Vec<bool>>> {
+        raw.iter().map(|r| self.encode(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thermometer_is_monotone() {
+        let raw: Vec<Vec<f32>> = (0..100).map(|i| vec![i as f32]).collect();
+        let b = Booleanizer::fit(&raw, 4).unwrap();
+        let low = b.encode(&[0.0]).unwrap();
+        let mid = b.encode(&[50.0]).unwrap();
+        let high = b.encode(&[99.0]).unwrap();
+        let ones = |v: &[bool]| v.iter().filter(|&&x| x).count();
+        assert!(ones(&low) <= ones(&mid) && ones(&mid) <= ones(&high));
+        assert_eq!(ones(&high), 4);
+        assert_eq!(ones(&low), 0);
+        // Thermometer property: ones are a prefix-of-threshold pattern
+        // (no 1 after a 0 within one feature's bits).
+        for v in [low, mid, high] {
+            let mut seen_zero = false;
+            for &bit in &v {
+                if seen_zero {
+                    assert!(!bit, "non-contiguous thermometer code");
+                }
+                if !bit {
+                    seen_zero = true;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn iris_shape_matches_paper() {
+        let raw: Vec<Vec<f32>> = crate::tm::iris_data::IRIS_FEATURES
+            .iter()
+            .map(|r| r.to_vec())
+            .collect();
+        let b = Booleanizer::fit(&raw, 4).unwrap();
+        assert_eq!(b.output_features(), 16); // the paper's 16 features
+        let enc = b.encode(&raw[0]).unwrap();
+        assert_eq!(enc.len(), 16);
+    }
+
+    #[test]
+    fn rejects_dim_mismatch() {
+        let raw = vec![vec![1.0, 2.0]];
+        let b = Booleanizer::fit(&raw, 2).unwrap();
+        assert!(b.encode(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_fit() {
+        assert!(Booleanizer::fit(&[], 4).is_err());
+    }
+}

@@ -1,0 +1,265 @@
+//! Coalesced Tsetlin Machine training (Glimsdal & Granmo 2021 [10]).
+//!
+//! One shared clause pool; each (class, clause) pair has a signed integer
+//! weight. Per sample, the target class receives a positive update and a
+//! sampled other class a negative update:
+//!
+//! * positive update, clause fires: `w += 1` and Type I feedback;
+//!   clause silent: Type I forget;
+//! * negative update, clause fires: `w -= 1` and Type II feedback.
+//!
+//! Weights saturate at ±`max_weight` (the hardware's weight register
+//! width; the paper's binary multiplication matrix selects these).
+
+use super::data::Dataset;
+use super::model::{make_literals, CoTmModel, TmParams};
+use crate::error::Result;
+use crate::util::SplitMix64;
+
+/// CoTM trainer: shared TA pool + weight matrix.
+pub struct CoTmTrainer {
+    pub params: TmParams,
+    /// `[clause][literal]` TA states in `1..=2N` (shared pool).
+    states: Vec<Vec<u32>>,
+    /// `[class][clause]` signed weights.
+    weights: Vec<Vec<i32>>,
+    rng: SplitMix64,
+}
+
+impl CoTmTrainer {
+    pub fn new(params: TmParams, seed: u64) -> Result<CoTmTrainer> {
+        params.validate()?;
+        let mut rng = SplitMix64::new(seed);
+        let n = params.ta_states;
+        let states = (0..params.clauses)
+            .map(|_| {
+                (0..params.literals())
+                    .map(|_| if rng.next_bool() { n } else { n + 1 })
+                    .collect()
+            })
+            .collect();
+        // Weights start at ±1 alternating per class to break symmetry.
+        let weights = (0..params.classes)
+            .map(|k| {
+                (0..params.clauses)
+                    .map(|j| if (j + k) % 2 == 0 { 1 } else { -1 })
+                    .collect()
+            })
+            .collect();
+        Ok(CoTmTrainer { params, states, weights, rng })
+    }
+
+    fn clause_fires(states: &[u32], lits: &[bool], n: u32) -> bool {
+        states.iter().zip(lits).all(|(&st, &lit)| st <= n || lit)
+    }
+
+    fn clause_outputs(&self, lits: &[bool]) -> Vec<bool> {
+        let n = self.params.ta_states;
+        self.states
+            .iter()
+            .map(|cl| Self::clause_fires(cl, lits, n))
+            .collect()
+    }
+
+    fn class_sum(&self, class: usize, outputs: &[bool]) -> i32 {
+        self.weights[class]
+            .iter()
+            .zip(outputs)
+            .map(|(&w, &c)| if c { w } else { 0 })
+            .sum()
+    }
+
+    fn type_i(&mut self, clause: usize, lits: &[bool], fired: bool) {
+        let n = self.params.ta_states;
+        let s = self.params.specificity;
+        let p_forget = 1.0 / s;
+        let p_reinforce = (s - 1.0) / s;
+        for (l, &lit) in lits.iter().enumerate() {
+            let st = self.states[clause][l];
+            if fired && lit {
+                if self.rng.chance(p_reinforce) && st < 2 * n {
+                    self.states[clause][l] = st + 1;
+                }
+            } else if self.rng.chance(p_forget) && st > 1 {
+                self.states[clause][l] = st - 1;
+            }
+        }
+    }
+
+    fn type_ii(&mut self, clause: usize, lits: &[bool]) {
+        let n = self.params.ta_states;
+        for (l, &lit) in lits.iter().enumerate() {
+            let st = self.states[clause][l];
+            if !lit && st <= n {
+                self.states[clause][l] = st + 1;
+            }
+        }
+    }
+
+    fn update_class(&mut self, class: usize, lits: &[bool], positive: bool) {
+        let t = self.params.threshold;
+        let outputs = self.clause_outputs(lits);
+        let sum = self.class_sum(class, &outputs).clamp(-t, t);
+        let p_update = if positive {
+            (t - sum) as f64 / (2 * t) as f64
+        } else {
+            (t + sum) as f64 / (2 * t) as f64
+        };
+        let wmax = self.params.max_weight;
+        for j in 0..self.params.clauses {
+            if !self.rng.chance(p_update) {
+                continue;
+            }
+            let fired = outputs[j];
+            let w = self.weights[class][j]; // pre-update sign decides role
+            if positive {
+                if fired {
+                    // Clause fired on a sample of this class.
+                    self.weights[class][j] = (w + 1).min(wmax);
+                    if w >= 0 {
+                        // Supporting clause recognised correctly: Type Ia.
+                        self.type_i(j, lits, true);
+                    } else {
+                        // Opposing clause fired wrongly: Type II blocks it.
+                        self.type_ii(j, lits);
+                    }
+                } else if w >= 0 {
+                    // Supporting clause stayed silent: Type Ib forget.
+                    self.type_i(j, lits, false);
+                }
+            } else if fired {
+                // Clause fired on a sample NOT of this class.
+                self.weights[class][j] = (w - 1).max(-wmax);
+                if w > 0 {
+                    // Supporting clause fired wrongly: Type II blocks it.
+                    self.type_ii(j, lits);
+                } else {
+                    // Opposing clause recognised correctly: Type Ia
+                    // (reinforce the opposition pattern).
+                    self.type_i(j, lits, true);
+                }
+            } else if w < 0 {
+                // Opposing clause silent on a negative sample: forget.
+                self.type_i(j, lits, false);
+            }
+        }
+    }
+
+    pub fn epoch(&mut self, data: &Dataset) {
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        self.rng.shuffle(&mut order);
+        for i in order {
+            let lits = make_literals(&data.features[i]);
+            let y = data.labels[i];
+            self.update_class(y, &lits, true);
+            if self.params.classes > 1 {
+                let mut neg = self.rng.index(self.params.classes - 1);
+                if neg >= y {
+                    neg += 1;
+                }
+                self.update_class(neg, &lits, false);
+            }
+        }
+    }
+
+    pub fn train(&mut self, data: &Dataset, epochs: usize) -> CoTmModel {
+        for _ in 0..epochs {
+            self.epoch(data);
+        }
+        self.export()
+    }
+
+    pub fn export(&self) -> CoTmModel {
+        let n = self.params.ta_states;
+        let mut model = CoTmModel::zeroed(self.params.clone());
+        for (j, cl) in self.states.iter().enumerate() {
+            for (l, &st) in cl.iter().enumerate() {
+                model.clauses[j].include[l] = st > n;
+            }
+        }
+        model.weights = self.weights.clone();
+        model
+    }
+}
+
+/// Convenience: train a CoTM on a dataset.
+pub fn train_cotm(
+    params: TmParams,
+    data: &Dataset,
+    epochs: usize,
+    seed: u64,
+) -> Result<CoTmModel> {
+    let mut tr = CoTmTrainer::new(params, seed)?;
+    Ok(tr.train(data, epochs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::data;
+    use crate::tm::infer::cotm_accuracy;
+
+    #[test]
+    fn learns_blobs() {
+        let d = data::prototype_blobs(300, 10, 3, 0.05, 21);
+        let p = TmParams {
+            features: 10,
+            clauses: 12,
+            classes: 3,
+            ta_states: 64,
+            threshold: 6,
+            specificity: 3.0,
+            max_weight: 7,
+        };
+        let m = train_cotm(p, &d, 30, 2).unwrap();
+        let acc = cotm_accuracy(&m, &d.features, &d.labels);
+        assert!(acc > 0.9, "blobs accuracy {acc}");
+    }
+
+    #[test]
+    fn learns_iris_to_paper_grade() {
+        let d = data::iris().unwrap();
+        let (train, test) = d.split(0.8, 42);
+        let m = train_cotm(TmParams::iris_paper(), &train, 150, 3).unwrap();
+        let acc = cotm_accuracy(&m, &test.features, &test.labels);
+        assert!(acc >= 0.85, "iris CoTM test accuracy {acc}");
+    }
+
+    #[test]
+    fn weights_respect_saturation() {
+        let d = data::prototype_blobs(200, 8, 2, 0.05, 31);
+        let p = TmParams {
+            features: 8,
+            clauses: 6,
+            classes: 2,
+            ta_states: 32,
+            threshold: 5,
+            specificity: 3.0,
+            max_weight: 3,
+        };
+        let m = train_cotm(p, &d, 20, 5).unwrap();
+        assert!(m.validate().is_ok());
+        assert!(m
+            .weights
+            .iter()
+            .flatten()
+            .all(|w| w.abs() <= 3));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let d = data::xor_noise(150, 4, 0.0, 8);
+        let p = TmParams {
+            features: 4,
+            clauses: 8,
+            classes: 2,
+            ta_states: 32,
+            threshold: 4,
+            specificity: 3.0,
+            max_weight: 7,
+        };
+        let a = train_cotm(p.clone(), &d, 10, 17).unwrap();
+        let b = train_cotm(p, &d, 10, 17).unwrap();
+        assert_eq!(a, b);
+    }
+}

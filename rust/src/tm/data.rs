@@ -1,0 +1,210 @@
+//! Datasets: the embedded Fisher Iris set (the paper's benchmark) and
+//! synthetic generators for training/robustness studies.
+
+use super::booleanize::Booleanizer;
+use super::iris_data::{IRIS_FEATURES, IRIS_LABELS};
+use crate::error::Result;
+use crate::util::SplitMix64;
+
+/// A booleanised classification dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub features: Vec<Vec<bool>>,
+    pub labels: Vec<usize>,
+    pub classes: usize,
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.features.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.features.is_empty()
+    }
+
+    pub fn num_features(&self) -> usize {
+        self.features.first().map_or(0, |f| f.len())
+    }
+
+    /// Deterministic stratified train/test split.
+    pub fn split(&self, train_fraction: f64, seed: u64) -> (Dataset, Dataset) {
+        let mut rng = SplitMix64::new(seed);
+        let mut train_idx = Vec::new();
+        let mut test_idx = Vec::new();
+        for class in 0..self.classes {
+            let mut idx: Vec<usize> = (0..self.len())
+                .filter(|&i| self.labels[i] == class)
+                .collect();
+            rng.shuffle(&mut idx);
+            let n_train = ((idx.len() as f64) * train_fraction).round() as usize;
+            train_idx.extend_from_slice(&idx[..n_train]);
+            test_idx.extend_from_slice(&idx[n_train..]);
+        }
+        rng.shuffle(&mut train_idx);
+        rng.shuffle(&mut test_idx);
+        (self.subset(&train_idx, "train"), self.subset(&test_idx, "test"))
+    }
+
+    fn subset(&self, idx: &[usize], suffix: &str) -> Dataset {
+        Dataset {
+            features: idx.iter().map(|&i| self.features[i].clone()).collect(),
+            labels: idx.iter().map(|&i| self.labels[i]).collect(),
+            classes: self.classes,
+            name: format!("{}-{}", self.name, suffix),
+        }
+    }
+
+    /// Features as a row-major f32 matrix (for the PJRT golden model).
+    pub fn features_f32(&self) -> Vec<f32> {
+        self.features
+            .iter()
+            .flat_map(|row| row.iter().map(|&b| if b { 1.0 } else { 0.0 }))
+            .collect()
+    }
+}
+
+/// The paper's benchmark: Iris booleanised to 16 features
+/// (4 thermometer bits × 4 raw measurements), 3 classes.
+pub fn iris() -> Result<Dataset> {
+    let raw: Vec<Vec<f32>> = IRIS_FEATURES.iter().map(|r| r.to_vec()).collect();
+    let booleanizer = Booleanizer::fit(&raw, 4)?;
+    Ok(Dataset {
+        features: booleanizer.encode_all(&raw)?,
+        labels: IRIS_LABELS.iter().map(|&l| l as usize).collect(),
+        classes: 3,
+        name: "iris".into(),
+    })
+}
+
+/// The fitted Iris booleanizer (needed to encode new raw samples when
+/// serving).
+pub fn iris_booleanizer() -> Result<Booleanizer> {
+    let raw: Vec<Vec<f32>> = IRIS_FEATURES.iter().map(|r| r.to_vec()).collect();
+    Booleanizer::fit(&raw, 4)
+}
+
+/// Noisy-XOR: label = x0 XOR x1 over `features` booleans (the rest are
+/// distractors), with `noise` label-flip probability. The classic TM
+/// sanity task.
+pub fn xor_noise(n: usize, features: usize, noise: f64, seed: u64) -> Dataset {
+    assert!(features >= 2);
+    let mut rng = SplitMix64::new(seed);
+    let mut xs = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let row: Vec<bool> = (0..features).map(|_| rng.next_bool()).collect();
+        let mut label = (row[0] ^ row[1]) as usize;
+        if rng.chance(noise) {
+            label = 1 - label;
+        }
+        xs.push(row);
+        ys.push(label);
+    }
+    Dataset { features: xs, labels: ys, classes: 2, name: "xor-noise".into() }
+}
+
+/// Prototype blobs: `classes` random boolean prototypes over `features`
+/// bits; each sample is its class prototype with per-bit flip probability
+/// `flip`. Controls class separation for scaling studies.
+pub fn prototype_blobs(
+    n: usize,
+    features: usize,
+    classes: usize,
+    flip: f64,
+    seed: u64,
+) -> Dataset {
+    let mut rng = SplitMix64::new(seed);
+    let protos: Vec<Vec<bool>> = (0..classes)
+        .map(|_| (0..features).map(|_| rng.next_bool()).collect())
+        .collect();
+    let mut xs = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % classes;
+        let row: Vec<bool> = protos[class]
+            .iter()
+            .map(|&b| if rng.chance(flip) { !b } else { b })
+            .collect();
+        xs.push(row);
+        ys.push(class);
+    }
+    Dataset { features: xs, labels: ys, classes, name: "blobs".into() }
+}
+
+/// k-bit parity over the first `k` of `features` bits — the hard case for
+/// clause-based learners; used by robustness tests.
+pub fn parity(n: usize, features: usize, k: usize, seed: u64) -> Dataset {
+    assert!(k <= features);
+    let mut rng = SplitMix64::new(seed);
+    let mut xs = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let row: Vec<bool> = (0..features).map(|_| rng.next_bool()).collect();
+        let label = row[..k].iter().filter(|&&b| b).count() % 2;
+        xs.push(row);
+        ys.push(label);
+    }
+    Dataset { features: xs, labels: ys, classes: 2, name: "parity".into() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iris_shape() {
+        let d = iris().unwrap();
+        assert_eq!(d.len(), 150);
+        assert_eq!(d.num_features(), 16);
+        assert_eq!(d.classes, 3);
+        // Balanced classes.
+        for c in 0..3 {
+            assert_eq!(d.labels.iter().filter(|&&l| l == c).count(), 50);
+        }
+    }
+
+    #[test]
+    fn split_is_stratified_and_disjoint() {
+        let d = iris().unwrap();
+        let (tr, te) = d.split(0.8, 42);
+        assert_eq!(tr.len() + te.len(), 150);
+        for c in 0..3 {
+            assert_eq!(tr.labels.iter().filter(|&&l| l == c).count(), 40);
+            assert_eq!(te.labels.iter().filter(|&&l| l == c).count(), 10);
+        }
+    }
+
+    #[test]
+    fn split_deterministic() {
+        let d = iris().unwrap();
+        let (a, _) = d.split(0.8, 7);
+        let (b, _) = d.split(0.8, 7);
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn xor_labels_consistent_at_zero_noise() {
+        let d = xor_noise(200, 6, 0.0, 3);
+        for (x, &y) in d.features.iter().zip(&d.labels) {
+            assert_eq!((x[0] ^ x[1]) as usize, y);
+        }
+    }
+
+    #[test]
+    fn blobs_low_flip_are_separable() {
+        let d = prototype_blobs(90, 12, 3, 0.02, 5);
+        assert_eq!(d.classes, 3);
+        assert_eq!(d.len(), 90);
+    }
+
+    #[test]
+    fn features_f32_is_row_major() {
+        let d = xor_noise(3, 4, 0.0, 1);
+        let m = d.features_f32();
+        assert_eq!(m.len(), 12);
+        assert_eq!(m[5] == 1.0, d.features[1][1]);
+    }
+}

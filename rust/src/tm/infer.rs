@@ -1,0 +1,159 @@
+//! Software (bit-exact) TM inference — the L3-local golden reference.
+
+use super::model::{make_literals, CoTmModel, MultiClassTmModel};
+
+/// Multi-class TM class sums for one sample (Eq. 1).
+pub fn multiclass_class_sums(model: &MultiClassTmModel, features: &[bool]) -> Vec<i32> {
+    let lits = make_literals(features);
+    model
+        .clauses
+        .iter()
+        .map(|class| {
+            class
+                .iter()
+                .enumerate()
+                .map(|(j, cl)| {
+                    let out = cl.evaluate(&lits) as i32;
+                    if j % 2 == 0 {
+                        out
+                    } else {
+                        -out
+                    }
+                })
+                .sum()
+        })
+        .collect()
+}
+
+/// CoTM class sums for one sample (Eq. 2).
+pub fn cotm_class_sums(model: &CoTmModel, features: &[bool]) -> Vec<i32> {
+    let lits = make_literals(features);
+    let clause_out: Vec<i32> = model
+        .clauses
+        .iter()
+        .map(|cl| cl.evaluate(&lits) as i32)
+        .collect();
+    model
+        .weights
+        .iter()
+        .map(|row| row.iter().zip(&clause_out).map(|(w, c)| w * c).sum())
+        .collect()
+}
+
+/// CoTM clause outputs alone (used by the hybrid architecture whose
+/// digital stage computes clauses and whose time-domain stage ranks sums).
+pub fn cotm_clause_outputs(model: &CoTmModel, features: &[bool]) -> Vec<bool> {
+    let lits = make_literals(features);
+    model.clauses.iter().map(|cl| cl.evaluate(&lits)).collect()
+}
+
+/// Multi-class TM clause outputs, `[class][clause]`.
+pub fn multiclass_clause_outputs(
+    model: &MultiClassTmModel,
+    features: &[bool],
+) -> Vec<Vec<bool>> {
+    let lits = make_literals(features);
+    model
+        .clauses
+        .iter()
+        .map(|class| class.iter().map(|cl| cl.evaluate(&lits)).collect())
+        .collect()
+}
+
+/// argmax with lowest-index tie-break — matches the WTA grant rule (the
+/// deterministic model tie) and `jnp.argmax`.
+pub fn predict_argmax(sums: &[i32]) -> usize {
+    let mut best = 0usize;
+    for (i, &s) in sums.iter().enumerate().skip(1) {
+        if s > sums[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Batch accuracy of a multi-class TM.
+pub fn multiclass_accuracy(
+    model: &MultiClassTmModel,
+    xs: &[Vec<bool>],
+    ys: &[usize],
+) -> f64 {
+    let correct = xs
+        .iter()
+        .zip(ys)
+        .filter(|(x, &y)| predict_argmax(&multiclass_class_sums(model, x)) == y)
+        .count();
+    correct as f64 / xs.len().max(1) as f64
+}
+
+/// Batch accuracy of a CoTM.
+pub fn cotm_accuracy(model: &CoTmModel, xs: &[Vec<bool>], ys: &[usize]) -> f64 {
+    let correct = xs
+        .iter()
+        .zip(ys)
+        .filter(|(x, &y)| predict_argmax(&cotm_class_sums(model, x)) == y)
+        .count();
+    correct as f64 / xs.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::model::{ClauseMask, TmParams};
+
+    fn tiny_params() -> TmParams {
+        TmParams {
+            features: 2,
+            clauses: 2,
+            classes: 2,
+            ..TmParams::iris_paper()
+        }
+    }
+
+    /// The hand-worked example mirrored from python/tests/test_model.py —
+    /// both layers must agree on it.
+    #[test]
+    fn hand_worked_multiclass_matches_python_oracle() {
+        let mut m = crate::tm::MultiClassTmModel::zeroed(tiny_params());
+        m.clauses[0][0].include[0] = true; // class0 clause0 (+): x0
+        m.clauses[0][1].include[3] = true; // class0 clause1 (−): ¬x1
+        m.clauses[1][0].include[1] = true; // class1 clause0 (+): ¬x0
+        m.clauses[1][1].include[2] = true; // class1 clause1 (−): x1
+        assert_eq!(multiclass_class_sums(&m, &[true, false]), vec![0, 0]);
+        assert_eq!(multiclass_class_sums(&m, &[true, true]), vec![1, -1]);
+        assert_eq!(predict_argmax(&multiclass_class_sums(&m, &[true, true])), 0);
+    }
+
+    #[test]
+    fn hand_worked_cotm_matches_python_oracle() {
+        let mut m = crate::tm::CoTmModel::zeroed(tiny_params());
+        m.clauses[0].include[0] = true; // clause0: x0
+        m.clauses[1].include[2] = true; // clause1: x1
+        m.weights = vec![vec![3, -2], vec![-1, 4]];
+        assert_eq!(cotm_class_sums(&m, &[true, true]), vec![1, 3]);
+        assert_eq!(cotm_class_sums(&m, &[true, false]), vec![3, -1]);
+        assert_eq!(cotm_class_sums(&m, &[false, false]), vec![0, 0]);
+    }
+
+    #[test]
+    fn argmax_tie_breaks_low() {
+        assert_eq!(predict_argmax(&[3, 3, 1]), 0);
+        assert_eq!(predict_argmax(&[1, 3, 3]), 1);
+        assert_eq!(predict_argmax(&[-5]), 0);
+    }
+
+    #[test]
+    fn empty_model_predicts_class_zero() {
+        let m = crate::tm::MultiClassTmModel::zeroed(tiny_params());
+        assert_eq!(predict_argmax(&multiclass_class_sums(&m, &[true, true])), 0);
+    }
+
+    #[test]
+    fn clause_mask_polarity_sign() {
+        let p = tiny_params();
+        let mut m = crate::tm::MultiClassTmModel::zeroed(p);
+        // Odd clause fires -> negative contribution.
+        m.clauses[0][1] = ClauseMask { include: vec![true, false, false, false] };
+        assert_eq!(multiclass_class_sums(&m, &[true, false])[0], -1);
+    }
+}

@@ -1,0 +1,22 @@
+//! Tsetlin Machine substrate: model structures, software inference,
+//! training (multi-class TM and Coalesced TM), feature booleanisation,
+//! datasets, and model (de)serialisation.
+//!
+//! This is the ML-algorithm layer the paper's hardware implements. The
+//! software inference here is the L3-local golden reference (checked
+//! against the AOT-compiled L2 JAX model and against every hardware
+//! architecture in `tests/equivalence.rs`, mirroring §III-A).
+
+pub mod booleanize;
+pub mod cotm_train;
+pub mod data;
+pub mod infer;
+pub mod iris_data;
+pub mod model;
+pub mod serde;
+pub mod train;
+
+pub use booleanize::Booleanizer;
+pub use data::Dataset;
+pub use infer::{cotm_class_sums, multiclass_class_sums, predict_argmax};
+pub use model::{ClauseMask, CoTmModel, MultiClassTmModel, TmParams};

@@ -1,0 +1,283 @@
+//! TM model structures.
+//!
+//! Literal order is **interleaved** — `literal[2i] = x_i`,
+//! `literal[2i+1] = ¬x_i` — matching Algorithm 2 of the paper and the
+//! Python L1/L2 layers (`python/compile/kernels/ref.py`).
+
+use crate::error::{Error, Result};
+
+/// Hyper-parameters shared by both TM variants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TmParams {
+    /// Boolean input features F (after booleanisation).
+    pub features: usize,
+    /// Clauses per class (multi-class TM) or shared clauses (CoTM).
+    pub clauses: usize,
+    /// Output classes K.
+    pub classes: usize,
+    /// Tsetlin-automaton states per action half (2N total states).
+    pub ta_states: u32,
+    /// Feedback threshold T.
+    pub threshold: i32,
+    /// Specificity s (> 1).
+    pub specificity: f64,
+    /// Max |weight| for CoTM integer weights.
+    pub max_weight: i32,
+}
+
+impl TmParams {
+    /// The paper's Iris configuration: 16 features, 12 clauses, 3 classes.
+    pub fn iris_paper() -> TmParams {
+        TmParams {
+            features: 16,
+            clauses: 12,
+            classes: 3,
+            ta_states: 128,
+            threshold: 4,
+            specificity: 3.0,
+            max_weight: 7,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.features == 0 || self.clauses == 0 || self.classes < 2 {
+            return Err(Error::model(format!(
+                "degenerate shape F={} C={} K={}",
+                self.features, self.clauses, self.classes
+            )));
+        }
+        if self.specificity <= 1.0 {
+            return Err(Error::model("specificity must be > 1"));
+        }
+        Ok(())
+    }
+
+    /// Number of literals (2F).
+    pub fn literals(&self) -> usize {
+        2 * self.features
+    }
+}
+
+/// A clause's include mask over the 2F literals (true = literal included).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ClauseMask {
+    pub include: Vec<bool>,
+}
+
+impl ClauseMask {
+    pub fn empty(literals: usize) -> ClauseMask {
+        ClauseMask { include: vec![false; literals] }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        !self.include.iter().any(|&b| b)
+    }
+
+    pub fn included_count(&self) -> usize {
+        self.include.iter().filter(|&&b| b).count()
+    }
+
+    /// Evaluate on interleaved literals: fires iff every included literal
+    /// is 1; empty clauses output 0 at inference (standard convention).
+    pub fn evaluate(&self, literals: &[bool]) -> bool {
+        debug_assert_eq!(literals.len(), self.include.len());
+        if self.is_empty() {
+            return false;
+        }
+        self.include
+            .iter()
+            .zip(literals)
+            .all(|(&inc, &lit)| !inc || lit)
+    }
+}
+
+/// Multi-class TM: per class, `clauses` clause masks with alternating
+/// polarity (+ for even clause index, − for odd; Eq. 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MultiClassTmModel {
+    pub params: TmParams,
+    /// `[class][clause]` include masks.
+    pub clauses: Vec<Vec<ClauseMask>>,
+}
+
+impl MultiClassTmModel {
+    pub fn zeroed(params: TmParams) -> MultiClassTmModel {
+        let masks = (0..params.classes)
+            .map(|_| {
+                (0..params.clauses)
+                    .map(|_| ClauseMask::empty(params.literals()))
+                    .collect()
+            })
+            .collect();
+        MultiClassTmModel { params, clauses: masks }
+    }
+
+    /// Flattened include mask as f32 rows (K*C, 2F) — the layout the AOT
+    /// artifacts take as input.
+    pub fn include_f32(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.params.classes * self.params.clauses * self.params.literals());
+        for class in &self.clauses {
+            for cl in class {
+                v.extend(cl.include.iter().map(|&b| if b { 1.0 } else { 0.0 }));
+            }
+        }
+        v
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.params.validate()?;
+        if self.params.clauses % 2 != 0 {
+            // Multi-class-only constraint: clause polarity alternates in
+            // +/− pairs (Eq. 1). CoTM has no such requirement (Eq. 2).
+            return Err(Error::model(
+                "multi-class TM needs an even clause count (+/− polarity pairs)",
+            ));
+        }
+        if self.clauses.len() != self.params.classes {
+            return Err(Error::model("class count mismatch"));
+        }
+        for (i, class) in self.clauses.iter().enumerate() {
+            if class.len() != self.params.clauses {
+                return Err(Error::model(format!("clause count mismatch in class {i}")));
+            }
+            for (j, cl) in class.iter().enumerate() {
+                if cl.include.len() != self.params.literals() {
+                    return Err(Error::model(format!("literal width mismatch at [{i}][{j}]")));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Coalesced TM: one shared clause pool plus a signed integer weight
+/// matrix `[class][clause]` (Eq. 2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoTmModel {
+    pub params: TmParams,
+    pub clauses: Vec<ClauseMask>,
+    /// `[class][clause]` signed weights.
+    pub weights: Vec<Vec<i32>>,
+}
+
+impl CoTmModel {
+    pub fn zeroed(params: TmParams) -> CoTmModel {
+        let clauses = (0..params.clauses)
+            .map(|_| ClauseMask::empty(params.literals()))
+            .collect();
+        let weights = vec![vec![0; params.clauses]; params.classes];
+        CoTmModel { params, clauses, weights }
+    }
+
+    /// Include mask as f32 rows (C, 2F).
+    pub fn include_f32(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.params.clauses * self.params.literals());
+        for cl in &self.clauses {
+            v.extend(cl.include.iter().map(|&b| if b { 1.0 } else { 0.0 }));
+        }
+        v
+    }
+
+    /// Weights as f32 rows (K, C).
+    pub fn weights_f32(&self) -> Vec<f32> {
+        self.weights
+            .iter()
+            .flat_map(|row| row.iter().map(|&w| w as f32))
+            .collect()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.params.validate()?;
+        if self.clauses.len() != self.params.clauses {
+            return Err(Error::model("clause count mismatch"));
+        }
+        if self.weights.len() != self.params.classes {
+            return Err(Error::model("weight row count mismatch"));
+        }
+        for row in &self.weights {
+            if row.len() != self.params.clauses {
+                return Err(Error::model("weight col count mismatch"));
+            }
+            if row.iter().any(|w| w.abs() > self.params.max_weight) {
+                return Err(Error::model("weight exceeds max_weight"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Expand boolean features into interleaved literals `[x0, ¬x0, x1, …]`.
+pub fn make_literals(features: &[bool]) -> Vec<bool> {
+    let mut lits = Vec::with_capacity(features.len() * 2);
+    for &f in features {
+        lits.push(f);
+        lits.push(!f);
+    }
+    lits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_interleaved() {
+        assert_eq!(
+            make_literals(&[true, false]),
+            vec![true, false, false, true]
+        );
+    }
+
+    #[test]
+    fn empty_clause_outputs_zero() {
+        let m = ClauseMask::empty(4);
+        assert!(!m.evaluate(&[true, true, true, true]));
+    }
+
+    #[test]
+    fn clause_requires_all_included() {
+        let mut m = ClauseMask::empty(4);
+        m.include[0] = true; // x0
+        m.include[3] = true; // ¬x1
+        assert!(m.evaluate(&make_literals(&[true, false])));
+        assert!(!m.evaluate(&make_literals(&[true, true])));
+        assert!(!m.evaluate(&make_literals(&[false, false])));
+    }
+
+    #[test]
+    fn params_validation() {
+        let mut p = TmParams::iris_paper();
+        assert!(p.validate().is_ok());
+        p.specificity = 0.5;
+        assert!(p.validate().is_err());
+        // Odd clause counts are fine for CoTM but not multi-class.
+        let odd = TmParams { clauses: 7, specificity: 3.0, ..TmParams::iris_paper() };
+        assert!(odd.validate().is_ok());
+        assert!(MultiClassTmModel::zeroed(odd).validate().is_err());
+    }
+
+    #[test]
+    fn include_f32_layout() {
+        let p = TmParams {
+            features: 2,
+            clauses: 2,
+            classes: 2,
+            ..TmParams::iris_paper()
+        };
+        let mut m = MultiClassTmModel::zeroed(p);
+        m.clauses[1][0].include[3] = true;
+        let v = m.include_f32();
+        assert_eq!(v.len(), 2 * 2 * 4);
+        // class 1, clause 0 starts at offset (1*2+0)*4 = 8; literal 3.
+        assert_eq!(v[8 + 3], 1.0);
+        assert_eq!(v.iter().sum::<f32>(), 1.0);
+    }
+
+    #[test]
+    fn cotm_validation_rejects_oversized_weight() {
+        let p = TmParams { features: 2, clauses: 2, classes: 2, max_weight: 3, ..TmParams::iris_paper() };
+        let mut m = CoTmModel::zeroed(p);
+        m.weights[0][0] = 5;
+        assert!(m.validate().is_err());
+    }
+}

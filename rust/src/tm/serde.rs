@@ -1,0 +1,289 @@
+//! Model (de)serialisation — a small line-oriented text format (no serde
+//! crate offline). Stable across versions via an explicit header.
+//!
+//! ```text
+//! tm-model v1 multiclass
+//! params features=16 clauses=12 classes=3 ta_states=128 threshold=8 specificity=3 max_weight=7
+//! clause 0 0 010010...            # class, clause index, 2F include bits
+//! ...
+//! ```
+//!
+//! CoTM adds `weights <class> w0 w1 ...` rows and omits the class index
+//! on `clause` rows.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use super::model::{ClauseMask, CoTmModel, MultiClassTmModel, TmParams};
+use crate::error::{Error, Result};
+
+fn params_line(p: &TmParams) -> String {
+    format!(
+        "params features={} clauses={} classes={} ta_states={} threshold={} specificity={} max_weight={}",
+        p.features, p.clauses, p.classes, p.ta_states, p.threshold, p.specificity, p.max_weight
+    )
+}
+
+fn mask_bits(m: &ClauseMask) -> String {
+    m.include.iter().map(|&b| if b { '1' } else { '0' }).collect()
+}
+
+fn parse_mask(bits: &str, literals: usize) -> Result<ClauseMask> {
+    if bits.len() != literals {
+        return Err(Error::model(format!(
+            "clause width {} != 2F {}",
+            bits.len(),
+            literals
+        )));
+    }
+    Ok(ClauseMask {
+        include: bits
+            .chars()
+            .map(|c| match c {
+                '1' => Ok(true),
+                '0' => Ok(false),
+                other => Err(Error::model(format!("bad mask char {other:?}"))),
+            })
+            .collect::<Result<Vec<bool>>>()?,
+    })
+}
+
+fn parse_params(line: &str) -> Result<TmParams> {
+    let mut p = TmParams {
+        features: 0,
+        clauses: 0,
+        classes: 0,
+        ta_states: 0,
+        threshold: 0,
+        specificity: 0.0,
+        max_weight: 0,
+    };
+    for tok in line.split_whitespace().skip(1) {
+        let (k, v) = tok
+            .split_once('=')
+            .ok_or_else(|| Error::model(format!("bad param token {tok:?}")))?;
+        let fail = |_| Error::model(format!("bad value for {k}: {v:?}"));
+        match k {
+            "features" => p.features = v.parse().map_err(fail)?,
+            "clauses" => p.clauses = v.parse().map_err(fail)?,
+            "classes" => p.classes = v.parse().map_err(fail)?,
+            "ta_states" => p.ta_states = v.parse().map_err(fail)?,
+            "threshold" => p.threshold = v.parse().map_err(fail)?,
+            "specificity" => {
+                p.specificity = v.parse::<f64>().map_err(|_| Error::model("bad specificity"))?
+            }
+            "max_weight" => p.max_weight = v.parse().map_err(fail)?,
+            _ => return Err(Error::model(format!("unknown param {k:?}"))),
+        }
+    }
+    Ok(p)
+}
+
+/// Serialise a multi-class TM model.
+pub fn multiclass_to_string(m: &MultiClassTmModel) -> String {
+    let mut s = String::new();
+    s.push_str("tm-model v1 multiclass\n");
+    s.push_str(&params_line(&m.params));
+    s.push('\n');
+    for (ci, class) in m.clauses.iter().enumerate() {
+        for (j, cl) in class.iter().enumerate() {
+            let _ = writeln!(s, "clause {ci} {j} {}", mask_bits(cl));
+        }
+    }
+    s
+}
+
+/// Parse a multi-class TM model.
+pub fn multiclass_from_str(text: &str) -> Result<MultiClassTmModel> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = lines.next().ok_or_else(|| Error::model("empty model file"))?;
+    if header.trim() != "tm-model v1 multiclass" {
+        return Err(Error::model(format!("bad header {header:?}")));
+    }
+    let params = parse_params(
+        lines
+            .next()
+            .ok_or_else(|| Error::model("missing params line"))?,
+    )?;
+    let mut model = MultiClassTmModel::zeroed(params);
+    for line in lines {
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("clause") => {
+                let ci: usize = it
+                    .next()
+                    .and_then(|t| t.parse().ok())
+                    .ok_or_else(|| Error::model("bad clause class idx"))?;
+                let j: usize = it
+                    .next()
+                    .and_then(|t| t.parse().ok())
+                    .ok_or_else(|| Error::model("bad clause idx"))?;
+                let bits = it.next().ok_or_else(|| Error::model("missing mask"))?;
+                if ci >= model.params.classes || j >= model.params.clauses {
+                    return Err(Error::model(format!("clause [{ci}][{j}] out of range")));
+                }
+                model.clauses[ci][j] = parse_mask(bits, model.params.literals())?;
+            }
+            Some(other) => return Err(Error::model(format!("unknown record {other:?}"))),
+            None => {}
+        }
+    }
+    model.validate()?;
+    Ok(model)
+}
+
+/// Serialise a CoTM model.
+pub fn cotm_to_string(m: &CoTmModel) -> String {
+    let mut s = String::new();
+    s.push_str("tm-model v1 cotm\n");
+    s.push_str(&params_line(&m.params));
+    s.push('\n');
+    for (j, cl) in m.clauses.iter().enumerate() {
+        let _ = writeln!(s, "clause {j} {}", mask_bits(cl));
+    }
+    for (k, row) in m.weights.iter().enumerate() {
+        let ws: Vec<String> = row.iter().map(|w| w.to_string()).collect();
+        let _ = writeln!(s, "weights {k} {}", ws.join(" "));
+    }
+    s
+}
+
+/// Parse a CoTM model.
+pub fn cotm_from_str(text: &str) -> Result<CoTmModel> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = lines.next().ok_or_else(|| Error::model("empty model file"))?;
+    if header.trim() != "tm-model v1 cotm" {
+        return Err(Error::model(format!("bad header {header:?}")));
+    }
+    let params = parse_params(
+        lines
+            .next()
+            .ok_or_else(|| Error::model("missing params line"))?,
+    )?;
+    let mut model = CoTmModel::zeroed(params);
+    for line in lines {
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("clause") => {
+                let j: usize = it
+                    .next()
+                    .and_then(|t| t.parse().ok())
+                    .ok_or_else(|| Error::model("bad clause idx"))?;
+                let bits = it.next().ok_or_else(|| Error::model("missing mask"))?;
+                if j >= model.params.clauses {
+                    return Err(Error::model(format!("clause {j} out of range")));
+                }
+                model.clauses[j] = parse_mask(bits, model.params.literals())?;
+            }
+            Some("weights") => {
+                let k: usize = it
+                    .next()
+                    .and_then(|t| t.parse().ok())
+                    .ok_or_else(|| Error::model("bad weight class idx"))?;
+                if k >= model.params.classes {
+                    return Err(Error::model(format!("weights {k} out of range")));
+                }
+                let row: Vec<i32> = it
+                    .map(|t| t.parse().map_err(|_| Error::model("bad weight")))
+                    .collect::<Result<_>>()?;
+                if row.len() != model.params.clauses {
+                    return Err(Error::model("weight row width mismatch"));
+                }
+                model.weights[k] = row;
+            }
+            Some(other) => return Err(Error::model(format!("unknown record {other:?}"))),
+            None => {}
+        }
+    }
+    model.validate()?;
+    Ok(model)
+}
+
+/// Save either model kind to a file.
+pub fn save_multiclass(m: &MultiClassTmModel, path: impl AsRef<Path>) -> Result<()> {
+    std::fs::write(path, multiclass_to_string(m))?;
+    Ok(())
+}
+
+pub fn save_cotm(m: &CoTmModel, path: impl AsRef<Path>) -> Result<()> {
+    std::fs::write(path, cotm_to_string(m))?;
+    Ok(())
+}
+
+pub fn load_multiclass(path: impl AsRef<Path>) -> Result<MultiClassTmModel> {
+    multiclass_from_str(&std::fs::read_to_string(path)?)
+}
+
+pub fn load_cotm(path: impl AsRef<Path>) -> Result<CoTmModel> {
+    cotm_from_str(&std::fs::read_to_string(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::data;
+    use crate::tm::{cotm_train::train_cotm, train::train_multiclass};
+
+    fn small_params() -> TmParams {
+        TmParams {
+            features: 4,
+            clauses: 4,
+            classes: 2,
+            ta_states: 16,
+            threshold: 3,
+            specificity: 3.0,
+            max_weight: 5,
+        }
+    }
+
+    #[test]
+    fn multiclass_roundtrip_exact() {
+        let d = data::xor_noise(100, 4, 0.0, 2);
+        let m = train_multiclass(small_params(), &d, 5, 1).unwrap();
+        let text = multiclass_to_string(&m);
+        let back = multiclass_from_str(&text).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn cotm_roundtrip_exact() {
+        let d = data::xor_noise(100, 4, 0.0, 2);
+        let m = train_cotm(small_params(), &d, 5, 1).unwrap();
+        let text = cotm_to_string(&m);
+        let back = cotm_from_str(&text).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn rejects_wrong_header() {
+        assert!(multiclass_from_str("tm-model v1 cotm\nparams features=1").is_err());
+        assert!(cotm_from_str("garbage").is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_indices() {
+        let m = crate::tm::MultiClassTmModel::zeroed(small_params());
+        let mut text = multiclass_to_string(&m);
+        text.push_str("clause 9 0 00000000\n");
+        assert!(multiclass_from_str(&text).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_mask_width() {
+        let m = crate::tm::CoTmModel::zeroed(small_params());
+        let mut text = cotm_to_string(&m);
+        text.push_str("clause 0 0101\n"); // 4 bits, needs 8
+        assert!(cotm_from_str(&text).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("tmtd-serde-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.tm");
+        let d = data::xor_noise(50, 4, 0.0, 3);
+        let m = train_multiclass(small_params(), &d, 3, 7).unwrap();
+        save_multiclass(&m, &path).unwrap();
+        assert_eq!(load_multiclass(&path).unwrap(), m);
+    }
+}

@@ -1,0 +1,273 @@
+//! Multi-class Tsetlin Machine training (Granmo 2018 [9]).
+//!
+//! The paper deploys *pre-trained* models in hardware; this module is the
+//! substrate that produces them. Standard two-action Tsetlin automata
+//! with Type I / Type II feedback:
+//!
+//! * each (clause, literal) pair has a TA with states `1..=2N`
+//!   (`> N` = include the literal);
+//! * per sample, the target class receives a positive update and one
+//!   uniformly sampled other class a negative update, each gated by the
+//!   clamped class sum against threshold `T`;
+//! * Type I feedback (recognise): on firing clauses, reinforce matching
+//!   literals (prob `(s-1)/s`) and forget mismatching ones (prob `1/s`);
+//!   on silent clauses, forget all (prob `1/s`);
+//! * Type II feedback (reject): on firing clauses, include literals that
+//!   are 0 in the sample, driving the clause towards not firing.
+//!
+//! During *training*, an empty clause evaluates to 1 (it must fire to
+//! receive Type I feedback and grow); during *inference* it outputs 0 —
+//! both conventions are standard and mirrored in the Python oracle.
+
+use super::data::Dataset;
+use super::model::{make_literals, MultiClassTmModel, TmParams};
+use crate::error::Result;
+use crate::util::SplitMix64;
+
+/// TA state array for one automaton team (one class): `[clause][literal]`.
+type TaStates = Vec<Vec<u32>>;
+
+/// Trainer holding TA state alongside the exported model.
+pub struct MultiClassTrainer {
+    pub params: TmParams,
+    /// `[class][clause][literal]` TA states in `1..=2N`.
+    states: Vec<TaStates>,
+    rng: SplitMix64,
+}
+
+impl MultiClassTrainer {
+    pub fn new(params: TmParams, seed: u64) -> Result<MultiClassTrainer> {
+        params.validate()?;
+        if params.clauses % 2 != 0 {
+            return Err(crate::Error::model(
+                "multi-class TM needs an even clause count (+/− polarity pairs)",
+            ));
+        }
+        let mut rng = SplitMix64::new(seed);
+        let n = params.ta_states;
+        // Initialise each TA uniformly to N or N+1 (the decision boundary).
+        let states = (0..params.classes)
+            .map(|_| {
+                (0..params.clauses)
+                    .map(|_| {
+                        (0..params.literals())
+                            .map(|_| if rng.next_bool() { n } else { n + 1 })
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        Ok(MultiClassTrainer { params, states, rng })
+    }
+
+    /// Training-time clause evaluation: empty clauses fire.
+    fn clause_fires(states: &[u32], lits: &[bool], n: u32) -> bool {
+        states
+            .iter()
+            .zip(lits)
+            .all(|(&st, &lit)| st <= n || lit)
+    }
+
+    fn class_sum(&self, class: usize, lits: &[bool]) -> i32 {
+        let n = self.params.ta_states;
+        self.states[class]
+            .iter()
+            .enumerate()
+            .map(|(j, cl)| {
+                let out = Self::clause_fires(cl, lits, n) as i32;
+                if j % 2 == 0 {
+                    out
+                } else {
+                    -out
+                }
+            })
+            .sum()
+    }
+
+    /// Type I feedback to one clause.
+    fn type_i(&mut self, class: usize, clause: usize, lits: &[bool], fired: bool) {
+        let n = self.params.ta_states;
+        let s = self.params.specificity;
+        let p_forget = 1.0 / s;
+        let p_reinforce = (s - 1.0) / s;
+        for (l, &lit) in lits.iter().enumerate() {
+            let st = self.states[class][clause][l];
+            if fired && lit {
+                // Reinforce inclusion of true literals.
+                if self.rng.chance(p_reinforce) && st < 2 * n {
+                    self.states[class][clause][l] = st + 1;
+                }
+            } else {
+                // Forget: silent clause, or false literal in firing clause.
+                if self.rng.chance(p_forget) && st > 1 {
+                    self.states[class][clause][l] = st - 1;
+                }
+            }
+        }
+    }
+
+    /// Type II feedback to one firing clause: include 0-literals.
+    fn type_ii(&mut self, class: usize, clause: usize, lits: &[bool]) {
+        let n = self.params.ta_states;
+        for (l, &lit) in lits.iter().enumerate() {
+            let st = self.states[class][clause][l];
+            if !lit && st <= n {
+                self.states[class][clause][l] = st + 1;
+            }
+        }
+    }
+
+    /// One positive/negative update for `class` on a sample.
+    fn update_class(&mut self, class: usize, lits: &[bool], positive: bool) {
+        let t = self.params.threshold;
+        let sum = self.class_sum(class, lits).clamp(-t, t);
+        let p_update = if positive {
+            (t - sum) as f64 / (2 * t) as f64
+        } else {
+            (t + sum) as f64 / (2 * t) as f64
+        };
+        let n = self.params.ta_states;
+        for j in 0..self.params.clauses {
+            if !self.rng.chance(p_update) {
+                continue;
+            }
+            let fired = Self::clause_fires(&self.states[class][j], lits, n);
+            let positive_clause = j % 2 == 0;
+            // Positive update: + clauses learn (Type I), − clauses reject
+            // (Type II on firing). Negative update: roles swap.
+            if positive == positive_clause {
+                self.type_i(class, j, lits, fired);
+            } else if fired {
+                self.type_ii(class, j, lits);
+            }
+        }
+    }
+
+    /// One epoch over the dataset (order shuffled per epoch).
+    pub fn epoch(&mut self, data: &Dataset) {
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        self.rng.shuffle(&mut order);
+        for i in order {
+            let lits = make_literals(&data.features[i]);
+            let y = data.labels[i];
+            self.update_class(y, &lits, true);
+            // Sample one negative class uniformly.
+            if self.params.classes > 1 {
+                let mut neg = self.rng.index(self.params.classes - 1);
+                if neg >= y {
+                    neg += 1;
+                }
+                self.update_class(neg, &lits, false);
+            }
+        }
+    }
+
+    /// Train for `epochs`, returning the exported (inference) model.
+    pub fn train(&mut self, data: &Dataset, epochs: usize) -> MultiClassTmModel {
+        for _ in 0..epochs {
+            self.epoch(data);
+        }
+        self.export()
+    }
+
+    /// Export include masks (state > N) as an inference model.
+    pub fn export(&self) -> MultiClassTmModel {
+        let n = self.params.ta_states;
+        let mut model = MultiClassTmModel::zeroed(self.params.clone());
+        for (ci, class) in self.states.iter().enumerate() {
+            for (j, cl) in class.iter().enumerate() {
+                for (l, &st) in cl.iter().enumerate() {
+                    model.clauses[ci][j].include[l] = st > n;
+                }
+            }
+        }
+        model
+    }
+}
+
+/// Convenience: train a multi-class TM on a dataset.
+pub fn train_multiclass(
+    params: TmParams,
+    data: &Dataset,
+    epochs: usize,
+    seed: u64,
+) -> Result<MultiClassTmModel> {
+    let mut tr = MultiClassTrainer::new(params, seed)?;
+    Ok(tr.train(data, epochs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::data;
+    use crate::tm::infer::multiclass_accuracy;
+
+    #[test]
+    fn learns_noisy_xor() {
+        let d = data::xor_noise(400, 4, 0.05, 11);
+        let params = TmParams {
+            features: 4,
+            clauses: 10,
+            classes: 2,
+            ta_states: 64,
+            threshold: 5,
+            specificity: 3.0,
+            max_weight: 7,
+        };
+        let model = train_multiclass(params, &d, 30, 1).unwrap();
+        let clean = data::xor_noise(200, 4, 0.0, 99);
+        let acc = multiclass_accuracy(&model, &clean.features, &clean.labels);
+        assert!(acc > 0.9, "xor accuracy {acc}");
+    }
+
+    #[test]
+    fn learns_iris_to_paper_grade() {
+        let d = data::iris().unwrap();
+        let (train, test) = d.split(0.8, 42);
+        let model = train_multiclass(TmParams::iris_paper(), &train, 60, 2).unwrap();
+        let acc = multiclass_accuracy(&model, &test.features, &test.labels);
+        assert!(acc >= 0.85, "iris test accuracy {acc}");
+    }
+
+    #[test]
+    fn training_is_deterministic_per_seed() {
+        let d = data::xor_noise(100, 4, 0.0, 5);
+        let p = TmParams {
+            features: 4,
+            clauses: 6,
+            classes: 2,
+            ta_states: 32,
+            threshold: 4,
+            specificity: 3.0,
+            max_weight: 7,
+        };
+        let a = train_multiclass(p.clone(), &d, 5, 9).unwrap();
+        let b = train_multiclass(p, &d, 5, 9).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn states_stay_in_bounds() {
+        let d = data::prototype_blobs(120, 8, 3, 0.1, 3);
+        let p = TmParams {
+            features: 8,
+            clauses: 8,
+            classes: 3,
+            ta_states: 16,
+            threshold: 4,
+            specificity: 2.5,
+            max_weight: 7,
+        };
+        let mut tr = MultiClassTrainer::new(p, 4).unwrap();
+        for _ in 0..10 {
+            tr.epoch(&d);
+        }
+        for class in &tr.states {
+            for clause in class {
+                for &st in clause {
+                    assert!((1..=32).contains(&st));
+                }
+            }
+        }
+    }
+}

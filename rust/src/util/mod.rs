@@ -1,0 +1,10 @@
+//! Small shared utilities: deterministic PRNG, descriptive statistics,
+//! and plain-text table rendering (no external deps are available offline).
+
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::SplitMix64;
+pub use stats::Summary;
+pub use table::Table;

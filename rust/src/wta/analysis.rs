@@ -1,0 +1,134 @@
+//! Theoretical WTA analysis — reproduces paper Table I, and measures the
+//! same quantities from the event simulator for cross-validation.
+
+use crate::sim::energy::{GateKind, TechParams};
+use crate::sim::{Circuit, Logic, NetId, Time};
+use crate::wta::{build, WtaKind};
+
+/// One Table I row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WtaAnalysis {
+    pub kind: WtaKind,
+    pub classes: usize,
+    pub arbitration_depth: usize,
+    pub cell_count: usize,
+    /// Theoretical latency per Table I's formula.
+    pub latency_theory: Time,
+}
+
+/// Table I row 1: TBA — depth ⌈log₂ m⌉, m−1 cells,
+/// latency = log₂m · (d_Mutex + d_OR + d_C-element).
+pub fn tba_analysis(m: usize, tech: &TechParams) -> WtaAnalysis {
+    assert!(m >= 2);
+    let depth = (m as f64).log2().ceil() as usize;
+    let d_mutex = tech.gate_delay(GateKind::Nand) + tech.gate_delay(GateKind::Inv);
+    let per_layer =
+        d_mutex + tech.gate_delay(GateKind::Or) + tech.gate_delay(GateKind::CElement);
+    WtaAnalysis {
+        kind: WtaKind::Tba,
+        classes: m,
+        arbitration_depth: depth,
+        cell_count: m - 1,
+        latency_theory: per_layer.scale(depth as f64),
+    }
+}
+
+/// Table I row 2: Mesh — depth m−1, m(m−1)/2 cells,
+/// latency = (m−1) · d_Mutex.
+pub fn mesh_analysis(m: usize, tech: &TechParams) -> WtaAnalysis {
+    assert!(m >= 2);
+    let d_mutex = tech.gate_delay(GateKind::Nand) + tech.gate_delay(GateKind::Inv);
+    WtaAnalysis {
+        kind: WtaKind::Mesh,
+        classes: m,
+        arbitration_depth: m - 1,
+        cell_count: m * (m - 1) / 2,
+        latency_theory: d_mutex.scale((m - 1) as f64),
+    }
+}
+
+/// Measured arbitration latency: drive class 0 first by a wide margin and
+/// report grant time − first-arrival time.
+pub fn measured_latency(kind: WtaKind, m: usize, tech: &TechParams) -> Time {
+    let mut c = Circuit::new(tech.clone());
+    let races: Vec<NetId> = (0..m)
+        .map(|i| c.net_init(format!("race{i}"), Logic::Zero))
+        .collect();
+    let wta = build(&mut c, kind, "wta", &races);
+    c.init_components();
+    c.run_to_quiescence().unwrap();
+    let t0 = Time::ps(100);
+    for (i, &r) in races.iter().enumerate() {
+        let d = if i == 0 { t0 } else { t0 + Time::ps(2_000 * (i as u64 + 1)) };
+        c.drive(r, Logic::One, d);
+    }
+    let g0 = wta.grants[0];
+    let fired = c
+        .run_while(Time::ns(10_000), |cc| cc.value(g0) == Logic::One)
+        .unwrap();
+    assert!(fired, "grant never issued");
+    c.now().since(t0)
+}
+
+/// Measured arbitration energy for a single race resolution (fJ).
+pub fn measured_energy_fj(kind: WtaKind, m: usize, tech: &TechParams) -> f64 {
+    let mut c = Circuit::new(tech.clone());
+    let races: Vec<NetId> = (0..m)
+        .map(|i| c.net_init(format!("race{i}"), Logic::Zero))
+        .collect();
+    build(&mut c, kind, "wta", &races);
+    c.init_components();
+    c.run_to_quiescence().unwrap();
+    let before = c.energy.dynamic_fj(crate::sim::EnergyKind::Arbiter);
+    for (i, &r) in races.iter().enumerate() {
+        c.drive(r, Logic::One, Time::ps(100 + 80 * i as u64));
+    }
+    c.run_to_quiescence().unwrap();
+    c.energy.dynamic_fj(crate::sim::EnergyKind::Arbiter) - before
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_formulas() {
+        let t = TechParams::tsmc65_digital();
+        let tba = tba_analysis(8, &t);
+        assert_eq!(tba.arbitration_depth, 3);
+        assert_eq!(tba.cell_count, 7);
+        let mesh = mesh_analysis(8, &t);
+        assert_eq!(mesh.arbitration_depth, 7);
+        assert_eq!(mesh.cell_count, 28);
+    }
+
+    #[test]
+    fn tba_cells_scale_linearly_mesh_quadratically() {
+        let t = TechParams::tsmc65_digital();
+        assert_eq!(tba_analysis(64, &t).cell_count, 63);
+        assert_eq!(mesh_analysis(64, &t).cell_count, 2016);
+    }
+
+    #[test]
+    fn measured_latency_orders_match_theory_for_large_m() {
+        let t = TechParams::tsmc65_digital();
+        // For large m the tree's log depth beats the mesh's flat AND of
+        // m−1 grants only in cell count; latency-wise our mesh resolves
+        // all pairs concurrently, so just sanity-check both are positive
+        // and TBA grows with depth.
+        let tba4 = measured_latency(WtaKind::Tba, 4, &t);
+        let tba16 = measured_latency(WtaKind::Tba, 16, &t);
+        assert!(tba16 > tba4, "tree latency grows with depth");
+        let mesh4 = measured_latency(WtaKind::Mesh, 4, &t);
+        assert!(mesh4 > Time::ZERO);
+    }
+
+    #[test]
+    fn mesh_energy_exceeds_tba_energy_for_large_m() {
+        // m(m−1)/2 cells vs m−1 cells — energy must reflect it.
+        let t = TechParams::tsmc65_digital();
+        let e_tba = measured_energy_fj(WtaKind::Tba, 16, &t);
+        let e_mesh = measured_energy_fj(WtaKind::Mesh, 16, &t);
+        assert!(e_mesh > e_tba, "mesh {e_mesh} <= tba {e_tba}");
+    }
+}

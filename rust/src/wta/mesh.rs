@@ -1,0 +1,100 @@
+//! Mesh-Like arbiter ([18]): an all-pair cyclic-comparison network.
+//!
+//! Every unordered class pair (i, j) shares one Mutex; class i's one-hot
+//! grant is the conjunction of winning *all* its m−1 pairwise mutexes.
+//! m(m−1)/2 cells, winner emerges after m−1 stages — Table I row 2.
+//! Denser than the TBA but flat: no multi-level propagation, so for
+//! small m its latency can undercut the tree (the Table I trade-off the
+//! `wta_explore` example sweeps).
+
+use crate::gates::basic::{Gate, GateOp};
+use crate::gates::mutex::Mutex;
+use crate::sim::energy::EnergyKind;
+use crate::sim::{Circuit, NetId};
+
+/// Build a mesh arbiter over `races`; returns per-class grant nets.
+pub fn build_mesh(c: &mut Circuit, name: &str, races: &[NetId]) -> Vec<NetId> {
+    let m = races.len();
+    assert!(m >= 1);
+    if m == 1 {
+        return vec![races[0]];
+    }
+    let tech = c.tech.clone();
+    // pairwise_grants[i] = mutex grants class i must win.
+    let mut pairwise: Vec<Vec<NetId>> = vec![Vec::with_capacity(m - 1); m];
+    for i in 0..m {
+        for j in (i + 1)..m {
+            let (gi, gj) = Mutex::build(c, &format!("{name}.mx{i}_{j}"), races[i], races[j]);
+            pairwise[i].push(gi);
+            pairwise[j].push(gj);
+        }
+    }
+    pairwise
+        .into_iter()
+        .enumerate()
+        .map(|(i, path)| {
+            if path.len() == 1 {
+                path[0]
+            } else {
+                let out = c.net(format!("{name}.grant{i}"));
+                c.add(
+                    Box::new(
+                        Gate::new(format!("{name}.and{i}"), GateOp::And, path.clone(), out, &tech)
+                            .with_energy_kind(EnergyKind::Arbiter),
+                    ),
+                    path,
+                );
+                out
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::wta::test_support::race_winner;
+    use crate::wta::WtaKind;
+
+    #[test]
+    fn first_arrival_wins() {
+        assert_eq!(race_winner(WtaKind::Mesh, &[300, 100, 200]), 1);
+        assert_eq!(race_winner(WtaKind::Mesh, &[100, 300, 200]), 0);
+        assert_eq!(race_winner(WtaKind::Mesh, &[300, 200, 100]), 2);
+    }
+
+    #[test]
+    fn all_sizes_up_to_eight() {
+        for m in 2usize..=8 {
+            for winner in 0..m {
+                let delays: Vec<u64> = (0..m)
+                    .map(|i| if i == winner { 100 } else { 500 + 30 * i as u64 })
+                    .collect();
+                assert_eq!(
+                    race_winner(WtaKind::Mesh, &delays),
+                    winner,
+                    "m={m} winner={winner}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn close_race_still_one_hot() {
+        assert_eq!(race_winner(WtaKind::Mesh, &[100, 102, 101]), 0);
+    }
+
+    #[test]
+    fn agrees_with_tba_on_random_races() {
+        let mut rng = crate::util::SplitMix64::new(123);
+        for _ in 0..30 {
+            let m = 2 + rng.index(5);
+            // Well-separated random delays (≥ 60 ps apart) so both
+            // topologies must pick the same unambiguous winner.
+            let mut delays: Vec<u64> = (0..m as u64).map(|i| 100 + i * 60).collect();
+            rng.shuffle(&mut delays);
+            let a = race_winner(WtaKind::Mesh, &delays);
+            let b = race_winner(WtaKind::Tba, &delays);
+            assert_eq!(a, b, "delays={delays:?}");
+        }
+    }
+}

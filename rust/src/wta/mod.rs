@@ -1,0 +1,80 @@
+//! Winner-Takes-All arbitration (paper §II-C.4, Table I).
+//!
+//! The WTA monitors the rising edges of the m concurrent race signals
+//! `RaceClass[m-1:0]` and grants the first arrival — it is the terminal
+//! of the time-domain path and implements argmax. Two topologies:
+//!
+//! * [`tba`] — Tree-Based Arbiter: ⌈log₂ m⌉ layers, m−1 Mutex cells.
+//! * [`mesh`] — Mesh-Like arbiter: all-pair cyclic comparison,
+//!   m(m−1)/2 Mutex cells, winner after m−1 stages.
+//!
+//! [`analysis`] reproduces Table I's theoretical columns.
+
+pub mod analysis;
+pub mod mesh;
+pub mod tba;
+
+use crate::sim::{Circuit, NetId};
+
+/// Which arbiter topology to instantiate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WtaKind {
+    Tba,
+    Mesh,
+}
+
+impl WtaKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            WtaKind::Tba => "tba",
+            WtaKind::Mesh => "mesh",
+        }
+    }
+}
+
+/// A built arbiter: one grant net per competing class (one-hot).
+pub struct Wta {
+    pub kind: WtaKind,
+    pub grants: Vec<NetId>,
+}
+
+/// Build an arbiter of the chosen topology over `races`.
+pub fn build(c: &mut Circuit, kind: WtaKind, name: &str, races: &[NetId]) -> Wta {
+    let grants = match kind {
+        WtaKind::Tba => tba::build_tba(c, name, races),
+        WtaKind::Mesh => mesh::build_mesh(c, name, races),
+    };
+    Wta { kind, grants }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::sim::energy::TechParams;
+    use crate::sim::{Logic, Time};
+
+    /// Drive races with the given delays (ps); return the granted index.
+    pub fn race_winner(kind: WtaKind, delays_ps: &[u64]) -> usize {
+        let t = TechParams::tsmc65_digital();
+        let mut c = Circuit::new(t);
+        let races: Vec<NetId> = (0..delays_ps.len())
+            .map(|i| c.net_init(format!("race{i}"), Logic::Zero))
+            .collect();
+        let wta = build(&mut c, kind, "wta", &races);
+        c.init_components();
+        c.run_to_quiescence().unwrap();
+        for (i, &d) in delays_ps.iter().enumerate() {
+            c.drive(races[i], Logic::One, Time::ps(d));
+        }
+        c.run_to_quiescence().unwrap();
+        let granted: Vec<usize> = wta
+            .grants
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| c.value(**g) == Logic::One)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(granted.len(), 1, "{kind:?}: grants not one-hot: {granted:?}");
+        granted[0]
+    }
+}

