@@ -1,0 +1,201 @@
+//! Bit-parallel engine vs scalar reference — the perf-trajectory bench
+//! for the production serving tier.
+//!
+//! Compares `tm::fast_infer` (packed words, skip lists, bit-sliced
+//! batching, scoped-thread sharding) against the `tm::infer` scalar
+//! reference on (a) the paper's Iris-sized model and (b) a synthetic
+//! large model (256 features, 512 clauses/class — the regime word-level
+//! packing is built for). Prints µs/sample and speedup; the large-model
+//! batched path is the headline number.
+//!
+//! Run: `cargo bench --bench bitparallel_vs_ref`
+
+use std::time::Instant;
+
+use tsetlin_td::tm::infer::{cotm_class_sums, multiclass_class_sums};
+use tsetlin_td::tm::{
+    data, train::train_multiclass, BatchEngine, BitParallelCotm, BitParallelMulticlass,
+    ClauseMask, CoTmModel, MultiClassTmModel, TmParams,
+};
+use tsetlin_td::util::{SplitMix64, Table};
+
+/// Time `f` over `reps` repetitions of `samples` samples; µs/sample.
+fn time_us_per_sample(samples: usize, reps: usize, mut f: impl FnMut()) -> f64 {
+    // One warm-up pass (page in, branch-train), then timed reps.
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() * 1e6 / (reps * samples) as f64
+}
+
+fn random_mask(rng: &mut SplitMix64, literals: usize, density: f64) -> ClauseMask {
+    ClauseMask { include: (0..literals).map(|_| rng.chance(density)).collect() }
+}
+
+fn synthetic_multiclass(f: usize, c: usize, k: usize, seed: u64) -> MultiClassTmModel {
+    let p = TmParams {
+        features: f,
+        clauses: c,
+        classes: k,
+        ..TmParams::iris_paper()
+    };
+    let mut rng = SplitMix64::new(seed);
+    let mut m = MultiClassTmModel::zeroed(p);
+    for class in &mut m.clauses {
+        for clause in class.iter_mut() {
+            *clause = random_mask(&mut rng, 2 * f, 0.08);
+        }
+    }
+    m
+}
+
+fn synthetic_cotm(f: usize, c: usize, k: usize, seed: u64) -> CoTmModel {
+    let p = TmParams {
+        features: f,
+        clauses: c,
+        classes: k,
+        ..TmParams::iris_paper()
+    };
+    let mut rng = SplitMix64::new(seed);
+    let mut m = CoTmModel::zeroed(p.clone());
+    for clause in &mut m.clauses {
+        *clause = random_mask(&mut rng, 2 * f, 0.08);
+    }
+    for row in &mut m.weights {
+        for w in row.iter_mut() {
+            *w = rng.next_below(2 * p.max_weight as u64 + 1) as i32 - p.max_weight;
+        }
+    }
+    m
+}
+
+fn random_samples(f: usize, n: usize, seed: u64) -> Vec<Vec<bool>> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| (0..f).map(|_| rng.next_bool()).collect()).collect()
+}
+
+struct Case {
+    label: String,
+    scalar_us: f64,
+    single_us: f64,
+    batched_us: f64,
+    sharded_us: f64,
+}
+
+fn bench_multiclass(label: &str, m: &MultiClassTmModel, xs: &[Vec<bool>], reps: usize) -> Case {
+    let e = BitParallelMulticlass::from_model(m).expect("valid model");
+    // Sanity first: a speedup over wrong answers is worthless.
+    for x in xs.iter().take(8) {
+        assert_eq!(e.class_sums(x), multiclass_class_sums(m, x));
+    }
+    let n = xs.len();
+    Case {
+        label: label.to_string(),
+        scalar_us: time_us_per_sample(n, reps, || {
+            for x in xs {
+                std::hint::black_box(multiclass_class_sums(m, x));
+            }
+        }),
+        single_us: time_us_per_sample(n, reps, || {
+            for x in xs {
+                std::hint::black_box(e.class_sums(x));
+            }
+        }),
+        batched_us: time_us_per_sample(n, reps, || {
+            std::hint::black_box(e.infer_batch(xs));
+        }),
+        sharded_us: time_us_per_sample(n, reps, || {
+            std::hint::black_box(e.infer_batch_sharded(xs, 4));
+        }),
+    }
+}
+
+fn bench_cotm(label: &str, m: &CoTmModel, xs: &[Vec<bool>], reps: usize) -> Case {
+    let e = BitParallelCotm::from_model(m).expect("valid model");
+    for x in xs.iter().take(8) {
+        assert_eq!(e.class_sums(x), cotm_class_sums(m, x));
+    }
+    let n = xs.len();
+    Case {
+        label: label.to_string(),
+        scalar_us: time_us_per_sample(n, reps, || {
+            for x in xs {
+                std::hint::black_box(cotm_class_sums(m, x));
+            }
+        }),
+        single_us: time_us_per_sample(n, reps, || {
+            for x in xs {
+                std::hint::black_box(e.class_sums(x));
+            }
+        }),
+        batched_us: time_us_per_sample(n, reps, || {
+            std::hint::black_box(e.infer_batch(xs));
+        }),
+        sharded_us: time_us_per_sample(n, reps, || {
+            std::hint::black_box(e.infer_batch_sharded(xs, 4));
+        }),
+    }
+}
+
+fn main() {
+    println!("== bit-parallel engine vs scalar reference ==");
+
+    // (a) Iris-sized trained model: the paper's configuration.
+    let d = data::iris().expect("iris");
+    let (tr, _) = d.split(0.8, 42);
+    let iris_m = train_multiclass(TmParams::iris_paper(), &tr, 60, 2).expect("train");
+
+    // (b) Synthetic large models: >=256 features, >=512 clauses.
+    let (bf, bc, bk) = (256usize, 512usize, 4usize);
+    let big_m = synthetic_multiclass(bf, bc, bk, 7);
+    let big_xs = random_samples(bf, 128, 9);
+    let big_cm = synthetic_cotm(bf, bc, bk, 11);
+
+    let cases = vec![
+        bench_multiclass("iris multiclass (16f, 12c, 3k)", &iris_m, &d.features, 50),
+        bench_multiclass(
+            &format!("large multiclass ({bf}f, {bc}c/class, {bk}k)"),
+            &big_m,
+            &big_xs,
+            3,
+        ),
+        bench_cotm(
+            &format!("large cotm ({bf}f, {bc}c shared, {bk}k)"),
+            &big_cm,
+            &big_xs,
+            10,
+        ),
+    ];
+
+    let mut t = Table::new(vec![
+        "model",
+        "scalar us/sample",
+        "bitpar single",
+        "bitpar batched",
+        "bitpar sharded(4)",
+        "best speedup",
+    ]);
+    let mut large_ok = true;
+    for c in &cases {
+        let best = c.batched_us.min(c.single_us).min(c.sharded_us);
+        let speedup = c.scalar_us / best;
+        if c.label.starts_with("large") && speedup < 4.0 {
+            large_ok = false;
+        }
+        t.row(vec![
+            c.label.clone(),
+            format!("{:.2}", c.scalar_us),
+            format!("{:.2} ({:.1}x)", c.single_us, c.scalar_us / c.single_us),
+            format!("{:.2} ({:.1}x)", c.batched_us, c.scalar_us / c.batched_us),
+            format!("{:.2} ({:.1}x)", c.sharded_us, c.scalar_us / c.sharded_us),
+            format!("{speedup:.1}x"),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "large-model target (>=4x over scalar reference): {}",
+        if large_ok { "PASS" } else { "FAIL" }
+    );
+}

@@ -5,7 +5,7 @@
 
 use tsetlin_td::arch::proposed_tm::ProposedMulticlass;
 use tsetlin_td::arch::Architecture;
-use tsetlin_td::tm::{data, infer, train::train_multiclass, TmParams};
+use tsetlin_td::tm::{data, infer, train::train_multiclass, BatchEngine, BitParallelMulticlass, TmParams};
 use tsetlin_td::wta::WtaKind;
 
 fn main() -> tsetlin_td::Result<()> {
@@ -26,6 +26,27 @@ fn main() -> tsetlin_td::Result<()> {
     let model = train_multiclass(params, &train, 30, 1)?;
     let acc = infer::multiclass_accuracy(&model, &test.features, &test.labels);
     println!("software accuracy on clean XOR: {:.1}%", 100.0 * acc);
+
+    // 2b. The production serving path: compile the model into the
+    //     bit-parallel engine (packed-word clause evaluation, batched
+    //     64 samples per word). Bit-exact with the scalar reference.
+    let fast = BitParallelMulticlass::from_model(&model)?;
+    let batch = fast.infer_batch(&test.features);
+    let fast_correct = batch
+        .iter()
+        .zip(&test.labels)
+        .filter(|((_, pred), &y)| *pred == y)
+        .count();
+    println!(
+        "bit-parallel engine: {}/{} batched predictions correct (identical to reference)",
+        fast_correct,
+        test.features.len()
+    );
+    assert_eq!(
+        fast.class_sums(&test.features[0]),
+        infer::multiclass_class_sums(&model, &test.features[0]),
+        "bit-parallel path must be bit-exact"
+    );
 
     // 3. Instantiate the proposed digital-time-domain architecture:
     //    clause evaluation stays digital; class sums become Hamming-race

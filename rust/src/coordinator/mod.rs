@@ -1,23 +1,36 @@
 //! Serving coordinator — the event-driven L3 shell around the inference
 //! backends.
 //!
-//! Routing ([`router`]): every request names a [`router::Backend`] —
-//! either the XLA *golden/functional path* (AOT artifacts via PJRT,
-//! dynamically batched) or one of the six *hardware-model paths*
-//! (event-simulated architectures). The golden path is what a
-//! production deployment would serve from; the hardware paths are the
-//! paper's evaluation targets, served through the same front door so
-//! the equivalence checks and benchmarks exercise identical plumbing.
+//! Routing ([`router`]): every request names a [`router::Backend`] from
+//! one of **three backend tiers**, all served through the same front
+//! door so the equivalence checks and benchmarks exercise identical
+//! plumbing:
 //!
-//! Batching ([`batcher`]): golden requests are coalesced by a dynamic
-//! batcher (flush on size or timeout) onto the fixed-batch AOT
-//! artifacts, padding the tail — the standard serving pattern.
+//! 1. **Golden / functional** (`golden-*`): the AOT-compiled XLA
+//!    artifacts via PJRT — the cross-layer reference. Requires
+//!    artifacts on disk and the `xla` feature.
+//! 2. **Bit-parallel native** (`bitpar-*`): packed-word clause
+//!    evaluation ([`crate::tm::fast_infer`]). The production serving
+//!    tier: no artifact or FFI dependency, bit-exact with the software
+//!    reference, and `Send + Sync`, so *one* engine instance compiled
+//!    from the trained model is shared by every serving thread. Batched
+//!    requests are evaluated 64 samples per word through the bit-sliced
+//!    layout; large flushes shard across scoped threads.
+//! 3. **Hardware models** (`*-sync`, `*-async-bd`, `*-proposed`): the
+//!    paper's six event-simulated architectures — the evaluation
+//!    targets, carrying latency/energy annotations.
+//!
+//! Batching ([`batcher`]): golden and bit-parallel requests are
+//! coalesced by a dynamic batcher (flush on size or timeout); the
+//! golden path pads onto fixed-batch AOT artifacts, the bit-parallel
+//! path takes arbitrary batch shapes natively.
 //!
 //! Concurrency ([`pool`]): hardware models are not `Send` (they embed
 //! `Rc`-coded delay elements), so each worker thread *builds its own*
 //! architecture set from the (Send) trained models and pulls jobs from
 //! a shared queue. The PJRT runtime is likewise thread-pinned
-//! ([`crate::runtime::GoldenService`]).
+//! ([`crate::runtime::GoldenService`]). Only the bit-parallel engines
+//! are shared state — which is why they are the tier that scales.
 //!
 //! Backpressure: a bounded in-flight budget; submissions beyond it are
 //! rejected immediately ([`ServerStats::rejected`] counts them).

@@ -9,6 +9,10 @@ pub enum Backend {
     GoldenMulticlass,
     /// Functional path: AOT CoTM artifact via PJRT (batched).
     GoldenCotm,
+    /// Bit-parallel native CPU path: packed-word clause evaluation,
+    /// dynamically batched (see [`crate::tm::fast_infer`]).
+    BitParallelMulticlass,
+    BitParallelCotm,
     /// Event-simulated hardware models.
     SyncMulticlass,
     AsyncBdMulticlass,
@@ -19,9 +23,11 @@ pub enum Backend {
 }
 
 impl Backend {
-    pub const ALL: [Backend; 8] = [
+    pub const ALL: [Backend; 10] = [
         Backend::GoldenMulticlass,
         Backend::GoldenCotm,
+        Backend::BitParallelMulticlass,
+        Backend::BitParallelCotm,
         Backend::SyncMulticlass,
         Backend::AsyncBdMulticlass,
         Backend::ProposedMulticlass,
@@ -32,6 +38,15 @@ impl Backend {
 
     pub fn is_golden(self) -> bool {
         matches!(self, Backend::GoldenMulticlass | Backend::GoldenCotm)
+    }
+
+    /// Bit-parallel backends: batched like the golden path but executed
+    /// natively, with no artifact dependency.
+    pub fn is_bit_parallel(self) -> bool {
+        matches!(
+            self,
+            Backend::BitParallelMulticlass | Backend::BitParallelCotm
+        )
     }
 
     /// AOT artifact family for golden backends.
@@ -47,6 +62,8 @@ impl Backend {
         match self {
             Backend::GoldenMulticlass => "golden-multiclass",
             Backend::GoldenCotm => "golden-cotm",
+            Backend::BitParallelMulticlass => "bitpar-multiclass",
+            Backend::BitParallelCotm => "bitpar-cotm",
             Backend::SyncMulticlass => "multiclass-sync",
             Backend::AsyncBdMulticlass => "multiclass-async-bd",
             Backend::ProposedMulticlass => "multiclass-proposed",
@@ -100,5 +117,19 @@ mod tests {
         assert_eq!(Backend::SyncCotm.family(), None);
         assert!(Backend::GoldenMulticlass.is_golden());
         assert!(!Backend::ProposedCotm.is_golden());
+    }
+
+    #[test]
+    fn bit_parallel_classification() {
+        assert!(Backend::BitParallelMulticlass.is_bit_parallel());
+        assert!(Backend::BitParallelCotm.is_bit_parallel());
+        assert!(!Backend::BitParallelMulticlass.is_golden());
+        assert_eq!(Backend::BitParallelCotm.family(), None);
+        assert_eq!(
+            Backend::parse("bitpar-multiclass"),
+            Some(Backend::BitParallelMulticlass)
+        );
+        assert!(!Backend::GoldenCotm.is_bit_parallel());
+        assert!(!Backend::SyncMulticlass.is_bit_parallel());
     }
 }

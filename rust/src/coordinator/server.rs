@@ -2,6 +2,10 @@
 //!
 //! * Golden requests → dynamic batcher thread → PJRT golden service
 //!   (thread-pinned runtime).
+//! * Bit-parallel requests → dynamic batcher thread → shared
+//!   `Send + Sync` packed-word engines ([`crate::tm::fast_infer`]),
+//!   with large flushes sharded across scoped threads. No artifacts
+//!   needed — this tier is always available.
 //! * Hardware-model requests → worker pool; each worker owns its own six
 //!   architecture instances built from the trained models.
 //! * Bounded in-flight budget; excess submissions are rejected
@@ -26,6 +30,7 @@ use crate::coordinator::router::{Backend, InferRequest, InferResponse};
 use crate::coordinator::stats::{ServerStats, StatsSnapshot};
 use crate::error::{Error, Result};
 use crate::runtime::golden::{GoldenModels, GoldenService};
+use crate::tm::fast_infer::{BatchEngine, BitParallelCotm, BitParallelMulticlass};
 use crate::tm::{CoTmModel, MultiClassTmModel};
 
 /// Per-worker architecture set (lives inside its worker thread; the
@@ -48,7 +53,7 @@ impl WorkerState {
             Backend::SyncCotm => &mut self.sync_co,
             Backend::AsyncBdCotm => &mut self.async_co,
             Backend::ProposedCotm => &mut self.proposed_co,
-            _ => unreachable!("golden backends are batched, not pooled"),
+            _ => unreachable!("golden and bit-parallel backends are batched, not pooled"),
         }
     }
 }
@@ -56,6 +61,79 @@ impl WorkerState {
 /// A request travelling to the golden batcher.
 struct GoldenItem {
     features: Vec<f32>,
+}
+
+/// A request travelling to a bit-parallel batcher.
+struct BitParItem {
+    features: Vec<bool>,
+}
+
+/// Spawn the relay that converts a batcher's per-item reply into an
+/// [`InferResponse`] with latency/counter accounting — shared by the
+/// golden and bit-parallel batched paths. The relay must not block
+/// `submit()`: a short-lived forwarder thread per request (cheap next
+/// to a PJRT call; see ROADMAP for the relay-free reply design).
+fn spawn_relay<S, F>(
+    inner_rx: mpsc::Receiver<Result<S>>,
+    backend: Backend,
+    stats: Arc<ServerStats>,
+    in_flight: Arc<AtomicU64>,
+    t0: Instant,
+    to_sums: F,
+) -> mpsc::Receiver<Result<InferResponse>>
+where
+    S: Send + 'static,
+    F: FnOnce(S) -> (Vec<i32>, usize) + Send + 'static,
+{
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let result = inner_rx
+            .recv()
+            .map_err(|_| Error::coordinator("batched reply dropped"))
+            .and_then(|r| r)
+            .map(|payload| {
+                let (class_sums, predicted) = to_sums(payload);
+                let service_us = t0.elapsed().as_secs_f64() * 1e6;
+                stats.record_latency_us(service_us);
+                stats.completed.fetch_add(1, Ordering::Relaxed);
+                InferResponse {
+                    backend,
+                    predicted,
+                    class_sums,
+                    hw_latency: None,
+                    hw_energy_fj: None,
+                    service_us,
+                }
+            })
+            .map_err(|e| {
+                stats.failed.fetch_add(1, Ordering::Relaxed);
+                e
+            });
+        in_flight.fetch_sub(1, Ordering::SeqCst);
+        let _ = tx.send(result);
+    });
+    rx
+}
+
+/// Build the dynamic batcher for one bit-parallel engine: each flush is
+/// evaluated through the shared engine's bit-sliced batch path, sharded
+/// across up to `shard_threads` scoped threads when the batch is large
+/// (the engine is `Sync`, so shards borrow it without copying).
+fn bitpar_batcher<E: BatchEngine + Send + 'static>(
+    engine: Arc<E>,
+    max_batch: usize,
+    timeout: Duration,
+    stats: Arc<ServerStats>,
+    shard_threads: usize,
+) -> Result<DynamicBatcher<BitParItem, (Vec<i32>, usize)>> {
+    DynamicBatcher::new(max_batch, timeout, stats, move |items: Vec<&BitParItem>| {
+        let rows: Vec<&[bool]> = items.iter().map(|i| i.features.as_slice()).collect();
+        engine
+            .infer_batch_sharded(&rows, shard_threads)
+            .into_iter()
+            .map(Ok)
+            .collect()
+    })
 }
 
 /// The coordinator server.
@@ -66,6 +144,9 @@ pub struct CoordinatorServer {
     /// One batcher per golden family (they hit different artifacts).
     batcher_mc: Option<DynamicBatcher<GoldenItem, (Vec<f32>, usize)>>,
     batcher_co: Option<DynamicBatcher<GoldenItem, (Vec<f32>, usize)>>,
+    /// One batcher per bit-parallel engine (always available).
+    batcher_bp_mc: Option<DynamicBatcher<BitParItem, (Vec<i32>, usize)>>,
+    batcher_bp_co: Option<DynamicBatcher<BitParItem, (Vec<i32>, usize)>>,
     stats: Arc<ServerStats>,
     in_flight: Arc<AtomicU64>,
     queue_depth: u64,
@@ -102,6 +183,26 @@ impl CoordinatorServer {
             proposed_co: ProposedCotm::new(co.clone(), wta).expect("valid cotm model"),
         })?;
 
+        // Bit-parallel path: one shared Send+Sync engine per family
+        // (compiled once from the trained models — no per-worker
+        // rebuild), each behind its own dynamic batcher.
+        let timeout = Duration::from_micros(cfg.batch_timeout_us);
+        let shard_threads = cfg.workers.max(1);
+        let batcher_bp_mc = bitpar_batcher(
+            Arc::new(BitParallelMulticlass::from_model(&mc_model)?),
+            cfg.max_batch,
+            timeout,
+            Arc::clone(&stats),
+            shard_threads,
+        )?;
+        let batcher_bp_co = bitpar_batcher(
+            Arc::new(BitParallelCotm::from_model(&cotm_model)?),
+            cfg.max_batch,
+            timeout,
+            Arc::clone(&stats),
+            shard_threads,
+        )?;
+
         // Golden path: one PJRT service thread + a batcher per family.
         let (golden, batcher_mc, batcher_co) = if with_golden {
             let svc = GoldenService::spawn(
@@ -112,7 +213,6 @@ impl CoordinatorServer {
                     cotm_weights: cotm_model.weights_f32(),
                 },
             )?;
-            let timeout = Duration::from_micros(cfg.batch_timeout_us);
             let mk = |family: &'static str,
                       client: crate::runtime::golden::GoldenClient,
                       stats: Arc<ServerStats>| {
@@ -140,6 +240,8 @@ impl CoordinatorServer {
             _golden: golden,
             batcher_mc,
             batcher_co,
+            batcher_bp_mc: Some(batcher_bp_mc),
+            batcher_bp_co: Some(batcher_bp_co),
             stats,
             in_flight: Arc::new(AtomicU64::new(0)),
             queue_depth: cfg.queue_depth as u64,
@@ -174,47 +276,41 @@ impl CoordinatorServer {
                 _ => self.batcher_co.as_ref(),
             }
             .ok_or_else(|| {
-                self.in_flight.fetch_sub(1, Ordering::SeqCst);
-                Error::coordinator("golden path disabled (no artifacts)")
+                self.abort_submit(Error::coordinator("golden path disabled (no artifacts)"))
             })?;
             let item = GoldenItem {
                 features: req.features.iter().map(|&b| b as u8 as f32).collect(),
             };
-            let backend = req.backend;
-            let inner_rx = batcher.submit(item)?;
-            // Adapter thread-free reply: wrap in a relay channel so the
-            // caller sees an InferResponse.
-            let (tx, rx) = mpsc::channel();
-            let stats = Arc::clone(&self.stats);
-            let in_flight = Arc::clone(&self.in_flight);
-            // The relay must not block submit(): spawn a lightweight
-            // forwarder (these are short-lived and cheap).
-            std::thread::spawn(move || {
-                let result = inner_rx
-                    .recv()
-                    .map_err(|_| Error::coordinator("golden reply dropped"))
-                    .and_then(|r| r)
-                    .map(|(sums, pred)| {
-                        let service_us = t0.elapsed().as_secs_f64() * 1e6;
-                        stats.record_latency_us(service_us);
-                        stats.completed.fetch_add(1, Ordering::Relaxed);
-                        InferResponse {
-                            backend,
-                            predicted: pred,
-                            class_sums: sums.iter().map(|&x| x as i32).collect(),
-                            hw_latency: None,
-                            hw_energy_fj: None,
-                            service_us,
-                        }
-                    })
-                    .map_err(|e| {
-                        stats.failed.fetch_add(1, Ordering::Relaxed);
-                        e
-                    });
-                in_flight.fetch_sub(1, Ordering::SeqCst);
-                let _ = tx.send(result);
-            });
-            Ok(rx)
+            let inner_rx = batcher.submit(item).map_err(|e| self.abort_submit(e))?;
+            Ok(spawn_relay(
+                inner_rx,
+                req.backend,
+                Arc::clone(&self.stats),
+                Arc::clone(&self.in_flight),
+                t0,
+                |(sums, pred): (Vec<f32>, usize)| {
+                    (sums.iter().map(|&x| x as i32).collect(), pred)
+                },
+            ))
+        } else if req.backend.is_bit_parallel() {
+            let batcher = match req.backend {
+                Backend::BitParallelMulticlass => self.batcher_bp_mc.as_ref(),
+                _ => self.batcher_bp_co.as_ref(),
+            }
+            .ok_or_else(|| {
+                self.abort_submit(Error::coordinator("bit-parallel batcher shut down"))
+            })?;
+            let inner_rx = batcher
+                .submit(BitParItem { features: req.features })
+                .map_err(|e| self.abort_submit(e))?;
+            Ok(spawn_relay(
+                inner_rx,
+                req.backend,
+                Arc::clone(&self.stats),
+                Arc::clone(&self.in_flight),
+                t0,
+                |(sums, pred)| (sums, pred),
+            ))
         } else {
             let (tx, rx) = mpsc::channel();
             let stats = Arc::clone(&self.stats);
@@ -223,7 +319,7 @@ impl CoordinatorServer {
             let features = req.features;
             self.pool
                 .as_ref()
-                .ok_or_else(|| Error::coordinator("pool shut down"))?
+                .ok_or_else(|| self.abort_submit(Error::coordinator("pool shut down")))?
                 .submit(Box::new(move |state: &mut WorkerState| {
                     let result = state
                         .arch(backend)
@@ -247,9 +343,20 @@ impl CoordinatorServer {
                         });
                     in_flight.fetch_sub(1, Ordering::SeqCst);
                     let _ = tx.send(result);
-                }))?;
+                }))
+                .map_err(|e| self.abort_submit(e))?;
             Ok(rx)
         }
+    }
+
+    /// Undo the in-flight/submitted accounting for a request that
+    /// errored out of `submit()` after passing the backpressure gate —
+    /// without this, each such error permanently consumes a slot of
+    /// `queue_depth` and breaks `submitted == completed + failed`.
+    fn abort_submit(&self, e: Error) -> Error {
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+        self.stats.failed.fetch_add(1, Ordering::Relaxed);
+        e
     }
 
     /// Submit and block for the response.
@@ -272,6 +379,12 @@ impl CoordinatorServer {
             b.shutdown();
         }
         if let Some(b) = self.batcher_co.take() {
+            b.shutdown();
+        }
+        if let Some(b) = self.batcher_bp_mc.take() {
+            b.shutdown();
+        }
+        if let Some(b) = self.batcher_bp_co.take() {
             b.shutdown();
         }
     }
@@ -313,6 +426,88 @@ mod tests {
             assert!(r.hw_energy_fj.unwrap() > 0.0);
         }
         assert_eq!(srv.stats().completed, 6);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn bitparallel_backends_serve_without_artifacts() {
+        // The bit-parallel tier needs no AOT artifacts: it must serve
+        // even when the golden path is disabled, and its sums must be
+        // bit-exact against the software reference.
+        let (srv, d) = server(false, None);
+        let dset = data::iris().unwrap();
+        let (tr, _) = dset.split(0.8, 42);
+        let m = train_multiclass(TmParams::iris_paper(), &tr, 20, 2).unwrap();
+        let cm = train_cotm(TmParams::iris_paper(), &tr, 20, 3).unwrap();
+        for i in [0usize, 17, 80, 149] {
+            let r = srv
+                .infer(InferRequest {
+                    features: d.features[i].clone(),
+                    backend: Backend::BitParallelMulticlass,
+                })
+                .unwrap();
+            assert_eq!(r.backend, Backend::BitParallelMulticlass);
+            assert!(r.hw_latency.is_none(), "native path has no hw model");
+            assert_eq!(
+                r.class_sums,
+                crate::tm::infer::multiclass_class_sums(&m, &d.features[i]),
+                "sample {i}"
+            );
+            let r = srv
+                .infer(InferRequest {
+                    features: d.features[i].clone(),
+                    backend: Backend::BitParallelCotm,
+                })
+                .unwrap();
+            assert_eq!(
+                r.class_sums,
+                crate::tm::infer::cotm_class_sums(&cm, &d.features[i]),
+                "sample {i}"
+            );
+        }
+        srv.shutdown();
+    }
+
+    #[test]
+    fn bitparallel_concurrent_submissions_are_batched_and_exact() {
+        // Generous flush timeout so coalescing is deterministic even on
+        // a slow machine (flush-on-size dominates).
+        let cfg = ServeConfig {
+            workers: 2,
+            max_batch: 32,
+            batch_timeout_us: 50_000,
+            ..ServeConfig::default()
+        };
+        let (srv, d) = server(false, Some(cfg));
+        let dset = data::iris().unwrap();
+        let (tr, _) = dset.split(0.8, 42);
+        let m = train_multiclass(TmParams::iris_paper(), &tr, 20, 2).unwrap();
+        let rxs: Vec<_> = (0..100)
+            .map(|i| {
+                (
+                    i,
+                    srv.submit(InferRequest {
+                        features: d.features[i % d.len()].clone(),
+                        backend: Backend::BitParallelMulticlass,
+                    })
+                    .unwrap(),
+                )
+            })
+            .collect();
+        for (i, rx) in rxs {
+            let r = rx
+                .recv_timeout(std::time::Duration::from_secs(30))
+                .unwrap()
+                .unwrap();
+            let want =
+                crate::tm::infer::multiclass_class_sums(&m, &d.features[i % d.len()]);
+            assert_eq!(r.class_sums, want, "request {i}");
+            assert_eq!(r.predicted, crate::tm::infer::predict_argmax(&want));
+        }
+        // The dynamic batcher actually coalesced (not 100 singletons).
+        let snap = srv.stats();
+        assert!(snap.batches_flushed < 100, "batches={}", snap.batches_flushed);
+        assert_eq!(snap.completed, 100);
         srv.shutdown();
     }
 

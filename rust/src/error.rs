@@ -1,45 +1,69 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls —
+//! `thiserror` is unavailable offline).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for every subsystem of the crate.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration file / value errors (parser in [`crate::config`]).
-    #[error("config error: {0}")]
     Config(String),
 
     /// Simulator invariant violations (e.g. event scheduled in the past).
-    #[error("simulation error: {0}")]
     Sim(String),
 
     /// Netlist construction errors (dangling pins, double drivers, ...).
-    #[error("netlist error: {0}")]
     Netlist(String),
 
     /// TM model shape / parameter errors.
-    #[error("model error: {0}")]
     Model(String),
 
     /// AOT artifact loading / manifest errors.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// PJRT runtime failures (compile / execute / literal marshalling).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Coordinator / serving failures (queue closed, worker died, ...).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
-    #[error("i/o error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Sim(m) => write!(f, "simulation error: {m}"),
+            Error::Netlist(m) => write!(f, "netlist error: {m}"),
+            Error::Model(m) => write!(f, "model error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Io(e) => write!(f, "i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(e.to_string())
@@ -68,5 +92,23 @@ impl Error {
     }
     pub fn coordinator(msg: impl Into<String>) -> Self {
         Error::Coordinator(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_subsystem_prefix() {
+        assert_eq!(Error::config("x").to_string(), "config error: x");
+        assert_eq!(Error::coordinator("q").to_string(), "coordinator error: q");
+    }
+
+    #[test]
+    fn io_errors_convert_and_expose_source() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

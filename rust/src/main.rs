@@ -297,7 +297,7 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
         Box::new(async_bd_cotm(cm.clone())),
         Box::new(ProposedCotm::new(cm.clone(), wta)?),
     ];
-    let mut all_ok = true;
+    let mut failures: Vec<String> = Vec::new();
     for a in archs.iter_mut() {
         let mut agree = 0usize;
         for x in &dataset.features {
@@ -310,11 +310,35 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
         let pct = 100.0 * agree as f64 / dataset.len() as f64;
         println!("{:24} argmax agreement {pct:.1}%", a.name());
         if pct < 95.0 {
-            all_ok = false;
+            failures.push(format!("{}: argmax agreement {pct:.1}% < 95%", a.name()));
         }
     }
-    if !all_ok {
-        return Err(Error::model("selfcheck failed: agreement below 95%"));
+    // The bit-parallel tier is held to a stricter bar than the hardware
+    // models: bit-exact class sums, not just argmax agreement.
+    let bp_mc = tm::BitParallelMulticlass::from_model(&m)?;
+    let bp_co = tm::BitParallelCotm::from_model(&cm)?;
+    let mut exact_mc = 0usize;
+    let mut exact_co = 0usize;
+    for x in &dataset.features {
+        if tm::BatchEngine::class_sums(&bp_mc, x) == tm::infer::multiclass_class_sums(&m, x) {
+            exact_mc += 1;
+        }
+        if tm::BatchEngine::class_sums(&bp_co, x) == tm::infer::cotm_class_sums(&cm, x) {
+            exact_co += 1;
+        }
+    }
+    for (name, exact) in [("bitpar-multiclass", exact_mc), ("bitpar-cotm", exact_co)] {
+        let pct = 100.0 * exact as f64 / dataset.len() as f64;
+        println!("{name:24} bit-exact sums    {pct:.1}%");
+        if exact != dataset.len() {
+            failures.push(format!(
+                "{name}: only {exact}/{} samples bit-exact vs reference",
+                dataset.len()
+            ));
+        }
+    }
+    if !failures.is_empty() {
+        return Err(Error::model(format!("selfcheck failed: {}", failures.join("; "))));
     }
     println!("selfcheck OK");
     Ok(())

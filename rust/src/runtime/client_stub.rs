@@ -1,0 +1,67 @@
+//! Stub PJRT client used when the crate is built without the `xla`
+//! feature (the bindings crate is unavailable offline). Mirrors the API
+//! of the real [`Runtime`](crate::runtime::client) so `golden.rs` and
+//! the coordinator compile unchanged; `load` always fails, so the stub
+//! is never actually constructed and every golden request surfaces a
+//! clean "runtime unavailable" error instead of a link failure.
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+
+/// Stand-in for the PJRT runtime. Cannot be constructed (no public
+/// constructor besides the always-failing [`Runtime::load`]).
+pub struct Runtime {
+    pub manifest: Manifest,
+}
+
+fn unavailable() -> Error {
+    Error::runtime(
+        "built without the `xla` feature: the PJRT golden path needs the \
+         xla bindings crate (see Cargo.toml); simulated and bit-parallel \
+         backends remain available",
+    )
+}
+
+impl Runtime {
+    /// Always fails: there is no PJRT client in this build.
+    pub fn load(_artifacts_dir: &str) -> Result<Runtime> {
+        Err(unavailable())
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        "stub (no xla feature)".into()
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| Error::artifact(format!("unknown artifact {name:?}")))
+    }
+
+    /// Execute `name` — always fails in the stub.
+    pub fn execute(&self, _name: &str, _inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        Err(unavailable())
+    }
+
+    /// Execute and split class sums — always fails in the stub.
+    pub fn execute_class_sums(
+        &self,
+        _name: &str,
+        _inputs: &[Vec<f32>],
+    ) -> Result<(Vec<Vec<f32>>, Vec<usize>)> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let err = Runtime::load("artifacts").unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
+    }
+}

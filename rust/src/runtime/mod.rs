@@ -7,7 +7,18 @@
 //! Threading: the `xla` crate's handles wrap raw pointers and are not
 //! `Send`, so [`golden::GoldenService`] owns the whole runtime on one
 //! dedicated thread and serves requests over channels.
+//!
+//! Offline builds: the `xla` bindings crate cannot be vendored into the
+//! offline CI image, so the real client is gated behind the `xla`
+//! feature. Without it, [`client_stub`] provides the same API and
+//! `Runtime::load` fails with a clear error — the coordinator's golden
+//! backends then report "golden path disabled" while the simulated and
+//! bit-parallel backends keep serving.
 
+#[cfg(feature = "xla")]
+pub mod client;
+#[cfg(not(feature = "xla"))]
+#[path = "client_stub.rs"]
 pub mod client;
 pub mod golden;
 pub mod manifest;

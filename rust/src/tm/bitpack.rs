@@ -1,0 +1,344 @@
+//! Word-packed representations for bit-parallel TM inference.
+//!
+//! A clause fires iff every *included* literal is 1 (`AND` over the
+//! included literals). Packing the 2F interleaved literals and each
+//! clause's include mask into `u64` words turns that reduction into
+//! `include & !literals == 0` checked word-by-word — 64 literals per
+//! instruction instead of a per-literal `bool` loop — the word-level
+//! trick from "Fast and Compact Tsetlin Machine Inference on CPUs"
+//! (arXiv 2510.15653).
+//!
+//! Two complementary layouts:
+//!
+//! * **Literal-major single sample** ([`pack_literals`] +
+//!   [`PackedClause::evaluate`]): one sample's 2F literals as
+//!   `ceil(2F/64)` words; each clause keeps a skip list of its non-zero
+//!   include words so sparse clauses touch only the words they
+//!   constrain (the clause-indexing idea of arXiv 2004.03188 applied at
+//!   word granularity).
+//! * **Sample-major batch** ([`BitSlicedBatch`] +
+//!   [`PackedClause::evaluate_batch`]): a bit-sliced transpose where
+//!   word `column[l][blk]` holds literal `l` of samples
+//!   `blk*64 .. blk*64+63`, one sample per bit. A clause then ANDs one
+//!   column per included literal and produces 64 clause outputs per
+//!   word — the batched path the serving coordinator flushes through.
+//!
+//! Semantics are pinned to the scalar reference
+//! ([`ClauseMask::evaluate`]): an **empty clause** (all-exclude mask —
+//! which is also what a zero-feature clause degenerates to) outputs 0
+//! at inference, even though the AND-of-nothing reading would be
+//! "always include ⇒ always fire". The conformance suite
+//! (`tests/bitparallel_equivalence.rs`) holds every path to bit-exact
+//! agreement with the reference, so this convention is load-bearing.
+
+use super::model::ClauseMask;
+
+/// Bits per packed word.
+pub const WORD_BITS: usize = 64;
+
+/// Number of `u64` words needed to hold `bits` bits.
+pub fn words_for(bits: usize) -> usize {
+    bits.div_ceil(WORD_BITS)
+}
+
+/// Pack a bool slice into little-endian words: element `i` lands in bit
+/// `i % 64` of word `i / 64`. Tail padding bits are zero.
+pub fn pack_bools(bits: &[bool]) -> Vec<u64> {
+    let mut words = vec![0u64; words_for(bits.len())];
+    for (i, &b) in bits.iter().enumerate() {
+        if b {
+            words[i / WORD_BITS] |= 1u64 << (i % WORD_BITS);
+        }
+    }
+    words
+}
+
+/// Pack one sample's interleaved literals (`lit[2i] = x_i`,
+/// `lit[2i+1] = ¬x_i`) directly from the feature vector, skipping the
+/// intermediate `Vec<bool>` that [`super::model::make_literals`] builds.
+/// Exactly one of each literal pair is set, so tail padding (when
+/// `2F % 64 != 0`) stays zero.
+pub fn pack_literals(features: &[bool]) -> Vec<u64> {
+    let mut words = vec![0u64; words_for(2 * features.len())];
+    for (i, &f) in features.iter().enumerate() {
+        let pos = 2 * i + usize::from(!f);
+        words[pos / WORD_BITS] |= 1u64 << (pos % WORD_BITS);
+    }
+    words
+}
+
+/// One clause's include mask, packed for both evaluation layouts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedClause {
+    /// Include mask over 2F literals, zero-padded to word width.
+    pub include: Vec<u64>,
+    /// Indices of non-zero `include` words (skip list): sparse clauses
+    /// constrain few words, so only those are checked per sample.
+    pub nonzero_words: Vec<u32>,
+    /// Sorted indices of the included literals (for the batched path).
+    pub literals: Vec<u32>,
+}
+
+impl PackedClause {
+    /// Pack a [`ClauseMask`] (include mask over the 2F interleaved
+    /// literals).
+    pub fn from_mask(mask: &ClauseMask) -> PackedClause {
+        let include = pack_bools(&mask.include);
+        let nonzero_words = include
+            .iter()
+            .enumerate()
+            .filter(|(_, &w)| w != 0)
+            .map(|(i, _)| i as u32)
+            .collect();
+        let literals = mask
+            .include
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b)
+            .map(|(i, _)| i as u32)
+            .collect();
+        PackedClause { include, nonzero_words, literals }
+    }
+
+    /// Empty clause = all-exclude mask (fires never, matching the
+    /// reference's inference convention).
+    pub fn is_empty(&self) -> bool {
+        self.nonzero_words.is_empty()
+    }
+
+    pub fn included_count(&self) -> usize {
+        self.literals.len()
+    }
+
+    /// Evaluate against one packed literal vector ([`pack_literals`]):
+    /// fires iff `include & !literals == 0` in every non-zero word.
+    pub fn evaluate(&self, literal_words: &[u64]) -> bool {
+        if self.is_empty() {
+            return false;
+        }
+        self.nonzero_words.iter().all(|&w| {
+            let w = w as usize;
+            self.include[w] & !literal_words[w] == 0
+        })
+    }
+
+    /// Evaluate 64 samples at once against one block of a
+    /// [`BitSlicedBatch`]: returns a word with bit `s` = clause output
+    /// for sample `blk*64 + s`. Padding sample bits come back 0 because
+    /// their literal columns are all-zero (and empty clauses return 0
+    /// outright).
+    pub fn evaluate_batch(&self, batch: &BitSlicedBatch, blk: usize) -> u64 {
+        if self.is_empty() {
+            return 0;
+        }
+        let mut acc = !0u64;
+        for &l in &self.literals {
+            acc &= batch.column(l as usize)[blk];
+            if acc == 0 {
+                break;
+            }
+        }
+        acc & batch.valid_mask(blk)
+    }
+}
+
+/// A batch of samples in bit-sliced (sample-major) layout: for each of
+/// the 2F literals, `blocks` words whose bit `s` is that literal's value
+/// for sample `blk*64 + s`.
+#[derive(Debug, Clone)]
+pub struct BitSlicedBatch {
+    /// `2F * blocks` words, literal-major (`column(l)` is contiguous).
+    columns: Vec<u64>,
+    /// Boolean input features per sample (F).
+    pub features: usize,
+    /// Samples in the batch.
+    pub samples: usize,
+    /// `ceil(samples / 64)` words per literal column.
+    pub blocks: usize,
+}
+
+impl BitSlicedBatch {
+    /// Transpose `rows` (each a length-F feature vector) into bit-sliced
+    /// literal columns. Panics if a row width differs from `features`
+    /// (callers validate widths at the serving boundary).
+    pub fn pack<R: AsRef<[bool]>>(rows: &[R], features: usize) -> BitSlicedBatch {
+        let samples = rows.len();
+        let blocks = words_for(samples.max(1));
+        let mut columns = vec![0u64; 2 * features * blocks];
+        for (s, row) in rows.iter().enumerate() {
+            let row = row.as_ref();
+            assert_eq!(row.len(), features, "batch row width mismatch");
+            let (blk, bit) = (s / WORD_BITS, 1u64 << (s % WORD_BITS));
+            for (i, &f) in row.iter().enumerate() {
+                let lit = 2 * i + usize::from(!f);
+                columns[lit * blocks + blk] |= bit;
+            }
+        }
+        BitSlicedBatch { columns, features, samples, blocks }
+    }
+
+    /// The packed column of literal `l` (`blocks` words).
+    #[inline]
+    pub fn column(&self, l: usize) -> &[u64] {
+        &self.columns[l * self.blocks..(l + 1) * self.blocks]
+    }
+
+    /// Mask of valid sample bits in block `blk` (all-ones except the
+    /// final partial block).
+    #[inline]
+    pub fn valid_mask(&self, blk: usize) -> u64 {
+        let used = self.samples - blk * WORD_BITS;
+        if used >= WORD_BITS {
+            !0
+        } else {
+            (1u64 << used) - 1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::model::make_literals;
+
+    fn mask(include: Vec<bool>) -> ClauseMask {
+        ClauseMask { include }
+    }
+
+    #[test]
+    fn words_for_boundaries() {
+        assert_eq!(words_for(0), 0);
+        assert_eq!(words_for(1), 1);
+        assert_eq!(words_for(64), 1);
+        assert_eq!(words_for(65), 2);
+        assert_eq!(words_for(128), 2);
+        assert_eq!(words_for(129), 3);
+    }
+
+    #[test]
+    fn pack_literals_matches_pack_bools_of_make_literals() {
+        // The direct packing must agree with the two-step reference
+        // packing, including at the 64-literal (= 32-feature) boundary.
+        for f in [1usize, 2, 31, 32, 33, 64, 65] {
+            let feats: Vec<bool> = (0..f).map(|i| i % 3 == 0).collect();
+            assert_eq!(
+                pack_literals(&feats),
+                pack_bools(&make_literals(&feats)),
+                "features={f}"
+            );
+        }
+    }
+
+    #[test]
+    fn features_64_and_65_boundary_packing() {
+        // F=32 -> exactly one word of literals; F=33 -> 65 literals + a
+        // tail word whose padding must be zero.
+        let f32_feats = vec![true; 32];
+        let w = pack_literals(&f32_feats);
+        assert_eq!(w.len(), 1);
+        // Every even bit set (x_i = 1), every odd bit clear (¬x_i = 0).
+        assert_eq!(w[0], 0x5555_5555_5555_5555);
+
+        let f33_feats = vec![true; 33];
+        let w = pack_literals(&f33_feats);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0], 0x5555_5555_5555_5555);
+        assert_eq!(w[1], 0b01, "only literal 64 (= x_32) set; padding zero");
+    }
+
+    #[test]
+    fn all_exclude_mask_never_fires() {
+        // Empty clause (all-exclude) outputs 0 at inference, exactly as
+        // the scalar reference does — not the "AND of nothing is true"
+        // reading. A zero-feature clause is the same degenerate case.
+        let pc = PackedClause::from_mask(&mask(vec![false; 10]));
+        assert!(pc.is_empty());
+        assert!(!pc.evaluate(&pack_literals(&[true; 5])));
+        assert!(!mask(vec![false; 10]).evaluate(&make_literals(&[true; 5])));
+
+        let zero_feature = PackedClause::from_mask(&mask(Vec::new()));
+        assert!(zero_feature.is_empty());
+        assert!(!zero_feature.evaluate(&[]));
+    }
+
+    #[test]
+    fn skip_list_only_names_nonzero_words() {
+        // 2F = 192 literals, includes only in the last word.
+        let mut inc = vec![false; 192];
+        inc[130] = true;
+        inc[191] = true;
+        let pc = PackedClause::from_mask(&mask(inc));
+        assert_eq!(pc.include.len(), 3);
+        assert_eq!(pc.nonzero_words, vec![2]);
+        assert_eq!(pc.literals, vec![130, 191]);
+        assert_eq!(pc.included_count(), 2);
+    }
+
+    #[test]
+    fn packed_evaluate_matches_scalar_on_word_boundary_literals() {
+        // Clause includes literal 63 and literal 64 — straddles the
+        // first/second word boundary; catches shift/index off-by-ones.
+        let f = 40; // 80 literals, 2 words
+        let mut inc = vec![false; 2 * f];
+        inc[63] = true; // ¬x_31
+        inc[64] = true; // x_32
+        let m = mask(inc);
+        let pc = PackedClause::from_mask(&m);
+        for (x31, x32) in [(false, true), (true, true), (false, false)] {
+            let mut feats = vec![false; f];
+            feats[31] = x31;
+            feats[32] = x32;
+            assert_eq!(
+                pc.evaluate(&pack_literals(&feats)),
+                m.evaluate(&make_literals(&feats)),
+                "x31={x31} x32={x32}"
+            );
+            assert_eq!(pc.evaluate(&pack_literals(&feats)), !x31 && x32);
+        }
+    }
+
+    #[test]
+    fn single_sample_and_batched_agree() {
+        // 5 features, 3 clauses, 67 samples (crosses the 64-sample block
+        // boundary): bit `s` of each batch word must equal the
+        // single-sample result.
+        let f = 5;
+        let masks = [
+            mask((0..2 * f).map(|i| i % 4 == 0).collect()),
+            mask(vec![false; 2 * f]), // empty
+            mask((0..2 * f).map(|i| i == 3).collect()),
+        ];
+        let samples: Vec<Vec<bool>> = (0..67u32)
+            .map(|s| (0..f).map(|i| (s >> (i % 7)) & 1 == 1).collect())
+            .collect();
+        let rows: Vec<&[bool]> = samples.iter().map(|r| r.as_slice()).collect();
+        let batch = BitSlicedBatch::pack(&rows, f);
+        assert_eq!(batch.blocks, 2);
+        assert_eq!(batch.valid_mask(0), !0);
+        assert_eq!(batch.valid_mask(1), 0b111);
+        for m in &masks {
+            let pc = PackedClause::from_mask(m);
+            for (s, sample) in samples.iter().enumerate() {
+                let single = pc.evaluate(&pack_literals(sample));
+                let word = pc.evaluate_batch(&batch, s / WORD_BITS);
+                let batched = (word >> (s % WORD_BITS)) & 1 == 1;
+                assert_eq!(single, batched, "sample {s}");
+                assert_eq!(single, m.evaluate(&make_literals(sample)), "sample {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_padding_bits_are_zero() {
+        // An always-firing clause (includes a literal every sample has
+        // set) must still leave padding bits clear in the tail block.
+        let f = 2;
+        let samples = vec![vec![true, false]; 3];
+        let rows: Vec<&[bool]> = samples.iter().map(|r| r.as_slice()).collect();
+        let batch = BitSlicedBatch::pack(&rows, f);
+        let mut inc = vec![false; 4];
+        inc[0] = true; // x_0, set in every sample
+        let pc = PackedClause::from_mask(&mask(inc));
+        assert_eq!(pc.evaluate_batch(&batch, 0), 0b111);
+    }
+}

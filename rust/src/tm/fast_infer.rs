@@ -1,0 +1,361 @@
+//! Bit-parallel inference engines — the production CPU serving path.
+//!
+//! [`BitParallelMulticlass`] and [`BitParallelCotm`] precompile a
+//! trained model into the packed clause plans of [`super::bitpack`]:
+//! clause evaluation becomes word-wide `AND`/compare instead of
+//! per-literal `bool` loops, and batched requests are evaluated 64
+//! samples per word through the bit-sliced layout. Both engines are
+//! plain owned data — `Send + Sync` — so one shared instance serves
+//! every coordinator thread, unlike the `Rc`-coded hardware models that
+//! must be rebuilt per worker.
+//!
+//! Bit-exactness contract (§III-A): class sums and argmax must equal
+//! [`super::infer::multiclass_class_sums`] /
+//! [`super::infer::cotm_class_sums`] and
+//! [`super::infer::predict_argmax`] on every input — enforced by
+//! `tests/bitparallel_equivalence.rs`.
+
+use super::bitpack::{pack_literals, words_for, BitSlicedBatch, PackedClause, WORD_BITS};
+use super::infer::predict_argmax;
+use super::model::{CoTmModel, MultiClassTmModel, TmParams};
+use crate::error::Result;
+
+/// Per-sample result of a batched evaluation: `(class_sums, argmax)`.
+pub type BatchResult = (Vec<i32>, usize);
+
+/// Common surface of the bit-parallel engines, plus a provided
+/// scoped-thread sharding of large batches (the engines are `Sync`, so
+/// shards share `&self` with zero copying).
+pub trait BatchEngine: Sync {
+    /// Boolean feature width F the engine was compiled for.
+    fn features(&self) -> usize;
+
+    /// Number of classes K.
+    fn classes(&self) -> usize;
+
+    /// Class sums for a single sample (must be length-F).
+    fn class_sums(&self, features: &[bool]) -> Vec<i32>;
+
+    /// Evaluate a batch of samples via the bit-sliced layout.
+    fn infer_batch<R: AsRef<[bool]> + Sync>(&self, rows: &[R]) -> Vec<BatchResult>;
+
+    /// Single-sample prediction (lowest-index tie-break, matching
+    /// [`predict_argmax`]).
+    fn predict(&self, features: &[bool]) -> usize {
+        predict_argmax(&self.class_sums(features))
+    }
+
+    /// Shard a large batch across up to `max_threads` scoped threads.
+    /// Order-preserving; falls back to single-threaded evaluation for
+    /// small batches where transpose + spawn overhead dominates.
+    fn infer_batch_sharded<R: AsRef<[bool]> + Sync>(
+        &self,
+        rows: &[R],
+        max_threads: usize,
+    ) -> Vec<BatchResult> {
+        let n = rows.len();
+        if max_threads <= 1 || n < 2 * WORD_BITS {
+            return self.infer_batch(rows);
+        }
+        // One shard per whole 64-sample block, at most `max_threads`.
+        let shards = max_threads.min(n.div_ceil(WORD_BITS));
+        let chunk = n.div_ceil(shards).div_ceil(WORD_BITS) * WORD_BITS;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = rows
+                .chunks(chunk)
+                .map(|c| s.spawn(move || self.infer_batch(c)))
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("batch shard panicked"))
+                .collect()
+        })
+    }
+}
+
+/// Bit-parallel multi-class TM engine: per class, packed clause plans
+/// with alternating +/− polarity (Eq. 1).
+#[derive(Debug, Clone)]
+pub struct BitParallelMulticlass {
+    pub params: TmParams,
+    /// `[class][clause]` packed plans.
+    clauses: Vec<Vec<PackedClause>>,
+}
+
+impl BitParallelMulticlass {
+    /// Compile a validated model into packed clause plans.
+    pub fn from_model(model: &MultiClassTmModel) -> Result<BitParallelMulticlass> {
+        model.validate()?;
+        let clauses = model
+            .clauses
+            .iter()
+            .map(|class| class.iter().map(PackedClause::from_mask).collect())
+            .collect();
+        Ok(BitParallelMulticlass { params: model.params.clone(), clauses })
+    }
+
+    /// Words per packed literal vector (`ceil(2F/64)`).
+    pub fn literal_words(&self) -> usize {
+        words_for(2 * self.params.features)
+    }
+
+    /// Class sums from an already-packed literal vector
+    /// ([`pack_literals`]) — lets callers amortise packing across the
+    /// K·C clause evaluations.
+    pub fn class_sums_packed(&self, literal_words: &[u64]) -> Vec<i32> {
+        debug_assert_eq!(literal_words.len(), self.literal_words());
+        self.clauses
+            .iter()
+            .map(|class| {
+                let mut sum = 0i32;
+                for (j, pc) in class.iter().enumerate() {
+                    if pc.evaluate(literal_words) {
+                        sum += if j % 2 == 0 { 1 } else { -1 };
+                    }
+                }
+                sum
+            })
+            .collect()
+    }
+}
+
+impl BatchEngine for BitParallelMulticlass {
+    fn features(&self) -> usize {
+        self.params.features
+    }
+
+    fn classes(&self) -> usize {
+        self.params.classes
+    }
+
+    fn class_sums(&self, features: &[bool]) -> Vec<i32> {
+        assert_eq!(
+            features.len(),
+            self.params.features,
+            "feature width mismatch"
+        );
+        self.class_sums_packed(&pack_literals(features))
+    }
+
+    fn infer_batch<R: AsRef<[bool]> + Sync>(&self, rows: &[R]) -> Vec<BatchResult> {
+        let batch = BitSlicedBatch::pack(rows, self.params.features);
+        let (n, k) = (batch.samples, self.params.classes);
+        // Sample-major accumulator: sums[s*k + class].
+        let mut sums = vec![0i32; n * k];
+        for (ci, class) in self.clauses.iter().enumerate() {
+            for (j, pc) in class.iter().enumerate() {
+                let polarity = if j % 2 == 0 { 1 } else { -1 };
+                for blk in 0..batch.blocks {
+                    let mut word = pc.evaluate_batch(&batch, blk);
+                    while word != 0 {
+                        let s = blk * WORD_BITS + word.trailing_zeros() as usize;
+                        sums[s * k + ci] += polarity;
+                        word &= word - 1;
+                    }
+                }
+            }
+        }
+        collect_rows(&sums, n, k)
+    }
+}
+
+/// Bit-parallel CoTM engine: one shared packed clause pool plus the
+/// signed weight matrix, stored clause-major so a firing clause adds its
+/// whole weight column (Eq. 2).
+#[derive(Debug, Clone)]
+pub struct BitParallelCotm {
+    pub params: TmParams,
+    clauses: Vec<PackedClause>,
+    /// `[clause][class]` weight columns (transposed from the model's
+    /// `[class][clause]` for contiguous access per firing clause).
+    weight_cols: Vec<Vec<i32>>,
+}
+
+impl BitParallelCotm {
+    /// Compile a validated model into packed clause plans.
+    pub fn from_model(model: &CoTmModel) -> Result<BitParallelCotm> {
+        model.validate()?;
+        let clauses: Vec<PackedClause> =
+            model.clauses.iter().map(PackedClause::from_mask).collect();
+        let weight_cols = (0..model.params.clauses)
+            .map(|j| model.weights.iter().map(|row| row[j]).collect())
+            .collect();
+        Ok(BitParallelCotm { params: model.params.clone(), clauses, weight_cols })
+    }
+
+    /// Words per packed literal vector (`ceil(2F/64)`).
+    pub fn literal_words(&self) -> usize {
+        words_for(2 * self.params.features)
+    }
+
+    /// Class sums from an already-packed literal vector.
+    pub fn class_sums_packed(&self, literal_words: &[u64]) -> Vec<i32> {
+        debug_assert_eq!(literal_words.len(), self.literal_words());
+        let mut sums = vec![0i32; self.params.classes];
+        for (pc, wcol) in self.clauses.iter().zip(&self.weight_cols) {
+            if pc.evaluate(literal_words) {
+                for (s, &w) in sums.iter_mut().zip(wcol) {
+                    *s += w;
+                }
+            }
+        }
+        sums
+    }
+}
+
+impl BatchEngine for BitParallelCotm {
+    fn features(&self) -> usize {
+        self.params.features
+    }
+
+    fn classes(&self) -> usize {
+        self.params.classes
+    }
+
+    fn class_sums(&self, features: &[bool]) -> Vec<i32> {
+        assert_eq!(
+            features.len(),
+            self.params.features,
+            "feature width mismatch"
+        );
+        self.class_sums_packed(&pack_literals(features))
+    }
+
+    fn infer_batch<R: AsRef<[bool]> + Sync>(&self, rows: &[R]) -> Vec<BatchResult> {
+        let batch = BitSlicedBatch::pack(rows, self.params.features);
+        let (n, k) = (batch.samples, self.params.classes);
+        let mut sums = vec![0i32; n * k];
+        for (pc, wcol) in self.clauses.iter().zip(&self.weight_cols) {
+            for blk in 0..batch.blocks {
+                let mut word = pc.evaluate_batch(&batch, blk);
+                while word != 0 {
+                    let s = blk * WORD_BITS + word.trailing_zeros() as usize;
+                    let row = &mut sums[s * k..(s + 1) * k];
+                    for (acc, &w) in row.iter_mut().zip(wcol) {
+                        *acc += w;
+                    }
+                    word &= word - 1;
+                }
+            }
+        }
+        collect_rows(&sums, n, k)
+    }
+}
+
+/// Split a sample-major accumulator into per-sample `(sums, argmax)`.
+fn collect_rows(sums: &[i32], n: usize, k: usize) -> Vec<BatchResult> {
+    (0..n)
+        .map(|s| {
+            let row = sums[s * k..(s + 1) * k].to_vec();
+            let pred = predict_argmax(&row);
+            (row, pred)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::infer::{cotm_class_sums, multiclass_class_sums};
+    use crate::tm::model::ClauseMask;
+
+    fn tiny_params() -> TmParams {
+        TmParams {
+            features: 2,
+            clauses: 2,
+            classes: 2,
+            ..TmParams::iris_paper()
+        }
+    }
+
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn engines_are_send_and_sync() {
+        // The whole point of this backend: shareable across the
+        // coordinator's threads without per-worker rebuilds.
+        assert_send_sync::<BitParallelMulticlass>();
+        assert_send_sync::<BitParallelCotm>();
+    }
+
+    /// Same hand-worked example as infer.rs / python/tests/test_model.py.
+    #[test]
+    fn hand_worked_multiclass_matches_reference() {
+        let mut m = MultiClassTmModel::zeroed(tiny_params());
+        m.clauses[0][0].include[0] = true; // class0 clause0 (+): x0
+        m.clauses[0][1].include[3] = true; // class0 clause1 (−): ¬x1
+        m.clauses[1][0].include[1] = true; // class1 clause0 (+): ¬x0
+        m.clauses[1][1].include[2] = true; // class1 clause1 (−): x1
+        let e = BitParallelMulticlass::from_model(&m).unwrap();
+        for x in [[true, false], [true, true], [false, false], [false, true]] {
+            assert_eq!(e.class_sums(&x), multiclass_class_sums(&m, &x), "{x:?}");
+        }
+        assert_eq!(e.class_sums(&[true, true]), vec![1, -1]);
+        assert_eq!(e.predict(&[true, true]), 0);
+    }
+
+    #[test]
+    fn hand_worked_cotm_matches_reference() {
+        let mut m = CoTmModel::zeroed(tiny_params());
+        m.clauses[0].include[0] = true; // clause0: x0
+        m.clauses[1].include[2] = true; // clause1: x1
+        m.weights = vec![vec![3, -2], vec![-1, 4]];
+        let e = BitParallelCotm::from_model(&m).unwrap();
+        for x in [[true, true], [true, false], [false, false]] {
+            assert_eq!(e.class_sums(&x), cotm_class_sums(&m, &x), "{x:?}");
+        }
+        assert_eq!(e.class_sums(&[true, true]), vec![1, 3]);
+    }
+
+    #[test]
+    fn from_model_rejects_invalid_models() {
+        let odd = TmParams { clauses: 7, ..tiny_params() };
+        assert!(BitParallelMulticlass::from_model(&MultiClassTmModel::zeroed(odd)).is_err());
+        let mut cm = CoTmModel::zeroed(tiny_params());
+        cm.weights[0][0] = cm.params.max_weight + 1;
+        assert!(BitParallelCotm::from_model(&cm).is_err());
+    }
+
+    #[test]
+    fn batched_agrees_with_single_sample_across_block_boundary() {
+        // 130 samples = 2 full 64-sample blocks + a 2-sample tail.
+        let p = TmParams { features: 5, clauses: 4, classes: 3, ..tiny_params() };
+        let mut m = MultiClassTmModel::zeroed(p.clone());
+        for (ci, class) in m.clauses.iter_mut().enumerate() {
+            for (j, cl) in class.iter_mut().enumerate() {
+                *cl = ClauseMask {
+                    include: (0..10).map(|l| (l + ci + j) % 3 == 0).collect(),
+                };
+            }
+        }
+        let e = BitParallelMulticlass::from_model(&m).unwrap();
+        let rows: Vec<Vec<bool>> = (0..130u32)
+            .map(|s| (0..5).map(|i| (s >> i) & 1 == 1).collect())
+            .collect();
+        let batched = e.infer_batch(&rows);
+        assert_eq!(batched.len(), 130);
+        for (s, (sums, pred)) in batched.iter().enumerate() {
+            assert_eq!(sums, &e.class_sums(&rows[s]), "sample {s}");
+            assert_eq!(*pred, predict_argmax(sums), "sample {s}");
+        }
+        // Sharded evaluation is a pure reordering of the same work.
+        assert_eq!(e.infer_batch_sharded(&rows, 4), batched);
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let e = BitParallelMulticlass::from_model(&MultiClassTmModel::zeroed(tiny_params()))
+            .unwrap();
+        assert!(e.infer_batch(&Vec::<Vec<bool>>::new()).is_empty());
+    }
+
+    #[test]
+    fn all_empty_clauses_give_zero_sums() {
+        // Zeroed model: every clause is all-exclude -> sums all zero,
+        // argmax 0, in both single and batched paths.
+        let e = BitParallelCotm::from_model(&CoTmModel::zeroed(tiny_params())).unwrap();
+        assert_eq!(e.class_sums(&[true, false]), vec![0, 0]);
+        let out = e.infer_batch(&[vec![true, false], vec![false, true]]);
+        assert_eq!(out, vec![(vec![0, 0], 0), (vec![0, 0], 0)]);
+    }
+}

@@ -1,4 +1,5 @@
 //! Tsetlin Machine substrate: model structures, software inference,
+//! bit-parallel production inference ([`bitpack`] + [`fast_infer`]),
 //! training (multi-class TM and Coalesced TM), feature booleanisation,
 //! datasets, and model (de)serialisation.
 //!
@@ -7,16 +8,20 @@
 //! against the AOT-compiled L2 JAX model and against every hardware
 //! architecture in `tests/equivalence.rs`, mirroring §III-A).
 
+pub mod bitpack;
 pub mod booleanize;
 pub mod cotm_train;
 pub mod data;
+pub mod fast_infer;
 pub mod infer;
 pub mod iris_data;
 pub mod model;
 pub mod serde;
 pub mod train;
 
+pub use bitpack::{BitSlicedBatch, PackedClause};
 pub use booleanize::Booleanizer;
 pub use data::Dataset;
+pub use fast_infer::{BatchEngine, BitParallelCotm, BitParallelMulticlass};
 pub use infer::{cotm_class_sums, multiclass_class_sums, predict_argmax};
 pub use model::{ClauseMask, CoTmModel, MultiClassTmModel, TmParams};

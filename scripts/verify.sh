@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Tier-1 verify + bench compilation, as one command:
+#
+#   scripts/verify.sh
+#
+# Runs: cargo build --release && cargo test -q && cargo bench --no-run
+# (benches are plain `harness = false` mains — `--no-run` proves they
+# compile without paying their full runtime).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "verify.sh: cargo not found on PATH." >&2
+    echo "This image carries only the Python/JAX side of the stack; the" >&2
+    echo "Rust tier-1 suite needs a Rust toolchain (rustup default stable)." >&2
+    exit 1
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo bench --no-run =="
+cargo bench --no-run
+
+echo "verify.sh: OK"

@@ -164,6 +164,58 @@ fn all_six_reach_iris_accuracy() {
 }
 
 #[test]
+fn bitparallel_front_door_serves_random_models_concurrently() {
+    // The serving plumbing (submit -> dynamic batcher -> shared
+    // bit-parallel engine -> relay) must not corrupt results: random
+    // models, concurrent mixed submissions through the coordinator's
+    // Backend::BitParallel* front door, bit-exact sums out.
+    use tsetlin_td::config::ServeConfig;
+    use tsetlin_td::coordinator::{Backend, CoordinatorServer, InferRequest};
+
+    prop("bitparallel front door", 5, |g| {
+        let f = g.usize(2..12);
+        let c = 2 * g.usize(1..4);
+        let k = g.usize(2..4);
+        let m = random_multiclass(g, f, c, k);
+        let cm = random_cotm(g, f, c, k);
+        let cfg = ServeConfig {
+            workers: 2,
+            max_batch: 16,
+            ..ServeConfig::default()
+        };
+        let srv = CoordinatorServer::new(&cfg, m.clone(), cm.clone(), false).unwrap();
+        let samples: Vec<Vec<bool>> = (0..48).map(|_| g.bools(f)).collect();
+        let pending: Vec<_> = samples
+            .iter()
+            .enumerate()
+            .map(|(i, x)| {
+                let backend = if i % 2 == 0 {
+                    Backend::BitParallelMulticlass
+                } else {
+                    Backend::BitParallelCotm
+                };
+                (i, backend, srv.submit(InferRequest { features: x.clone(), backend }).unwrap())
+            })
+            .collect();
+        for (i, backend, rx) in pending {
+            let r = rx
+                .recv_timeout(std::time::Duration::from_secs(30))
+                .expect("reply within deadline")
+                .expect("bit-parallel request served");
+            assert_eq!(r.backend, backend);
+            let want = if backend == Backend::BitParallelMulticlass {
+                multiclass_class_sums(&m, &samples[i])
+            } else {
+                cotm_class_sums(&cm, &samples[i])
+            };
+            assert_eq!(r.class_sums, want, "request {i} via {backend:?}");
+            assert_eq!(r.predicted, predict_argmax(&want), "request {i}");
+        }
+        srv.shutdown();
+    });
+}
+
+#[test]
 fn wta_choice_does_not_change_multiclass_results() {
     let d = data::iris().unwrap();
     let (tr, _) = d.split(0.8, 42);
