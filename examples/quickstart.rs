@@ -5,7 +5,12 @@
 
 use tsetlin_td::arch::proposed_tm::ProposedMulticlass;
 use tsetlin_td::arch::Architecture;
-use tsetlin_td::tm::{data, infer, train::train_multiclass, BatchEngine, BitParallelMulticlass, TmParams};
+use tsetlin_td::config::ServeConfig;
+use tsetlin_td::coordinator::{Backend, InferRequest, ShardedCoordinator};
+use tsetlin_td::tm::{
+    cotm_train::train_cotm, data, infer, train::train_multiclass, BatchEngine,
+    BitParallelMulticlass, TmParams,
+};
 use tsetlin_td::wta::WtaKind;
 
 fn main() -> tsetlin_td::Result<()> {
@@ -23,7 +28,7 @@ fn main() -> tsetlin_td::Result<()> {
         specificity: 3.0,
         max_weight: 7,
     };
-    let model = train_multiclass(params, &train, 30, 1)?;
+    let model = train_multiclass(params.clone(), &train, 30, 1)?;
     let acc = infer::multiclass_accuracy(&model, &test.features, &test.labels);
     println!("software accuracy on clean XOR: {:.1}%", 100.0 * acc);
 
@@ -47,6 +52,39 @@ fn main() -> tsetlin_td::Result<()> {
         infer::multiclass_class_sums(&model, &test.features[0]),
         "bit-parallel path must be bit-exact"
     );
+
+    // 2c. Scale-out serving: front two coordinator shards with a
+    //     deterministic consistent-hash ring. The same feature vector
+    //     always routes to the same shard, batched replies come back
+    //     relay-free on the caller's channel, and every shard is
+    //     bit-exact with the scalar reference.
+    let cotm = train_cotm(params, &train, 30, 2)?;
+    let cfg = ServeConfig {
+        shards: 2,
+        workers: 1,
+        max_batch: 8,
+        ..ServeConfig::default()
+    };
+    let srv = ShardedCoordinator::new(&cfg, model.clone(), cotm, false)?;
+    for x in test.features.iter().take(8) {
+        let r = srv.infer(InferRequest {
+            features: x.clone(),
+            backend: Backend::BitParallelMulticlass,
+        })?;
+        assert_eq!(
+            r.class_sums,
+            infer::multiclass_class_sums(&model, x),
+            "sharded front door must be bit-exact"
+        );
+    }
+    let agg = srv.stats();
+    println!(
+        "sharded front door: {} requests over {} shards (sample 0 -> shard {}), all bit-exact",
+        agg.completed,
+        srv.num_shards(),
+        srv.shard_for_features(&test.features[0])
+    );
+    srv.shutdown();
 
     // 3. Instantiate the proposed digital-time-domain architecture:
     //    clause evaluation stays digital; class sums become Hamming-race

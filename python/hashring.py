@@ -1,0 +1,93 @@
+"""Python mirror of the coordinator's consistent-hash ring.
+
+Mirrors ``rust/src/coordinator/shard.rs`` bit-for-bit so the routing
+algorithm can be validated (determinism, distribution, wrap-around,
+cross-language golden vectors) on CI images that carry no Rust
+toolchain. Any change to the Rust hashing/ring code must be replayed
+here and in both golden-vector test suites.
+
+Algorithm
+---------
+* ``hash_bytes`` = FNV-1a/64 over the byte stream, finished with the
+  splitmix64 mixer (raw FNV-1a has poor avalanche on short
+  little-endian integer inputs; the vnode points cluster without it).
+* Keys: an explicit ``u64`` shard key hashes its 8 little-endian
+  bytes; a boolean feature vector hashes one 0/1 byte per feature.
+* Ring: each shard contributes ``DEFAULT_VNODES`` points at
+  ``hash_bytes(shard_le8 + replica_le8)``; a key routes to the shard
+  owning the first point at or after the key's hash, wrapping past the
+  top of the ``u64`` space.
+"""
+
+import bisect
+
+MASK64 = (1 << 64) - 1
+
+#: Virtual nodes per shard — keep in sync with shard.rs.
+DEFAULT_VNODES = 128
+
+
+def fnv1a64(data):
+    """FNV-1a 64-bit over an iterable of ints in [0, 255]."""
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & MASK64
+    return h
+
+
+def mix64(z):
+    """splitmix64 finalizer."""
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return (z ^ (z >> 31)) & MASK64
+
+
+def hash_bytes(data):
+    """The ring hash: FNV-1a/64 finished with the splitmix64 mixer."""
+    return mix64(fnv1a64(data))
+
+
+def hash_key(key):
+    """Hash an explicit u64 shard key (its little-endian bytes)."""
+    return hash_bytes((key & MASK64).to_bytes(8, "little"))
+
+
+def hash_features(features):
+    """Hash a boolean feature vector (one byte per feature, 0/1)."""
+    return hash_bytes(bytes(1 if b else 0 for b in features))
+
+
+def vnode_point(shard, replica):
+    """Ring position of one virtual node."""
+    return hash_bytes(
+        shard.to_bytes(8, "little") + replica.to_bytes(8, "little")
+    )
+
+
+class HashRing:
+    """Deterministic consistent-hash ring over ``shards`` shards."""
+
+    def __init__(self, shards, vnodes=DEFAULT_VNODES):
+        if shards < 1:
+            raise ValueError("hash ring needs >= 1 shard")
+        if vnodes < 1:
+            raise ValueError("hash ring needs >= 1 vnode per shard")
+        # (position, shard), sorted; ties break on shard id, matching
+        # the Rust sort of (u64, u32) tuples.
+        self.points = sorted(
+            (vnode_point(s, r), s)
+            for s in range(shards)
+            for r in range(vnodes)
+        )
+
+    def shard_for_hash(self, h):
+        """First vnode at or after ``h``, wrapping past the top."""
+        i = bisect.bisect_left(self.points, (h, -1))
+        return self.points[i % len(self.points)][1]
+
+    def shard_for_key(self, key):
+        return self.shard_for_hash(hash_key(key))
+
+    def shard_for_features(self, features):
+        return self.shard_for_hash(hash_features(features))

@@ -1,0 +1,95 @@
+"""Consistent-hash ring mirror vs the Rust coordinator (shard.rs).
+
+Plain pytest (no hypothesis, no JAX) so it runs on every CI image —
+including toolchain-less ones where the Rust suite cannot. The golden
+vectors below are asserted *identically* in
+``rust/src/coordinator/shard.rs``; if either side changes, both fail.
+"""
+
+from collections import Counter
+
+from hashring import (
+    DEFAULT_VNODES,
+    HashRing,
+    fnv1a64,
+    hash_bytes,
+    hash_features,
+    hash_key,
+    mix64,
+    vnode_point,
+)
+
+
+def test_fnv1a64_golden_vectors():
+    assert fnv1a64(b"") == 0xCBF29CE484222325
+    assert fnv1a64(bytes([0])) == 0xAF63BD4C8601B7DF
+    assert fnv1a64(bytes([1, 0, 1, 1])) == 0xAD2E2F77479B38DA
+
+
+def test_ring_hash_golden_vectors():
+    assert hash_bytes(b"") == 0xF52A15E9A9B5E89B
+    assert hash_bytes(bytes([1, 0, 1, 1])) == 0x99D31E75C555AF01
+    assert hash_key(0) == 0x813F0174A2367C13
+    assert hash_key(12345) == 0xAA08DA7926F8F279
+    assert vnode_point(0, 0) == 0x68752350AE1D483F
+    assert vnode_point(3, 17) == 0x83C60DBA0F78C403
+    feats = [True, False, True, True, False, False, True, False]
+    assert hash_features(feats) == 0xE6B1FF75897B44FC
+
+
+def test_ring_routing_golden_vectors():
+    ring4 = HashRing(4, DEFAULT_VNODES)
+    for key, want in [(0, 0), (1, 1), (2, 0), (42, 0),
+                      (12345, 3), (999_999_999, 0)]:
+        assert ring4.shard_for_key(key) == want, key
+    feats = [True, False, True, True, False, False, True, False]
+    assert ring4.shard_for_features(feats) == 3
+    ring3 = HashRing(3, DEFAULT_VNODES)
+    for key, want in [(0, 0), (7, 1), (100, 2)]:
+        assert ring3.shard_for_key(key) == want, key
+
+
+def test_ring_is_deterministic():
+    a = HashRing(5, 32)
+    b = HashRing(5, 32)
+    assert a.points == b.points
+    for k in range(2000):
+        assert a.shard_for_key(k) == b.shard_for_key(k)
+
+
+def test_ring_wraps_past_top():
+    for shards in [1, 2, 3, 4, 8]:
+        ring = HashRing(shards, DEFAULT_VNODES)
+        assert ring.shard_for_hash((1 << 64) - 1) == ring.shard_for_hash(0)
+
+
+def test_mix64_improves_balance():
+    # The mixer is load-bearing: sequential keys must spread, and every
+    # shard must own a share of a uniform key stream within a loose
+    # envelope of fair (measured <= ~1.25x at 128 vnodes/shard).
+    for shards in [2, 3, 4, 8]:
+        ring = HashRing(shards, DEFAULT_VNODES)
+        counts = Counter(ring.shard_for_key(k) for k in range(10_000))
+        fair = 10_000 / shards
+        assert set(counts) == set(range(shards)), counts
+        for s, n in counts.items():
+            assert 0.5 * fair < n < 1.5 * fair, (shards, s, n, fair)
+
+
+def test_feature_routing_matches_key_encoding():
+    # Feature vectors hash their 0/1 bytes — the same bytes through
+    # hash_bytes must agree, and routing must be insensitive to the
+    # Python bool/int representation.
+    ring = HashRing(4, DEFAULT_VNODES)
+    feats = [True, False, False, True, True]
+    as_ints = [1, 0, 0, 1, 1]
+    assert hash_features(feats) == hash_bytes(bytes(as_ints))
+    assert ring.shard_for_features(feats) == ring.shard_for_features(as_ints)
+
+
+def test_mixer_golden_identity():
+    # Pin the mixer itself (not just its composition with FNV).
+    assert mix64(0) == 0
+    assert mix64(1) == 0x5692161D100B05E5
+    # splitmix64's first output from the golden-ratio seed.
+    assert mix64(0x9E3779B97F4A7C15) == 0xE220A8397B1DCDAF

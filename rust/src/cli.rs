@@ -80,7 +80,9 @@ COMMANDS:
   table4     Alias of `eval`
   waveform   Dump VCD waveforms for Figs. 6-8  --out-dir waves/
   serve      Run the serving coordinator demo
-             --config serve.toml --requests N [--no-golden]
+             --config serve.toml --requests N [--no-golden] [--shards N]
+             (--shards N fronts N coordinator shards with a
+              deterministic consistent-hash ring; default from config)
   selfcheck  Train + verify every backend agrees on Iris
   help       Show this text
 

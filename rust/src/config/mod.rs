@@ -14,7 +14,11 @@ use crate::wta::WtaKind;
 /// Serving coordinator configuration (`tmtd serve --config <file>`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeConfig {
-    /// Worker threads for hardware-simulation backends.
+    /// Coordinator shards behind the consistent-hash front door
+    /// (`coordinator::shard`). Each shard owns its own worker pool,
+    /// batchers and engines; 1 = a single unsharded coordinator.
+    pub shards: usize,
+    /// Worker threads for hardware-simulation backends (per shard).
     pub workers: usize,
     /// Dynamic batcher: max batch (must be one of the AOT batch sizes).
     pub max_batch: usize,
@@ -31,6 +35,7 @@ pub struct ServeConfig {
 impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
+            shards: 1,
             workers: 4,
             max_batch: 16,
             batch_timeout_us: 200,
@@ -46,6 +51,7 @@ impl ServeConfig {
     ///
     /// ```toml
     /// [coordinator]
+    /// shards = 1
     /// workers = 4
     /// max_batch = 16
     /// batch_timeout_us = 200
@@ -55,6 +61,9 @@ impl ServeConfig {
     /// ```
     pub fn from_toml(doc: &TomlDoc) -> Result<ServeConfig> {
         let mut cfg = ServeConfig::default();
+        if let Some(v) = doc.get("coordinator", "shards") {
+            cfg.shards = v.as_int()? as usize;
+        }
         if let Some(v) = doc.get("coordinator", "workers") {
             cfg.workers = v.as_int()? as usize;
         }
@@ -91,6 +100,9 @@ impl ServeConfig {
     }
 
     pub fn validate(&self) -> Result<()> {
+        if self.shards == 0 {
+            return Err(crate::Error::config("shards must be >= 1"));
+        }
         if self.workers == 0 {
             return Err(crate::Error::config("workers must be >= 1"));
         }
@@ -120,6 +132,7 @@ mod tests {
         let doc = TomlDoc::parse(
             r#"
             [coordinator]
+            shards = 3
             workers = 8
             max_batch = 64
             batch_timeout_us = 500
@@ -130,10 +143,17 @@ mod tests {
         )
         .unwrap();
         let cfg = ServeConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.shards, 3);
         assert_eq!(cfg.workers, 8);
         assert_eq!(cfg.max_batch, 64);
         assert_eq!(cfg.wta, WtaKind::Mesh);
         assert_eq!(cfg.artifacts_dir, "custom/artifacts");
+    }
+
+    #[test]
+    fn rejects_zero_shards() {
+        let doc = TomlDoc::parse("[coordinator]\nshards = 0\n").unwrap();
+        assert!(ServeConfig::from_toml(&doc).is_err());
     }
 
     #[test]

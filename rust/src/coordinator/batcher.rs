@@ -1,8 +1,26 @@
 //! Dynamic batcher: coalesces single-sample requests into batches for
-//! the fixed-batch AOT artifacts — flush on size or age, whichever
-//! comes first (the standard serving trade-off between throughput and
-//! tail latency).
+//! the fixed-batch AOT artifacts and the bit-parallel engines — flush
+//! on size or age, whichever comes first (the standard serving
+//! trade-off between throughput and tail latency).
+//!
+//! Replies are **relay-free**: the flush closure sees the whole
+//! [`Pending`] entries (item, enqueue time, reply sender) and returns
+//! the *final* per-item results, which the batcher thread sends
+//! directly on each caller's channel — no short-lived forwarder
+//! thread per request between the batcher and the caller. The
+//! accounting split that replaces the relay:
+//!
+//! * the **flush closure** records per-item success/latency (and
+//!   backend-reported failures) while building the final responses;
+//! * the **batcher** releases the shared in-flight budget exactly once
+//!   per item and counts batcher-originated failures (a panicking
+//!   flush or an arity mismatch), so a misbehaving backend can neither
+//!   leak queue-depth slots nor produce caller-visible errors that
+//!   appear in no counter. A panic in the flush fails its batch but
+//!   leaves the batcher thread serving.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -18,6 +36,15 @@ pub struct Pending<T, R> {
     pub reply: mpsc::Sender<Result<R>>,
 }
 
+impl<T, R> Pending<T, R> {
+    /// Microseconds since the item entered the batcher queue — the
+    /// service latency the caller observes (submit → reply), available
+    /// to the flush closure for per-item latency accounting.
+    pub fn elapsed_us(&self) -> f64 {
+        self.enqueued.elapsed().as_secs_f64() * 1e6
+    }
+}
+
 /// Dynamic batcher thread over items `T` with per-item replies `R`.
 pub struct DynamicBatcher<T: Send + 'static, R: Send + 'static> {
     tx: Option<mpsc::Sender<Pending<T, R>>>,
@@ -27,15 +54,25 @@ pub struct DynamicBatcher<T: Send + 'static, R: Send + 'static> {
 impl<T: Send + 'static, R: Send + 'static> DynamicBatcher<T, R> {
     /// `flush(batch) -> per-item results` runs on the batcher thread —
     /// non-`Send` state (e.g. the PJRT service handle) may live in the
-    /// closure's captured environment as it is moved in once.
+    /// closure's captured environment as it is moved in once. The
+    /// returned results are sent verbatim on each caller's reply
+    /// channel, in order; `R` is the *final* response type the caller
+    /// receives (no downstream relay rewrites it).
+    ///
+    /// `in_flight` is the submitter-side budget: the caller acquires a
+    /// slot before `submit()`, the batcher releases it exactly once per
+    /// item when the batch leaves the flush — including when the flush
+    /// panics or returns the wrong arity (those also increment
+    /// `stats.failed`, since no downstream layer exists to count them).
     pub fn new<F>(
         max_batch: usize,
         timeout: Duration,
         stats: Arc<ServerStats>,
+        in_flight: Arc<AtomicU64>,
         mut flush: F,
     ) -> Result<DynamicBatcher<T, R>>
     where
-        F: FnMut(Vec<&T>) -> Vec<Result<R>> + Send + 'static,
+        F: FnMut(&[Pending<T, R>]) -> Vec<Result<R>> + Send + 'static,
     {
         if max_batch == 0 {
             return Err(Error::coordinator("max_batch must be >= 1"));
@@ -64,7 +101,12 @@ impl<T: Send + 'static, R: Send + 'static> DynamicBatcher<T, R> {
                         Err(mpsc::RecvTimeoutError::Timeout) => {}
                         Err(mpsc::RecvTimeoutError::Disconnected) => {
                             // Final drain after senders vanish.
-                            Self::run_flush(&mut queue, &mut flush, &stats);
+                            while !queue.is_empty() {
+                                let take = queue.len().min(max_batch);
+                                let mut batch: Vec<Pending<T, R>> =
+                                    queue.drain(..take).collect();
+                                Self::run_flush(&mut batch, &mut flush, &stats, &in_flight);
+                            }
                             break;
                         }
                     }
@@ -74,7 +116,7 @@ impl<T: Send + 'static, R: Send + 'static> DynamicBatcher<T, R> {
                     if queue.len() >= max_batch || oldest_expired {
                         let take = queue.len().min(max_batch);
                         let mut batch: Vec<Pending<T, R>> = queue.drain(..take).collect();
-                        Self::run_flush(&mut batch, &mut flush, &stats);
+                        Self::run_flush(&mut batch, &mut flush, &stats, &in_flight);
                     }
                 }
             })
@@ -82,31 +124,49 @@ impl<T: Send + 'static, R: Send + 'static> DynamicBatcher<T, R> {
         Ok(DynamicBatcher { tx: Some(tx), handle: Some(handle) })
     }
 
-    fn run_flush<F>(batch: &mut Vec<Pending<T, R>>, flush: &mut F, stats: &ServerStats)
-    where
-        F: FnMut(Vec<&T>) -> Vec<Result<R>>,
+    fn run_flush<F>(
+        batch: &mut Vec<Pending<T, R>>,
+        flush: &mut F,
+        stats: &ServerStats,
+        in_flight: &AtomicU64,
+    ) where
+        F: FnMut(&[Pending<T, R>]) -> Vec<Result<R>>,
     {
         if batch.is_empty() {
             return;
         }
         stats.record_batch(batch.len());
-        let items: Vec<&T> = batch.iter().map(|p| &p.item).collect();
-        let mut results = flush(items);
-        // Arity mismatch from the flush fn = internal error for everyone.
-        if results.len() != batch.len() {
-            for p in batch.drain(..) {
-                let _ = p
-                    .reply
-                    .send(Err(Error::coordinator("batch flush arity mismatch")));
+        let outcome = catch_unwind(AssertUnwindSafe(|| flush(&batch[..])));
+        // The batch left the queue whatever the flush did: release the
+        // in-flight slots exactly once, after the work (so backpressure
+        // still covers in-progress batches) but before the replies.
+        in_flight.fetch_sub(batch.len() as u64, Ordering::SeqCst);
+        // A panicking flush or an arity mismatch = internal error for
+        // everyone in the batch, counted here (there is no downstream
+        // relay left to count caller-visible failures).
+        let mut results = match outcome {
+            Ok(r) if r.len() == batch.len() => r,
+            outcome => {
+                let msg = if outcome.is_err() {
+                    "batch flush panicked"
+                } else {
+                    "batch flush arity mismatch"
+                };
+                stats.failed.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                for p in batch.drain(..) {
+                    let _ = p.reply.send(Err(Error::coordinator(msg)));
+                }
+                return;
             }
-            return;
-        }
-        for p in batch.drain(..) {
-            let _ = p.reply.send(results.remove(0));
+        };
+        for (p, r) in batch.drain(..).zip(results.drain(..)) {
+            let _ = p.reply.send(r);
         }
     }
 
-    /// Enqueue one item; the reply arrives on the returned channel.
+    /// Enqueue one item; the reply arrives on the returned channel —
+    /// this is the *caller's* channel, fed directly from the batcher
+    /// thread's flush.
     pub fn submit(&self, item: T) -> Result<mpsc::Receiver<Result<R>>> {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
@@ -147,9 +207,10 @@ mod tests {
             max_batch,
             Duration::from_millis(timeout_ms),
             Arc::clone(&stats),
-            |items: Vec<&u32>| {
-                let n = items.len();
-                items.into_iter().map(|&x| Ok((x, n))).collect()
+            Arc::new(AtomicU64::new(u64::MAX / 2)),
+            |batch: &[Pending<u32, (u32, usize)>]| {
+                let n = batch.len();
+                batch.iter().map(|p| Ok((p.item, n))).collect()
             },
         )
         .unwrap();
@@ -187,6 +248,71 @@ mod tests {
     }
 
     #[test]
+    fn shutdown_drain_respects_max_batch() {
+        let (b, stats) = echo_batcher(4, 60_000);
+        let rxs: Vec<_> = (0..10u32).map(|i| b.submit(i).unwrap()).collect();
+        b.shutdown();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let (x, n) = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+            assert_eq!(x, i as u32);
+            assert!(n <= 4, "drain batch {n} exceeds max_batch");
+        }
+        assert_eq!(stats.snapshot().batched_requests, 10);
+    }
+
+    #[test]
+    fn flush_sees_enqueue_age() {
+        let stats = Arc::new(ServerStats::new());
+        let b: DynamicBatcher<u32, f64> = DynamicBatcher::new(
+            8,
+            Duration::from_millis(10),
+            Arc::clone(&stats),
+            Arc::new(AtomicU64::new(100)),
+            |batch| batch.iter().map(|p| Ok(p.elapsed_us())).collect(),
+        )
+        .unwrap();
+        let rx = b.submit(1).unwrap();
+        let age_us = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert!(age_us >= 0.0, "age must be non-negative, got {age_us}");
+        b.shutdown();
+    }
+
+    #[test]
+    fn panicking_flush_fails_its_batch_and_keeps_serving() {
+        // Panic on a poison *item* (not a call count) so the outcome is
+        // independent of how the stream happens to split into batches.
+        const POISON: u32 = 666;
+        let stats = Arc::new(ServerStats::new());
+        let in_flight = Arc::new(AtomicU64::new(100));
+        let b: DynamicBatcher<u32, u32> = DynamicBatcher::new(
+            4,
+            Duration::from_millis(10),
+            Arc::clone(&stats),
+            Arc::clone(&in_flight),
+            |batch: &[Pending<u32, u32>]| {
+                if batch.iter().any(|p| p.item == POISON) {
+                    panic!("injected flush failure");
+                }
+                batch.iter().map(|p| Ok(p.item)).collect()
+            },
+        )
+        .unwrap();
+        // Every poisoned batch panics: all four callers get an error,
+        // the failures are counted, and the slots are released.
+        let rxs: Vec<_> = (0..4).map(|_| b.submit(POISON).unwrap()).collect();
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert!(r.is_err(), "panicked batch must fail its callers");
+        }
+        assert_eq!(stats.failed.load(Ordering::Relaxed), 4);
+        // The batcher thread survived the panic: the next batch serves.
+        let rx = b.submit(9).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap(), 9);
+        assert_eq!(in_flight.load(Ordering::SeqCst), 100 - 5, "slots released exactly once");
+        b.shutdown();
+    }
+
+    #[test]
     fn oversize_stream_splits_into_batches() {
         let (b, stats) = echo_batcher(8, 20);
         let rxs: Vec<_> = (0..20u32).map(|i| b.submit(i).unwrap()).collect();
@@ -195,6 +321,9 @@ mod tests {
         }
         let snap = stats.snapshot();
         assert!(snap.batches_flushed >= 3, "batches={}", snap.batches_flushed);
-        assert_eq!(snap.batched_requests.max(20), 20);
+        // Every submitted request must be accounted — the old
+        // `batched_requests.max(20) == 20` form was vacuous for any
+        // value <= 20.
+        assert_eq!(snap.batched_requests, 20);
     }
 }

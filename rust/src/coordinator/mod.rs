@@ -23,7 +23,25 @@
 //! Batching ([`batcher`]): golden and bit-parallel requests are
 //! coalesced by a dynamic batcher (flush on size or timeout); the
 //! golden path pads onto fixed-batch AOT artifacts, the bit-parallel
-//! path takes arbitrary batch shapes natively.
+//! path takes arbitrary batch shapes natively. Replies are
+//! **relay-free**: the flush closure builds the final
+//! [`router::InferResponse`] per item with the latency / completed
+//! accounting inline, the batcher releases the in-flight budget
+//! (panic-safely) and counts batcher-originated failures, and the
+//! batcher thread replies directly on each caller's channel — no
+//! short-lived forwarder thread per request, which is what lets the
+//! `bitpar-*` tier run at engine speed instead of thread-spawn speed.
+//! (The same event-driven principle as the paper's hardware: remove
+//! the per-inference overhead, keep only the computation.)
+//!
+//! Scale-out ([`shard`]): [`shard::ShardedCoordinator`] fronts N
+//! independent [`CoordinatorServer`] shards with a deterministic
+//! consistent-hash ring ([`shard::HashRing`], FNV-1a/64 + splitmix64
+//! finish, 128 vnodes/shard; mirrored bit-for-bit by
+//! `python/hashring.py`). Requests route by feature-vector hash or an
+//! explicit shard key; backpressure stays per shard; stats aggregate
+//! across shards from the raw sample rings; shutdown drains every
+//! shard.
 //!
 //! Concurrency ([`pool`]): hardware models are not `Send` (they embed
 //! `Rc`-coded delay elements), so each worker thread *builds its own*
@@ -32,15 +50,18 @@
 //! ([`crate::runtime::GoldenService`]). Only the bit-parallel engines
 //! are shared state — which is why they are the tier that scales.
 //!
-//! Backpressure: a bounded in-flight budget; submissions beyond it are
-//! rejected immediately ([`ServerStats::rejected`] counts them).
+//! Backpressure: a bounded in-flight budget per shard; submissions
+//! beyond it are rejected immediately ([`ServerStats::rejected`]
+//! counts them).
 
 pub mod batcher;
 pub mod pool;
 pub mod router;
 pub mod server;
+pub mod shard;
 pub mod stats;
 
 pub use router::{Backend, InferRequest, InferResponse};
 pub use server::CoordinatorServer;
+pub use shard::{HashRing, ShardedCoordinator};
 pub use stats::{ServerStats, StatsSnapshot};

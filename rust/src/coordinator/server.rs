@@ -24,7 +24,7 @@ use crate::arch::proposed_cotm::ProposedCotm;
 use crate::arch::proposed_tm::ProposedMulticlass;
 use crate::arch::Architecture;
 use crate::config::ServeConfig;
-use crate::coordinator::batcher::DynamicBatcher;
+use crate::coordinator::batcher::{DynamicBatcher, Pending};
 use crate::coordinator::pool::WorkerPool;
 use crate::coordinator::router::{Backend, InferRequest, InferResponse};
 use crate::coordinator::stats::{ServerStats, StatsSnapshot};
@@ -68,72 +68,64 @@ struct BitParItem {
     features: Vec<bool>,
 }
 
-/// Spawn the relay that converts a batcher's per-item reply into an
-/// [`InferResponse`] with latency/counter accounting — shared by the
-/// golden and bit-parallel batched paths. The relay must not block
-/// `submit()`: a short-lived forwarder thread per request (cheap next
-/// to a PJRT call; see ROADMAP for the relay-free reply design).
-fn spawn_relay<S, F>(
-    inner_rx: mpsc::Receiver<Result<S>>,
-    backend: Backend,
-    stats: Arc<ServerStats>,
-    in_flight: Arc<AtomicU64>,
-    t0: Instant,
-    to_sums: F,
-) -> mpsc::Receiver<Result<InferResponse>>
-where
-    S: Send + 'static,
-    F: FnOnce(S) -> (Vec<i32>, usize) + Send + 'static,
-{
-    let (tx, rx) = mpsc::channel();
-    std::thread::spawn(move || {
-        let result = inner_rx
-            .recv()
-            .map_err(|_| Error::coordinator("batched reply dropped"))
-            .and_then(|r| r)
-            .map(|payload| {
-                let (class_sums, predicted) = to_sums(payload);
-                let service_us = t0.elapsed().as_secs_f64() * 1e6;
-                stats.record_latency_us(service_us);
-                stats.completed.fetch_add(1, Ordering::Relaxed);
-                InferResponse {
-                    backend,
-                    predicted,
-                    class_sums,
-                    hw_latency: None,
-                    hw_energy_fj: None,
-                    service_us,
-                }
-            })
-            .map_err(|e| {
-                stats.failed.fetch_add(1, Ordering::Relaxed);
-                e
-            });
-        in_flight.fetch_sub(1, Ordering::SeqCst);
-        let _ = tx.send(result);
-    });
-    rx
-}
-
 /// Build the dynamic batcher for one bit-parallel engine: each flush is
 /// evaluated through the shared engine's bit-sliced batch path, sharded
 /// across up to `shard_threads` scoped threads when the batch is large
 /// (the engine is `Sync`, so shards borrow it without copying).
+///
+/// Replies are relay-free: the flush builds the final [`InferResponse`]
+/// per item with latency/completed accounting inline, and the batcher
+/// releases the in-flight slots (panic-safely) — so the receiver
+/// handed back by `submit()` is the caller's own channel, with no
+/// per-request forwarder thread.
 fn bitpar_batcher<E: BatchEngine + Send + 'static>(
     engine: Arc<E>,
+    backend: Backend,
     max_batch: usize,
     timeout: Duration,
     stats: Arc<ServerStats>,
+    in_flight: Arc<AtomicU64>,
     shard_threads: usize,
-) -> Result<DynamicBatcher<BitParItem, (Vec<i32>, usize)>> {
-    DynamicBatcher::new(max_batch, timeout, stats, move |items: Vec<&BitParItem>| {
-        let rows: Vec<&[bool]> = items.iter().map(|i| i.features.as_slice()).collect();
-        engine
-            .infer_batch_sharded(&rows, shard_threads)
-            .into_iter()
-            .map(Ok)
-            .collect()
-    })
+) -> Result<DynamicBatcher<BitParItem, InferResponse>> {
+    DynamicBatcher::new(
+        max_batch,
+        timeout,
+        Arc::clone(&stats),
+        in_flight,
+        move |batch: &[Pending<BitParItem, InferResponse>]| {
+            let rows: Vec<&[bool]> = batch.iter().map(|p| p.item.features.as_slice()).collect();
+            let out = engine.infer_batch_sharded(&rows, shard_threads);
+            // Guard the arity *before* any success counting, like the
+            // golden path: a short engine result must fail the whole
+            // batch, not count truncated items as completed.
+            if out.len() != batch.len() {
+                stats.failed.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                let msg = format!(
+                    "bit-parallel engine returned {} results for {} inputs",
+                    out.len(),
+                    batch.len()
+                );
+                return batch.iter().map(|_| Err(Error::coordinator(msg.clone()))).collect();
+            }
+            batch
+                .iter()
+                .zip(out)
+                .map(|(p, (class_sums, predicted))| {
+                    let service_us = p.elapsed_us();
+                    stats.record_latency_us(service_us);
+                    stats.completed.fetch_add(1, Ordering::Relaxed);
+                    Ok(InferResponse {
+                        backend,
+                        predicted,
+                        class_sums,
+                        hw_latency: None,
+                        hw_energy_fj: None,
+                        service_us,
+                    })
+                })
+                .collect()
+        },
+    )
 }
 
 /// The coordinator server.
@@ -142,11 +134,11 @@ pub struct CoordinatorServer {
     /// Keeps the PJRT thread alive for the batchers' clients.
     _golden: Option<GoldenService>,
     /// One batcher per golden family (they hit different artifacts).
-    batcher_mc: Option<DynamicBatcher<GoldenItem, (Vec<f32>, usize)>>,
-    batcher_co: Option<DynamicBatcher<GoldenItem, (Vec<f32>, usize)>>,
+    batcher_mc: Option<DynamicBatcher<GoldenItem, InferResponse>>,
+    batcher_co: Option<DynamicBatcher<GoldenItem, InferResponse>>,
     /// One batcher per bit-parallel engine (always available).
-    batcher_bp_mc: Option<DynamicBatcher<BitParItem, (Vec<i32>, usize)>>,
-    batcher_bp_co: Option<DynamicBatcher<BitParItem, (Vec<i32>, usize)>>,
+    batcher_bp_mc: Option<DynamicBatcher<BitParItem, InferResponse>>,
+    batcher_bp_co: Option<DynamicBatcher<BitParItem, InferResponse>>,
     stats: Arc<ServerStats>,
     in_flight: Arc<AtomicU64>,
     queue_depth: u64,
@@ -168,6 +160,7 @@ impl CoordinatorServer {
             return Err(Error::coordinator("model feature widths differ"));
         }
         let stats = Arc::new(ServerStats::new());
+        let in_flight = Arc::new(AtomicU64::new(0));
 
         // Worker pool: each worker builds its own architecture set.
         let wta = cfg.wta;
@@ -190,20 +183,26 @@ impl CoordinatorServer {
         let shard_threads = cfg.workers.max(1);
         let batcher_bp_mc = bitpar_batcher(
             Arc::new(BitParallelMulticlass::from_model(&mc_model)?),
+            Backend::BitParallelMulticlass,
             cfg.max_batch,
             timeout,
             Arc::clone(&stats),
+            Arc::clone(&in_flight),
             shard_threads,
         )?;
         let batcher_bp_co = bitpar_batcher(
             Arc::new(BitParallelCotm::from_model(&cotm_model)?),
+            Backend::BitParallelCotm,
             cfg.max_batch,
             timeout,
             Arc::clone(&stats),
+            Arc::clone(&in_flight),
             shard_threads,
         )?;
 
         // Golden path: one PJRT service thread + a batcher per family.
+        // Same relay-free shape as the bit-parallel path: the flush
+        // builds the final responses and settles the accounting.
         let (golden, batcher_mc, batcher_co) = if with_golden {
             let svc = GoldenService::spawn(
                 cfg.artifacts_dir.clone(),
@@ -213,23 +212,84 @@ impl CoordinatorServer {
                     cotm_weights: cotm_model.weights_f32(),
                 },
             )?;
-            let mk = |family: &'static str,
+            let mk = |backend: Backend,
                       client: crate::runtime::golden::GoldenClient,
-                      stats: Arc<ServerStats>| {
-                DynamicBatcher::new(cfg.max_batch, timeout, stats, move |items: Vec<&GoldenItem>| {
-                    let rows: Vec<Vec<f32>> =
-                        items.iter().map(|i| i.features.clone()).collect();
-                    match client.infer_batch(family, rows) {
-                        Ok(out) => out.into_iter().map(Ok).collect(),
-                        Err(e) => items
-                            .iter()
-                            .map(|_| Err(Error::coordinator(format!("golden: {e}"))))
-                            .collect(),
-                    }
-                })
+                      stats: Arc<ServerStats>,
+                      in_flight: Arc<AtomicU64>| {
+                let family = backend.family().expect("golden backend has a family");
+                DynamicBatcher::new(
+                    cfg.max_batch,
+                    timeout,
+                    Arc::clone(&stats),
+                    in_flight,
+                    move |batch: &[Pending<GoldenItem, InferResponse>]| {
+                        let rows: Vec<Vec<f32>> =
+                            batch.iter().map(|p| p.item.features.clone()).collect();
+                        // Guard the arity *before* any success counting:
+                        // a short artifact reply must fail the whole
+                        // batch, not count truncated items as completed.
+                        match client.infer_batch(family, rows) {
+                            Ok(out) if out.len() == batch.len() => batch
+                                .iter()
+                                .zip(out)
+                                .map(|(p, (sums, predicted))| {
+                                    let service_us = p.elapsed_us();
+                                    stats.record_latency_us(service_us);
+                                    stats.completed.fetch_add(1, Ordering::Relaxed);
+                                    Ok(InferResponse {
+                                        backend,
+                                        predicted,
+                                        class_sums: sums
+                                            .iter()
+                                            .map(|&x| x as i32)
+                                            .collect(),
+                                        hw_latency: None,
+                                        hw_energy_fj: None,
+                                        service_us,
+                                    })
+                                })
+                                .collect(),
+                            Ok(out) => {
+                                stats
+                                    .failed
+                                    .fetch_add(batch.len() as u64, Ordering::Relaxed);
+                                let msg = format!(
+                                    "golden: artifact returned {} results for {} inputs",
+                                    out.len(),
+                                    batch.len()
+                                );
+                                batch
+                                    .iter()
+                                    .map(|_| Err(Error::coordinator(msg.clone())))
+                                    .collect()
+                            }
+                            Err(e) => {
+                                stats
+                                    .failed
+                                    .fetch_add(batch.len() as u64, Ordering::Relaxed);
+                                batch
+                                    .iter()
+                                    .map(|_| {
+                                        Err(Error::coordinator(format!("golden: {e}")))
+                                    })
+                                    .collect()
+                            }
+                        }
+                    },
+                )
             };
-            let b_mc = mk("multiclass_tm", svc.client(), Arc::clone(&stats))?;
-            let b_co = mk("cotm", svc.client(), Arc::clone(&stats))?;
+            let b_mc = mk(
+                Backend::GoldenMulticlass,
+                svc.client(),
+                Arc::clone(&stats),
+                Arc::clone(&in_flight),
+            )?;
+            let b_co = mk(
+                Backend::GoldenCotm,
+                svc.client(),
+                Arc::clone(&stats),
+                Arc::clone(&in_flight),
+            )?;
             (Some(svc), Some(b_mc), Some(b_co))
         } else {
             (None, None, None)
@@ -243,7 +303,7 @@ impl CoordinatorServer {
             batcher_bp_mc: Some(batcher_bp_mc),
             batcher_bp_co: Some(batcher_bp_co),
             stats,
-            in_flight: Arc::new(AtomicU64::new(0)),
+            in_flight,
             queue_depth: cfg.queue_depth as u64,
             features,
         })
@@ -271,6 +331,8 @@ impl CoordinatorServer {
         let t0 = Instant::now();
 
         if req.backend.is_golden() {
+            // Relay-free: the receiver comes straight from the batcher;
+            // its flush built the final response and did the accounting.
             let batcher = match req.backend {
                 Backend::GoldenMulticlass => self.batcher_mc.as_ref(),
                 _ => self.batcher_co.as_ref(),
@@ -281,17 +343,7 @@ impl CoordinatorServer {
             let item = GoldenItem {
                 features: req.features.iter().map(|&b| b as u8 as f32).collect(),
             };
-            let inner_rx = batcher.submit(item).map_err(|e| self.abort_submit(e))?;
-            Ok(spawn_relay(
-                inner_rx,
-                req.backend,
-                Arc::clone(&self.stats),
-                Arc::clone(&self.in_flight),
-                t0,
-                |(sums, pred): (Vec<f32>, usize)| {
-                    (sums.iter().map(|&x| x as i32).collect(), pred)
-                },
-            ))
+            batcher.submit(item).map_err(|e| self.abort_submit(e))
         } else if req.backend.is_bit_parallel() {
             let batcher = match req.backend {
                 Backend::BitParallelMulticlass => self.batcher_bp_mc.as_ref(),
@@ -300,17 +352,9 @@ impl CoordinatorServer {
             .ok_or_else(|| {
                 self.abort_submit(Error::coordinator("bit-parallel batcher shut down"))
             })?;
-            let inner_rx = batcher
+            batcher
                 .submit(BitParItem { features: req.features })
-                .map_err(|e| self.abort_submit(e))?;
-            Ok(spawn_relay(
-                inner_rx,
-                req.backend,
-                Arc::clone(&self.stats),
-                Arc::clone(&self.in_flight),
-                t0,
-                |(sums, pred)| (sums, pred),
-            ))
+                .map_err(|e| self.abort_submit(e))
         } else {
             let (tx, rx) = mpsc::channel();
             let stats = Arc::clone(&self.stats);
@@ -368,6 +412,13 @@ impl CoordinatorServer {
 
     pub fn stats(&self) -> StatsSnapshot {
         self.stats.snapshot()
+    }
+
+    /// Shared handle to the raw counters — used by the sharded front
+    /// door ([`crate::coordinator::shard`]) to aggregate exact latency
+    /// summaries across shards without copying snapshots.
+    pub fn stats_handle(&self) -> Arc<ServerStats> {
+        Arc::clone(&self.stats)
     }
 
     /// Graceful shutdown: drain workers and batchers.

@@ -1,0 +1,351 @@
+//! Sharded coordinator front door: N independent [`CoordinatorServer`]
+//! shards behind a deterministic consistent-hash ring.
+//!
+//! Each shard owns its own worker pool, dynamic batchers and
+//! bit-parallel engines, so the serving tier scales past a single
+//! batcher thread: requests are routed by hashing either the feature
+//! vector (default) or an explicit `u64` shard key, and the same key
+//! always lands on the same shard — per-shard model/cache affinity is
+//! preserved across the stream.
+//!
+//! * **Ring** ([`HashRing`]): each shard contributes
+//!   [`DEFAULT_VNODES`] virtual points at `hash(shard, replica)` on a
+//!   `u64` ring; a key routes to the shard owning the first point at or
+//!   after the key's hash (wrapping). The hash is FNV-1a/64 finished
+//!   with the splitmix64 mixer — deterministic and cross-language: the
+//!   exact algorithm is mirrored in `python/hashring.py` and pinned by
+//!   golden vectors in both test suites, so the routing can be
+//!   validated even on toolchain-less CI images.
+//! * **Backpressure** is accounted *per shard*: each
+//!   [`CoordinatorServer`] keeps its own bounded in-flight budget, so a
+//!   hot shard rejects without starving the others (total budget =
+//!   `shards x queue_depth`).
+//! * **Stats**: [`ShardedCoordinator::stats`] merges counters and
+//!   rebuilds one exact latency/batch-size summary from the shards' raw
+//!   sample rings; [`ShardedCoordinator::shard_stats`] exposes the
+//!   per-shard view.
+//! * **Shutdown** drains every shard (worker pools and batchers flush
+//!   their queues before joining).
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+
+use crate::config::ServeConfig;
+use crate::coordinator::router::{InferRequest, InferResponse};
+use crate::coordinator::server::CoordinatorServer;
+use crate::coordinator::stats::StatsSnapshot;
+use crate::error::{Error, Result};
+use crate::tm::{CoTmModel, MultiClassTmModel};
+use crate::util::stats::Summary;
+
+/// Virtual nodes per shard on the ring. 128 keeps the observed load of
+/// a uniform key stream within roughly +/-25% of fair share for 2..=8
+/// shards (see the distribution property tests) at negligible build and
+/// lookup cost.
+pub const DEFAULT_VNODES: usize = 128;
+
+/// FNV-1a 64-bit over a byte stream.
+pub fn fnv1a64(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// splitmix64 finalizer. Raw FNV-1a has poor avalanche on short,
+/// mostly-zero inputs like little-endian small integers — vnode points
+/// cluster and the ring arcs go lopsided without this.
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// The ring hash: FNV-1a/64 finished with the splitmix64 mixer.
+pub fn hash_bytes(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    mix64(fnv1a64(bytes))
+}
+
+/// Hash an explicit shard key (its little-endian bytes).
+pub fn hash_key(key: u64) -> u64 {
+    hash_bytes(key.to_le_bytes())
+}
+
+/// Hash a boolean feature vector (one byte per feature, 0/1).
+pub fn hash_features(features: &[bool]) -> u64 {
+    hash_bytes(features.iter().map(|&b| b as u8))
+}
+
+/// Ring position of one virtual node.
+fn vnode_point(shard: u64, replica: u64) -> u64 {
+    let mut bytes = [0u8; 16];
+    bytes[..8].copy_from_slice(&shard.to_le_bytes());
+    bytes[8..].copy_from_slice(&replica.to_le_bytes());
+    hash_bytes(bytes)
+}
+
+/// A deterministic consistent-hash ring over `shards` shards.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    /// `(position, shard)`, sorted by position (ties — astronomically
+    /// unlikely 64-bit collisions — break on shard id, keeping the
+    /// order deterministic).
+    points: Vec<(u64, u32)>,
+}
+
+impl HashRing {
+    pub fn new(shards: usize, vnodes: usize) -> Result<HashRing> {
+        if shards == 0 {
+            return Err(Error::coordinator("hash ring needs >= 1 shard"));
+        }
+        if vnodes == 0 {
+            return Err(Error::coordinator("hash ring needs >= 1 vnode per shard"));
+        }
+        if shards > u32::MAX as usize {
+            return Err(Error::coordinator("too many shards"));
+        }
+        let mut points = Vec::with_capacity(shards * vnodes);
+        for s in 0..shards {
+            for r in 0..vnodes {
+                points.push((vnode_point(s as u64, r as u64), s as u32));
+            }
+        }
+        points.sort_unstable();
+        Ok(HashRing { points })
+    }
+
+    /// Number of distinct shards on the ring.
+    pub fn shards(&self) -> usize {
+        self.points.iter().map(|&(_, s)| s).max().map_or(0, |m| m as usize + 1)
+    }
+
+    /// The shard owning hash `h`: first vnode at or after `h`, wrapping
+    /// to the ring's first point past the top.
+    pub fn shard_for_hash(&self, h: u64) -> usize {
+        let i = self.points.partition_point(|&(p, _)| p < h);
+        self.points[i % self.points.len()].1 as usize
+    }
+}
+
+/// N coordinator shards behind a consistent-hash front door.
+pub struct ShardedCoordinator {
+    shards: Vec<CoordinatorServer>,
+    ring: HashRing,
+}
+
+impl ShardedCoordinator {
+    /// Build `cfg.shards` independent [`CoordinatorServer`]s (each with
+    /// its own worker pool, batchers and engines compiled from clones
+    /// of the trained models) plus the routing ring.
+    pub fn new(
+        cfg: &ServeConfig,
+        mc_model: MultiClassTmModel,
+        cotm_model: CoTmModel,
+        with_golden: bool,
+    ) -> Result<ShardedCoordinator> {
+        cfg.validate()?;
+        let n = cfg.shards;
+        let ring = HashRing::new(n, DEFAULT_VNODES)?;
+        let mut shards = Vec::with_capacity(n);
+        for _ in 0..n {
+            shards.push(CoordinatorServer::new(
+                cfg,
+                mc_model.clone(),
+                cotm_model.clone(),
+                with_golden,
+            )?);
+        }
+        Ok(ShardedCoordinator { shards, ring })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard a feature vector routes to (the default routing key).
+    pub fn shard_for_features(&self, features: &[bool]) -> usize {
+        self.ring.shard_for_hash(hash_features(features))
+    }
+
+    /// Shard an explicit key routes to.
+    pub fn shard_for_key(&self, key: u64) -> usize {
+        self.ring.shard_for_hash(hash_key(key))
+    }
+
+    /// Submit a request, routed by its feature vector. Backpressure is
+    /// per shard: the owning shard may reject while others have slack.
+    pub fn submit(&self, req: InferRequest) -> Result<mpsc::Receiver<Result<InferResponse>>> {
+        let s = self.shard_for_features(&req.features);
+        self.shards[s].submit(req)
+    }
+
+    /// Submit a request pinned by an explicit shard key (e.g. a user or
+    /// session id), independent of the feature bits.
+    pub fn submit_keyed(
+        &self,
+        key: u64,
+        req: InferRequest,
+    ) -> Result<mpsc::Receiver<Result<InferResponse>>> {
+        let s = self.shard_for_key(key);
+        self.shards[s].submit(req)
+    }
+
+    /// Submit and block for the response (feature-routed).
+    pub fn infer(&self, req: InferRequest) -> Result<InferResponse> {
+        let rx = self.submit(req)?;
+        rx.recv()
+            .map_err(|_| Error::coordinator("response channel closed"))?
+    }
+
+    /// Per-shard snapshots, indexed by shard id.
+    pub fn shard_stats(&self) -> Vec<StatsSnapshot> {
+        self.shards.iter().map(|s| s.stats()).collect()
+    }
+
+    /// Aggregate snapshot across all shards: counters are summed and
+    /// the latency / batch-size summaries are rebuilt from the shards'
+    /// raw sample rings (exact percentiles, not merged approximations).
+    /// Reads the atomics directly rather than taking per-shard
+    /// snapshots, which would sort every shard's sample ring once for
+    /// the snapshot and again for the aggregate.
+    pub fn stats(&self) -> StatsSnapshot {
+        let mut snap = StatsSnapshot {
+            submitted: 0,
+            completed: 0,
+            rejected: 0,
+            failed: 0,
+            batches_flushed: 0,
+            batched_requests: 0,
+            mean_batch_size: 0.0,
+            latency_us: None,
+        };
+        let mut latencies = Vec::new();
+        let mut batch_sizes = Vec::new();
+        for s in &self.shards {
+            let h = s.stats_handle();
+            snap.submitted += h.submitted.load(Ordering::Relaxed);
+            snap.completed += h.completed.load(Ordering::Relaxed);
+            snap.rejected += h.rejected.load(Ordering::Relaxed);
+            snap.failed += h.failed.load(Ordering::Relaxed);
+            snap.batches_flushed += h.batches_flushed.load(Ordering::Relaxed);
+            snap.batched_requests += h.batched_requests.load(Ordering::Relaxed);
+            latencies.extend(h.latency_samples());
+            batch_sizes.extend(h.batch_size_samples());
+        }
+        snap.mean_batch_size = Summary::of(&batch_sizes).map(|s| s.mean).unwrap_or(0.0);
+        snap.latency_us = Summary::of(&latencies);
+        snap
+    }
+
+    /// Graceful shutdown: drain every shard (pools and batchers flush
+    /// pending work before their threads join).
+    pub fn shutdown(self) {
+        for s in self.shards {
+            s.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Golden vectors pinned against python/hashring.py (same constants
+    // asserted there) — cross-language determinism of the routing.
+
+    #[test]
+    fn fnv1a64_golden_vectors() {
+        assert_eq!(fnv1a64([0u8; 0]), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64([0u8]), 0xaf63_bd4c_8601_b7df);
+        assert_eq!(fnv1a64([1u8, 0, 1, 1]), 0xad2e_2f77_479b_38da);
+    }
+
+    #[test]
+    fn ring_hash_golden_vectors() {
+        assert_eq!(mix64(0), 0);
+        assert_eq!(mix64(1), 0x5692_161d_100b_05e5);
+        // splitmix64's first output from the golden-ratio seed.
+        assert_eq!(mix64(0x9e37_79b9_7f4a_7c15), 0xe220_a839_7b1d_cdaf);
+        assert_eq!(hash_bytes([0u8; 0]), 0xf52a_15e9_a9b5_e89b);
+        assert_eq!(hash_bytes([1u8, 0, 1, 1]), 0x99d3_1e75_c555_af01);
+        assert_eq!(hash_key(0), 0x813f_0174_a236_7c13);
+        assert_eq!(hash_key(12345), 0xaa08_da79_26f8_f279);
+        assert_eq!(vnode_point(0, 0), 0x6875_2350_ae1d_483f);
+        assert_eq!(vnode_point(3, 17), 0x83c6_0dba_0f78_c403);
+        assert_eq!(
+            hash_features(&[true, false, true, true, false, false, true, false]),
+            0xe6b1_ff75_897b_44fc
+        );
+    }
+
+    #[test]
+    fn ring_routing_golden_vectors() {
+        let ring4 = HashRing::new(4, DEFAULT_VNODES).unwrap();
+        for (key, want) in [
+            (0u64, 0usize),
+            (1, 1),
+            (2, 0),
+            (42, 0),
+            (12345, 3),
+            (999_999_999, 0),
+        ] {
+            assert_eq!(ring4.shard_for_hash(hash_key(key)), want, "key {key}");
+        }
+        assert_eq!(
+            ring4.shard_for_hash(hash_features(&[
+                true, false, true, true, false, false, true, false
+            ])),
+            3
+        );
+        let ring3 = HashRing::new(3, DEFAULT_VNODES).unwrap();
+        for (key, want) in [(0u64, 0usize), (7, 1), (100, 2)] {
+            assert_eq!(ring3.shard_for_hash(hash_key(key)), want, "key {key}");
+        }
+    }
+
+    #[test]
+    fn ring_wraps_past_top() {
+        // All vnode points are < u64::MAX for these parameters, so the
+        // top of the keyspace wraps to the ring's first point — the
+        // same shard that owns hash 0.
+        for shards in [1usize, 2, 3, 4, 8] {
+            let ring = HashRing::new(shards, DEFAULT_VNODES).unwrap();
+            assert_eq!(
+                ring.shard_for_hash(u64::MAX),
+                ring.shard_for_hash(0),
+                "{shards} shards"
+            );
+        }
+    }
+
+    #[test]
+    fn ring_is_deterministic_and_complete() {
+        let a = HashRing::new(5, 32).unwrap();
+        let b = HashRing::new(5, 32).unwrap();
+        assert_eq!(a.shards(), 5);
+        let mut seen = [false; 5];
+        for k in 0..2000u64 {
+            let s = a.shard_for_hash(hash_key(k));
+            assert_eq!(s, b.shard_for_hash(hash_key(k)));
+            assert!(s < 5);
+            seen[s] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "every shard owns some keys: {seen:?}");
+    }
+
+    #[test]
+    fn ring_rejects_degenerate_parameters() {
+        assert!(HashRing::new(0, DEFAULT_VNODES).is_err());
+        assert!(HashRing::new(4, 0).is_err());
+    }
+
+    #[test]
+    fn single_shard_ring_routes_everything_to_shard_zero() {
+        let ring = HashRing::new(1, DEFAULT_VNODES).unwrap();
+        for k in [0u64, 1, 99, u64::MAX] {
+            assert_eq!(ring.shard_for_hash(mix64(k)), 0);
+        }
+    }
+}

@@ -5,6 +5,37 @@ use std::sync::Mutex;
 
 use crate::util::stats::Summary;
 
+/// Capacity of the bounded sample rings.
+pub const RING: usize = 100_000;
+
+/// Bounded ring of `f64` samples with a wrapping write cursor: once the
+/// ring is full, each new sample overwrites the *oldest* slot, so the
+/// summary always reflects the most recent `RING` observations.
+///
+/// (The previous implementation computed the overwrite index as
+/// `len % RING`, which is always 0 once `len == RING` — every new
+/// latency landed in slot 0 and the summary froze on the stale first
+/// window. `batch_sizes` simply stopped recording at capacity.)
+#[derive(Debug, Default)]
+struct SampleRing {
+    buf: Vec<f64>,
+    /// Next slot to overwrite once `buf.len() == RING` (the oldest
+    /// sample — slots fill in arrival order, so after the first
+    /// wrap-around the cursor always points at the oldest entry).
+    cursor: usize,
+}
+
+impl SampleRing {
+    fn push(&mut self, x: f64) {
+        if self.buf.len() < RING {
+            self.buf.push(x);
+        } else {
+            self.buf[self.cursor] = x;
+            self.cursor = (self.cursor + 1) % RING;
+        }
+    }
+}
+
 /// Shared server counters (cheap to clone via `Arc`).
 #[derive(Debug, Default)]
 pub struct ServerStats {
@@ -15,12 +46,10 @@ pub struct ServerStats {
     pub batches_flushed: AtomicU64,
     pub batched_requests: AtomicU64,
     /// End-to-end latencies in microseconds (bounded ring).
-    latencies_us: Mutex<Vec<f64>>,
+    latencies_us: Mutex<SampleRing>,
     /// Flushed batch sizes (bounded ring).
-    batch_sizes: Mutex<Vec<f64>>,
+    batch_sizes: Mutex<SampleRing>,
 }
-
-const RING: usize = 100_000;
 
 impl ServerStats {
     pub fn new() -> ServerStats {
@@ -28,22 +57,26 @@ impl ServerStats {
     }
 
     pub fn record_latency_us(&self, us: f64) {
-        let mut v = self.latencies_us.lock().unwrap();
-        if v.len() >= RING {
-            let idx = v.len() % RING;
-            v[idx % RING] = us;
-        } else {
-            v.push(us);
-        }
+        self.latencies_us.lock().unwrap().push(us);
     }
 
     pub fn record_batch(&self, size: usize) {
         self.batches_flushed.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
-        let mut v = self.batch_sizes.lock().unwrap();
-        if v.len() < RING {
-            v.push(size as f64);
-        }
+        self.batch_sizes.lock().unwrap().push(size as f64);
+    }
+
+    /// Clone of the retained latency samples — used by the sharded
+    /// front door to build an *exact* cross-shard summary instead of
+    /// approximating merged percentiles.
+    pub fn latency_samples(&self) -> Vec<f64> {
+        self.latencies_us.lock().unwrap().buf.clone()
+    }
+
+    /// Clone of the retained batch-size samples (see
+    /// [`ServerStats::latency_samples`]).
+    pub fn batch_size_samples(&self) -> Vec<f64> {
+        self.batch_sizes.lock().unwrap().buf.clone()
     }
 
     pub fn snapshot(&self) -> StatsSnapshot {
@@ -56,9 +89,9 @@ impl ServerStats {
             batched_requests: self.batched_requests.load(Ordering::Relaxed),
             mean_batch_size: {
                 let b = self.batch_sizes.lock().unwrap();
-                Summary::of(&b).map(|s| s.mean).unwrap_or(0.0)
+                Summary::of(&b.buf).map(|s| s.mean).unwrap_or(0.0)
             },
-            latency_us: Summary::of(&self.latencies_us.lock().unwrap()),
+            latency_us: Summary::of(&self.latencies_us.lock().unwrap().buf),
         }
     }
 }
@@ -121,5 +154,61 @@ mod tests {
         assert_eq!(snap.mean_batch_size, 12.0);
         assert_eq!(snap.latency_us.as_ref().unwrap().count, 2);
         assert!(snap.render().contains("batches=2"));
+    }
+
+    #[test]
+    fn latency_ring_tracks_recent_samples_past_capacity() {
+        // Regression: once full, every new sample used to land in slot 0
+        // (`len % RING == 0`), freezing the summary on the first window.
+        let s = ServerStats::new();
+        for _ in 0..RING {
+            s.record_latency_us(10.0);
+        }
+        assert_eq!(s.snapshot().latency_us.unwrap().mean, 10.0);
+        // A full second window must completely replace the first.
+        for _ in 0..RING {
+            s.record_latency_us(20.0);
+        }
+        let l = s.snapshot().latency_us.unwrap();
+        assert_eq!(l.count, RING, "ring stays bounded");
+        assert_eq!(l.min, 20.0, "no stale samples from the first window");
+        assert_eq!(l.mean, 20.0);
+    }
+
+    #[test]
+    fn latency_ring_partial_wrap_overwrites_oldest_not_slot_zero() {
+        let s = ServerStats::new();
+        for _ in 0..RING {
+            s.record_latency_us(10.0);
+        }
+        // 100 fresh samples: mean must move by exactly 100 replaced
+        // slots' worth, not by a single slot-0 churn.
+        for _ in 0..100 {
+            s.record_latency_us(1010.0);
+        }
+        let l = s.snapshot().latency_us.unwrap();
+        assert_eq!(l.count, RING);
+        assert_eq!(l.max, 1010.0);
+        // (99_900 * 10 + 100 * 1010) / 100_000 = 11.0
+        assert!((l.mean - 11.0).abs() < 1e-9, "mean={}", l.mean);
+    }
+
+    #[test]
+    fn batch_ring_keeps_recording_past_capacity() {
+        // Regression: `batch_sizes` only pushed while len < RING, so
+        // `mean_batch_size` went permanently stale on long-running
+        // servers.
+        let s = ServerStats::new();
+        for _ in 0..RING {
+            s.record_batch(4);
+        }
+        assert_eq!(s.snapshot().mean_batch_size, 4.0);
+        for _ in 0..1000 {
+            s.record_batch(104);
+        }
+        let snap = s.snapshot();
+        assert_eq!(snap.batches_flushed as usize, RING + 1000);
+        // (99_000 * 4 + 1000 * 104) / 100_000 = 5.0
+        assert!((snap.mean_batch_size - 5.0).abs() < 1e-9, "mean={}", snap.mean_batch_size);
     }
 }

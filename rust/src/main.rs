@@ -9,7 +9,7 @@ use tsetlin_td::arch::proposed_tm::ProposedMulticlass;
 use tsetlin_td::arch::Architecture;
 use tsetlin_td::cli::{Args, USAGE};
 use tsetlin_td::config::ServeConfig;
-use tsetlin_td::coordinator::{Backend, CoordinatorServer, InferRequest};
+use tsetlin_td::coordinator::{Backend, CoordinatorServer, InferRequest, ShardedCoordinator};
 use tsetlin_td::sim::TechParams;
 use tsetlin_td::tm::{self, cotm_train::train_cotm, data, train::train_multiclass, TmParams};
 use tsetlin_td::util::SplitMix64;
@@ -240,16 +240,21 @@ fn cmd_waveform(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let cfg = match args.flag("config") {
+    let mut cfg = match args.flag("config") {
         Some(path) => ServeConfig::load(path)?,
         None => ServeConfig::default(),
     };
+    // CLI overrides the config file's shard count.
+    cfg.shards = args.flag_parse("shards", cfg.shards)?;
     let with_golden = !args.switch("no-golden");
     let n_requests = args.flag_parse("requests", 200usize)?;
     let dataset = data::iris()?;
     let (m, cm) = train_pair(&dataset, 60, 2)?;
-    let srv = CoordinatorServer::new(&cfg, m, cm, with_golden)?;
-    println!("serving {n_requests} mixed requests (golden={with_golden}) ...");
+    let srv = ShardedCoordinator::new(&cfg, m, cm, with_golden)?;
+    println!(
+        "serving {n_requests} mixed requests across {} shard(s) (golden={with_golden}) ...",
+        srv.num_shards()
+    );
     let mut rng = SplitMix64::new(1);
     let backends: Vec<Backend> = Backend::ALL
         .iter()
@@ -281,6 +286,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ok as f64 / dt.as_secs_f64()
     );
     println!("{}", srv.stats().render());
+    if srv.num_shards() > 1 {
+        for (i, s) in srv.shard_stats().iter().enumerate() {
+            println!("  shard {i}: {}", s.render());
+        }
+    }
     srv.shutdown();
     Ok(())
 }

@@ -3,11 +3,22 @@
 #
 #   scripts/verify.sh
 #
-# Runs: cargo build --release && cargo test -q && cargo bench --no-run
-# (benches are plain `harness = false` mains — `--no-run` proves they
-# compile without paying their full runtime).
+# Runs: the Python tier (JAX kernels + the consistent-hash-ring mirror,
+# which validates the shard-routing algorithm even on toolchain-less
+# images), then cargo build --release && cargo test -q, the shard /
+# coordinator suites by name (so a routing regression is visible at a
+# glance), and cargo bench --no-run (benches are plain `harness = false`
+# mains — `--no-run` proves they compile without paying their full
+# runtime).
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+if command -v python3 >/dev/null 2>&1 && python3 -c "import pytest" >/dev/null 2>&1; then
+    echo "== pytest python/tests =="
+    python3 -m pytest -q python/tests
+else
+    echo "verify.sh: pytest not found; skipping the Python tier." >&2
+fi
 
 if ! command -v cargo >/dev/null 2>&1; then
     echo "verify.sh: cargo not found on PATH." >&2
@@ -21,6 +32,11 @@ cargo build --release
 
 echo "== cargo test -q =="
 cargo test -q
+
+echo "== shard / coordinator suites (named re-run for visibility) =="
+cargo test -q --lib coordinator::
+cargo test -q --test coordinator_props shard
+cargo test -q --test equivalence sharded
 
 echo "== cargo bench --no-run =="
 cargo bench --no-run

@@ -216,6 +216,82 @@ fn bitparallel_front_door_serves_random_models_concurrently() {
 }
 
 #[test]
+fn sharded_front_door_serves_random_models_concurrently() {
+    // The scale-out plumbing (consistent-hash routing -> per-shard
+    // coordinator -> dynamic batcher -> shared bit-parallel engine,
+    // relay-free replies) must not corrupt results: random models,
+    // concurrent mixed submissions through the sharded front door,
+    // bit-exact sums out, and counters that aggregate across shards.
+    use tsetlin_td::config::ServeConfig;
+    use tsetlin_td::coordinator::{Backend, InferRequest, ShardedCoordinator};
+
+    prop("sharded front door", 4, |g| {
+        let f = g.usize(2..12);
+        let c = 2 * g.usize(1..4);
+        let k = g.usize(2..4);
+        let m = random_multiclass(g, f, c, k);
+        let cm = random_cotm(g, f, c, k);
+        let cfg = ServeConfig {
+            shards: 3,
+            workers: 1,
+            max_batch: 16,
+            ..ServeConfig::default()
+        };
+        let srv = ShardedCoordinator::new(&cfg, m.clone(), cm.clone(), false).unwrap();
+        let samples: Vec<Vec<bool>> = (0..60).map(|_| g.bools(f)).collect();
+        // Routing must be deterministic before, during, and after load.
+        let routes: Vec<usize> =
+            samples.iter().map(|x| srv.shard_for_features(x)).collect();
+        let pending: Vec<_> = samples
+            .iter()
+            .enumerate()
+            .map(|(i, x)| {
+                let backend = if i % 2 == 0 {
+                    Backend::BitParallelMulticlass
+                } else {
+                    Backend::BitParallelCotm
+                };
+                (
+                    i,
+                    backend,
+                    srv.submit(InferRequest { features: x.clone(), backend }).unwrap(),
+                )
+            })
+            .collect();
+        for (i, backend, rx) in pending {
+            let r = rx
+                .recv_timeout(std::time::Duration::from_secs(30))
+                .expect("reply within deadline")
+                .expect("sharded request served");
+            assert_eq!(r.backend, backend);
+            let want = if backend == Backend::BitParallelMulticlass {
+                multiclass_class_sums(&m, &samples[i])
+            } else {
+                cotm_class_sums(&cm, &samples[i])
+            };
+            assert_eq!(r.class_sums, want, "request {i} via {backend:?}");
+            assert_eq!(r.predicted, predict_argmax(&want), "request {i}");
+        }
+        for (x, &route) in samples.iter().zip(&routes) {
+            assert_eq!(srv.shard_for_features(x), route, "routing drifted under load");
+        }
+        // Conservation across the shard set: nothing lost, nothing
+        // double-counted, and per-shard counters sum to the aggregate.
+        let agg = srv.stats();
+        assert_eq!(agg.submitted, 60);
+        assert_eq!(agg.completed, 60);
+        assert_eq!(agg.failed, 0);
+        let per_shard = srv.shard_stats();
+        assert_eq!(per_shard.iter().map(|s| s.completed).sum::<u64>(), 60);
+        for (s, snap) in per_shard.iter().enumerate() {
+            let routed = routes.iter().filter(|&&r| r == s).count() as u64;
+            assert_eq!(snap.submitted, routed, "shard {s} submitted count");
+        }
+        srv.shutdown();
+    });
+}
+
+#[test]
 fn wta_choice_does_not_change_multiclass_results() {
     let d = data::iris().unwrap();
     let (tr, _) = d.split(0.8, 42);
