@@ -1,0 +1,163 @@
+//! Indexed vs bit-parallel vs scalar — the density-sweep bench for the
+//! event-driven inverted-index tier.
+//!
+//! The packed engine's cost per sample is ~`C · ceil(2F/64)` word ops
+//! regardless of sparsity; the indexed engine's is one counter op per
+//! (set literal, including clause) pair, so it scales with
+//! included-literal density. This bench sweeps density on a large
+//! synthetic model and prints scalar / packed / indexed µs per sample
+//! per point, plus where the default auto-select threshold
+//! ([`tsetlin_td::tm::index::PACKED_VS_INDEXED_DENSITY`]) would route —
+//! the empirical crossover should bracket it.
+//!
+//! Run: `cargo bench --bench indexed_vs_bitpar`
+
+use std::time::Instant;
+
+use tsetlin_td::tm::index::{prefer_indexed, PACKED_VS_INDEXED_DENSITY};
+use tsetlin_td::tm::infer::{cotm_class_sums, multiclass_class_sums};
+use tsetlin_td::tm::{
+    BatchEngine, BitParallelCotm, BitParallelMulticlass, ClauseMask, CoTmModel,
+    IndexedCotm, IndexedMulticlass, MultiClassTmModel, TmParams,
+};
+use tsetlin_td::util::{SplitMix64, Table};
+
+const DENSITIES: [f64; 6] = [0.005, 0.01, 0.03, 0.06, 0.12, 0.25];
+
+/// Time `f` over `reps` repetitions of `samples` samples; µs/sample.
+fn time_us_per_sample(samples: usize, reps: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warm-up
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() * 1e6 / (reps * samples) as f64
+}
+
+fn random_mask(rng: &mut SplitMix64, literals: usize, density: f64) -> ClauseMask {
+    ClauseMask { include: (0..literals).map(|_| rng.chance(density)).collect() }
+}
+
+fn synthetic_multiclass(f: usize, c: usize, k: usize, density: f64, seed: u64) -> MultiClassTmModel {
+    let p = TmParams { features: f, clauses: c, classes: k, ..TmParams::iris_paper() };
+    let mut rng = SplitMix64::new(seed);
+    let mut m = MultiClassTmModel::zeroed(p);
+    for class in &mut m.clauses {
+        for clause in class.iter_mut() {
+            *clause = random_mask(&mut rng, 2 * f, density);
+        }
+    }
+    m
+}
+
+fn synthetic_cotm(f: usize, c: usize, k: usize, density: f64, seed: u64) -> CoTmModel {
+    let p = TmParams { features: f, clauses: c, classes: k, ..TmParams::iris_paper() };
+    let mut rng = SplitMix64::new(seed);
+    let mut m = CoTmModel::zeroed(p.clone());
+    for clause in &mut m.clauses {
+        *clause = random_mask(&mut rng, 2 * f, density);
+    }
+    for row in &mut m.weights {
+        for w in row.iter_mut() {
+            *w = rng.next_below(2 * p.max_weight as u64 + 1) as i32 - p.max_weight;
+        }
+    }
+    m
+}
+
+fn random_samples(f: usize, n: usize, seed: u64) -> Vec<Vec<bool>> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| (0..f).map(|_| rng.next_bool()).collect()).collect()
+}
+
+fn main() {
+    println!("== indexed vs bit-parallel vs scalar (density sweep) ==");
+    let (f, c, k) = (256usize, 512usize, 4usize);
+    let xs = random_samples(f, 128, 9);
+    let n = xs.len();
+
+    let mut t = Table::new(vec![
+        "density (target/actual)",
+        "scalar us/sample",
+        "bitpar batched",
+        "indexed batched",
+        "indexed/bitpar",
+        "auto picks",
+    ]);
+    for (di, &density) in DENSITIES.iter().enumerate() {
+        let m = synthetic_multiclass(f, c, k, density, 7 + di as u64);
+        let bp = BitParallelMulticlass::from_model(&m).expect("valid model");
+        let ix = IndexedMulticlass::from_model(&m).expect("valid model");
+        // Sanity first: a speedup over wrong answers is worthless.
+        for x in xs.iter().take(4) {
+            let want = multiclass_class_sums(&m, x);
+            assert_eq!(bp.class_sums(x), want);
+            assert_eq!(ix.class_sums(x), want);
+        }
+        let scalar_us = time_us_per_sample(n, 3, || {
+            for x in &xs {
+                std::hint::black_box(multiclass_class_sums(&m, x));
+            }
+        });
+        let bp_us = time_us_per_sample(n, 10, || {
+            std::hint::black_box(bp.infer_batch(&xs));
+        });
+        let ix_us = time_us_per_sample(n, 10, || {
+            std::hint::black_box(ix.infer_batch(&xs));
+        });
+        t.row(vec![
+            format!("mc {density:.3}/{:.3}", ix.density()),
+            format!("{scalar_us:.2}"),
+            format!("{bp_us:.2} ({:.1}x)", scalar_us / bp_us),
+            format!("{ix_us:.2} ({:.1}x)", scalar_us / ix_us),
+            format!("{:.2}x", bp_us / ix_us),
+            if prefer_indexed(ix.density(), PACKED_VS_INDEXED_DENSITY) {
+                "indexed".into()
+            } else {
+                "bitpar".into()
+            },
+        ]);
+    }
+    for (di, &density) in DENSITIES.iter().enumerate() {
+        let m = synthetic_cotm(f, c, k, density, 21 + di as u64);
+        let bp = BitParallelCotm::from_model(&m).expect("valid model");
+        let ix = IndexedCotm::from_model(&m).expect("valid model");
+        for x in xs.iter().take(4) {
+            let want = cotm_class_sums(&m, x);
+            assert_eq!(bp.class_sums(x), want);
+            assert_eq!(ix.class_sums(x), want);
+        }
+        let scalar_us = time_us_per_sample(n, 3, || {
+            for x in &xs {
+                std::hint::black_box(cotm_class_sums(&m, x));
+            }
+        });
+        let bp_us = time_us_per_sample(n, 10, || {
+            std::hint::black_box(bp.infer_batch(&xs));
+        });
+        let ix_us = time_us_per_sample(n, 10, || {
+            std::hint::black_box(ix.infer_batch(&xs));
+        });
+        t.row(vec![
+            format!("co {density:.3}/{:.3}", ix.density()),
+            format!("{scalar_us:.2}"),
+            format!("{bp_us:.2} ({:.1}x)", scalar_us / bp_us),
+            format!("{ix_us:.2} ({:.1}x)", scalar_us / ix_us),
+            format!("{:.2}x", bp_us / ix_us),
+            if prefer_indexed(ix.density(), PACKED_VS_INDEXED_DENSITY) {
+                "indexed".into()
+            } else {
+                "bitpar".into()
+            },
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "model: {f} features, {c} clauses/class, {k} classes; batch {n}; \
+         auto threshold {PACKED_VS_INDEXED_DENSITY}"
+    );
+    println!(
+        "expectation: indexed/bitpar > 1x below the threshold and < 1x well \
+         above it (the crossover should bracket the default)."
+    );
+}

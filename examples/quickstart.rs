@@ -8,8 +8,8 @@ use tsetlin_td::arch::Architecture;
 use tsetlin_td::config::ServeConfig;
 use tsetlin_td::coordinator::{Backend, InferRequest, ShardedCoordinator};
 use tsetlin_td::tm::{
-    cotm_train::train_cotm, data, infer, train::train_multiclass, BatchEngine,
-    BitParallelMulticlass, TmParams,
+    cotm_train::train_cotm, data, index, infer, train::train_multiclass, BatchEngine,
+    BitParallelMulticlass, IndexedMulticlass, TmParams,
 };
 use tsetlin_td::wta::WtaKind;
 
@@ -53,6 +53,30 @@ fn main() -> tsetlin_td::Result<()> {
         "bit-parallel path must be bit-exact"
     );
 
+    // 2b'. The event-driven alternative: the inverted-index engine
+    //      visits only the clauses a sample's set literals touch
+    //      (literal->clause postings + unsatisfied-literal counters).
+    //      Identical sums, different cost model — it wins when the
+    //      model is sparse. `auto-*` backends pick per model by
+    //      included-literal density.
+    let indexed = IndexedMulticlass::from_model(&model)?;
+    for x in test.features.iter().take(16) {
+        assert_eq!(
+            indexed.class_sums(x),
+            fast.class_sums(x),
+            "indexed and packed engines are interchangeable"
+        );
+    }
+    println!(
+        "inverted-index engine: density {:.3} -> auto-select would use {}",
+        indexed.density(),
+        if index::prefer_indexed(indexed.density(), index::PACKED_VS_INDEXED_DENSITY) {
+            "indexed"
+        } else {
+            "bitpar"
+        }
+    );
+
     // 2c. Scale-out serving: front two coordinator shards with a
     //     deterministic consistent-hash ring. The same feature vector
     //     always routes to the same shard, batched replies come back
@@ -66,15 +90,19 @@ fn main() -> tsetlin_td::Result<()> {
         ..ServeConfig::default()
     };
     let srv = ShardedCoordinator::new(&cfg, model.clone(), cotm, false)?;
-    for x in test.features.iter().take(8) {
-        let r = srv.infer(InferRequest {
-            features: x.clone(),
-            backend: Backend::BitParallelMulticlass,
-        })?;
+    for (i, x) in test.features.iter().take(8).enumerate() {
+        // Alternate the packed, indexed and auto-selected native
+        // backends: all three must produce identical sums.
+        let backend = [
+            Backend::BitParallelMulticlass,
+            Backend::IndexedMulticlass,
+            Backend::AutoMulticlass,
+        ][i % 3];
+        let r = srv.infer(InferRequest { features: x.clone(), backend })?;
         assert_eq!(
             r.class_sums,
             infer::multiclass_class_sums(&model, x),
-            "sharded front door must be bit-exact"
+            "sharded front door must be bit-exact via {backend:?}"
         );
     }
     let agg = srv.stats();

@@ -59,9 +59,16 @@ fn main() -> tsetlin_td::Result<()> {
     }
 
     // Phase 2: mixed hardware-model traffic with per-request energy.
+    // Native batched backends (bitpar-*/indexed-*/auto-*) carry no
+    // hardware energy model, so they would only print misleading
+    // 0 fJ/inf rows here.
     println!("\n-- phase 2: mixed hardware-simulation traffic --");
     let mut rng = SplitMix64::new(3);
-    let hw: Vec<Backend> = Backend::ALL.iter().copied().filter(|b| !b.is_golden()).collect();
+    let hw: Vec<Backend> = Backend::ALL
+        .iter()
+        .copied()
+        .filter(|b| !b.is_golden() && !b.is_native_batched() && !b.is_auto())
+        .collect();
     let t0 = Instant::now();
     let mut per_backend: std::collections::BTreeMap<&str, (usize, f64)> = Default::default();
     let mut pending = Vec::new();

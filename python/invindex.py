@@ -1,0 +1,163 @@
+"""Python mirror of the event-driven inverted-index TM inference tier.
+
+Mirrors ``rust/src/tm/index.rs`` algorithm-for-algorithm so the counter
+sweep can be validated (hand-worked oracles, cross-language golden
+vectors, randomized differential tests against a direct evaluator) on
+CI images that carry no Rust toolchain — the same arrangement as
+``hashring.py`` for the shard router. Any change to the Rust counter
+algorithm must be replayed here and in both golden-vector test suites.
+
+Algorithm (arXiv 2004.03188, clause indexing)
+---------------------------------------------
+Literals are interleaved: ``literal[2i] = x_i``, ``literal[2i+1] =
+not x_i``, so exactly F of the 2F literals are *set* per sample. Each
+clause keeps a counter of unsatisfied included literals, initialised to
+its included-literal count. Evaluating a sample walks only the set
+literals and decrements the counter of every clause whose include mask
+names that literal (via the literal -> clauses inverted index); a
+clause fires exactly when its counter reaches zero. A second walk over
+the same postings restores the counters, so the scratch state is reused
+across a batch in O(touched) instead of O(clauses).
+
+Conventions pinned to the scalar reference:
+
+* An empty (all-exclude) clause appears in no literal's clause list;
+  its counter starts at 0 but is never decremented, so it never fires.
+* A clause including both ``x_i`` and ``not x_i`` never fires (only one
+  of the pair is ever set).
+"""
+
+
+class InvertedIndex:
+    """Literal -> clause inverted index with unsatisfied-literal counters.
+
+    ``masks`` is a list of clauses, each a list of 2F booleans
+    (include mask over the interleaved literals).
+    """
+
+    def __init__(self, features, masks):
+        self.features = features
+        self.clause_lists = [[] for _ in range(2 * features)]
+        self.required = []
+        for c, mask in enumerate(masks):
+            if len(mask) != 2 * features:
+                raise ValueError("mask width != 2F")
+            self.required.append(sum(1 for b in mask if b))
+            for lit, inc in enumerate(mask):
+                if inc:
+                    self.clause_lists[lit].append(c)
+        # Reusable scratch: counters in the reset state, restored by
+        # every sweep.
+        self._counts = list(self.required)
+
+    def num_clauses(self):
+        return len(self.required)
+
+    def postings(self):
+        return sum(self.required)
+
+    def density(self):
+        total = self.num_clauses() * 2 * self.features
+        return self.postings() / total if total else 0.0
+
+    def sweep(self, sample):
+        """Fired clause ids for one sample, in event order."""
+        if len(sample) != self.features:
+            raise ValueError("sample width != F")
+        counts = self._counts
+        fired = []
+        for i, f in enumerate(sample):
+            lit = 2 * i + (0 if f else 1)
+            for c in self.clause_lists[lit]:
+                counts[c] -= 1
+                if counts[c] == 0:
+                    fired.append(c)
+        # Event-driven undo: restore only the touched counters.
+        for i, f in enumerate(sample):
+            lit = 2 * i + (0 if f else 1)
+            for c in self.clause_lists[lit]:
+                counts[c] += 1
+        return fired
+
+
+class IndexedMulticlass:
+    """Indexed multi-class TM: clause id = class * C + j, polarity
+    alternates +/- with j (Eq. 1)."""
+
+    def __init__(self, clauses):
+        # clauses: [K][C][2F] include masks.
+        self.classes = len(clauses)
+        self.clauses_per_class = len(clauses[0])
+        features = len(clauses[0][0]) // 2
+        flat = [mask for cls in clauses for mask in cls]
+        self.index = InvertedIndex(features, flat)
+
+    def class_sums(self, sample):
+        sums = [0] * self.classes
+        c = self.clauses_per_class
+        for cid in self.index.sweep(sample):
+            k, j = divmod(cid, c)
+            sums[k] += 1 if j % 2 == 0 else -1
+        return sums
+
+
+class IndexedCotm:
+    """Indexed CoTM: shared clause pool + signed weights (Eq. 2)."""
+
+    def __init__(self, clauses, weights):
+        # clauses: [C][2F]; weights: [K][C].
+        features = len(clauses[0]) // 2
+        self.index = InvertedIndex(features, clauses)
+        self.classes = len(weights)
+        # Clause-major weight columns, like the Rust engine.
+        self.weight_cols = [
+            [weights[k][j] for k in range(self.classes)]
+            for j in range(len(clauses))
+        ]
+
+    def class_sums(self, sample):
+        sums = [0] * self.classes
+        for cid in self.index.sweep(sample):
+            for k, w in enumerate(self.weight_cols[cid]):
+                sums[k] += w
+        return sums
+
+
+# ---------------------------------------------------------------------
+# Direct (non-indexed) reference evaluator, used by the differential
+# tests: the straightforward reading of Eq. 1/2, matching
+# rust/src/tm/infer.rs.
+# ---------------------------------------------------------------------
+
+def make_literals(features):
+    """Interleave: [x0, not x0, x1, not x1, ...]."""
+    lits = []
+    for f in features:
+        lits.append(bool(f))
+        lits.append(not f)
+    return lits
+
+
+def clause_output(mask, lits):
+    """Empty clauses output 0 at inference; otherwise AND of included."""
+    if not any(mask):
+        return 0
+    return int(all(lit for inc, lit in zip(mask, lits) if inc))
+
+
+def ref_multiclass_class_sums(clauses, sample):
+    lits = make_literals(sample)
+    sums = []
+    for cls in clauses:
+        s = 0
+        for j, mask in enumerate(cls):
+            out = clause_output(mask, lits)
+            s += out if j % 2 == 0 else -out
+        sums.append(s)
+    return sums
+
+
+def ref_cotm_class_sums(clauses, weights, sample):
+    lits = make_literals(sample)
+    outs = [clause_output(mask, lits) for mask in clauses]
+    return [sum(w * o for w, o in zip(row, outs)) for row in weights]

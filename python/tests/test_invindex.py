@@ -1,0 +1,193 @@
+"""Inverted-index counter-sweep mirror vs the Rust engines (tm/index.rs).
+
+Plain pytest (no hypothesis, no JAX) so it runs on every CI image —
+including toolchain-less ones where the Rust suite cannot. The golden
+models, samples and class sums below are asserted *identically* in
+``rust/src/tm/index.rs`` (``golden_vectors_match_python_mirror``); both
+sides build them from the same closed-form formulas, so if either
+implementation drifts, both suites fail.
+"""
+
+import random
+
+from invindex import (
+    IndexedCotm,
+    IndexedMulticlass,
+    InvertedIndex,
+    ref_cotm_class_sums,
+    ref_multiclass_class_sums,
+)
+
+# ---------------------------------------------------------------------
+# The shared golden scheme (formulas mirrored in index.rs):
+#   multiclass: F=9, C=4/class, K=3; include(k,j,l) = (3l+5j+7k)%11 == 0
+#   cotm:       F=9, C=6, K=3; include(j,l) = (5l+3j)%7 == 0,
+#               weight(k,j) = (j+2k)%7 - 3
+#   sample s:   feature i = (i*i + 3*i*s + 2*s) % 7 < 3
+# ---------------------------------------------------------------------
+
+F = 9
+LITS = 2 * F
+
+GOLDEN_MC_CLAUSES = [
+    [[(3 * l + 5 * j + 7 * k) % 11 == 0 for l in range(LITS)] for j in range(4)]
+    for k in range(3)
+]
+GOLDEN_CO_CLAUSES = [
+    [(5 * l + 3 * j) % 7 == 0 for l in range(LITS)] for j in range(6)
+]
+GOLDEN_CO_WEIGHTS = [[(j + 2 * k) % 7 - 3 for j in range(6)] for k in range(3)]
+
+
+def golden_sample(s):
+    return [(i * i + 3 * i * s + 2 * s) % 7 < 3 for i in range(F)]
+
+
+GOLDEN_MC_SUMS = [
+    [1, 0, -1],
+    [0, -1, 2],
+    [0, -1, 0],
+    [0, 0, 0],
+    [-1, -1, 1],
+    [0, 0, 0],
+]
+GOLDEN_CO_SUMS = [
+    [-2, 0, 2],
+    [-6, 0, 6],
+    [0, 2, -3],
+    [3, 2, -6],
+    [-3, -1, 1],
+    [3, 2, -6],
+]
+
+
+def test_multiclass_golden_vectors():
+    eng = IndexedMulticlass(GOLDEN_MC_CLAUSES)
+    for s in range(6):
+        x = golden_sample(s)
+        assert eng.class_sums(x) == GOLDEN_MC_SUMS[s], s
+        # The goldens themselves match the direct reference, so all
+        # three tiers (Rust indexed, Rust scalar, this mirror) pin the
+        # same semantics.
+        assert ref_multiclass_class_sums(GOLDEN_MC_CLAUSES, x) == GOLDEN_MC_SUMS[s], s
+
+
+def test_cotm_golden_vectors():
+    eng = IndexedCotm(GOLDEN_CO_CLAUSES, GOLDEN_CO_WEIGHTS)
+    for s in range(6):
+        x = golden_sample(s)
+        assert eng.class_sums(x) == GOLDEN_CO_SUMS[s], s
+        assert (
+            ref_cotm_class_sums(GOLDEN_CO_CLAUSES, GOLDEN_CO_WEIGHTS, x)
+            == GOLDEN_CO_SUMS[s]
+        ), s
+
+
+def test_hand_worked_multiclass_oracle():
+    # The same hand-worked example as rust/src/tm/infer.rs and
+    # python/tests/test_model.py: both layers must agree on it.
+    clauses = [
+        [
+            [True, False, False, False],   # class0 clause0 (+): x0
+            [False, False, False, True],   # class0 clause1 (-): not x1
+        ],
+        [
+            [False, True, False, False],   # class1 clause0 (+): not x0
+            [False, False, True, False],   # class1 clause1 (-): x1
+        ],
+    ]
+    eng = IndexedMulticlass(clauses)
+    assert eng.class_sums([True, False]) == [0, 0]
+    assert eng.class_sums([True, True]) == [1, -1]
+
+
+def test_hand_worked_cotm_oracle():
+    clauses = [
+        [True, False, False, False],   # clause0: x0
+        [False, False, True, False],   # clause1: x1
+    ]
+    weights = [[3, -2], [-1, 4]]
+    eng = IndexedCotm(clauses, weights)
+    assert eng.class_sums([True, True]) == [1, 3]
+    assert eng.class_sums([True, False]) == [3, -1]
+    assert eng.class_sums([False, False]) == [0, 0]
+
+
+def test_empty_clause_never_fires():
+    # All-exclude clauses appear in no literal list: counter starts at 0
+    # and is never decremented — the "empty clause outputs 0" convention.
+    eng = IndexedCotm([[False] * 4, [False] * 4], [[5, 7], [1, 2]])
+    assert eng.class_sums([True, True]) == [0, 0]
+    assert eng.class_sums([False, False]) == [0, 0]
+
+
+def test_contradictory_clause_never_fires():
+    # x0 AND not-x0 can never be satisfied: only one of the pair is set.
+    eng = IndexedCotm([[True, True, False, False]], [[5], [5]])
+    for x in ([True, True], [False, False], [True, False]):
+        assert eng.class_sums(x) == [0, 0], x
+
+
+def test_sweep_restores_counters_across_a_batch():
+    idx = InvertedIndex(F, [m for cls in GOLDEN_MC_CLAUSES for m in cls])
+    baseline = list(idx.required)
+    for s in range(6):
+        idx.sweep(golden_sample(s))
+        assert idx._counts == baseline, s
+
+
+def test_fired_ids_are_events_not_rescans():
+    # A clause fires exactly once, at the instant its last unsatisfied
+    # literal is seen — no duplicates even when several of its literals
+    # are set.
+    idx = InvertedIndex(2, [[True, False, True, False]])  # x0 AND x1
+    assert idx.sweep([True, True]) == [0]
+    assert idx.sweep([True, False]) == []
+    assert idx.sweep([False, True]) == []
+
+
+def test_density_accounting():
+    idx = InvertedIndex(F, GOLDEN_CO_CLAUSES)
+    included = sum(sum(m) for m in GOLDEN_CO_CLAUSES)
+    assert idx.postings() == included
+    assert abs(idx.density() - included / (6 * LITS)) < 1e-12
+    assert InvertedIndex(2, [[False] * 4]).density() == 0.0
+
+
+def _random_masks(rng, n, lits, density):
+    return [[rng.random() < density for _ in range(lits)] for _ in range(n)]
+
+
+def test_randomized_differential_multiclass():
+    # 300 random models spanning all-exclude to dense clauses: the
+    # counter sweep must equal the direct evaluator sample-for-sample.
+    rng = random.Random(0x7E57CA5E)
+    for case in range(300):
+        f = rng.randint(1, 24)
+        c = 2 * rng.randint(1, 4)
+        k = rng.randint(2, 4)
+        density = rng.choice([0.0, 0.05, 0.15, 0.4, 0.8])
+        clauses = [_random_masks(rng, c, 2 * f, density) for _ in range(k)]
+        eng = IndexedMulticlass(clauses)
+        for _ in range(4):
+            x = [rng.random() < 0.5 for _ in range(f)]
+            assert eng.class_sums(x) == ref_multiclass_class_sums(clauses, x), (
+                case, f, c, k, density,
+            )
+
+
+def test_randomized_differential_cotm():
+    rng = random.Random(0xC07A)
+    for case in range(300):
+        f = rng.randint(1, 24)
+        c = rng.randint(1, 8)
+        k = rng.randint(2, 4)
+        density = rng.choice([0.0, 0.05, 0.15, 0.4, 0.8])
+        clauses = _random_masks(rng, c, 2 * f, density)
+        weights = [[rng.randint(-7, 7) for _ in range(c)] for _ in range(k)]
+        eng = IndexedCotm(clauses, weights)
+        for _ in range(4):
+            x = [rng.random() < 0.5 for _ in range(f)]
+            assert eng.class_sums(x) == ref_cotm_class_sums(clauses, weights, x), (
+                case, f, c, k, density,
+            )

@@ -87,11 +87,20 @@ COMMANDS:
   help       Show this text
 
 Backends: golden-multiclass golden-cotm bitpar-multiclass bitpar-cotm
+          indexed-multiclass indexed-cotm auto-multiclass auto-cotm
           multiclass-sync multiclass-async-bd multiclass-proposed
           cotm-sync cotm-async-bd cotm-proposed
 
 bitpar-* is the native bit-parallel serving tier (packed-word clause
 evaluation, dynamically batched; no artifacts needed).
+indexed-* is the event-driven inverted-index tier (literal->clause
+postings + unsatisfied-literal counters; only clauses a sample's set
+literals touch are visited — the fast path for sparse models).
+auto-* picks packed vs indexed per compiled model by included-literal
+density: at or below the threshold (default 0.05; set
+`indexed_density_threshold` under [coordinator] in serve.toml) the
+indexed engine serves, above it the packed engine. Replies name the
+concrete engine used; the choice never changes the sums.
 ";
 
 #[cfg(test)]

@@ -30,6 +30,12 @@ pub struct ServeConfig {
     pub artifacts_dir: String,
     /// WTA topology for the proposed architectures.
     pub wta: WtaKind,
+    /// `auto-*` backend crossover: models whose included-literal
+    /// density is at or below this threshold serve through the
+    /// event-driven inverted-index engines; denser models through the
+    /// packed bit-parallel engines. Must be in [0, 1]; the default is
+    /// [`crate::tm::index::PACKED_VS_INDEXED_DENSITY`].
+    pub indexed_density_threshold: f64,
 }
 
 impl Default for ServeConfig {
@@ -42,6 +48,7 @@ impl Default for ServeConfig {
             queue_depth: 1024,
             artifacts_dir: "artifacts".into(),
             wta: WtaKind::Tba,
+            indexed_density_threshold: crate::tm::index::PACKED_VS_INDEXED_DENSITY,
         }
     }
 }
@@ -58,26 +65,36 @@ impl ServeConfig {
     /// queue_depth = 1024
     /// artifacts_dir = "artifacts"
     /// wta = "tba"
+    /// indexed_density_threshold = 0.05
     /// ```
     pub fn from_toml(doc: &TomlDoc) -> Result<ServeConfig> {
+        // Counts must reject negative values rather than `as`-casting
+        // them into huge unsigned numbers that slip past validate().
+        fn non_negative<T: TryFrom<i64>>(v: &toml::TomlValue, key: &str) -> Result<T> {
+            T::try_from(v.as_int()?)
+                .map_err(|_| crate::Error::config(format!("{key} must be >= 0")))
+        }
         let mut cfg = ServeConfig::default();
         if let Some(v) = doc.get("coordinator", "shards") {
-            cfg.shards = v.as_int()? as usize;
+            cfg.shards = non_negative(v, "shards")?;
         }
         if let Some(v) = doc.get("coordinator", "workers") {
-            cfg.workers = v.as_int()? as usize;
+            cfg.workers = non_negative(v, "workers")?;
         }
         if let Some(v) = doc.get("coordinator", "max_batch") {
-            cfg.max_batch = v.as_int()? as usize;
+            cfg.max_batch = non_negative(v, "max_batch")?;
         }
         if let Some(v) = doc.get("coordinator", "batch_timeout_us") {
-            cfg.batch_timeout_us = v.as_int()? as u64;
+            cfg.batch_timeout_us = non_negative(v, "batch_timeout_us")?;
         }
         if let Some(v) = doc.get("coordinator", "queue_depth") {
-            cfg.queue_depth = v.as_int()? as usize;
+            cfg.queue_depth = non_negative(v, "queue_depth")?;
         }
         if let Some(v) = doc.get("coordinator", "artifacts_dir") {
             cfg.artifacts_dir = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.get("coordinator", "indexed_density_threshold") {
+            cfg.indexed_density_threshold = v.as_float()?;
         }
         if let Some(v) = doc.get("coordinator", "wta") {
             cfg.wta = match v.as_str()? {
@@ -114,6 +131,13 @@ impl ServeConfig {
                 "queue_depth must be >= max_batch (backpressure would deadlock)",
             ));
         }
+        if !(0.0..=1.0).contains(&self.indexed_density_threshold) {
+            // NaN fails the range test too: the auto-select comparison
+            // must be total.
+            return Err(crate::Error::config(
+                "indexed_density_threshold must be in [0, 1]",
+            ));
+        }
         Ok(())
     }
 }
@@ -139,6 +163,7 @@ mod tests {
             queue_depth = 2048
             artifacts_dir = "custom/artifacts"
             wta = "mesh"
+            indexed_density_threshold = 0.12
             "#,
         )
         .unwrap();
@@ -148,12 +173,51 @@ mod tests {
         assert_eq!(cfg.max_batch, 64);
         assert_eq!(cfg.wta, WtaKind::Mesh);
         assert_eq!(cfg.artifacts_dir, "custom/artifacts");
+        assert_eq!(cfg.indexed_density_threshold, 0.12);
+    }
+
+    #[test]
+    fn default_density_threshold_matches_engine_crossover() {
+        assert_eq!(
+            ServeConfig::default().indexed_density_threshold,
+            crate::tm::index::PACKED_VS_INDEXED_DENSITY
+        );
+    }
+
+    #[test]
+    fn rejects_out_of_range_density_threshold() {
+        for t in ["-0.1", "1.5", "nan"] {
+            let doc = TomlDoc::parse(&format!(
+                "[coordinator]\nindexed_density_threshold = {t}\n"
+            ))
+            .unwrap();
+            assert!(ServeConfig::from_toml(&doc).is_err(), "{t}");
+        }
+        // Integer 0 and 1 coerce to float and are valid boundaries.
+        for t in ["0", "1", "0.5"] {
+            let doc = TomlDoc::parse(&format!(
+                "[coordinator]\nindexed_density_threshold = {t}\n"
+            ))
+            .unwrap();
+            assert!(ServeConfig::from_toml(&doc).is_ok(), "{t}");
+        }
     }
 
     #[test]
     fn rejects_zero_shards() {
         let doc = TomlDoc::parse("[coordinator]\nshards = 0\n").unwrap();
         assert!(ServeConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn rejects_negative_counts_instead_of_wrapping() {
+        // Regression: `as usize` wrapped -2 to a huge shard count that
+        // passed the non-zero validation.
+        for key in ["shards", "workers", "max_batch", "batch_timeout_us", "queue_depth"] {
+            let doc = TomlDoc::parse(&format!("[coordinator]\n{key} = -2\n")).unwrap();
+            let err = ServeConfig::from_toml(&doc).unwrap_err();
+            assert!(err.to_string().contains(">= 0"), "{key}: {err}");
+        }
     }
 
     #[test]

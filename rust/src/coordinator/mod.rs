@@ -9,13 +9,19 @@
 //! 1. **Golden / functional** (`golden-*`): the AOT-compiled XLA
 //!    artifacts via PJRT — the cross-layer reference. Requires
 //!    artifacts on disk and the `xla` feature.
-//! 2. **Bit-parallel native** (`bitpar-*`): packed-word clause
-//!    evaluation ([`crate::tm::fast_infer`]). The production serving
-//!    tier: no artifact or FFI dependency, bit-exact with the software
-//!    reference, and `Send + Sync`, so *one* engine instance compiled
-//!    from the trained model is shared by every serving thread. Batched
-//!    requests are evaluated 64 samples per word through the bit-sliced
-//!    layout; large flushes shard across scoped threads.
+//! 2. **Native batched** (`bitpar-*`, `indexed-*`, `auto-*`): the
+//!    production serving tier — no artifact or FFI dependency,
+//!    bit-exact with the software reference, and `Send + Sync`, so
+//!    *one* engine instance compiled from the trained model is shared
+//!    by every serving thread. Two engine families: the packed
+//!    bit-parallel engines ([`crate::tm::fast_infer`], 64 samples per
+//!    word through the bit-sliced layout — dense models) and the
+//!    event-driven inverted-index engines ([`crate::tm::index`],
+//!    literal→clause postings + unsatisfied-literal counters — sparse
+//!    models). `auto-*` resolves to one of the two per compiled model
+//!    by included-literal density
+//!    (`ServeConfig.indexed_density_threshold`); large flushes shard
+//!    across scoped threads either way.
 //! 3. **Hardware models** (`*-sync`, `*-async-bd`, `*-proposed`): the
 //!    paper's six event-simulated architectures — the evaluation
 //!    targets, carrying latency/energy annotations.

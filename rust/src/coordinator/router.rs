@@ -13,6 +13,17 @@ pub enum Backend {
     /// dynamically batched (see [`crate::tm::fast_infer`]).
     BitParallelMulticlass,
     BitParallelCotm,
+    /// Event-driven inverted-index native CPU path: literal→clause
+    /// postings + unsatisfied-literal counters, dynamically batched
+    /// (see [`crate::tm::index`]). Wins on sparse (low included-literal
+    /// density) models.
+    IndexedMulticlass,
+    IndexedCotm,
+    /// Density-based auto-selection between the packed and indexed
+    /// native engines, resolved per compiled model at server build
+    /// time. Responses report the *concrete* backend that served them.
+    AutoMulticlass,
+    AutoCotm,
     /// Event-simulated hardware models.
     SyncMulticlass,
     AsyncBdMulticlass,
@@ -23,11 +34,15 @@ pub enum Backend {
 }
 
 impl Backend {
-    pub const ALL: [Backend; 10] = [
+    pub const ALL: [Backend; 14] = [
         Backend::GoldenMulticlass,
         Backend::GoldenCotm,
         Backend::BitParallelMulticlass,
         Backend::BitParallelCotm,
+        Backend::IndexedMulticlass,
+        Backend::IndexedCotm,
+        Backend::AutoMulticlass,
+        Backend::AutoCotm,
         Backend::SyncMulticlass,
         Backend::AsyncBdMulticlass,
         Backend::ProposedMulticlass,
@@ -49,6 +64,24 @@ impl Backend {
         )
     }
 
+    /// Inverted-index backends: the event-driven native tier for sparse
+    /// models.
+    pub fn is_indexed(self) -> bool {
+        matches!(self, Backend::IndexedMulticlass | Backend::IndexedCotm)
+    }
+
+    /// Auto-select backends: resolved to a concrete native engine
+    /// (packed or indexed) per compiled model at server build time.
+    pub fn is_auto(self) -> bool {
+        matches!(self, Backend::AutoMulticlass | Backend::AutoCotm)
+    }
+
+    /// Native batched backends (bit-parallel or indexed): always
+    /// available, served through the shared `Send + Sync` engines.
+    pub fn is_native_batched(self) -> bool {
+        self.is_bit_parallel() || self.is_indexed()
+    }
+
     /// AOT artifact family for golden backends.
     pub fn family(self) -> Option<&'static str> {
         match self {
@@ -64,6 +97,10 @@ impl Backend {
             Backend::GoldenCotm => "golden-cotm",
             Backend::BitParallelMulticlass => "bitpar-multiclass",
             Backend::BitParallelCotm => "bitpar-cotm",
+            Backend::IndexedMulticlass => "indexed-multiclass",
+            Backend::IndexedCotm => "indexed-cotm",
+            Backend::AutoMulticlass => "auto-multiclass",
+            Backend::AutoCotm => "auto-cotm",
             Backend::SyncMulticlass => "multiclass-sync",
             Backend::AsyncBdMulticlass => "multiclass-async-bd",
             Backend::ProposedMulticlass => "multiclass-proposed",
@@ -131,5 +168,29 @@ mod tests {
         );
         assert!(!Backend::GoldenCotm.is_bit_parallel());
         assert!(!Backend::SyncMulticlass.is_bit_parallel());
+    }
+
+    #[test]
+    fn indexed_and_auto_classification() {
+        assert!(Backend::IndexedMulticlass.is_indexed());
+        assert!(Backend::IndexedCotm.is_indexed());
+        assert!(!Backend::IndexedMulticlass.is_bit_parallel());
+        assert!(!Backend::IndexedMulticlass.is_auto());
+        assert!(Backend::AutoMulticlass.is_auto());
+        assert!(Backend::AutoCotm.is_auto());
+        assert!(!Backend::AutoMulticlass.is_indexed());
+        // Auto is a routing alias, not itself a native batched target:
+        // it must be resolved before hitting a batcher.
+        assert!(!Backend::AutoMulticlass.is_native_batched());
+        assert!(Backend::IndexedCotm.is_native_batched());
+        assert!(Backend::BitParallelMulticlass.is_native_batched());
+        assert!(!Backend::GoldenMulticlass.is_native_batched());
+        assert!(!Backend::SyncCotm.is_native_batched());
+        assert_eq!(
+            Backend::parse("indexed-multiclass"),
+            Some(Backend::IndexedMulticlass)
+        );
+        assert_eq!(Backend::parse("auto-cotm"), Some(Backend::AutoCotm));
+        assert_eq!(Backend::IndexedCotm.family(), None);
     }
 }

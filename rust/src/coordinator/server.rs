@@ -2,10 +2,16 @@
 //!
 //! * Golden requests → dynamic batcher thread → PJRT golden service
 //!   (thread-pinned runtime).
-//! * Bit-parallel requests → dynamic batcher thread → shared
-//!   `Send + Sync` packed-word engines ([`crate::tm::fast_infer`]),
-//!   with large flushes sharded across scoped threads. No artifacts
-//!   needed — this tier is always available.
+//! * Native batched requests → dynamic batcher thread → shared
+//!   `Send + Sync` engines, with large flushes sharded across scoped
+//!   threads. Two engine families, no artifacts needed — this tier is
+//!   always available: the packed bit-parallel engines
+//!   ([`crate::tm::fast_infer`], dense models) and the event-driven
+//!   inverted-index engines ([`crate::tm::index`], sparse models).
+//!   The `auto-*` backends resolve to one of the two per compiled
+//!   model by included-literal density
+//!   (`ServeConfig.indexed_density_threshold`); responses report the
+//!   concrete backend that served them.
 //! * Hardware-model requests → worker pool; each worker owns its own six
 //!   architecture instances built from the trained models.
 //! * Bounded in-flight budget; excess submissions are rejected
@@ -31,6 +37,7 @@ use crate::coordinator::stats::{ServerStats, StatsSnapshot};
 use crate::error::{Error, Result};
 use crate::runtime::golden::{GoldenModels, GoldenService};
 use crate::tm::fast_infer::{BatchEngine, BitParallelCotm, BitParallelMulticlass};
+use crate::tm::index::{prefer_indexed, IndexedCotm, IndexedMulticlass};
 use crate::tm::{CoTmModel, MultiClassTmModel};
 
 /// Per-worker architecture set (lives inside its worker thread; the
@@ -53,7 +60,7 @@ impl WorkerState {
             Backend::SyncCotm => &mut self.sync_co,
             Backend::AsyncBdCotm => &mut self.async_co,
             Backend::ProposedCotm => &mut self.proposed_co,
-            _ => unreachable!("golden and bit-parallel backends are batched, not pooled"),
+            _ => unreachable!("golden and native backends are batched, not pooled"),
         }
     }
 }
@@ -63,22 +70,25 @@ struct GoldenItem {
     features: Vec<f32>,
 }
 
-/// A request travelling to a bit-parallel batcher.
-struct BitParItem {
+/// A request travelling to a native-engine batcher (bit-parallel or
+/// inverted-index).
+struct NativeItem {
     features: Vec<bool>,
 }
 
-/// Build the dynamic batcher for one bit-parallel engine: each flush is
-/// evaluated through the shared engine's bit-sliced batch path, sharded
-/// across up to `shard_threads` scoped threads when the batch is large
-/// (the engine is `Sync`, so shards borrow it without copying).
+/// Build the dynamic batcher for one native engine (packed bit-parallel
+/// or event-driven inverted-index — anything implementing
+/// [`BatchEngine`]): each flush is evaluated through the shared
+/// engine's batch path, sharded across up to `shard_threads` scoped
+/// threads when the batch is large (the engine is `Sync`, so shards
+/// borrow it without copying).
 ///
 /// Replies are relay-free: the flush builds the final [`InferResponse`]
 /// per item with latency/completed accounting inline, and the batcher
 /// releases the in-flight slots (panic-safely) — so the receiver
 /// handed back by `submit()` is the caller's own channel, with no
 /// per-request forwarder thread.
-fn bitpar_batcher<E: BatchEngine + Send + 'static>(
+fn native_batcher<E: BatchEngine + Send + 'static>(
     engine: Arc<E>,
     backend: Backend,
     max_batch: usize,
@@ -86,13 +96,13 @@ fn bitpar_batcher<E: BatchEngine + Send + 'static>(
     stats: Arc<ServerStats>,
     in_flight: Arc<AtomicU64>,
     shard_threads: usize,
-) -> Result<DynamicBatcher<BitParItem, InferResponse>> {
+) -> Result<DynamicBatcher<NativeItem, InferResponse>> {
     DynamicBatcher::new(
         max_batch,
         timeout,
         Arc::clone(&stats),
         in_flight,
-        move |batch: &[Pending<BitParItem, InferResponse>]| {
+        move |batch: &[Pending<NativeItem, InferResponse>]| {
             let rows: Vec<&[bool]> = batch.iter().map(|p| p.item.features.as_slice()).collect();
             let out = engine.infer_batch_sharded(&rows, shard_threads);
             // Guard the arity *before* any success counting, like the
@@ -101,7 +111,7 @@ fn bitpar_batcher<E: BatchEngine + Send + 'static>(
             if out.len() != batch.len() {
                 stats.failed.fetch_add(batch.len() as u64, Ordering::Relaxed);
                 let msg = format!(
-                    "bit-parallel engine returned {} results for {} inputs",
+                    "native engine returned {} results for {} inputs",
                     out.len(),
                     batch.len()
                 );
@@ -136,9 +146,16 @@ pub struct CoordinatorServer {
     /// One batcher per golden family (they hit different artifacts).
     batcher_mc: Option<DynamicBatcher<GoldenItem, InferResponse>>,
     batcher_co: Option<DynamicBatcher<GoldenItem, InferResponse>>,
-    /// One batcher per bit-parallel engine (always available).
-    batcher_bp_mc: Option<DynamicBatcher<BitParItem, InferResponse>>,
-    batcher_bp_co: Option<DynamicBatcher<BitParItem, InferResponse>>,
+    /// One batcher per native engine (always available): packed
+    /// bit-parallel and event-driven inverted-index, per model family.
+    batcher_bp_mc: Option<DynamicBatcher<NativeItem, InferResponse>>,
+    batcher_bp_co: Option<DynamicBatcher<NativeItem, InferResponse>>,
+    batcher_ix_mc: Option<DynamicBatcher<NativeItem, InferResponse>>,
+    batcher_ix_co: Option<DynamicBatcher<NativeItem, InferResponse>>,
+    /// Per-model `auto-*` resolutions (a concrete native backend each),
+    /// decided once at build time from included-literal density.
+    auto_mc: Backend,
+    auto_co: Backend,
     stats: Arc<ServerStats>,
     in_flight: Arc<AtomicU64>,
     queue_depth: u64,
@@ -176,12 +193,14 @@ impl CoordinatorServer {
             proposed_co: ProposedCotm::new(co.clone(), wta).expect("valid cotm model"),
         })?;
 
-        // Bit-parallel path: one shared Send+Sync engine per family
-        // (compiled once from the trained models — no per-worker
-        // rebuild), each behind its own dynamic batcher.
+        // Native batched path: one shared Send+Sync engine per (engine
+        // family, model family) pair — compiled once from the trained
+        // models, no per-worker rebuild — each behind its own dynamic
+        // batcher. The indexed engines also carry the density the
+        // auto-select decision reads.
         let timeout = Duration::from_micros(cfg.batch_timeout_us);
         let shard_threads = cfg.workers.max(1);
-        let batcher_bp_mc = bitpar_batcher(
+        let batcher_bp_mc = native_batcher(
             Arc::new(BitParallelMulticlass::from_model(&mc_model)?),
             Backend::BitParallelMulticlass,
             cfg.max_batch,
@@ -190,9 +209,43 @@ impl CoordinatorServer {
             Arc::clone(&in_flight),
             shard_threads,
         )?;
-        let batcher_bp_co = bitpar_batcher(
+        let batcher_bp_co = native_batcher(
             Arc::new(BitParallelCotm::from_model(&cotm_model)?),
             Backend::BitParallelCotm,
+            cfg.max_batch,
+            timeout,
+            Arc::clone(&stats),
+            Arc::clone(&in_flight),
+            shard_threads,
+        )?;
+        let ix_mc = Arc::new(IndexedMulticlass::from_model(&mc_model)?);
+        let ix_co = Arc::new(IndexedCotm::from_model(&cotm_model)?);
+        // Resolve `auto-*` per compiled model: sparse models go through
+        // the inverted index, dense ones through the packed words. The
+        // choice can only affect speed — both engines are held to the
+        // same bit-exactness bar by the conformance suite.
+        let auto_mc = if prefer_indexed(ix_mc.density(), cfg.indexed_density_threshold) {
+            Backend::IndexedMulticlass
+        } else {
+            Backend::BitParallelMulticlass
+        };
+        let auto_co = if prefer_indexed(ix_co.density(), cfg.indexed_density_threshold) {
+            Backend::IndexedCotm
+        } else {
+            Backend::BitParallelCotm
+        };
+        let batcher_ix_mc = native_batcher(
+            ix_mc,
+            Backend::IndexedMulticlass,
+            cfg.max_batch,
+            timeout,
+            Arc::clone(&stats),
+            Arc::clone(&in_flight),
+            shard_threads,
+        )?;
+        let batcher_ix_co = native_batcher(
+            ix_co,
+            Backend::IndexedCotm,
             cfg.max_batch,
             timeout,
             Arc::clone(&stats),
@@ -302,11 +355,21 @@ impl CoordinatorServer {
             batcher_co,
             batcher_bp_mc: Some(batcher_bp_mc),
             batcher_bp_co: Some(batcher_bp_co),
+            batcher_ix_mc: Some(batcher_ix_mc),
+            batcher_ix_co: Some(batcher_ix_co),
+            auto_mc,
+            auto_co,
             stats,
             in_flight,
             queue_depth: cfg.queue_depth as u64,
             features,
         })
+    }
+
+    /// The concrete native backends the `auto-*` aliases resolved to
+    /// for this server's compiled models (multiclass, cotm).
+    pub fn auto_backends(&self) -> (Backend, Backend) {
+        (self.auto_mc, self.auto_co)
     }
 
     /// Submit a request; returns a receiver for the response.
@@ -330,10 +393,19 @@ impl CoordinatorServer {
         self.stats.submitted.fetch_add(1, Ordering::Relaxed);
         let t0 = Instant::now();
 
-        if req.backend.is_golden() {
+        // Resolve the `auto-*` aliases to the concrete native backend
+        // chosen for this model at build time; the reply reports the
+        // engine that actually served the request.
+        let backend = match req.backend {
+            Backend::AutoMulticlass => self.auto_mc,
+            Backend::AutoCotm => self.auto_co,
+            b => b,
+        };
+
+        if backend.is_golden() {
             // Relay-free: the receiver comes straight from the batcher;
             // its flush built the final response and did the accounting.
-            let batcher = match req.backend {
+            let batcher = match backend {
                 Backend::GoldenMulticlass => self.batcher_mc.as_ref(),
                 _ => self.batcher_co.as_ref(),
             }
@@ -344,22 +416,23 @@ impl CoordinatorServer {
                 features: req.features.iter().map(|&b| b as u8 as f32).collect(),
             };
             batcher.submit(item).map_err(|e| self.abort_submit(e))
-        } else if req.backend.is_bit_parallel() {
-            let batcher = match req.backend {
+        } else if backend.is_native_batched() {
+            let batcher = match backend {
                 Backend::BitParallelMulticlass => self.batcher_bp_mc.as_ref(),
-                _ => self.batcher_bp_co.as_ref(),
+                Backend::BitParallelCotm => self.batcher_bp_co.as_ref(),
+                Backend::IndexedMulticlass => self.batcher_ix_mc.as_ref(),
+                _ => self.batcher_ix_co.as_ref(),
             }
             .ok_or_else(|| {
-                self.abort_submit(Error::coordinator("bit-parallel batcher shut down"))
+                self.abort_submit(Error::coordinator("native batcher shut down"))
             })?;
             batcher
-                .submit(BitParItem { features: req.features })
+                .submit(NativeItem { features: req.features })
                 .map_err(|e| self.abort_submit(e))
         } else {
             let (tx, rx) = mpsc::channel();
             let stats = Arc::clone(&self.stats);
             let in_flight = Arc::clone(&self.in_flight);
-            let backend = req.backend;
             let features = req.features;
             self.pool
                 .as_ref()
@@ -436,6 +509,12 @@ impl CoordinatorServer {
             b.shutdown();
         }
         if let Some(b) = self.batcher_bp_co.take() {
+            b.shutdown();
+        }
+        if let Some(b) = self.batcher_ix_mc.take() {
+            b.shutdown();
+        }
+        if let Some(b) = self.batcher_ix_co.take() {
             b.shutdown();
         }
     }
@@ -560,6 +639,102 @@ mod tests {
         assert!(snap.batches_flushed < 100, "batches={}", snap.batches_flushed);
         assert_eq!(snap.completed, 100);
         srv.shutdown();
+    }
+
+    #[test]
+    fn indexed_backends_serve_bit_exact_without_artifacts() {
+        // The inverted-index tier is held to the same bar as the packed
+        // tier: no artifacts, bit-exact class sums vs the scalar
+        // reference, through the real batcher plumbing.
+        let (srv, d) = server(false, None);
+        let dset = data::iris().unwrap();
+        let (tr, _) = dset.split(0.8, 42);
+        let m = train_multiclass(TmParams::iris_paper(), &tr, 20, 2).unwrap();
+        let cm = train_cotm(TmParams::iris_paper(), &tr, 20, 3).unwrap();
+        for i in [0usize, 17, 80, 149] {
+            let r = srv
+                .infer(InferRequest {
+                    features: d.features[i].clone(),
+                    backend: Backend::IndexedMulticlass,
+                })
+                .unwrap();
+            assert_eq!(r.backend, Backend::IndexedMulticlass);
+            assert!(r.hw_latency.is_none(), "native path has no hw model");
+            assert_eq!(
+                r.class_sums,
+                crate::tm::infer::multiclass_class_sums(&m, &d.features[i]),
+                "sample {i}"
+            );
+            let r = srv
+                .infer(InferRequest {
+                    features: d.features[i].clone(),
+                    backend: Backend::IndexedCotm,
+                })
+                .unwrap();
+            assert_eq!(r.backend, Backend::IndexedCotm);
+            assert_eq!(
+                r.class_sums,
+                crate::tm::infer::cotm_class_sums(&cm, &d.features[i]),
+                "sample {i}"
+            );
+        }
+        srv.shutdown();
+    }
+
+    #[test]
+    fn auto_backends_resolve_by_density_and_stay_bit_exact() {
+        // Threshold 1.0 forces the indexed engines; threshold 0.0 (on
+        // trained Iris models, whose densities are > 0) forces the
+        // packed engines. The choice must never change the sums.
+        let dset = data::iris().unwrap();
+        let (tr, _) = dset.split(0.8, 42);
+        let m = train_multiclass(TmParams::iris_paper(), &tr, 20, 2).unwrap();
+        let cm = train_cotm(TmParams::iris_paper(), &tr, 20, 3).unwrap();
+        // Precondition for the threshold-0.0 expectation: the trained
+        // models actually include literals (density strictly > 0).
+        assert!(crate::tm::IndexedMulticlass::from_model(&m).unwrap().density() > 0.0);
+        assert!(crate::tm::IndexedCotm::from_model(&cm).unwrap().density() > 0.0);
+        let mut sums_by_choice = Vec::new();
+        for (threshold, want_mc, want_co) in [
+            (1.0, Backend::IndexedMulticlass, Backend::IndexedCotm),
+            (0.0, Backend::BitParallelMulticlass, Backend::BitParallelCotm),
+        ] {
+            let cfg = ServeConfig {
+                workers: 2,
+                indexed_density_threshold: threshold,
+                ..ServeConfig::default()
+            };
+            let (srv, d) = server(false, Some(cfg));
+            assert_eq!(srv.auto_backends(), (want_mc, want_co), "threshold {threshold}");
+            let mut sums = Vec::new();
+            for i in [0usize, 40, 99] {
+                let r = srv
+                    .infer(InferRequest {
+                        features: d.features[i].clone(),
+                        backend: Backend::AutoMulticlass,
+                    })
+                    .unwrap();
+                // The reply names the engine that actually served it.
+                assert_eq!(r.backend, want_mc);
+                assert_eq!(
+                    r.class_sums,
+                    crate::tm::infer::multiclass_class_sums(&m, &d.features[i])
+                );
+                sums.push(r.class_sums);
+                let r = srv
+                    .infer(InferRequest {
+                        features: d.features[i].clone(),
+                        backend: Backend::AutoCotm,
+                    })
+                    .unwrap();
+                assert_eq!(r.backend, want_co);
+                sums.push(r.class_sums);
+            }
+            sums_by_choice.push(sums);
+            srv.shutdown();
+        }
+        // Auto-select changed the engine, not the outputs.
+        assert_eq!(sums_by_choice[0], sums_by_choice[1]);
     }
 
     #[test]

@@ -1,9 +1,20 @@
 //! Serving statistics: lock-light counters + latency accumulators.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 use crate::util::stats::Summary;
+
+/// Lock a sample ring, recovering the guard from a poisoned mutex. The
+/// rings hold plain `f64` samples whose every intermediate state is
+/// valid, so poisoning carries no integrity risk here — but an
+/// unwrapped poisoned lock would turn one panic anywhere in a recording
+/// thread into a panic in *every* later `record_*`/`snapshot`/
+/// `*_samples` call, cascading exactly the failure the batcher's
+/// `catch_unwind` flush guard exists to contain.
+fn ring_lock(ring: &Mutex<SampleRing>) -> MutexGuard<'_, SampleRing> {
+    ring.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
 
 /// Capacity of the bounded sample rings.
 pub const RING: usize = 100_000;
@@ -57,26 +68,26 @@ impl ServerStats {
     }
 
     pub fn record_latency_us(&self, us: f64) {
-        self.latencies_us.lock().unwrap().push(us);
+        ring_lock(&self.latencies_us).push(us);
     }
 
     pub fn record_batch(&self, size: usize) {
         self.batches_flushed.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
-        self.batch_sizes.lock().unwrap().push(size as f64);
+        ring_lock(&self.batch_sizes).push(size as f64);
     }
 
     /// Clone of the retained latency samples — used by the sharded
     /// front door to build an *exact* cross-shard summary instead of
     /// approximating merged percentiles.
     pub fn latency_samples(&self) -> Vec<f64> {
-        self.latencies_us.lock().unwrap().buf.clone()
+        ring_lock(&self.latencies_us).buf.clone()
     }
 
     /// Clone of the retained batch-size samples (see
     /// [`ServerStats::latency_samples`]).
     pub fn batch_size_samples(&self) -> Vec<f64> {
-        self.batch_sizes.lock().unwrap().buf.clone()
+        ring_lock(&self.batch_sizes).buf.clone()
     }
 
     pub fn snapshot(&self) -> StatsSnapshot {
@@ -88,10 +99,10 @@ impl ServerStats {
             batches_flushed: self.batches_flushed.load(Ordering::Relaxed),
             batched_requests: self.batched_requests.load(Ordering::Relaxed),
             mean_batch_size: {
-                let b = self.batch_sizes.lock().unwrap();
+                let b = ring_lock(&self.batch_sizes);
                 Summary::of(&b.buf).map(|s| s.mean).unwrap_or(0.0)
             },
-            latency_us: Summary::of(&self.latencies_us.lock().unwrap().buf),
+            latency_us: Summary::of(&ring_lock(&self.latencies_us).buf),
         }
     }
 }
@@ -191,6 +202,42 @@ mod tests {
         assert_eq!(l.max, 1010.0);
         // (99_900 * 10 + 100 * 1010) / 100_000 = 11.0
         assert!((l.mean - 11.0).abs() < 1e-9, "mean={}", l.mean);
+    }
+
+    #[test]
+    fn poisoned_rings_keep_recording() {
+        // Regression: every ring access was `.lock().unwrap()`, so one
+        // panic while holding a ring lock turned every later
+        // record/snapshot call into a panic — cascading the exact
+        // failure the batcher's catch_unwind flush guard contains.
+        use std::sync::Arc;
+        let s = Arc::new(ServerStats::new());
+        s.record_latency_us(10.0);
+        s.record_batch(4);
+        // Deliberately poison both ring mutexes: panic while holding
+        // each lock on another thread.
+        let s2 = Arc::clone(&s);
+        let _ = std::thread::spawn(move || {
+            let _guard = s2.latencies_us.lock().unwrap();
+            panic!("poison latencies ring");
+        })
+        .join();
+        let s2 = Arc::clone(&s);
+        let _ = std::thread::spawn(move || {
+            let _guard = s2.batch_sizes.lock().unwrap();
+            panic!("poison batch ring");
+        })
+        .join();
+        assert!(s.latencies_us.is_poisoned());
+        assert!(s.batch_sizes.is_poisoned());
+        // Recording, sampling and snapshotting all still work.
+        s.record_latency_us(20.0);
+        s.record_batch(8);
+        assert_eq!(s.latency_samples(), vec![10.0, 20.0]);
+        assert_eq!(s.batch_size_samples(), vec![4.0, 8.0]);
+        let snap = s.snapshot();
+        assert_eq!(snap.latency_us.unwrap().count, 2);
+        assert_eq!(snap.mean_batch_size, 6.0);
     }
 
     #[test]

@@ -323,21 +323,27 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
             failures.push(format!("{}: argmax agreement {pct:.1}% < 95%", a.name()));
         }
     }
-    // The bit-parallel tier is held to a stricter bar than the hardware
-    // models: bit-exact class sums, not just argmax agreement.
+    // The native batched tiers are held to a stricter bar than the
+    // hardware models: bit-exact class sums, not just argmax agreement.
     let bp_mc = tm::BitParallelMulticlass::from_model(&m)?;
     let bp_co = tm::BitParallelCotm::from_model(&cm)?;
-    let mut exact_mc = 0usize;
-    let mut exact_co = 0usize;
+    let ix_mc = tm::IndexedMulticlass::from_model(&m)?;
+    let ix_co = tm::IndexedCotm::from_model(&cm)?;
+    let mut exact = [0usize; 4];
     for x in &dataset.features {
-        if tm::BatchEngine::class_sums(&bp_mc, x) == tm::infer::multiclass_class_sums(&m, x) {
-            exact_mc += 1;
-        }
-        if tm::BatchEngine::class_sums(&bp_co, x) == tm::infer::cotm_class_sums(&cm, x) {
-            exact_co += 1;
-        }
+        let want_mc = tm::infer::multiclass_class_sums(&m, x);
+        let want_co = tm::infer::cotm_class_sums(&cm, x);
+        exact[0] += (tm::BatchEngine::class_sums(&bp_mc, x) == want_mc) as usize;
+        exact[1] += (tm::BatchEngine::class_sums(&bp_co, x) == want_co) as usize;
+        exact[2] += (tm::BatchEngine::class_sums(&ix_mc, x) == want_mc) as usize;
+        exact[3] += (tm::BatchEngine::class_sums(&ix_co, x) == want_co) as usize;
     }
-    for (name, exact) in [("bitpar-multiclass", exact_mc), ("bitpar-cotm", exact_co)] {
+    for (name, exact) in [
+        ("bitpar-multiclass", exact[0]),
+        ("bitpar-cotm", exact[1]),
+        ("indexed-multiclass", exact[2]),
+        ("indexed-cotm", exact[3]),
+    ] {
         let pct = 100.0 * exact as f64 / dataset.len() as f64;
         println!("{name:24} bit-exact sums    {pct:.1}%");
         if exact != dataset.len() {
@@ -346,6 +352,20 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
                 dataset.len()
             ));
         }
+    }
+    // Auto-select is a routing decision, not a numeric one: report
+    // where the default threshold lands these models.
+    let threshold = ServeConfig::default().indexed_density_threshold;
+    for (name, density) in [
+        ("auto-multiclass", ix_mc.density()),
+        ("auto-cotm", ix_co.density()),
+    ] {
+        let choice = if tm::index::prefer_indexed(density, threshold) {
+            "indexed"
+        } else {
+            "bitpar"
+        };
+        println!("{name:24} density {density:.3} -> {choice} (threshold {threshold})");
     }
     if !failures.is_empty() {
         return Err(Error::model(format!("selfcheck failed: {}", failures.join("; "))));

@@ -16,6 +16,10 @@ pub struct Booleanizer {
 
 impl Booleanizer {
     /// Fit thresholds at evenly spaced quantiles of each raw feature.
+    /// Non-finite raw values (NaN, ±∞) are rejected: quantiles of a
+    /// column containing them are meaningless, and the previous
+    /// `partial_cmp(..).unwrap()` sort panicked on NaN instead of
+    /// returning an error.
     pub fn fit(raw: &[Vec<f32>], bits: usize) -> Result<Booleanizer> {
         if raw.is_empty() {
             return Err(Error::model("cannot fit booleanizer on empty data"));
@@ -28,7 +32,12 @@ impl Booleanizer {
         let mut thresholds = Vec::with_capacity(dims);
         for d in 0..dims {
             let mut col: Vec<f32> = raw.iter().map(|r| r[d]).collect();
-            col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            if let Some(bad) = col.iter().find(|x| !x.is_finite()) {
+                return Err(Error::model(format!(
+                    "non-finite raw feature value {bad} in column {d}"
+                )));
+            }
+            col.sort_by(|a, b| a.total_cmp(b));
             let mut ts = Vec::with_capacity(bits);
             for b in 0..bits {
                 // Quantiles at (b+1)/(bits+1): e.g. bits=4 -> 20/40/60/80%.
@@ -46,7 +55,10 @@ impl Booleanizer {
         self.thresholds.iter().map(|t| t.len()).sum()
     }
 
-    /// Encode one raw sample.
+    /// Encode one raw sample. NaN is rejected: `NaN >= t` is false for
+    /// every threshold, which would silently encode as an all-zero
+    /// thermometer code indistinguishable from a genuinely small value.
+    /// (±∞ stay well-defined — all-ones / all-zeros — and are allowed.)
     pub fn encode(&self, raw: &[f32]) -> Result<Vec<bool>> {
         if raw.len() != self.thresholds.len() {
             return Err(Error::model(format!(
@@ -56,7 +68,10 @@ impl Booleanizer {
             )));
         }
         let mut out = Vec::with_capacity(self.output_features());
-        for (x, ts) in raw.iter().zip(&self.thresholds) {
+        for (d, (x, ts)) in raw.iter().zip(&self.thresholds).enumerate() {
+            if x.is_nan() {
+                return Err(Error::model(format!("NaN raw feature in column {d}")));
+            }
             for t in ts {
                 out.push(x >= t);
             }
@@ -122,5 +137,34 @@ mod tests {
     #[test]
     fn rejects_empty_fit() {
         assert!(Booleanizer::fit(&[], 4).is_err());
+    }
+
+    #[test]
+    fn fit_rejects_non_finite_instead_of_panicking() {
+        // Regression: the quantile sort used
+        // `partial_cmp(..).unwrap()`, which panicked on NaN input.
+        let nan_raw = vec![vec![1.0, 2.0], vec![1.5, f32::NAN], vec![2.0, 3.0]];
+        let err = Booleanizer::fit(&nan_raw, 2).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+        assert!(err.to_string().contains("column 1"), "{err}");
+        for bad in [f32::INFINITY, f32::NEG_INFINITY] {
+            let raw = vec![vec![bad], vec![1.0]];
+            assert!(Booleanizer::fit(&raw, 2).is_err(), "{bad}");
+        }
+        // Finite data is unaffected.
+        assert!(Booleanizer::fit(&[vec![1.0], vec![2.0]], 2).is_ok());
+    }
+
+    #[test]
+    fn encode_rejects_nan_but_allows_infinities() {
+        let raw = vec![vec![0.0], vec![1.0], vec![2.0], vec![3.0]];
+        let b = Booleanizer::fit(&raw, 2).unwrap();
+        let err = b.encode(&[f32::NAN]).unwrap_err();
+        assert!(err.to_string().contains("NaN"), "{err}");
+        // ±∞ have well-defined thermometer codes.
+        assert_eq!(b.encode(&[f32::INFINITY]).unwrap(), vec![true, true]);
+        assert_eq!(b.encode(&[f32::NEG_INFINITY]).unwrap(), vec![false, false]);
+        // And a NaN anywhere in a batch fails the whole batch.
+        assert!(b.encode_all(&[vec![1.0], vec![f32::NAN]]).is_err());
     }
 }

@@ -28,8 +28,18 @@ impl Dataset {
         self.features.first().map_or(0, |f| f.len())
     }
 
-    /// Deterministic stratified train/test split.
+    /// Deterministic stratified train/test split. `train_fraction` is
+    /// clamped into `[0, 1]` (NaN behaves as 0): 0.0 puts every sample
+    /// in the test set, 1.0 puts every sample in the train set.
+    /// (Fractions > 1.0 used to slice out of bounds and panic; negative
+    /// fractions silently saturated to 0 — both are now explicit
+    /// clamps.)
     pub fn split(&self, train_fraction: f64, seed: u64) -> (Dataset, Dataset) {
+        let fraction = if train_fraction.is_nan() {
+            0.0
+        } else {
+            train_fraction.clamp(0.0, 1.0)
+        };
         let mut rng = SplitMix64::new(seed);
         let mut train_idx = Vec::new();
         let mut test_idx = Vec::new();
@@ -38,7 +48,11 @@ impl Dataset {
                 .filter(|&i| self.labels[i] == class)
                 .collect();
             rng.shuffle(&mut idx);
-            let n_train = ((idx.len() as f64) * train_fraction).round() as usize;
+            // Belt and braces: rounding can't exceed len once the
+            // fraction is clamped, but the slice bound must never
+            // depend on float subtleties.
+            let n_train =
+                (((idx.len() as f64) * fraction).round() as usize).min(idx.len());
             train_idx.extend_from_slice(&idx[..n_train]);
             test_idx.extend_from_slice(&idx[n_train..]);
         }
@@ -174,6 +188,31 @@ mod tests {
             assert_eq!(tr.labels.iter().filter(|&&l| l == c).count(), 40);
             assert_eq!(te.labels.iter().filter(|&&l| l == c).count(), 10);
         }
+    }
+
+    #[test]
+    fn split_clamps_out_of_range_fractions() {
+        // Regression: 1.5 used to slice out of bounds (`&idx[..n_train]`
+        // with n_train > len) and panic; -0.5 silently saturated.
+        let d = iris().unwrap();
+        let (tr, te) = d.split(1.5, 42);
+        assert_eq!((tr.len(), te.len()), (150, 0));
+        let (tr, te) = d.split(-0.5, 42);
+        assert_eq!((tr.len(), te.len()), (0, 150));
+        let (tr, te) = d.split(f64::NAN, 42);
+        assert_eq!((tr.len(), te.len()), (0, 150));
+    }
+
+    #[test]
+    fn split_boundary_fractions_are_exact() {
+        let d = iris().unwrap();
+        let (tr, te) = d.split(0.0, 7);
+        assert_eq!((tr.len(), te.len()), (0, 150));
+        let (tr, te) = d.split(1.0, 7);
+        assert_eq!((tr.len(), te.len()), (150, 0));
+        // Degenerate splits stay stratified datasets, not garbage.
+        assert_eq!(te.len(), 0);
+        assert_eq!(tr.classes, 3);
     }
 
     #[test]

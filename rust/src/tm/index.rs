@@ -1,0 +1,572 @@
+//! Event-driven inverted-index inference engines — the sparse-model
+//! serving tier.
+//!
+//! The paper's core idea is event-driven computation: work happens only
+//! where an event occurs. [`super::bitpack`] applies that at word
+//! granularity (zero include words are skipped); this module applies it
+//! at **clause** granularity, the software analogue of the paper's
+//! set-literal events: the literal→clause inverted index of *"Increasing
+//! the Inference and Learning Speed of Tsetlin Machines with Clause
+//! Indexing"* (arXiv 2004.03188).
+//!
+//! Per clause we keep a counter of *unsatisfied* included literals,
+//! initialised to the clause's included-literal count. Evaluating a
+//! sample walks only the sample's **set** literals (exactly F of the 2F
+//! interleaved literals are set — one per `x_i`/`¬x_i` pair) and
+//! decrements the counter of every clause whose include mask names that
+//! literal. A clause **fires exactly when its counter reaches zero** —
+//! the firing is itself the event; clauses no set literal touches are
+//! never visited, let alone evaluated. After accumulating the fired
+//! clauses into class sums, the same walk increments the counters back,
+//! so the scratch state is restored in O(touched) instead of O(C).
+//!
+//! Cost model: the dense packed sweep costs ~`C · ceil(2F/64)` word ops
+//! per sample regardless of sparsity; the indexed sweep costs one
+//! counter op per *(set literal, including clause)* pair — about
+//! `density · C · F` on uniform inputs. The crossover sits near
+//! `density ≈ 1/32` ([`PACKED_VS_INDEXED_DENSITY`] holds the serving
+//! default; `ServeConfig.indexed_density_threshold` overrides it), which
+//! is exactly the compressed/sparse clause regime ETHEREAL
+//! (arXiv 2502.05640) shows real TM deployments live in.
+//!
+//! Semantics are pinned to the scalar reference: an empty (all-exclude)
+//! clause appears in no literal's clause list and its counter starts at
+//! zero **but is never decremented**, so it never fires — matching the
+//! "empty clause outputs 0 at inference" convention. A clause including
+//! both `x_i` and `¬x_i` can never see its counter reach zero (only one
+//! of the pair is ever set), which also matches the reference.
+//!
+//! Bit-exactness contract: class sums and argmax must equal
+//! [`super::infer::multiclass_class_sums`] /
+//! [`super::infer::cotm_class_sums`] and
+//! [`super::infer::predict_argmax`] on every input — enforced by
+//! `tests/bitparallel_equivalence.rs` alongside the packed engines, and
+//! mirrored algorithm-for-algorithm by `python/invindex.py` (shared
+//! golden vectors) so the counter sweep is validated even on
+//! toolchain-less CI images.
+
+use super::fast_infer::{BatchEngine, BatchResult};
+use super::infer::predict_argmax;
+use super::model::{ClauseMask, CoTmModel, MultiClassTmModel, TmParams};
+use crate::error::Result;
+
+/// Default included-literal density below which the indexed engines
+/// beat the packed engines (the `auto-*` backend crossover; see the
+/// module cost model and `benches/indexed_vs_bitpar.rs`).
+pub const PACKED_VS_INDEXED_DENSITY: f64 = 0.05;
+
+/// Should the `auto-*` backends serve this model through the indexed
+/// engine? Pure decision function so conformance tests can assert the
+/// choice never changes outputs — only which engine computes them.
+pub fn prefer_indexed(density: f64, threshold: f64) -> bool {
+    density <= threshold
+}
+
+/// Fraction of included literals across a set of clause masks
+/// (`included / (clauses · 2F)`); 0.0 for an empty model.
+pub fn included_density<'a>(masks: impl IntoIterator<Item = &'a ClauseMask>) -> f64 {
+    let (mut included, mut total) = (0usize, 0usize);
+    for m in masks {
+        included += m.included_count();
+        total += m.include.len();
+    }
+    if total == 0 {
+        0.0
+    } else {
+        included as f64 / total as f64
+    }
+}
+
+/// Literal→clause inverted index plus per-clause unsatisfied-literal
+/// reset counts, shared by both engine variants (clause ids are the
+/// caller's flattened ordering).
+#[derive(Debug, Clone)]
+pub struct InvertedIndex {
+    /// `clause_lists[lit]` = ids of clauses whose include mask names
+    /// literal `lit` (ascending, by construction). Length 2F.
+    clause_lists: Vec<Vec<u32>>,
+    /// Per-clause included-literal count — the counter reset value.
+    required: Vec<u32>,
+    /// Boolean feature width F.
+    features: usize,
+}
+
+impl InvertedIndex {
+    /// Build from clause masks over the 2F interleaved literals, in the
+    /// order their ids should be assigned. Masks must all be width 2F
+    /// (callers validate the model first).
+    pub fn build<'a>(
+        features: usize,
+        masks: impl IntoIterator<Item = &'a ClauseMask>,
+    ) -> InvertedIndex {
+        let mut clause_lists = vec![Vec::new(); 2 * features];
+        let mut required = Vec::new();
+        for (c, mask) in masks.into_iter().enumerate() {
+            debug_assert_eq!(mask.include.len(), 2 * features);
+            required.push(mask.included_count() as u32);
+            for (lit, &inc) in mask.include.iter().enumerate() {
+                if inc {
+                    clause_lists[lit].push(c as u32);
+                }
+            }
+        }
+        InvertedIndex { clause_lists, required, features }
+    }
+
+    pub fn num_clauses(&self) -> usize {
+        self.required.len()
+    }
+
+    pub fn features(&self) -> usize {
+        self.features
+    }
+
+    /// Total postings (= included literals across all clauses).
+    pub fn postings(&self) -> usize {
+        self.required.iter().map(|&r| r as usize).sum()
+    }
+
+    /// Included-literal density of the indexed model.
+    pub fn density(&self) -> f64 {
+        let total = self.num_clauses() * 2 * self.features;
+        if total == 0 {
+            0.0
+        } else {
+            self.postings() as f64 / total as f64
+        }
+    }
+
+    /// A fresh counter buffer in the reset state (every clause at its
+    /// included-literal count) — the scratch [`InvertedIndex::sweep`]
+    /// needs. Allocate once per batch and reuse.
+    pub fn fresh_counts(&self) -> Vec<u32> {
+        self.required.clone()
+    }
+
+    /// The event-driven sweep for one sample: decrement the counter of
+    /// every clause each **set** literal appears in, recording a clause
+    /// id in `fired` at the instant its counter reaches zero, then walk
+    /// the same postings again to restore `counts` to the reset state.
+    ///
+    /// `counts` must be in the reset state on entry (see
+    /// [`InvertedIndex::fresh_counts`]) and is guaranteed to be back in
+    /// it on return, so one buffer serves a whole batch. `fired` is
+    /// cleared first; ids land in it in event (not id) order.
+    pub fn sweep(&self, sample: &[bool], counts: &mut [u32], fired: &mut Vec<u32>) {
+        debug_assert_eq!(sample.len(), self.features);
+        debug_assert_eq!(counts.len(), self.required.len());
+        fired.clear();
+        for (i, &f) in sample.iter().enumerate() {
+            // Interleaved literals: exactly one of (x_i, ¬x_i) is set.
+            let lit = 2 * i + usize::from(!f);
+            for &c in &self.clause_lists[lit] {
+                let cnt = &mut counts[c as usize];
+                *cnt -= 1;
+                if *cnt == 0 {
+                    fired.push(c);
+                }
+            }
+        }
+        // Event-driven undo: restore only the touched counters.
+        for (i, &f) in sample.iter().enumerate() {
+            let lit = 2 * i + usize::from(!f);
+            for &c in &self.clause_lists[lit] {
+                counts[c as usize] += 1;
+            }
+        }
+    }
+}
+
+/// Indexed multi-class TM engine: one inverted index over the K·C
+/// flattened clauses (`id = class · C + j`), alternating +/− polarity
+/// per class (Eq. 1).
+#[derive(Debug, Clone)]
+pub struct IndexedMulticlass {
+    pub params: TmParams,
+    index: InvertedIndex,
+}
+
+impl IndexedMulticlass {
+    /// Compile a validated model into the inverted index.
+    pub fn from_model(model: &MultiClassTmModel) -> Result<IndexedMulticlass> {
+        model.validate()?;
+        let index = InvertedIndex::build(
+            model.params.features,
+            model.clauses.iter().flatten(),
+        );
+        Ok(IndexedMulticlass { params: model.params.clone(), index })
+    }
+
+    /// Included-literal density (the `auto-*` selection input).
+    pub fn density(&self) -> f64 {
+        self.index.density()
+    }
+
+    fn sums_from_fired(&self, fired: &[u32]) -> Vec<i32> {
+        let c = self.params.clauses;
+        let mut sums = vec![0i32; self.params.classes];
+        for &id in fired {
+            let (class, j) = (id as usize / c, id as usize % c);
+            sums[class] += if j % 2 == 0 { 1 } else { -1 };
+        }
+        sums
+    }
+}
+
+impl BatchEngine for IndexedMulticlass {
+    fn features(&self) -> usize {
+        self.params.features
+    }
+
+    fn classes(&self) -> usize {
+        self.params.classes
+    }
+
+    fn class_sums(&self, features: &[bool]) -> Vec<i32> {
+        assert_eq!(
+            features.len(),
+            self.params.features,
+            "feature width mismatch"
+        );
+        let mut counts = self.index.fresh_counts();
+        let mut fired = Vec::new();
+        self.index.sweep(features, &mut counts, &mut fired);
+        self.sums_from_fired(&fired)
+    }
+
+    fn infer_batch<R: AsRef<[bool]> + Sync>(&self, rows: &[R]) -> Vec<BatchResult> {
+        // One scratch counter buffer for the whole batch: sweep restores
+        // it after every sample.
+        let mut counts = self.index.fresh_counts();
+        let mut fired = Vec::new();
+        rows.iter()
+            .map(|r| {
+                let row = r.as_ref();
+                assert_eq!(row.len(), self.params.features, "batch row width mismatch");
+                self.index.sweep(row, &mut counts, &mut fired);
+                let sums = self.sums_from_fired(&fired);
+                let pred = predict_argmax(&sums);
+                (sums, pred)
+            })
+            .collect()
+    }
+}
+
+/// Indexed CoTM engine: one inverted index over the shared clause pool
+/// plus the signed weight matrix, stored clause-major so a firing
+/// clause adds its whole weight column (Eq. 2).
+#[derive(Debug, Clone)]
+pub struct IndexedCotm {
+    pub params: TmParams,
+    index: InvertedIndex,
+    /// `[clause][class]` weight columns (transposed from the model's
+    /// `[class][clause]` for contiguous access per firing clause).
+    weight_cols: Vec<Vec<i32>>,
+}
+
+impl IndexedCotm {
+    /// Compile a validated model into the inverted index.
+    pub fn from_model(model: &CoTmModel) -> Result<IndexedCotm> {
+        model.validate()?;
+        let index = InvertedIndex::build(model.params.features, model.clauses.iter());
+        let weight_cols = (0..model.params.clauses)
+            .map(|j| model.weights.iter().map(|row| row[j]).collect())
+            .collect();
+        Ok(IndexedCotm { params: model.params.clone(), index, weight_cols })
+    }
+
+    /// Included-literal density (the `auto-*` selection input).
+    pub fn density(&self) -> f64 {
+        self.index.density()
+    }
+
+    fn sums_from_fired(&self, fired: &[u32]) -> Vec<i32> {
+        let mut sums = vec![0i32; self.params.classes];
+        for &id in fired {
+            for (s, &w) in sums.iter_mut().zip(&self.weight_cols[id as usize]) {
+                *s += w;
+            }
+        }
+        sums
+    }
+}
+
+impl BatchEngine for IndexedCotm {
+    fn features(&self) -> usize {
+        self.params.features
+    }
+
+    fn classes(&self) -> usize {
+        self.params.classes
+    }
+
+    fn class_sums(&self, features: &[bool]) -> Vec<i32> {
+        assert_eq!(
+            features.len(),
+            self.params.features,
+            "feature width mismatch"
+        );
+        let mut counts = self.index.fresh_counts();
+        let mut fired = Vec::new();
+        self.index.sweep(features, &mut counts, &mut fired);
+        self.sums_from_fired(&fired)
+    }
+
+    fn infer_batch<R: AsRef<[bool]> + Sync>(&self, rows: &[R]) -> Vec<BatchResult> {
+        let mut counts = self.index.fresh_counts();
+        let mut fired = Vec::new();
+        rows.iter()
+            .map(|r| {
+                let row = r.as_ref();
+                assert_eq!(row.len(), self.params.features, "batch row width mismatch");
+                self.index.sweep(row, &mut counts, &mut fired);
+                let sums = self.sums_from_fired(&fired);
+                let pred = predict_argmax(&sums);
+                (sums, pred)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::infer::{cotm_class_sums, multiclass_class_sums};
+
+    fn tiny_params() -> TmParams {
+        TmParams {
+            features: 2,
+            clauses: 2,
+            classes: 2,
+            ..TmParams::iris_paper()
+        }
+    }
+
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn engines_are_send_and_sync() {
+        // Same serving contract as the packed engines: one shared
+        // instance across every coordinator thread.
+        assert_send_sync::<IndexedMulticlass>();
+        assert_send_sync::<IndexedCotm>();
+    }
+
+    /// Same hand-worked example as infer.rs / fast_infer.rs /
+    /// python/tests/test_model.py — every tier agrees on it.
+    #[test]
+    fn hand_worked_multiclass_matches_reference() {
+        let mut m = MultiClassTmModel::zeroed(tiny_params());
+        m.clauses[0][0].include[0] = true; // class0 clause0 (+): x0
+        m.clauses[0][1].include[3] = true; // class0 clause1 (−): ¬x1
+        m.clauses[1][0].include[1] = true; // class1 clause0 (+): ¬x0
+        m.clauses[1][1].include[2] = true; // class1 clause1 (−): x1
+        let e = IndexedMulticlass::from_model(&m).unwrap();
+        for x in [[true, false], [true, true], [false, false], [false, true]] {
+            assert_eq!(e.class_sums(&x), multiclass_class_sums(&m, &x), "{x:?}");
+        }
+        assert_eq!(e.class_sums(&[true, true]), vec![1, -1]);
+        assert_eq!(e.predict(&[true, true]), 0);
+    }
+
+    #[test]
+    fn hand_worked_cotm_matches_reference() {
+        let mut m = CoTmModel::zeroed(tiny_params());
+        m.clauses[0].include[0] = true; // clause0: x0
+        m.clauses[1].include[2] = true; // clause1: x1
+        m.weights = vec![vec![3, -2], vec![-1, 4]];
+        let e = IndexedCotm::from_model(&m).unwrap();
+        for x in [[true, true], [true, false], [false, false]] {
+            assert_eq!(e.class_sums(&x), cotm_class_sums(&m, &x), "{x:?}");
+        }
+        assert_eq!(e.class_sums(&[true, true]), vec![1, 3]);
+    }
+
+    // ------------------------------------------------------------------
+    // Cross-language golden vectors, shared with python/invindex.py
+    // (python/tests/test_invindex.py asserts the identical sums): the
+    // models and samples are defined by closed-form formulas so both
+    // languages construct them independently, like the hash-ring mirror.
+    // ------------------------------------------------------------------
+
+    /// F=9, C=4/class, K=3; include(k, j, l) = (3l + 5j + 7k) % 11 == 0.
+    fn golden_multiclass() -> MultiClassTmModel {
+        let p = TmParams { features: 9, clauses: 4, classes: 3, ..TmParams::iris_paper() };
+        let mut m = MultiClassTmModel::zeroed(p);
+        for (k, class) in m.clauses.iter_mut().enumerate() {
+            for (j, clause) in class.iter_mut().enumerate() {
+                for l in 0..18 {
+                    clause.include[l] = (3 * l + 5 * j + 7 * k) % 11 == 0;
+                }
+            }
+        }
+        m
+    }
+
+    /// F=9, C=6, K=3; include(j, l) = (5l + 3j) % 7 == 0,
+    /// weight(k, j) = (j + 2k) % 7 − 3.
+    fn golden_cotm() -> CoTmModel {
+        let p = TmParams { features: 9, clauses: 6, classes: 3, ..TmParams::iris_paper() };
+        let mut m = CoTmModel::zeroed(p);
+        for (j, clause) in m.clauses.iter_mut().enumerate() {
+            for l in 0..18 {
+                clause.include[l] = (5 * l + 3 * j) % 7 == 0;
+            }
+        }
+        for (k, row) in m.weights.iter_mut().enumerate() {
+            for (j, w) in row.iter_mut().enumerate() {
+                *w = ((j + 2 * k) % 7) as i32 - 3;
+            }
+        }
+        m
+    }
+
+    /// Sample s: feature i = (i² + 3is + 2s) % 7 < 3.
+    fn golden_sample(s: usize) -> Vec<bool> {
+        (0..9).map(|i| (i * i + 3 * i * s + 2 * s) % 7 < 3).collect()
+    }
+
+    #[test]
+    fn golden_vectors_match_python_mirror() {
+        let mc = IndexedMulticlass::from_model(&golden_multiclass()).unwrap();
+        let co = IndexedCotm::from_model(&golden_cotm()).unwrap();
+        let want_mc = [
+            [1, 0, -1],
+            [0, -1, 2],
+            [0, -1, 0],
+            [0, 0, 0],
+            [-1, -1, 1],
+            [0, 0, 0],
+        ];
+        let want_co = [
+            [-2, 0, 2],
+            [-6, 0, 6],
+            [0, 2, -3],
+            [3, 2, -6],
+            [-3, -1, 1],
+            [3, 2, -6],
+        ];
+        for s in 0..6 {
+            let x = golden_sample(s);
+            assert_eq!(mc.class_sums(&x), want_mc[s], "multiclass sample {s}");
+            assert_eq!(co.class_sums(&x), want_co[s], "cotm sample {s}");
+            // And the golden vectors themselves match the scalar
+            // reference, so all three tiers pin the same semantics.
+            assert_eq!(
+                multiclass_class_sums(&golden_multiclass(), &x),
+                want_mc[s],
+                "reference multiclass sample {s}"
+            );
+            assert_eq!(
+                cotm_class_sums(&golden_cotm(), &x),
+                want_co[s],
+                "reference cotm sample {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn from_model_rejects_invalid_models() {
+        let odd = TmParams { clauses: 7, ..tiny_params() };
+        assert!(IndexedMulticlass::from_model(&MultiClassTmModel::zeroed(odd)).is_err());
+        let mut cm = CoTmModel::zeroed(tiny_params());
+        cm.weights[0][0] = cm.params.max_weight + 1;
+        assert!(IndexedCotm::from_model(&cm).is_err());
+    }
+
+    #[test]
+    fn empty_clauses_never_fire() {
+        // Zeroed model: all-exclude clauses appear in no literal list,
+        // their counters start at 0 and are never decremented.
+        let e = IndexedCotm::from_model(&CoTmModel::zeroed(tiny_params())).unwrap();
+        assert_eq!(e.class_sums(&[true, false]), vec![0, 0]);
+        let out = e.infer_batch(&[vec![true, false], vec![false, true]]);
+        assert_eq!(out, vec![(vec![0, 0], 0), (vec![0, 0], 0)]);
+    }
+
+    #[test]
+    fn contradictory_clause_never_fires() {
+        // A clause including both x0 and ¬x0 can never see its counter
+        // reach zero (exactly one of the pair is set per sample).
+        let mut m = CoTmModel::zeroed(tiny_params());
+        m.clauses[0].include[0] = true; // x0
+        m.clauses[0].include[1] = true; // ¬x0
+        m.weights = vec![vec![5, 0], vec![5, 0]];
+        let e = IndexedCotm::from_model(&m).unwrap();
+        for x in [[true, true], [false, false], [true, false]] {
+            assert_eq!(e.class_sums(&x), vec![0, 0], "{x:?}");
+            assert_eq!(e.class_sums(&x), cotm_class_sums(&m, &x));
+        }
+    }
+
+    #[test]
+    fn sweep_restores_counters_and_batch_reuses_scratch() {
+        let m = golden_multiclass();
+        let e = IndexedMulticlass::from_model(&m).unwrap();
+        let mut counts = e.index.fresh_counts();
+        let baseline = counts.clone();
+        let mut fired = Vec::new();
+        for s in 0..6 {
+            e.index.sweep(&golden_sample(s), &mut counts, &mut fired);
+            assert_eq!(counts, baseline, "counters restored after sample {s}");
+        }
+        // Batched results equal per-sample results (same scratch reuse).
+        let rows: Vec<Vec<bool>> = (0..6).map(golden_sample).collect();
+        let out = e.infer_batch(&rows);
+        for (s, (sums, pred)) in out.iter().enumerate() {
+            assert_eq!(sums, &e.class_sums(&rows[s]), "sample {s}");
+            assert_eq!(*pred, predict_argmax(sums));
+        }
+    }
+
+    #[test]
+    fn batched_agrees_with_single_sample_across_block_boundary() {
+        // 130 samples: the default sharded path splits on 64-sample
+        // blocks; indexed evaluation must be invariant to the split.
+        let m = golden_multiclass();
+        let e = IndexedMulticlass::from_model(&m).unwrap();
+        let rows: Vec<Vec<bool>> = (0..130usize)
+            .map(|s| (0..9).map(|i| (s >> (i % 7)) & 1 == 1).collect())
+            .collect();
+        let batched = e.infer_batch(&rows);
+        assert_eq!(batched.len(), 130);
+        for (s, (sums, pred)) in batched.iter().enumerate() {
+            assert_eq!(sums, &e.class_sums(&rows[s]), "sample {s}");
+            assert_eq!(*pred, predict_argmax(sums), "sample {s}");
+        }
+        assert_eq!(e.infer_batch_sharded(&rows, 4), batched);
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let e = IndexedMulticlass::from_model(&golden_multiclass()).unwrap();
+        assert!(e.infer_batch(&Vec::<Vec<bool>>::new()).is_empty());
+    }
+
+    #[test]
+    fn density_and_postings_account_included_literals() {
+        let m = golden_cotm();
+        let e = IndexedCotm::from_model(&m).unwrap();
+        let included: usize = m.clauses.iter().map(|c| c.included_count()).sum();
+        assert_eq!(e.index.postings(), included);
+        let want = included as f64 / (6.0 * 18.0);
+        assert!((e.density() - want).abs() < 1e-12);
+        assert!((included_density(m.clauses.iter()) - want).abs() < 1e-12);
+        // Degenerate inputs.
+        assert_eq!(included_density(std::iter::empty::<&ClauseMask>()), 0.0);
+        let zeroed = IndexedCotm::from_model(&CoTmModel::zeroed(tiny_params())).unwrap();
+        assert_eq!(zeroed.density(), 0.0);
+    }
+
+    #[test]
+    fn prefer_indexed_is_a_pure_threshold() {
+        assert!(prefer_indexed(0.01, PACKED_VS_INDEXED_DENSITY));
+        assert!(prefer_indexed(PACKED_VS_INDEXED_DENSITY, PACKED_VS_INDEXED_DENSITY));
+        assert!(!prefer_indexed(0.5, PACKED_VS_INDEXED_DENSITY));
+        // Threshold 0 still admits all-empty models (density exactly 0).
+        assert!(prefer_indexed(0.0, 0.0));
+        assert!(!prefer_indexed(0.1, 0.0));
+        // Threshold 1 routes everything to the indexed engine.
+        assert!(prefer_indexed(1.0, 1.0));
+    }
+}

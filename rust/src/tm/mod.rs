@@ -1,5 +1,6 @@
 //! Tsetlin Machine substrate: model structures, software inference,
 //! bit-parallel production inference ([`bitpack`] + [`fast_infer`]),
+//! event-driven inverted-index inference for sparse models ([`index`]),
 //! training (multi-class TM and Coalesced TM), feature booleanisation,
 //! datasets, and model (de)serialisation.
 //!
@@ -13,6 +14,7 @@ pub mod booleanize;
 pub mod cotm_train;
 pub mod data;
 pub mod fast_infer;
+pub mod index;
 pub mod infer;
 pub mod iris_data;
 pub mod model;
@@ -23,5 +25,6 @@ pub use bitpack::{BitSlicedBatch, PackedClause};
 pub use booleanize::Booleanizer;
 pub use data::Dataset;
 pub use fast_infer::{BatchEngine, BitParallelCotm, BitParallelMulticlass};
+pub use index::{IndexedCotm, IndexedMulticlass, InvertedIndex};
 pub use infer::{cotm_class_sums, multiclass_class_sums, predict_argmax};
 pub use model::{ClauseMask, CoTmModel, MultiClassTmModel, TmParams};

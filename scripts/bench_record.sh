@@ -1,0 +1,56 @@
+#!/usr/bin/env bash
+# Perf-trajectory recorder: run the two serving-tier benches and append
+# their output as one JSON entry to BENCH_PR3.json (a JSON-lines file —
+# one object per recorded run), so successive PRs accumulate comparable
+# numbers.
+#
+#   scripts/bench_record.sh [label]
+#
+# Needs a Rust toolchain; the CI image carries none (see ROADMAP.md), so
+# run this on a toolchain-equipped machine and commit the appended entry.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+LABEL="${1:-$(git rev-parse --short HEAD 2>/dev/null || echo unlabelled)}"
+OUT="BENCH_PR3.json"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "bench_record.sh: cargo not found on PATH." >&2
+    echo "The perf trajectory needs a toolchain-equipped machine; this" >&2
+    echo "image carries only the Python/JAX tier." >&2
+    exit 1
+fi
+
+echo "== cargo bench --bench indexed_vs_bitpar =="
+INDEXED_OUT="$(cargo bench --bench indexed_vs_bitpar)"
+echo "$INDEXED_OUT"
+
+echo "== cargo bench --bench bitparallel_vs_ref =="
+BITPAR_OUT="$(cargo bench --bench bitparallel_vs_ref)"
+echo "$BITPAR_OUT"
+
+# JSON-escape via python3 (present wherever the Python tier runs); fall
+# back to a warning rather than writing malformed JSON by hand.
+if ! command -v python3 >/dev/null 2>&1; then
+    echo "bench_record.sh: python3 not found; cannot append $OUT." >&2
+    exit 1
+fi
+LABEL="$LABEL" INDEXED_OUT="$INDEXED_OUT" BITPAR_OUT="$BITPAR_OUT" OUT="$OUT" \
+python3 - <<'EOF'
+import datetime
+import json
+import os
+
+entry = {
+    "label": os.environ["LABEL"],
+    "recorded_utc": datetime.datetime.now(datetime.timezone.utc).isoformat(
+        timespec="seconds"
+    ),
+    "indexed_vs_bitpar": os.environ["INDEXED_OUT"].splitlines(),
+    "bitparallel_vs_ref": os.environ["BITPAR_OUT"].splitlines(),
+}
+path = os.environ["OUT"]
+with open(path, "a", encoding="utf-8") as f:
+    f.write(json.dumps(entry) + "\n")
+print(f"bench_record.sh: appended entry {entry['label']!r} to {path}")
+EOF

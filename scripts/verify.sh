@@ -3,13 +3,14 @@
 #
 #   scripts/verify.sh
 #
-# Runs: the Python tier (JAX kernels + the consistent-hash-ring mirror,
-# which validates the shard-routing algorithm even on toolchain-less
-# images), then cargo build --release && cargo test -q, the shard /
-# coordinator suites by name (so a routing regression is visible at a
-# glance), and cargo bench --no-run (benches are plain `harness = false`
-# mains — `--no-run` proves they compile without paying their full
-# runtime).
+# Runs: the Python tier FIRST (JAX kernels, the consistent-hash-ring
+# mirror, and the inverted-index counter-sweep mirror — so toolchain-less
+# images still validate the shard-routing and indexed-inference
+# algorithms), then cargo build --release && cargo test -q, the shard /
+# coordinator / indexed-conformance suites by name (so a routing or
+# engine regression is visible at a glance), and cargo bench --no-run
+# (benches are plain `harness = false` mains — `--no-run` proves they
+# compile without paying their full runtime).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -33,10 +34,14 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
-echo "== shard / coordinator suites (named re-run for visibility) =="
+echo "== shard / coordinator / indexed suites (named re-run for visibility) =="
 cargo test -q --lib coordinator::
+cargo test -q --lib tm::index
 cargo test -q --test coordinator_props shard
 cargo test -q --test equivalence sharded
+cargo test -q --test equivalence indexed
+cargo test -q --test bitparallel_equivalence indexed
+cargo test -q --test bitparallel_equivalence auto
 
 echo "== cargo bench --no-run =="
 cargo bench --no-run

@@ -1,21 +1,26 @@
-//! Differential conformance suite for the bit-parallel inference
+//! Differential conformance suite for the native batched inference
 //! engines (§III-A: *"all logically equivalent TM implementations
-//! achieve identical inference accuracy"* — and for this backend we
+//! achieve identical inference accuracy"* — and for these backends we
 //! demand more: identical class sums, sample by sample).
 //!
-//! Every property here compares `tm::fast_infer` against the scalar
-//! reference `tm::infer` on randomly generated models. Feature widths
-//! deliberately straddle the packed-word boundaries (a feature width of
-//! 32 is exactly one 64-literal word; 33 spills into a tail word whose
+//! Every property here compares an engine tier against the scalar
+//! reference `tm::infer` on randomly generated models: the packed
+//! bit-parallel engines (`tm::fast_infer`) and the event-driven
+//! inverted-index engines (`tm::index`) are held to the same bar, and
+//! the density-based auto-selection is checked to change only *which*
+//! engine computes, never the sums. Feature widths deliberately
+//! straddle the packed-word boundaries (a feature width of 32 is
+//! exactly one 64-literal word; 33 spills into a tail word whose
 //! padding must stay masked), clause densities range from all-exclude
 //! (empty clause) to near-full, and batch sizes cross the 64-sample
 //! block boundary of the bit-sliced layout.
 
 use tsetlin_td::testutil::{prop, Gen};
+use tsetlin_td::tm::index::{prefer_indexed, PACKED_VS_INDEXED_DENSITY};
 use tsetlin_td::tm::infer::{cotm_class_sums, multiclass_class_sums, predict_argmax};
 use tsetlin_td::tm::{
     data, BatchEngine, BitParallelCotm, BitParallelMulticlass, ClauseMask, CoTmModel,
-    MultiClassTmModel, TmParams,
+    IndexedCotm, IndexedMulticlass, MultiClassTmModel, TmParams,
 };
 
 /// Feature widths that exercise word-boundary packing: one literal word
@@ -152,6 +157,156 @@ fn cotm_batched_matches_reference_across_block_boundaries() {
         }
         assert_eq!(e.infer_batch_sharded(&rows, 3), out);
     });
+}
+
+#[test]
+fn indexed_multiclass_single_sample_bit_exact_on_random_models() {
+    // The inverted-index engine is held to the identical bar as the
+    // packed engine: 120 random models including word-boundary widths
+    // (31/32/33/63/64/65 — the index has no words, but the shared
+    // sweep must hold everywhere the packed one does) and all-exclude
+    // clause densities.
+    prop("indexed multiclass single-sample", 120, |g| {
+        let f = draw_features(g);
+        let c = 2 * g.usize(1..7);
+        let k = g.usize(2..6);
+        let m = random_multiclass(g, f, c, k);
+        let e = IndexedMulticlass::from_model(&m).unwrap();
+        for _ in 0..4 {
+            let x = g.bools(f);
+            let want = multiclass_class_sums(&m, &x);
+            assert_eq!(e.class_sums(&x), want, "f={f} c={c} k={k}");
+            assert_eq!(e.predict(&x), predict_argmax(&want));
+        }
+    });
+}
+
+#[test]
+fn indexed_cotm_single_sample_bit_exact_on_random_models() {
+    prop("indexed cotm single-sample", 120, |g| {
+        let f = draw_features(g);
+        let c = g.usize(1..14);
+        let k = g.usize(2..6);
+        let m = random_cotm(g, f, c, k);
+        let e = IndexedCotm::from_model(&m).unwrap();
+        for _ in 0..4 {
+            let x = g.bools(f);
+            let want = cotm_class_sums(&m, &x);
+            assert_eq!(e.class_sums(&x), want, "f={f} c={c} k={k}");
+            assert_eq!(e.predict(&x), predict_argmax(&want));
+        }
+    });
+}
+
+#[test]
+fn indexed_multiclass_batched_matches_reference_across_block_boundaries() {
+    // Batch sizes straddling the 64-sample block: the indexed batch
+    // path reuses one counter scratch across the whole batch, so any
+    // restore bug shows up as sample-order-dependent sums; the sharded
+    // variant must be a pure reordering.
+    prop("indexed multiclass batched", 40, |g| {
+        let f = draw_features(g).min(80);
+        let c = 2 * g.usize(1..5);
+        let k = g.usize(2..5);
+        let m = random_multiclass(g, f, c, k);
+        let e = IndexedMulticlass::from_model(&m).unwrap();
+        let n = *g.pick(&[1usize, 2, 63, 64, 65, 127, 128, 130]);
+        let rows: Vec<Vec<bool>> = (0..n).map(|_| g.bools(f)).collect();
+        let out = e.infer_batch(&rows);
+        assert_eq!(out.len(), n);
+        for (s, (sums, pred)) in out.iter().enumerate() {
+            let want = multiclass_class_sums(&m, &rows[s]);
+            assert_eq!(sums, &want, "sample {s}/{n} f={f}");
+            assert_eq!(*pred, predict_argmax(&want), "sample {s}/{n}");
+        }
+        assert_eq!(e.infer_batch_sharded(&rows, 3), out);
+    });
+}
+
+#[test]
+fn indexed_cotm_batched_matches_reference_across_block_boundaries() {
+    prop("indexed cotm batched", 40, |g| {
+        let f = draw_features(g).min(80);
+        let c = g.usize(1..10);
+        let k = g.usize(2..5);
+        let m = random_cotm(g, f, c, k);
+        let e = IndexedCotm::from_model(&m).unwrap();
+        let n = *g.pick(&[1usize, 2, 63, 64, 65, 130]);
+        let rows: Vec<Vec<bool>> = (0..n).map(|_| g.bools(f)).collect();
+        let out = e.infer_batch(&rows);
+        for (s, (sums, pred)) in out.iter().enumerate() {
+            let want = cotm_class_sums(&m, &rows[s]);
+            assert_eq!(sums, &want, "sample {s}/{n} f={f}");
+            assert_eq!(*pred, predict_argmax(&want));
+        }
+        assert_eq!(e.infer_batch_sharded(&rows, 3), out);
+    });
+}
+
+#[test]
+fn auto_select_choice_never_changes_outputs() {
+    // Whatever `prefer_indexed` decides for a model — at the default
+    // threshold or any other — both candidate engines produce identical
+    // sums, so the selection is purely a speed decision. Random models
+    // span densities on both sides of the default crossover.
+    prop("auto-select output invariance", 60, |g| {
+        let f = draw_features(g).min(80);
+        let c = 2 * g.usize(1..5);
+        let k = g.usize(2..5);
+        let m = random_multiclass(g, f, c, k);
+        let cm = random_cotm(g, f, c, k);
+        let bp_mc = BitParallelMulticlass::from_model(&m).unwrap();
+        let ix_mc = IndexedMulticlass::from_model(&m).unwrap();
+        let bp_co = BitParallelCotm::from_model(&cm).unwrap();
+        let ix_co = IndexedCotm::from_model(&cm).unwrap();
+        // Exercise the decision itself (it must be total and pure)...
+        let _ = prefer_indexed(ix_mc.density(), PACKED_VS_INDEXED_DENSITY);
+        let _ = prefer_indexed(ix_co.density(), PACKED_VS_INDEXED_DENSITY);
+        // ...and prove it irrelevant to the outputs.
+        for _ in 0..4 {
+            let x = g.bools(f);
+            assert_eq!(
+                ix_mc.class_sums(&x),
+                bp_mc.class_sums(&x),
+                "multiclass engines disagree (f={f} c={c} k={k})"
+            );
+            assert_eq!(
+                ix_co.class_sums(&x),
+                bp_co.class_sums(&x),
+                "cotm engines disagree (f={f} c={c} k={k})"
+            );
+            assert_eq!(ix_mc.class_sums(&x), multiclass_class_sums(&m, &x));
+            assert_eq!(ix_co.class_sums(&x), cotm_class_sums(&cm, &x));
+        }
+    });
+}
+
+#[test]
+fn indexed_trained_iris_models_are_bit_exact_end_to_end() {
+    // Trainer-produced models through the indexed single-sample,
+    // batched, and sharded paths — same bar as the packed engines.
+    let d = data::iris().unwrap();
+    let (tr, _) = d.split(0.8, 42);
+    let m = tsetlin_td::tm::train::train_multiclass(TmParams::iris_paper(), &tr, 60, 2).unwrap();
+    let cm = tsetlin_td::tm::cotm_train::train_cotm(TmParams::iris_paper(), &tr, 150, 3).unwrap();
+    let e_mc = IndexedMulticlass::from_model(&m).unwrap();
+    let e_co = IndexedCotm::from_model(&cm).unwrap();
+
+    let batch_mc = e_mc.infer_batch(&d.features);
+    let batch_co = e_co.infer_batch(&d.features);
+    assert_eq!(e_mc.infer_batch_sharded(&d.features, 4), batch_mc);
+    assert_eq!(e_co.infer_batch_sharded(&d.features, 4), batch_co);
+    for (i, x) in d.features.iter().enumerate() {
+        let want_mc = multiclass_class_sums(&m, x);
+        assert_eq!(e_mc.class_sums(x), want_mc, "iris sample {i} (multiclass)");
+        assert_eq!(batch_mc[i].0, want_mc, "iris sample {i} (multiclass batched)");
+        assert_eq!(batch_mc[i].1, predict_argmax(&want_mc));
+
+        let want_co = cotm_class_sums(&cm, x);
+        assert_eq!(e_co.class_sums(x), want_co, "iris sample {i} (cotm)");
+        assert_eq!(batch_co[i].0, want_co, "iris sample {i} (cotm batched)");
+        assert_eq!(batch_co[i].1, predict_argmax(&want_co));
+    }
 }
 
 #[test]

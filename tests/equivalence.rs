@@ -292,6 +292,84 @@ fn sharded_front_door_serves_random_models_concurrently() {
 }
 
 #[test]
+fn indexed_and_auto_front_door_serve_sharded_bit_exact() {
+    // The event-driven inverted-index tier through the full serving
+    // stack: sharded front door -> per-shard dynamic batcher -> shared
+    // indexed engine, mixed with auto-selected requests. Sums must be
+    // bit-exact against the scalar reference whichever engine serves,
+    // and auto replies must name the concrete engine that did.
+    use tsetlin_td::config::ServeConfig;
+    use tsetlin_td::coordinator::{Backend, InferRequest, ShardedCoordinator};
+
+    prop("indexed front door", 4, |g| {
+        let f = g.usize(2..12);
+        let c = 2 * g.usize(1..4);
+        let k = g.usize(2..4);
+        let m = random_multiclass(g, f, c, k);
+        let cm = random_cotm(g, f, c, k);
+        // Random threshold exercises both auto resolutions across
+        // cases; outputs must be invariant to it.
+        let threshold = if g.bool() { 1.0 } else { 0.0 };
+        let cfg = ServeConfig {
+            shards: 2,
+            workers: 1,
+            max_batch: 16,
+            indexed_density_threshold: threshold,
+            ..ServeConfig::default()
+        };
+        let srv = ShardedCoordinator::new(&cfg, m.clone(), cm.clone(), false).unwrap();
+        let backends = [
+            Backend::IndexedMulticlass,
+            Backend::IndexedCotm,
+            Backend::AutoMulticlass,
+            Backend::AutoCotm,
+        ];
+        let samples: Vec<Vec<bool>> = (0..48).map(|_| g.bools(f)).collect();
+        let pending: Vec<_> = samples
+            .iter()
+            .enumerate()
+            .map(|(i, x)| {
+                let backend = backends[i % backends.len()];
+                (
+                    i,
+                    backend,
+                    srv.submit(InferRequest { features: x.clone(), backend }).unwrap(),
+                )
+            })
+            .collect();
+        for (i, backend, rx) in pending {
+            let r = rx
+                .recv_timeout(std::time::Duration::from_secs(30))
+                .expect("reply within deadline")
+                .expect("indexed/auto request served");
+            // The reply names a concrete native engine: the requested
+            // backend itself for indexed-*, the resolved engine for
+            // auto-* (auto is a routing alias, never a serving tier).
+            assert!(r.backend.is_native_batched(), "request {i} via {backend:?}");
+            if backend.is_indexed() {
+                assert_eq!(r.backend, backend);
+            }
+            let multiclass = matches!(
+                backend,
+                Backend::IndexedMulticlass | Backend::AutoMulticlass
+            );
+            let want = if multiclass {
+                multiclass_class_sums(&m, &samples[i])
+            } else {
+                cotm_class_sums(&cm, &samples[i])
+            };
+            assert_eq!(r.class_sums, want, "request {i} via {backend:?}");
+            assert_eq!(r.predicted, predict_argmax(&want), "request {i}");
+        }
+        let agg = srv.stats();
+        assert_eq!(agg.submitted, 48);
+        assert_eq!(agg.completed, 48);
+        assert_eq!(agg.failed, 0);
+        srv.shutdown();
+    });
+}
+
+#[test]
 fn wta_choice_does_not_change_multiclass_results() {
     let d = data::iris().unwrap();
     let (tr, _) = d.split(0.8, 42);
