@@ -1,0 +1,165 @@
+//! Packed-evaluation trainer vs per-literal reference trainer — the
+//! perf-trajectory bench for the training tier (the counterpart of
+//! `bitparallel_vs_ref` for inference).
+//!
+//! Both engines produce bit-identical models for the same seed (the
+//! conformance suite enforces it; this bench re-asserts it on a small
+//! configuration before timing anything), so the only question is
+//! epoch wall-clock. Clause evaluation dominates training cost (class
+//! sums are recomputed per update), which is exactly the part the
+//! packed engine turns into word-wide ANDs over incrementally-
+//! maintained include masks. Target: >=4x epoch speedup on the
+//! 256-feature / 512-clause synthetic — the same regime the inference
+//! packing is built for.
+//!
+//! Run: `cargo bench --bench train_packed_vs_ref`
+
+use std::time::Instant;
+
+use tsetlin_td::tm::cotm_train::{train_cotm_with, CoTmTrainer};
+use tsetlin_td::tm::train::{train_multiclass_with, MultiClassTrainer};
+use tsetlin_td::tm::{data, Dataset, TmParams, TrainerEngine};
+use tsetlin_td::util::Table;
+
+/// Time `reps` epochs after one warm-up epoch; ms/epoch.
+fn time_epochs_ms(reps: usize, mut epoch: impl FnMut()) -> f64 {
+    epoch(); // warm-up (page in, branch-train)
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        epoch();
+    }
+    t0.elapsed().as_secs_f64() * 1e3 / reps as f64
+}
+
+struct Case {
+    label: String,
+    reference_ms: f64,
+    packed_ms: f64,
+}
+
+/// Steady-state epoch cost: the first epochs of a fresh trainer are
+/// dominated by Type I feedback (one Bernoulli draw per literal —
+/// identical work in both engines, and untouchable without changing
+/// the RNG stream). After the class sums saturate against ±T the
+/// update probability collapses and clause *evaluation* dominates —
+/// the regime a long training run spends almost all its time in, and
+/// the part the packed engine accelerates. So: converge both trainers
+/// identically (untimed), then time epochs.
+const CONVERGE_EPOCHS: usize = 3;
+
+fn bench_multiclass(label: &str, p: &TmParams, d: &Dataset, reps: usize) -> Case {
+    let mut r = MultiClassTrainer::with_engine(p.clone(), 5, TrainerEngine::Reference)
+        .expect("valid params");
+    let mut q = MultiClassTrainer::with_engine(p.clone(), 5, TrainerEngine::Packed)
+        .expect("valid params");
+    for _ in 0..CONVERGE_EPOCHS {
+        r.epoch(d);
+        q.epoch(d);
+    }
+    let case = Case {
+        label: label.to_string(),
+        reference_ms: time_epochs_ms(reps, || r.epoch(d)),
+        packed_ms: time_epochs_ms(reps, || q.epoch(d)),
+    };
+    // Both trainers consumed identical RNG streams, so after equal
+    // epoch counts the exported models must still be identical.
+    assert_eq!(r.export(), q.export(), "{label}: engines diverged");
+    case
+}
+
+fn bench_cotm(label: &str, p: &TmParams, d: &Dataset, reps: usize) -> Case {
+    let mut r =
+        CoTmTrainer::with_engine(p.clone(), 7, TrainerEngine::Reference).expect("valid params");
+    let mut q =
+        CoTmTrainer::with_engine(p.clone(), 7, TrainerEngine::Packed).expect("valid params");
+    for _ in 0..CONVERGE_EPOCHS {
+        r.epoch(d);
+        q.epoch(d);
+    }
+    let case = Case {
+        label: label.to_string(),
+        reference_ms: time_epochs_ms(reps, || r.epoch(d)),
+        packed_ms: time_epochs_ms(reps, || q.epoch(d)),
+    };
+    assert_eq!(r.export(), q.export(), "{label}: engines diverged");
+    case
+}
+
+fn main() {
+    println!("== packed-evaluation trainer vs per-literal reference ==");
+
+    // Sanity first: a speedup over a *different* model is worthless.
+    let sanity = data::xor_noise(150, 6, 0.05, 3);
+    let sp = TmParams {
+        features: 6,
+        clauses: 8,
+        classes: 2,
+        ta_states: 32,
+        threshold: 4,
+        specificity: 3.0,
+        max_weight: 7,
+    };
+    let a = train_multiclass_with(sp.clone(), &sanity, 3, 11, TrainerEngine::Reference)
+        .expect("train");
+    let b =
+        train_multiclass_with(sp.clone(), &sanity, 3, 11, TrainerEngine::Packed).expect("train");
+    assert_eq!(a, b, "same-seed bit-identity violated");
+    let ca = train_cotm_with(sp.clone(), &sanity, 3, 13, TrainerEngine::Reference).expect("train");
+    let cb = train_cotm_with(sp, &sanity, 3, 13, TrainerEngine::Packed).expect("train");
+    assert_eq!(ca, cb, "same-seed bit-identity violated (cotm)");
+
+    // (a) The paper's Iris configuration.
+    let iris = data::iris().expect("iris");
+    let (iris_train, _) = iris.split(0.8, 42);
+    let iris_p = TmParams::iris_paper();
+
+    // (b) The synthetic large regime: 256 features, 512 clauses.
+    let (bf, bc, bk) = (256usize, 512usize, 4usize);
+    let big = data::prototype_blobs(192, bf, bk, 0.1, 9);
+    let big_p = TmParams {
+        features: bf,
+        clauses: bc,
+        classes: bk,
+        ta_states: 64,
+        threshold: 16,
+        specificity: 3.0,
+        max_weight: 7,
+    };
+
+    let cases = vec![
+        bench_multiclass("iris multiclass (16f, 12c, 3k)", &iris_p, &iris_train, 20),
+        bench_cotm("iris cotm (16f, 12c, 3k)", &iris_p, &iris_train, 20),
+        bench_multiclass(
+            &format!("large multiclass ({bf}f, {bc}c/class, {bk}k)"),
+            &big_p,
+            &big,
+            2,
+        ),
+        bench_cotm(&format!("large cotm ({bf}f, {bc}c shared, {bk}k)"), &big_p, &big, 2),
+    ];
+
+    let mut t = Table::new(vec![
+        "trainer",
+        "reference ms/epoch",
+        "packed ms/epoch",
+        "speedup",
+    ]);
+    let mut large_ok = true;
+    for c in &cases {
+        let speedup = c.reference_ms / c.packed_ms;
+        if c.label.starts_with("large") && speedup < 4.0 {
+            large_ok = false;
+        }
+        t.row(vec![
+            c.label.clone(),
+            format!("{:.2}", c.reference_ms),
+            format!("{:.2}", c.packed_ms),
+            format!("{speedup:.1}x"),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "large-model target (>=4x epoch speedup over the reference trainer): {}",
+        if large_ok { "PASS" } else { "FAIL" }
+    );
+}

@@ -8,8 +8,9 @@ use tsetlin_td::arch::Architecture;
 use tsetlin_td::config::ServeConfig;
 use tsetlin_td::coordinator::{Backend, InferRequest, ShardedCoordinator};
 use tsetlin_td::tm::{
-    cotm_train::train_cotm, data, index, infer, train::train_multiclass, BatchEngine,
-    BitParallelMulticlass, IndexedMulticlass, TmParams,
+    cotm_train::train_cotm, data, index, infer,
+    train::{train_multiclass, train_multiclass_with},
+    BatchEngine, BitParallelMulticlass, IndexedMulticlass, TmParams, TrainerEngine,
 };
 use tsetlin_td::wta::WtaKind;
 
@@ -28,9 +29,17 @@ fn main() -> tsetlin_td::Result<()> {
         specificity: 3.0,
         max_weight: 7,
     };
+    //    Training runs through the packed-evaluation engine by default
+    //    (incrementally-maintained packed include masks, word-wide
+    //    clause evaluation); the per-literal reference engine produces
+    //    a bit-identical model for the same seed — the trainer-parity
+    //    contract `tmtd selfcheck` also enforces.
     let model = train_multiclass(params.clone(), &train, 30, 1)?;
+    let reference =
+        train_multiclass_with(params.clone(), &train, 30, 1, TrainerEngine::Reference)?;
+    assert_eq!(model, reference, "packed trainer must match reference bit-for-bit");
     let acc = infer::multiclass_accuracy(&model, &test.features, &test.labels);
-    println!("software accuracy on clean XOR: {:.1}%", 100.0 * acc);
+    println!("software accuracy on clean XOR: {:.1}% (packed == reference trainer)", 100.0 * acc);
 
     // 2b. The production serving path: compile the model into the
     //     bit-parallel engine (packed-word clause evaluation, batched

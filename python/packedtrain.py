@@ -1,0 +1,405 @@
+"""Python mirror of the packed-evaluation TM training engine.
+
+Mirrors ``rust/src/tm/trainer_engine.rs`` + ``tm/train.rs`` +
+``tm/cotm_train.rs`` algorithm-for-algorithm — including the SplitMix64
+RNG stream (``util/rng.rs``) — so the PR's headline invariant can be
+validated on CI images that carry no Rust toolchain, the same
+arrangement as ``hashring.py`` and ``invindex.py`` for earlier tiers:
+
+    For the same seed, the packed-evaluation trainer produces a model
+    **bit-identical** to the reference per-literal trainer.
+
+The invariant holds because the packed path changes only *how* clause
+firing is computed, never *what* fires or the RNG consumption order:
+
+* TA counter state stays per-literal in ``1..=2N`` (feedback semantics
+  untouched); each clause additionally maintains a packed include mask
+  (``u64`` words) updated incrementally, only when a TA crosses the
+  N/N+1 include boundary;
+* ``class_sum`` / ``clause_fires`` go through the packed evaluator with
+  **training-time empty-clause-fires semantics**: an all-exclude mask
+  has all-zero words, so the word-AND reduction is vacuously true and
+  the clause fires — exactly the reference trainer's convention (an
+  empty clause must fire to receive Type I feedback and grow), and the
+  opposite of the inference convention in ``bitpack.rs``;
+* evaluation consumes no randomness, so the Bernoulli/shuffle stream is
+  byte-for-byte the stream the reference trainer consumes.
+
+All float arithmetic here (``(s-1)/s``, ``(T-sum)/2T``, the 53-bit
+``next_f64``) is IEEE-754 double in both languages, so the ``chance``
+comparisons are exact mirrors, not approximations. Any change to the
+Rust trainer algorithm must be replayed here and in the shared golden
+vectors of ``tests/test_packedtrain.py`` / ``trainer_engine.rs``.
+"""
+
+MASK64 = (1 << 64) - 1
+WORD_BITS = 64
+
+
+class SplitMix64:
+    """Exact mirror of ``rust/src/util/rng.rs`` (same stream per seed)."""
+
+    def __init__(self, seed):
+        self.state = seed & MASK64
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return z ^ (z >> 31)
+
+    def next_below(self, bound):
+        """Lemire multiply-shift rejection, as in the Rust source."""
+        assert bound > 0
+        x = self.next_u64()
+        m = x * bound
+        lo = m & MASK64
+        if lo < bound:
+            t = ((1 << 64) - bound) % bound
+            while lo < t:
+                x = self.next_u64()
+                m = x * bound
+                lo = m & MASK64
+        return m >> 64
+
+    def index(self, bound):
+        return self.next_below(bound)
+
+    def next_f64(self):
+        # (x >> 11) has <= 53 bits, so the float conversion and the
+        # multiply by 2^-53 are both exact — identical to Rust.
+        return float(self.next_u64() >> 11) * (2.0 ** -53)
+
+    def chance(self, p):
+        return self.next_f64() < p
+
+    def next_bool(self):
+        return self.next_u64() & 1 == 1
+
+    def shuffle(self, xs):
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.index(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+
+# ---------------------------------------------------------------------
+# Packed words (bitpack.rs mirror, little-endian bit order).
+# ---------------------------------------------------------------------
+
+def words_for(bits):
+    return (bits + WORD_BITS - 1) // WORD_BITS
+
+
+def pack_bools(bits):
+    words = [0] * words_for(len(bits))
+    for i, b in enumerate(bits):
+        if b:
+            words[i // WORD_BITS] |= 1 << (i % WORD_BITS)
+    return words
+
+
+def pack_literals(features):
+    """Interleaved literals (lit[2i]=x_i, lit[2i+1]=not x_i), packed."""
+    words = [0] * words_for(2 * len(features))
+    for i, f in enumerate(features):
+        pos = 2 * i + (0 if f else 1)
+        words[pos // WORD_BITS] |= 1 << (pos % WORD_BITS)
+    return words
+
+
+def make_literals(features):
+    lits = []
+    for f in features:
+        lits.append(bool(f))
+        lits.append(not f)
+    return lits
+
+
+# ---------------------------------------------------------------------
+# Clause state: per-literal TA counters + incremental packed mask
+# (trainer_engine.rs mirror).
+# ---------------------------------------------------------------------
+
+class ClauseState:
+    """TA states in ``1..=2N`` plus an incrementally-updated packed
+    include mask (``state > N`` = include)."""
+
+    def __init__(self, states, n):
+        self.states = list(states)
+        include = [st > n for st in self.states]
+        self.include_words = pack_bools(include)
+        self.included = sum(include)
+
+    @classmethod
+    def init(cls, literals, n, rng):
+        # Same draw order as the reference trainer's init: one
+        # next_bool per literal, N or N+1.
+        return cls([n if rng.next_bool() else n + 1 for _ in range(literals)], n)
+
+    def set_ta(self, l, st, n):
+        """Write a TA state, updating the packed mask only when the
+        N/N+1 include boundary is crossed."""
+        was = self.states[l] > n
+        now = st > n
+        self.states[l] = st
+        if was != now:
+            w, bit = l // WORD_BITS, 1 << (l % WORD_BITS)
+            if now:
+                self.include_words[w] |= bit
+                self.included += 1
+            else:
+                self.include_words[w] &= ~bit
+                self.included -= 1
+
+    def fires_packed(self, literal_words):
+        """Training-time packed evaluation: empty clause (all-zero
+        words) fires — the AND-of-nothing reading, *unlike* inference."""
+        return all(
+            inc & ~lw & MASK64 == 0
+            for inc, lw in zip(self.include_words, literal_words)
+        )
+
+    def fires_reference(self, lits, n):
+        """Training-time per-literal evaluation (the reference path)."""
+        return all(st <= n or lit for st, lit in zip(self.states, lits))
+
+    def fires(self, lits, literal_words, n):
+        if literal_words is not None:
+            return self.fires_packed(literal_words)
+        return self.fires_reference(lits, n)
+
+    def recomputed_words(self, n):
+        return pack_bools([st > n for st in self.states])
+
+    def coherent(self, n):
+        """The incremental mask must always equal a from-scratch pack."""
+        return (
+            self.include_words == self.recomputed_words(n)
+            and self.included == sum(1 for st in self.states if st > n)
+        )
+
+    def include_mask(self, n):
+        return [st > n for st in self.states]
+
+
+def type_i(clause, lits, fired, n, s, rng):
+    """Type I feedback (recognise). Consumes exactly one Bernoulli draw
+    per literal, in literal order — the stream contract both trainers
+    and both engines share."""
+    p_forget = 1.0 / s
+    p_reinforce = (s - 1.0) / s
+    for l, lit in enumerate(lits):
+        st = clause.states[l]
+        if fired and lit:
+            if rng.chance(p_reinforce) and st < 2 * n:
+                clause.set_ta(l, st + 1, n)
+        elif rng.chance(p_forget) and st > 1:
+            clause.set_ta(l, st - 1, n)
+
+
+def type_ii(clause, lits, n):
+    """Type II feedback (reject): include 0-literals. Consumes no RNG."""
+    for l, lit in enumerate(lits):
+        st = clause.states[l]
+        if not lit and st <= n:
+            clause.set_ta(l, st + 1, n)
+
+
+# ---------------------------------------------------------------------
+# Trainers (train.rs / cotm_train.rs mirrors). ``engine`` is
+# "reference" or "packed"; both must yield identical models per seed.
+# ---------------------------------------------------------------------
+
+class TmParams:
+    def __init__(self, features, clauses, classes, ta_states, threshold,
+                 specificity, max_weight=7):
+        self.features = features
+        self.clauses = clauses
+        self.classes = classes
+        self.ta_states = ta_states
+        self.threshold = threshold
+        self.specificity = specificity
+        self.max_weight = max_weight
+
+    def literals(self):
+        return 2 * self.features
+
+
+class MultiClassTrainer:
+    def __init__(self, params, seed, engine="packed"):
+        assert engine in ("reference", "packed"), engine
+        assert params.clauses % 2 == 0
+        self.params = params
+        self.engine = engine
+        self.rng = SplitMix64(seed)
+        n = params.ta_states
+        self.states = [
+            [ClauseState.init(params.literals(), n, self.rng)
+             for _ in range(params.clauses)]
+            for _ in range(params.classes)
+        ]
+
+    def _words(self, features):
+        return pack_literals(features) if self.engine == "packed" else None
+
+    def class_sum(self, class_, lits, words):
+        n = self.params.ta_states
+        total = 0
+        for j, cl in enumerate(self.states[class_]):
+            out = 1 if cl.fires(lits, words, n) else 0
+            total += out if j % 2 == 0 else -out
+        return total
+
+    def update_class(self, class_, lits, words, positive):
+        t = self.params.threshold
+        sum_ = max(-t, min(t, self.class_sum(class_, lits, words)))
+        if positive:
+            p_update = (t - sum_) / (2 * t)
+        else:
+            p_update = (t + sum_) / (2 * t)
+        n = self.params.ta_states
+        s = self.params.specificity
+        for j in range(self.params.clauses):
+            if not self.rng.chance(p_update):
+                continue
+            cl = self.states[class_][j]
+            fired = cl.fires(lits, words, n)
+            positive_clause = j % 2 == 0
+            if positive == positive_clause:
+                type_i(cl, lits, fired, n, s, self.rng)
+            elif fired:
+                type_ii(cl, lits, n)
+
+    def epoch(self, features, labels):
+        order = list(range(len(features)))
+        self.rng.shuffle(order)
+        for i in order:
+            lits = make_literals(features[i])
+            words = self._words(features[i])
+            y = labels[i]
+            self.update_class(y, lits, words, True)
+            if self.params.classes > 1:
+                neg = self.rng.index(self.params.classes - 1)
+                if neg >= y:
+                    neg += 1
+                self.update_class(neg, lits, words, False)
+
+    def train(self, features, labels, epochs):
+        for _ in range(epochs):
+            self.epoch(features, labels)
+        return self.export()
+
+    def export(self):
+        n = self.params.ta_states
+        return [[cl.include_mask(n) for cl in cls] for cls in self.states]
+
+    def coherent(self):
+        n = self.params.ta_states
+        return all(cl.coherent(n) for cls in self.states for cl in cls)
+
+    def states_in_bounds(self):
+        n = self.params.ta_states
+        return all(
+            1 <= st <= 2 * n
+            for cls in self.states for cl in cls for st in cl.states
+        )
+
+
+class CoTmTrainer:
+    def __init__(self, params, seed, engine="packed"):
+        assert engine in ("reference", "packed"), engine
+        self.params = params
+        self.engine = engine
+        self.rng = SplitMix64(seed)
+        n = params.ta_states
+        self.states = [
+            ClauseState.init(params.literals(), n, self.rng)
+            for _ in range(params.clauses)
+        ]
+        # Weights start at +/-1 alternating per class to break symmetry.
+        self.weights = [
+            [1 if (j + k) % 2 == 0 else -1 for j in range(params.clauses)]
+            for k in range(params.classes)
+        ]
+
+    def _words(self, features):
+        return pack_literals(features) if self.engine == "packed" else None
+
+    def clause_outputs(self, lits, words):
+        n = self.params.ta_states
+        return [cl.fires(lits, words, n) for cl in self.states]
+
+    def class_sum(self, class_, outputs):
+        return sum(
+            w for w, c in zip(self.weights[class_], outputs) if c
+        )
+
+    def update_class(self, class_, lits, words, positive):
+        t = self.params.threshold
+        outputs = self.clause_outputs(lits, words)
+        sum_ = max(-t, min(t, self.class_sum(class_, outputs)))
+        if positive:
+            p_update = (t - sum_) / (2 * t)
+        else:
+            p_update = (t + sum_) / (2 * t)
+        n = self.params.ta_states
+        s = self.params.specificity
+        wmax = self.params.max_weight
+        for j in range(self.params.clauses):
+            if not self.rng.chance(p_update):
+                continue
+            fired = outputs[j]
+            w = self.weights[class_][j]  # pre-update sign decides role
+            cl = self.states[j]
+            if positive:
+                if fired:
+                    self.weights[class_][j] = min(w + 1, wmax)
+                    if w >= 0:
+                        type_i(cl, lits, True, n, s, self.rng)
+                    else:
+                        type_ii(cl, lits, n)
+                elif w >= 0:
+                    type_i(cl, lits, False, n, s, self.rng)
+            elif fired:
+                self.weights[class_][j] = max(w - 1, -wmax)
+                if w > 0:
+                    type_ii(cl, lits, n)
+                else:
+                    type_i(cl, lits, True, n, s, self.rng)
+            elif w < 0:
+                type_i(cl, lits, False, n, s, self.rng)
+
+    def epoch(self, features, labels):
+        order = list(range(len(features)))
+        self.rng.shuffle(order)
+        for i in order:
+            lits = make_literals(features[i])
+            words = self._words(features[i])
+            y = labels[i]
+            self.update_class(y, lits, words, True)
+            if self.params.classes > 1:
+                neg = self.rng.index(self.params.classes - 1)
+                if neg >= y:
+                    neg += 1
+                self.update_class(neg, lits, words, False)
+
+    def train(self, features, labels, epochs):
+        for _ in range(epochs):
+            self.epoch(features, labels)
+        return self.export()
+
+    def export(self):
+        n = self.params.ta_states
+        masks = [cl.include_mask(n) for cl in self.states]
+        return masks, [row[:] for row in self.weights]
+
+    def coherent(self):
+        n = self.params.ta_states
+        return all(cl.coherent(n) for cl in self.states)
+
+    def states_in_bounds(self):
+        n = self.params.ta_states
+        return all(
+            1 <= st <= 2 * n for cl in self.states for st in cl.states
+        )

@@ -1,0 +1,237 @@
+"""Packed-evaluation trainer mirror vs the Rust trainers (tm/train.rs,
+tm/cotm_train.rs, tm/trainer_engine.rs).
+
+Plain pytest (no hypothesis, no JAX) so it runs on every CI image —
+including toolchain-less ones where the Rust suite cannot. Three layers
+of pinning, mirroring the hashring/invindex arrangement:
+
+1. RNG-stream goldens: the SplitMix64 mirror must produce the exact
+   values the Rust ``util/rng.rs`` produces (asserted identically in
+   ``trainer_engine.rs::splitmix_stream_matches_python_mirror``).
+2. Trained-model goldens: tiny closed-form datasets trained for a few
+   epochs; the exported include masks / weights are hard-coded here and
+   asserted *identically* in ``trainer_engine.rs`` — if either
+   language's trainer drifts, both suites fail.
+3. The PR's headline invariant, validated end-to-end in Python: for the
+   same seed, the packed-evaluation trainer is **bit-identical** to the
+   reference per-literal trainer, across word-boundary feature widths,
+   for both the multi-class TM and the CoTM.
+"""
+
+import random
+
+from packedtrain import (
+    ClauseState,
+    CoTmTrainer,
+    MultiClassTrainer,
+    SplitMix64,
+    TmParams,
+    make_literals,
+    pack_bools,
+    pack_literals,
+    type_i,
+    type_ii,
+)
+
+# Literal-space word boundaries: F=32 is exactly one 64-literal word,
+# 33 spills into a tail word; 63/64/65 are the two-word boundary.
+BOUNDARY_WIDTHS = [31, 32, 33, 63, 64, 65]
+
+
+def synth(f, n_samples, classes):
+    """Closed-form dataset shared verbatim with the Rust unit tests."""
+    feats = [
+        [(i * i + 3 * i * s + 2 * s) % 7 < 3 for i in range(f)]
+        for s in range(n_samples)
+    ]
+    labels = [s % classes for s in range(n_samples)]
+    return feats, labels
+
+
+def bits(mask):
+    return "".join("1" if b else "0" for b in mask)
+
+
+# ---------------------------------------------------------------------
+# 1. RNG stream goldens (asserted identically in trainer_engine.rs).
+# ---------------------------------------------------------------------
+
+def test_splitmix_stream_goldens():
+    r = SplitMix64(42)
+    assert [r.next_u64() for _ in range(4)] == [
+        0xBDD732262FEB6E95,
+        0x28EFE333B266F103,
+        0x47526757130F9F52,
+        0x581CE1FF0E4AE394,
+    ]
+    r = SplitMix64(7)
+    assert (
+        "".join("1" if r.chance(1.0 / 3.0) else "0" for _ in range(32))
+        == "01000101101000000100010000100001"
+    )
+    r = SplitMix64(9)
+    assert [r.index(5) for _ in range(12)] == [3, 3, 1, 3, 1, 0, 3, 4, 1, 3, 2, 1]
+    xs = list(range(8))
+    r = SplitMix64(3)
+    r.shuffle(xs)
+    assert xs == [2, 5, 1, 6, 7, 3, 4, 0]
+
+
+# ---------------------------------------------------------------------
+# 2. Trained-model goldens (shared verbatim with trainer_engine.rs).
+#    multiclass: F=5 C=4 K=2 N=8 T=3 s=3.0, 12 samples, 3 epochs, seed 42
+#    cotm:       F=5 C=5 K=3 N=8 T=3 s=3.0 wmax=3, 12 samples, 3 epochs,
+#                seed 43
+# ---------------------------------------------------------------------
+
+GOLDEN_MC_MASKS = [
+    ["0000000001", "0001000001", "0000100001", "0000000001"],  # class 0
+    ["0010000000", "0000000001", "1010000001", "1000000100"],  # class 1
+]
+GOLDEN_CO_MASKS = [
+    "0000000110",
+    "1010011000",
+    "0000000001",
+    "1010001010",
+    "0100010010",
+]
+GOLDEN_CO_WEIGHTS = [
+    [-1, 1, 0, -1, 0],
+    [-1, 2, 0, 2, -2],
+    [0, -3, 0, 0, 1],
+]
+
+
+def test_multiclass_trained_golden_model():
+    feats, labels = synth(5, 12, 2)
+    for engine in ("reference", "packed"):
+        tr = MultiClassTrainer(TmParams(5, 4, 2, 8, 3, 3.0), 42, engine)
+        model = tr.train(feats, labels, 3)
+        got = [[bits(mask) for mask in cls] for cls in model]
+        assert got == GOLDEN_MC_MASKS, engine
+        assert tr.coherent() and tr.states_in_bounds()
+
+
+def test_cotm_trained_golden_model():
+    feats, labels = synth(5, 12, 3)
+    for engine in ("reference", "packed"):
+        tr = CoTmTrainer(TmParams(5, 5, 3, 8, 3, 3.0, 3), 43, engine)
+        masks, weights = tr.train(feats, labels, 3)
+        assert [bits(m) for m in masks] == GOLDEN_CO_MASKS, engine
+        assert weights == GOLDEN_CO_WEIGHTS, engine
+        assert tr.coherent() and tr.states_in_bounds()
+
+
+# ---------------------------------------------------------------------
+# 3. The headline invariant: packed == reference, bit for bit, for the
+#    same seed — including the RNG end state (stream never diverges).
+# ---------------------------------------------------------------------
+
+def test_multiclass_packed_bit_identical_across_boundary_widths():
+    for f in BOUNDARY_WIDTHS:
+        feats, labels = synth(f, 30, 3)
+        p = TmParams(f, 8, 3, 32, 4, 3.0)
+        ref = MultiClassTrainer(p, 99, "reference")
+        packed = MultiClassTrainer(p, 99, "packed")
+        assert ref.train(feats, labels, 3) == packed.train(feats, labels, 3), f
+        assert ref.rng.state == packed.rng.state, f
+        assert packed.coherent(), f
+
+
+def test_cotm_packed_bit_identical_across_boundary_widths():
+    for f in BOUNDARY_WIDTHS:
+        feats, labels = synth(f, 30, 3)
+        p = TmParams(f, 7, 3, 32, 4, 3.0, 5)
+        ref = CoTmTrainer(p, 77, "reference")
+        packed = CoTmTrainer(p, 77, "packed")
+        assert ref.train(feats, labels, 3) == packed.train(feats, labels, 3), f
+        assert ref.rng.state == packed.rng.state, f
+        assert packed.coherent(), f
+
+
+def test_randomized_same_seed_equality():
+    # Random shapes/seeds/epochs: the invariant is structural, not a
+    # property of any particular configuration.
+    rnd = random.Random(1234)
+    for case in range(30):
+        f = rnd.randrange(1, 40)
+        classes = rnd.randrange(2, 5)
+        clauses = 2 * rnd.randrange(1, 5)
+        seed = rnd.getrandbits(64)
+        epochs = rnd.randrange(1, 4)
+        feats = [
+            [rnd.random() < 0.5 for _ in range(f)] for _ in range(20)
+        ]
+        labels = [rnd.randrange(classes) for _ in range(20)]
+        p = TmParams(f, clauses, classes, 16, 3, 3.0, 4)
+        a = MultiClassTrainer(p, seed, "reference").train(feats, labels, epochs)
+        b = MultiClassTrainer(p, seed, "packed").train(feats, labels, epochs)
+        assert a == b, case
+        ca = CoTmTrainer(p, seed, "reference").train(feats, labels, epochs)
+        cb = CoTmTrainer(p, seed, "packed").train(feats, labels, epochs)
+        assert ca == cb, case
+
+
+# ---------------------------------------------------------------------
+# Clause-state unit level: randomized differential cases against the
+# direct per-literal evaluator, and incremental-mask coherence under
+# arbitrary TA-state walks.
+# ---------------------------------------------------------------------
+
+def test_incremental_mask_matches_recompute_under_random_walks():
+    rnd = random.Random(99)
+    for _ in range(50):
+        lits = rnd.randrange(1, 140)
+        n = rnd.randrange(1, 64)
+        cs = ClauseState(
+            [rnd.randrange(1, 2 * n + 1) for _ in range(lits)], n
+        )
+        assert cs.coherent(n)
+        for _ in range(200):
+            l = rnd.randrange(lits)
+            cs.set_ta(l, rnd.randrange(1, 2 * n + 1), n)
+        assert cs.coherent(n)
+        assert cs.include_words == pack_bools([st > n for st in cs.states])
+
+
+def test_packed_firing_matches_per_literal_firing():
+    # Training-time semantics on both paths, including the empty-clause
+    # -fires convention (all-exclude -> all-zero words -> vacuous AND).
+    rnd = random.Random(7)
+    for _ in range(200):
+        f = rnd.randrange(1, 80)
+        n = 8
+        states = [
+            n if rnd.random() < 0.7 else rnd.randrange(1, 2 * n + 1)
+            for _ in range(2 * f)
+        ]
+        cs = ClauseState(states, n)
+        x = [rnd.random() < 0.5 for _ in range(f)]
+        lits = make_literals(x)
+        words = pack_literals(x)
+        assert cs.fires_packed(words) == cs.fires_reference(lits, n)
+
+
+def test_empty_clause_fires_at_training_time():
+    n = 8
+    cs = ClauseState([n] * 10, n)  # all-exclude
+    x = [True, False, True, False, True]
+    assert cs.included == 0
+    assert cs.fires_packed(pack_literals(x))
+    assert cs.fires_reference(make_literals(x), n)
+
+
+def test_feedback_keeps_states_in_bounds_and_mask_coherent():
+    rnd = random.Random(5)
+    rng = SplitMix64(11)
+    n, f = 4, 10
+    cs = ClauseState.init(2 * f, n, rng)
+    for _ in range(300):
+        x = [rnd.random() < 0.5 for _ in range(f)]
+        lits = make_literals(x)
+        if rnd.random() < 0.5:
+            type_i(cs, lits, rnd.random() < 0.5, n, 3.0, rng)
+        else:
+            type_ii(cs, lits, n)
+        assert all(1 <= st <= 2 * n for st in cs.states)
+        assert cs.coherent(n)

@@ -71,6 +71,9 @@ USAGE: tmtd <command> [options]
 COMMANDS:
   train      Train models on a dataset and save them
              --dataset iris|xor|blobs  --out-dir models/ --epochs N --seed N
+             [--trainer packed|reference] (default packed: clause
+              evaluation through incrementally-maintained packed include
+              words; bit-identical to the reference trainer per seed)
   infer      Run one inference through a backend
              --backend <name> --model-dir models/ --sample N
   eval       Evaluate all six architectures (Table IV)
@@ -83,7 +86,8 @@ COMMANDS:
              --config serve.toml --requests N [--no-golden] [--shards N]
              (--shards N fronts N coordinator shards with a
               deterministic consistent-hash ring; default from config)
-  selfcheck  Train + verify every backend agrees on Iris
+  selfcheck  Train + verify every backend agrees on Iris, and that the
+             packed trainer reproduces the reference trainer bit-for-bit
   help       Show this text
 
 Backends: golden-multiclass golden-cotm bitpar-multiclass bitpar-cotm

@@ -11,7 +11,10 @@ use tsetlin_td::cli::{Args, USAGE};
 use tsetlin_td::config::ServeConfig;
 use tsetlin_td::coordinator::{Backend, CoordinatorServer, InferRequest, ShardedCoordinator};
 use tsetlin_td::sim::TechParams;
-use tsetlin_td::tm::{self, cotm_train::train_cotm, data, train::train_multiclass, TmParams};
+use tsetlin_td::tm::{
+    self, cotm_train::train_cotm_with, data, train::train_multiclass_with, TmParams,
+    TrainerEngine,
+};
 use tsetlin_td::util::SplitMix64;
 use tsetlin_td::wta::{analysis, WtaKind};
 use tsetlin_td::{Error, Result};
@@ -66,24 +69,41 @@ fn train_pair(
     epochs: usize,
     seed: u64,
 ) -> Result<(tm::MultiClassTmModel, tm::CoTmModel)> {
+    train_pair_with(dataset, epochs, seed, TrainerEngine::default())
+}
+
+fn train_pair_with(
+    dataset: &data::Dataset,
+    epochs: usize,
+    seed: u64,
+    engine: TrainerEngine,
+) -> Result<(tm::MultiClassTmModel, tm::CoTmModel)> {
     let params = TmParams {
         features: dataset.num_features(),
         classes: dataset.classes,
         ..TmParams::iris_paper()
     };
     let (train, _) = dataset.split(0.8, 42);
-    let m = train_multiclass(params.clone(), &train, epochs, seed)?;
-    let cm = train_cotm(params, &train, epochs.max(100), seed + 1)?;
+    let m = train_multiclass_with(params.clone(), &train, epochs, seed, engine)?;
+    let cm = train_cotm_with(params, &train, epochs.max(100), seed + 1, engine)?;
     Ok((m, cm))
+}
+
+fn trainer_engine(args: &Args) -> Result<TrainerEngine> {
+    let name = args.flag_or("trainer", TrainerEngine::default().name());
+    TrainerEngine::parse(&name)
+        .ok_or_else(|| Error::config(format!("unknown --trainer {name:?} (packed|reference)")))
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
     let dataset = load_dataset(&args.flag_or("dataset", "iris"), 7)?;
     let epochs = args.flag_parse("epochs", 60usize)?;
     let seed = args.flag_parse("seed", 2u64)?;
+    let engine = trainer_engine(args)?;
     let out_dir = args.flag_or("out-dir", "models");
     std::fs::create_dir_all(&out_dir)?;
-    let (m, cm) = train_pair(&dataset, epochs, seed)?;
+    println!("trainer engine: {} (both engines are bit-identical per seed)", engine.name());
+    let (m, cm) = train_pair_with(&dataset, epochs, seed, engine)?;
     let (tr, te) = dataset.split(0.8, 42);
     println!(
         "multiclass: train acc {:.3}, test acc {:.3}",
@@ -366,6 +386,34 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
             "bitpar"
         };
         println!("{name:24} density {density:.3} -> {choice} (threshold {threshold})");
+    }
+    // Trainer-parity bar: the packed-evaluation trainer must reproduce
+    // the reference per-literal trainer bit-for-bit for the same seed
+    // (few epochs keep selfcheck fast; the full boundary-width sweep is
+    // tests/train_equivalence.rs).
+    let (ptrain, _) = dataset.split(0.8, 42);
+    let tparams = TmParams {
+        features: dataset.num_features(),
+        classes: dataset.classes,
+        ..TmParams::iris_paper()
+    };
+    let mc_parity = train_multiclass_with(tparams.clone(), &ptrain, 5, 17, TrainerEngine::Reference)?
+        == train_multiclass_with(tparams.clone(), &ptrain, 5, 17, TrainerEngine::Packed)?;
+    let co_parity = train_cotm_with(tparams.clone(), &ptrain, 5, 19, TrainerEngine::Reference)?
+        == train_cotm_with(tparams, &ptrain, 5, 19, TrainerEngine::Packed)?;
+    for (name, ok) in [
+        ("trainer-parity-multiclass", mc_parity),
+        ("trainer-parity-cotm", co_parity),
+    ] {
+        println!(
+            "{name:24} {}",
+            if ok { "bit-identical models" } else { "MODELS DIVERGED" }
+        );
+        if !ok {
+            failures.push(format!(
+                "{name}: packed trainer model != reference trainer model for the same seed"
+            ));
+        }
     }
     if !failures.is_empty() {
         return Err(Error::model(format!("selfcheck failed: {}", failures.join("; "))));

@@ -67,6 +67,22 @@ pub fn pack_literals(features: &[bool]) -> Vec<u64> {
     words
 }
 
+/// Evaluate raw include words against packed literals with
+/// **training-time semantics**: fires iff `include & !literals == 0`
+/// in every word, so an all-zero include mask (empty clause) is
+/// vacuously true and *fires*. This is deliberately the opposite of
+/// [`PackedClause::evaluate`]'s inference convention — during training
+/// an empty clause must fire to receive Type I feedback and grow. Used
+/// by the trainer engine's incrementally-maintained masks
+/// (`super::trainer_engine::ClauseState`).
+#[inline]
+pub fn eval_words_train(include: &[u64], literal_words: &[u64]) -> bool {
+    include
+        .iter()
+        .zip(literal_words)
+        .all(|(&inc, &lw)| inc & !lw == 0)
+}
+
 /// One clause's include mask, packed for both evaluation layouts.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PackedClause {
@@ -244,6 +260,28 @@ mod tests {
         assert_eq!(w.len(), 2);
         assert_eq!(w[0], 0x5555_5555_5555_5555);
         assert_eq!(w[1], 0b01, "only literal 64 (= x_32) set; padding zero");
+    }
+
+    #[test]
+    fn training_eval_fires_empty_clauses_unlike_inference() {
+        // The two conventions, side by side, on the same words: the
+        // inference path (PackedClause) returns 0 for an all-exclude
+        // clause; the training path (eval_words_train) fires it.
+        let lits = pack_literals(&[true, false, true]);
+        let empty = vec![0u64; lits.len()];
+        assert!(eval_words_train(&empty, &lits));
+        assert!(!PackedClause::from_mask(&mask(vec![false; 6])).evaluate(&lits));
+        // Non-empty masks agree with the inference predicate.
+        for inc_lit in 0..6usize {
+            let mut inc = vec![false; 6];
+            inc[inc_lit] = true;
+            let pc = PackedClause::from_mask(&mask(inc));
+            assert_eq!(
+                eval_words_train(&pc.include, &lits),
+                pc.evaluate(&lits),
+                "literal {inc_lit}"
+            );
+        }
     }
 
     #[test]

@@ -10,33 +10,49 @@
 //!
 //! Weights saturate at ±`max_weight` (the hardware's weight register
 //! width; the paper's binary multiplication matrix selects these).
+//!
+//! The Type I/II feedback core and the clause state (TA counters plus
+//! the incrementally-packed include mask) are shared with the
+//! multi-class trainer via [`super::trainer_engine`]; clause evaluation
+//! runs through either engine of [`TrainerEngine`], bit-identically per
+//! seed.
 
+use super::bitpack::pack_literals;
 use super::data::Dataset;
 use super::model::{make_literals, CoTmModel, TmParams};
+use super::trainer_engine::{type_i, type_ii, ClauseState, TrainerEngine};
 use crate::error::Result;
 use crate::util::SplitMix64;
 
 /// CoTM trainer: shared TA pool + weight matrix.
 pub struct CoTmTrainer {
     pub params: TmParams,
-    /// `[clause][literal]` TA states in `1..=2N` (shared pool).
-    states: Vec<Vec<u32>>,
+    pub engine: TrainerEngine,
+    /// Shared clause pool (TA counters + packed mask per clause).
+    states: Vec<ClauseState>,
     /// `[class][clause]` signed weights.
     weights: Vec<Vec<i32>>,
     rng: SplitMix64,
 }
 
 impl CoTmTrainer {
+    /// New trainer with the default (packed) evaluation engine.
     pub fn new(params: TmParams, seed: u64) -> Result<CoTmTrainer> {
+        Self::with_engine(params, seed, TrainerEngine::default())
+    }
+
+    /// New trainer with an explicit evaluation engine. Both engines
+    /// produce bit-identical models for the same seed.
+    pub fn with_engine(
+        params: TmParams,
+        seed: u64,
+        engine: TrainerEngine,
+    ) -> Result<CoTmTrainer> {
         params.validate()?;
         let mut rng = SplitMix64::new(seed);
         let n = params.ta_states;
         let states = (0..params.clauses)
-            .map(|_| {
-                (0..params.literals())
-                    .map(|_| if rng.next_bool() { n } else { n + 1 })
-                    .collect()
-            })
+            .map(|_| ClauseState::init(params.literals(), n, &mut rng))
             .collect();
         // Weights start at ±1 alternating per class to break symmetry.
         let weights = (0..params.classes)
@@ -46,19 +62,18 @@ impl CoTmTrainer {
                     .collect()
             })
             .collect();
-        Ok(CoTmTrainer { params, states, weights, rng })
+        Ok(CoTmTrainer { params, engine, states, weights, rng })
     }
 
-    fn clause_fires(states: &[u32], lits: &[bool], n: u32) -> bool {
-        states.iter().zip(lits).all(|(&st, &lit)| st <= n || lit)
+    /// The shared clause pool, for invariant tests.
+    pub fn clause_states(&self) -> &[ClauseState] {
+        &self.states
     }
 
-    fn clause_outputs(&self, lits: &[bool]) -> Vec<bool> {
+    /// Training-time clause outputs: empty clauses fire.
+    fn clause_outputs(&self, lits: &[bool], words: Option<&[u64]>) -> Vec<bool> {
         let n = self.params.ta_states;
-        self.states
-            .iter()
-            .map(|cl| Self::clause_fires(cl, lits, n))
-            .collect()
+        self.states.iter().map(|cl| cl.fires(lits, words, n)).collect()
     }
 
     fn class_sum(&self, class: usize, outputs: &[bool]) -> i32 {
@@ -69,42 +84,23 @@ impl CoTmTrainer {
             .sum()
     }
 
-    fn type_i(&mut self, clause: usize, lits: &[bool], fired: bool) {
-        let n = self.params.ta_states;
-        let s = self.params.specificity;
-        let p_forget = 1.0 / s;
-        let p_reinforce = (s - 1.0) / s;
-        for (l, &lit) in lits.iter().enumerate() {
-            let st = self.states[clause][l];
-            if fired && lit {
-                if self.rng.chance(p_reinforce) && st < 2 * n {
-                    self.states[clause][l] = st + 1;
-                }
-            } else if self.rng.chance(p_forget) && st > 1 {
-                self.states[clause][l] = st - 1;
-            }
-        }
-    }
-
-    fn type_ii(&mut self, clause: usize, lits: &[bool]) {
-        let n = self.params.ta_states;
-        for (l, &lit) in lits.iter().enumerate() {
-            let st = self.states[clause][l];
-            if !lit && st <= n {
-                self.states[clause][l] = st + 1;
-            }
-        }
-    }
-
-    fn update_class(&mut self, class: usize, lits: &[bool], positive: bool) {
+    fn update_class(
+        &mut self,
+        class: usize,
+        lits: &[bool],
+        words: Option<&[u64]>,
+        positive: bool,
+    ) {
         let t = self.params.threshold;
-        let outputs = self.clause_outputs(lits);
+        let outputs = self.clause_outputs(lits, words);
         let sum = self.class_sum(class, &outputs).clamp(-t, t);
         let p_update = if positive {
             (t - sum) as f64 / (2 * t) as f64
         } else {
             (t + sum) as f64 / (2 * t) as f64
         };
+        let n = self.params.ta_states;
+        let s = self.params.specificity;
         let wmax = self.params.max_weight;
         for j in 0..self.params.clauses {
             if !self.rng.chance(p_update) {
@@ -118,29 +114,29 @@ impl CoTmTrainer {
                     self.weights[class][j] = (w + 1).min(wmax);
                     if w >= 0 {
                         // Supporting clause recognised correctly: Type Ia.
-                        self.type_i(j, lits, true);
+                        type_i(&mut self.states[j], lits, true, n, s, &mut self.rng);
                     } else {
                         // Opposing clause fired wrongly: Type II blocks it.
-                        self.type_ii(j, lits);
+                        type_ii(&mut self.states[j], lits, n);
                     }
                 } else if w >= 0 {
                     // Supporting clause stayed silent: Type Ib forget.
-                    self.type_i(j, lits, false);
+                    type_i(&mut self.states[j], lits, false, n, s, &mut self.rng);
                 }
             } else if fired {
                 // Clause fired on a sample NOT of this class.
                 self.weights[class][j] = (w - 1).max(-wmax);
                 if w > 0 {
                     // Supporting clause fired wrongly: Type II blocks it.
-                    self.type_ii(j, lits);
+                    type_ii(&mut self.states[j], lits, n);
                 } else {
                     // Opposing clause recognised correctly: Type Ia
                     // (reinforce the opposition pattern).
-                    self.type_i(j, lits, true);
+                    type_i(&mut self.states[j], lits, true, n, s, &mut self.rng);
                 }
             } else if w < 0 {
                 // Opposing clause silent on a negative sample: forget.
-                self.type_i(j, lits, false);
+                type_i(&mut self.states[j], lits, false, n, s, &mut self.rng);
             }
         }
     }
@@ -150,14 +146,18 @@ impl CoTmTrainer {
         self.rng.shuffle(&mut order);
         for i in order {
             let lits = make_literals(&data.features[i]);
+            let words = match self.engine {
+                TrainerEngine::Packed => Some(pack_literals(&data.features[i])),
+                TrainerEngine::Reference => None,
+            };
             let y = data.labels[i];
-            self.update_class(y, &lits, true);
+            self.update_class(y, &lits, words.as_deref(), true);
             if self.params.classes > 1 {
                 let mut neg = self.rng.index(self.params.classes - 1);
                 if neg >= y {
                     neg += 1;
                 }
-                self.update_class(neg, &lits, false);
+                self.update_class(neg, &lits, words.as_deref(), false);
             }
         }
     }
@@ -173,16 +173,32 @@ impl CoTmTrainer {
         let n = self.params.ta_states;
         let mut model = CoTmModel::zeroed(self.params.clone());
         for (j, cl) in self.states.iter().enumerate() {
-            for (l, &st) in cl.iter().enumerate() {
-                model.clauses[j].include[l] = st > n;
-            }
+            model.clauses[j] = cl.include_mask(n);
         }
         model.weights = self.weights.clone();
         model
     }
+
+    /// Trainer invariants: every TA in `1..=2N`, every incremental
+    /// include mask coherent, every weight within ±`max_weight`.
+    pub fn check_invariants(&self) -> Result<()> {
+        let n = self.params.ta_states;
+        for cl in &self.states {
+            cl.check(n)?;
+        }
+        if self
+            .weights
+            .iter()
+            .flatten()
+            .any(|w| w.abs() > self.params.max_weight)
+        {
+            return Err(crate::Error::model("weight outside ±max_weight"));
+        }
+        Ok(())
+    }
 }
 
-/// Convenience: train a CoTM on a dataset.
+/// Convenience: train a CoTM on a dataset (packed engine).
 pub fn train_cotm(
     params: TmParams,
     data: &Dataset,
@@ -190,6 +206,18 @@ pub fn train_cotm(
     seed: u64,
 ) -> Result<CoTmModel> {
     let mut tr = CoTmTrainer::new(params, seed)?;
+    Ok(tr.train(data, epochs))
+}
+
+/// Train with an explicit evaluation engine.
+pub fn train_cotm_with(
+    params: TmParams,
+    data: &Dataset,
+    epochs: usize,
+    seed: u64,
+    engine: TrainerEngine,
+) -> Result<CoTmModel> {
+    let mut tr = CoTmTrainer::with_engine(params, seed, engine)?;
     Ok(tr.train(data, epochs))
 }
 
@@ -261,5 +289,43 @@ mod tests {
         let a = train_cotm(p.clone(), &d, 10, 17).unwrap();
         let b = train_cotm(p, &d, 10, 17).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn packed_and_reference_trainers_bit_identical() {
+        let d = data::prototype_blobs(150, 9, 3, 0.1, 23);
+        let p = TmParams {
+            features: 9,
+            clauses: 7, // odd clause counts are legal for CoTM
+            classes: 3,
+            ta_states: 32,
+            threshold: 4,
+            specificity: 3.0,
+            max_weight: 5,
+        };
+        let a = train_cotm_with(p.clone(), &d, 6, 31, TrainerEngine::Reference).unwrap();
+        let b = train_cotm_with(p, &d, 6, 31, TrainerEngine::Packed).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn invariants_hold_across_epochs() {
+        let d = data::prototype_blobs(120, 8, 3, 0.1, 3);
+        let p = TmParams {
+            features: 8,
+            clauses: 8,
+            classes: 3,
+            ta_states: 16,
+            threshold: 4,
+            specificity: 2.5,
+            max_weight: 4,
+        };
+        for engine in [TrainerEngine::Reference, TrainerEngine::Packed] {
+            let mut tr = CoTmTrainer::with_engine(p.clone(), 4, engine).unwrap();
+            for _ in 0..8 {
+                tr.epoch(&d);
+                tr.check_invariants().expect("invariants after epoch");
+            }
+        }
     }
 }

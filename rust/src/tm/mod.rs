@@ -1,8 +1,10 @@
 //! Tsetlin Machine substrate: model structures, software inference,
 //! bit-parallel production inference ([`bitpack`] + [`fast_infer`]),
 //! event-driven inverted-index inference for sparse models ([`index`]),
-//! training (multi-class TM and Coalesced TM), feature booleanisation,
-//! datasets, and model (de)serialisation.
+//! training (multi-class TM and Coalesced TM, both with a shared
+//! feedback core and packed-evaluation or reference clause engines via
+//! [`trainer_engine`]), feature booleanisation, datasets, and model
+//! (de)serialisation.
 //!
 //! This is the ML-algorithm layer the paper's hardware implements. The
 //! software inference here is the L3-local golden reference (checked
@@ -20,6 +22,7 @@ pub mod iris_data;
 pub mod model;
 pub mod serde;
 pub mod train;
+pub mod trainer_engine;
 
 pub use bitpack::{BitSlicedBatch, PackedClause};
 pub use booleanize::Booleanizer;
@@ -28,3 +31,4 @@ pub use fast_infer::{BatchEngine, BitParallelCotm, BitParallelMulticlass};
 pub use index::{IndexedCotm, IndexedMulticlass, InvertedIndex};
 pub use infer::{cotm_class_sums, multiclass_class_sums, predict_argmax};
 pub use model::{ClauseMask, CoTmModel, MultiClassTmModel, TmParams};
+pub use trainer_engine::{ClauseState, TrainerEngine};

@@ -2,7 +2,8 @@
 //!
 //! The paper deploys *pre-trained* models in hardware; this module is the
 //! substrate that produces them. Standard two-action Tsetlin automata
-//! with Type I / Type II feedback:
+//! with Type I / Type II feedback (the feedback core itself lives in
+//! [`super::trainer_engine`], shared with the CoTM trainer):
 //!
 //! * each (clause, literal) pair has a TA with states `1..=2N`
 //!   (`> N` = include the literal);
@@ -18,25 +19,41 @@
 //! During *training*, an empty clause evaluates to 1 (it must fire to
 //! receive Type I feedback and grow); during *inference* it outputs 0 —
 //! both conventions are standard and mirrored in the Python oracle.
+//!
+//! Clause evaluation — the training hot path — runs through either the
+//! per-literal reference walk or the packed-word evaluator
+//! ([`TrainerEngine`]); the two are bit-identical per seed (see
+//! `trainer_engine.rs` and `tests/train_equivalence.rs`).
 
+use super::bitpack::pack_literals;
 use super::data::Dataset;
 use super::model::{make_literals, MultiClassTmModel, TmParams};
+use super::trainer_engine::{type_i, type_ii, ClauseState, TrainerEngine};
 use crate::error::Result;
 use crate::util::SplitMix64;
-
-/// TA state array for one automaton team (one class): `[clause][literal]`.
-type TaStates = Vec<Vec<u32>>;
 
 /// Trainer holding TA state alongside the exported model.
 pub struct MultiClassTrainer {
     pub params: TmParams,
-    /// `[class][clause][literal]` TA states in `1..=2N`.
-    states: Vec<TaStates>,
+    pub engine: TrainerEngine,
+    /// `[class][clause]` clause states (TA counters + packed mask).
+    states: Vec<Vec<ClauseState>>,
     rng: SplitMix64,
 }
 
 impl MultiClassTrainer {
+    /// New trainer with the default (packed) evaluation engine.
     pub fn new(params: TmParams, seed: u64) -> Result<MultiClassTrainer> {
+        Self::with_engine(params, seed, TrainerEngine::default())
+    }
+
+    /// New trainer with an explicit evaluation engine. Both engines
+    /// produce bit-identical models for the same seed.
+    pub fn with_engine(
+        params: TmParams,
+        seed: u64,
+        engine: TrainerEngine,
+    ) -> Result<MultiClassTrainer> {
         params.validate()?;
         if params.clauses % 2 != 0 {
             return Err(crate::Error::model(
@@ -45,36 +62,31 @@ impl MultiClassTrainer {
         }
         let mut rng = SplitMix64::new(seed);
         let n = params.ta_states;
-        // Initialise each TA uniformly to N or N+1 (the decision boundary).
+        // Initialise each TA uniformly to N or N+1 (the decision
+        // boundary) — one next_bool per literal, in class/clause order.
         let states = (0..params.classes)
             .map(|_| {
                 (0..params.clauses)
-                    .map(|_| {
-                        (0..params.literals())
-                            .map(|_| if rng.next_bool() { n } else { n + 1 })
-                            .collect()
-                    })
+                    .map(|_| ClauseState::init(params.literals(), n, &mut rng))
                     .collect()
             })
             .collect();
-        Ok(MultiClassTrainer { params, states, rng })
+        Ok(MultiClassTrainer { params, engine, states, rng })
     }
 
-    /// Training-time clause evaluation: empty clauses fire.
-    fn clause_fires(states: &[u32], lits: &[bool], n: u32) -> bool {
-        states
-            .iter()
-            .zip(lits)
-            .all(|(&st, &lit)| st <= n || lit)
+    /// The clause states (`[class][clause]`), for invariant tests.
+    pub fn clause_states(&self) -> &[Vec<ClauseState>] {
+        &self.states
     }
 
-    fn class_sum(&self, class: usize, lits: &[bool]) -> i32 {
+    /// Training-time class sum: empty clauses fire (see module docs).
+    fn class_sum(&self, class: usize, lits: &[bool], words: Option<&[u64]>) -> i32 {
         let n = self.params.ta_states;
         self.states[class]
             .iter()
             .enumerate()
             .map(|(j, cl)| {
-                let out = Self::clause_fires(cl, lits, n) as i32;
+                let out = cl.fires(lits, words, n) as i32;
                 if j % 2 == 0 {
                     out
                 } else {
@@ -84,61 +96,35 @@ impl MultiClassTrainer {
             .sum()
     }
 
-    /// Type I feedback to one clause.
-    fn type_i(&mut self, class: usize, clause: usize, lits: &[bool], fired: bool) {
-        let n = self.params.ta_states;
-        let s = self.params.specificity;
-        let p_forget = 1.0 / s;
-        let p_reinforce = (s - 1.0) / s;
-        for (l, &lit) in lits.iter().enumerate() {
-            let st = self.states[class][clause][l];
-            if fired && lit {
-                // Reinforce inclusion of true literals.
-                if self.rng.chance(p_reinforce) && st < 2 * n {
-                    self.states[class][clause][l] = st + 1;
-                }
-            } else {
-                // Forget: silent clause, or false literal in firing clause.
-                if self.rng.chance(p_forget) && st > 1 {
-                    self.states[class][clause][l] = st - 1;
-                }
-            }
-        }
-    }
-
-    /// Type II feedback to one firing clause: include 0-literals.
-    fn type_ii(&mut self, class: usize, clause: usize, lits: &[bool]) {
-        let n = self.params.ta_states;
-        for (l, &lit) in lits.iter().enumerate() {
-            let st = self.states[class][clause][l];
-            if !lit && st <= n {
-                self.states[class][clause][l] = st + 1;
-            }
-        }
-    }
-
     /// One positive/negative update for `class` on a sample.
-    fn update_class(&mut self, class: usize, lits: &[bool], positive: bool) {
+    fn update_class(
+        &mut self,
+        class: usize,
+        lits: &[bool],
+        words: Option<&[u64]>,
+        positive: bool,
+    ) {
         let t = self.params.threshold;
-        let sum = self.class_sum(class, lits).clamp(-t, t);
+        let sum = self.class_sum(class, lits, words).clamp(-t, t);
         let p_update = if positive {
             (t - sum) as f64 / (2 * t) as f64
         } else {
             (t + sum) as f64 / (2 * t) as f64
         };
         let n = self.params.ta_states;
+        let s = self.params.specificity;
         for j in 0..self.params.clauses {
             if !self.rng.chance(p_update) {
                 continue;
             }
-            let fired = Self::clause_fires(&self.states[class][j], lits, n);
+            let fired = self.states[class][j].fires(lits, words, n);
             let positive_clause = j % 2 == 0;
             // Positive update: + clauses learn (Type I), − clauses reject
             // (Type II on firing). Negative update: roles swap.
             if positive == positive_clause {
-                self.type_i(class, j, lits, fired);
+                type_i(&mut self.states[class][j], lits, fired, n, s, &mut self.rng);
             } else if fired {
-                self.type_ii(class, j, lits);
+                type_ii(&mut self.states[class][j], lits, n);
             }
         }
     }
@@ -149,15 +135,21 @@ impl MultiClassTrainer {
         self.rng.shuffle(&mut order);
         for i in order {
             let lits = make_literals(&data.features[i]);
+            // Pack the sample's literals once per sample; every clause
+            // evaluation below reuses the words.
+            let words = match self.engine {
+                TrainerEngine::Packed => Some(pack_literals(&data.features[i])),
+                TrainerEngine::Reference => None,
+            };
             let y = data.labels[i];
-            self.update_class(y, &lits, true);
+            self.update_class(y, &lits, words.as_deref(), true);
             // Sample one negative class uniformly.
             if self.params.classes > 1 {
                 let mut neg = self.rng.index(self.params.classes - 1);
                 if neg >= y {
                     neg += 1;
                 }
-                self.update_class(neg, &lits, false);
+                self.update_class(neg, &lits, words.as_deref(), false);
             }
         }
     }
@@ -176,16 +168,26 @@ impl MultiClassTrainer {
         let mut model = MultiClassTmModel::zeroed(self.params.clone());
         for (ci, class) in self.states.iter().enumerate() {
             for (j, cl) in class.iter().enumerate() {
-                for (l, &st) in cl.iter().enumerate() {
-                    model.clauses[ci][j].include[l] = st > n;
-                }
+                model.clauses[ci][j] = cl.include_mask(n);
             }
         }
         model
     }
+
+    /// Trainer invariants: every TA in `1..=2N`, every incremental
+    /// include mask coherent with its TA states.
+    pub fn check_invariants(&self) -> Result<()> {
+        let n = self.params.ta_states;
+        for class in &self.states {
+            for cl in class {
+                cl.check(n)?;
+            }
+        }
+        Ok(())
+    }
 }
 
-/// Convenience: train a multi-class TM on a dataset.
+/// Convenience: train a multi-class TM on a dataset (packed engine).
 pub fn train_multiclass(
     params: TmParams,
     data: &Dataset,
@@ -193,6 +195,18 @@ pub fn train_multiclass(
     seed: u64,
 ) -> Result<MultiClassTmModel> {
     let mut tr = MultiClassTrainer::new(params, seed)?;
+    Ok(tr.train(data, epochs))
+}
+
+/// Train with an explicit evaluation engine.
+pub fn train_multiclass_with(
+    params: TmParams,
+    data: &Dataset,
+    epochs: usize,
+    seed: u64,
+    engine: TrainerEngine,
+) -> Result<MultiClassTmModel> {
+    let mut tr = MultiClassTrainer::with_engine(params, seed, engine)?;
     Ok(tr.train(data, epochs))
 }
 
@@ -247,7 +261,26 @@ mod tests {
     }
 
     #[test]
-    fn states_stay_in_bounds() {
+    fn packed_and_reference_trainers_bit_identical() {
+        // The module-level contract, at unit scope (the full
+        // boundary-width sweep lives in tests/train_equivalence.rs).
+        let d = data::xor_noise(120, 6, 0.05, 13);
+        let p = TmParams {
+            features: 6,
+            clauses: 8,
+            classes: 2,
+            ta_states: 32,
+            threshold: 4,
+            specificity: 3.0,
+            max_weight: 7,
+        };
+        let a = train_multiclass_with(p.clone(), &d, 6, 21, TrainerEngine::Reference).unwrap();
+        let b = train_multiclass_with(p, &d, 6, 21, TrainerEngine::Packed).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn states_stay_in_bounds_and_masks_coherent() {
         let d = data::prototype_blobs(120, 8, 3, 0.1, 3);
         let p = TmParams {
             features: 8,
@@ -258,14 +291,17 @@ mod tests {
             specificity: 2.5,
             max_weight: 7,
         };
-        let mut tr = MultiClassTrainer::new(p, 4).unwrap();
-        for _ in 0..10 {
-            tr.epoch(&d);
-        }
-        for class in &tr.states {
-            for clause in class {
-                for &st in clause {
-                    assert!((1..=32).contains(&st));
+        for engine in [TrainerEngine::Reference, TrainerEngine::Packed] {
+            let mut tr = MultiClassTrainer::with_engine(p.clone(), 4, engine).unwrap();
+            for _ in 0..10 {
+                tr.epoch(&d);
+                tr.check_invariants().expect("invariants after epoch");
+            }
+            for class in tr.clause_states() {
+                for clause in class {
+                    for &st in clause.states() {
+                        assert!((1..=32).contains(&st));
+                    }
                 }
             }
         }

@@ -1,0 +1,495 @@
+//! Shared training engine: the Type I / Type II feedback core and the
+//! packed-evaluation clause state used by both trainers
+//! ([`super::train::MultiClassTrainer`] and
+//! [`super::cotm_train::CoTmTrainer`]).
+//!
+//! Before this module the two trainers duplicated the feedback math and
+//! evaluated clauses by walking per-literal `Vec<u32>` TA state —
+//! O(2F) per clause per evaluation — while inference got packed-`u64`
+//! (`bitpack`/`fast_infer`) and inverted-index (`index`) engines. Here
+//! the TA counters stay per-literal in `1..=2N` (feedback semantics
+//! untouched), but each clause *additionally* maintains a packed
+//! include mask ([`ClauseState::include_words`]), updated incrementally
+//! and only when a TA crosses the N/N+1 include boundary. Clause firing
+//! and class sums then go through the packed evaluator — 64 literals
+//! per word — which is where training spends most of its time (the
+//! massively-parallel TM architecture of arXiv 2009.04861 measures
+//! clause evaluation dominating training cost; arXiv 2004.03188 applies
+//! the same observation to learning).
+//!
+//! # The bit-identity contract
+//!
+//! [`TrainerEngine::Packed`] changes only *how* clause firing is
+//! computed, never *what* fires and never the RNG consumption order, so
+//! a packed trainer must produce a model **bit-identical** to the
+//! reference trainer for the same seed:
+//!
+//! * packed evaluation is exact — `include & !literals == 0` per word
+//!   is the same predicate as the per-literal walk (tail padding is
+//!   zero on both sides);
+//! * **training-time empty-clause semantics**: an all-exclude clause
+//!   has all-zero include words, the word-AND reduction is vacuously
+//!   true, and the clause *fires* — matching the reference trainer's
+//!   convention (an empty clause must fire to receive Type I feedback
+//!   and grow) and deliberately opposite to the inference convention of
+//!   [`super::bitpack::PackedClause::evaluate`];
+//! * evaluation consumes no randomness, so the Bernoulli/shuffle stream
+//!   is byte-for-byte the stream the reference path consumes.
+//!
+//! Enforced by `tests/train_equivalence.rs`, the `tmtd selfcheck`
+//! trainer-parity bar, and the Python mirror (`python/packedtrain.py`,
+//! validated on toolchain-less CI). The golden vectors in the tests
+//! below are asserted *identically* in
+//! `python/tests/test_packedtrain.py` — if either language's trainer
+//! drifts, both suites fail.
+
+use super::bitpack::{eval_words_train, pack_bools, WORD_BITS};
+use super::model::ClauseMask;
+use crate::error::{Error, Result};
+use crate::util::SplitMix64;
+
+/// Which clause evaluator a trainer uses. Both produce bit-identical
+/// models for the same seed; `Packed` is the production default.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TrainerEngine {
+    /// Walk per-literal TA state (`st <= N || lit`) — the original
+    /// trainer hot path, kept as the conformance reference.
+    Reference,
+    /// Evaluate through the incrementally-maintained packed include
+    /// words — 64 literals per instruction.
+    #[default]
+    Packed,
+}
+
+impl TrainerEngine {
+    /// Parse a CLI name (`--trainer packed|reference`).
+    pub fn parse(name: &str) -> Option<TrainerEngine> {
+        match name {
+            "reference" | "ref" => Some(TrainerEngine::Reference),
+            "packed" => Some(TrainerEngine::Packed),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrainerEngine::Reference => "reference",
+            TrainerEngine::Packed => "packed",
+        }
+    }
+}
+
+/// One clause's training state: per-literal TA counters in `1..=2N`
+/// plus the incrementally-updated packed include mask (`state > N` =
+/// include). All TA writes go through [`ClauseState::set_ta`] so the
+/// mask can never drift from the counters (checked by
+/// [`ClauseState::coherent`] in the invariant tests).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClauseState {
+    /// TA states, one per literal, each in `1..=2N`.
+    states: Vec<u32>,
+    /// Packed include mask over the literals (bit `l` of word `l/64`).
+    include_words: Vec<u64>,
+    /// Number of included literals (kept for density/debug reporting).
+    included: usize,
+}
+
+impl ClauseState {
+    /// Initialise each TA uniformly to N or N+1 (the decision
+    /// boundary), consuming one `next_bool` per literal — the exact
+    /// draw order of the original trainers.
+    pub fn init(literals: usize, n: u32, rng: &mut SplitMix64) -> ClauseState {
+        let states = (0..literals)
+            .map(|_| if rng.next_bool() { n } else { n + 1 })
+            .collect();
+        ClauseState::from_states(states, n)
+    }
+
+    /// Build from explicit TA states (used by tests and fuzzing).
+    pub fn from_states(states: Vec<u32>, n: u32) -> ClauseState {
+        let include: Vec<bool> = states.iter().map(|&st| st > n).collect();
+        let included = include.iter().filter(|&&b| b).count();
+        ClauseState { include_words: pack_bools(&include), included, states }
+    }
+
+    /// The per-literal TA states.
+    pub fn states(&self) -> &[u32] {
+        &self.states
+    }
+
+    /// One TA state.
+    #[inline]
+    pub fn ta(&self, l: usize) -> u32 {
+        self.states[l]
+    }
+
+    /// The incrementally-maintained packed include words.
+    pub fn include_words(&self) -> &[u64] {
+        &self.include_words
+    }
+
+    /// Number of included literals.
+    pub fn included_count(&self) -> usize {
+        self.included
+    }
+
+    /// Write a TA state, updating the packed mask only when the N/N+1
+    /// include boundary is crossed (the common case — a reinforce or
+    /// forget step away from the boundary — touches no word).
+    #[inline]
+    pub fn set_ta(&mut self, l: usize, st: u32, n: u32) {
+        let was = self.states[l] > n;
+        let now = st > n;
+        self.states[l] = st;
+        if was != now {
+            let (w, bit) = (l / WORD_BITS, 1u64 << (l % WORD_BITS));
+            if now {
+                self.include_words[w] |= bit;
+                self.included += 1;
+            } else {
+                self.include_words[w] &= !bit;
+                self.included -= 1;
+            }
+        }
+    }
+
+    /// Training-time packed evaluation: fires iff
+    /// `include & !literals == 0` in every word. An empty clause has
+    /// all-zero words, so the reduction is vacuously true and it
+    /// *fires* — the training convention, not the inference one.
+    #[inline]
+    pub fn fires_packed(&self, literal_words: &[u64]) -> bool {
+        eval_words_train(&self.include_words, literal_words)
+    }
+
+    /// Training-time per-literal evaluation (the reference path).
+    #[inline]
+    pub fn fires_reference(&self, lits: &[bool], n: u32) -> bool {
+        self.states.iter().zip(lits).all(|(&st, &lit)| st <= n || lit)
+    }
+
+    /// Engine dispatch: packed words when the trainer packed them for
+    /// this sample, the per-literal walk otherwise.
+    #[inline]
+    pub fn fires(&self, lits: &[bool], literal_words: Option<&[u64]>, n: u32) -> bool {
+        match literal_words {
+            Some(words) => self.fires_packed(words),
+            None => self.fires_reference(lits, n),
+        }
+    }
+
+    /// The include mask recomputed from scratch — what the incremental
+    /// words must always equal.
+    pub fn recomputed_words(&self, n: u32) -> Vec<u64> {
+        pack_bools(&self.states.iter().map(|&st| st > n).collect::<Vec<bool>>())
+    }
+
+    /// Coherence invariant: incremental words and count match a
+    /// from-scratch recompute.
+    pub fn coherent(&self, n: u32) -> bool {
+        self.include_words == self.recomputed_words(n)
+            && self.included == self.states.iter().filter(|&&st| st > n).count()
+    }
+
+    /// Export the include mask (`state > N`) for the inference model.
+    pub fn include_mask(&self, n: u32) -> ClauseMask {
+        ClauseMask { include: self.states.iter().map(|&st| st > n).collect() }
+    }
+
+    /// Bounds + coherence check, used by the trainers' `check_invariants`.
+    pub fn check(&self, n: u32) -> Result<()> {
+        if let Some(&bad) = self.states.iter().find(|&&st| st < 1 || st > 2 * n) {
+            return Err(Error::model(format!("TA state {bad} outside 1..={}", 2 * n)));
+        }
+        if !self.coherent(n) {
+            return Err(Error::model(
+                "incremental include mask diverged from TA states",
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Type I feedback (recognise) to one clause. Consumes exactly one
+/// Bernoulli draw per literal, in literal order — the stream contract
+/// both trainers and both engines share: on a firing clause, true
+/// literals are reinforced with probability `(s-1)/s`; everything else
+/// (silent clause, or false literal in a firing clause) is forgotten
+/// with probability `1/s`.
+pub fn type_i(
+    clause: &mut ClauseState,
+    lits: &[bool],
+    fired: bool,
+    n: u32,
+    s: f64,
+    rng: &mut SplitMix64,
+) {
+    let p_forget = 1.0 / s;
+    let p_reinforce = (s - 1.0) / s;
+    for (l, &lit) in lits.iter().enumerate() {
+        let st = clause.ta(l);
+        if fired && lit {
+            if rng.chance(p_reinforce) && st < 2 * n {
+                clause.set_ta(l, st + 1, n);
+            }
+        } else if rng.chance(p_forget) && st > 1 {
+            clause.set_ta(l, st - 1, n);
+        }
+    }
+}
+
+/// Type II feedback (reject) to one firing clause: include literals
+/// that are 0 in the sample, driving the clause towards not firing.
+/// Consumes no randomness.
+pub fn type_ii(clause: &mut ClauseState, lits: &[bool], n: u32) {
+    for (l, &lit) in lits.iter().enumerate() {
+        let st = clause.ta(l);
+        if !lit && st <= n {
+            clause.set_ta(l, st + 1, n);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::bitpack::pack_literals;
+    use crate::tm::cotm_train::train_cotm_with;
+    use crate::tm::data::Dataset;
+    use crate::tm::model::{make_literals, TmParams};
+    use crate::tm::train::train_multiclass_with;
+    use crate::testutil::prop;
+
+    // -----------------------------------------------------------------
+    // Cross-language golden vectors, asserted identically in
+    // python/tests/test_packedtrain.py. The Python mirror generated
+    // them; if either side's algorithm drifts, both suites fail.
+    // -----------------------------------------------------------------
+
+    /// Closed-form dataset shared verbatim with the Python tests.
+    fn synth(f: usize, n_samples: usize, classes: usize) -> Dataset {
+        let features = (0..n_samples)
+            .map(|s| (0..f).map(|i| (i * i + 3 * i * s + 2 * s) % 7 < 3).collect())
+            .collect();
+        let labels = (0..n_samples).map(|s| s % classes).collect();
+        Dataset { features, labels, classes, name: "synth".into() }
+    }
+
+    fn mask_bits(m: &ClauseMask) -> String {
+        m.include.iter().map(|&b| if b { '1' } else { '0' }).collect()
+    }
+
+    #[test]
+    fn splitmix_stream_matches_python_mirror() {
+        // Pins the RNG mirror: python/packedtrain.py::SplitMix64 must
+        // produce exactly this stream (test_splitmix_stream_goldens).
+        let mut r = SplitMix64::new(42);
+        assert_eq!(
+            [r.next_u64(), r.next_u64(), r.next_u64(), r.next_u64()],
+            [
+                0xBDD7_3226_2FEB_6E95,
+                0x28EF_E333_B266_F103,
+                0x4752_6757_130F_9F52,
+                0x581C_E1FF_0E4A_E394,
+            ]
+        );
+        let mut r = SplitMix64::new(7);
+        let chances: String = (0..32)
+            .map(|_| if r.chance(1.0 / 3.0) { '1' } else { '0' })
+            .collect();
+        assert_eq!(chances, "01000101101000000100010000100001");
+        let mut r = SplitMix64::new(9);
+        let idx: Vec<usize> = (0..12).map(|_| r.index(5)).collect();
+        assert_eq!(idx, vec![3, 3, 1, 3, 1, 0, 3, 4, 1, 3, 2, 1]);
+        let mut xs: Vec<u32> = (0..8).collect();
+        SplitMix64::new(3).shuffle(&mut xs);
+        assert_eq!(xs, vec![2, 5, 1, 6, 7, 3, 4, 0]);
+    }
+
+    #[test]
+    fn multiclass_trained_golden_model_matches_python_mirror() {
+        // F=5 C=4 K=2 N=8 T=3 s=3.0, 12 samples, 3 epochs, seed 42.
+        let golden = [
+            ["0000000001", "0001000001", "0000100001", "0000000001"], // class 0
+            ["0010000000", "0000000001", "1010000001", "1000000100"], // class 1
+        ];
+        let d = synth(5, 12, 2);
+        let p = TmParams {
+            features: 5,
+            clauses: 4,
+            classes: 2,
+            ta_states: 8,
+            threshold: 3,
+            specificity: 3.0,
+            max_weight: 7,
+        };
+        for engine in [TrainerEngine::Reference, TrainerEngine::Packed] {
+            let m = train_multiclass_with(p.clone(), &d, 3, 42, engine).unwrap();
+            for (k, class) in m.clauses.iter().enumerate() {
+                for (j, cl) in class.iter().enumerate() {
+                    assert_eq!(
+                        mask_bits(cl),
+                        golden[k][j],
+                        "{} class {k} clause {j}",
+                        engine.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cotm_trained_golden_model_matches_python_mirror() {
+        // F=5 C=5 K=3 N=8 T=3 s=3.0 wmax=3, 12 samples, 3 epochs, seed 43.
+        let golden_masks = [
+            "0000000110",
+            "1010011000",
+            "0000000001",
+            "1010001010",
+            "0100010010",
+        ];
+        let golden_weights = vec![
+            vec![-1, 1, 0, -1, 0],
+            vec![-1, 2, 0, 2, -2],
+            vec![0, -3, 0, 0, 1],
+        ];
+        let d = synth(5, 12, 3);
+        let p = TmParams {
+            features: 5,
+            clauses: 5,
+            classes: 3,
+            ta_states: 8,
+            threshold: 3,
+            specificity: 3.0,
+            max_weight: 3,
+        };
+        for engine in [TrainerEngine::Reference, TrainerEngine::Packed] {
+            let m = train_cotm_with(p.clone(), &d, 3, 43, engine).unwrap();
+            for (j, cl) in m.clauses.iter().enumerate() {
+                assert_eq!(mask_bits(cl), golden_masks[j], "{} clause {j}", engine.name());
+            }
+            assert_eq!(m.weights, golden_weights, "{}", engine.name());
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // ClauseState unit + fuzz level.
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn engine_parse_names() {
+        assert_eq!(TrainerEngine::parse("packed"), Some(TrainerEngine::Packed));
+        assert_eq!(TrainerEngine::parse("reference"), Some(TrainerEngine::Reference));
+        assert_eq!(TrainerEngine::parse("ref"), Some(TrainerEngine::Reference));
+        assert_eq!(TrainerEngine::parse("golden"), None);
+        assert_eq!(TrainerEngine::default(), TrainerEngine::Packed);
+        assert_eq!(TrainerEngine::Packed.name(), "packed");
+    }
+
+    #[test]
+    fn empty_clause_fires_at_training_time() {
+        // The convention that must NOT match inference: all-exclude
+        // fires here (it needs Type I feedback to grow), while
+        // bitpack::PackedClause::evaluate returns false.
+        let n = 8;
+        let cs = ClauseState::from_states(vec![n; 10], n);
+        assert_eq!(cs.included_count(), 0);
+        let x = [true, false, true, false, true];
+        assert!(cs.fires_packed(&pack_literals(&x)));
+        assert!(cs.fires_reference(&make_literals(&x), n));
+    }
+
+    #[test]
+    fn set_ta_crossing_updates_words_and_count() {
+        let n = 4;
+        let mut cs = ClauseState::from_states(vec![n; 70], n);
+        assert_eq!(cs.include_words().len(), 2);
+        // Cross up at a word-boundary literal (64) and a low one (3).
+        cs.set_ta(64, n + 1, n);
+        cs.set_ta(3, n + 1, n);
+        assert_eq!(cs.included_count(), 2);
+        assert_eq!(cs.include_words()[0], 1 << 3);
+        assert_eq!(cs.include_words()[1], 1 << 0);
+        // Moving within a side of the boundary touches nothing.
+        cs.set_ta(64, n + 2, n);
+        cs.set_ta(5, n - 1, n);
+        assert_eq!(cs.included_count(), 2);
+        // Cross back down.
+        cs.set_ta(64, n, n);
+        assert_eq!(cs.included_count(), 1);
+        assert_eq!(cs.include_words()[1], 0);
+        assert!(cs.coherent(n));
+    }
+
+    #[test]
+    fn incremental_mask_matches_recompute_under_random_walks() {
+        prop("clause-state mask coherence", 60, |g| {
+            let lits = g.usize(1..140);
+            let n = g.u64(1..64) as u32;
+            let states: Vec<u32> =
+                (0..lits).map(|_| g.u64(1..2 * n as u64 + 1) as u32).collect();
+            let mut cs = ClauseState::from_states(states, n);
+            assert!(cs.coherent(n));
+            for _ in 0..200 {
+                let l = g.usize(0..lits);
+                let st = g.u64(1..2 * n as u64 + 1) as u32;
+                cs.set_ta(l, st, n);
+            }
+            assert!(cs.coherent(n));
+            assert!(cs.check(n).is_ok());
+        });
+    }
+
+    #[test]
+    fn packed_firing_matches_per_literal_firing() {
+        // Training-time semantics on both paths, across word-boundary
+        // widths, including empty clauses.
+        prop("packed vs per-literal training eval", 200, |g| {
+            let f = g.usize(1..80);
+            let n = 8u32;
+            let states: Vec<u32> = (0..2 * f)
+                .map(|_| if g.chance(0.7) { n } else { g.u64(1..17) as u32 })
+                .collect();
+            let cs = ClauseState::from_states(states, n);
+            let x = g.bools(f);
+            assert_eq!(
+                cs.fires_packed(&pack_literals(&x)),
+                cs.fires_reference(&make_literals(&x), n),
+                "f={f}"
+            );
+        });
+    }
+
+    #[test]
+    fn feedback_keeps_states_in_bounds_and_mask_coherent() {
+        prop("feedback invariants", 40, |g| {
+            let f = g.usize(1..40);
+            let n = g.u64(1..16) as u32;
+            let mut rng = SplitMix64::new(g.u64(0..u64::MAX));
+            let mut cs = ClauseState::init(2 * f, n, &mut rng);
+            for _ in 0..100 {
+                let x = g.bools(f);
+                let lits = make_literals(&x);
+                if g.bool() {
+                    let fired = g.bool();
+                    type_i(&mut cs, &lits, fired, n, 3.0, &mut rng);
+                } else {
+                    type_ii(&mut cs, &lits, n);
+                }
+                cs.check(n).expect("invariants after feedback");
+            }
+        });
+    }
+
+    #[test]
+    fn check_rejects_incoherent_state() {
+        let n = 4;
+        let mut cs = ClauseState::from_states(vec![n + 1, n], n);
+        assert!(cs.check(n).is_ok());
+        // Corrupt the mask behind set_ta's back: check must catch it.
+        cs.include_words[0] = 0;
+        assert!(cs.check(n).is_err());
+        let bad = ClauseState::from_states(vec![2 * n + 5], n);
+        assert!(bad.check(n).is_err());
+    }
+}

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
-# Perf-trajectory recorder: run the two serving-tier benches and append
-# their output as one JSON entry to BENCH_PR3.json (a JSON-lines file —
-# one object per recorded run), so successive PRs accumulate comparable
-# numbers.
+# Perf-trajectory recorder: run the two serving-tier benches and the
+# training-tier bench, and append their output as one JSON entry to
+# BENCH_PR4.json (a JSON-lines file — one object per recorded run), so
+# successive PRs accumulate comparable numbers. (PR 3 recorded to
+# BENCH_PR3.json; that file stays as recorded history.)
 #
 #   scripts/bench_record.sh [label]
 #
@@ -12,7 +13,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 LABEL="${1:-$(git rev-parse --short HEAD 2>/dev/null || echo unlabelled)}"
-OUT="BENCH_PR3.json"
+OUT="BENCH_PR4.json"
 
 if ! command -v cargo >/dev/null 2>&1; then
     echo "bench_record.sh: cargo not found on PATH." >&2
@@ -29,13 +30,18 @@ echo "== cargo bench --bench bitparallel_vs_ref =="
 BITPAR_OUT="$(cargo bench --bench bitparallel_vs_ref)"
 echo "$BITPAR_OUT"
 
+echo "== cargo bench --bench train_packed_vs_ref =="
+TRAIN_OUT="$(cargo bench --bench train_packed_vs_ref)"
+echo "$TRAIN_OUT"
+
 # JSON-escape via python3 (present wherever the Python tier runs); fall
 # back to a warning rather than writing malformed JSON by hand.
 if ! command -v python3 >/dev/null 2>&1; then
     echo "bench_record.sh: python3 not found; cannot append $OUT." >&2
     exit 1
 fi
-LABEL="$LABEL" INDEXED_OUT="$INDEXED_OUT" BITPAR_OUT="$BITPAR_OUT" OUT="$OUT" \
+LABEL="$LABEL" INDEXED_OUT="$INDEXED_OUT" BITPAR_OUT="$BITPAR_OUT" \
+TRAIN_OUT="$TRAIN_OUT" OUT="$OUT" \
 python3 - <<'EOF'
 import datetime
 import json
@@ -48,6 +54,7 @@ entry = {
     ),
     "indexed_vs_bitpar": os.environ["INDEXED_OUT"].splitlines(),
     "bitparallel_vs_ref": os.environ["BITPAR_OUT"].splitlines(),
+    "train_packed_vs_ref": os.environ["TRAIN_OUT"].splitlines(),
 }
 path = os.environ["OUT"]
 with open(path, "a", encoding="utf-8") as f:

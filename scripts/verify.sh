@@ -4,11 +4,13 @@
 #   scripts/verify.sh
 #
 # Runs: the Python tier FIRST (JAX kernels, the consistent-hash-ring
-# mirror, and the inverted-index counter-sweep mirror — so toolchain-less
-# images still validate the shard-routing and indexed-inference
-# algorithms), then cargo build --release && cargo test -q, the shard /
-# coordinator / indexed-conformance suites by name (so a routing or
-# engine regression is visible at a glance), and cargo bench --no-run
+# mirror, the inverted-index counter-sweep mirror, and the
+# packed-trainer mirror with its same-seed bit-identity invariant — so
+# toolchain-less images still validate the shard-routing, indexed-
+# inference and packed-training algorithms), then cargo build --release
+# && cargo test -q, the shard / coordinator / indexed / trainer
+# conformance suites by name (so a routing, engine or trainer
+# regression is visible at a glance), and cargo bench --no-run
 # (benches are plain `harness = false` mains — `--no-run` proves they
 # compile without paying their full runtime).
 set -euo pipefail
@@ -42,6 +44,12 @@ cargo test -q --test equivalence sharded
 cargo test -q --test equivalence indexed
 cargo test -q --test bitparallel_equivalence indexed
 cargo test -q --test bitparallel_equivalence auto
+
+echo "== trainer suites (packed-evaluation bit-identity) =="
+cargo test -q --lib tm::trainer_engine
+cargo test -q --lib tm::train::
+cargo test -q --lib tm::cotm_train
+cargo test -q --test train_equivalence
 
 echo "== cargo bench --no-run =="
 cargo bench --no-run

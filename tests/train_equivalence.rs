@@ -1,0 +1,184 @@
+//! Same-seed conformance suite for the packed-evaluation trainers.
+//!
+//! The PR's headline invariant: because packed clause evaluation is
+//! exact and consumes no randomness, a trainer running on
+//! [`TrainerEngine::Packed`] must produce a model **bit-identical** to
+//! the same-seed trainer on [`TrainerEngine::Reference`] — not
+//! statistically similar, identical, down to every TA-derived include
+//! bit and every CoTM weight. Feature widths deliberately straddle the
+//! packed-word boundaries (F=32 is exactly one 64-literal word, 33
+//! spills into a tail word; 63/64/65 are the two-word boundary), the
+//! acceptance sweep of the issue.
+//!
+//! Alongside bit-identity, the trainer invariants are fuzzed at the
+//! trainer level (every TA in `1..=2N` after arbitrary epochs; the
+//! incremental include mask always equals a from-scratch recompute),
+//! and a trained-Iris model is pushed end-to-end through the serving
+//! engines (scalar reference, bit-parallel, inverted-index) to show
+//! accuracy parity is preserved all the way to the tiers users hit.
+
+use tsetlin_td::testutil::prop;
+use tsetlin_td::tm::cotm_train::{train_cotm_with, CoTmTrainer};
+use tsetlin_td::tm::infer::{cotm_accuracy, multiclass_accuracy, predict_argmax};
+use tsetlin_td::tm::train::{train_multiclass_with, MultiClassTrainer};
+use tsetlin_td::tm::{
+    data, BatchEngine, BitParallelCotm, BitParallelMulticlass, Dataset, IndexedCotm,
+    IndexedMulticlass, TmParams, TrainerEngine,
+};
+
+/// The acceptance sweep: literal-space word boundaries.
+const BOUNDARY_WIDTHS: [usize; 6] = [31, 32, 33, 63, 64, 65];
+
+fn params(f: usize, clauses: usize, classes: usize) -> TmParams {
+    TmParams {
+        features: f,
+        clauses,
+        classes,
+        ta_states: 32,
+        threshold: 4,
+        specificity: 3.0,
+        max_weight: 5,
+    }
+}
+
+fn blobs(f: usize, classes: usize, seed: u64) -> Dataset {
+    data::prototype_blobs(60, f, classes, 0.1, seed)
+}
+
+#[test]
+fn multiclass_packed_trainer_bit_identical_across_boundary_widths() {
+    for &f in &BOUNDARY_WIDTHS {
+        let d = blobs(f, 3, f as u64);
+        let p = params(f, 8, 3);
+        let a = train_multiclass_with(p.clone(), &d, 4, 99, TrainerEngine::Reference).unwrap();
+        let b = train_multiclass_with(p, &d, 4, 99, TrainerEngine::Packed).unwrap();
+        assert_eq!(a, b, "multiclass diverged at f={f}");
+        // Non-vacuous: training actually moved some TAs past the
+        // include boundary.
+        assert!(
+            b.clauses.iter().flatten().any(|cl| cl.included_count() > 0),
+            "f={f}: trained model has no included literals — sweep is vacuous"
+        );
+    }
+}
+
+#[test]
+fn cotm_packed_trainer_bit_identical_across_boundary_widths() {
+    for &f in &BOUNDARY_WIDTHS {
+        let d = blobs(f, 3, f as u64 + 1);
+        let p = params(f, 7, 3); // odd pool size is legal for CoTM
+        let a = train_cotm_with(p.clone(), &d, 4, 77, TrainerEngine::Reference).unwrap();
+        let b = train_cotm_with(p, &d, 4, 77, TrainerEngine::Packed).unwrap();
+        assert_eq!(a, b, "cotm diverged at f={f}");
+        assert!(
+            b.clauses.iter().any(|cl| cl.included_count() > 0),
+            "f={f}: trained CoTM has no included literals — sweep is vacuous"
+        );
+    }
+}
+
+#[test]
+fn random_shapes_same_seed_equality() {
+    // The invariant is structural, not a property of any particular
+    // configuration: random widths, clause counts, class counts,
+    // epochs and seeds.
+    prop("packed == reference on random shapes", 25, |g| {
+        let f = g.usize(1..48);
+        let classes = g.usize(2..5);
+        let clauses = 2 * g.usize(1..5);
+        let seed = g.u64(0..u64::MAX);
+        let epochs = g.usize(1..4);
+        let d = data::prototype_blobs(24, f, classes, 0.2, g.u64(0..u64::MAX));
+        let p = TmParams {
+            features: f,
+            clauses,
+            classes,
+            ta_states: 16,
+            threshold: 3,
+            specificity: 3.0,
+            max_weight: 4,
+        };
+        let a = train_multiclass_with(p.clone(), &d, epochs, seed, TrainerEngine::Reference)
+            .unwrap();
+        let b = train_multiclass_with(p.clone(), &d, epochs, seed, TrainerEngine::Packed)
+            .unwrap();
+        assert_eq!(a, b, "multiclass f={f} k={classes} c={clauses}");
+        let ca = train_cotm_with(p.clone(), &d, epochs, seed, TrainerEngine::Reference).unwrap();
+        let cb = train_cotm_with(p, &d, epochs, seed, TrainerEngine::Packed).unwrap();
+        assert_eq!(ca, cb, "cotm f={f} k={classes} c={clauses}");
+    });
+}
+
+#[test]
+fn trainer_invariants_hold_after_arbitrary_epochs() {
+    // Every TA stays in 1..=2N and every incremental include mask
+    // equals the from-scratch recompute, after each epoch (the update
+    // batch granularity), for both trainer kinds on the packed engine.
+    prop("trainer invariants", 12, |g| {
+        let f = g.usize(1..40);
+        let classes = g.usize(2..4);
+        let n = [8u32, 16, 32][g.usize(0..3)];
+        let d = data::prototype_blobs(30, f, classes, 0.15, g.u64(0..u64::MAX));
+        let p = TmParams {
+            features: f,
+            clauses: 6,
+            classes,
+            ta_states: n,
+            threshold: 3,
+            specificity: 2.5,
+            max_weight: 3,
+        };
+        let seed = g.u64(0..u64::MAX);
+        let mut mc = MultiClassTrainer::with_engine(p.clone(), seed, TrainerEngine::Packed)
+            .unwrap();
+        let mut co = CoTmTrainer::with_engine(p, seed, TrainerEngine::Packed).unwrap();
+        let epochs = g.usize(1..6);
+        for _ in 0..epochs {
+            mc.epoch(&d);
+            mc.check_invariants().expect("multiclass invariants");
+            co.epoch(&d);
+            co.check_invariants().expect("cotm invariants");
+        }
+    });
+}
+
+#[test]
+fn trained_iris_parity_end_to_end_through_serving_engines() {
+    // Models from both engines are identical, and the identical model
+    // serves identically through every native tier: scalar reference,
+    // bit-parallel, inverted-index — so training-engine choice can
+    // never shift served accuracy.
+    let d = data::iris().unwrap();
+    let (train, test) = d.split(0.8, 42);
+    let p = TmParams::iris_paper();
+
+    let m_ref = train_multiclass_with(p.clone(), &train, 25, 2, TrainerEngine::Reference).unwrap();
+    let m_pk = train_multiclass_with(p.clone(), &train, 25, 2, TrainerEngine::Packed).unwrap();
+    assert_eq!(m_ref, m_pk, "iris multiclass models diverged");
+
+    let cm_ref = train_cotm_with(p.clone(), &train, 60, 3, TrainerEngine::Reference).unwrap();
+    let cm_pk = train_cotm_with(p, &train, 60, 3, TrainerEngine::Packed).unwrap();
+    assert_eq!(cm_ref, cm_pk, "iris cotm models diverged");
+
+    let want_mc = multiclass_accuracy(&m_pk, &test.features, &test.labels);
+    let want_co = cotm_accuracy(&cm_pk, &test.features, &test.labels);
+
+    let bp_mc = BitParallelMulticlass::from_model(&m_pk).unwrap();
+    let ix_mc = IndexedMulticlass::from_model(&m_pk).unwrap();
+    let bp_co = BitParallelCotm::from_model(&cm_pk).unwrap();
+    let ix_co = IndexedCotm::from_model(&cm_pk).unwrap();
+
+    let acc_through = |sums: &dyn Fn(&[bool]) -> Vec<i32>| -> f64 {
+        let correct = test
+            .features
+            .iter()
+            .zip(&test.labels)
+            .filter(|(x, &y)| predict_argmax(&sums(x)) == y)
+            .count();
+        correct as f64 / test.features.len() as f64
+    };
+    assert_eq!(acc_through(&|x| bp_mc.class_sums(x)), want_mc, "bitpar multiclass");
+    assert_eq!(acc_through(&|x| ix_mc.class_sums(x)), want_mc, "indexed multiclass");
+    assert_eq!(acc_through(&|x| bp_co.class_sums(x)), want_co, "bitpar cotm");
+    assert_eq!(acc_through(&|x| ix_co.class_sums(x)), want_co, "indexed cotm");
+}
