@@ -1,0 +1,172 @@
+//! SIMD lane-width sweep — the perf-trajectory bench for the multi-word
+//! evaluation tier (`tm::simd` + the tiled `tm::bitpack` layout).
+//!
+//! Times the bit-parallel engines at every lane width the host offers —
+//! scalar (one `u64` per op, the PR 1 reference walk), portable
+//! (4×`u64` unrolled), AVX2 and AVX-512 when detected — on the
+//! 256f/512c synthetic model (the regime word-level packing is built
+//! for) over a 4096-sample batch, so the cache-blocked tiles actually
+//! stream. Prints µs/sample per level and a PASS/FAIL line for the
+//! tier's headline target: the portable unrolled baseline at ≥2× the
+//! single-word walk. Sanity-asserts bit-identity across all levels
+//! before timing anything — a speedup over wrong answers is worthless.
+//!
+//! Run: `cargo bench --bench simd_vs_scalar`
+
+use std::time::Instant;
+
+use tsetlin_td::tm::simd::{SimdLevel, WordLanes};
+use tsetlin_td::tm::{
+    BatchEngine, BitParallelCotm, BitParallelMulticlass, ClauseMask, CoTmModel,
+    MultiClassTmModel, TmParams,
+};
+use tsetlin_td::util::{SplitMix64, Table};
+
+/// Time `f` over `reps` repetitions of `samples` samples; µs/sample.
+fn time_us_per_sample(samples: usize, reps: usize, mut f: impl FnMut()) -> f64 {
+    // One warm-up pass (page in, branch-train), then timed reps.
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() * 1e6 / (reps * samples) as f64
+}
+
+fn random_mask(rng: &mut SplitMix64, literals: usize, density: f64) -> ClauseMask {
+    ClauseMask { include: (0..literals).map(|_| rng.chance(density)).collect() }
+}
+
+fn synthetic_multiclass(f: usize, c: usize, k: usize, seed: u64) -> MultiClassTmModel {
+    let p = TmParams { features: f, clauses: c, classes: k, ..TmParams::iris_paper() };
+    let mut rng = SplitMix64::new(seed);
+    let mut m = MultiClassTmModel::zeroed(p);
+    for class in &mut m.clauses {
+        for clause in class.iter_mut() {
+            *clause = random_mask(&mut rng, 2 * f, 0.08);
+        }
+    }
+    m
+}
+
+fn synthetic_cotm(f: usize, c: usize, k: usize, seed: u64) -> CoTmModel {
+    let p = TmParams { features: f, clauses: c, classes: k, ..TmParams::iris_paper() };
+    let mut rng = SplitMix64::new(seed);
+    let mut m = CoTmModel::zeroed(p.clone());
+    for clause in &mut m.clauses {
+        *clause = random_mask(&mut rng, 2 * f, 0.08);
+    }
+    for row in &mut m.weights {
+        for w in row.iter_mut() {
+            *w = rng.next_below(2 * p.max_weight as u64 + 1) as i32 - p.max_weight;
+        }
+    }
+    m
+}
+
+fn random_samples(f: usize, n: usize, seed: u64) -> Vec<Vec<bool>> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| (0..f).map(|_| rng.next_bool()).collect()).collect()
+}
+
+fn main() {
+    println!("== SIMD lane-width sweep (tiled bit-parallel engines) ==");
+    let (bf, bc, bk) = (256usize, 512usize, 4usize);
+    let batch_n = 4096usize;
+    let m = synthetic_multiclass(bf, bc, bk, 7);
+    let cm = synthetic_cotm(bf, bc, bk, 11);
+    let xs = random_samples(bf, batch_n, 9);
+
+    let levels = SimdLevel::available();
+    println!(
+        "available lane widths: [{}]; auto resolves to {}",
+        levels.iter().map(|l| l.name()).collect::<Vec<_>>().join(", "),
+        SimdLevel::detect_best().name()
+    );
+    for level in SimdLevel::ALL {
+        if !levels.contains(&level) {
+            println!(
+                "note: {} not available on this host (not detected or compiled out)",
+                level.name()
+            );
+        }
+    }
+
+    // Sanity first: every level must produce the identical batch.
+    let base_mc = BitParallelMulticlass::from_model(&m).expect("valid model");
+    let base_co = BitParallelCotm::from_model(&cm).expect("valid model");
+    let want_mc = base_mc
+        .clone()
+        .with_lanes(WordLanes::portable())
+        .infer_batch(&xs[..256.min(batch_n)]);
+    let want_co = base_co
+        .clone()
+        .with_lanes(WordLanes::portable())
+        .infer_batch(&xs[..256.min(batch_n)]);
+    for &level in &levels {
+        let lanes = WordLanes::new(level).expect("available level");
+        assert_eq!(
+            base_mc.clone().with_lanes(lanes).infer_batch(&xs[..256.min(batch_n)]),
+            want_mc,
+            "multiclass level {} diverged",
+            level.name()
+        );
+        assert_eq!(
+            base_co.clone().with_lanes(lanes).infer_batch(&xs[..256.min(batch_n)]),
+            want_co,
+            "cotm level {} diverged",
+            level.name()
+        );
+    }
+
+    let mut t = Table::new(vec![
+        "lane width",
+        "lanes",
+        "multiclass us/sample",
+        "mc speedup vs scalar",
+        "cotm us/sample",
+        "cotm speedup vs scalar",
+    ]);
+    let mut mc_us = Vec::new();
+    let mut co_us = Vec::new();
+    for &level in &levels {
+        let lanes = WordLanes::new(level).expect("available level");
+        let e_mc = base_mc.clone().with_lanes(lanes);
+        let e_co = base_co.clone().with_lanes(lanes);
+        let us_mc = time_us_per_sample(batch_n, 3, || {
+            std::hint::black_box(e_mc.infer_batch(&xs));
+        });
+        let us_co = time_us_per_sample(batch_n, 3, || {
+            std::hint::black_box(e_co.infer_batch(&xs));
+        });
+        mc_us.push(us_mc);
+        co_us.push(us_co);
+        t.row(vec![
+            level.name().to_string(),
+            format!("x{}", level.lanes()),
+            format!("{us_mc:.3}"),
+            format!("{:.2}x", mc_us[0] / us_mc),
+            format!("{us_co:.3}"),
+            format!("{:.2}x", co_us[0] / us_co),
+        ]);
+    }
+    println!(
+        "synthetic {bf}f/{bc}c/{bk}k, batch {batch_n} ({} tiles of 8 blocks):",
+        batch_n.div_ceil(64).div_ceil(8)
+    );
+    println!("{}", t.render());
+
+    // Headline target: the portable unrolled baseline >= 2x the
+    // single-word scalar walk (levels[0] is always scalar, [1]
+    // portable). Wider vector levels are reported above; they can only
+    // improve on portable.
+    let unrolled_speedup_mc = mc_us[0] / mc_us[1];
+    let unrolled_speedup_co = co_us[0] / co_us[1];
+    println!(
+        "unrolled-vs-single-word: multiclass {unrolled_speedup_mc:.2}x, cotm {unrolled_speedup_co:.2}x"
+    );
+    println!(
+        "lane-tier target (portable unrolled >= 2x single-word on {bf}f/{bc}c): {}",
+        if unrolled_speedup_mc >= 2.0 { "PASS" } else { "FAIL" }
+    );
+}

@@ -10,7 +10,8 @@ use tsetlin_td::coordinator::{Backend, InferRequest, ShardedCoordinator};
 use tsetlin_td::tm::{
     cotm_train::train_cotm, data, index, infer,
     train::{train_multiclass, train_multiclass_with},
-    BatchEngine, BitParallelMulticlass, IndexedMulticlass, TmParams, TrainerEngine,
+    BatchEngine, BitParallelMulticlass, IndexedMulticlass, SimdLevel, TmParams,
+    TrainerEngine, WordLanes,
 };
 use tsetlin_td::wta::WtaKind;
 
@@ -60,6 +61,29 @@ fn main() -> tsetlin_td::Result<()> {
         fast.class_sums(&test.features[0]),
         infer::multiclass_class_sums(&model, &test.features[0]),
         "bit-parallel path must be bit-exact"
+    );
+
+    // 2b''. SIMD dispatch: the engine evaluates in multi-word lanes
+    //       (portable 4x-unrolled, AVX2, AVX-512 behind runtime
+    //       detection). The lane width is a speed decision only —
+    //       every available level produces identical batches.
+    for level in SimdLevel::available() {
+        let lev = fast.clone().with_lanes(WordLanes::new(level)?);
+        assert_eq!(
+            lev.infer_batch(&test.features),
+            batch,
+            "simd level {} must match the portable reference",
+            level.name()
+        );
+    }
+    println!(
+        "simd lanes: auto resolves to {} here; all of [{}] are bit-identical",
+        SimdLevel::detect_best().name(),
+        SimdLevel::available()
+            .iter()
+            .map(|l| l.name())
+            .collect::<Vec<_>>()
+            .join(", ")
     );
 
     // 2b'. The event-driven alternative: the inverted-index engine

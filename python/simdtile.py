@@ -1,0 +1,168 @@
+"""Mirror of the tiled bit-sliced batch layout (rust/src/tm/bitpack.rs).
+
+The Rust serving engines evaluate batches through cache-blocked tiles:
+samples are split into 64-wide *blocks* (bit ``s % 64`` of a block word
+holds sample ``s``), blocks into tiles of ``TILE_BLOCKS``; within a tile
+the layout is literal-major, so literal ``l``'s lane words for the
+tile's blocks are contiguous and one SIMD op covers 4-8 blocks.
+Evaluation is clause-major within a tile, samples-block-major across
+tiles.
+
+This module mirrors the *layout math* (word indexing, tile geometry,
+valid masks) and the tile evaluator bit-for-bit, so toolchain-less CI
+images can validate the tiling even though they cannot compile the Rust
+lane kernels. The golden vectors in ``tests/test_simdtile.py`` are
+asserted identically in ``bitpack.rs``; if either side's layout drifts,
+both suites fail.
+
+Word index of (block ``blk``, literal ``l``)::
+
+    stride = min(blocks, TILE_BLOCKS)
+    word(blk, l) = data[(blk // stride) * 2F * stride   # tile base
+                        + l * stride                    # literal lane
+                        + blk % stride]                 # block in tile
+
+Plain Python ints stand in for ``u64`` (masked to 64 bits on write).
+"""
+
+WORD_BITS = 64
+TILE_BLOCKS = 8
+_MASK64 = (1 << 64) - 1
+
+
+def words_for(bits):
+    """Number of 64-bit words needed to hold ``bits`` bits."""
+    return (bits + WORD_BITS - 1) // WORD_BITS
+
+
+def tile_geometry(samples):
+    """``(blocks, stride, tiles)`` for a batch of ``samples`` samples."""
+    blocks = words_for(max(samples, 1))
+    stride = min(blocks, TILE_BLOCKS)
+    tiles = (blocks + stride - 1) // stride
+    return blocks, stride, tiles
+
+
+def pack_literals(features):
+    """One sample's interleaved literals as packed words
+    (``lit[2i] = x_i``, ``lit[2i+1] = not x_i``)."""
+    words = [0] * words_for(2 * len(features))
+    for i, f in enumerate(features):
+        pos = 2 * i + (0 if f else 1)
+        words[pos // WORD_BITS] |= 1 << (pos % WORD_BITS)
+    return words
+
+
+class TiledBatch:
+    """Mirror of ``BitSlicedBatch``: the tiled bit-sliced transpose."""
+
+    def __init__(self, rows, features):
+        for row in rows:
+            if len(row) != features:
+                raise ValueError("batch row width mismatch")
+        self.features = features
+        self.samples = len(rows)
+        self.blocks, self.stride, self.tiles = tile_geometry(self.samples)
+        lits = 2 * features
+        self.data = [0] * (self.tiles * lits * self.stride)
+        for s, row in enumerate(rows):
+            blk = s // WORD_BITS
+            bit = 1 << (s % WORD_BITS)
+            base = (blk // self.stride) * lits * self.stride + blk % self.stride
+            for i, f in enumerate(row):
+                lit = 2 * i + (0 if f else 1)
+                self.data[base + lit * self.stride] |= bit
+
+    def tile_blocks(self, t):
+        """Blocks actually present in tile ``t``."""
+        return min(self.stride, self.blocks - t * self.stride)
+
+    def lit_lane(self, t, l):
+        """The contiguous lane words of literal ``l`` in tile ``t``."""
+        base = (t * 2 * self.features + l) * self.stride
+        return self.data[base : base + self.tile_blocks(t)]
+
+    def lit_word(self, blk, l):
+        """One literal's word for one global block index."""
+        t = blk // self.stride
+        return self.data[
+            (t * 2 * self.features + l) * self.stride + blk % self.stride
+        ]
+
+    def valid_mask(self, blk):
+        """Mask of valid sample bits in block ``blk``."""
+        used = self.samples - blk * WORD_BITS
+        if used >= WORD_BITS:
+            return _MASK64
+        return (1 << used) - 1
+
+
+def evaluate_tile(batch, literals, t):
+    """Clause-output words for tile ``t`` of a clause including the
+    given sorted literal indices — the lane evaluator's semantics:
+    all-ones accumulator, AND each literal's lane, early-exit when every
+    lane is dead; an empty clause outputs all zeros (the inference
+    convention)."""
+    tb = batch.tile_blocks(t)
+    if not literals:
+        return [0] * tb
+    acc = [_MASK64] * tb
+    for l in literals:
+        lane = batch.lit_lane(t, l)
+        any_alive = 0
+        for j in range(tb):
+            acc[j] &= lane[j]
+            any_alive |= acc[j]
+        if not any_alive:
+            return acc
+    last = t * batch.stride + tb - 1
+    if last + 1 == batch.blocks:
+        acc[tb - 1] &= batch.valid_mask(last)
+    return acc
+
+
+def evaluate_block(batch, literals, blk):
+    """Single-word reference walk for one global block (mirror of
+    ``PackedClause::evaluate_batch``)."""
+    if not literals:
+        return 0
+    acc = _MASK64
+    for l in literals:
+        acc &= batch.lit_word(blk, l)
+        if acc == 0:
+            break
+    return acc & batch.valid_mask(blk)
+
+
+def clause_outputs(batch, literals):
+    """Per-sample clause outputs through the tile evaluator."""
+    out = []
+    for t in range(batch.tiles):
+        out.extend(evaluate_tile(batch, literals, t))
+    return [
+        (out[s // WORD_BITS] >> (s % WORD_BITS)) & 1 == 1
+        for s in range(batch.samples)
+    ]
+
+
+def ref_clause_output(include, sample):
+    """Direct reference: AND over included literals of the interleaved
+    literal vector; an empty clause outputs False."""
+    lits = []
+    for f in sample:
+        lits.extend([f, not f])
+    included = [lits[l] for l, inc in enumerate(include) if inc]
+    if not included:
+        return False
+    return all(included)
+
+
+def fnv1a64_words(words):
+    """FNV-1a/64 over the words' little-endian bytes — the layout
+    fingerprint pinned cross-language in the golden tests."""
+    h = 0xCBF29CE484222325
+    for w in words:
+        for shift in range(0, 64, 8):
+            h ^= (w >> shift) & 0xFF
+            h = (h * 0x00000100000001B3) & _MASK64
+    return h

@@ -1,0 +1,171 @@
+"""Tiled bit-sliced batch layout mirror vs the Rust tiles (tm/bitpack.rs).
+
+Plain pytest (no hypothesis, no JAX) so it runs on every CI image —
+including toolchain-less ones where the Rust suite cannot. The golden
+geometry, words, fingerprint and clause-output words below are asserted
+*identically* in ``rust/src/tm/bitpack.rs``
+(``tiled_layout_golden_vectors_match_python_mirror``); both sides build
+them from the same closed-form formulas, so if either implementation's
+tile math drifts, both suites fail.
+"""
+
+import random
+
+from simdtile import (
+    TILE_BLOCKS,
+    WORD_BITS,
+    TiledBatch,
+    clause_outputs,
+    evaluate_block,
+    evaluate_tile,
+    fnv1a64_words,
+    pack_literals,
+    ref_clause_output,
+    tile_geometry,
+    words_for,
+)
+
+# ---------------------------------------------------------------------
+# The shared golden scheme (formulas mirrored in bitpack.rs):
+#   F=3, 200 samples; feature i of sample s = (i*i + 3*i*s + 2*s)%7 < 3
+#   clause includes literal l iff (3*l) % 5 == 0  ->  literals [0, 5]
+# ---------------------------------------------------------------------
+
+F = 3
+
+
+def golden_rows():
+    return [
+        [(i * i + 3 * i * s + 2 * s) % 7 < 3 for i in range(F)]
+        for s in range(200)
+    ]
+
+
+GOLDEN_INCLUDE = [(3 * l) % 5 == 0 for l in range(2 * F)]
+GOLDEN_LITERALS = [0, 5]
+GOLDEN_FNV = 0x6C6E8C1EA8439D9E
+GOLDEN_TILE_OUT = [
+    0x83060C183060C183,
+    0xC183060C183060C1,
+    0x60C183060C183060,
+    0x0000000000000030,
+]
+
+
+def test_words_for_boundaries():
+    assert words_for(0) == 0
+    assert words_for(1) == 1
+    assert words_for(64) == 1
+    assert words_for(65) == 2
+    assert words_for(129) == 3
+
+
+def test_tile_geometry():
+    # Small batches never pad out to a full tile; big ones split at
+    # TILE_BLOCKS with a shorter final tile.
+    assert tile_geometry(0) == (1, 1, 1)
+    assert tile_geometry(1) == (1, 1, 1)
+    assert tile_geometry(64) == (1, 1, 1)
+    assert tile_geometry(65) == (2, 2, 1)
+    assert tile_geometry(512) == (8, 8, 1)
+    assert tile_geometry(513) == (9, 8, 2)
+    assert tile_geometry(600) == (10, 8, 2)
+    assert tile_geometry(64 * 17) == (17, 8, 3)
+    assert TILE_BLOCKS == 8
+
+
+def test_golden_vectors():
+    b = TiledBatch(golden_rows(), F)
+    assert (b.blocks, b.stride, b.tiles) == (4, 4, 1)
+    assert len(b.data) == 24
+    # Asserted identically in bitpack.rs.
+    assert fnv1a64_words(b.data) == GOLDEN_FNV
+    assert b.lit_word(0, 0) == 0x93264C993264C993
+    assert b.lit_word(1, 1) == 0x366CD9B366CD9B36
+    assert b.lit_word(3, 4) == 0x0000000000000087
+    assert b.valid_mask(3) == 0xFF
+
+    assert [l for l, v in enumerate(GOLDEN_INCLUDE) if v] == GOLDEN_LITERALS
+    assert evaluate_tile(b, GOLDEN_LITERALS, 0) == GOLDEN_TILE_OUT
+
+
+def test_golden_outputs_match_direct_reference():
+    # The pinned words themselves encode the right clause outputs.
+    b = TiledBatch(golden_rows(), F)
+    got = clause_outputs(b, GOLDEN_LITERALS)
+    want = [ref_clause_output(GOLDEN_INCLUDE, r) for r in golden_rows()]
+    assert got == want
+    # Non-vacuous: the golden clause both fires and stays silent.
+    assert any(want) and not all(want)
+
+
+def test_lit_lane_is_contiguous_view_of_lit_word():
+    rows = [
+        [(s * 2654435761 >> i) & 1 == 1 for i in range(5)] for s in range(600)
+    ]
+    b = TiledBatch(rows, 5)
+    assert (b.blocks, b.stride, b.tiles) == (10, 8, 2)
+    assert b.tile_blocks(0) == 8
+    assert b.tile_blocks(1) == 2
+    for t in range(b.tiles):
+        for l in range(2 * 5):
+            lane = b.lit_lane(t, l)
+            assert lane == [b.lit_word(t * 8 + j, l) for j in range(len(lane))]
+    # Every bit equals the per-sample literal value.
+    for s, row in enumerate(rows):
+        for i, fv in enumerate(row):
+            lit = 2 * i + (0 if fv else 1)
+            assert (b.lit_word(s // WORD_BITS, lit) >> (s % WORD_BITS)) & 1 == 1
+
+
+def test_pack_literals_sets_one_bit_per_pair():
+    # x0=1 -> bit 0, x1=0 -> bit 3 (¬x1), x2=1 -> bit 4.
+    words = pack_literals([True, False, True])
+    assert words == [0b11001]
+    assert pack_literals([]) == []
+
+
+def test_empty_clause_outputs_zero():
+    b = TiledBatch([[True, False], [False, True]], 2)
+    assert evaluate_tile(b, [], 0) == [0]
+    assert evaluate_block(b, [], 0) == 0
+    assert clause_outputs(b, []) == [False, False]
+
+
+def test_padding_bits_stay_zero_in_tail_block():
+    # An always-firing clause must still leave padding bits clear.
+    b = TiledBatch([[True, False]] * 3, 2)
+    assert evaluate_tile(b, [0], 0) == [0b111]
+    assert evaluate_block(b, [0], 0) == 0b111
+
+
+def test_differential_vs_direct_reference():
+    # Randomized sweep over word-boundary widths, block-boundary batch
+    # sizes and densities from all-exclude to near-full; the tiled
+    # evaluator and the single-word block walk must both equal the
+    # direct per-sample reference.
+    rng = random.Random(20260801)
+    for case in range(200):
+        f = rng.choice([1, 2, 5, 31, 32, 33, 63, 64, 65])
+        n = rng.choice([1, 2, 63, 64, 65, 127, 128, 130, 513, 600])
+        rows = [[rng.random() < 0.5 for _ in range(f)] for _ in range(n)]
+        density = rng.choice([0.0, 0.05, 0.3, 0.9])
+        include = [rng.random() < density for _ in range(2 * f)]
+        lits = [l for l, v in enumerate(include) if v]
+        b = TiledBatch(rows, f)
+        want = [ref_clause_output(include, r) for r in rows]
+        assert clause_outputs(b, lits) == want, (case, f, n)
+        for blk in range(b.blocks):
+            w = evaluate_block(b, lits, blk)
+            lo = blk * WORD_BITS
+            for s in range(lo, min(lo + WORD_BITS, n)):
+                assert ((w >> (s - lo)) & 1 == 1) == want[s], (case, s)
+
+
+def test_row_width_mismatch_rejected():
+    try:
+        TiledBatch([[True, False], [True]], 2)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("width mismatch must raise")

@@ -84,10 +84,13 @@ COMMANDS:
   waveform   Dump VCD waveforms for Figs. 6-8  --out-dir waves/
   serve      Run the serving coordinator demo
              --config serve.toml --requests N [--no-golden] [--shards N]
+             [--simd auto|scalar|portable|avx2|avx512]
              (--shards N fronts N coordinator shards with a
               deterministic consistent-hash ring; default from config)
-  selfcheck  Train + verify every backend agrees on Iris, and that the
-             packed trainer reproduces the reference trainer bit-for-bit
+  selfcheck  Train + verify every backend agrees on Iris, that the
+             packed trainer reproduces the reference trainer
+             bit-for-bit, and that every available SIMD lane width
+             (scalar/portable/avx2/avx512) is bit-exact
   help       Show this text
 
 Backends: golden-multiclass golden-cotm bitpar-multiclass bitpar-cotm
@@ -105,6 +108,14 @@ density: at or below the threshold (default 0.05; set
 `indexed_density_threshold` under [coordinator] in serve.toml) the
 indexed engine serves, above it the packed engine. Replies name the
 concrete engine used; the choice never changes the sums.
+
+The packed engines evaluate in SIMD word lanes (`simd` under
+[coordinator], or --simd on serve): \"auto\" (default) picks the widest
+level the host supports at build time — AVX-512 (8x64-bit lanes, needs
+the `avx512` cargo feature), AVX2 (4 lanes), else the portable
+4x-unrolled baseline; \"scalar\" keeps the historic one-word-per-op
+walk. Forcing an undetected level fails at startup. The level only
+changes speed: all levels are bit-exact (see `tmtd selfcheck`).
 ";
 
 #[cfg(test)]

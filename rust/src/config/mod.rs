@@ -9,6 +9,7 @@ pub use json::Json;
 pub use toml::TomlDoc;
 
 use crate::error::Result;
+use crate::tm::simd::SimdChoice;
 use crate::wta::WtaKind;
 
 /// Serving coordinator configuration (`tmtd serve --config <file>`).
@@ -36,6 +37,13 @@ pub struct ServeConfig {
     /// packed bit-parallel engines. Must be in [0, 1]; the default is
     /// [`crate::tm::index::PACKED_VS_INDEXED_DENSITY`].
     pub indexed_density_threshold: f64,
+    /// SIMD lane width the packed engines evaluate through
+    /// (`simd = "auto" | "scalar" | "portable" | "avx2" | "avx512"`).
+    /// `auto` (the default) picks the widest level detected at server
+    /// build time; forcing an unavailable level fails the build
+    /// cleanly. A speed decision only — the class sums are invariant
+    /// under dispatch.
+    pub simd: SimdChoice,
 }
 
 impl Default for ServeConfig {
@@ -49,6 +57,7 @@ impl Default for ServeConfig {
             artifacts_dir: "artifacts".into(),
             wta: WtaKind::Tba,
             indexed_density_threshold: crate::tm::index::PACKED_VS_INDEXED_DENSITY,
+            simd: SimdChoice::Auto,
         }
     }
 }
@@ -66,6 +75,7 @@ impl ServeConfig {
     /// artifacts_dir = "artifacts"
     /// wta = "tba"
     /// indexed_density_threshold = 0.05
+    /// simd = "auto"
     /// ```
     pub fn from_toml(doc: &TomlDoc) -> Result<ServeConfig> {
         // Counts must reject negative values rather than `as`-casting
@@ -95,6 +105,14 @@ impl ServeConfig {
         }
         if let Some(v) = doc.get("coordinator", "indexed_density_threshold") {
             cfg.indexed_density_threshold = v.as_float()?;
+        }
+        if let Some(v) = doc.get("coordinator", "simd") {
+            let name = v.as_str()?;
+            cfg.simd = SimdChoice::parse(name).ok_or_else(|| {
+                crate::Error::config(format!(
+                    "unknown simd level {name:?} (expected auto|scalar|portable|avx2|avx512)"
+                ))
+            })?;
         }
         if let Some(v) = doc.get("coordinator", "wta") {
             cfg.wta = match v.as_str()? {
@@ -164,6 +182,7 @@ mod tests {
             artifacts_dir = "custom/artifacts"
             wta = "mesh"
             indexed_density_threshold = 0.12
+            simd = "portable"
             "#,
         )
         .unwrap();
@@ -174,6 +193,31 @@ mod tests {
         assert_eq!(cfg.wta, WtaKind::Mesh);
         assert_eq!(cfg.artifacts_dir, "custom/artifacts");
         assert_eq!(cfg.indexed_density_threshold, 0.12);
+        assert_eq!(
+            cfg.simd,
+            SimdChoice::Forced(crate::tm::simd::SimdLevel::Portable)
+        );
+    }
+
+    #[test]
+    fn parses_simd_levels_and_rejects_unknown_names() {
+        use crate::tm::simd::SimdLevel;
+        for (name, want) in [
+            ("auto", SimdChoice::Auto),
+            ("scalar", SimdChoice::Forced(SimdLevel::Scalar)),
+            ("portable", SimdChoice::Forced(SimdLevel::Portable)),
+            ("avx2", SimdChoice::Forced(SimdLevel::Avx2)),
+            ("avx512", SimdChoice::Forced(SimdLevel::Avx512)),
+        ] {
+            let doc =
+                TomlDoc::parse(&format!("[coordinator]\nsimd = \"{name}\"\n")).unwrap();
+            assert_eq!(ServeConfig::from_toml(&doc).unwrap().simd, want, "{name}");
+        }
+        let doc = TomlDoc::parse("[coordinator]\nsimd = \"neon\"\n").unwrap();
+        let err = ServeConfig::from_toml(&doc).unwrap_err();
+        assert!(err.to_string().contains("unknown simd level"), "{err}");
+        // Default stays auto-dispatch.
+        assert_eq!(ServeConfig::default().simd, SimdChoice::Auto);
     }
 
     #[test]

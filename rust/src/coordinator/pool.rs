@@ -3,7 +3,19 @@
 //! start-up, so non-`Send` per-worker state (the hardware architecture
 //! instances with their `Rc` delay codes) lives entirely inside its
 //! thread.
+//!
+//! Panic containment (the `ring_lock` treatment applied to the job
+//! path): a panicking job must not take the serving loop with it. The
+//! worker catches the unwind, counts it ([`WorkerPool::panicked`]),
+//! rebuilds its state from the factory (the job may have died halfway
+//! through mutating it), and keeps draining the queue — so one bad
+//! request degrades to one counted failure instead of permanently
+//! shrinking the pool. The queue lock is poison-tolerant for the same
+//! reason: the mutex only guards `recv()`, so the data under it cannot
+//! be left in a torn state and `into_inner` recovery is sound.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -17,6 +29,8 @@ pub type Job<S> = Box<dyn FnOnce(&mut S) + Send>;
 pub struct WorkerPool<S: 'static> {
     tx: Option<mpsc::Sender<Job<S>>>,
     handles: Vec<JoinHandle<()>>,
+    /// Jobs that panicked (each also rebuilt its worker's state).
+    panicked: Arc<AtomicU64>,
 }
 
 impl<S: 'static> WorkerPool<S> {
@@ -32,21 +46,42 @@ impl<S: 'static> WorkerPool<S> {
         let (tx, rx) = mpsc::channel::<Job<S>>();
         let rx = Arc::new(Mutex::new(rx));
         let factory = Arc::new(factory);
+        let panicked = Arc::new(AtomicU64::new(0));
         let mut handles = Vec::with_capacity(n);
         for i in 0..n {
             let rx = Arc::clone(&rx);
             let factory = Arc::clone(&factory);
+            let panicked = Arc::clone(&panicked);
             let handle = std::thread::Builder::new()
                 .name(format!("tmtd-worker-{i}"))
                 .spawn(move || {
                     let mut state = factory(i);
                     loop {
                         let job = {
-                            let guard = rx.lock().expect("pool queue poisoned");
+                            // Poison-tolerant: the mutex only serialises
+                            // recv(), so a panic elsewhere cannot have
+                            // torn the guarded data — recover the guard
+                            // instead of cascading the poison into every
+                            // later worker iteration.
+                            let guard = match rx.lock() {
+                                Ok(g) => g,
+                                Err(poisoned) => poisoned.into_inner(),
+                            };
                             guard.recv()
                         };
                         match job {
-                            Ok(job) => job(&mut state),
+                            Ok(job) => {
+                                // Contain a panicking job: count it and
+                                // rebuild this worker's state (the job
+                                // may have died mid-mutation), but keep
+                                // the worker serving.
+                                if catch_unwind(AssertUnwindSafe(|| job(&mut state)))
+                                    .is_err()
+                                {
+                                    panicked.fetch_add(1, Ordering::Relaxed);
+                                    state = factory(i);
+                                }
+                            }
                             Err(_) => break, // all senders dropped
                         }
                     }
@@ -54,7 +89,7 @@ impl<S: 'static> WorkerPool<S> {
                 .map_err(|e| Error::coordinator(format!("spawn worker: {e}")))?;
             handles.push(handle);
         }
-        Ok(WorkerPool { tx: Some(tx), handles })
+        Ok(WorkerPool { tx: Some(tx), handles, panicked })
     }
 
     /// Enqueue a job.
@@ -64,6 +99,12 @@ impl<S: 'static> WorkerPool<S> {
             .ok_or_else(|| Error::coordinator("pool shut down"))?
             .send(job)
             .map_err(|_| Error::coordinator("pool workers exited"))
+    }
+
+    /// Jobs that panicked so far (each was contained: counted, state
+    /// rebuilt, worker kept serving).
+    pub fn panicked(&self) -> u64 {
+        self.panicked.load(Ordering::Relaxed)
     }
 
     /// Drop the queue and join all workers.
@@ -129,6 +170,55 @@ mod tests {
         }
         // Per-worker counters never exceed the job total and are > 0.
         assert!(seen.iter().all(|&v| v >= 1 && v <= 60));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn panicking_job_is_contained_and_counted() {
+        // Regression: a panicking job used to kill its worker thread
+        // outright — enough of them silently drained the whole pool
+        // while submit() kept accepting. Now the worker survives, the
+        // panic is counted, and the state is rebuilt from the factory.
+        let builds = Arc::new(AtomicUsize::new(0));
+        let b = Arc::clone(&builds);
+        let pool: WorkerPool<usize> = WorkerPool::new(1, move |_| {
+            b.fetch_add(1, Ordering::SeqCst)
+        })
+        .unwrap();
+        let (tx, rx) = mpsc::channel();
+
+        // Job 1 mutates state then panics; the pool must rebuild.
+        pool.submit(Box::new(|state| {
+            *state = 999;
+            panic!("injected job panic");
+        }))
+        .unwrap();
+        // Job 2 must still run — on the SAME worker (n=1) — and see
+        // freshly built state, not the half-mutated corpse.
+        let tx2 = tx.clone();
+        pool.submit(Box::new(move |state| {
+            let _ = tx2.send(*state);
+        }))
+        .unwrap();
+        let state_after = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        assert_ne!(state_after, 999, "panicked job's half-mutation must be discarded");
+        assert_eq!(pool.panicked(), 1);
+        assert_eq!(builds.load(Ordering::SeqCst), 2, "initial build + one rebuild");
+
+        // A second wave of panics still leaves the pool serving.
+        for _ in 0..3 {
+            pool.submit(Box::new(|_| panic!("again"))).unwrap();
+        }
+        let tx3 = tx.clone();
+        pool.submit(Box::new(move |_| {
+            let _ = tx3.send(42);
+        }))
+        .unwrap();
+        assert_eq!(
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap(),
+            42
+        );
+        assert_eq!(pool.panicked(), 4);
         pool.shutdown();
     }
 

@@ -38,6 +38,7 @@ use crate::error::{Error, Result};
 use crate::runtime::golden::{GoldenModels, GoldenService};
 use crate::tm::fast_infer::{BatchEngine, BitParallelCotm, BitParallelMulticlass};
 use crate::tm::index::{prefer_indexed, IndexedCotm, IndexedMulticlass};
+use crate::tm::simd::WordLanes;
 use crate::tm::{CoTmModel, MultiClassTmModel};
 
 /// Per-worker architecture set (lives inside its worker thread; the
@@ -156,10 +157,47 @@ pub struct CoordinatorServer {
     /// decided once at build time from included-literal density.
     auto_mc: Backend,
     auto_co: Backend,
+    /// Lane width the packed engines evaluate through (resolved from
+    /// `ServeConfig.simd` at build time).
+    simd: WordLanes,
     stats: Arc<ServerStats>,
     in_flight: Arc<AtomicU64>,
     queue_depth: u64,
     features: usize,
+}
+
+/// Releases one in-flight slot exactly once, even when the job body
+/// panics: a worker-pool job that dies mid-inference must not consume a
+/// `queue_depth` slot forever (the batched paths already have this
+/// guarantee from the batcher; this is the pooled path's counterpart).
+/// A drop without `finish()` (the panic path) also counts the request
+/// as failed, since no downstream layer exists to count it.
+struct JobGuard {
+    stats: Arc<ServerStats>,
+    in_flight: Arc<AtomicU64>,
+    done: bool,
+}
+
+impl JobGuard {
+    fn new(stats: Arc<ServerStats>, in_flight: Arc<AtomicU64>) -> JobGuard {
+        JobGuard { stats, in_flight, done: false }
+    }
+
+    /// Normal completion: release the slot; success/failure counting
+    /// already happened inline.
+    fn finish(mut self) {
+        self.done = true;
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+impl Drop for JobGuard {
+    fn drop(&mut self) {
+        if !self.done {
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            self.stats.failed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
 }
 
 impl CoordinatorServer {
@@ -178,6 +216,16 @@ impl CoordinatorServer {
         }
         let stats = Arc::new(ServerStats::new());
         let in_flight = Arc::new(AtomicU64::new(0));
+        // Resolve the configured SIMD lane width once; a forced level
+        // the host cannot run fails the build here, not mid-request.
+        let simd = cfg.simd.resolve()?;
+
+        // Probe-build the proposed architectures once on this thread so
+        // an invalid model surfaces as a clean Err from `new()` instead
+        // of an `expect` panic inside every worker thread (which the
+        // pool would survive, but with workers dying at startup).
+        ProposedMulticlass::new(mc_model.clone(), cfg.wta)?;
+        ProposedCotm::new(cotm_model.clone(), cfg.wta)?;
 
         // Worker pool: each worker builds its own architecture set.
         let wta = cfg.wta;
@@ -186,6 +234,8 @@ impl CoordinatorServer {
         let pool = WorkerPool::new(cfg.workers, move |_i| WorkerState {
             sync_mc: sync_multiclass(mc.clone()),
             async_mc: async_bd_multiclass(mc.clone()),
+            // Unreachable panics: the probe builds above proved these
+            // constructions succeed for exactly these inputs.
             proposed_mc: ProposedMulticlass::new(mc.clone(), wta)
                 .expect("valid multiclass model"),
             sync_co: sync_cotm(co.clone()),
@@ -201,7 +251,7 @@ impl CoordinatorServer {
         let timeout = Duration::from_micros(cfg.batch_timeout_us);
         let shard_threads = cfg.workers.max(1);
         let batcher_bp_mc = native_batcher(
-            Arc::new(BitParallelMulticlass::from_model(&mc_model)?),
+            Arc::new(BitParallelMulticlass::from_model(&mc_model)?.with_lanes(simd)),
             Backend::BitParallelMulticlass,
             cfg.max_batch,
             timeout,
@@ -210,7 +260,7 @@ impl CoordinatorServer {
             shard_threads,
         )?;
         let batcher_bp_co = native_batcher(
-            Arc::new(BitParallelCotm::from_model(&cotm_model)?),
+            Arc::new(BitParallelCotm::from_model(&cotm_model)?.with_lanes(simd)),
             Backend::BitParallelCotm,
             cfg.max_batch,
             timeout,
@@ -359,11 +409,19 @@ impl CoordinatorServer {
             batcher_ix_co: Some(batcher_ix_co),
             auto_mc,
             auto_co,
+            simd,
             stats,
             in_flight,
             queue_depth: cfg.queue_depth as u64,
             features,
         })
+    }
+
+    /// The SIMD lane width the packed engines evaluate through —
+    /// surfaced by `tmtd serve` / `selfcheck` next to the serving
+    /// stats (a speed decision only; sums are dispatch-invariant).
+    pub fn simd_lanes(&self) -> WordLanes {
+        self.simd
     }
 
     /// The concrete native backends the `auto-*` aliases resolved to
@@ -438,6 +496,12 @@ impl CoordinatorServer {
                 .as_ref()
                 .ok_or_else(|| self.abort_submit(Error::coordinator("pool shut down")))?
                 .submit(Box::new(move |state: &mut WorkerState| {
+                    // The guard releases the in-flight slot exactly once
+                    // even when `infer` panics (the pool survives the
+                    // panic and rebuilds the worker's state; without the
+                    // guard each such panic would leak a queue_depth
+                    // slot and vanish from the counters).
+                    let guard = JobGuard::new(Arc::clone(&stats), in_flight);
                     let result = state
                         .arch(backend)
                         .infer(&features)
@@ -458,7 +522,7 @@ impl CoordinatorServer {
                             stats.failed.fetch_add(1, Ordering::Relaxed);
                             e
                         });
-                    in_flight.fetch_sub(1, Ordering::SeqCst);
+                    guard.finish();
                     let _ = tx.send(result);
                 }))
                 .map_err(|e| self.abort_submit(e))?;
@@ -735,6 +799,97 @@ mod tests {
         }
         // Auto-select changed the engine, not the outputs.
         assert_eq!(sums_by_choice[0], sums_by_choice[1]);
+    }
+
+    #[test]
+    fn forced_simd_levels_serve_bit_exact() {
+        // Every lane width the host offers, forced through the real
+        // serving config, must produce the reference sums — and the
+        // server must report the level it resolved.
+        use crate::tm::simd::{SimdChoice, SimdLevel};
+        let dset = data::iris().unwrap();
+        let (tr, _) = dset.split(0.8, 42);
+        let m = train_multiclass(TmParams::iris_paper(), &tr, 20, 2).unwrap();
+        for level in SimdLevel::available() {
+            let cfg = ServeConfig {
+                workers: 2,
+                simd: SimdChoice::Forced(level),
+                ..ServeConfig::default()
+            };
+            let (srv, d) = server(false, Some(cfg));
+            assert_eq!(srv.simd_lanes().level(), level);
+            for i in [0usize, 60, 149] {
+                let r = srv
+                    .infer(InferRequest {
+                        features: d.features[i].clone(),
+                        backend: Backend::BitParallelMulticlass,
+                    })
+                    .unwrap();
+                assert_eq!(
+                    r.class_sums,
+                    crate::tm::infer::multiclass_class_sums(&m, &d.features[i]),
+                    "sample {i} level {}",
+                    level.name()
+                );
+            }
+            srv.shutdown();
+        }
+        // Auto resolves to the widest detected level.
+        let (srv, _) = server(false, None);
+        assert_eq!(srv.simd_lanes().level(), SimdLevel::detect_best());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn job_guard_counts_panicked_jobs_and_frees_the_slot() {
+        // Regression for the pooled-path slot leak: a job that dies
+        // without calling finish() (the panic path) must release its
+        // in-flight slot and surface in `failed`; a finished job
+        // releases the slot without touching `failed`.
+        let stats = Arc::new(ServerStats::new());
+        let in_flight = Arc::new(AtomicU64::new(2));
+
+        let g = JobGuard::new(Arc::clone(&stats), Arc::clone(&in_flight));
+        drop(g); // abandoned (what unwinding does)
+        assert_eq!(in_flight.load(Ordering::SeqCst), 1);
+        assert_eq!(stats.failed.load(Ordering::Relaxed), 1);
+
+        let g = JobGuard::new(Arc::clone(&stats), Arc::clone(&in_flight));
+        g.finish();
+        assert_eq!(in_flight.load(Ordering::SeqCst), 0);
+        assert_eq!(stats.failed.load(Ordering::Relaxed), 1, "finish() is not a failure");
+    }
+
+    #[test]
+    fn pooled_job_panic_keeps_budget_and_counters_conserved() {
+        // End-to-end: drive a panicking job through a real WorkerPool
+        // with the same guard wiring submit() uses, then prove the
+        // serving loop still works and the accounting identity
+        // submitted == completed + failed holds.
+        let stats = Arc::new(ServerStats::new());
+        let in_flight = Arc::new(AtomicU64::new(0));
+        let pool: WorkerPool<()> = WorkerPool::new(1, |_| ()).unwrap();
+        for i in 0..4u32 {
+            let stats = Arc::clone(&stats);
+            let in_flight = Arc::clone(&in_flight);
+            in_flight.fetch_add(1, Ordering::SeqCst);
+            stats.submitted.fetch_add(1, Ordering::Relaxed);
+            pool.submit(Box::new(move |_| {
+                let guard = JobGuard::new(Arc::clone(&stats), in_flight);
+                if i % 2 == 0 {
+                    panic!("injected job failure");
+                }
+                stats.completed.fetch_add(1, Ordering::Relaxed);
+                guard.finish();
+            }))
+            .unwrap();
+        }
+        pool.shutdown();
+        assert_eq!(in_flight.load(Ordering::SeqCst), 0, "no leaked slots");
+        let snap = stats.snapshot();
+        assert_eq!(snap.submitted, 4);
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.failed, 2);
     }
 
     #[test]

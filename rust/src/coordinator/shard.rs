@@ -164,6 +164,12 @@ impl ShardedCoordinator {
         self.shards.len()
     }
 
+    /// The SIMD lane width the shards' packed engines evaluate through
+    /// (identical on every shard: all were built from the same config).
+    pub fn simd_lanes(&self) -> crate::tm::simd::WordLanes {
+        self.shards[0].simd_lanes()
+    }
+
     /// Shard a feature vector routes to (the default routing key).
     pub fn shard_for_features(&self, features: &[bool]) -> usize {
         self.ring.shard_for_hash(hash_features(features))

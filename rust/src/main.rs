@@ -11,9 +11,10 @@ use tsetlin_td::cli::{Args, USAGE};
 use tsetlin_td::config::ServeConfig;
 use tsetlin_td::coordinator::{Backend, CoordinatorServer, InferRequest, ShardedCoordinator};
 use tsetlin_td::sim::TechParams;
+use tsetlin_td::tm::simd::{SimdChoice, SimdLevel, WordLanes};
 use tsetlin_td::tm::{
-    self, cotm_train::train_cotm_with, data, train::train_multiclass_with, TmParams,
-    TrainerEngine,
+    self, cotm_train::train_cotm_with, data, train::train_multiclass_with, BatchEngine,
+    TmParams, TrainerEngine,
 };
 use tsetlin_td::util::SplitMix64;
 use tsetlin_td::wta::{analysis, WtaKind};
@@ -264,16 +265,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(path) => ServeConfig::load(path)?,
         None => ServeConfig::default(),
     };
-    // CLI overrides the config file's shard count.
+    // CLI overrides the config file's shard count and SIMD level.
     cfg.shards = args.flag_parse("shards", cfg.shards)?;
+    if let Some(name) = args.flag("simd") {
+        cfg.simd = SimdChoice::parse(name).ok_or_else(|| {
+            Error::config(format!(
+                "unknown --simd {name:?} (auto|scalar|portable|avx2|avx512)"
+            ))
+        })?;
+    }
     let with_golden = !args.switch("no-golden");
     let n_requests = args.flag_parse("requests", 200usize)?;
     let dataset = data::iris()?;
     let (m, cm) = train_pair(&dataset, 60, 2)?;
     let srv = ShardedCoordinator::new(&cfg, m, cm, with_golden)?;
     println!(
-        "serving {n_requests} mixed requests across {} shard(s) (golden={with_golden}) ...",
-        srv.num_shards()
+        "serving {n_requests} mixed requests across {} shard(s) (golden={with_golden}, \
+         simd={} requested {}) ...",
+        srv.num_shards(),
+        srv.simd_lanes().name(),
+        cfg.simd.name()
     );
     let mut rng = SplitMix64::new(1);
     let backends: Vec<Backend> = Backend::ALL
@@ -305,6 +316,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         dt.as_secs_f64() * 1e3,
         ok as f64 / dt.as_secs_f64()
     );
+    println!("simd lanes: {} (x{})", srv.simd_lanes().name(), srv.simd_lanes().level().lanes());
     println!("{}", srv.stats().render());
     if srv.num_shards() > 1 {
         for (i, s) in srv.shard_stats().iter().enumerate() {
@@ -369,6 +381,48 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
         if exact != dataset.len() {
             failures.push(format!(
                 "{name}: only {exact}/{} samples bit-exact vs reference",
+                dataset.len()
+            ));
+        }
+    }
+    // SIMD lane sweep: every lane width this host offers must hold the
+    // same bit-exact bar through the packed engines (the dispatch
+    // choice is a speed decision only). Unavailable levels are
+    // reported, not silently skipped.
+    println!(
+        "simd dispatch: auto resolves to {} on this host",
+        SimdLevel::detect_best().name()
+    );
+    for level in SimdLevel::ALL {
+        let bar = format!("simd-{}", level.name());
+        if !level.is_available() {
+            println!("{bar:24} skipped (not available on this host)");
+            continue;
+        }
+        let lanes = WordLanes::new(level)?;
+        let bp_mc = tm::BitParallelMulticlass::from_model(&m)?.with_lanes(lanes);
+        let bp_co = tm::BitParallelCotm::from_model(&cm)?.with_lanes(lanes);
+        let mut exact = 0usize;
+        for x in &dataset.features {
+            exact += (bp_mc.class_sums(x) == tm::infer::multiclass_class_sums(&m, x)
+                && bp_co.class_sums(x) == tm::infer::cotm_class_sums(&cm, x))
+                as usize;
+        }
+        // The batched tile path is held to the same bar as the
+        // single-sample path, per lane width.
+        let batch = bp_mc.infer_batch(&dataset.features);
+        let mut batch_exact = 0usize;
+        for (out, x) in batch.iter().zip(&dataset.features) {
+            if out.0 == tm::infer::multiclass_class_sums(&m, x) {
+                batch_exact += 1;
+            }
+        }
+        let pct = 100.0 * exact.min(batch_exact) as f64 / dataset.len() as f64;
+        println!("{bar:24} bit-exact sums    {pct:.1}% (x{} lanes)", level.lanes());
+        if exact != dataset.len() || batch_exact != dataset.len() {
+            failures.push(format!(
+                "{bar}: only {}/{} samples bit-exact vs reference",
+                exact.min(batch_exact),
                 dataset.len()
             ));
         }

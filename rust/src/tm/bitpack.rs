@@ -15,13 +15,25 @@
 //!   `ceil(2F/64)` words; each clause keeps a skip list of its non-zero
 //!   include words so sparse clauses touch only the words they
 //!   constrain (the clause-indexing idea of arXiv 2004.03188 applied at
-//!   word granularity).
-//! * **Sample-major batch** ([`BitSlicedBatch`] +
-//!   [`PackedClause::evaluate_batch`]): a bit-sliced transpose where
-//!   word `column[l][blk]` holds literal `l` of samples
-//!   `blk*64 .. blk*64+63`, one sample per bit. A clause then ANDs one
-//!   column per included literal and produces 64 clause outputs per
-//!   word — the batched path the serving coordinator flushes through.
+//!   word granularity). Dense clauses instead sweep the whole span
+//!   through [`super::simd::WordLanes`]
+//!   ([`PackedClause::evaluate_with`]).
+//! * **Tiled sample-major batch** ([`BitSlicedBatch`] +
+//!   [`PackedClause::evaluate_tile`]): a bit-sliced transpose where bit
+//!   `s % 64` of a literal's block word holds that literal's value for
+//!   sample `s`, organised as **cache-blocked tiles** of
+//!   [`TILE_BLOCKS`] sample blocks. Within a tile the layout is
+//!   literal-major — literal `l`'s [`TILE_BLOCKS`] lane words are
+//!   contiguous, so one [`super::simd::WordLanes`] op ANDs 4–8 blocks —
+//!   and evaluation is **clause-major within a tile, samples-block-major
+//!   across tiles**: every clause is evaluated against tile `t` before
+//!   anyone touches tile `t+1`, keeping the working set at
+//!   `2F × TILE_BLOCKS` words (cache-resident) however large the batch
+//!   grows. This is the batch layout of the massively-parallel TM
+//!   architecture (arXiv 2009.04861) adapted to CPU cache lines.
+//!   [`PackedClause::evaluate_batch`] keeps the historic one-word-
+//!   per-op walk over the same tiles as the single-word reference (and
+//!   the `simd = "scalar"` serving path).
 //!
 //! Semantics are pinned to the scalar reference
 //! ([`ClauseMask::evaluate`]): an **empty clause** (all-exclude mask —
@@ -30,11 +42,24 @@
 //! "always include ⇒ always fire". The conformance suite
 //! (`tests/bitparallel_equivalence.rs`) holds every path to bit-exact
 //! agreement with the reference, so this convention is load-bearing.
+//!
+//! The tile geometry (stride, tile count, word indexing) is mirrored
+//! bit-for-bit by `python/simdtile.py`; the golden vectors in the tests
+//! below are asserted identically in `python/tests/test_simdtile.py`,
+//! so toolchain-less CI still validates the layout math.
 
 use super::model::ClauseMask;
+use super::simd::{self, WordLanes};
 
 /// Bits per packed word.
 pub const WORD_BITS: usize = 64;
+
+/// Sample blocks per cache tile of a [`BitSlicedBatch`]: 8 blocks =
+/// 512 samples, and one tile's working set is `2F × 8` words (16 KiB
+/// at F = 128) — sized so a whole tile stays cache-resident while every
+/// clause walks it. 8 is also one AVX-512 op or two AVX2/portable
+/// unrolled steps per literal.
+pub const TILE_BLOCKS: usize = 8;
 
 /// Number of `u64` words needed to hold `bits` bits.
 pub fn words_for(bits: usize) -> usize {
@@ -75,12 +100,26 @@ pub fn pack_literals(features: &[bool]) -> Vec<u64> {
 /// an empty clause must fire to receive Type I feedback and grow. Used
 /// by the trainer engine's incrementally-maintained masks
 /// (`super::trainer_engine::ClauseState`).
+///
+/// Evaluates through the process-wide detected
+/// [`WordLanes`](super::simd::WordLanes) — every lane width computes
+/// the identical predicate (`tests/simd_dispatch.rs` diffs them), so
+/// the trainer bit-identity contract is unaffected by dispatch.
 #[inline]
 pub fn eval_words_train(include: &[u64], literal_words: &[u64]) -> bool {
-    include
-        .iter()
-        .zip(literal_words)
-        .all(|(&inc, &lw)| inc & !lw == 0)
+    eval_words_train_with(include, literal_words, simd::default_lanes())
+}
+
+/// [`eval_words_train`] at an explicit lane width (the forced-portable
+/// parity suites pin every level to the same answer).
+#[inline]
+pub fn eval_words_train_with(
+    include: &[u64],
+    literal_words: &[u64],
+    lanes: WordLanes,
+) -> bool {
+    debug_assert_eq!(include.len(), literal_words.len());
+    !lanes.violates(include, literal_words)
 }
 
 /// One clause's include mask, packed for both evaluation layouts.
@@ -128,6 +167,8 @@ impl PackedClause {
 
     /// Evaluate against one packed literal vector ([`pack_literals`]):
     /// fires iff `include & !literals == 0` in every non-zero word.
+    /// The single-word reference walk; [`PackedClause::evaluate_with`]
+    /// is the lane-dispatched variant.
     pub fn evaluate(&self, literal_words: &[u64]) -> bool {
         if self.is_empty() {
             return false;
@@ -138,65 +179,169 @@ impl PackedClause {
         })
     }
 
+    /// Lane-dispatched single-sample evaluation. Sparse clauses keep
+    /// the skip-list walk (they touch fewer words than any lane sweep
+    /// would); clauses whose include words are mostly non-zero sweep
+    /// the whole span through `lanes` — identical answer either way,
+    /// because the skipped words are all-zero and can never violate.
+    pub fn evaluate_with(&self, literal_words: &[u64], lanes: WordLanes) -> bool {
+        if self.is_empty() {
+            return false;
+        }
+        let words = self.include.len();
+        if self.nonzero_words.len() >= 8 && 2 * self.nonzero_words.len() >= words {
+            !lanes.violates(&self.include, &literal_words[..words])
+        } else {
+            self.evaluate(literal_words)
+        }
+    }
+
     /// Evaluate 64 samples at once against one block of a
     /// [`BitSlicedBatch`]: returns a word with bit `s` = clause output
     /// for sample `blk*64 + s`. Padding sample bits come back 0 because
     /// their literal columns are all-zero (and empty clauses return 0
-    /// outright).
+    /// outright). One `u64` per op with a branch per word — the
+    /// single-word reference the SIMD tile path is diffed against.
     pub fn evaluate_batch(&self, batch: &BitSlicedBatch, blk: usize) -> u64 {
         if self.is_empty() {
             return 0;
         }
         let mut acc = !0u64;
         for &l in &self.literals {
-            acc &= batch.column(l as usize)[blk];
+            acc &= batch.lit_word(blk, l as usize);
             if acc == 0 {
                 break;
             }
         }
         acc & batch.valid_mask(blk)
     }
+
+    /// Evaluate one whole tile (up to [`TILE_BLOCKS`] × 64 samples) in
+    /// lane-width steps: `out[j]` gets the clause-output word of the
+    /// tile's block `j`. The accumulator starts all-ones, ANDs each
+    /// included literal's contiguous lane words, and exits as soon as
+    /// every lane goes dead. `out.len()` must be
+    /// [`BitSlicedBatch::tile_blocks`]`(tile)`.
+    pub fn evaluate_tile(
+        &self,
+        batch: &BitSlicedBatch,
+        tile: usize,
+        lanes: WordLanes,
+        out: &mut [u64],
+    ) {
+        let tb = batch.tile_blocks(tile);
+        debug_assert_eq!(out.len(), tb, "tile output width mismatch");
+        if self.is_empty() {
+            out.fill(0);
+            return;
+        }
+        out.fill(!0u64);
+        for &l in &self.literals {
+            if !lanes.and_assign_any(out, batch.lit_lane(tile, l as usize)) {
+                return; // every lane dead — out is all zeros already
+            }
+        }
+        // Padding bits of the batch's final partial block are already 0
+        // (each AND above used zero-padded columns); the mask keeps the
+        // invariant explicit and free.
+        let last = tile * batch.tile_stride() + tb - 1;
+        if last + 1 == batch.blocks {
+            out[tb - 1] &= batch.valid_mask(last);
+        }
+    }
 }
 
-/// A batch of samples in bit-sliced (sample-major) layout: for each of
-/// the 2F literals, `blocks` words whose bit `s` is that literal's value
-/// for sample `blk*64 + s`.
+/// A batch of samples in tiled bit-sliced (sample-major) layout.
+///
+/// Samples are split into 64-wide *blocks* (bit `s % 64` of a block
+/// word) and blocks into tiles of [`TILE_BLOCKS`]; within tile `t`, the
+/// lane words of literal `l` for the tile's blocks are contiguous:
+///
+/// ```text
+/// word(blk, l) = data[(blk / stride) * 2F * stride   // tile base
+///                     + l * stride                   // literal lane
+///                     + blk % stride]                // block in tile
+/// ```
+///
+/// where `stride = min(blocks, TILE_BLOCKS)` (small batches don't pad
+/// out to a full tile). Mirrored bit-for-bit by `python/simdtile.py`.
 #[derive(Debug, Clone)]
 pub struct BitSlicedBatch {
-    /// `2F * blocks` words, literal-major (`column(l)` is contiguous).
-    columns: Vec<u64>,
+    /// `tiles * 2F * stride` words, tile-major, literal-major within a
+    /// tile. Words past the last block of the final tile stay zero.
+    data: Vec<u64>,
     /// Boolean input features per sample (F).
     pub features: usize,
     /// Samples in the batch.
     pub samples: usize,
-    /// `ceil(samples / 64)` words per literal column.
+    /// `ceil(samples / 64)` sample blocks across the whole batch.
     pub blocks: usize,
+    /// Blocks per tile (`min(blocks, TILE_BLOCKS)`).
+    stride: usize,
 }
 
 impl BitSlicedBatch {
-    /// Transpose `rows` (each a length-F feature vector) into bit-sliced
-    /// literal columns. Panics if a row width differs from `features`
-    /// (callers validate widths at the serving boundary).
+    /// Transpose `rows` (each a length-F feature vector) into tiled
+    /// bit-sliced literal lanes. Panics if a row width differs from
+    /// `features` (callers validate widths at the serving boundary).
     pub fn pack<R: AsRef<[bool]>>(rows: &[R], features: usize) -> BitSlicedBatch {
         let samples = rows.len();
         let blocks = words_for(samples.max(1));
-        let mut columns = vec![0u64; 2 * features * blocks];
+        let stride = blocks.min(TILE_BLOCKS);
+        let tiles = blocks.div_ceil(stride);
+        let lits = 2 * features;
+        let mut data = vec![0u64; tiles * lits * stride];
         for (s, row) in rows.iter().enumerate() {
             let row = row.as_ref();
             assert_eq!(row.len(), features, "batch row width mismatch");
-            let (blk, bit) = (s / WORD_BITS, 1u64 << (s % WORD_BITS));
+            let blk = s / WORD_BITS;
+            let bit = 1u64 << (s % WORD_BITS);
+            let base = (blk / stride) * lits * stride + blk % stride;
             for (i, &f) in row.iter().enumerate() {
                 let lit = 2 * i + usize::from(!f);
-                columns[lit * blocks + blk] |= bit;
+                data[base + lit * stride] |= bit;
             }
         }
-        BitSlicedBatch { columns, features, samples, blocks }
+        BitSlicedBatch { data, features, samples, blocks, stride }
     }
 
-    /// The packed column of literal `l` (`blocks` words).
+    /// Blocks per tile (the lane width the tile evaluator walks).
     #[inline]
-    pub fn column(&self, l: usize) -> &[u64] {
-        &self.columns[l * self.blocks..(l + 1) * self.blocks]
+    pub fn tile_stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Number of tiles.
+    #[inline]
+    pub fn tiles(&self) -> usize {
+        self.blocks.div_ceil(self.stride)
+    }
+
+    /// Blocks actually present in tile `t` (`stride` except a shorter
+    /// final tile).
+    #[inline]
+    pub fn tile_blocks(&self, t: usize) -> usize {
+        self.stride.min(self.blocks - t * self.stride)
+    }
+
+    /// The contiguous lane words of literal `l` in tile `t`
+    /// ([`Self::tile_blocks`]`(t)` words).
+    #[inline]
+    pub fn lit_lane(&self, t: usize, l: usize) -> &[u64] {
+        let base = (t * 2 * self.features + l) * self.stride;
+        &self.data[base..base + self.tile_blocks(t)]
+    }
+
+    /// One literal's word for one global block index.
+    #[inline]
+    pub fn lit_word(&self, blk: usize, l: usize) -> u64 {
+        let t = blk / self.stride;
+        self.data[(t * 2 * self.features + l) * self.stride + blk % self.stride]
+    }
+
+    /// Raw tiled words (the Python mirror fingerprints these).
+    pub fn raw_words(&self) -> &[u64] {
+        &self.data
     }
 
     /// Mask of valid sample bits in block `blk` (all-ones except the
@@ -216,6 +361,7 @@ impl BitSlicedBatch {
 mod tests {
     use super::*;
     use crate::tm::model::make_literals;
+    use crate::tm::simd::SimdLevel;
 
     fn mask(include: Vec<bool>) -> ClauseMask {
         ClauseMask { include }
@@ -266,7 +412,8 @@ mod tests {
     fn training_eval_fires_empty_clauses_unlike_inference() {
         // The two conventions, side by side, on the same words: the
         // inference path (PackedClause) returns 0 for an all-exclude
-        // clause; the training path (eval_words_train) fires it.
+        // clause; the training path (eval_words_train) fires it —
+        // at every available lane width.
         let lits = pack_literals(&[true, false, true]);
         let empty = vec![0u64; lits.len()];
         assert!(eval_words_train(&empty, &lits));
@@ -276,11 +423,15 @@ mod tests {
             let mut inc = vec![false; 6];
             inc[inc_lit] = true;
             let pc = PackedClause::from_mask(&mask(inc));
-            assert_eq!(
-                eval_words_train(&pc.include, &lits),
-                pc.evaluate(&lits),
-                "literal {inc_lit}"
-            );
+            for level in SimdLevel::available() {
+                let lanes = WordLanes::new(level).unwrap();
+                assert_eq!(
+                    eval_words_train_with(&pc.include, &lits, lanes),
+                    pc.evaluate(&lits),
+                    "literal {inc_lit} level {}",
+                    level.name()
+                );
+            }
         }
     }
 
@@ -336,10 +487,37 @@ mod tests {
     }
 
     #[test]
+    fn evaluate_with_agrees_with_skip_walk_at_every_density() {
+        // Sparse clauses route through the skip list, dense ones through
+        // the lane sweep — the answers must be identical at every lane
+        // width, including the dense threshold boundary.
+        use crate::testutil::prop;
+        prop("evaluate_with vs skip walk", 120, |g| {
+            let f = g.usize(1..200);
+            let density = if g.chance(0.3) { 0.9 } else { g.f64_unit() * 0.5 };
+            let inc: Vec<bool> = (0..2 * f).map(|_| g.chance(density)).collect();
+            let pc = PackedClause::from_mask(&mask(inc));
+            let x = g.bools(f);
+            let lw = pack_literals(&x);
+            let want = pc.evaluate(&lw);
+            for level in SimdLevel::available() {
+                let lanes = WordLanes::new(level).unwrap();
+                assert_eq!(
+                    pc.evaluate_with(&lw, lanes),
+                    want,
+                    "f={f} level {}",
+                    level.name()
+                );
+            }
+        });
+    }
+
+    #[test]
     fn single_sample_and_batched_agree() {
         // 5 features, 3 clauses, 67 samples (crosses the 64-sample block
         // boundary): bit `s` of each batch word must equal the
-        // single-sample result.
+        // single-sample result — via both the single-word walk and the
+        // tile path at every available lane width.
         let f = 5;
         let masks = [
             mask((0..2 * f).map(|i| i % 4 == 0).collect()),
@@ -352,17 +530,128 @@ mod tests {
         let rows: Vec<&[bool]> = samples.iter().map(|r| r.as_slice()).collect();
         let batch = BitSlicedBatch::pack(&rows, f);
         assert_eq!(batch.blocks, 2);
+        assert_eq!(batch.tile_stride(), 2);
+        assert_eq!(batch.tiles(), 1);
+        assert_eq!(batch.tile_blocks(0), 2);
         assert_eq!(batch.valid_mask(0), !0);
         assert_eq!(batch.valid_mask(1), 0b111);
         for m in &masks {
             let pc = PackedClause::from_mask(m);
-            for (s, sample) in samples.iter().enumerate() {
-                let single = pc.evaluate(&pack_literals(sample));
-                let word = pc.evaluate_batch(&batch, s / WORD_BITS);
-                let batched = (word >> (s % WORD_BITS)) & 1 == 1;
-                assert_eq!(single, batched, "sample {s}");
-                assert_eq!(single, m.evaluate(&make_literals(sample)), "sample {s}");
+            let mut tile_out = vec![0u64; 2];
+            for level in SimdLevel::available() {
+                let lanes = WordLanes::new(level).unwrap();
+                pc.evaluate_tile(&batch, 0, lanes, &mut tile_out);
+                for (s, sample) in samples.iter().enumerate() {
+                    let single = pc.evaluate(&pack_literals(sample));
+                    let word = pc.evaluate_batch(&batch, s / WORD_BITS);
+                    let batched = (word >> (s % WORD_BITS)) & 1 == 1;
+                    let tiled =
+                        (tile_out[s / WORD_BITS] >> (s % WORD_BITS)) & 1 == 1;
+                    assert_eq!(single, batched, "sample {s}");
+                    assert_eq!(single, tiled, "sample {s} level {}", level.name());
+                    assert_eq!(single, m.evaluate(&make_literals(sample)), "sample {s}");
+                }
             }
+        }
+    }
+
+    #[test]
+    fn tile_geometry_spans_multiple_tiles() {
+        // 600 samples -> 10 blocks -> stride 8, 2 tiles (8 + 2 blocks);
+        // the word of any (blk, literal) must equal the untiled
+        // transpose, wherever the tile boundary falls.
+        let f = 5;
+        let rows: Vec<Vec<bool>> = (0..600u32)
+            .map(|s| (0..f).map(|i| (s.wrapping_mul(2654435761) >> i) & 1 == 1).collect())
+            .collect();
+        let batch = BitSlicedBatch::pack(&rows, f);
+        assert_eq!(batch.blocks, 10);
+        assert_eq!(batch.tile_stride(), 8);
+        assert_eq!(batch.tiles(), 2);
+        assert_eq!(batch.tile_blocks(0), 8);
+        assert_eq!(batch.tile_blocks(1), 2);
+        // lit_lane is the contiguous view of lit_word over the tile.
+        for t in 0..batch.tiles() {
+            for l in 0..2 * f {
+                let lane = batch.lit_lane(t, l);
+                assert_eq!(lane.len(), batch.tile_blocks(t));
+                for (j, &w) in lane.iter().enumerate() {
+                    assert_eq!(w, batch.lit_word(t * 8 + j, l), "t={t} l={l} j={j}");
+                }
+            }
+        }
+        // Every bit equals the per-sample literal value.
+        for (s, row) in rows.iter().enumerate() {
+            for (i, &fv) in row.iter().enumerate() {
+                let lit = 2 * i + usize::from(!fv);
+                let w = batch.lit_word(s / WORD_BITS, lit);
+                assert_eq!((w >> (s % WORD_BITS)) & 1, 1, "s={s} i={i}");
+            }
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Cross-language golden vectors, asserted identically in
+    // python/tests/test_simdtile.py (the mirror generated them). If
+    // either language's tile layout drifts, both suites fail.
+    // Scheme: F=3, 200 samples, feature i of sample s =
+    // (i*i + 3*i*s + 2*s) % 7 < 3 (the packedtrain/invindex formula);
+    // clause includes literal l iff (3*l) % 5 == 0.
+    // -----------------------------------------------------------------
+
+    fn golden_rows() -> Vec<Vec<bool>> {
+        (0..200usize)
+            .map(|s| (0..3).map(|i| (i * i + 3 * i * s + 2 * s) % 7 < 3).collect())
+            .collect()
+    }
+
+    /// FNV-1a/64 over the tiled words' little-endian bytes (local copy;
+    /// the shared constant lives in coordinator::shard for routing).
+    fn fnv1a64_words(words: &[u64]) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &w in words {
+            for b in w.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        h
+    }
+
+    #[test]
+    fn tiled_layout_golden_vectors_match_python_mirror() {
+        let rows = golden_rows();
+        let batch = BitSlicedBatch::pack(&rows, 3);
+        assert_eq!(batch.blocks, 4);
+        assert_eq!(batch.tile_stride(), 4);
+        assert_eq!(batch.tiles(), 1);
+        assert_eq!(batch.raw_words().len(), 24);
+        // Pinned by python/tests/test_simdtile.py::test_golden_vectors.
+        assert_eq!(fnv1a64_words(batch.raw_words()), 0x6c6e_8c1e_a843_9d9e);
+        assert_eq!(batch.lit_word(0, 0), 0x9326_4c99_3264_c993);
+        assert_eq!(batch.lit_word(1, 1), 0x366c_d9b3_66cd_9b36);
+        assert_eq!(batch.lit_word(3, 4), 0x0000_0000_0000_0087);
+        assert_eq!(batch.valid_mask(3), 0x0000_0000_0000_00ff);
+
+        let inc: Vec<bool> = (0..6).map(|l| (3 * l) % 5 == 0).collect();
+        let pc = PackedClause::from_mask(&mask(inc));
+        assert_eq!(pc.literals, vec![0, 5]);
+        let mut out = vec![0u64; 4];
+        for level in SimdLevel::available() {
+            pc.evaluate_tile(&batch, 0, WordLanes::new(level).unwrap(), &mut out);
+            // Pinned by the Python mirror as well; every lane width
+            // must land on the same words.
+            assert_eq!(
+                out,
+                vec![
+                    0x8306_0c18_3060_c183,
+                    0xc183_060c_1830_60c1,
+                    0x60c1_8306_0c18_3060,
+                    0x0000_0000_0000_0030,
+                ],
+                "level {}",
+                level.name()
+            );
         }
     }
 
@@ -378,5 +667,8 @@ mod tests {
         inc[0] = true; // x_0, set in every sample
         let pc = PackedClause::from_mask(&mask(inc));
         assert_eq!(pc.evaluate_batch(&batch, 0), 0b111);
+        let mut out = vec![0u64; 1];
+        pc.evaluate_tile(&batch, 0, WordLanes::portable(), &mut out);
+        assert_eq!(out[0], 0b111);
     }
 }

@@ -3,11 +3,20 @@
 //! [`BitParallelMulticlass`] and [`BitParallelCotm`] precompile a
 //! trained model into the packed clause plans of [`super::bitpack`]:
 //! clause evaluation becomes word-wide `AND`/compare instead of
-//! per-literal `bool` loops, and batched requests are evaluated 64
-//! samples per word through the bit-sliced layout. Both engines are
-//! plain owned data — `Send + Sync` — so one shared instance serves
-//! every coordinator thread, unlike the `Rc`-coded hardware models that
-//! must be rebuilt per worker.
+//! per-literal `bool` loops, and batched requests are evaluated through
+//! the cache-blocked tile layout — clause-major within a tile,
+//! samples-block-major across tiles — in [`super::simd::WordLanes`]
+//! steps (4×`u64` portable-unrolled, AVX2, or AVX-512 lanes behind
+//! runtime dispatch; `SimdLevel::Scalar` keeps the historic
+//! one-word-per-op walk as the reference and bench baseline). Both
+//! engines are plain owned data — `Send + Sync` — so one shared
+//! instance serves every coordinator thread, unlike the `Rc`-coded
+//! hardware models that must be rebuilt per worker.
+//!
+//! The lane width is a *speed* decision only: every level computes the
+//! identical predicates, so sums and argmax are invariant under
+//! dispatch (enforced by `tests/simd_dispatch.rs` on top of the
+//! reference conformance below).
 //!
 //! Bit-exactness contract (§III-A): class sums and argmax must equal
 //! [`super::infer::multiclass_class_sums`] /
@@ -18,6 +27,7 @@
 use super::bitpack::{pack_literals, words_for, BitSlicedBatch, PackedClause, WORD_BITS};
 use super::infer::predict_argmax;
 use super::model::{CoTmModel, MultiClassTmModel, TmParams};
+use super::simd::{self, SimdLevel, WordLanes};
 use crate::error::Result;
 
 /// Per-sample result of a batched evaluation: `(class_sums, argmax)`.
@@ -73,6 +83,54 @@ pub trait BatchEngine: Sync {
     }
 }
 
+/// Walk every set clause-output bit of `plans` over a tiled batch and
+/// hand `(payload, sample_index)` to `apply` — the shared scatter core
+/// of both engines' batch paths.
+///
+/// Non-scalar lanes stream **clause-major within a tile**: every plan
+/// is evaluated against tile `t` (whose `2F × stride` words are
+/// cache-resident) before tile `t+1` is touched, and each plan's
+/// literal lanes are contiguous `stride`-word runs. `Scalar` keeps the
+/// historic per-block single-word walk — the reference the lane paths
+/// are diffed against, and the `simd = "scalar"` serving path.
+fn scatter_clause_words<P: Copy>(
+    batch: &BitSlicedBatch,
+    lanes: WordLanes,
+    plans: &[(&PackedClause, P)],
+    mut apply: impl FnMut(P, usize),
+) {
+    if lanes.level() == SimdLevel::Scalar {
+        for &(pc, payload) in plans {
+            for blk in 0..batch.blocks {
+                let mut word = pc.evaluate_batch(batch, blk);
+                while word != 0 {
+                    let s = blk * WORD_BITS + word.trailing_zeros() as usize;
+                    apply(payload, s);
+                    word &= word - 1;
+                }
+            }
+        }
+        return;
+    }
+    let stride = batch.tile_stride();
+    let mut out = vec![0u64; stride];
+    for t in 0..batch.tiles() {
+        let tb = batch.tile_blocks(t);
+        let o = &mut out[..tb];
+        for &(pc, payload) in plans {
+            pc.evaluate_tile(batch, t, lanes, o);
+            for (j, &w) in o.iter().enumerate() {
+                let mut word = w;
+                let base = (t * stride + j) * WORD_BITS;
+                while word != 0 {
+                    apply(payload, base + word.trailing_zeros() as usize);
+                    word &= word - 1;
+                }
+            }
+        }
+    }
+}
+
 /// Bit-parallel multi-class TM engine: per class, packed clause plans
 /// with alternating +/− polarity (Eq. 1).
 #[derive(Debug, Clone)]
@@ -80,10 +138,14 @@ pub struct BitParallelMulticlass {
     pub params: TmParams,
     /// `[class][clause]` packed plans.
     clauses: Vec<Vec<PackedClause>>,
+    /// Lane width every evaluation dispatches through.
+    lanes: WordLanes,
 }
 
 impl BitParallelMulticlass {
-    /// Compile a validated model into packed clause plans.
+    /// Compile a validated model into packed clause plans, evaluating
+    /// through the widest detected lane width
+    /// ([`simd::default_lanes`]); override with [`Self::with_lanes`].
     pub fn from_model(model: &MultiClassTmModel) -> Result<BitParallelMulticlass> {
         model.validate()?;
         let clauses = model
@@ -91,7 +153,18 @@ impl BitParallelMulticlass {
             .iter()
             .map(|class| class.iter().map(PackedClause::from_mask).collect())
             .collect();
-        Ok(BitParallelMulticlass { params: model.params.clone(), clauses })
+        Ok(BitParallelMulticlass {
+            params: model.params.clone(),
+            clauses,
+            lanes: simd::default_lanes(),
+        })
+    }
+
+    /// The same engine at an explicit lane width (a speed decision
+    /// only: sums are invariant under dispatch).
+    pub fn with_lanes(mut self, lanes: WordLanes) -> BitParallelMulticlass {
+        self.lanes = lanes;
+        self
     }
 
     /// Words per packed literal vector (`ceil(2F/64)`).
@@ -109,7 +182,7 @@ impl BitParallelMulticlass {
             .map(|class| {
                 let mut sum = 0i32;
                 for (j, pc) in class.iter().enumerate() {
-                    if pc.evaluate(literal_words) {
+                    if pc.evaluate_with(literal_words, self.lanes) {
                         sum += if j % 2 == 0 { 1 } else { -1 };
                     }
                 }
@@ -140,21 +213,23 @@ impl BatchEngine for BitParallelMulticlass {
     fn infer_batch<R: AsRef<[bool]> + Sync>(&self, rows: &[R]) -> Vec<BatchResult> {
         let batch = BitSlicedBatch::pack(rows, self.params.features);
         let (n, k) = (batch.samples, self.params.classes);
+        // Plans carry (class, polarity); clause-major within each tile.
+        let plans: Vec<(&PackedClause, (usize, i32))> = self
+            .clauses
+            .iter()
+            .enumerate()
+            .flat_map(|(ci, class)| {
+                class
+                    .iter()
+                    .enumerate()
+                    .map(move |(j, pc)| (pc, (ci, if j % 2 == 0 { 1 } else { -1 })))
+            })
+            .collect();
         // Sample-major accumulator: sums[s*k + class].
         let mut sums = vec![0i32; n * k];
-        for (ci, class) in self.clauses.iter().enumerate() {
-            for (j, pc) in class.iter().enumerate() {
-                let polarity = if j % 2 == 0 { 1 } else { -1 };
-                for blk in 0..batch.blocks {
-                    let mut word = pc.evaluate_batch(&batch, blk);
-                    while word != 0 {
-                        let s = blk * WORD_BITS + word.trailing_zeros() as usize;
-                        sums[s * k + ci] += polarity;
-                        word &= word - 1;
-                    }
-                }
-            }
-        }
+        scatter_clause_words(&batch, self.lanes, &plans, |(ci, polarity), s| {
+            sums[s * k + ci] += polarity;
+        });
         collect_rows(&sums, n, k)
     }
 }
@@ -169,10 +244,13 @@ pub struct BitParallelCotm {
     /// `[clause][class]` weight columns (transposed from the model's
     /// `[class][clause]` for contiguous access per firing clause).
     weight_cols: Vec<Vec<i32>>,
+    /// Lane width every evaluation dispatches through.
+    lanes: WordLanes,
 }
 
 impl BitParallelCotm {
-    /// Compile a validated model into packed clause plans.
+    /// Compile a validated model into packed clause plans (widest
+    /// detected lanes; override with [`Self::with_lanes`]).
     pub fn from_model(model: &CoTmModel) -> Result<BitParallelCotm> {
         model.validate()?;
         let clauses: Vec<PackedClause> =
@@ -180,7 +258,18 @@ impl BitParallelCotm {
         let weight_cols = (0..model.params.clauses)
             .map(|j| model.weights.iter().map(|row| row[j]).collect())
             .collect();
-        Ok(BitParallelCotm { params: model.params.clone(), clauses, weight_cols })
+        Ok(BitParallelCotm {
+            params: model.params.clone(),
+            clauses,
+            weight_cols,
+            lanes: simd::default_lanes(),
+        })
+    }
+
+    /// The same engine at an explicit lane width.
+    pub fn with_lanes(mut self, lanes: WordLanes) -> BitParallelCotm {
+        self.lanes = lanes;
+        self
     }
 
     /// Words per packed literal vector (`ceil(2F/64)`).
@@ -193,7 +282,7 @@ impl BitParallelCotm {
         debug_assert_eq!(literal_words.len(), self.literal_words());
         let mut sums = vec![0i32; self.params.classes];
         for (pc, wcol) in self.clauses.iter().zip(&self.weight_cols) {
-            if pc.evaluate(literal_words) {
+            if pc.evaluate_with(literal_words, self.lanes) {
                 for (s, &w) in sums.iter_mut().zip(wcol) {
                     *s += w;
                 }
@@ -224,20 +313,15 @@ impl BatchEngine for BitParallelCotm {
     fn infer_batch<R: AsRef<[bool]> + Sync>(&self, rows: &[R]) -> Vec<BatchResult> {
         let batch = BitSlicedBatch::pack(rows, self.params.features);
         let (n, k) = (batch.samples, self.params.classes);
+        let plans: Vec<(&PackedClause, usize)> =
+            self.clauses.iter().enumerate().map(|(j, pc)| (pc, j)).collect();
         let mut sums = vec![0i32; n * k];
-        for (pc, wcol) in self.clauses.iter().zip(&self.weight_cols) {
-            for blk in 0..batch.blocks {
-                let mut word = pc.evaluate_batch(&batch, blk);
-                while word != 0 {
-                    let s = blk * WORD_BITS + word.trailing_zeros() as usize;
-                    let row = &mut sums[s * k..(s + 1) * k];
-                    for (acc, &w) in row.iter_mut().zip(wcol) {
-                        *acc += w;
-                    }
-                    word &= word - 1;
-                }
+        scatter_clause_words(&batch, self.lanes, &plans, |j, s| {
+            let row = &mut sums[s * k..(s + 1) * k];
+            for (acc, &w) in row.iter_mut().zip(&self.weight_cols[j]) {
+                *acc += w;
             }
-        }
+        });
         collect_rows(&sums, n, k)
     }
 }
@@ -343,10 +427,43 @@ mod tests {
     }
 
     #[test]
+    fn every_available_lane_width_produces_identical_batches() {
+        // The dispatch choice is a speed decision only: forced scalar,
+        // portable, and any detected vector level must produce the
+        // same batch output word for word (the full random-model sweep
+        // lives in tests/simd_dispatch.rs).
+        let p = TmParams { features: 9, clauses: 6, classes: 3, ..tiny_params() };
+        let mut m = MultiClassTmModel::zeroed(p.clone());
+        for (ci, class) in m.clauses.iter_mut().enumerate() {
+            for (j, cl) in class.iter_mut().enumerate() {
+                *cl = ClauseMask {
+                    include: (0..18).map(|l| (l + 2 * ci + j) % 5 == 0).collect(),
+                };
+            }
+        }
+        let rows: Vec<Vec<bool>> = (0..200u32)
+            .map(|s| (0..9).map(|i| (s.wrapping_mul(7 + i)) & 2 == 2).collect())
+            .collect();
+        let base = BitParallelMulticlass::from_model(&m)
+            .unwrap()
+            .with_lanes(WordLanes::portable());
+        let want = base.infer_batch(&rows);
+        for level in SimdLevel::available() {
+            let e = base.clone().with_lanes(WordLanes::new(level).unwrap());
+            assert_eq!(e.infer_batch(&rows), want, "level {}", level.name());
+            for x in rows.iter().take(5) {
+                assert_eq!(e.class_sums(x), base.class_sums(x), "level {}", level.name());
+            }
+        }
+    }
+
+    #[test]
     fn empty_batch_is_empty() {
         let e = BitParallelMulticlass::from_model(&MultiClassTmModel::zeroed(tiny_params()))
             .unwrap();
         assert!(e.infer_batch(&Vec::<Vec<bool>>::new()).is_empty());
+        let scalar = e.with_lanes(WordLanes::scalar());
+        assert!(scalar.infer_batch(&Vec::<Vec<bool>>::new()).is_empty());
     }
 
     #[test]

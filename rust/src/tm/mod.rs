@@ -1,5 +1,6 @@
 //! Tsetlin Machine substrate: model structures, software inference,
-//! bit-parallel production inference ([`bitpack`] + [`fast_infer`]),
+//! bit-parallel production inference ([`bitpack`] + [`fast_infer`],
+//! evaluated in multi-word [`simd`] lanes behind runtime dispatch),
 //! event-driven inverted-index inference for sparse models ([`index`]),
 //! training (multi-class TM and Coalesced TM, both with a shared
 //! feedback core and packed-evaluation or reference clause engines via
@@ -21,6 +22,7 @@ pub mod infer;
 pub mod iris_data;
 pub mod model;
 pub mod serde;
+pub mod simd;
 pub mod train;
 pub mod trainer_engine;
 
@@ -31,4 +33,5 @@ pub use fast_infer::{BatchEngine, BitParallelCotm, BitParallelMulticlass};
 pub use index::{IndexedCotm, IndexedMulticlass, InvertedIndex};
 pub use infer::{cotm_class_sums, multiclass_class_sums, predict_argmax};
 pub use model::{ClauseMask, CoTmModel, MultiClassTmModel, TmParams};
+pub use simd::{SimdChoice, SimdLevel, WordLanes};
 pub use trainer_engine::{ClauseState, TrainerEngine};

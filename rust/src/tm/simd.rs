@@ -1,0 +1,594 @@
+//! SIMD multi-word evaluation tier: the `WordLanes` abstraction the
+//! packed engines evaluate through.
+//!
+//! The packed representations in [`super::bitpack`] turned clause
+//! evaluation into `u64` word ops, but the engines still consumed one
+//! word per instruction. "Fast and Compact Tsetlin Machine Inference on
+//! CPUs" (arXiv 2510.15653) measures 4–8× left on the table without
+//! vector ILP at exactly this spot, and the massively-parallel layout
+//! of arXiv 2009.04861 motivates the cache-blocked tiles
+//! ([`super::bitpack::BitSlicedBatch`]) that make the lanes stream:
+//! within a tile every literal's lane words are contiguous, so one
+//! `WordLanes` op covers 4–8 sample blocks.
+//!
+//! # Lane widths
+//!
+//! * [`SimdLevel::Scalar`] — one `u64` per op with a branch per word:
+//!   the historic (PR 1) evaluation walk, kept as the bench baseline
+//!   and as the `simd = "scalar"` escape hatch.
+//! * [`SimdLevel::Portable`] — 4×`u64` manually unrolled, pure safe
+//!   Rust. Compiles everywhere, **remains the bit-exact reference** for
+//!   the vector paths: the AVX variants are only ever allowed to be
+//!   faster, never different (enforced by `tests/simd_dispatch.rs` and
+//!   the `tmtd selfcheck` lane bars).
+//! * [`SimdLevel::Avx2`] — 4 lanes via `core::arch::x86_64` intrinsics,
+//!   `#[target_feature(enable = "avx2")]`-gated, selected only when
+//!   `is_x86_feature_detected!("avx2")` says the host has it.
+//! * [`SimdLevel::Avx512`] — 8 lanes, additionally behind the
+//!   **off-by-default `avx512` cargo feature** (the AVX-512 intrinsics
+//!   need rustc ≥ 1.89; the default feature set keeps the crate
+//!   building on older toolchains), and still runtime-detected.
+//!
+//! # Why the portable path stays the reference
+//!
+//! Every level computes the same two predicates —
+//! `acc &= src` with an any-nonzero reduction, and
+//! `any(include & !literals)` — over the same words, so all levels are
+//! bit-identical by construction; the portable path is the one that
+//! compiles on every target and therefore the one the conformance
+//! suites diff the vector paths against. Dispatch
+//! ([`WordLanes::detect`], [`SimdChoice`]) can only change *speed*.
+//!
+//! Compile the vector paths out entirely with
+//! `--no-default-features` (drops the `simd` feature): dispatch then
+//! resolves to the portable/scalar pair only, which is what
+//! `scripts/verify.sh`'s portable-only build proves still stands alone.
+
+use crate::error::{Error, Result};
+
+/// One evaluation lane width. Ordering is "preference at equal
+/// availability": later variants are wider.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SimdLevel {
+    /// One `u64` per op, branch per word — the PR 1 reference walk.
+    Scalar,
+    /// Portable 4×`u64` unrolled baseline (bit-exact reference for the
+    /// vector paths; compiles on every target).
+    Portable,
+    /// AVX2, 4×`u64` per 256-bit lane (x86-64, runtime-detected).
+    Avx2,
+    /// AVX-512F, 8×`u64` per 512-bit lane (x86-64, runtime-detected,
+    /// and compiled only with the `avx512` cargo feature).
+    Avx512,
+}
+
+impl SimdLevel {
+    pub const ALL: [SimdLevel; 4] = [
+        SimdLevel::Scalar,
+        SimdLevel::Portable,
+        SimdLevel::Avx2,
+        SimdLevel::Avx512,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Portable => "portable",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Avx512 => "avx512",
+        }
+    }
+
+    /// `u64` words consumed per unrolled step.
+    pub fn lanes(self) -> usize {
+        match self {
+            SimdLevel::Scalar => 1,
+            SimdLevel::Portable | SimdLevel::Avx2 => 4,
+            SimdLevel::Avx512 => 8,
+        }
+    }
+
+    /// Is this level usable on the running host (compiled in *and*
+    /// detected)? Scalar and portable always are.
+    pub fn is_available(self) -> bool {
+        match self {
+            SimdLevel::Scalar | SimdLevel::Portable => true,
+            SimdLevel::Avx2 => avx2_available(),
+            SimdLevel::Avx512 => avx512_available(),
+        }
+    }
+
+    /// Every level usable on the running host, narrowest first.
+    pub fn available() -> Vec<SimdLevel> {
+        SimdLevel::ALL.iter().copied().filter(|l| l.is_available()).collect()
+    }
+
+    /// The widest available level — what `simd = "auto"` resolves to.
+    pub fn detect_best() -> SimdLevel {
+        if avx512_available() {
+            SimdLevel::Avx512
+        } else if avx2_available() {
+            SimdLevel::Avx2
+        } else {
+            SimdLevel::Portable
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+fn avx2_available() -> bool {
+    false
+}
+
+#[cfg(all(feature = "avx512", target_arch = "x86_64"))]
+fn avx512_available() -> bool {
+    is_x86_feature_detected!("avx512f")
+}
+
+#[cfg(not(all(feature = "avx512", target_arch = "x86_64")))]
+fn avx512_available() -> bool {
+    false
+}
+
+/// The serve-config / CLI dispatch knob (`simd = "auto" | "scalar" |
+/// "portable" | "avx2" | "avx512"`). `Auto` picks the widest detected
+/// level at engine-build time; a forced level errors cleanly at build
+/// time when the host cannot run it (rather than faulting mid-request).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimdChoice {
+    #[default]
+    Auto,
+    Forced(SimdLevel),
+}
+
+impl SimdChoice {
+    pub fn parse(name: &str) -> Option<SimdChoice> {
+        match name {
+            "auto" => Some(SimdChoice::Auto),
+            "scalar" | "single-word" => Some(SimdChoice::Forced(SimdLevel::Scalar)),
+            "portable" | "unrolled" => Some(SimdChoice::Forced(SimdLevel::Portable)),
+            "avx2" => Some(SimdChoice::Forced(SimdLevel::Avx2)),
+            "avx512" => Some(SimdChoice::Forced(SimdLevel::Avx512)),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdChoice::Auto => "auto",
+            SimdChoice::Forced(l) => l.name(),
+        }
+    }
+
+    /// Resolve to concrete lanes; errors when a forced level is not
+    /// compiled in or not detected on this host.
+    pub fn resolve(self) -> Result<WordLanes> {
+        match self {
+            SimdChoice::Auto => Ok(WordLanes::detect()),
+            SimdChoice::Forced(level) => WordLanes::new(level),
+        }
+    }
+}
+
+/// A fixed lane width over `u64` word slices — the two predicates every
+/// packed evaluation in the crate reduces to, dispatched once per slice
+/// (not per word).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WordLanes {
+    level: SimdLevel,
+}
+
+impl WordLanes {
+    /// Lanes at an explicit level; errors when the level is unavailable
+    /// on this host (not compiled in, or not detected).
+    pub fn new(level: SimdLevel) -> Result<WordLanes> {
+        if !level.is_available() {
+            return Err(Error::config(format!(
+                "simd level {:?} is not available on this host (available: {})",
+                level.name(),
+                SimdLevel::available()
+                    .iter()
+                    .map(|l| l.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )));
+        }
+        Ok(WordLanes { level })
+    }
+
+    /// The single-word reference walk.
+    pub const fn scalar() -> WordLanes {
+        WordLanes { level: SimdLevel::Scalar }
+    }
+
+    /// The portable 4×`u64` unrolled baseline — the bit-exact reference
+    /// the vector paths are diffed against.
+    pub const fn portable() -> WordLanes {
+        WordLanes { level: SimdLevel::Portable }
+    }
+
+    /// The widest available level on this host.
+    pub fn detect() -> WordLanes {
+        WordLanes { level: SimdLevel::detect_best() }
+    }
+
+    pub fn level(self) -> SimdLevel {
+        self.level
+    }
+
+    pub fn name(self) -> &'static str {
+        self.level.name()
+    }
+
+    /// `acc[i] &= src[i]` over equal-length slices; returns whether any
+    /// result word is non-zero (the tile evaluator's early-exit
+    /// signal). All levels are bit-identical; only the op width
+    /// differs.
+    #[inline]
+    pub fn and_assign_any(self, acc: &mut [u64], src: &[u64]) -> bool {
+        // Hard assert, not debug: the vector kernels size their loops
+        // from one slice and load from the other, so a mismatch in a
+        // release build would read out of bounds (UB) from safe code.
+        assert_eq!(acc.len(), src.len(), "lane slices must match");
+        match self.level {
+            SimdLevel::Scalar => and_any_scalar(acc, src),
+            SimdLevel::Portable => and_any_portable(acc, src),
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            // SAFETY: WordLanes::new / detect only construct this level
+            // when is_x86_feature_detected!("avx2") held.
+            SimdLevel::Avx2 => unsafe { x86::and_any_avx2(acc, src) },
+            #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+            SimdLevel::Avx2 => and_any_portable(acc, src),
+            #[cfg(all(feature = "avx512", target_arch = "x86_64"))]
+            // SAFETY: constructed only when avx512f was detected.
+            SimdLevel::Avx512 => unsafe { x86_512::and_any_avx512(acc, src) },
+            #[cfg(not(all(feature = "avx512", target_arch = "x86_64")))]
+            SimdLevel::Avx512 => and_any_portable(acc, src),
+        }
+    }
+
+    /// Whether any word has `include & !literals != 0` — i.e. the
+    /// clause constrains a literal the sample does not satisfy. This is
+    /// the single-sample / training firing predicate: a clause fires
+    /// under training semantics iff this is false.
+    #[inline]
+    pub fn violates(self, include: &[u64], literals: &[u64]) -> bool {
+        // Hard assert for the same out-of-bounds reason as
+        // and_assign_any.
+        assert_eq!(include.len(), literals.len(), "lane slices must match");
+        match self.level {
+            SimdLevel::Scalar => violates_scalar(include, literals),
+            SimdLevel::Portable => violates_portable(include, literals),
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            // SAFETY: see and_assign_any.
+            SimdLevel::Avx2 => unsafe { x86::violates_avx2(include, literals) },
+            #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+            SimdLevel::Avx2 => violates_portable(include, literals),
+            #[cfg(all(feature = "avx512", target_arch = "x86_64"))]
+            // SAFETY: see and_assign_any.
+            SimdLevel::Avx512 => unsafe { x86_512::violates_avx512(include, literals) },
+            #[cfg(not(all(feature = "avx512", target_arch = "x86_64")))]
+            SimdLevel::Avx512 => violates_portable(include, literals),
+        }
+    }
+}
+
+/// Process-wide default lanes: the widest detected level, resolved once
+/// (one atomic load per call afterwards). This is what
+/// `bitpack::eval_words_train` and freshly compiled engines use unless
+/// a caller forces a level.
+pub fn default_lanes() -> WordLanes {
+    use std::sync::OnceLock;
+    static DETECTED: OnceLock<WordLanes> = OnceLock::new();
+    *DETECTED.get_or_init(WordLanes::detect)
+}
+
+// ---------------------------------------------------------------------
+// Scalar (single-word) reference.
+// ---------------------------------------------------------------------
+
+fn and_any_scalar(acc: &mut [u64], src: &[u64]) -> bool {
+    let mut any = 0u64;
+    for (a, &s) in acc.iter_mut().zip(src) {
+        *a &= s;
+        any |= *a;
+    }
+    any != 0
+}
+
+fn violates_scalar(include: &[u64], literals: &[u64]) -> bool {
+    include.iter().zip(literals).any(|(&inc, &lw)| inc & !lw != 0)
+}
+
+// ---------------------------------------------------------------------
+// Portable 4×u64 unrolled baseline.
+// ---------------------------------------------------------------------
+
+fn and_any_portable(acc: &mut [u64], src: &[u64]) -> bool {
+    let mut or0 = 0u64;
+    let mut or1 = 0u64;
+    let mut or2 = 0u64;
+    let mut or3 = 0u64;
+    let mut a4 = acc.chunks_exact_mut(4);
+    let mut s4 = src.chunks_exact(4);
+    for (a, s) in a4.by_ref().zip(s4.by_ref()) {
+        a[0] &= s[0];
+        or0 |= a[0];
+        a[1] &= s[1];
+        or1 |= a[1];
+        a[2] &= s[2];
+        or2 |= a[2];
+        a[3] &= s[3];
+        or3 |= a[3];
+    }
+    let mut tail = 0u64;
+    for (a, &s) in a4.into_remainder().iter_mut().zip(s4.remainder()) {
+        *a &= s;
+        tail |= *a;
+    }
+    (or0 | or1 | or2 | or3 | tail) != 0
+}
+
+fn violates_portable(include: &[u64], literals: &[u64]) -> bool {
+    let mut i4 = include.chunks_exact(4);
+    let mut l4 = literals.chunks_exact(4);
+    for (inc, lw) in i4.by_ref().zip(l4.by_ref()) {
+        let v = (inc[0] & !lw[0])
+            | (inc[1] & !lw[1])
+            | (inc[2] & !lw[2])
+            | (inc[3] & !lw[3]);
+        if v != 0 {
+            return true;
+        }
+    }
+    i4.remainder()
+        .iter()
+        .zip(l4.remainder())
+        .any(|(&inc, &lw)| inc & !lw != 0)
+}
+
+// ---------------------------------------------------------------------
+// AVX2: 4×u64 per 256-bit op. Runtime-dispatched; never constructed
+// unless detected.
+// ---------------------------------------------------------------------
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    use core::arch::x86_64::{
+        __m256i, _mm256_and_si256, _mm256_andnot_si256, _mm256_loadu_si256,
+        _mm256_or_si256, _mm256_setzero_si256, _mm256_storeu_si256, _mm256_testz_si256,
+    };
+
+    /// # Safety
+    /// Caller must guarantee the host supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn and_any_avx2(acc: &mut [u64], src: &[u64]) -> bool {
+        let n = acc.len() / 4 * 4;
+        let mut any = _mm256_setzero_si256();
+        let mut i = 0;
+        while i < n {
+            let a = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+            let s = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            let r = _mm256_and_si256(a, s);
+            _mm256_storeu_si256(acc.as_mut_ptr().add(i) as *mut __m256i, r);
+            any = _mm256_or_si256(any, r);
+            i += 4;
+        }
+        let mut tail = 0u64;
+        while i < acc.len() {
+            acc[i] &= src[i];
+            tail |= acc[i];
+            i += 1;
+        }
+        _mm256_testz_si256(any, any) == 0 || tail != 0
+    }
+
+    /// # Safety
+    /// Caller must guarantee the host supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn violates_avx2(include: &[u64], literals: &[u64]) -> bool {
+        let n = include.len() / 4 * 4;
+        let mut i = 0;
+        while i < n {
+            let inc = _mm256_loadu_si256(include.as_ptr().add(i) as *const __m256i);
+            let lw = _mm256_loadu_si256(literals.as_ptr().add(i) as *const __m256i);
+            // andnot(a, b) computes !a & b, so this is include & !lits.
+            let v = _mm256_andnot_si256(lw, inc);
+            if _mm256_testz_si256(v, v) == 0 {
+                return true;
+            }
+            i += 4;
+        }
+        include[n..]
+            .iter()
+            .zip(&literals[n..])
+            .any(|(&inc, &lw)| inc & !lw != 0)
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX-512F: 8×u64 per 512-bit op. Behind the off-by-default `avx512`
+// cargo feature (the stabilized intrinsics need rustc >= 1.89).
+// ---------------------------------------------------------------------
+
+#[cfg(all(feature = "avx512", target_arch = "x86_64"))]
+mod x86_512 {
+    use core::arch::x86_64::{
+        _mm512_and_epi64, _mm512_andnot_epi64, _mm512_loadu_epi64,
+        _mm512_storeu_epi64, _mm512_test_epi64_mask,
+    };
+
+    /// # Safety
+    /// Caller must guarantee the host supports AVX-512F.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn and_any_avx512(acc: &mut [u64], src: &[u64]) -> bool {
+        let n = acc.len() / 8 * 8;
+        let mut any: u8 = 0;
+        let mut i = 0;
+        while i < n {
+            let a = _mm512_loadu_epi64(acc.as_ptr().add(i) as *const i64);
+            let s = _mm512_loadu_epi64(src.as_ptr().add(i) as *const i64);
+            let r = _mm512_and_epi64(a, s);
+            _mm512_storeu_epi64(acc.as_mut_ptr().add(i) as *mut i64, r);
+            any |= _mm512_test_epi64_mask(r, r);
+            i += 8;
+        }
+        let mut tail = 0u64;
+        while i < acc.len() {
+            acc[i] &= src[i];
+            tail |= acc[i];
+            i += 1;
+        }
+        any != 0 || tail != 0
+    }
+
+    /// # Safety
+    /// Caller must guarantee the host supports AVX-512F.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn violates_avx512(include: &[u64], literals: &[u64]) -> bool {
+        let n = include.len() / 8 * 8;
+        let mut i = 0;
+        while i < n {
+            let inc = _mm512_loadu_epi64(include.as_ptr().add(i) as *const i64);
+            let lw = _mm512_loadu_epi64(literals.as_ptr().add(i) as *const i64);
+            let v = _mm512_andnot_epi64(lw, inc);
+            if _mm512_test_epi64_mask(v, v) != 0 {
+                return true;
+            }
+            i += 8;
+        }
+        include[n..]
+            .iter()
+            .zip(&literals[n..])
+            .any(|(&inc, &lw)| inc & !lw != 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+
+    #[test]
+    fn scalar_and_portable_are_always_available() {
+        assert!(SimdLevel::Scalar.is_available());
+        assert!(SimdLevel::Portable.is_available());
+        let avail = SimdLevel::available();
+        assert!(avail.contains(&SimdLevel::Scalar));
+        assert!(avail.contains(&SimdLevel::Portable));
+        // detect_best never picks an unavailable level, and never falls
+        // below the portable baseline.
+        let best = SimdLevel::detect_best();
+        assert!(best.is_available());
+        assert!(best >= SimdLevel::Portable);
+        assert_eq!(default_lanes().level(), best);
+    }
+
+    #[test]
+    fn new_rejects_unavailable_levels_only() {
+        for level in SimdLevel::ALL {
+            let lanes = WordLanes::new(level);
+            assert_eq!(lanes.is_ok(), level.is_available(), "{}", level.name());
+            if let Ok(l) = lanes {
+                assert_eq!(l.level(), level);
+            }
+        }
+    }
+
+    #[test]
+    fn choice_parse_roundtrip() {
+        assert_eq!(SimdChoice::parse("auto"), Some(SimdChoice::Auto));
+        assert_eq!(
+            SimdChoice::parse("portable"),
+            Some(SimdChoice::Forced(SimdLevel::Portable))
+        );
+        assert_eq!(
+            SimdChoice::parse("unrolled"),
+            Some(SimdChoice::Forced(SimdLevel::Portable))
+        );
+        assert_eq!(
+            SimdChoice::parse("scalar"),
+            Some(SimdChoice::Forced(SimdLevel::Scalar))
+        );
+        assert_eq!(SimdChoice::parse("avx2"), Some(SimdChoice::Forced(SimdLevel::Avx2)));
+        assert_eq!(
+            SimdChoice::parse("avx512"),
+            Some(SimdChoice::Forced(SimdLevel::Avx512))
+        );
+        assert_eq!(SimdChoice::parse("neon"), None);
+        assert_eq!(SimdChoice::default(), SimdChoice::Auto);
+        assert_eq!(SimdChoice::Auto.name(), "auto");
+        assert_eq!(SimdChoice::Forced(SimdLevel::Avx2).name(), "avx2");
+        // Auto and the always-available levels resolve everywhere.
+        assert!(SimdChoice::Auto.resolve().is_ok());
+        assert!(SimdChoice::Forced(SimdLevel::Scalar).resolve().is_ok());
+        assert!(SimdChoice::Forced(SimdLevel::Portable).resolve().is_ok());
+    }
+
+    #[test]
+    fn lane_widths_are_declared() {
+        assert_eq!(SimdLevel::Scalar.lanes(), 1);
+        assert_eq!(SimdLevel::Portable.lanes(), 4);
+        assert_eq!(SimdLevel::Avx2.lanes(), 4);
+        assert_eq!(SimdLevel::Avx512.lanes(), 8);
+    }
+
+    /// Oracle for and_assign_any.
+    fn and_ref(acc: &mut [u64], src: &[u64]) -> bool {
+        let mut any = false;
+        for (a, &s) in acc.iter_mut().zip(src) {
+            *a &= s;
+            any |= *a != 0;
+        }
+        any
+    }
+
+    #[test]
+    fn all_available_levels_match_the_word_by_word_oracle() {
+        // Slice lengths straddle every unroll boundary (0..=17 covers
+        // the 4-lane and 8-lane remainders); values include all-ones,
+        // all-zeros and random words.
+        prop("lane ops vs oracle", 200, |g| {
+            let n = g.usize(0..18);
+            let word = |g: &mut crate::testutil::Gen| match g.usize(0..4) {
+                0 => 0u64,
+                1 => !0u64,
+                _ => g.u64(0..u64::MAX),
+            };
+            let acc: Vec<u64> = (0..n).map(|_| word(g)).collect();
+            let src: Vec<u64> = (0..n).map(|_| word(g)).collect();
+            let mut want = acc.clone();
+            let want_any = and_ref(&mut want, &src);
+            for level in SimdLevel::available() {
+                let lanes = WordLanes::new(level).unwrap();
+                let mut got = acc.clone();
+                let got_any = lanes.and_assign_any(&mut got, &src);
+                assert_eq!(got, want, "and_assign {} n={n}", level.name());
+                assert_eq!(got_any, want_any, "any {} n={n}", level.name());
+
+                let want_viol =
+                    acc.iter().zip(&src).any(|(&a, &b)| a & !b != 0);
+                assert_eq!(
+                    lanes.violates(&acc, &src),
+                    want_viol,
+                    "violates {} n={n}",
+                    level.name()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn empty_slices_are_vacuous() {
+        for level in SimdLevel::available() {
+            let lanes = WordLanes::new(level).unwrap();
+            assert!(!lanes.and_assign_any(&mut [], &[]), "{}", level.name());
+            assert!(!lanes.violates(&[], &[]), "{}", level.name());
+        }
+    }
+}

@@ -34,7 +34,12 @@
 //!   and grow) and deliberately opposite to the inference convention of
 //!   [`super::bitpack::PackedClause::evaluate`];
 //! * evaluation consumes no randomness, so the Bernoulli/shuffle stream
-//!   is byte-for-byte the stream the reference path consumes.
+//!   is byte-for-byte the stream the reference path consumes;
+//! * the packed predicate dispatches through the detected
+//!   [`super::simd::WordLanes`] width — every lane level computes the
+//!   identical word predicate (pinned by `tests/simd_dispatch.rs` and
+//!   the lane-parity test below), so SIMD dispatch cannot perturb the
+//!   trained model either.
 //!
 //! Enforced by `tests/train_equivalence.rs`, the `tmtd selfcheck`
 //! trainer-parity bar, and the Python mirror (`python/packedtrain.py`,
@@ -443,7 +448,10 @@ mod tests {
     #[test]
     fn packed_firing_matches_per_literal_firing() {
         // Training-time semantics on both paths, across word-boundary
-        // widths, including empty clauses.
+        // widths, including empty clauses — and at every available lane
+        // width, since fires_packed dispatches through WordLanes.
+        use crate::tm::bitpack::eval_words_train_with;
+        use crate::tm::simd::{SimdLevel, WordLanes};
         prop("packed vs per-literal training eval", 200, |g| {
             let f = g.usize(1..80);
             let n = 8u32;
@@ -452,11 +460,21 @@ mod tests {
                 .collect();
             let cs = ClauseState::from_states(states, n);
             let x = g.bools(f);
-            assert_eq!(
-                cs.fires_packed(&pack_literals(&x)),
-                cs.fires_reference(&make_literals(&x), n),
-                "f={f}"
-            );
+            let want = cs.fires_reference(&make_literals(&x), n);
+            let words = pack_literals(&x);
+            assert_eq!(cs.fires_packed(&words), want, "f={f}");
+            for level in SimdLevel::available() {
+                assert_eq!(
+                    eval_words_train_with(
+                        cs.include_words(),
+                        &words,
+                        WordLanes::new(level).unwrap()
+                    ),
+                    want,
+                    "f={f} level {}",
+                    level.name()
+                );
+            }
         });
     }
 

@@ -1,11 +1,15 @@
 #!/usr/bin/env bash
-# Perf-trajectory recorder: run the two serving-tier benches and the
-# training-tier bench, and append their output as one JSON entry to
-# BENCH_PR4.json (a JSON-lines file — one object per recorded run), so
-# successive PRs accumulate comparable numbers. (PR 3 recorded to
-# BENCH_PR3.json; that file stays as recorded history.)
+# Perf-trajectory recorder: run the serving-tier, training-tier and
+# SIMD-lane benches and append their output as one JSON entry to a
+# JSON-lines file (one object per recorded run), so successive PRs
+# accumulate comparable numbers.
 #
-#   scripts/bench_record.sh [label]
+#   scripts/bench_record.sh [label] [out-file]
+#
+# The output file defaults to BENCH_PR5.json and can be overridden by
+# the second positional argument or the BENCH_OUT environment variable
+# (argument wins). Earlier PRs recorded to BENCH_PR3.json /
+# BENCH_PR4.json; those files stay as recorded history.
 #
 # Needs a Rust toolchain; the CI image carries none (see ROADMAP.md), so
 # run this on a toolchain-equipped machine and commit the appended entry.
@@ -13,7 +17,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 LABEL="${1:-$(git rev-parse --short HEAD 2>/dev/null || echo unlabelled)}"
-OUT="BENCH_PR4.json"
+OUT="${2:-${BENCH_OUT:-BENCH_PR5.json}}"
 
 if ! command -v cargo >/dev/null 2>&1; then
     echo "bench_record.sh: cargo not found on PATH." >&2
@@ -34,6 +38,10 @@ echo "== cargo bench --bench train_packed_vs_ref =="
 TRAIN_OUT="$(cargo bench --bench train_packed_vs_ref)"
 echo "$TRAIN_OUT"
 
+echo "== cargo bench --bench simd_vs_scalar =="
+SIMD_OUT="$(cargo bench --bench simd_vs_scalar)"
+echo "$SIMD_OUT"
+
 # JSON-escape via python3 (present wherever the Python tier runs); fall
 # back to a warning rather than writing malformed JSON by hand.
 if ! command -v python3 >/dev/null 2>&1; then
@@ -41,7 +49,7 @@ if ! command -v python3 >/dev/null 2>&1; then
     exit 1
 fi
 LABEL="$LABEL" INDEXED_OUT="$INDEXED_OUT" BITPAR_OUT="$BITPAR_OUT" \
-TRAIN_OUT="$TRAIN_OUT" OUT="$OUT" \
+TRAIN_OUT="$TRAIN_OUT" SIMD_OUT="$SIMD_OUT" OUT="$OUT" \
 python3 - <<'EOF'
 import datetime
 import json
@@ -55,6 +63,7 @@ entry = {
     "indexed_vs_bitpar": os.environ["INDEXED_OUT"].splitlines(),
     "bitparallel_vs_ref": os.environ["BITPAR_OUT"].splitlines(),
     "train_packed_vs_ref": os.environ["TRAIN_OUT"].splitlines(),
+    "simd_vs_scalar": os.environ["SIMD_OUT"].splitlines(),
 }
 path = os.environ["OUT"]
 with open(path, "a", encoding="utf-8") as f:

@@ -4,15 +4,18 @@
 #   scripts/verify.sh
 #
 # Runs: the Python tier FIRST (JAX kernels, the consistent-hash-ring
-# mirror, the inverted-index counter-sweep mirror, and the
-# packed-trainer mirror with its same-seed bit-identity invariant — so
-# toolchain-less images still validate the shard-routing, indexed-
-# inference and packed-training algorithms), then cargo build --release
-# && cargo test -q, the shard / coordinator / indexed / trainer
-# conformance suites by name (so a routing, engine or trainer
-# regression is visible at a glance), and cargo bench --no-run
-# (benches are plain `harness = false` mains — `--no-run` proves they
-# compile without paying their full runtime).
+# mirror, the inverted-index counter-sweep mirror, the packed-trainer
+# mirror with its same-seed bit-identity invariant, and the tiled
+# bit-sliced batch-layout mirror — so toolchain-less images still
+# validate the shard-routing, indexed-inference, packed-training and
+# SIMD-tile algorithms), then cargo build --release && cargo test -q,
+# the shard / coordinator / indexed / trainer / SIMD conformance suites
+# by name (so a routing, engine, trainer or lane-dispatch regression is
+# visible at a glance), one portable-only build with the vector paths
+# compiled out (--no-default-features: the portable reference must keep
+# compiling and passing on its own), and cargo bench --no-run (benches
+# are plain `harness = false` mains — `--no-run` proves they compile
+# without paying their full runtime).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -50,6 +53,18 @@ cargo test -q --lib tm::trainer_engine
 cargo test -q --lib tm::train::
 cargo test -q --lib tm::cotm_train
 cargo test -q --test train_equivalence
+
+echo "== SIMD lane suites (dispatch bit-identity across lane widths) =="
+cargo test -q --lib tm::simd
+cargo test -q --lib tm::bitpack
+cargo test -q --test simd_dispatch
+
+echo "== portable-only build (vector paths compiled out) =="
+# The portable 4x-unrolled baseline is the bit-exact reference; it must
+# compile and pass with the x86 vector kernels absent.
+cargo build --release --no-default-features
+cargo test -q --no-default-features --lib tm::simd
+cargo test -q --no-default-features --test simd_dispatch
 
 echo "== cargo bench --no-run =="
 cargo bench --no-run

@@ -336,4 +336,23 @@ fn trained_iris_models_are_bit_exact_end_to_end() {
         assert_eq!(batch_co[i].0, want_co, "iris sample {i} (cotm batched)");
         assert_eq!(batch_co[i].1, predict_argmax(&want_co));
     }
+
+    // Forced lane widths are interchangeable on the trained models too
+    // (the full dispatch matrix lives in tests/simd_dispatch.rs).
+    use tsetlin_td::tm::{SimdLevel, WordLanes};
+    for level in SimdLevel::available() {
+        let lanes = WordLanes::new(level).unwrap();
+        assert_eq!(
+            e_mc.clone().with_lanes(lanes).infer_batch(&d.features),
+            batch_mc,
+            "multiclass level {}",
+            level.name()
+        );
+        assert_eq!(
+            e_co.clone().with_lanes(lanes).infer_batch(&d.features),
+            batch_co,
+            "cotm level {}",
+            level.name()
+        );
+    }
 }

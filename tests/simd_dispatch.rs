@@ -1,0 +1,284 @@
+//! Runtime-dispatch conformance for the SIMD evaluation tier
+//! (`tm::simd`): the lane width — scalar single-word, portable
+//! 4×`u64`-unrolled, AVX2, AVX-512 when detected — is a *speed*
+//! decision only. Every property here forces each available level
+//! through the same models and inputs and demands bit-identical class
+//! sums and argmax, with the portable path as the pinned reference and
+//! the scalar reference `tm::infer` as the ground truth.
+//!
+//! This suite also runs under `--no-default-features` (vector paths
+//! compiled out): the available set then degenerates to
+//! scalar + portable and every property still holds, which is what
+//! keeps the portable reference self-sufficient.
+
+use tsetlin_td::config::ServeConfig;
+use tsetlin_td::coordinator::{Backend, InferRequest, ShardedCoordinator};
+use tsetlin_td::testutil::{prop, Gen};
+use tsetlin_td::tm::bitpack::{eval_words_train_with, pack_literals};
+use tsetlin_td::tm::infer::{cotm_class_sums, multiclass_class_sums, predict_argmax};
+use tsetlin_td::tm::model::make_literals;
+use tsetlin_td::tm::simd::{SimdChoice, SimdLevel, WordLanes};
+use tsetlin_td::tm::{
+    data, BatchEngine, BitParallelCotm, BitParallelMulticlass, ClauseMask, CoTmModel,
+    MultiClassTmModel, TmParams,
+};
+
+/// Word-boundary feature widths (shared with bitparallel_equivalence).
+const BOUNDARY_WIDTHS: [usize; 10] = [1, 5, 31, 32, 33, 63, 64, 65, 97, 130];
+
+fn draw_features(g: &mut Gen) -> usize {
+    if g.chance(0.6) {
+        *g.pick(&BOUNDARY_WIDTHS)
+    } else {
+        g.usize(1..200)
+    }
+}
+
+fn draw_density(g: &mut Gen) -> f64 {
+    if g.chance(0.15) {
+        0.0
+    } else {
+        0.02 + 0.4 * g.f64_unit()
+    }
+}
+
+fn random_multiclass(g: &mut Gen, f: usize, c: usize, k: usize) -> MultiClassTmModel {
+    let p = TmParams { features: f, clauses: c, classes: k, ..TmParams::iris_paper() };
+    let mut m = MultiClassTmModel::zeroed(p);
+    let density = draw_density(g);
+    for class in &mut m.clauses {
+        for clause in class.iter_mut() {
+            *clause = ClauseMask {
+                include: (0..2 * f).map(|_| g.chance(density)).collect(),
+            };
+        }
+    }
+    m
+}
+
+fn random_cotm(g: &mut Gen, f: usize, c: usize, k: usize) -> CoTmModel {
+    let p = TmParams { features: f, clauses: c, classes: k, ..TmParams::iris_paper() };
+    let mut m = CoTmModel::zeroed(p.clone());
+    let density = draw_density(g);
+    for clause in &mut m.clauses {
+        *clause = ClauseMask {
+            include: (0..2 * f).map(|_| g.chance(density)).collect(),
+        };
+    }
+    for row in &mut m.weights {
+        for w in row.iter_mut() {
+            *w = g.i64(-(p.max_weight as i64)..p.max_weight as i64 + 1) as i32;
+        }
+    }
+    m
+}
+
+#[test]
+fn dispatch_never_offers_an_unavailable_level() {
+    let avail = SimdLevel::available();
+    assert!(avail.contains(&SimdLevel::Scalar));
+    assert!(avail.contains(&SimdLevel::Portable));
+    for level in &avail {
+        assert!(level.is_available());
+        assert!(WordLanes::new(*level).is_ok());
+    }
+    assert!(avail.contains(&SimdLevel::detect_best()));
+    // Forcing an unavailable level errors cleanly instead of faulting.
+    for level in SimdLevel::ALL {
+        if !level.is_available() {
+            let err = SimdChoice::Forced(level).resolve().unwrap_err();
+            assert!(err.to_string().contains("not available"), "{err}");
+        }
+    }
+}
+
+#[test]
+fn all_levels_bit_identical_class_sums_and_argmax_multiclass() {
+    // The satellite property: scalar, portable(unrolled), AVX2 and
+    // AVX-512 (when detected) produce bit-identical class sums and
+    // argmax on random models, across word-boundary widths and batch
+    // sizes crossing the 64-sample block and the 8-block tile.
+    prop("simd dispatch multiclass", 60, |g| {
+        let f = draw_features(g);
+        let c = 2 * g.usize(1..6);
+        let k = g.usize(2..5);
+        let m = random_multiclass(g, f, c, k);
+        let n = *g.pick(&[1usize, 2, 63, 64, 65, 130, 513, 600]);
+        let rows: Vec<Vec<bool>> = (0..n).map(|_| g.bools(f)).collect();
+        let portable = BitParallelMulticlass::from_model(&m)
+            .unwrap()
+            .with_lanes(WordLanes::portable());
+        let want = portable.infer_batch(&rows);
+        // Ground truth on a sample of rows (full scan is O(n·c·f)).
+        for (s, (sums, pred)) in want.iter().enumerate().take(8) {
+            let truth = multiclass_class_sums(&m, &rows[s]);
+            assert_eq!(sums, &truth, "portable vs scalar reference, sample {s}");
+            assert_eq!(*pred, predict_argmax(&truth));
+        }
+        for level in SimdLevel::available() {
+            let e = BitParallelMulticlass::from_model(&m)
+                .unwrap()
+                .with_lanes(WordLanes::new(level).unwrap());
+            assert_eq!(e.infer_batch(&rows), want, "f={f} n={n} level {}", level.name());
+            for x in rows.iter().take(4) {
+                assert_eq!(
+                    e.class_sums(x),
+                    portable.class_sums(x),
+                    "single-sample f={f} level {}",
+                    level.name()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn all_levels_bit_identical_class_sums_and_argmax_cotm() {
+    prop("simd dispatch cotm", 60, |g| {
+        let f = draw_features(g);
+        let c = g.usize(1..12);
+        let k = g.usize(2..5);
+        let m = random_cotm(g, f, c, k);
+        let n = *g.pick(&[1usize, 2, 63, 64, 65, 130, 600]);
+        let rows: Vec<Vec<bool>> = (0..n).map(|_| g.bools(f)).collect();
+        let portable =
+            BitParallelCotm::from_model(&m).unwrap().with_lanes(WordLanes::portable());
+        let want = portable.infer_batch(&rows);
+        for (s, (sums, _)) in want.iter().enumerate().take(8) {
+            assert_eq!(
+                sums,
+                &cotm_class_sums(&m, &rows[s]),
+                "portable vs scalar reference, sample {s}"
+            );
+        }
+        for level in SimdLevel::available() {
+            let e = BitParallelCotm::from_model(&m)
+                .unwrap()
+                .with_lanes(WordLanes::new(level).unwrap());
+            assert_eq!(e.infer_batch(&rows), want, "f={f} n={n} level {}", level.name());
+        }
+    });
+}
+
+#[test]
+fn forced_portable_vs_detected_parity_on_trained_iris() {
+    // The forced-portable-vs-detected parity bar: whatever `auto`
+    // resolves to on this host must reproduce the portable engine's
+    // output on real trained models, through the single-sample, batched
+    // and sharded paths.
+    let d = data::iris().unwrap();
+    let (tr, _) = d.split(0.8, 42);
+    let m =
+        tsetlin_td::tm::train::train_multiclass(TmParams::iris_paper(), &tr, 60, 2).unwrap();
+    let cm =
+        tsetlin_td::tm::cotm_train::train_cotm(TmParams::iris_paper(), &tr, 150, 3).unwrap();
+
+    let portable_mc =
+        BitParallelMulticlass::from_model(&m).unwrap().with_lanes(WordLanes::portable());
+    let detected_mc =
+        BitParallelMulticlass::from_model(&m).unwrap().with_lanes(WordLanes::detect());
+    let portable_co =
+        BitParallelCotm::from_model(&cm).unwrap().with_lanes(WordLanes::portable());
+    let detected_co =
+        BitParallelCotm::from_model(&cm).unwrap().with_lanes(WordLanes::detect());
+
+    let want_mc = portable_mc.infer_batch(&d.features);
+    let want_co = portable_co.infer_batch(&d.features);
+    assert_eq!(detected_mc.infer_batch(&d.features), want_mc);
+    assert_eq!(detected_co.infer_batch(&d.features), want_co);
+    assert_eq!(detected_mc.infer_batch_sharded(&d.features, 4), want_mc);
+    assert_eq!(detected_co.infer_batch_sharded(&d.features, 4), want_co);
+    for (i, x) in d.features.iter().enumerate() {
+        assert_eq!(detected_mc.class_sums(x), portable_mc.class_sums(x), "sample {i}");
+        assert_eq!(detected_co.class_sums(x), portable_co.class_sums(x), "sample {i}");
+        // And both equal the scalar ground truth.
+        assert_eq!(want_mc[i].0, multiclass_class_sums(&m, x), "sample {i}");
+        assert_eq!(want_co[i].0, cotm_class_sums(&cm, x), "sample {i}");
+    }
+}
+
+#[test]
+fn trainer_predicate_is_dispatch_invariant() {
+    // eval_words_train (the trainer engine's firing predicate) must
+    // answer identically at every lane width — this is what keeps the
+    // packed-trainer bit-identity contract safe under dispatch.
+    prop("training predicate dispatch", 120, |g| {
+        let f = g.usize(1..150);
+        let density = draw_density(g);
+        let include_bits: Vec<bool> = (0..2 * f).map(|_| g.chance(density)).collect();
+        let include = tsetlin_td::tm::bitpack::pack_bools(&include_bits);
+        let x = g.bools(f);
+        let words = pack_literals(&x);
+        let lits = make_literals(&x);
+        // Ground truth: the per-literal training walk (empty fires).
+        let want = include_bits.iter().zip(&lits).all(|(&inc, &lit)| !inc || lit);
+        for level in SimdLevel::available() {
+            assert_eq!(
+                eval_words_train_with(&include, &words, WordLanes::new(level).unwrap()),
+                want,
+                "f={f} level {}",
+                level.name()
+            );
+        }
+    });
+}
+
+#[test]
+fn sharded_front_door_is_simd_invariant() {
+    // The whole serving stack — batcher, shards, ring — with the SIMD
+    // level forced through ServeConfig: responses must be bit-exact
+    // against the scalar reference at every available level, and
+    // identical across levels.
+    let d = data::iris().unwrap();
+    let (tr, _) = d.split(0.8, 42);
+    let m =
+        tsetlin_td::tm::train::train_multiclass(TmParams::iris_paper(), &tr, 20, 2).unwrap();
+    let cm =
+        tsetlin_td::tm::cotm_train::train_cotm(TmParams::iris_paper(), &tr, 20, 3).unwrap();
+    let samples: Vec<usize> = vec![0, 33, 77, 149];
+    let mut by_level: Vec<Vec<Vec<i32>>> = Vec::new();
+    for level in SimdLevel::available() {
+        let cfg = ServeConfig {
+            shards: 2,
+            workers: 1,
+            simd: SimdChoice::Forced(level),
+            ..ServeConfig::default()
+        };
+        let srv = ShardedCoordinator::new(&cfg, m.clone(), cm.clone(), false).unwrap();
+        assert_eq!(srv.simd_lanes().level(), level);
+        let mut sums = Vec::new();
+        for &i in &samples {
+            let r = srv
+                .infer(InferRequest {
+                    features: d.features[i].clone(),
+                    backend: Backend::BitParallelMulticlass,
+                })
+                .unwrap();
+            assert_eq!(
+                r.class_sums,
+                multiclass_class_sums(&m, &d.features[i]),
+                "sample {i} level {}",
+                level.name()
+            );
+            sums.push(r.class_sums);
+            let r = srv
+                .infer(InferRequest {
+                    features: d.features[i].clone(),
+                    backend: Backend::BitParallelCotm,
+                })
+                .unwrap();
+            assert_eq!(
+                r.class_sums,
+                cotm_class_sums(&cm, &d.features[i]),
+                "sample {i} level {}",
+                level.name()
+            );
+            sums.push(r.class_sums);
+        }
+        by_level.push(sums);
+        srv.shutdown();
+    }
+    for w in by_level.windows(2) {
+        assert_eq!(w[0], w[1], "levels must be interchangeable end to end");
+    }
+}
