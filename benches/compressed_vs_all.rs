@@ -1,0 +1,189 @@
+//! Compressed vs indexed vs bit-parallel vs scalar — the crossover
+//! bench for the compressed-clause (ETHEREAL) serving tier.
+//!
+//! Cost models per sample: scalar walks all `C · 2F` literals; packed
+//! spends ~`C · ceil(2F/64)` word ops regardless of sparsity; indexed
+//! spends one counter op per (set literal, including clause) pair; the
+//! compressed walk visits at most the include-list length per clause
+//! and early-exits on the first unsatisfied literal — with hot
+//! (high-frequency) literals reordered first so the expected walk is
+//! short. This bench sweeps density on a large synthetic model and
+//! prints all four engines µs per sample per point, plus where the
+//! default *three-way* auto selection
+//! ([`tsetlin_td::tm::compressed::select_engine`]) would route — the
+//! empirical crossovers should bracket both default thresholds.
+//!
+//! Run: `cargo bench --bench compressed_vs_all`
+
+use std::time::Instant;
+
+use tsetlin_td::tm::compressed::{select_engine, PACKED_VS_COMPRESSED_DENSITY};
+use tsetlin_td::tm::index::PACKED_VS_INDEXED_DENSITY;
+use tsetlin_td::tm::infer::{cotm_class_sums, multiclass_class_sums};
+use tsetlin_td::tm::{
+    BatchEngine, BitParallelCotm, BitParallelMulticlass, ClauseMask, CoTmModel,
+    CompressedCotm, CompressedMulticlass, IndexedCotm, IndexedMulticlass,
+    MultiClassTmModel, TmParams,
+};
+use tsetlin_td::util::{SplitMix64, Table};
+
+/// Densities spanning the indexed regime (below 0.05), the compressed
+/// regime (0.05..0.2) and the packed regime (above 0.2).
+const DENSITIES: [f64; 7] = [0.005, 0.01, 0.03, 0.06, 0.12, 0.25, 0.5];
+
+/// Time `f` over `reps` repetitions of `samples` samples; µs/sample.
+fn time_us_per_sample(samples: usize, reps: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warm-up
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() * 1e6 / (reps * samples) as f64
+}
+
+fn random_mask(rng: &mut SplitMix64, literals: usize, density: f64) -> ClauseMask {
+    ClauseMask { include: (0..literals).map(|_| rng.chance(density)).collect() }
+}
+
+fn synthetic_multiclass(f: usize, c: usize, k: usize, density: f64, seed: u64) -> MultiClassTmModel {
+    let p = TmParams { features: f, clauses: c, classes: k, ..TmParams::iris_paper() };
+    let mut rng = SplitMix64::new(seed);
+    let mut m = MultiClassTmModel::zeroed(p);
+    for class in &mut m.clauses {
+        for clause in class.iter_mut() {
+            *clause = random_mask(&mut rng, 2 * f, density);
+        }
+    }
+    m
+}
+
+fn synthetic_cotm(f: usize, c: usize, k: usize, density: f64, seed: u64) -> CoTmModel {
+    let p = TmParams { features: f, clauses: c, classes: k, ..TmParams::iris_paper() };
+    let mut rng = SplitMix64::new(seed);
+    let mut m = CoTmModel::zeroed(p.clone());
+    for clause in &mut m.clauses {
+        *clause = random_mask(&mut rng, 2 * f, density);
+    }
+    for row in &mut m.weights {
+        for w in row.iter_mut() {
+            *w = rng.next_below(2 * p.max_weight as u64 + 1) as i32 - p.max_weight;
+        }
+    }
+    m
+}
+
+fn random_samples(f: usize, n: usize, seed: u64) -> Vec<Vec<bool>> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| (0..f).map(|_| rng.next_bool()).collect()).collect()
+}
+
+fn main() {
+    println!("== compressed vs indexed vs bit-parallel vs scalar (density sweep) ==");
+    let (f, c, k) = (256usize, 512usize, 4usize);
+    let xs = random_samples(f, 128, 9);
+    let n = xs.len();
+
+    let mut t = Table::new(vec![
+        "density (target/actual)",
+        "scalar us/sample",
+        "bitpar batched",
+        "indexed batched",
+        "compressed batched",
+        "compressed/bitpar",
+        "auto picks",
+    ]);
+    for (di, &density) in DENSITIES.iter().enumerate() {
+        let m = synthetic_multiclass(f, c, k, density, 7 + di as u64);
+        let bp = BitParallelMulticlass::from_model(&m).expect("valid model");
+        let ix = IndexedMulticlass::from_model(&m).expect("valid model");
+        let cp = CompressedMulticlass::from_model(&m).expect("valid model");
+        // Sanity first: a speedup over wrong answers is worthless.
+        for x in xs.iter().take(4) {
+            let want = multiclass_class_sums(&m, x);
+            assert_eq!(bp.class_sums(x), want);
+            assert_eq!(ix.class_sums(x), want);
+            assert_eq!(cp.class_sums(x), want);
+        }
+        let scalar_us = time_us_per_sample(n, 3, || {
+            for x in &xs {
+                std::hint::black_box(multiclass_class_sums(&m, x));
+            }
+        });
+        let bp_us = time_us_per_sample(n, 10, || {
+            std::hint::black_box(bp.infer_batch(&xs));
+        });
+        let ix_us = time_us_per_sample(n, 10, || {
+            std::hint::black_box(ix.infer_batch(&xs));
+        });
+        let cp_us = time_us_per_sample(n, 10, || {
+            std::hint::black_box(cp.infer_batch(&xs));
+        });
+        t.row(vec![
+            format!("mc {density:.3}/{:.3}", cp.density()),
+            format!("{scalar_us:.2}"),
+            format!("{bp_us:.2} ({:.1}x)", scalar_us / bp_us),
+            format!("{ix_us:.2} ({:.1}x)", scalar_us / ix_us),
+            format!("{cp_us:.2} ({:.1}x)", scalar_us / cp_us),
+            format!("{:.2}x", bp_us / cp_us),
+            select_engine(
+                cp.density(),
+                PACKED_VS_INDEXED_DENSITY,
+                PACKED_VS_COMPRESSED_DENSITY,
+            )
+            .name()
+            .into(),
+        ]);
+    }
+    for (di, &density) in DENSITIES.iter().enumerate() {
+        let m = synthetic_cotm(f, c, k, density, 21 + di as u64);
+        let bp = BitParallelCotm::from_model(&m).expect("valid model");
+        let ix = IndexedCotm::from_model(&m).expect("valid model");
+        let cp = CompressedCotm::from_model(&m).expect("valid model");
+        for x in xs.iter().take(4) {
+            let want = cotm_class_sums(&m, x);
+            assert_eq!(bp.class_sums(x), want);
+            assert_eq!(ix.class_sums(x), want);
+            assert_eq!(cp.class_sums(x), want);
+        }
+        let scalar_us = time_us_per_sample(n, 3, || {
+            for x in &xs {
+                std::hint::black_box(cotm_class_sums(&m, x));
+            }
+        });
+        let bp_us = time_us_per_sample(n, 10, || {
+            std::hint::black_box(bp.infer_batch(&xs));
+        });
+        let ix_us = time_us_per_sample(n, 10, || {
+            std::hint::black_box(ix.infer_batch(&xs));
+        });
+        let cp_us = time_us_per_sample(n, 10, || {
+            std::hint::black_box(cp.infer_batch(&xs));
+        });
+        t.row(vec![
+            format!("co {density:.3}/{:.3}", cp.density()),
+            format!("{scalar_us:.2}"),
+            format!("{bp_us:.2} ({:.1}x)", scalar_us / bp_us),
+            format!("{ix_us:.2} ({:.1}x)", scalar_us / ix_us),
+            format!("{cp_us:.2} ({:.1}x)", scalar_us / cp_us),
+            format!("{:.2}x", bp_us / cp_us),
+            select_engine(
+                cp.density(),
+                PACKED_VS_INDEXED_DENSITY,
+                PACKED_VS_COMPRESSED_DENSITY,
+            )
+            .name()
+            .into(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "model: {f} features, {c} clauses/class, {k} classes; batch {n}; \
+         auto thresholds {PACKED_VS_INDEXED_DENSITY} (indexed) / \
+         {PACKED_VS_COMPRESSED_DENSITY} (compressed)"
+    );
+    println!(
+        "expectation: compressed/bitpar > 1x in the sparse band and < 1x \
+         well above the compressed threshold (the two empirical \
+         crossovers should bracket the two defaults)."
+    );
+}

@@ -8,10 +8,10 @@ use tsetlin_td::arch::Architecture;
 use tsetlin_td::config::ServeConfig;
 use tsetlin_td::coordinator::{Backend, InferRequest, ShardedCoordinator};
 use tsetlin_td::tm::{
-    cotm_train::train_cotm, data, index, infer,
+    compressed, cotm_train::train_cotm, data, index, infer,
     train::{train_multiclass, train_multiclass_with},
-    BatchEngine, BitParallelMulticlass, IndexedMulticlass, SimdLevel, TmParams,
-    TrainerEngine, WordLanes,
+    BatchEngine, BitParallelMulticlass, CompressedMulticlass, IndexedMulticlass,
+    SimdLevel, TmParams, TrainerEngine, WordLanes,
 };
 use tsetlin_td::wta::WtaKind;
 
@@ -100,14 +100,30 @@ fn main() -> tsetlin_td::Result<()> {
             "indexed and packed engines are interchangeable"
         );
     }
+
+    // 2b'''. The compressed-clause tier (ETHEREAL-style): each clause
+    //        stored as its sorted include-literal list with hot
+    //        literals walked first; evaluation early-exits on the
+    //        first unsatisfied literal. Third member of the same
+    //        bit-exact family — `auto-*` picks indexed vs compressed
+    //        vs packed per model by included-literal density.
+    let compressed = CompressedMulticlass::from_model(&model)?;
+    for x in test.features.iter().take(16) {
+        assert_eq!(
+            compressed.class_sums(x),
+            fast.class_sums(x),
+            "compressed and packed engines are interchangeable"
+        );
+    }
     println!(
-        "inverted-index engine: density {:.3} -> auto-select would use {}",
+        "event-driven tiers: density {:.3} -> auto-select would use {}",
         indexed.density(),
-        if index::prefer_indexed(indexed.density(), index::PACKED_VS_INDEXED_DENSITY) {
-            "indexed"
-        } else {
-            "bitpar"
-        }
+        compressed::select_engine(
+            indexed.density(),
+            index::PACKED_VS_INDEXED_DENSITY,
+            compressed::PACKED_VS_COMPRESSED_DENSITY,
+        )
+        .name()
     );
 
     // 2c. Scale-out serving: front two coordinator shards with a
@@ -124,13 +140,14 @@ fn main() -> tsetlin_td::Result<()> {
     };
     let srv = ShardedCoordinator::new(&cfg, model.clone(), cotm, false)?;
     for (i, x) in test.features.iter().take(8).enumerate() {
-        // Alternate the packed, indexed and auto-selected native
-        // backends: all three must produce identical sums.
+        // Alternate the packed, indexed, compressed and auto-selected
+        // native backends: all four must produce identical sums.
         let backend = [
             Backend::BitParallelMulticlass,
             Backend::IndexedMulticlass,
+            Backend::CompressedMulticlass,
             Backend::AutoMulticlass,
-        ][i % 3];
+        ][i % 4];
         let r = srv.infer(InferRequest { features: x.clone(), backend })?;
         assert_eq!(
             r.class_sums,

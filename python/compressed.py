@@ -1,0 +1,165 @@
+"""Python mirror of the compressed-clause (ETHEREAL) TM serving tier.
+
+Mirrors ``rust/src/tm/compressed.rs`` algorithm-for-algorithm so the
+include-list walk can be validated (hand-worked oracles, cross-language
+golden vectors, randomized differential tests against a direct
+evaluator) on CI images that carry no Rust toolchain — the same
+arrangement as ``invindex.py`` for the counter sweep. Any change to the
+Rust compressed algorithm must be replayed here and in both
+golden-vector test suites.
+
+Algorithm (arXiv 2502.05640, ETHEREAL)
+--------------------------------------
+Trained TMs are overwhelmingly excludes, so each clause is compressed
+to its **sorted include-literal list** (CSR layout: one flat literal
+array plus per-clause offsets). Evaluation walks only the include list
+and **early-exits on the first unsatisfied literal**. An optional
+literal-frequency reorder rewrites each clause's walk order so globally
+hot literals cluster at the front (descending global frequency, ties by
+ascending literal id) — a speed decision only: clause firing is an AND
+over the same set, so outputs are invariant under any walk order.
+
+Conventions pinned to the scalar reference:
+
+* Literals interleave: ``literal[2i] = x_i``, ``literal[2i+1] = not
+  x_i``.
+* An empty (all-exclude) clause compresses to an empty list and never
+  fires at inference.
+* A clause including both ``x_i`` and ``not x_i`` always early-exits on
+  one of the pair (only one is ever set).
+"""
+
+# Default thresholds of the three-way auto selection, mirrored from
+# index.rs / compressed.rs.
+PACKED_VS_INDEXED_DENSITY = 0.05
+PACKED_VS_COMPRESSED_DENSITY = 0.2
+
+
+def select_engine(density, indexed_threshold, compressed_threshold):
+    """The three-way density-driven auto decision (pure and total over
+    every threshold pair, including inverted or 0.0/1.0 edges):
+    ``"indexed"`` first, then ``"compressed"``, else ``"packed"``."""
+    if density <= indexed_threshold:
+        return "indexed"
+    if density <= compressed_threshold:
+        return "compressed"
+    return "packed"
+
+
+class CompressedModel:
+    """Per-clause sorted include-literal lists in CSR layout.
+
+    ``masks`` is a list of clauses, each a list of 2F booleans (include
+    mask over the interleaved literals); clause ids follow list order,
+    so a multiclass caller's per-class grouping (id = class * C + j) is
+    preserved as contiguous id ranges.
+    """
+
+    def __init__(self, features, masks):
+        self.features = features
+        self.literals = []
+        self.offsets = [0]
+        for mask in masks:
+            if len(mask) != 2 * features:
+                raise ValueError("mask width != 2F")
+            for lit, inc in enumerate(mask):
+                if inc:
+                    self.literals.append(lit)
+            self.offsets.append(len(self.literals))
+
+    def num_clauses(self):
+        return len(self.offsets) - 1
+
+    def included(self, c):
+        """Include list of clause ``c`` (in walk order)."""
+        return self.literals[self.offsets[c]:self.offsets[c + 1]]
+
+    def postings(self):
+        return len(self.literals)
+
+    def density(self):
+        total = self.num_clauses() * 2 * self.features
+        return self.postings() / total if total else 0.0
+
+    def literal_frequencies(self):
+        freq = [0] * (2 * self.features)
+        for lit in self.literals:
+            freq[lit] += 1
+        return freq
+
+    def reorder_by_frequency(self):
+        """Hot literals first in each clause's walk (descending global
+        frequency, ties by ascending literal id — the same deterministic
+        key as the Rust engine)."""
+        freq = self.literal_frequencies()
+        for c in range(self.num_clauses()):
+            lo, hi = self.offsets[c], self.offsets[c + 1]
+            self.literals[lo:hi] = sorted(
+                self.literals[lo:hi], key=lambda lit: (-freq[lit], lit)
+            )
+
+    def clause_fires(self, c, sample):
+        """Early-exit walk of clause ``c``'s include list; empty clauses
+        never fire at inference."""
+        lits = self.included(c)
+        if not lits:
+            return False
+        for lit in lits:
+            value = sample[lit >> 1] if lit % 2 == 0 else not sample[lit >> 1]
+            if not value:
+                return False  # early exit — the whole point.
+        return True
+
+    def sweep(self, sample):
+        """Fired clause ids for one sample, ascending."""
+        if len(sample) != self.features:
+            raise ValueError("sample width != F")
+        return [
+            c for c in range(self.num_clauses()) if self.clause_fires(c, sample)
+        ]
+
+
+class CompressedMulticlass:
+    """Compressed multi-class TM: clause id = class * C + j, polarity
+    alternates +/- with j (Eq. 1); frequency reorder applied at build,
+    like the Rust engine."""
+
+    def __init__(self, clauses):
+        # clauses: [K][C][2F] include masks.
+        self.classes = len(clauses)
+        self.clauses_per_class = len(clauses[0])
+        features = len(clauses[0][0]) // 2
+        flat = [mask for cls in clauses for mask in cls]
+        self.model = CompressedModel(features, flat)
+        self.model.reorder_by_frequency()
+
+    def class_sums(self, sample):
+        sums = [0] * self.classes
+        c = self.clauses_per_class
+        for cid in self.model.sweep(sample):
+            k, j = divmod(cid, c)
+            sums[k] += 1 if j % 2 == 0 else -1
+        return sums
+
+
+class CompressedCotm:
+    """Compressed CoTM: shared clause pool + signed weights (Eq. 2)."""
+
+    def __init__(self, clauses, weights):
+        # clauses: [C][2F]; weights: [K][C].
+        features = len(clauses[0]) // 2
+        self.model = CompressedModel(features, clauses)
+        self.model.reorder_by_frequency()
+        self.classes = len(weights)
+        # Clause-major weight columns, like the Rust engine.
+        self.weight_cols = [
+            [weights[k][j] for k in range(self.classes)]
+            for j in range(len(clauses))
+        ]
+
+    def class_sums(self, sample):
+        sums = [0] * self.classes
+        for cid in self.model.sweep(sample):
+            for k, w in enumerate(self.weight_cols[cid]):
+                sums[k] += w
+        return sums

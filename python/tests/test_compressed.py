@@ -1,0 +1,270 @@
+"""Compressed include-list walk mirror vs the Rust engines (tm/compressed.rs).
+
+Plain pytest (no hypothesis, no JAX) so it runs on every CI image —
+including toolchain-less ones where the Rust suite cannot. The golden
+models, samples, class sums and frequency-reordered walk lists below are
+asserted *identically* in ``rust/src/tm/compressed.rs``
+(``golden_vectors_match_python_mirror`` /
+``golden_frequency_reorder_matches_python_mirror``); both sides build
+them from the same closed-form formulas, so if either implementation
+drifts, both suites fail.
+"""
+
+import random
+
+from compressed import (
+    PACKED_VS_COMPRESSED_DENSITY,
+    PACKED_VS_INDEXED_DENSITY,
+    CompressedCotm,
+    CompressedModel,
+    CompressedMulticlass,
+    select_engine,
+)
+from invindex import ref_cotm_class_sums, ref_multiclass_class_sums
+
+# ---------------------------------------------------------------------
+# The shared golden scheme (formulas mirrored in compressed.rs — the
+# same models/samples the invindex mirror pins, so all four engine
+# families golden-vector to one table):
+#   multiclass: F=9, C=4/class, K=3; include(k,j,l) = (3l+5j+7k)%11 == 0
+#   cotm:       F=9, C=6, K=3; include(j,l) = (5l+3j)%7 == 0,
+#               weight(k,j) = (j+2k)%7 - 3
+#   sample s:   feature i = (i*i + 3*i*s + 2*s) % 7 < 3
+# ---------------------------------------------------------------------
+
+F = 9
+LITS = 2 * F
+
+GOLDEN_MC_CLAUSES = [
+    [[(3 * l + 5 * j + 7 * k) % 11 == 0 for l in range(LITS)] for j in range(4)]
+    for k in range(3)
+]
+GOLDEN_CO_CLAUSES = [
+    [(5 * l + 3 * j) % 7 == 0 for l in range(LITS)] for j in range(6)
+]
+GOLDEN_CO_WEIGHTS = [[(j + 2 * k) % 7 - 3 for j in range(6)] for k in range(3)]
+
+
+def golden_sample(s):
+    return [(i * i + 3 * i * s + 2 * s) % 7 < 3 for i in range(F)]
+
+
+GOLDEN_MC_SUMS = [
+    [1, 0, -1],
+    [0, -1, 2],
+    [0, -1, 0],
+    [0, 0, 0],
+    [-1, -1, 1],
+    [0, 0, 0],
+]
+GOLDEN_CO_SUMS = [
+    [-2, 0, 2],
+    [-6, 0, 6],
+    [0, 2, -3],
+    [3, 2, -6],
+    [-3, -1, 1],
+    [3, 2, -6],
+]
+
+# The frequency-reorder golden (mirrored in compressed.rs): F=3, include
+# lists [0,4], [2,4], [4], [0,2,4,5] — literal frequencies 0:2, 2:2,
+# 4:4, 5:1, so the reorder is a real permutation.
+REORDER_LISTS = [[0, 4], [2, 4], [4], [0, 2, 4, 5]]
+REORDER_MASKS = [
+    [lit in lst for lit in range(6)] for lst in REORDER_LISTS
+]
+REORDER_WANT = [[4, 0], [4, 2], [4], [4, 0, 2, 5]]
+
+
+def test_multiclass_golden_vectors():
+    eng = CompressedMulticlass(GOLDEN_MC_CLAUSES)
+    for s in range(6):
+        x = golden_sample(s)
+        assert eng.class_sums(x) == GOLDEN_MC_SUMS[s], s
+        # The goldens themselves match the direct reference, so all
+        # tiers (Rust compressed, Rust scalar, this mirror) pin the
+        # same semantics.
+        assert ref_multiclass_class_sums(GOLDEN_MC_CLAUSES, x) == GOLDEN_MC_SUMS[s], s
+
+
+def test_cotm_golden_vectors():
+    eng = CompressedCotm(GOLDEN_CO_CLAUSES, GOLDEN_CO_WEIGHTS)
+    for s in range(6):
+        x = golden_sample(s)
+        assert eng.class_sums(x) == GOLDEN_CO_SUMS[s], s
+        assert (
+            ref_cotm_class_sums(GOLDEN_CO_CLAUSES, GOLDEN_CO_WEIGHTS, x)
+            == GOLDEN_CO_SUMS[s]
+        ), s
+
+
+def test_golden_frequency_reorder():
+    # The deterministic reorder key (descending global frequency, ties
+    # by ascending literal id) — compressed.rs asserts these exact
+    # lists in golden_frequency_reorder_matches_python_mirror.
+    cm = CompressedModel(3, REORDER_MASKS)
+    assert [cm.included(c) for c in range(4)] == REORDER_LISTS
+    assert cm.literal_frequencies() == [2, 0, 2, 0, 4, 1]
+    cm.reorder_by_frequency()
+    assert [cm.included(c) for c in range(4)] == REORDER_WANT
+    # Both golden models reorder to themselves (uniform in-clause
+    # frequencies), which the sums goldens rely on.
+    g = CompressedModel(F, GOLDEN_CO_CLAUSES)
+    before = [g.included(c) for c in range(g.num_clauses())]
+    g.reorder_by_frequency()
+    assert [g.included(c) for c in range(g.num_clauses())] == before
+
+
+def test_walk_order_is_output_invariant():
+    # Sorted vs frequency-reordered walks are the same AND over the
+    # same set: firing identical on all 8 inputs of the reorder model.
+    sorted_m = CompressedModel(3, REORDER_MASKS)
+    hot = CompressedModel(3, REORDER_MASKS)
+    hot.reorder_by_frequency()
+    for bits in range(8):
+        x = [bool((bits >> i) & 1) for i in range(3)]
+        assert sorted_m.sweep(x) == hot.sweep(x), bits
+
+
+def test_hand_worked_multiclass_oracle():
+    # The same hand-worked example as rust/src/tm/infer.rs and
+    # python/tests/test_model.py: both layers must agree on it.
+    clauses = [
+        [
+            [True, False, False, False],   # class0 clause0 (+): x0
+            [False, False, False, True],   # class0 clause1 (-): not x1
+        ],
+        [
+            [False, True, False, False],   # class1 clause0 (+): not x0
+            [False, False, True, False],   # class1 clause1 (-): x1
+        ],
+    ]
+    eng = CompressedMulticlass(clauses)
+    assert eng.class_sums([True, False]) == [0, 0]
+    assert eng.class_sums([True, True]) == [1, -1]
+
+
+def test_hand_worked_cotm_oracle():
+    clauses = [
+        [True, False, False, False],   # clause0: x0
+        [False, False, True, False],   # clause1: x1
+    ]
+    weights = [[3, -2], [-1, 4]]
+    eng = CompressedCotm(clauses, weights)
+    assert eng.class_sums([True, True]) == [1, 3]
+    assert eng.class_sums([True, False]) == [3, -1]
+    assert eng.class_sums([False, False]) == [0, 0]
+
+
+def test_empty_clause_never_fires():
+    # All-exclude clauses compress to empty lists — the "empty clause
+    # outputs 0 at inference" convention.
+    eng = CompressedCotm([[False] * 4, [False] * 4], [[5, 7], [1, 2]])
+    assert eng.class_sums([True, True]) == [0, 0]
+    assert eng.class_sums([False, False]) == [0, 0]
+
+
+def test_contradictory_clause_never_fires():
+    # x0 AND not-x0 always early-exits on one of the pair.
+    eng = CompressedCotm([[True, True, False, False]], [[5], [5]])
+    for x in ([True, True], [False, False], [True, False]):
+        assert eng.class_sums(x) == [0, 0], x
+
+
+def test_all_include_clause_fires_only_on_its_witness():
+    # One literal per pair: the longest non-contradictory walk. Fires
+    # exactly on the witness, early-exits on every single-bit flip.
+    lists = [2 * i + (i % 2) for i in range(4)]  # x0, !x1, x2, !x3
+    clauses = [[lit in lists for lit in range(8)]]
+    eng = CompressedCotm(clauses, [[2], [-1]])
+    witness = [True, False, True, False]
+    assert eng.class_sums(witness) == [2, -1]
+    for flip in range(4):
+        x = list(witness)
+        x[flip] = not x[flip]
+        assert eng.class_sums(x) == [0, 0], flip
+
+
+def test_density_and_postings_accounting():
+    cm = CompressedModel(F, GOLDEN_CO_CLAUSES)
+    included = sum(sum(m) for m in GOLDEN_CO_CLAUSES)
+    assert cm.postings() == included
+    assert abs(cm.density() - included / (6 * LITS)) < 1e-12
+    assert CompressedModel(2, [[False] * 4]).density() == 0.0
+    assert CompressedModel(0, []).density() == 0.0
+
+
+def test_select_engine_is_a_pure_three_way_threshold():
+    it, ct = PACKED_VS_INDEXED_DENSITY, PACKED_VS_COMPRESSED_DENSITY
+    # Same table as compressed.rs select_engine_is_a_pure_three_way_threshold.
+    assert select_engine(0.01, it, ct) == "indexed"
+    assert select_engine(it, it, ct) == "indexed"
+    assert select_engine(0.1, it, ct) == "compressed"
+    assert select_engine(ct, it, ct) == "compressed"
+    assert select_engine(0.5, it, ct) == "packed"
+    assert select_engine(0.0, 0.0, 0.0) == "indexed"
+    assert select_engine(0.1, 0.0, 0.0) == "packed"
+    assert select_engine(0.1, 0.0, 1.0) == "compressed"
+    assert select_engine(1.0, 1.0, 0.0) == "indexed"
+    assert select_engine(0.9, 0.0, 0.9) == "compressed"
+    # Inverted pairs stay total: indexed wins its range first.
+    assert select_engine(0.3, 0.5, 0.1) == "indexed"
+    assert select_engine(0.7, 0.5, 0.1) == "packed"
+
+
+def _random_masks(rng, n, lits, density):
+    return [[rng.random() < density for _ in range(lits)] for _ in range(n)]
+
+
+def test_randomized_differential_multiclass():
+    # 300 random models spanning all-exclude to dense clauses: the
+    # early-exit walk must equal the direct evaluator sample-for-sample.
+    rng = random.Random(0xE7EA1)
+    for case in range(300):
+        f = rng.randint(1, 24)
+        c = 2 * rng.randint(1, 4)
+        k = rng.randint(2, 4)
+        density = rng.choice([0.0, 0.05, 0.15, 0.4, 0.8, 1.0])
+        clauses = [_random_masks(rng, c, 2 * f, density) for _ in range(k)]
+        eng = CompressedMulticlass(clauses)
+        for _ in range(4):
+            x = [rng.random() < 0.5 for _ in range(f)]
+            assert eng.class_sums(x) == ref_multiclass_class_sums(clauses, x), (
+                case, f, c, k, density,
+            )
+
+
+def test_randomized_differential_cotm():
+    rng = random.Random(0xE7EA2)
+    for case in range(300):
+        f = rng.randint(1, 24)
+        c = rng.randint(1, 8)
+        k = rng.randint(2, 4)
+        density = rng.choice([0.0, 0.05, 0.15, 0.4, 0.8, 1.0])
+        clauses = _random_masks(rng, c, 2 * f, density)
+        weights = [[rng.randint(-7, 7) for _ in range(c)] for _ in range(k)]
+        eng = CompressedCotm(clauses, weights)
+        for _ in range(4):
+            x = [rng.random() < 0.5 for _ in range(f)]
+            assert eng.class_sums(x) == ref_cotm_class_sums(clauses, weights, x), (
+                case, f, c, k, density,
+            )
+
+
+def test_randomized_compressed_agrees_with_invindex_mirror():
+    # Cross-mirror differential: the compressed walk and the counter
+    # sweep are two event-driven readings of the same semantics.
+    from invindex import IndexedMulticlass
+
+    rng = random.Random(0xE7EA3)
+    for case in range(100):
+        f = rng.randint(1, 16)
+        c = 2 * rng.randint(1, 3)
+        k = rng.randint(2, 4)
+        density = rng.choice([0.0, 0.1, 0.3, 0.6])
+        clauses = [_random_masks(rng, c, 2 * f, density) for _ in range(k)]
+        compressed = CompressedMulticlass(clauses)
+        indexed = IndexedMulticlass(clauses)
+        for _ in range(3):
+            x = [rng.random() < 0.5 for _ in range(f)]
+            assert compressed.class_sums(x) == indexed.class_sums(x), (case, f)

@@ -94,7 +94,9 @@ COMMANDS:
   help       Show this text
 
 Backends: golden-multiclass golden-cotm bitpar-multiclass bitpar-cotm
-          indexed-multiclass indexed-cotm auto-multiclass auto-cotm
+          indexed-multiclass indexed-cotm
+          compressed-multiclass compressed-cotm
+          auto-multiclass auto-cotm
           multiclass-sync multiclass-async-bd multiclass-proposed
           cotm-sync cotm-async-bd cotm-proposed
 
@@ -103,11 +105,17 @@ evaluation, dynamically batched; no artifacts needed).
 indexed-* is the event-driven inverted-index tier (literal->clause
 postings + unsatisfied-literal counters; only clauses a sample's set
 literals touch are visited — the fast path for sparse models).
-auto-* picks packed vs indexed per compiled model by included-literal
-density: at or below the threshold (default 0.05; set
-`indexed_density_threshold` under [coordinator] in serve.toml) the
-indexed engine serves, above it the packed engine. Replies name the
-concrete engine used; the choice never changes the sums.
+compressed-* is the compressed-clause tier (each clause stored as its
+sorted include-literal list, hot literals reordered first; evaluation
+walks only the includes and early-exits on the first unsatisfied one —
+the fast path for moderately sparse models).
+auto-* picks indexed vs compressed vs packed per compiled model by
+included-literal density: at or below `indexed_density_threshold`
+(default 0.05) the indexed engine serves, else at or below
+`compressed_density_threshold` (default 0.2) the compressed engine,
+above that the packed engine (both knobs live under [coordinator] in
+serve.toml). Replies name the concrete engine used; the choice never
+changes the sums.
 
 The packed engines evaluate in SIMD word lanes (`simd` under
 [coordinator], or --simd on serve): \"auto\" (default) picks the widest

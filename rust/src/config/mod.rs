@@ -37,6 +37,13 @@ pub struct ServeConfig {
     /// packed bit-parallel engines. Must be in [0, 1]; the default is
     /// [`crate::tm::index::PACKED_VS_INDEXED_DENSITY`].
     pub indexed_density_threshold: f64,
+    /// Upper edge of the three-way `auto-*` crossover: models denser
+    /// than `indexed_density_threshold` but at or below this threshold
+    /// serve through the compressed include-list engines (ETHEREAL
+    /// tier); denser models through the packed bit-parallel engines.
+    /// Must be in [0, 1]; the default is
+    /// [`crate::tm::compressed::PACKED_VS_COMPRESSED_DENSITY`].
+    pub compressed_density_threshold: f64,
     /// SIMD lane width the packed engines evaluate through
     /// (`simd = "auto" | "scalar" | "portable" | "avx2" | "avx512"`).
     /// `auto` (the default) picks the widest level detected at server
@@ -57,6 +64,8 @@ impl Default for ServeConfig {
             artifacts_dir: "artifacts".into(),
             wta: WtaKind::Tba,
             indexed_density_threshold: crate::tm::index::PACKED_VS_INDEXED_DENSITY,
+            compressed_density_threshold:
+                crate::tm::compressed::PACKED_VS_COMPRESSED_DENSITY,
             simd: SimdChoice::Auto,
         }
     }
@@ -75,6 +84,7 @@ impl ServeConfig {
     /// artifacts_dir = "artifacts"
     /// wta = "tba"
     /// indexed_density_threshold = 0.05
+    /// compressed_density_threshold = 0.2
     /// simd = "auto"
     /// ```
     pub fn from_toml(doc: &TomlDoc) -> Result<ServeConfig> {
@@ -105,6 +115,9 @@ impl ServeConfig {
         }
         if let Some(v) = doc.get("coordinator", "indexed_density_threshold") {
             cfg.indexed_density_threshold = v.as_float()?;
+        }
+        if let Some(v) = doc.get("coordinator", "compressed_density_threshold") {
+            cfg.compressed_density_threshold = v.as_float()?;
         }
         if let Some(v) = doc.get("coordinator", "simd") {
             let name = v.as_str()?;
@@ -156,6 +169,13 @@ impl ServeConfig {
                 "indexed_density_threshold must be in [0, 1]",
             ));
         }
+        if !(0.0..=1.0).contains(&self.compressed_density_threshold) {
+            // NaN fails the range test too: the three-way auto-select
+            // comparison must be total.
+            return Err(crate::Error::config(
+                "compressed_density_threshold must be in [0, 1]",
+            ));
+        }
         Ok(())
     }
 }
@@ -182,6 +202,7 @@ mod tests {
             artifacts_dir = "custom/artifacts"
             wta = "mesh"
             indexed_density_threshold = 0.12
+            compressed_density_threshold = 0.33
             simd = "portable"
             "#,
         )
@@ -193,6 +214,7 @@ mod tests {
         assert_eq!(cfg.wta, WtaKind::Mesh);
         assert_eq!(cfg.artifacts_dir, "custom/artifacts");
         assert_eq!(cfg.indexed_density_threshold, 0.12);
+        assert_eq!(cfg.compressed_density_threshold, 0.33);
         assert_eq!(
             cfg.simd,
             SimdChoice::Forced(crate::tm::simd::SimdLevel::Portable)
@@ -226,6 +248,43 @@ mod tests {
             ServeConfig::default().indexed_density_threshold,
             crate::tm::index::PACKED_VS_INDEXED_DENSITY
         );
+        assert_eq!(
+            ServeConfig::default().compressed_density_threshold,
+            crate::tm::compressed::PACKED_VS_COMPRESSED_DENSITY
+        );
+    }
+
+    #[test]
+    fn rejects_out_of_range_compressed_threshold() {
+        // Regression (the new knob must get the same total-comparison
+        // guard as the indexed one): NaN and out-of-range values must
+        // fail validation, not silently skew the three-way auto select.
+        for t in ["-0.1", "1.5", "nan"] {
+            let doc = TomlDoc::parse(&format!(
+                "[coordinator]\ncompressed_density_threshold = {t}\n"
+            ))
+            .unwrap();
+            let err = ServeConfig::from_toml(&doc).unwrap_err();
+            assert!(
+                err.to_string().contains("compressed_density_threshold"),
+                "{t}: {err}"
+            );
+        }
+        // Integer 0 and 1 coerce to float and are valid boundaries, and
+        // the two knobs validate independently (inverted pairs are
+        // legal — selection stays total).
+        for t in ["0", "1", "0.5"] {
+            let doc = TomlDoc::parse(&format!(
+                "[coordinator]\ncompressed_density_threshold = {t}\n"
+            ))
+            .unwrap();
+            assert!(ServeConfig::from_toml(&doc).is_ok(), "{t}");
+        }
+        let doc = TomlDoc::parse(
+            "[coordinator]\nindexed_density_threshold = 0.9\ncompressed_density_threshold = 0.1\n",
+        )
+        .unwrap();
+        assert!(ServeConfig::from_toml(&doc).is_ok());
     }
 
     #[test]

@@ -19,9 +19,16 @@ pub enum Backend {
     /// density) models.
     IndexedMulticlass,
     IndexedCotm,
-    /// Density-based auto-selection between the packed and indexed
-    /// native engines, resolved per compiled model at server build
-    /// time. Responses report the *concrete* backend that served them.
+    /// Compressed-clause native CPU path (ETHEREAL tier): per-clause
+    /// sorted include-literal lists walked with first-miss early exit,
+    /// dynamically batched (see [`crate::tm::compressed`]). Wins in the
+    /// moderately sparse regime between the indexed and packed tiers.
+    CompressedMulticlass,
+    CompressedCotm,
+    /// Three-way density-based auto-selection between the packed,
+    /// indexed and compressed native engines, resolved per compiled
+    /// model at server build time. Responses report the *concrete*
+    /// backend that served them.
     AutoMulticlass,
     AutoCotm,
     /// Event-simulated hardware models.
@@ -34,13 +41,15 @@ pub enum Backend {
 }
 
 impl Backend {
-    pub const ALL: [Backend; 14] = [
+    pub const ALL: [Backend; 16] = [
         Backend::GoldenMulticlass,
         Backend::GoldenCotm,
         Backend::BitParallelMulticlass,
         Backend::BitParallelCotm,
         Backend::IndexedMulticlass,
         Backend::IndexedCotm,
+        Backend::CompressedMulticlass,
+        Backend::CompressedCotm,
         Backend::AutoMulticlass,
         Backend::AutoCotm,
         Backend::SyncMulticlass,
@@ -70,16 +79,27 @@ impl Backend {
         matches!(self, Backend::IndexedMulticlass | Backend::IndexedCotm)
     }
 
+    /// Compressed-clause backends: the ETHEREAL include-list tier for
+    /// moderately sparse models.
+    pub fn is_compressed(self) -> bool {
+        matches!(
+            self,
+            Backend::CompressedMulticlass | Backend::CompressedCotm
+        )
+    }
+
     /// Auto-select backends: resolved to a concrete native engine
-    /// (packed or indexed) per compiled model at server build time.
+    /// (packed, indexed or compressed) per compiled model at server
+    /// build time.
     pub fn is_auto(self) -> bool {
         matches!(self, Backend::AutoMulticlass | Backend::AutoCotm)
     }
 
-    /// Native batched backends (bit-parallel or indexed): always
-    /// available, served through the shared `Send + Sync` engines.
+    /// Native batched backends (bit-parallel, indexed or compressed):
+    /// always available, served through the shared `Send + Sync`
+    /// engines.
     pub fn is_native_batched(self) -> bool {
-        self.is_bit_parallel() || self.is_indexed()
+        self.is_bit_parallel() || self.is_indexed() || self.is_compressed()
     }
 
     /// AOT artifact family for golden backends.
@@ -99,6 +119,8 @@ impl Backend {
             Backend::BitParallelCotm => "bitpar-cotm",
             Backend::IndexedMulticlass => "indexed-multiclass",
             Backend::IndexedCotm => "indexed-cotm",
+            Backend::CompressedMulticlass => "compressed-multiclass",
+            Backend::CompressedCotm => "compressed-cotm",
             Backend::AutoMulticlass => "auto-multiclass",
             Backend::AutoCotm => "auto-cotm",
             Backend::SyncMulticlass => "multiclass-sync",
@@ -192,5 +214,28 @@ mod tests {
         );
         assert_eq!(Backend::parse("auto-cotm"), Some(Backend::AutoCotm));
         assert_eq!(Backend::IndexedCotm.family(), None);
+    }
+
+    #[test]
+    fn compressed_classification() {
+        assert!(Backend::CompressedMulticlass.is_compressed());
+        assert!(Backend::CompressedCotm.is_compressed());
+        assert!(!Backend::CompressedMulticlass.is_bit_parallel());
+        assert!(!Backend::CompressedMulticlass.is_indexed());
+        assert!(!Backend::CompressedMulticlass.is_auto());
+        assert!(!Backend::CompressedMulticlass.is_golden());
+        assert!(Backend::CompressedMulticlass.is_native_batched());
+        assert!(Backend::CompressedCotm.is_native_batched());
+        assert!(!Backend::IndexedCotm.is_compressed());
+        assert!(!Backend::AutoMulticlass.is_compressed());
+        assert_eq!(
+            Backend::parse("compressed-multiclass"),
+            Some(Backend::CompressedMulticlass)
+        );
+        assert_eq!(
+            Backend::parse("compressed-cotm"),
+            Some(Backend::CompressedCotm)
+        );
+        assert_eq!(Backend::CompressedCotm.family(), None);
     }
 }

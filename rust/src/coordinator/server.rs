@@ -4,14 +4,17 @@
 //!   (thread-pinned runtime).
 //! * Native batched requests → dynamic batcher thread → shared
 //!   `Send + Sync` engines, with large flushes sharded across scoped
-//!   threads. Two engine families, no artifacts needed — this tier is
+//!   threads. Three engine families, no artifacts needed — this tier is
 //!   always available: the packed bit-parallel engines
-//!   ([`crate::tm::fast_infer`], dense models) and the event-driven
-//!   inverted-index engines ([`crate::tm::index`], sparse models).
-//!   The `auto-*` backends resolve to one of the two per compiled
-//!   model by included-literal density
-//!   (`ServeConfig.indexed_density_threshold`); responses report the
-//!   concrete backend that served them.
+//!   ([`crate::tm::fast_infer`], dense models), the event-driven
+//!   inverted-index engines ([`crate::tm::index`], extremely sparse
+//!   models) and the compressed include-list engines
+//!   ([`crate::tm::compressed`], the moderately sparse ETHEREAL
+//!   regime). The `auto-*` backends resolve to one of the three per
+//!   compiled model by included-literal density
+//!   (`ServeConfig.indexed_density_threshold` /
+//!   `compressed_density_threshold`); responses report the concrete
+//!   backend that served them.
 //! * Hardware-model requests → worker pool; each worker owns its own six
 //!   architecture instances built from the trained models.
 //! * Bounded in-flight budget; excess submissions are rejected
@@ -36,8 +39,9 @@ use crate::coordinator::router::{Backend, InferRequest, InferResponse};
 use crate::coordinator::stats::{ServerStats, StatsSnapshot};
 use crate::error::{Error, Result};
 use crate::runtime::golden::{GoldenModels, GoldenService};
+use crate::tm::compressed::{select_engine, CompressedCotm, CompressedMulticlass, EngineChoice};
 use crate::tm::fast_infer::{BatchEngine, BitParallelCotm, BitParallelMulticlass};
-use crate::tm::index::{prefer_indexed, IndexedCotm, IndexedMulticlass};
+use crate::tm::index::{IndexedCotm, IndexedMulticlass};
 use crate::tm::simd::WordLanes;
 use crate::tm::{CoTmModel, MultiClassTmModel};
 
@@ -71,15 +75,15 @@ struct GoldenItem {
     features: Vec<f32>,
 }
 
-/// A request travelling to a native-engine batcher (bit-parallel or
-/// inverted-index).
+/// A request travelling to a native-engine batcher (bit-parallel,
+/// inverted-index or compressed).
 struct NativeItem {
     features: Vec<bool>,
 }
 
-/// Build the dynamic batcher for one native engine (packed bit-parallel
-/// or event-driven inverted-index — anything implementing
-/// [`BatchEngine`]): each flush is evaluated through the shared
+/// Build the dynamic batcher for one native engine (packed
+/// bit-parallel, event-driven inverted-index or compressed
+/// include-list — anything implementing [`BatchEngine`]): each flush is evaluated through the shared
 /// engine's batch path, sharded across up to `shard_threads` scoped
 /// threads when the batch is large (the engine is `Sync`, so shards
 /// borrow it without copying).
@@ -148,11 +152,14 @@ pub struct CoordinatorServer {
     batcher_mc: Option<DynamicBatcher<GoldenItem, InferResponse>>,
     batcher_co: Option<DynamicBatcher<GoldenItem, InferResponse>>,
     /// One batcher per native engine (always available): packed
-    /// bit-parallel and event-driven inverted-index, per model family.
+    /// bit-parallel, event-driven inverted-index and compressed
+    /// include-list, per model family.
     batcher_bp_mc: Option<DynamicBatcher<NativeItem, InferResponse>>,
     batcher_bp_co: Option<DynamicBatcher<NativeItem, InferResponse>>,
     batcher_ix_mc: Option<DynamicBatcher<NativeItem, InferResponse>>,
     batcher_ix_co: Option<DynamicBatcher<NativeItem, InferResponse>>,
+    batcher_cp_mc: Option<DynamicBatcher<NativeItem, InferResponse>>,
+    batcher_cp_co: Option<DynamicBatcher<NativeItem, InferResponse>>,
     /// Per-model `auto-*` resolutions (a concrete native backend each),
     /// decided once at build time from included-literal density.
     auto_mc: Backend,
@@ -270,19 +277,31 @@ impl CoordinatorServer {
         )?;
         let ix_mc = Arc::new(IndexedMulticlass::from_model(&mc_model)?);
         let ix_co = Arc::new(IndexedCotm::from_model(&cotm_model)?);
-        // Resolve `auto-*` per compiled model: sparse models go through
-        // the inverted index, dense ones through the packed words. The
-        // choice can only affect speed — both engines are held to the
-        // same bit-exactness bar by the conformance suite.
-        let auto_mc = if prefer_indexed(ix_mc.density(), cfg.indexed_density_threshold) {
-            Backend::IndexedMulticlass
-        } else {
-            Backend::BitParallelMulticlass
+        let cp_mc = Arc::new(CompressedMulticlass::from_model(&mc_model)?);
+        let cp_co = Arc::new(CompressedCotm::from_model(&cotm_model)?);
+        // Resolve `auto-*` per compiled model with the three-way density
+        // decision: extremely sparse models go through the inverted
+        // index, moderately sparse ones through the compressed
+        // include-list walk, dense ones through the packed words. The
+        // choice can only affect speed — all three engine families are
+        // held to the same bit-exactness bar by the conformance suite.
+        let auto_mc = match select_engine(
+            ix_mc.density(),
+            cfg.indexed_density_threshold,
+            cfg.compressed_density_threshold,
+        ) {
+            EngineChoice::Indexed => Backend::IndexedMulticlass,
+            EngineChoice::Compressed => Backend::CompressedMulticlass,
+            EngineChoice::Packed => Backend::BitParallelMulticlass,
         };
-        let auto_co = if prefer_indexed(ix_co.density(), cfg.indexed_density_threshold) {
-            Backend::IndexedCotm
-        } else {
-            Backend::BitParallelCotm
+        let auto_co = match select_engine(
+            ix_co.density(),
+            cfg.indexed_density_threshold,
+            cfg.compressed_density_threshold,
+        ) {
+            EngineChoice::Indexed => Backend::IndexedCotm,
+            EngineChoice::Compressed => Backend::CompressedCotm,
+            EngineChoice::Packed => Backend::BitParallelCotm,
         };
         let batcher_ix_mc = native_batcher(
             ix_mc,
@@ -296,6 +315,24 @@ impl CoordinatorServer {
         let batcher_ix_co = native_batcher(
             ix_co,
             Backend::IndexedCotm,
+            cfg.max_batch,
+            timeout,
+            Arc::clone(&stats),
+            Arc::clone(&in_flight),
+            shard_threads,
+        )?;
+        let batcher_cp_mc = native_batcher(
+            cp_mc,
+            Backend::CompressedMulticlass,
+            cfg.max_batch,
+            timeout,
+            Arc::clone(&stats),
+            Arc::clone(&in_flight),
+            shard_threads,
+        )?;
+        let batcher_cp_co = native_batcher(
+            cp_co,
+            Backend::CompressedCotm,
             cfg.max_batch,
             timeout,
             Arc::clone(&stats),
@@ -407,6 +444,8 @@ impl CoordinatorServer {
             batcher_bp_co: Some(batcher_bp_co),
             batcher_ix_mc: Some(batcher_ix_mc),
             batcher_ix_co: Some(batcher_ix_co),
+            batcher_cp_mc: Some(batcher_cp_mc),
+            batcher_cp_co: Some(batcher_cp_co),
             auto_mc,
             auto_co,
             simd,
@@ -479,7 +518,9 @@ impl CoordinatorServer {
                 Backend::BitParallelMulticlass => self.batcher_bp_mc.as_ref(),
                 Backend::BitParallelCotm => self.batcher_bp_co.as_ref(),
                 Backend::IndexedMulticlass => self.batcher_ix_mc.as_ref(),
-                _ => self.batcher_ix_co.as_ref(),
+                Backend::IndexedCotm => self.batcher_ix_co.as_ref(),
+                Backend::CompressedMulticlass => self.batcher_cp_mc.as_ref(),
+                _ => self.batcher_cp_co.as_ref(),
             }
             .ok_or_else(|| {
                 self.abort_submit(Error::coordinator("native batcher shut down"))
@@ -579,6 +620,12 @@ impl CoordinatorServer {
             b.shutdown();
         }
         if let Some(b) = self.batcher_ix_co.take() {
+            b.shutdown();
+        }
+        if let Some(b) = self.batcher_cp_mc.take() {
+            b.shutdown();
+        }
+        if let Some(b) = self.batcher_cp_co.take() {
             b.shutdown();
         }
     }
@@ -747,29 +794,33 @@ mod tests {
 
     #[test]
     fn auto_backends_resolve_by_density_and_stay_bit_exact() {
-        // Threshold 1.0 forces the indexed engines; threshold 0.0 (on
-        // trained Iris models, whose densities are > 0) forces the
-        // packed engines. The choice must never change the sums.
+        // The three-way crossover forced to each tier in turn:
+        // indexed_threshold 1.0 forces the indexed engines; (0.0, 1.0)
+        // forces the compressed engines; (0.0, 0.0) (on trained Iris
+        // models, whose densities are > 0) forces the packed engines.
+        // The choice must never change the sums.
         let dset = data::iris().unwrap();
         let (tr, _) = dset.split(0.8, 42);
         let m = train_multiclass(TmParams::iris_paper(), &tr, 20, 2).unwrap();
         let cm = train_cotm(TmParams::iris_paper(), &tr, 20, 3).unwrap();
-        // Precondition for the threshold-0.0 expectation: the trained
+        // Precondition for the threshold-0.0 expectations: the trained
         // models actually include literals (density strictly > 0).
         assert!(crate::tm::IndexedMulticlass::from_model(&m).unwrap().density() > 0.0);
         assert!(crate::tm::IndexedCotm::from_model(&cm).unwrap().density() > 0.0);
         let mut sums_by_choice = Vec::new();
-        for (threshold, want_mc, want_co) in [
-            (1.0, Backend::IndexedMulticlass, Backend::IndexedCotm),
-            (0.0, Backend::BitParallelMulticlass, Backend::BitParallelCotm),
+        for (it, ct, want_mc, want_co) in [
+            (1.0, 0.0, Backend::IndexedMulticlass, Backend::IndexedCotm),
+            (0.0, 1.0, Backend::CompressedMulticlass, Backend::CompressedCotm),
+            (0.0, 0.0, Backend::BitParallelMulticlass, Backend::BitParallelCotm),
         ] {
             let cfg = ServeConfig {
                 workers: 2,
-                indexed_density_threshold: threshold,
+                indexed_density_threshold: it,
+                compressed_density_threshold: ct,
                 ..ServeConfig::default()
             };
             let (srv, d) = server(false, Some(cfg));
-            assert_eq!(srv.auto_backends(), (want_mc, want_co), "threshold {threshold}");
+            assert_eq!(srv.auto_backends(), (want_mc, want_co), "thresholds ({it}, {ct})");
             let mut sums = Vec::new();
             for i in [0usize, 40, 99] {
                 let r = srv
@@ -799,6 +850,48 @@ mod tests {
         }
         // Auto-select changed the engine, not the outputs.
         assert_eq!(sums_by_choice[0], sums_by_choice[1]);
+        assert_eq!(sums_by_choice[1], sums_by_choice[2]);
+    }
+
+    #[test]
+    fn compressed_backends_serve_bit_exact_without_artifacts() {
+        // The compressed include-list tier is held to the same bar as
+        // the packed and indexed tiers: no artifacts, bit-exact class
+        // sums vs the scalar reference, through the real batcher
+        // plumbing.
+        let (srv, d) = server(false, None);
+        let dset = data::iris().unwrap();
+        let (tr, _) = dset.split(0.8, 42);
+        let m = train_multiclass(TmParams::iris_paper(), &tr, 20, 2).unwrap();
+        let cm = train_cotm(TmParams::iris_paper(), &tr, 20, 3).unwrap();
+        for i in [0usize, 17, 80, 149] {
+            let r = srv
+                .infer(InferRequest {
+                    features: d.features[i].clone(),
+                    backend: Backend::CompressedMulticlass,
+                })
+                .unwrap();
+            assert_eq!(r.backend, Backend::CompressedMulticlass);
+            assert!(r.hw_latency.is_none(), "native path has no hw model");
+            assert_eq!(
+                r.class_sums,
+                crate::tm::infer::multiclass_class_sums(&m, &d.features[i]),
+                "sample {i}"
+            );
+            let r = srv
+                .infer(InferRequest {
+                    features: d.features[i].clone(),
+                    backend: Backend::CompressedCotm,
+                })
+                .unwrap();
+            assert_eq!(r.backend, Backend::CompressedCotm);
+            assert_eq!(
+                r.class_sums,
+                crate::tm::infer::cotm_class_sums(&cm, &d.features[i]),
+                "sample {i}"
+            );
+        }
+        srv.shutdown();
     }
 
     #[test]

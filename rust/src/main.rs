@@ -361,7 +361,9 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
     let bp_co = tm::BitParallelCotm::from_model(&cm)?;
     let ix_mc = tm::IndexedMulticlass::from_model(&m)?;
     let ix_co = tm::IndexedCotm::from_model(&cm)?;
-    let mut exact = [0usize; 4];
+    let cp_mc = tm::CompressedMulticlass::from_model(&m)?;
+    let cp_co = tm::CompressedCotm::from_model(&cm)?;
+    let mut exact = [0usize; 6];
     for x in &dataset.features {
         let want_mc = tm::infer::multiclass_class_sums(&m, x);
         let want_co = tm::infer::cotm_class_sums(&cm, x);
@@ -369,12 +371,16 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
         exact[1] += (tm::BatchEngine::class_sums(&bp_co, x) == want_co) as usize;
         exact[2] += (tm::BatchEngine::class_sums(&ix_mc, x) == want_mc) as usize;
         exact[3] += (tm::BatchEngine::class_sums(&ix_co, x) == want_co) as usize;
+        exact[4] += (tm::BatchEngine::class_sums(&cp_mc, x) == want_mc) as usize;
+        exact[5] += (tm::BatchEngine::class_sums(&cp_co, x) == want_co) as usize;
     }
     for (name, exact) in [
         ("bitpar-multiclass", exact[0]),
         ("bitpar-cotm", exact[1]),
         ("indexed-multiclass", exact[2]),
         ("indexed-cotm", exact[3]),
+        ("compressed-multiclass", exact[4]),
+        ("compressed-cotm", exact[5]),
     ] {
         let pct = 100.0 * exact as f64 / dataset.len() as f64;
         println!("{name:24} bit-exact sums    {pct:.1}%");
@@ -428,18 +434,17 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
         }
     }
     // Auto-select is a routing decision, not a numeric one: report
-    // where the default threshold lands these models.
-    let threshold = ServeConfig::default().indexed_density_threshold;
+    // where the default three-way thresholds land these models.
+    let cfg = ServeConfig::default();
+    let (it, ct) = (cfg.indexed_density_threshold, cfg.compressed_density_threshold);
     for (name, density) in [
         ("auto-multiclass", ix_mc.density()),
         ("auto-cotm", ix_co.density()),
     ] {
-        let choice = if tm::index::prefer_indexed(density, threshold) {
-            "indexed"
-        } else {
-            "bitpar"
-        };
-        println!("{name:24} density {density:.3} -> {choice} (threshold {threshold})");
+        let choice = tm::compressed::select_engine(density, it, ct).name();
+        println!(
+            "{name:24} density {density:.3} -> {choice} (thresholds {it}/{ct})"
+        );
     }
     // Trainer-parity bar: the packed-evaluation trainer must reproduce
     // the reference per-literal trainer bit-for-bit for the same seed

@@ -1,0 +1,720 @@
+//! Compressed-clause inference engines — the ETHEREAL serving tier.
+//!
+//! ETHEREAL (arXiv 2502.05640) observes that trained Tsetlin machines
+//! are overwhelmingly *excludes*: only a few percent of the 2F literal
+//! slots in a clause are included, so storing the dense include mask
+//! wastes memory and evaluation time on slots that can never matter.
+//! This module compresses each clause down to its **sorted
+//! include-literal list** (CSR layout: one flat literal array plus
+//! per-clause offsets) and evaluates by walking only that list,
+//! **early-exiting on the first unsatisfied literal** — work is
+//! proportional to what the clause actually checks, the representation
+//! analogue of the paper's event-driven evaluation.
+//!
+//! Compared to the inverted-index tier ([`super::index`]) the sweep is
+//! clause-major instead of literal-major: no counter scratch, no
+//! restore pass, and the early exit means a clause that fails on its
+//! first (hottest) literal costs one load. An optional
+//! literal-frequency reorder ([`CompressedModel::reorder_by_frequency`],
+//! applied by both engines at compile time) rewrites each clause's walk
+//! order so globally *hot* literals cluster at the front — the order is
+//! a speed decision only: clause firing is an AND over the same set, so
+//! sums are invariant under any permutation of the walk (pinned by a
+//! unit test below).
+//!
+//! Cost model: evaluating one sample costs at most one load per
+//! *(clause, included literal)* pair — `density · C · 2F` — and in
+//! practice far less because most clauses exit on their first literal.
+//! That beats the dense packed sweep (`~C · ceil(2F/64)` word ops) well
+//! above the indexed tier's crossover, so the three-way `auto-*`
+//! selection ([`select_engine`]) serves: indexed below
+//! `indexed_density_threshold`, compressed up to
+//! [`PACKED_VS_COMPRESSED_DENSITY`] (`compressed_density_threshold` in
+//! `ServeConfig`), packed above.
+//!
+//! Semantics are pinned to the scalar reference: an empty (all-exclude)
+//! clause has an empty include list and **never fires** (the inference
+//! convention), and a contradictory clause including both `x_i` and
+//! `¬x_i` always early-exits on one of the pair. Bit-exactness is
+//! enforced by `tests/engine_matrix.rs` across every engine family ×
+//! SIMD level, and the algorithm is mirrored bit-for-bit by
+//! `python/compressed.py` (shared golden vectors) so it validates on
+//! toolchain-less CI images.
+
+use super::fast_infer::{BatchEngine, BatchResult};
+use super::index::prefer_indexed;
+use super::infer::predict_argmax;
+use super::model::{ClauseMask, CoTmModel, MultiClassTmModel, TmParams};
+use crate::error::Result;
+
+/// Default included-literal density below which the compressed engines
+/// beat the packed engines (the upper edge of the three-way `auto-*`
+/// crossover; see the module cost model and
+/// `benches/compressed_vs_all.rs`). The indexed tier takes over below
+/// `PACKED_VS_INDEXED_DENSITY`.
+pub const PACKED_VS_COMPRESSED_DENSITY: f64 = 0.2;
+
+/// Which engine family the `auto-*` backends should serve a model
+/// through, given its included-literal density.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineChoice {
+    /// Inverted-index counter sweep (`density <= indexed_threshold`).
+    Indexed,
+    /// Compressed include-list walk
+    /// (`indexed_threshold < density <= compressed_threshold`).
+    Compressed,
+    /// Dense bit-parallel packed sweep (everything denser).
+    Packed,
+}
+
+impl EngineChoice {
+    /// Stable lowercase name (for reports and logs).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineChoice::Indexed => "indexed",
+            EngineChoice::Compressed => "compressed",
+            EngineChoice::Packed => "packed",
+        }
+    }
+}
+
+/// The three-way density-driven `auto-*` decision: indexed first (it
+/// wins at extreme sparsity), then compressed, then packed. Pure and
+/// total over every `(indexed_threshold, compressed_threshold)` pair —
+/// including inverted or 0.0/1.0 edge pairs — so conformance tests can
+/// assert the choice never changes outputs, only which engine computes
+/// them.
+pub fn select_engine(
+    density: f64,
+    indexed_threshold: f64,
+    compressed_threshold: f64,
+) -> EngineChoice {
+    if prefer_indexed(density, indexed_threshold) {
+        EngineChoice::Indexed
+    } else if density <= compressed_threshold {
+        EngineChoice::Compressed
+    } else {
+        EngineChoice::Packed
+    }
+}
+
+/// Compressed clause store: per-clause sorted include-literal lists in
+/// CSR layout (clause ids are the caller's flattened ordering, so the
+/// multiclass engine's per-class grouping `id = class · C + j` is
+/// preserved — each class's clauses are one contiguous id range).
+#[derive(Debug, Clone)]
+pub struct CompressedModel {
+    /// `literals[offsets[c] as usize..offsets[c+1] as usize]` = include
+    /// list of clause `c`, ascending by literal id after `build` (a
+    /// frequency reorder may permute each list; set membership is what
+    /// defines the clause).
+    literals: Vec<u32>,
+    /// Per-clause CSR offsets, length `num_clauses + 1`.
+    offsets: Vec<u32>,
+    /// Boolean feature width F (literal ids run over `0..2F`).
+    features: usize,
+}
+
+impl CompressedModel {
+    /// Compress clause masks over the 2F interleaved literals, in the
+    /// order their ids should be assigned. Masks must all be width 2F
+    /// (callers validate the model first).
+    pub fn build<'a>(
+        features: usize,
+        masks: impl IntoIterator<Item = &'a ClauseMask>,
+    ) -> CompressedModel {
+        let mut literals = Vec::new();
+        let mut offsets = vec![0u32];
+        for mask in masks {
+            debug_assert_eq!(mask.include.len(), 2 * features);
+            for (lit, &inc) in mask.include.iter().enumerate() {
+                if inc {
+                    literals.push(lit as u32);
+                }
+            }
+            offsets.push(literals.len() as u32);
+        }
+        CompressedModel { literals, offsets, features }
+    }
+
+    pub fn num_clauses(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn features(&self) -> usize {
+        self.features
+    }
+
+    /// The include list of clause `c` (in walk order).
+    pub fn included(&self, c: usize) -> &[u32] {
+        &self.literals[self.offsets[c] as usize..self.offsets[c + 1] as usize]
+    }
+
+    /// Total stored literal ids (= included literals across all
+    /// clauses) — the compressed footprint, vs `clauses · 2F` dense
+    /// mask slots.
+    pub fn postings(&self) -> usize {
+        self.literals.len()
+    }
+
+    /// Included-literal density of the compressed model.
+    pub fn density(&self) -> f64 {
+        let total = self.num_clauses() * 2 * self.features;
+        if total == 0 {
+            0.0
+        } else {
+            self.postings() as f64 / total as f64
+        }
+    }
+
+    /// How many times each literal id appears across all clause lists —
+    /// the "hotness" the frequency reorder clusters on.
+    pub fn literal_frequencies(&self) -> Vec<u32> {
+        let mut freq = vec![0u32; 2 * self.features];
+        for &lit in &self.literals {
+            freq[lit as usize] += 1;
+        }
+        freq
+    }
+
+    /// Reorder each clause's walk order so globally hot literals come
+    /// first (descending frequency, ties by ascending literal id — the
+    /// same deterministic key as `python/compressed.py`). A speed
+    /// decision only: firing is an AND over the set, so outputs are
+    /// invariant under any walk order.
+    pub fn reorder_by_frequency(&mut self) {
+        let freq = self.literal_frequencies();
+        for c in 0..self.num_clauses() {
+            let range = self.offsets[c] as usize..self.offsets[c + 1] as usize;
+            self.literals[range]
+                .sort_by_key(|&lit| (std::cmp::Reverse(freq[lit as usize]), lit));
+        }
+    }
+
+    /// Does clause `c` fire on `sample`? Walks only the include list
+    /// and early-exits on the first unsatisfied literal; an empty
+    /// (all-exclude) clause never fires at inference.
+    pub fn clause_fires(&self, c: usize, sample: &[bool]) -> bool {
+        let list = self.included(c);
+        if list.is_empty() {
+            return false;
+        }
+        for &lit in list {
+            // Interleaved literals: lit 2i is x_i, lit 2i+1 is ¬x_i.
+            let i = (lit as usize) >> 1;
+            let value = if lit & 1 == 0 { sample[i] } else { !sample[i] };
+            if !value {
+                return false; // early exit — the whole point.
+            }
+        }
+        true
+    }
+
+    /// Append the ids of every firing clause to `fired` (cleared
+    /// first) — the shared-scratch core both engines' batch paths
+    /// reuse across samples.
+    pub fn sweep(&self, sample: &[bool], fired: &mut Vec<u32>) {
+        debug_assert_eq!(sample.len(), self.features);
+        fired.clear();
+        for c in 0..self.num_clauses() {
+            if self.clause_fires(c, sample) {
+                fired.push(c as u32);
+            }
+        }
+    }
+}
+
+/// Compressed multi-class TM engine: one compressed store over the K·C
+/// flattened clauses (`id = class · C + j`, so each class's clauses are
+/// one contiguous id group), alternating +/− polarity per class
+/// (Eq. 1).
+#[derive(Debug, Clone)]
+pub struct CompressedMulticlass {
+    pub params: TmParams,
+    model: CompressedModel,
+}
+
+impl CompressedMulticlass {
+    /// Compile a validated model into the compressed store, with the
+    /// frequency reorder applied (hot literals first in each walk).
+    pub fn from_model(model: &MultiClassTmModel) -> Result<CompressedMulticlass> {
+        model.validate()?;
+        let mut compressed =
+            CompressedModel::build(model.params.features, model.clauses.iter().flatten());
+        compressed.reorder_by_frequency();
+        Ok(CompressedMulticlass { params: model.params.clone(), model: compressed })
+    }
+
+    /// Included-literal density (the `auto-*` selection input).
+    pub fn density(&self) -> f64 {
+        self.model.density()
+    }
+
+    /// Stored literal ids (the compressed footprint).
+    pub fn postings(&self) -> usize {
+        self.model.postings()
+    }
+
+    fn sums_from_fired(&self, fired: &[u32]) -> Vec<i32> {
+        let c = self.params.clauses;
+        let mut sums = vec![0i32; self.params.classes];
+        for &id in fired {
+            let (class, j) = (id as usize / c, id as usize % c);
+            sums[class] += if j % 2 == 0 { 1 } else { -1 };
+        }
+        sums
+    }
+}
+
+impl BatchEngine for CompressedMulticlass {
+    fn features(&self) -> usize {
+        self.params.features
+    }
+
+    fn classes(&self) -> usize {
+        self.params.classes
+    }
+
+    fn class_sums(&self, features: &[bool]) -> Vec<i32> {
+        assert_eq!(
+            features.len(),
+            self.params.features,
+            "feature width mismatch"
+        );
+        let mut fired = Vec::new();
+        self.model.sweep(features, &mut fired);
+        self.sums_from_fired(&fired)
+    }
+
+    fn infer_batch<R: AsRef<[bool]> + Sync>(&self, rows: &[R]) -> Vec<BatchResult> {
+        // One fired-id scratch buffer for the whole batch.
+        let mut fired = Vec::new();
+        rows.iter()
+            .map(|r| {
+                let row = r.as_ref();
+                assert_eq!(row.len(), self.params.features, "batch row width mismatch");
+                self.model.sweep(row, &mut fired);
+                let sums = self.sums_from_fired(&fired);
+                let pred = predict_argmax(&sums);
+                (sums, pred)
+            })
+            .collect()
+    }
+}
+
+/// Compressed CoTM engine: one compressed store over the shared clause
+/// pool plus the signed weight matrix, stored clause-major so a firing
+/// clause adds its whole weight column (Eq. 2).
+#[derive(Debug, Clone)]
+pub struct CompressedCotm {
+    pub params: TmParams,
+    model: CompressedModel,
+    /// `[clause][class]` weight columns (transposed from the model's
+    /// `[class][clause]` for contiguous access per firing clause).
+    weight_cols: Vec<Vec<i32>>,
+}
+
+impl CompressedCotm {
+    /// Compile a validated model into the compressed store, with the
+    /// frequency reorder applied.
+    pub fn from_model(model: &CoTmModel) -> Result<CompressedCotm> {
+        model.validate()?;
+        let mut compressed =
+            CompressedModel::build(model.params.features, model.clauses.iter());
+        compressed.reorder_by_frequency();
+        let weight_cols = (0..model.params.clauses)
+            .map(|j| model.weights.iter().map(|row| row[j]).collect())
+            .collect();
+        Ok(CompressedCotm { params: model.params.clone(), model: compressed, weight_cols })
+    }
+
+    /// Included-literal density (the `auto-*` selection input).
+    pub fn density(&self) -> f64 {
+        self.model.density()
+    }
+
+    /// Stored literal ids (the compressed footprint).
+    pub fn postings(&self) -> usize {
+        self.model.postings()
+    }
+
+    fn sums_from_fired(&self, fired: &[u32]) -> Vec<i32> {
+        let mut sums = vec![0i32; self.params.classes];
+        for &id in fired {
+            for (s, &w) in sums.iter_mut().zip(&self.weight_cols[id as usize]) {
+                *s += w;
+            }
+        }
+        sums
+    }
+}
+
+impl BatchEngine for CompressedCotm {
+    fn features(&self) -> usize {
+        self.params.features
+    }
+
+    fn classes(&self) -> usize {
+        self.params.classes
+    }
+
+    fn class_sums(&self, features: &[bool]) -> Vec<i32> {
+        assert_eq!(
+            features.len(),
+            self.params.features,
+            "feature width mismatch"
+        );
+        let mut fired = Vec::new();
+        self.model.sweep(features, &mut fired);
+        self.sums_from_fired(&fired)
+    }
+
+    fn infer_batch<R: AsRef<[bool]> + Sync>(&self, rows: &[R]) -> Vec<BatchResult> {
+        let mut fired = Vec::new();
+        rows.iter()
+            .map(|r| {
+                let row = r.as_ref();
+                assert_eq!(row.len(), self.params.features, "batch row width mismatch");
+                self.model.sweep(row, &mut fired);
+                let sums = self.sums_from_fired(&fired);
+                let pred = predict_argmax(&sums);
+                (sums, pred)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::index::PACKED_VS_INDEXED_DENSITY;
+    use crate::tm::infer::{cotm_class_sums, multiclass_class_sums};
+
+    fn tiny_params() -> TmParams {
+        TmParams {
+            features: 2,
+            clauses: 2,
+            classes: 2,
+            ..TmParams::iris_paper()
+        }
+    }
+
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn engines_are_send_and_sync() {
+        // Same serving contract as the packed and indexed engines: one
+        // shared instance across every coordinator thread.
+        assert_send_sync::<CompressedMulticlass>();
+        assert_send_sync::<CompressedCotm>();
+    }
+
+    /// Same hand-worked example as infer.rs / fast_infer.rs / index.rs /
+    /// python/tests/test_model.py — every tier agrees on it.
+    #[test]
+    fn hand_worked_multiclass_matches_reference() {
+        let mut m = MultiClassTmModel::zeroed(tiny_params());
+        m.clauses[0][0].include[0] = true; // class0 clause0 (+): x0
+        m.clauses[0][1].include[3] = true; // class0 clause1 (−): ¬x1
+        m.clauses[1][0].include[1] = true; // class1 clause0 (+): ¬x0
+        m.clauses[1][1].include[2] = true; // class1 clause1 (−): x1
+        let e = CompressedMulticlass::from_model(&m).unwrap();
+        for x in [[true, false], [true, true], [false, false], [false, true]] {
+            assert_eq!(e.class_sums(&x), multiclass_class_sums(&m, &x), "{x:?}");
+        }
+        assert_eq!(e.class_sums(&[true, true]), vec![1, -1]);
+        assert_eq!(e.predict(&[true, true]), 0);
+    }
+
+    #[test]
+    fn hand_worked_cotm_matches_reference() {
+        let mut m = CoTmModel::zeroed(tiny_params());
+        m.clauses[0].include[0] = true; // clause0: x0
+        m.clauses[1].include[2] = true; // clause1: x1
+        m.weights = vec![vec![3, -2], vec![-1, 4]];
+        let e = CompressedCotm::from_model(&m).unwrap();
+        for x in [[true, true], [true, false], [false, false]] {
+            assert_eq!(e.class_sums(&x), cotm_class_sums(&m, &x), "{x:?}");
+        }
+        assert_eq!(e.class_sums(&[true, true]), vec![1, 3]);
+    }
+
+    // ------------------------------------------------------------------
+    // Cross-language golden vectors, shared with python/compressed.py
+    // (python/tests/test_compressed.py asserts the identical sums and
+    // the identical frequency-reordered walk lists): the models and
+    // samples are the same closed-form formulas the invindex mirror
+    // pins, so all four engine families golden-vector to one table.
+    // ------------------------------------------------------------------
+
+    /// F=9, C=4/class, K=3; include(k, j, l) = (3l + 5j + 7k) % 11 == 0.
+    fn golden_multiclass() -> MultiClassTmModel {
+        let p = TmParams { features: 9, clauses: 4, classes: 3, ..TmParams::iris_paper() };
+        let mut m = MultiClassTmModel::zeroed(p);
+        for (k, class) in m.clauses.iter_mut().enumerate() {
+            for (j, clause) in class.iter_mut().enumerate() {
+                for l in 0..18 {
+                    clause.include[l] = (3 * l + 5 * j + 7 * k) % 11 == 0;
+                }
+            }
+        }
+        m
+    }
+
+    /// F=9, C=6, K=3; include(j, l) = (5l + 3j) % 7 == 0,
+    /// weight(k, j) = (j + 2k) % 7 − 3.
+    fn golden_cotm() -> CoTmModel {
+        let p = TmParams { features: 9, clauses: 6, classes: 3, ..TmParams::iris_paper() };
+        let mut m = CoTmModel::zeroed(p);
+        for (j, clause) in m.clauses.iter_mut().enumerate() {
+            for l in 0..18 {
+                clause.include[l] = (5 * l + 3 * j) % 7 == 0;
+            }
+        }
+        for (k, row) in m.weights.iter_mut().enumerate() {
+            for (j, w) in row.iter_mut().enumerate() {
+                *w = ((j + 2 * k) % 7) as i32 - 3;
+            }
+        }
+        m
+    }
+
+    /// Sample s: feature i = (i² + 3is + 2s) % 7 < 3.
+    fn golden_sample(s: usize) -> Vec<bool> {
+        (0..9).map(|i| (i * i + 3 * i * s + 2 * s) % 7 < 3).collect()
+    }
+
+    #[test]
+    fn golden_vectors_match_python_mirror() {
+        let mc = CompressedMulticlass::from_model(&golden_multiclass()).unwrap();
+        let co = CompressedCotm::from_model(&golden_cotm()).unwrap();
+        let want_mc = [
+            [1, 0, -1],
+            [0, -1, 2],
+            [0, -1, 0],
+            [0, 0, 0],
+            [-1, -1, 1],
+            [0, 0, 0],
+        ];
+        let want_co = [
+            [-2, 0, 2],
+            [-6, 0, 6],
+            [0, 2, -3],
+            [3, 2, -6],
+            [-3, -1, 1],
+            [3, 2, -6],
+        ];
+        for s in 0..6 {
+            let x = golden_sample(s);
+            assert_eq!(mc.class_sums(&x), want_mc[s], "multiclass sample {s}");
+            assert_eq!(co.class_sums(&x), want_co[s], "cotm sample {s}");
+            // The golden vectors themselves match the scalar reference,
+            // so every tier pins the same semantics.
+            assert_eq!(
+                multiclass_class_sums(&golden_multiclass(), &x),
+                want_mc[s],
+                "reference multiclass sample {s}"
+            );
+            assert_eq!(
+                cotm_class_sums(&golden_cotm(), &x),
+                want_co[s],
+                "reference cotm sample {s}"
+            );
+        }
+    }
+
+    /// F=3; include lists (ascending): [0,4], [2,4], [4], [0,2,4,5] —
+    /// literal frequencies 0:2, 2:2, 4:4, 5:1, so the reorder is a real
+    /// permutation (shared with python/tests/test_compressed.py).
+    fn reorder_masks() -> Vec<ClauseMask> {
+        let lists: [&[usize]; 4] = [&[0, 4], &[2, 4], &[4], &[0, 2, 4, 5]];
+        lists
+            .iter()
+            .map(|lits| {
+                let mut mask = ClauseMask::empty(6);
+                for &l in *lits {
+                    mask.include[l] = true;
+                }
+                mask
+            })
+            .collect()
+    }
+
+    #[test]
+    fn golden_frequency_reorder_matches_python_mirror() {
+        // The deterministic reorder key (descending global frequency,
+        // ties by ascending literal id) must agree across languages —
+        // python/tests/test_compressed.py asserts these exact lists.
+        let masks = reorder_masks();
+        let mut c = CompressedModel::build(3, masks.iter());
+        // Pre-reorder: ascending literal ids by construction.
+        assert_eq!(c.included(3), &[0, 2, 4, 5]);
+        assert_eq!(c.literal_frequencies(), vec![2, 0, 2, 0, 4, 1]);
+        c.reorder_by_frequency();
+        assert_eq!(c.included(0), &[4, 0]);
+        assert_eq!(c.included(1), &[4, 2]);
+        assert_eq!(c.included(2), &[4]);
+        assert_eq!(c.included(3), &[4, 0, 2, 5]);
+        // Reordering permutes each list in place: same set per clause.
+        let mut back: Vec<u32> = c.included(3).to_vec();
+        back.sort_unstable();
+        assert_eq!(back, vec![0, 2, 4, 5]);
+        // And both golden models reorder to themselves (uniform
+        // in-clause frequencies), which the sums goldens rely on.
+        let m = golden_cotm();
+        let mut g = CompressedModel::build(9, m.clauses.iter());
+        let before: Vec<Vec<u32>> =
+            (0..g.num_clauses()).map(|cl| g.included(cl).to_vec()).collect();
+        g.reorder_by_frequency();
+        let after: Vec<Vec<u32>> =
+            (0..g.num_clauses()).map(|cl| g.included(cl).to_vec()).collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn walk_order_is_output_invariant() {
+        // Sorted vs frequency-reordered walks are the same AND over the
+        // same set — firing must be identical on every input. Uses the
+        // reorder_masks model, where the reorder is a real permutation.
+        let masks = reorder_masks();
+        let sorted = CompressedModel::build(3, masks.iter());
+        let mut hot = sorted.clone();
+        hot.reorder_by_frequency();
+        for bits in 0..8u32 {
+            let x: Vec<bool> = (0..3).map(|i| (bits >> i) & 1 == 1).collect();
+            for c in 0..sorted.num_clauses() {
+                assert_eq!(
+                    sorted.clause_fires(c, &x),
+                    hot.clause_fires(c, &x),
+                    "clause {c} input {bits:03b}"
+                );
+                // Both agree with the dense-mask reference.
+                let lits = crate::tm::model::make_literals(&x);
+                assert_eq!(sorted.clause_fires(c, &x), masks[c].evaluate(&lits));
+            }
+        }
+    }
+
+    #[test]
+    fn from_model_rejects_invalid_models() {
+        let odd = TmParams { clauses: 7, ..tiny_params() };
+        assert!(CompressedMulticlass::from_model(&MultiClassTmModel::zeroed(odd)).is_err());
+        let mut cm = CoTmModel::zeroed(tiny_params());
+        cm.weights[0][0] = cm.params.max_weight + 1;
+        assert!(CompressedCotm::from_model(&cm).is_err());
+    }
+
+    #[test]
+    fn empty_clauses_never_fire() {
+        // Zeroed model: all-exclude clauses compress to empty lists and
+        // never fire — the inference convention.
+        let e = CompressedCotm::from_model(&CoTmModel::zeroed(tiny_params())).unwrap();
+        assert_eq!(e.class_sums(&[true, false]), vec![0, 0]);
+        let out = e.infer_batch(&[vec![true, false], vec![false, true]]);
+        assert_eq!(out, vec![(vec![0, 0], 0), (vec![0, 0], 0)]);
+    }
+
+    #[test]
+    fn contradictory_clause_never_fires() {
+        // A clause including both x0 and ¬x0 always early-exits on one
+        // of the pair (exactly one is set per sample).
+        let mut m = CoTmModel::zeroed(tiny_params());
+        m.clauses[0].include[0] = true; // x0
+        m.clauses[0].include[1] = true; // ¬x0
+        m.weights = vec![vec![5, 0], vec![5, 0]];
+        let e = CompressedCotm::from_model(&m).unwrap();
+        for x in [[true, true], [false, false], [true, false]] {
+            assert_eq!(e.class_sums(&x), vec![0, 0], "{x:?}");
+            assert_eq!(e.class_sums(&x), cotm_class_sums(&m, &x));
+        }
+    }
+
+    #[test]
+    fn all_include_clause_fires_only_on_its_witness() {
+        // A clause including exactly one literal per pair fires exactly
+        // on the one sample that satisfies every pick — the longest
+        // possible non-contradictory walk (no early exit on the
+        // witness, first-literal exit elsewhere).
+        let p = TmParams { features: 4, clauses: 2, classes: 2, ..TmParams::iris_paper() };
+        let mut m = CoTmModel::zeroed(p);
+        for i in 0..4 {
+            // Include x_i for even i, ¬x_i for odd i.
+            m.clauses[0].include[2 * i + (i % 2)] = true;
+        }
+        m.weights = vec![vec![2, 0], vec![-1, 0]];
+        let e = CompressedCotm::from_model(&m).unwrap();
+        let witness = [true, false, true, false];
+        assert_eq!(e.class_sums(&witness), cotm_class_sums(&m, &witness));
+        assert_eq!(e.class_sums(&witness), vec![2, -1]);
+        for flip in 0..4 {
+            let mut x = witness;
+            x[flip] = !x[flip];
+            assert_eq!(e.class_sums(&x), vec![0, 0], "flip {flip}");
+        }
+    }
+
+    #[test]
+    fn batched_agrees_with_single_sample_across_block_boundary() {
+        // 130 samples: the default sharded path splits on 64-sample
+        // blocks; compressed evaluation must be invariant to the split.
+        let m = golden_multiclass();
+        let e = CompressedMulticlass::from_model(&m).unwrap();
+        let rows: Vec<Vec<bool>> = (0..130usize)
+            .map(|s| (0..9).map(|i| (s >> (i % 7)) & 1 == 1).collect())
+            .collect();
+        let batched = e.infer_batch(&rows);
+        assert_eq!(batched.len(), 130);
+        for (s, (sums, pred)) in batched.iter().enumerate() {
+            assert_eq!(sums, &e.class_sums(&rows[s]), "sample {s}");
+            assert_eq!(*pred, predict_argmax(sums), "sample {s}");
+        }
+        assert_eq!(e.infer_batch_sharded(&rows, 4), batched);
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let e = CompressedMulticlass::from_model(&golden_multiclass()).unwrap();
+        assert!(e.infer_batch(&Vec::<Vec<bool>>::new()).is_empty());
+    }
+
+    #[test]
+    fn density_and_postings_account_included_literals() {
+        let m = golden_cotm();
+        let e = CompressedCotm::from_model(&m).unwrap();
+        let included: usize = m.clauses.iter().map(|c| c.included_count()).sum();
+        assert_eq!(e.postings(), included);
+        let want = included as f64 / (6.0 * 18.0);
+        assert!((e.density() - want).abs() < 1e-12);
+        // Degenerate inputs.
+        assert_eq!(
+            CompressedModel::build(0, std::iter::empty::<&ClauseMask>()).density(),
+            0.0
+        );
+        let zeroed = CompressedCotm::from_model(&CoTmModel::zeroed(tiny_params())).unwrap();
+        assert_eq!(zeroed.density(), 0.0);
+        assert_eq!(zeroed.postings(), 0);
+    }
+
+    #[test]
+    fn select_engine_is_a_pure_three_way_threshold() {
+        let (it, ct) = (PACKED_VS_INDEXED_DENSITY, PACKED_VS_COMPRESSED_DENSITY);
+        assert_eq!(select_engine(0.01, it, ct), EngineChoice::Indexed);
+        assert_eq!(select_engine(it, it, ct), EngineChoice::Indexed);
+        assert_eq!(select_engine(0.1, it, ct), EngineChoice::Compressed);
+        assert_eq!(select_engine(ct, it, ct), EngineChoice::Compressed);
+        assert_eq!(select_engine(0.5, it, ct), EngineChoice::Packed);
+        // Edge pairs: 0.0/0.0 admits only all-empty models to indexed;
+        // 1.0 on either knob swallows everything up to that tier.
+        assert_eq!(select_engine(0.0, 0.0, 0.0), EngineChoice::Indexed);
+        assert_eq!(select_engine(0.1, 0.0, 0.0), EngineChoice::Packed);
+        assert_eq!(select_engine(0.1, 0.0, 1.0), EngineChoice::Compressed);
+        assert_eq!(select_engine(1.0, 1.0, 0.0), EngineChoice::Indexed);
+        assert_eq!(select_engine(0.9, 0.0, 0.9), EngineChoice::Compressed);
+        // Inverted pairs stay total: indexed wins its range first.
+        assert_eq!(select_engine(0.3, 0.5, 0.1), EngineChoice::Indexed);
+        assert_eq!(select_engine(0.7, 0.5, 0.1), EngineChoice::Packed);
+        assert_eq!(EngineChoice::Indexed.name(), "indexed");
+        assert_eq!(EngineChoice::Compressed.name(), "compressed");
+        assert_eq!(EngineChoice::Packed.name(), "packed");
+    }
+}

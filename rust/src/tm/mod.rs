@@ -2,7 +2,8 @@
 //! bit-parallel production inference ([`bitpack`] + [`fast_infer`],
 //! evaluated in multi-word [`simd`] lanes behind runtime dispatch),
 //! event-driven inverted-index inference for sparse models ([`index`]),
-//! training (multi-class TM and Coalesced TM, both with a shared
+//! compressed include-list inference for the ETHEREAL clause regime
+//! ([`compressed`]), training (multi-class TM and Coalesced TM, both with a shared
 //! feedback core and packed-evaluation or reference clause engines via
 //! [`trainer_engine`]), feature booleanisation, datasets, and model
 //! (de)serialisation.
@@ -14,6 +15,7 @@
 
 pub mod bitpack;
 pub mod booleanize;
+pub mod compressed;
 pub mod cotm_train;
 pub mod data;
 pub mod fast_infer;
@@ -28,6 +30,7 @@ pub mod trainer_engine;
 
 pub use bitpack::{BitSlicedBatch, PackedClause};
 pub use booleanize::Booleanizer;
+pub use compressed::{CompressedCotm, CompressedModel, CompressedMulticlass, EngineChoice};
 pub use data::Dataset;
 pub use fast_infer::{BatchEngine, BitParallelCotm, BitParallelMulticlass};
 pub use index::{IndexedCotm, IndexedMulticlass, InvertedIndex};

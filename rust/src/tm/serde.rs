@@ -280,14 +280,14 @@ mod tests {
     fn trained_roundtrip_serves_bit_exact_across_engines() {
         // Train → serialize → deserialize → the parsed model must be
         // equal AND serve bit-exact class sums through every native
-        // engine tier (scalar golden, bit-parallel, inverted-index) —
-        // the end-to-end artifact path `tmtd train` + `tmtd infer`
-        // exercise. (The other round-trip tests stop at model
-        // equality; this one proves the parse feeds the engines.)
+        // engine tier (scalar golden, bit-parallel, inverted-index,
+        // compressed) — the end-to-end artifact path `tmtd train` +
+        // `tmtd infer` exercise. (The other round-trip tests stop at
+        // model equality; this one proves the parse feeds the engines.)
         use crate::tm::infer::{cotm_class_sums, multiclass_class_sums};
         use crate::tm::{
-            BatchEngine, BitParallelCotm, BitParallelMulticlass, IndexedCotm,
-            IndexedMulticlass,
+            BatchEngine, BitParallelCotm, BitParallelMulticlass, CompressedCotm,
+            CompressedMulticlass, IndexedCotm, IndexedMulticlass,
         };
         let d = data::prototype_blobs(80, 9, 3, 0.1, 4);
         let p = TmParams {
@@ -304,20 +304,24 @@ mod tests {
         assert_eq!(m, back);
         let bp = BitParallelMulticlass::from_model(&back).unwrap();
         let ix = IndexedMulticlass::from_model(&back).unwrap();
+        let cp = CompressedMulticlass::from_model(&back).unwrap();
         let cm = train_cotm(p, &d, 4, 11).unwrap();
         let cback = cotm_from_str(&cotm_to_string(&cm)).unwrap();
         assert_eq!(cm, cback);
         let cbp = BitParallelCotm::from_model(&cback).unwrap();
         let cix = IndexedCotm::from_model(&cback).unwrap();
+        let ccp = CompressedCotm::from_model(&cback).unwrap();
         for x in d.features.iter().take(24) {
             let want = multiclass_class_sums(&m, x);
             assert_eq!(multiclass_class_sums(&back, x), want);
             assert_eq!(BatchEngine::class_sums(&bp, x), want);
             assert_eq!(BatchEngine::class_sums(&ix, x), want);
+            assert_eq!(BatchEngine::class_sums(&cp, x), want);
             let cwant = cotm_class_sums(&cm, x);
             assert_eq!(cotm_class_sums(&cback, x), cwant);
             assert_eq!(BatchEngine::class_sums(&cbp, x), cwant);
             assert_eq!(BatchEngine::class_sums(&cix, x), cwant);
+            assert_eq!(BatchEngine::class_sums(&ccp, x), cwant);
         }
     }
 

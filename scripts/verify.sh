@@ -4,18 +4,20 @@
 #   scripts/verify.sh
 #
 # Runs: the Python tier FIRST (JAX kernels, the consistent-hash-ring
-# mirror, the inverted-index counter-sweep mirror, the packed-trainer
-# mirror with its same-seed bit-identity invariant, and the tiled
-# bit-sliced batch-layout mirror — so toolchain-less images still
-# validate the shard-routing, indexed-inference, packed-training and
-# SIMD-tile algorithms), then cargo build --release && cargo test -q,
-# the shard / coordinator / indexed / trainer / SIMD conformance suites
-# by name (so a routing, engine, trainer or lane-dispatch regression is
-# visible at a glance), one portable-only build with the vector paths
-# compiled out (--no-default-features: the portable reference must keep
-# compiling and passing on its own), and cargo bench --no-run (benches
-# are plain `harness = false` mains — `--no-run` proves they compile
-# without paying their full runtime).
+# mirror, the inverted-index counter-sweep mirror, the compressed
+# include-list-walk mirror with its shared golden vectors, the
+# packed-trainer mirror with its same-seed bit-identity invariant, and
+# the tiled bit-sliced batch-layout mirror — so toolchain-less images
+# still validate the shard-routing, indexed-inference,
+# compressed-inference, packed-training and SIMD-tile algorithms), then
+# cargo build --release && cargo test -q, the shard / coordinator /
+# indexed / compressed / engine-matrix / trainer / SIMD conformance
+# suites by name (so a routing, engine, trainer or lane-dispatch
+# regression is visible at a glance), one portable-only build with the
+# vector paths compiled out (--no-default-features: the portable
+# reference must keep compiling and passing on its own), and cargo
+# bench --no-run (benches are plain `harness = false` mains — `--no-run`
+# proves they compile without paying their full runtime).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -39,14 +41,19 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
-echo "== shard / coordinator / indexed suites (named re-run for visibility) =="
+echo "== shard / coordinator / indexed / compressed suites (named re-run for visibility) =="
 cargo test -q --lib coordinator::
 cargo test -q --lib tm::index
+cargo test -q --lib tm::compressed
 cargo test -q --test coordinator_props shard
 cargo test -q --test equivalence sharded
 cargo test -q --test equivalence indexed
+cargo test -q --test equivalence compressed
 cargo test -q --test bitparallel_equivalence indexed
 cargo test -q --test bitparallel_equivalence auto
+
+echo "== cross-engine differential conformance matrix =="
+cargo test -q --test engine_matrix
 
 echo "== trainer suites (packed-evaluation bit-identity) =="
 cargo test -q --lib tm::trainer_engine

@@ -1,0 +1,300 @@
+//! The cross-engine differential conformance matrix.
+//!
+//! Four engine families now serve the same TM semantics: the scalar
+//! reference (`tm::infer`), the bit-parallel packed engines (at every
+//! available SIMD lane width), the event-driven inverted-index engines,
+//! and the compressed include-list engines (ETHEREAL tier). Instead of
+//! per-PR pairwise suites, this harness instantiates **every** engine
+//! family × available SIMD level on the same random models and demands
+//! bit-identical class sums and argmax across the whole matrix, with
+//! the scalar reference as ground truth.
+//!
+//! The sweep is deliberately adversarial: word-boundary feature widths
+//! (31/32/33/63/64/65), an all-exclude clause and an all-include
+//! (contradictory — one literal pair is always unsatisfied) clause
+//! pinned into every model, and batch sizes crossing both the
+//! 64-sample block and the 8-block (512-sample) tile of the packed
+//! layout.
+//!
+//! The three-way `auto-*` property rides here too: any
+//! (indexed_density_threshold, compressed_density_threshold) pair —
+//! including the 0.0/1.0 edges and inverted pairs — may change which
+//! engine serves, never what it answers.
+
+use tsetlin_td::config::ServeConfig;
+use tsetlin_td::coordinator::{Backend, CoordinatorServer, InferRequest};
+use tsetlin_td::testutil::{prop, Gen};
+use tsetlin_td::tm::fast_infer::BatchResult;
+use tsetlin_td::tm::infer::{cotm_class_sums, multiclass_class_sums, predict_argmax};
+use tsetlin_td::tm::simd::{SimdLevel, WordLanes};
+use tsetlin_td::tm::{
+    BatchEngine, BitParallelCotm, BitParallelMulticlass, ClauseMask, CoTmModel,
+    CompressedCotm, CompressedMulticlass, IndexedCotm, IndexedMulticlass,
+    MultiClassTmModel, TmParams,
+};
+
+/// Word-boundary feature widths: one below, at, and above the half-word
+/// and full-word edges of the 64-bit packed literal layout (2F bits).
+const BOUNDARY_WIDTHS: [usize; 6] = [31, 32, 33, 63, 64, 65];
+
+/// Batch sizes crossing the 64-sample block (63/64/65) and the 8-block
+/// 512-sample tile (513/520) of the bit-sliced batch layout.
+const BATCH_SIZES: [usize; 7] = [1, 63, 64, 65, 130, 513, 520];
+
+/// A clause mask for slot `j`: slot 0 is pinned all-exclude (never
+/// fires), slot 1 all-include (contradictory: includes both of every
+/// literal pair, so it never fires either — but only after walking),
+/// the rest random at the drawn density.
+fn draw_mask(g: &mut Gen, j: usize, f: usize, density: f64) -> ClauseMask {
+    let include = match j {
+        0 => vec![false; 2 * f],
+        1 => vec![true; 2 * f],
+        _ => (0..2 * f).map(|_| g.chance(density)).collect(),
+    };
+    ClauseMask { include }
+}
+
+fn random_multiclass(g: &mut Gen, f: usize, c: usize, k: usize) -> MultiClassTmModel {
+    let p = TmParams { features: f, clauses: c, classes: k, ..TmParams::iris_paper() };
+    let mut m = MultiClassTmModel::zeroed(p);
+    let density = 0.05 + 0.4 * g.f64_unit();
+    for class in &mut m.clauses {
+        for (j, clause) in class.iter_mut().enumerate() {
+            *clause = draw_mask(g, j, f, density);
+        }
+    }
+    m
+}
+
+fn random_cotm(g: &mut Gen, f: usize, c: usize, k: usize) -> CoTmModel {
+    let p = TmParams { features: f, clauses: c, classes: k, ..TmParams::iris_paper() };
+    let mut m = CoTmModel::zeroed(p.clone());
+    let density = 0.05 + 0.4 * g.f64_unit();
+    for (j, clause) in m.clauses.iter_mut().enumerate() {
+        *clause = draw_mask(g, j, f, density);
+    }
+    for row in &mut m.weights {
+        for w in row.iter_mut() {
+            *w = g.i64(-(p.max_weight as i64)..p.max_weight as i64 + 1) as i32;
+        }
+    }
+    m
+}
+
+/// Every multiclass engine instance in the matrix, as named batch
+/// evaluators: bit-parallel at each available SIMD level, indexed, and
+/// compressed. (`BatchEngine` is not object-safe — generic
+/// `infer_batch` — so the matrix is a list of closures, each owning
+/// its engine.)
+type MatrixEngine = (String, Box<dyn Fn(&[Vec<bool>]) -> Vec<BatchResult>>);
+
+fn multiclass_matrix(m: &MultiClassTmModel) -> Vec<MatrixEngine> {
+    let mut v: Vec<MatrixEngine> = Vec::new();
+    for level in SimdLevel::available() {
+        let e = BitParallelMulticlass::from_model(m)
+            .unwrap()
+            .with_lanes(WordLanes::new(level).unwrap());
+        v.push((
+            format!("bitpar/{}", level.name()),
+            Box::new(move |rows: &[Vec<bool>]| e.infer_batch(rows)),
+        ));
+    }
+    let ix = IndexedMulticlass::from_model(m).unwrap();
+    v.push(("indexed".into(), Box::new(move |rows: &[Vec<bool>]| ix.infer_batch(rows))));
+    let cp = CompressedMulticlass::from_model(m).unwrap();
+    v.push(("compressed".into(), Box::new(move |rows: &[Vec<bool>]| cp.infer_batch(rows))));
+    v
+}
+
+fn cotm_matrix(m: &CoTmModel) -> Vec<MatrixEngine> {
+    let mut v: Vec<MatrixEngine> = Vec::new();
+    for level in SimdLevel::available() {
+        let e = BitParallelCotm::from_model(m)
+            .unwrap()
+            .with_lanes(WordLanes::new(level).unwrap());
+        v.push((
+            format!("bitpar/{}", level.name()),
+            Box::new(move |rows: &[Vec<bool>]| e.infer_batch(rows)),
+        ));
+    }
+    let ix = IndexedCotm::from_model(m).unwrap();
+    v.push(("indexed".into(), Box::new(move |rows: &[Vec<bool>]| ix.infer_batch(rows))));
+    let cp = CompressedCotm::from_model(m).unwrap();
+    v.push(("compressed".into(), Box::new(move |rows: &[Vec<bool>]| cp.infer_batch(rows))));
+    v
+}
+
+#[test]
+fn matrix_covers_every_engine_family_and_level() {
+    // The matrix must actually contain what the harness claims:
+    // one bit-parallel instance per available SIMD level (scalar and
+    // portable at minimum), plus the indexed and compressed families.
+    let m = random_multiclass(&mut Gen::new(7), 32, 4, 3);
+    let names: Vec<String> =
+        multiclass_matrix(&m).into_iter().map(|(name, _)| name).collect();
+    assert!(names.len() >= 4, "{names:?}");
+    assert!(names.contains(&"bitpar/scalar".to_string()), "{names:?}");
+    assert!(names.contains(&"bitpar/portable".to_string()), "{names:?}");
+    assert!(names.contains(&"indexed".to_string()), "{names:?}");
+    assert!(names.contains(&"compressed".to_string()), "{names:?}");
+    assert_eq!(names.len(), SimdLevel::available().len() + 2);
+}
+
+#[test]
+fn multiclass_matrix_is_bit_identical_on_boundary_widths() {
+    prop("engine matrix multiclass", 18, |g| {
+        let f = *g.pick(&BOUNDARY_WIDTHS);
+        let c = 2 * g.usize(1..4); // >= 2 clauses: slots 0 and 1 exist
+        let k = g.usize(2..5);
+        let m = random_multiclass(g, f, c, k);
+        let n = *g.pick(&BATCH_SIZES);
+        let rows: Vec<Vec<bool>> = (0..n).map(|_| g.bools(f)).collect();
+        // Ground truth: the scalar reference, row by row.
+        let want: Vec<BatchResult> = rows
+            .iter()
+            .map(|x| {
+                let sums = multiclass_class_sums(&m, x);
+                let pred = predict_argmax(&sums);
+                (sums, pred)
+            })
+            .collect();
+        for (name, eval) in multiclass_matrix(&m) {
+            assert_eq!(eval(&rows), want, "f={f} c={c} k={k} n={n} engine {name}");
+        }
+    });
+}
+
+#[test]
+fn cotm_matrix_is_bit_identical_on_boundary_widths() {
+    prop("engine matrix cotm", 18, |g| {
+        let f = *g.pick(&BOUNDARY_WIDTHS);
+        let c = g.usize(2..9);
+        let k = g.usize(2..5);
+        let m = random_cotm(g, f, c, k);
+        let n = *g.pick(&BATCH_SIZES);
+        let rows: Vec<Vec<bool>> = (0..n).map(|_| g.bools(f)).collect();
+        let want: Vec<BatchResult> = rows
+            .iter()
+            .map(|x| {
+                let sums = cotm_class_sums(&m, x);
+                let pred = predict_argmax(&sums);
+                (sums, pred)
+            })
+            .collect();
+        for (name, eval) in cotm_matrix(&m) {
+            assert_eq!(eval(&rows), want, "f={f} c={c} k={k} n={n} engine {name}");
+        }
+    });
+}
+
+#[test]
+fn matrix_agrees_on_single_sample_and_sharded_paths() {
+    // The trait's three entry points — class_sums, infer_batch,
+    // infer_batch_sharded — must agree within and across families on a
+    // tile-crossing batch. (The batched path is already matrixed above;
+    // this pins the other two on concrete engines.)
+    prop("engine matrix entry points", 6, |g| {
+        let f = *g.pick(&BOUNDARY_WIDTHS);
+        let m = random_multiclass(g, f, 4, 3);
+        let rows: Vec<Vec<bool>> = (0..520).map(|_| g.bools(f)).collect();
+        let bp = BitParallelMulticlass::from_model(&m).unwrap();
+        let ix = IndexedMulticlass::from_model(&m).unwrap();
+        let cp = CompressedMulticlass::from_model(&m).unwrap();
+        let want = bp.infer_batch(&rows);
+        assert_eq!(bp.infer_batch_sharded(&rows, 4), want, "f={f} bitpar sharded");
+        assert_eq!(ix.infer_batch_sharded(&rows, 4), want, "f={f} indexed sharded");
+        assert_eq!(cp.infer_batch_sharded(&rows, 4), want, "f={f} compressed sharded");
+        for (s, x) in rows.iter().enumerate().take(8) {
+            assert_eq!(bp.class_sums(x), want[s].0, "f={f} sample {s} bitpar");
+            assert_eq!(ix.class_sums(x), want[s].0, "f={f} sample {s} indexed");
+            assert_eq!(cp.class_sums(x), want[s].0, "f={f} sample {s} compressed");
+            assert_eq!(cp.predict(x), want[s].1, "f={f} sample {s}");
+        }
+    });
+}
+
+#[test]
+fn edge_clauses_are_matrix_invariant() {
+    // All-exclude and all-include models in isolation: every engine
+    // family must answer all-zero sums (empty clauses never fire;
+    // all-include clauses are contradictory) at every boundary width.
+    for &f in &BOUNDARY_WIDTHS {
+        let p = TmParams { features: f, clauses: 2, classes: 2, ..TmParams::iris_paper() };
+        let mut m = MultiClassTmModel::zeroed(p);
+        for class in &mut m.clauses {
+            class[1] = ClauseMask { include: vec![true; 2 * f] };
+        }
+        let rows: Vec<Vec<bool>> = (0..65usize)
+            .map(|s| (0..f).map(|i| (s + i) % 3 == 0).collect())
+            .collect();
+        let want: Vec<BatchResult> = rows.iter().map(|_| (vec![0, 0], 0)).collect();
+        for (name, eval) in multiclass_matrix(&m) {
+            assert_eq!(eval(&rows), want, "f={f} engine {name}");
+        }
+        // And the reference itself agrees that nothing fires.
+        assert_eq!(multiclass_class_sums(&m, &rows[0]), vec![0, 0], "f={f}");
+    }
+}
+
+#[test]
+fn auto_threshold_pairs_never_change_served_outputs() {
+    // The three-way auto selection property: every
+    // (indexed_density_threshold, compressed_density_threshold) pair —
+    // edges, inverted pairs, random interior points — picks some
+    // native engine, and the served sums are identical across all of
+    // them and equal to the scalar reference.
+    prop("auto three-way invariance", 3, |g| {
+        let f = g.usize(6..20);
+        let m = random_multiclass(g, f, 4, 3);
+        let cm = random_cotm(g, f, 4, 3);
+        let samples: Vec<Vec<bool>> = (0..4).map(|_| g.bools(f)).collect();
+        let pairs = [
+            (0.0, 0.0),
+            (0.0, 1.0),
+            (1.0, 0.0),
+            (1.0, 1.0),
+            (g.f64_unit(), g.f64_unit()),
+        ];
+        let mut by_pair: Vec<Vec<Vec<i32>>> = Vec::new();
+        for &(it, ct) in &pairs {
+            let cfg = ServeConfig {
+                workers: 1,
+                indexed_density_threshold: it,
+                compressed_density_threshold: ct,
+                ..ServeConfig::default()
+            };
+            let srv = CoordinatorServer::new(&cfg, m.clone(), cm.clone(), false).unwrap();
+            let (auto_mc, auto_co) = srv.auto_backends();
+            // The alias always resolves to a concrete native engine.
+            assert!(auto_mc.is_native_batched(), "({it}, {ct}) -> {auto_mc:?}");
+            assert!(auto_co.is_native_batched(), "({it}, {ct}) -> {auto_co:?}");
+            let mut sums = Vec::new();
+            for x in &samples {
+                let r = srv
+                    .infer(InferRequest {
+                        features: x.clone(),
+                        backend: Backend::AutoMulticlass,
+                    })
+                    .unwrap();
+                assert_eq!(r.backend, auto_mc, "({it}, {ct})");
+                assert_eq!(
+                    r.class_sums,
+                    multiclass_class_sums(&m, x),
+                    "({it}, {ct}) multiclass"
+                );
+                sums.push(r.class_sums);
+                let r = srv
+                    .infer(InferRequest { features: x.clone(), backend: Backend::AutoCotm })
+                    .unwrap();
+                assert_eq!(r.backend, auto_co, "({it}, {ct})");
+                assert_eq!(r.class_sums, cotm_class_sums(&cm, x), "({it}, {ct}) cotm");
+                sums.push(r.class_sums);
+            }
+            by_pair.push(sums);
+            srv.shutdown();
+        }
+        for w in by_pair.windows(2) {
+            assert_eq!(w[0], w[1], "threshold pairs must be interchangeable");
+        }
+    });
+}

@@ -370,6 +370,93 @@ fn indexed_and_auto_front_door_serve_sharded_bit_exact() {
 }
 
 #[test]
+fn compressed_and_auto_front_door_serve_sharded_bit_exact() {
+    // The ETHEREAL compressed tier through the full serving stack:
+    // sharded front door -> per-shard dynamic batcher -> shared
+    // compressed engine, mixed with three-way auto-selected requests.
+    // Sums must be bit-exact against the scalar reference whichever
+    // engine serves, counters must conserve per shard, and auto
+    // replies must name the concrete engine that served them.
+    use tsetlin_td::config::ServeConfig;
+    use tsetlin_td::coordinator::{Backend, InferRequest, ShardedCoordinator};
+
+    prop("compressed front door", 4, |g| {
+        let f = g.usize(2..12);
+        let c = 2 * g.usize(1..4);
+        let k = g.usize(2..4);
+        let m = random_multiclass(g, f, c, k);
+        let cm = random_cotm(g, f, c, k);
+        // Random threshold pair drives auto to all three resolutions
+        // across cases; outputs must be invariant to it.
+        let indexed_t = if g.bool() { 1.0 } else { 0.0 };
+        let compressed_t = if g.bool() { 1.0 } else { 0.0 };
+        let cfg = ServeConfig {
+            shards: 2,
+            workers: 1,
+            max_batch: 16,
+            indexed_density_threshold: indexed_t,
+            compressed_density_threshold: compressed_t,
+            ..ServeConfig::default()
+        };
+        let srv = ShardedCoordinator::new(&cfg, m.clone(), cm.clone(), false).unwrap();
+        let backends = [
+            Backend::CompressedMulticlass,
+            Backend::CompressedCotm,
+            Backend::AutoMulticlass,
+            Backend::AutoCotm,
+        ];
+        let samples: Vec<Vec<bool>> = (0..48).map(|_| g.bools(f)).collect();
+        let routes: Vec<usize> =
+            samples.iter().map(|x| srv.shard_for_features(x)).collect();
+        let pending: Vec<_> = samples
+            .iter()
+            .enumerate()
+            .map(|(i, x)| {
+                let backend = backends[i % backends.len()];
+                (
+                    i,
+                    backend,
+                    srv.submit(InferRequest { features: x.clone(), backend }).unwrap(),
+                )
+            })
+            .collect();
+        for (i, backend, rx) in pending {
+            let r = rx
+                .recv_timeout(std::time::Duration::from_secs(30))
+                .expect("reply within deadline")
+                .expect("compressed/auto request served");
+            assert!(r.backend.is_native_batched(), "request {i} via {backend:?}");
+            if backend.is_compressed() {
+                assert_eq!(r.backend, backend);
+            }
+            let multiclass = matches!(
+                backend,
+                Backend::CompressedMulticlass | Backend::AutoMulticlass
+            );
+            let want = if multiclass {
+                multiclass_class_sums(&m, &samples[i])
+            } else {
+                cotm_class_sums(&cm, &samples[i])
+            };
+            assert_eq!(r.class_sums, want, "request {i} via {backend:?}");
+            assert_eq!(r.predicted, predict_argmax(&want), "request {i}");
+        }
+        // Conservation across the shard set, per shard.
+        let agg = srv.stats();
+        assert_eq!(agg.submitted, 48);
+        assert_eq!(agg.completed, 48);
+        assert_eq!(agg.failed, 0);
+        let per_shard = srv.shard_stats();
+        assert_eq!(per_shard.iter().map(|s| s.completed).sum::<u64>(), 48);
+        for (s, snap) in per_shard.iter().enumerate() {
+            let routed = routes.iter().filter(|&&r| r == s).count() as u64;
+            assert_eq!(snap.submitted, routed, "shard {s} submitted count");
+        }
+        srv.shutdown();
+    });
+}
+
+#[test]
 fn wta_choice_does_not_change_multiclass_results() {
     let d = data::iris().unwrap();
     let (tr, _) = d.split(0.8, 42);
