@@ -1,0 +1,25 @@
+"""Toolchain-less static-analysis tier for the Rust tree.
+
+The CI image carries no Rust toolchain (see ROADMAP.md), so the
+non-algorithmic serving invariants — poison-tolerant locks, panic
+containment on thread entry, exactly-once in-flight slot release,
+Rust<->Python golden-vector parity, registry coverage, the panic-path
+ratchet — are enforced here, in dependency-free Python, as the first
+stage of scripts/verify.sh.
+
+Layout:
+
+* ``rslex``   — comment/string-aware token-level Rust lexer + shared
+  structural helpers (bracket matching, fn spans, attribute groups).
+* ``engine``  — the rule runner: walks the tree, applies the
+  ``// lint:allow(<rule>) <reason>`` escape hatch, renders findings.
+* ``rules``   — one module per rule, r1..r7.  Each ships a known-good
+  and a known-bad fixture under python/tests/fixtures/analysis/.
+
+Entry points: ``scripts/lint.sh`` (CI), ``python3 -m analysis``
+(direct), ``python3 -m analysis --update-ratchet`` (re-pin r7 counts
+after a reviewed panic-path change).  The invariant catalog lives in
+docs/INVARIANTS.md.
+"""
+
+from .engine import Finding, Tree, run  # noqa: F401

@@ -1,0 +1,38 @@
+"""CLI: ``python3 -m analysis [--update-ratchet] [root]``.
+
+Exit 0 when every rule is clean, 1 otherwise.  ``--update-ratchet``
+re-pins the R7 panic-path counts to the live tree (do this only after
+reviewing why a count moved; the diff of ratchet.json is the audit
+trail).
+"""
+
+import sys
+from pathlib import Path
+
+from .engine import Tree, run
+from .rules import ALL_RULES
+from .rules import r7_ratchet
+
+
+def main(argv):
+    update = "--update-ratchet" in argv
+    rest = [a for a in argv if not a.startswith("--")]
+    root = Path(rest[0]) if rest else Path(__file__).resolve().parents[2]
+    tree = Tree(root)
+    if update:
+        path = r7_ratchet.update(tree)
+        print(f"lint: re-pinned panic-path ratchet at {path}")
+        return 0
+    findings = run(tree)
+    for f in findings:
+        print(f.render())
+    if findings:
+        print(f"lint: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    rules = ", ".join(r.RULE for r in ALL_RULES)
+    print(f"lint: OK ({rules} clean on {len(tree.rust_files())} Rust files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

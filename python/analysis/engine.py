@@ -1,0 +1,137 @@
+"""Rule runner: tree walking, findings, the ``lint:allow`` escape hatch.
+
+A ``Tree`` is either the live repo or a fixture mini-repo under
+``python/tests/fixtures/analysis/`` (same relative layout, a few files).
+Rules never read the filesystem directly — they go through the tree's
+cached ``read``/``lexed``/``rust_files`` so fixtures and the live repo
+are interchangeable.
+
+Suppression: ``// lint:allow(<rule>) <reason>`` on the finding's line
+or the line directly above silences that one finding.  A directive
+without a reason is itself reported (rule id ``allow``) — the escape
+hatch must say why.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from pathlib import Path
+
+from . import rslex
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str  # repo-relative, forward slashes
+    line: int
+    message: str
+
+    def render(self):
+        return f"{self.path}:{self.line} [{self.rule}] {self.message}"
+
+
+_ALLOW_RE = re.compile(r"lint:allow\((r\d+)\)\s*(.*)")
+
+# Where Rust sources live, relative to the tree root.  Fixture
+# mini-repos replicate the same layout, so one list serves both.
+_RUST_SUBDIRS = ("rust/src", "tests", "benches", "examples")
+
+
+class Tree:
+    """A repo (or fixture mini-repo) the rules run against.
+
+    ``fixture=True`` relaxes the whole-repo rules (R5/R6/R7): surfaces
+    absent from a mini-repo are skipped instead of reported missing.
+    """
+
+    def __init__(self, root, fixture=False):
+        self.root = Path(root)
+        self.fixture = fixture
+        self._text = {}
+        self._lexed = {}
+
+    def exists(self, rel):
+        return (self.root / rel).is_file()
+
+    def read(self, rel):
+        if rel not in self._text:
+            self._text[rel] = (self.root / rel).read_text(encoding="utf-8")
+        return self._text[rel]
+
+    def lexed(self, rel):
+        if rel not in self._lexed:
+            self._lexed[rel] = rslex.lex(self.read(rel))
+        return self._lexed[rel]
+
+    def rust_files(self):
+        out = []
+        for sub in _RUST_SUBDIRS:
+            base = self.root / sub
+            if base.is_dir():
+                out += [
+                    str(p.relative_to(self.root)).replace("\\", "/")
+                    for p in base.rglob("*.rs")
+                ]
+        return sorted(out)
+
+
+def all_rules():
+    from .rules import ALL_RULES
+
+    return ALL_RULES
+
+
+def directives(tree, rel):
+    """``lint:allow`` directives in one file: ``[(line, rule, reason)]``."""
+    _, comments = tree.lexed(rel)
+    out = []
+    for c in comments:
+        m = _ALLOW_RE.search(c.text)
+        if m:
+            out.append((c.line, m.group(1), m.group(2).strip()))
+    return out
+
+
+def run(tree, rules=None):
+    """Run ``rules`` (default: all) over ``tree`` and return the
+    surviving findings, sorted, suppression applied."""
+    findings = []
+    for rule in rules if rules is not None else all_rules():
+        findings += list(rule.check(tree))
+
+    dcache = {}
+
+    def file_directives(rel):
+        if rel not in dcache:
+            try:
+                dcache[rel] = directives(tree, rel)
+            except OSError:
+                dcache[rel] = []
+        return dcache[rel]
+
+    kept = []
+    for f in findings:
+        ds = file_directives(f.path) if f.path.endswith(".rs") else []
+        if any(
+            rule == f.rule and line in (f.line, f.line - 1) and reason
+            for line, rule, reason in ds
+        ):
+            continue
+        kept.append(f)
+
+    for rel in tree.rust_files():
+        for line, rule, reason in file_directives(rel):
+            if not reason:
+                kept.append(
+                    Finding(
+                        "allow",
+                        rel,
+                        line,
+                        f"lint:allow({rule}) without a reason — say why the "
+                        "escape hatch applies",
+                    )
+                )
+
+    return sorted(set(kept), key=lambda f: (f.path, f.line, f.rule))

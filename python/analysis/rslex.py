@@ -1,0 +1,309 @@
+"""Comment- and string-aware token-level lexer for Rust sources.
+
+Dependency-free (stdlib only). This is not a Rust grammar: it produces
+a flat token stream — identifiers, numbers, strings, char literals,
+lifetimes, single-char punctuation — each tagged with its source line,
+plus the comment stream (where ``// lint:allow`` directives live), and
+the structural helpers the rules share: bracket matching, ``fn`` body
+spans, attribute groups, ``#[cfg(test)]`` spans.
+
+The tricky Rust-isms it does handle, because serving code uses them:
+nested block comments, raw strings (``r#"..."#``), byte strings,
+char-literal vs lifetime disambiguation (``'a'`` vs ``'a``), and
+numeric type suffixes (``0xcbf2u64``).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Tok:
+    kind: str  # "ident" | "num" | "str" | "char" | "lifetime" | "punct"
+    text: str
+    line: int
+
+
+@dataclass(frozen=True)
+class Comment:
+    text: str
+    line: int
+
+
+_IDENT_RE = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
+_NUM_RE = re.compile(
+    r"0[xX][0-9a-fA-F_]+|0[bB][01_]+|0[oO][0-7_]+"
+    r"|\d[\d_]*(?:\.\d[\d_]*)?(?:[eE][+-]?\d+)?"
+)
+_NUM_SUFFIX_RE = re.compile(r"[iu](?:8|16|32|64|128|size)|f32|f64")
+_CHAR_RE = re.compile(r"'(?:\\(?:x[0-9a-fA-F]{2}|u\{[0-9a-fA-F_]+\}|.)|[^'\\])'")
+_RAW_STR_RE = re.compile(r'b?r(#*)"')
+
+
+def lex(src):
+    """Lex Rust source into ``(tokens, comments)``."""
+    toks = []
+    comments = []
+    i, n, line = 0, len(src), 1
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+        if src.startswith("//", i):
+            j = src.find("\n", i)
+            j = n if j < 0 else j
+            comments.append(Comment(src[i:j], line))
+            i = j
+            continue
+        if src.startswith("/*", i):
+            start_line = line
+            depth, j = 1, i + 2
+            while j < n and depth:
+                if src.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif src.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                else:
+                    if src[j] == "\n":
+                        line += 1
+                    j += 1
+            comments.append(Comment(src[i:j], start_line))
+            i = j
+            continue
+        if c in "br":
+            m = _RAW_STR_RE.match(src, i)
+            if m:
+                close = '"' + m.group(1)
+                j = src.find(close, m.end())
+                j = n if j < 0 else j + len(close)
+                text = src[i:j]
+                toks.append(Tok("str", text, line))
+                line += text.count("\n")
+                i = j
+                continue
+        if c == '"' or src.startswith('b"', i):
+            j = i + (2 if c == "b" else 1)
+            while j < n and src[j] != '"':
+                j += 2 if src[j] == "\\" else 1
+            j = min(j + 1, n)
+            text = src[i:j]
+            toks.append(Tok("str", text, line))
+            line += text.count("\n")
+            i = j
+            continue
+        if c == "'":
+            m = _CHAR_RE.match(src, i)
+            if m:
+                toks.append(Tok("char", m.group(0), line))
+                i = m.end()
+            else:
+                m = _IDENT_RE.match(src, i + 1)
+                end = m.end() if m else i + 1
+                toks.append(Tok("lifetime", src[i:end], line))
+                i = end
+            continue
+        if c.isdigit():
+            m = _NUM_RE.match(src, i)
+            end = m.end()
+            s = _NUM_SUFFIX_RE.match(src, end)
+            if s:
+                end = s.end()
+            toks.append(Tok("num", src[i:end], line))
+            i = end
+            continue
+        m = _IDENT_RE.match(src, i)
+        if m:
+            toks.append(Tok("ident", m.group(0), line))
+            i = m.end()
+            continue
+        toks.append(Tok("punct", c, line))
+        i += 1
+    return toks, comments
+
+
+_CLOSE_OF = {"(": ")", "[": "]", "{": "}"}
+
+
+def match_delim(toks, i):
+    """Index of the closer matching the opening delimiter at ``toks[i]``.
+
+    Counts only the opener's own bracket kind — strings/chars/comments
+    are already opaque tokens, so this is exact on well-formed code.
+    """
+    openc = toks[i].text
+    close = _CLOSE_OF[openc]
+    depth = 0
+    for j in range(i, len(toks)):
+        t = toks[j]
+        if t.kind == "punct":
+            if t.text == openc:
+                depth += 1
+            elif t.text == close:
+                depth -= 1
+                if depth == 0:
+                    return j
+    return len(toks) - 1
+
+
+def attr_groups(toks):
+    """Every ``#[...]`` attribute group as ``(start, end, text)``.
+
+    ``text`` is the group's tokens joined without whitespace — enough
+    for substring checks like ``"target_feature"`` or ``"cfg(test)"``.
+    """
+    out = []
+    for i in range(len(toks) - 1):
+        t = toks[i]
+        if t.kind == "punct" and t.text == "#" and toks[i + 1].text == "[":
+            end = match_delim(toks, i + 1)
+            out.append((i, end, "".join(x.text for x in toks[i : end + 1])))
+    return out
+
+
+def fn_spans(toks):
+    """Every ``fn`` item with a body: ``(name, fn_idx, body_open, body_close)``.
+
+    The body opener is the first ``{`` after the name at zero ``()``/
+    ``[]`` nesting; a ``;`` there instead means a bodyless declaration.
+    Nested fns are reported both standalone and inside their parent.
+    """
+    spans = []
+    for i, t in enumerate(toks):
+        if (
+            t.kind == "ident"
+            and t.text == "fn"
+            and i + 1 < len(toks)
+            and toks[i + 1].kind == "ident"
+        ):
+            depth = 0
+            j = i + 2
+            while j < len(toks):
+                x = toks[j]
+                if x.kind == "punct":
+                    if x.text in "([":
+                        depth += 1
+                    elif x.text in ")]":
+                        depth -= 1
+                    elif x.text == "{" and depth == 0:
+                        spans.append((toks[i + 1].text, i, j, match_delim(toks, j)))
+                        break
+                    elif x.text == ";" and depth == 0:
+                        break
+                j += 1
+    return spans
+
+
+_MODIFIERS = {"pub", "unsafe", "const", "extern", "crate", "in", "super", "self"}
+
+
+def attrs_before(toks, idx, groups=None):
+    """Attr texts attached to the item whose declaration contains token
+    ``idx``, walking back over modifiers (``pub``, ``unsafe``, ...) and
+    stacked attributes."""
+    if groups is None:
+        groups = attr_groups(toks)
+    by_end = {g[1]: g for g in groups}
+    out = []
+    j = idx - 1
+    while j >= 0:
+        t = toks[j]
+        if t.kind == "ident" and t.text in _MODIFIERS:
+            j -= 1
+        elif t.kind == "punct" and t.text in "()":
+            j -= 1  # pub(crate)
+        elif t.kind == "str" and j >= 1 and toks[j - 1].text == "extern":
+            j -= 1  # extern "C"
+        elif t.kind == "punct" and t.text == "]" and j in by_end:
+            g = by_end[j]
+            out.append(g[2])
+            j = g[0] - 1
+        else:
+            break
+    return out
+
+
+def cfg_test_spans(toks):
+    """``(first_line, last_line)`` of every item under ``#[cfg(test)]``
+    or ``#[test]`` — used to scope rules to non-test code."""
+    spans = []
+    for s, e, text in attr_groups(toks):
+        if "cfg(test)" not in text and text != "#[test]":
+            continue
+        depth = 0
+        j = e + 1
+        while j < len(toks):
+            x = toks[j]
+            if x.kind == "punct":
+                if x.text in "([":
+                    depth += 1
+                elif x.text in ")]":
+                    depth -= 1
+                elif x.text == "{" and depth == 0:
+                    spans.append((toks[s].line, toks[match_delim(toks, j)].line))
+                    break
+                elif x.text == ";" and depth == 0:
+                    break
+            j += 1
+    return spans
+
+
+def in_spans(line, spans):
+    return any(a <= line <= b for a, b in spans)
+
+
+def strip_comments(src):
+    """Rust source with comments blanked to spaces, layout preserved —
+    for the rules that work on raw text spans (R5 anchors)."""
+    out = list(src)
+    i, n = 0, len(src)
+    while i < n:
+        c = src[i]
+        if c == '"' or src.startswith('b"', i):
+            i += 2 if c == "b" else 1
+            while i < n and src[i] != '"':
+                i += 2 if src[i] == "\\" else 1
+            i += 1
+            continue
+        m = _RAW_STR_RE.match(src, i) if c in "br" else None
+        if m:
+            close = '"' + m.group(1)
+            j = src.find(close, m.end())
+            i = n if j < 0 else j + len(close)
+            continue
+        if c == "'" and _CHAR_RE.match(src, i):
+            i = _CHAR_RE.match(src, i).end()
+            continue
+        if src.startswith("//", i):
+            while i < n and src[i] != "\n":
+                out[i] = " "
+                i += 1
+            continue
+        if src.startswith("/*", i):
+            depth = 1
+            out[i] = out[i + 1] = " "
+            i += 2
+            while i < n and depth:
+                if src.startswith("/*", i):
+                    depth += 1
+                    out[i] = out[i + 1] = " "
+                    i += 2
+                elif src.startswith("*/", i):
+                    depth -= 1
+                    out[i] = out[i + 1] = " "
+                    i += 2
+                else:
+                    if src[i] != "\n":
+                        out[i] = " "
+                    i += 1
+            continue
+        i += 1
+    return "".join(out)

@@ -1,0 +1,34 @@
+"""The invariant catalog, one module per rule.
+
+Each rule module exports:
+
+* ``RULE``          — the short id used in findings and ``lint:allow``
+* ``TITLE``         — one-line human description
+* ``FIXTURE_GOOD``/``FIXTURE_BAD`` — mini-repo directory names under
+  ``python/tests/fixtures/analysis/`` proving the rule stays silent /
+  fires (the meta-test in test_analysis.py enforces the pair exists)
+* ``check(tree)``   — returns a list of ``engine.Finding``
+
+docs/INVARIANTS.md narrates what each contract is and which PR's
+hand-fix it fossilizes.
+"""
+
+from . import (
+    r1_lock_discipline,
+    r2_panic_containment,
+    r3_slot_accounting,
+    r4_unsafe_audit,
+    r5_golden_drift,
+    r6_registry_coverage,
+    r7_ratchet,
+)
+
+ALL_RULES = [
+    r1_lock_discipline,
+    r2_panic_containment,
+    r3_slot_accounting,
+    r4_unsafe_audit,
+    r5_golden_drift,
+    r6_registry_coverage,
+    r7_ratchet,
+]

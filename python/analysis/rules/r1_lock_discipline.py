@@ -1,0 +1,42 @@
+"""R1 — lock discipline: no bare ``.lock().unwrap()`` / ``.lock().expect(...)``.
+
+A worker that panics while holding a mutex poisons it; a bare unwrap on
+the next acquire then cascades the panic through every thread touching
+the lock (the failure PR 2 and PR 5 fixed by hand in stats.rs and
+pool.rs).  The sanctioned pattern is the shared poison-tolerant helper
+``util::lock_unpoisoned`` (``lock().unwrap_or_else(|p| p.into_inner())``),
+which this rule does not match.  Tests that deliberately poison a mutex
+annotate the bare lock with ``// lint:allow(r1) <reason>``.
+"""
+
+from ..engine import Finding
+
+RULE = "r1"
+TITLE = "lock discipline: bare .lock().unwrap()/.expect() cascades poisoning"
+FIXTURE_GOOD = "r1_good"
+FIXTURE_BAD = "r1_bad"
+
+
+def check(tree):
+    out = []
+    for rel in tree.rust_files():
+        toks, _ = tree.lexed(rel)
+        for i in range(len(toks) - 5):
+            if (
+                toks[i].text == "."
+                and toks[i + 1].text == "lock"
+                and toks[i + 2].text == "("
+                and toks[i + 3].text == ")"
+                and toks[i + 4].text == "."
+                and toks[i + 5].text in ("unwrap", "expect")
+            ):
+                out.append(
+                    Finding(
+                        RULE,
+                        rel,
+                        toks[i + 5].line,
+                        f".lock().{toks[i + 5].text}() cascades a poisoned "
+                        "mutex — use util::lock_unpoisoned",
+                    )
+                )
+    return out

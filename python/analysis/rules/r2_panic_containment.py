@@ -1,0 +1,78 @@
+"""R2 — panic containment: every thread entry in ``coordinator/`` must
+reach ``catch_unwind`` or a ``JobGuard``.
+
+A panic that escapes a worker closure kills the thread silently and
+leaks its in-flight slot (the PR 5 pool/batcher hand-fix).  A spawn
+passes if its argument span mentions ``catch_unwind``/``JobGuard``
+directly, or calls a same-file fn whose body does (one level of
+transitivity — batcher.rs spawns a closure that calls ``run_flush``,
+and the catch lives there).
+"""
+
+from .. import rslex
+from ..engine import Finding
+
+RULE = "r2"
+TITLE = "panic containment: coordinator spawns must reach catch_unwind/JobGuard"
+FIXTURE_GOOD = "r2_good"
+FIXTURE_BAD = "r2_bad"
+
+_GUARDS = {"catch_unwind", "JobGuard"}
+
+
+def _is_thread_spawn(toks, i):
+    """True when ``toks[i]`` (= ident ``spawn``) is a thread spawn call:
+    ``.spawn(`` (Builder / scope APIs) or ``thread::spawn(``."""
+    if i + 1 >= len(toks) or toks[i + 1].text != "(":
+        return False
+    prev = toks[i - 1] if i > 0 else None
+    if prev is not None and prev.text == ".":
+        return True
+    return (
+        prev is not None
+        and prev.text == ":"
+        and i >= 3
+        and toks[i - 2].text == ":"
+        and toks[i - 3].text == "thread"
+    )
+
+
+def _guarded_fns(toks):
+    names = set()
+    for name, _, b0, b1 in rslex.fn_spans(toks):
+        if any(
+            t.kind == "ident" and t.text in _GUARDS for t in toks[b0 : b1 + 1]
+        ):
+            names.add(name)
+    return names
+
+
+def check(tree):
+    out = []
+    for rel in tree.rust_files():
+        if "coordinator/" not in rel:
+            continue
+        toks, _ = tree.lexed(rel)
+        guarded = None
+        for i, t in enumerate(toks):
+            if t.kind != "ident" or t.text != "spawn" or not _is_thread_spawn(toks, i):
+                continue
+            if guarded is None:
+                guarded = _guarded_fns(toks)
+            close = rslex.match_delim(toks, i + 1)
+            idents = {
+                x.text for x in toks[i + 1 : close + 1] if x.kind == "ident"
+            }
+            if idents & (_GUARDS | guarded):
+                continue
+            out.append(
+                Finding(
+                    RULE,
+                    rel,
+                    t.line,
+                    "thread spawn whose closure never reaches "
+                    "catch_unwind or a JobGuard — an escaping panic "
+                    "kills the worker and leaks its slot",
+                )
+            )
+    return out

@@ -1,0 +1,54 @@
+"""R3 — slot accounting: an in-flight/queue-depth increment must pair
+with a release in the same function.
+
+``submit()`` takes a slot with ``in_flight.fetch_add``; every exit path
+must give it back (``fetch_sub`` on the reject path, ``abort_submit``
+on error paths, or a ``JobGuard`` whose Drop releases).  A function
+that increments one of the counters without any release primitive in
+its body leaks capacity until restart.
+"""
+
+from .. import rslex
+from ..engine import Finding
+
+RULE = "r3"
+TITLE = "slot accounting: counter increments need a paired release"
+FIXTURE_GOOD = "r3_good"
+FIXTURE_BAD = "r3_bad"
+
+_COUNTERS = {"in_flight", "inflight", "queue_depth", "depth"}
+_RELEASES = {"fetch_sub", "abort_submit", "JobGuard"}
+
+
+def check(tree):
+    out = []
+    for rel in tree.rust_files():
+        if "coordinator/" not in rel:
+            continue
+        toks, _ = tree.lexed(rel)
+        for name, _, b0, b1 in rslex.fn_spans(toks):
+            body = toks[b0 : b1 + 1]
+            incs = [
+                body[i]
+                for i in range(2, len(body))
+                if body[i].text == "fetch_add"
+                and body[i - 1].text == "."
+                and body[i - 2].kind == "ident"
+                and body[i - 2].text in _COUNTERS
+            ]
+            if not incs:
+                continue
+            idents = {t.text for t in body if t.kind == "ident"}
+            if idents & _RELEASES:
+                continue
+            out.append(
+                Finding(
+                    RULE,
+                    rel,
+                    incs[0].line,
+                    f"`{name}` increments an in-flight counter with no "
+                    "paired release (fetch_sub / abort_submit / "
+                    "JobGuard) — a panic or early return leaks the slot",
+                )
+            )
+    return out

@@ -1,0 +1,110 @@
+"""R4 — unsafe audit: ``unsafe`` lives only in ``tm/simd.rs``, and only
+as ``#[target_feature]`` kernels plus the dispatch blocks that call
+them behind runtime feature detection.
+
+The crate is ``#![deny(unsafe_code)]`` everywhere else (Cargo.toml
+``[lints.rust]`` + the crate-root attribute); this rule is the
+toolchain-less mirror of that bar, plus the structure the attribute
+cannot express: an ``unsafe fn`` must carry ``#[target_feature]``
+(x86 AVX2/AVX-512 or aarch64 NEON), an ``unsafe {}`` block must call
+one of those kernels, and the file must contain a runtime detection
+macro (``is_x86_feature_detected!`` / ``is_aarch64_feature_detected!``)
+guarding the dispatch.
+"""
+
+from .. import rslex
+from ..engine import Finding
+
+RULE = "r4"
+TITLE = "unsafe audit: unsafe only in tm/simd.rs as feature-gated kernels"
+FIXTURE_GOOD = "r4_good"
+FIXTURE_BAD = "r4_bad"
+
+_ALLOWED_SUFFIX = "tm/simd.rs"
+_DETECT_MACROS = {"is_x86_feature_detected", "is_aarch64_feature_detected"}
+
+
+def check(tree):
+    out = []
+    for rel in tree.rust_files():
+        toks, _ = tree.lexed(rel)
+        unsafe_idx = [
+            i for i, t in enumerate(toks) if t.kind == "ident" and t.text == "unsafe"
+        ]
+        if not unsafe_idx:
+            continue
+        if not rel.endswith(_ALLOWED_SUFFIX):
+            for i in unsafe_idx:
+                out.append(
+                    Finding(
+                        RULE,
+                        rel,
+                        toks[i].line,
+                        "unsafe outside tm/simd.rs — the crate is "
+                        "#![deny(unsafe_code)]; vector kernels are the "
+                        "only audited exception",
+                    )
+                )
+            continue
+
+        groups = rslex.attr_groups(toks)
+        target_fns = set()
+        for name, fi, _, _ in rslex.fn_spans(toks):
+            if any("target_feature" in a for a in rslex.attrs_before(toks, fi, groups)):
+                target_fns.add(name)
+        idents = {t.text for t in toks if t.kind == "ident"}
+        if not idents & _DETECT_MACROS:
+            out.append(
+                Finding(
+                    RULE,
+                    rel,
+                    1,
+                    "unsafe kernels without a runtime feature-detection "
+                    "macro in the file — dispatch must be guarded by "
+                    "is_x86_feature_detected!/is_aarch64_feature_detected!",
+                )
+            )
+
+        for i in unsafe_idx:
+            nxt = toks[i + 1] if i + 1 < len(toks) else None
+            if nxt is not None and nxt.text == "fn":
+                if any(
+                    "target_feature" in a
+                    for a in rslex.attrs_before(toks, i, groups)
+                ):
+                    continue
+                out.append(
+                    Finding(
+                        RULE,
+                        rel,
+                        toks[i].line,
+                        "unsafe fn without #[target_feature] — only "
+                        "feature-gated vector kernels may be unsafe",
+                    )
+                )
+            elif nxt is not None and nxt.text == "{":
+                close = rslex.match_delim(toks, i + 1)
+                inner = {
+                    x.text for x in toks[i + 1 : close + 1] if x.kind == "ident"
+                }
+                if inner & target_fns:
+                    continue
+                out.append(
+                    Finding(
+                        RULE,
+                        rel,
+                        toks[i].line,
+                        "unsafe block that does not call a "
+                        "#[target_feature] kernel defined in this file",
+                    )
+                )
+            elif nxt is not None and nxt.text == "impl":
+                out.append(
+                    Finding(
+                        RULE,
+                        rel,
+                        toks[i].line,
+                        "unsafe impl is outside the audited kernel shape",
+                    )
+                )
+    return out

@@ -1,0 +1,423 @@
+"""R5 — golden-vector drift: the hand-duplicated golden constants in
+Rust unit tests must equal their Python-mirror twins.
+
+Every core algorithm (hash ring, inverted index, compressed walk,
+packed trainer + SplitMix64, SIMD tile layout) is validated on both
+sides of the language boundary by the *same* constants, copied by hand.
+Nothing machine-checked that the copies match — until this rule: each
+probe below names the Rust span and the Python span holding one golden
+family, extracts the constants (string-blind for ints, int-blind for
+bitstrings) and asserts equality.
+
+Probes compare either an ordered sequence (``exact``) or a multiset
+(``multiset`` — used where one side splits a family across several
+tests).  On the live tree a missing file or span is itself a finding;
+fixture mini-repos run whichever probes their files support (at least
+one must run).
+"""
+
+from __future__ import annotations
+
+import re
+
+from .. import rslex
+from ..engine import Finding
+
+RULE = "r5"
+TITLE = "golden-vector drift: Rust test constants == Python mirror constants"
+FIXTURE_GOOD = "r5_good"
+FIXTURE_BAD = "r5_bad"
+
+# ---------------------------------------------------------------------------
+# span capture on comment-stripped text
+
+def _balance(text, i, op, cl):
+    """Span text from the opener at ``text[i]`` to its matching closer,
+    skipping string literals (class-sum assert messages carry ``{}``)."""
+    depth = 0
+    in_str = False
+    j = i
+    while j < len(text):
+        c = text[j]
+        if in_str:
+            if c == "\\":
+                j += 2
+                continue
+            if c == '"':
+                in_str = False
+        elif c == '"':
+            in_str = True
+        elif c == op:
+            depth += 1
+        elif c == cl:
+            depth -= 1
+            if depth == 0:
+                return text[i : j + 1]
+        j += 1
+    return None
+
+
+def _nth(text, needle, occurrence):
+    pos = -1
+    for _ in range(occurrence):
+        pos = text.find(needle, pos + 1)
+        if pos < 0:
+            return -1
+    return pos
+
+
+def _rust_fn_span(text, name, _occ):
+    m = re.search(rf"\bfn\s+{re.escape(name)}\b", text)
+    if m is None:
+        return None, -1
+    i = text.find("{", m.end())
+    if i < 0:
+        return None, -1
+    return _balance(text, i, "{", "}"), m.start()
+
+
+def _py_def_span(text, name, _occ):
+    m = re.search(rf"^def\s+{re.escape(name)}\b", text, re.M)
+    if m is None:
+        return None, -1
+    header_end = text.find(":", m.end())
+    if header_end < 0:
+        return None, -1
+    body_start = text.find("\n", header_end) + 1
+    if body_start == 0:
+        return None, -1
+    m2 = re.search(r"^\S", text[body_start:], re.M)
+    end = body_start + m2.start() if m2 else len(text)
+    return text[body_start:end], m.start()
+
+
+def _anchor_span(text, anchor, occurrence):
+    pos = _nth(text, anchor, occurrence)
+    if pos < 0:
+        return None, -1
+    i = text.find("[", pos + len(anchor))
+    if i < 0:
+        return None, -1
+    return _balance(text, i, "[", "]"), pos
+
+
+def _line_span(text, anchor, occurrence):
+    pos = _nth(text, anchor, occurrence)
+    if pos < 0:
+        return None, -1
+    end = text.find("\n", pos)
+    return text[pos : end if end >= 0 else len(text)], pos
+
+
+_SPAN_KINDS = {
+    "fn": _rust_fn_span,
+    "def": _py_def_span,
+    "anchor": _anchor_span,
+    "line": _line_span,
+}
+
+# ---------------------------------------------------------------------------
+# constant extraction
+
+def _scan_strings(span):
+    """``(blanked, strings)``: the span with every string literal's
+    chars replaced by spaces (length preserved), plus the literal
+    contents with their positions.  Handles Rust ``"``/``b"`` and
+    Python ``"``/``'``/triple quotes alike."""
+    out = list(span)
+    strings = []
+    i, n = 0, len(span)
+    while i < n:
+        c = span[i]
+        quote = None
+        if span.startswith('"""', i) or span.startswith("'''", i):
+            quote = span[i : i + 3]
+        elif c in "\"'":
+            quote = c
+        if quote is None:
+            i += 1
+            continue
+        start = i
+        j = i + len(quote)
+        while j < n and not span.startswith(quote, j):
+            j += 2 if span[j] == "\\" else 1
+        content = span[i + len(quote) : j]
+        j = min(j + len(quote), n)
+        strings.append((start, content))
+        for k in range(start, j):
+            if out[k] != "\n":
+                out[k] = " "
+        i = j
+    return "".join(out), strings
+
+
+_INT_RE = re.compile(r"0[xX][0-9a-fA-F_]+|\d[\d_]*")
+_BITS_RE = re.compile(r"^[01]{8,}$")
+_SIGN_CONTEXT = "[,(={<:"
+
+
+def _scan_ints(span):
+    """``(pos, value, is_hex)`` for every integer literal outside
+    strings, with a leading ``-`` folded in when it reads as a sign
+    (previous non-space char opens a list/call/assignment)."""
+    blanked, _ = _scan_strings(span)
+    out = []
+    for m in _INT_RE.finditer(blanked):
+        a, b = m.span()
+        if a > 0 and (blanked[a - 1].isalnum() or blanked[a - 1] in "_."):
+            continue
+        if b < len(blanked) and blanked[b] == ".":
+            continue
+        txt = m.group(0).replace("_", "")
+        is_hex = txt.lower().startswith("0x")
+        v = int(txt, 16) if is_hex else int(txt)
+        j = a - 1
+        while j >= 0 and blanked[j] in " \t\n":
+            j -= 1
+        if j >= 0 and blanked[j] == "-":
+            k = j - 1
+            while k >= 0 and blanked[k] in " \t\n":
+                k -= 1
+            if k < 0 or blanked[k] in _SIGN_CONTEXT:
+                v = -v
+        out.append((a, v, is_hex))
+    return out
+
+
+def _extract(span, mode):
+    if mode == "ints":
+        return [v for _, v, _ in _scan_ints(span)]
+    if mode == "wide_ints":
+        return [v for _, v, _ in _scan_ints(span) if abs(v) >= 1 << 32]
+    if mode == "hex_ints":
+        return [v for _, v, h in _scan_ints(span) if h]
+    if mode == "bitstrings":
+        _, strings = _scan_strings(span)
+        return [s for _, s in strings if _BITS_RE.match(s)]
+    if mode == "ints_and_bitstrings":
+        _, strings = _scan_strings(span)
+        tagged = [(p, ("bits", s)) for p, s in strings if _BITS_RE.match(s)]
+        tagged += [(p, ("int", v)) for p, v, _ in _scan_ints(span)]
+        return [t for _, t in sorted(tagged)]
+    raise ValueError(mode)
+
+
+def _strip_py_comments(text):
+    blanked, _ = _scan_strings(text)
+    out = list(text)
+    for m in re.finditer(r"#[^\n]*", blanked):
+        for k in range(*m.span()):
+            out[k] = " "
+    return "".join(out)
+
+
+# ---------------------------------------------------------------------------
+# the probe table — one entry per hand-duplicated golden family
+
+PROBES = [
+    dict(
+        name="hashring wide constants",
+        rust="rust/src/coordinator/shard.rs",
+        rust_spans=[
+            ("fn", "fnv1a64_golden_vectors", 1),
+            ("fn", "ring_hash_golden_vectors", 1),
+        ],
+        py="python/tests/test_hashring.py",
+        py_spans=[
+            ("def", "test_fnv1a64_golden_vectors", 1),
+            ("def", "test_ring_hash_golden_vectors", 1),
+            ("def", "test_mixer_golden_identity", 1),
+        ],
+        extract="wide_ints",
+        compare="multiset",
+    ),
+    dict(
+        name="hashring routing pairs",
+        rust="rust/src/coordinator/shard.rs",
+        rust_spans=[("fn", "ring_routing_golden_vectors", 1)],
+        py="python/tests/test_hashring.py",
+        py_spans=[("def", "test_ring_routing_golden_vectors", 1)],
+        extract="ints",
+        compare="exact",
+    ),
+    dict(
+        name="invindex class sums",
+        rust="rust/src/tm/index.rs",
+        rust_spans=[("anchor", "let want_mc = ", 1), ("anchor", "let want_co = ", 1)],
+        py="python/tests/test_invindex.py",
+        py_spans=[("anchor", "GOLDEN_MC_SUMS = ", 1), ("anchor", "GOLDEN_CO_SUMS = ", 1)],
+        extract="ints",
+        compare="exact",
+    ),
+    dict(
+        name="compressed class sums",
+        rust="rust/src/tm/compressed.rs",
+        rust_spans=[("anchor", "let want_mc = ", 1), ("anchor", "let want_co = ", 1)],
+        py="python/tests/test_compressed.py",
+        py_spans=[("anchor", "GOLDEN_MC_SUMS = ", 1), ("anchor", "GOLDEN_CO_SUMS = ", 1)],
+        extract="ints",
+        compare="exact",
+    ),
+    dict(
+        name="compressed frequency reorder",
+        rust="rust/src/tm/compressed.rs",
+        rust_spans=[
+            ("anchor", "literal_frequencies(), vec!", 1),
+            ("anchor", "c.included(0), &", 1),
+            ("anchor", "c.included(1), &", 1),
+            ("anchor", "c.included(2), &", 1),
+            ("anchor", "c.included(3), &", 2),
+        ],
+        py="python/tests/test_compressed.py",
+        py_spans=[
+            ("anchor", "literal_frequencies() == ", 1),
+            ("anchor", "REORDER_WANT = ", 1),
+        ],
+        extract="ints",
+        compare="exact",
+    ),
+    dict(
+        name="packedtrain splitmix stream",
+        rust="rust/src/tm/trainer_engine.rs",
+        rust_spans=[("fn", "splitmix_stream_matches_python_mirror", 1)],
+        py="python/tests/test_packedtrain.py",
+        py_spans=[("def", "test_splitmix_stream_goldens", 1)],
+        extract="wide_ints",
+        compare="multiset",
+    ),
+    dict(
+        name="packedtrain chance bitstring",
+        rust="rust/src/tm/trainer_engine.rs",
+        rust_spans=[("fn", "splitmix_stream_matches_python_mirror", 1)],
+        py="python/tests/test_packedtrain.py",
+        py_spans=[("def", "test_splitmix_stream_goldens", 1)],
+        extract="bitstrings",
+        compare="multiset",
+    ),
+    dict(
+        name="packedtrain masks and weights",
+        rust="rust/src/tm/trainer_engine.rs",
+        rust_spans=[
+            ("anchor", "let golden = ", 1),
+            ("anchor", "let golden_masks = ", 1),
+            ("anchor", "let golden_weights = vec!", 1),
+        ],
+        py="python/tests/test_packedtrain.py",
+        py_spans=[
+            ("anchor", "GOLDEN_MC_MASKS = ", 1),
+            ("anchor", "GOLDEN_CO_MASKS = ", 1),
+            ("anchor", "GOLDEN_CO_WEIGHTS = ", 1),
+        ],
+        extract="ints_and_bitstrings",
+        compare="exact",
+    ),
+    dict(
+        name="simdtile layout goldens",
+        rust="rust/src/tm/bitpack.rs",
+        rust_spans=[("fn", "tiled_layout_golden_vectors_match_python_mirror", 1)],
+        py="python/tests/test_simdtile.py",
+        py_spans=[
+            ("line", "GOLDEN_FNV = ", 1),
+            ("anchor", "GOLDEN_TILE_OUT = ", 1),
+            ("def", "test_golden_vectors", 1),
+        ],
+        extract="hex_ints",
+        compare="multiset",
+    ),
+]
+
+
+def _collect(text, specs, probe_name, rel, out):
+    """Concatenated span text + start offset of the first span; span
+    misses become findings."""
+    parts = []
+    first = -1
+    ok = True
+    for kind, needle, occ in specs:
+        span, pos = _SPAN_KINDS[kind](text, needle, occ)
+        if span is None:
+            out.append(
+                Finding(
+                    RULE,
+                    rel,
+                    1,
+                    f"probe '{probe_name}': {kind} span {needle!r} "
+                    f"(occurrence {occ}) not found — golden family moved "
+                    "without updating the probe table",
+                )
+            )
+            ok = False
+            continue
+        if first < 0:
+            first = pos
+        parts.append(span)
+    return ("\n".join(parts) if ok else None), first
+
+
+def check(tree):
+    out = []
+    ran = 0
+    for probe in PROBES:
+        have_rust = tree.exists(probe["rust"])
+        have_py = tree.exists(probe["py"])
+        if not (have_rust and have_py):
+            if tree.fixture:
+                continue
+            for rel, have in ((probe["rust"], have_rust), (probe["py"], have_py)):
+                if not have:
+                    out.append(
+                        Finding(
+                            RULE,
+                            rel,
+                            1,
+                            f"probe '{probe['name']}': file missing from "
+                            "the live tree",
+                        )
+                    )
+            continue
+        rust_text = rslex.strip_comments(tree.read(probe["rust"]))
+        py_text = _strip_py_comments(tree.read(probe["py"]))
+        rust_span, rust_pos = _collect(
+            rust_text, probe["rust_spans"], probe["name"], probe["rust"], out
+        )
+        py_span, _ = _collect(
+            py_text, probe["py_spans"], probe["name"], probe["py"], out
+        )
+        if rust_span is None or py_span is None:
+            continue
+        ran += 1
+        rust_vals = _extract(rust_span, probe["extract"])
+        py_vals = _extract(py_span, probe["extract"])
+        line = rust_text[:rust_pos].count("\n") + 1 if rust_pos >= 0 else 1
+        if probe["compare"] == "multiset":
+            a, b = sorted(map(repr, rust_vals)), sorted(map(repr, py_vals))
+        else:
+            a, b = list(map(repr, rust_vals)), list(map(repr, py_vals))
+        if a != b:
+            diff = next(
+                (
+                    f"first divergence at #{k}: rust={x} python={y}"
+                    for k, (x, y) in enumerate(zip(a, b))
+                    if x != y
+                ),
+                f"rust has {len(a)} constants, python has {len(b)}",
+            )
+            out.append(
+                Finding(
+                    RULE,
+                    probe["rust"],
+                    line,
+                    f"probe '{probe['name']}': golden constants diverge "
+                    f"from {probe['py']} ({diff})",
+                )
+            )
+    if ran == 0 and not out:
+        out.append(
+            Finding(
+                RULE,
+                "python/analysis/rules/r5_golden_drift.py",
+                1,
+                "no golden-vector probe could run against this tree",
+            )
+        )
+    return out

@@ -1,0 +1,185 @@
+"""R6 — registry coverage: backends and config knobs cannot be wired
+into some surfaces and forgotten in others.
+
+Every backend name ``router.rs`` registers must be visible in (a) the
+CLI USAGE text, (b) the cross-engine conformance matrix
+``tests/engine_matrix.rs``, and (c) ``tmtd selfcheck``.  For (b)/(c) a
+surface that iterates ``Backend::ALL`` covers every name at once —
+that is the preferred, drift-proof form.
+
+Every ``ServeConfig`` field must have a TOML parse in ``from_toml``, a
+check in ``validate`` (or be on the type-level allowlist below, where
+parsing itself is the validation), and a USAGE mention.
+"""
+
+import re
+
+from .. import rslex
+from ..engine import Finding
+
+RULE = "r6"
+TITLE = "registry coverage: backends/knobs present in USAGE, matrix, selfcheck"
+FIXTURE_GOOD = "r6_good"
+FIXTURE_BAD = "r6_bad"
+
+ROUTER = "rust/src/coordinator/router.rs"
+CLI = "rust/src/cli.rs"
+MAIN = "rust/src/main.rs"
+MATRIX = "tests/engine_matrix.rs"
+CONFIG = "rust/src/config/mod.rs"
+
+_SURFACES = (ROUTER, CLI, MAIN, MATRIX, CONFIG)
+
+# Fields whose parse IS the validation: enum/level names are rejected
+# by their own parser, and these two carry no range constraint.
+_TYPE_VALIDATED = {
+    "artifacts_dir": "free-form path, any value is legal",
+    "wta": "enum parse rejects unknown kinds",
+    "simd": "SimdChoice::parse rejects unknown level names",
+    "batch_timeout_us": "every u64 is a legal timeout",
+}
+
+# Matches raw source ("Backend::ALL") and token-joined fn-body text,
+# where the lexer splits "::" into two ":" puncts ("Backend : : ALL").
+_ALL_RE = re.compile(r"Backend\s*:\s*:\s*ALL")
+
+
+def _backend_names(tree):
+    """The registry: string literals in router.rs's ``fn name`` body."""
+    toks, _ = tree.lexed(ROUTER)
+    for name, _, b0, b1 in rslex.fn_spans(toks):
+        if name == "name":
+            return [
+                t.text.strip('"')
+                for t in toks[b0 : b1 + 1]
+                if t.kind == "str"
+            ]
+    return []
+
+
+def _fn_body_text(tree, rel, fn_name):
+    toks, _ = tree.lexed(rel)
+    for name, _, b0, b1 in rslex.fn_spans(toks):
+        if name == fn_name:
+            return " ".join(t.text for t in toks[b0 : b1 + 1])
+    return None
+
+
+def _serve_fields(tree):
+    toks, _ = tree.lexed(CONFIG)
+    for i, t in enumerate(toks):
+        if t.text == "ServeConfig" and i > 0 and toks[i - 1].text == "struct":
+            j = i + 1
+            while j < len(toks) and toks[j].text != "{":
+                j += 1
+            close = rslex.match_delim(toks, j)
+            fields = []
+            for k in range(j + 1, close):
+                if (
+                    toks[k].kind == "ident"
+                    and k + 1 < len(toks)
+                    and toks[k + 1].text == ":"
+                    and toks[k - 1].text in ("pub", "{", ",")
+                ):
+                    fields.append(toks[k].text)
+            return fields
+    return []
+
+
+def check(tree):
+    missing = [rel for rel in _SURFACES if not tree.exists(rel)]
+    if missing:
+        if tree.fixture:
+            return []
+        return [
+            Finding(RULE, rel, 1, "registry surface missing from the live tree")
+            for rel in missing
+        ]
+
+    out = []
+    backends = _backend_names(tree)
+    if not backends:
+        out.append(
+            Finding(RULE, ROUTER, 1, "no backend names found in Backend::name()")
+        )
+
+    usage_text = tree.read(CLI)
+    for b in backends:
+        if b not in usage_text:
+            out.append(
+                Finding(
+                    RULE,
+                    CLI,
+                    1,
+                    f"backend '{b}' is registered in router.rs but absent "
+                    "from the CLI USAGE text",
+                )
+            )
+
+    matrix_text = tree.read(MATRIX)
+    matrix_covers_all = _ALL_RE.search(matrix_text) is not None
+    for b in backends:
+        if not matrix_covers_all and b not in matrix_text:
+            out.append(
+                Finding(
+                    RULE,
+                    MATRIX,
+                    1,
+                    f"backend '{b}' is not exercised by the engine matrix "
+                    "(name it, or iterate Backend::ALL)",
+                )
+            )
+
+    selfcheck = _fn_body_text(tree, MAIN, "cmd_selfcheck")
+    if selfcheck is None:
+        out.append(Finding(RULE, MAIN, 1, "cmd_selfcheck not found in main.rs"))
+    else:
+        covers_all = _ALL_RE.search(selfcheck) is not None
+        for b in backends:
+            if not covers_all and f'"{b}"' not in selfcheck:
+                out.append(
+                    Finding(
+                        RULE,
+                        MAIN,
+                        1,
+                        f"backend '{b}' never surfaces in tmtd selfcheck "
+                        "(print it, or iterate Backend::ALL)",
+                    )
+                )
+
+    fields = _serve_fields(tree)
+    if not fields:
+        out.append(Finding(RULE, CONFIG, 1, "ServeConfig struct not found"))
+    from_toml = _fn_body_text(tree, CONFIG, "from_toml") or ""
+    validate = _fn_body_text(tree, CONFIG, "validate") or ""
+    for f in fields:
+        if not re.search(rf"\b{f}\b", from_toml):
+            out.append(
+                Finding(
+                    RULE,
+                    CONFIG,
+                    1,
+                    f"ServeConfig field '{f}' has no TOML parse in from_toml",
+                )
+            )
+        if f not in _TYPE_VALIDATED and not re.search(rf"\b{f}\b", validate):
+            out.append(
+                Finding(
+                    RULE,
+                    CONFIG,
+                    1,
+                    f"ServeConfig field '{f}' is never checked in validate() "
+                    "and is not on the type-validated allowlist",
+                )
+            )
+        if f not in usage_text:
+            out.append(
+                Finding(
+                    RULE,
+                    CLI,
+                    1,
+                    f"ServeConfig field '{f}' is undocumented in the CLI "
+                    "USAGE text",
+                )
+            )
+    return out

@@ -1,0 +1,139 @@
+"""R7 — panic-path ratchet: per-file counts of ``unwrap()``,
+``expect(``, panic-family macros and slice indexing in non-test serving
+code (``coordinator/`` + ``tm/``) are pinned in
+``python/analysis/ratchet.json`` and may only go down.
+
+PR 3 burned a whole satellite hand-removing panic paths from
+booleanize/split/stats/config; the ratchet makes the count a reviewed
+artifact.  Any movement — up OR down — must touch ratchet.json
+(``python3 -m analysis --update-ratchet``), so the diff is the audit
+trail: regressions are rejected, improvements are re-pinned.
+"""
+
+import json
+
+from .. import rslex
+from ..engine import Finding
+
+RULE = "r7"
+TITLE = "panic-path ratchet: unwrap/expect/panic!/indexing counts only decrease"
+FIXTURE_GOOD = "r7_good"
+FIXTURE_BAD = "r7_bad"
+
+RATCHET = "python/analysis/ratchet.json"
+_SCOPES = ("rust/src/coordinator/", "rust/src/tm/")
+_PANIC_MACROS = {"panic", "unreachable", "todo", "unimplemented", "assert"}
+_KEYS = ("unwrap", "expect", "panic", "index")
+
+# Idents that read as keywords before `[` — slice patterns, array type
+# syntax and expression positions that are not an indexing operation.
+_NON_INDEX_PREV = {
+    "mut", "ref", "in", "as", "return", "move", "else", "match", "if",
+    "while", "for", "loop", "break", "continue", "dyn", "impl", "where",
+    "box", "let", "static", "const", "pub", "crate", "unsafe", "fn",
+}
+
+
+def counts_for(tree, rel):
+    toks, _ = tree.lexed(rel)
+    test_spans = rslex.cfg_test_spans(toks)
+    c = dict.fromkeys(_KEYS, 0)
+    for i, t in enumerate(toks):
+        if rslex.in_spans(t.line, test_spans):
+            continue
+        nxt = toks[i + 1].text if i + 1 < len(toks) else ""
+        if t.kind == "ident" and t.text == "unwrap" and nxt == "(":
+            c["unwrap"] += 1
+        elif t.kind == "ident" and t.text == "expect" and nxt == "(":
+            c["expect"] += 1
+        elif t.kind == "ident" and t.text in _PANIC_MACROS and nxt == "!":
+            c["panic"] += 1
+        elif t.kind == "punct" and t.text == "[" and i > 0:
+            prev = toks[i - 1]
+            if (prev.kind == "ident" and prev.text not in _NON_INDEX_PREV) or (
+                prev.kind == "punct" and prev.text in ")]"
+            ):
+                c["index"] += 1
+    return c
+
+
+def live_counts(tree):
+    return {
+        rel: counts_for(tree, rel)
+        for rel in tree.rust_files()
+        if any(rel.startswith(s) for s in _SCOPES)
+    }
+
+
+def check(tree):
+    live = live_counts(tree)
+    if not tree.exists(RATCHET):
+        if tree.fixture and not live:
+            return []
+        return [
+            Finding(
+                RULE,
+                RATCHET,
+                1,
+                "ratchet.json missing — run python3 -m analysis "
+                "--update-ratchet and review the pinned counts",
+            )
+        ]
+    pinned = json.loads(tree.read(RATCHET))
+    out = []
+    for rel in sorted(set(live) | set(pinned)):
+        if rel not in pinned:
+            out.append(
+                Finding(
+                    RULE,
+                    rel,
+                    1,
+                    "new serving file not pinned in ratchet.json — run "
+                    "--update-ratchet and review its panic-path budget",
+                )
+            )
+            continue
+        if rel not in live:
+            out.append(
+                Finding(
+                    RULE,
+                    RATCHET,
+                    1,
+                    f"stale ratchet entry for removed file {rel}",
+                )
+            )
+            continue
+        for k in _KEYS:
+            now, was = live[rel][k], pinned[rel].get(k, 0)
+            if now > was:
+                out.append(
+                    Finding(
+                        RULE,
+                        rel,
+                        1,
+                        f"{k} count rose {was} -> {now} — the panic-path "
+                        "ratchet only goes down (fix the code, or justify "
+                        "and re-pin via --update-ratchet)",
+                    )
+                )
+            elif now < was:
+                out.append(
+                    Finding(
+                        RULE,
+                        rel,
+                        1,
+                        f"{k} count fell {was} -> {now} — good; tighten the "
+                        "pin via --update-ratchet so it cannot bounce back",
+                    )
+                )
+    return out
+
+
+def update(tree):
+    """Re-pin ratchet.json to the live tree; returns the path written."""
+    path = tree.root / RATCHET
+    path.write_text(
+        json.dumps(live_counts(tree), indent=2, sort_keys=True) + "\n",
+        encoding="utf-8",
+    )
+    return str(path)

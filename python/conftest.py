@@ -14,7 +14,10 @@ import sys
 
 sys.path.insert(0, os.path.dirname(__file__))
 
-collect_ignore = []
+# The static-analysis fixture mini-repos under tests/fixtures/ carry
+# files named like test modules (e.g. test_hashring.py) that exist to
+# be *lexed* by python/analysis, not imported by pytest.
+collect_ignore = ["tests/fixtures"]
 if importlib.util.find_spec("hypothesis") is None:
     # Environmental, not a logic failure: these suites need the
     # hypothesis package, which cannot be installed offline.

@@ -1,0 +1,10 @@
+//! Known-bad R1: bare unwrap/expect on lock() — poisoning cascades.
+use std::sync::Mutex;
+
+pub fn record(ring: &Mutex<Vec<f64>>, x: f64) {
+    ring.lock().unwrap().push(x);
+}
+
+pub fn render(ring: &Mutex<Vec<f64>>) -> usize {
+    ring.lock().expect("ring poisoned").len()
+}

@@ -1,0 +1,20 @@
+//! Known-good R1: every acquire goes through the poison-tolerant helper.
+use std::sync::{Mutex, MutexGuard};
+
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+pub fn record(ring: &Mutex<Vec<f64>>, x: f64) {
+    lock_unpoisoned(ring).push(x);
+}
+
+pub fn drain(ring: &Mutex<Vec<f64>>) -> Vec<f64> {
+    // A match-based recovery is also fine — R1 only rejects the bare
+    // unwrap/expect forms.
+    let guard = match ring.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    guard.clone()
+}

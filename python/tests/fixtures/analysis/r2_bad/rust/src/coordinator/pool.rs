@@ -1,0 +1,9 @@
+//! Known-bad R2: the spawned closure can panic with nothing catching
+//! the unwind — the worker dies and its slot leaks.
+pub fn start_worker(jobs: Vec<fn()>) {
+    std::thread::spawn(move || {
+        for job in jobs {
+            job();
+        }
+    });
+}

@@ -1,0 +1,22 @@
+//! Known-good R2: both spawn shapes reach containment — one directly,
+//! one transitively through a same-file fn.
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+fn run_flush(job: fn()) {
+    let _ = catch_unwind(AssertUnwindSafe(job));
+}
+
+pub fn start_batcher() {
+    std::thread::Builder::new()
+        .name("flush".into())
+        .spawn(move || loop {
+            run_flush(|| {});
+        })
+        .ok();
+}
+
+pub fn start_worker(job: fn()) {
+    std::thread::spawn(move || {
+        let _ = catch_unwind(AssertUnwindSafe(job));
+    });
+}

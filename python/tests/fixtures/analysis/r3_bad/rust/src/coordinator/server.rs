@@ -1,0 +1,7 @@
+//! Known-bad R3: the slot is taken and never given back — capacity
+//! leaks until restart.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn submit(in_flight: &AtomicU64) {
+    in_flight.fetch_add(1, Ordering::SeqCst);
+}

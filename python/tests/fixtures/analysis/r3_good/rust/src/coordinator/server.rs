@@ -1,0 +1,11 @@
+//! Known-good R3: the increment pairs with a release on every path.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn submit(in_flight: &AtomicU64, cap: u64) -> Result<(), ()> {
+    let n = in_flight.fetch_add(1, Ordering::SeqCst);
+    if n >= cap {
+        in_flight.fetch_sub(1, Ordering::SeqCst);
+        return Err(());
+    }
+    Ok(())
+}

@@ -1,0 +1,4 @@
+//! Known-bad R4: unsafe outside tm/simd.rs.
+pub fn read_word(p: *const u64) -> u64 {
+    unsafe { *p }
+}

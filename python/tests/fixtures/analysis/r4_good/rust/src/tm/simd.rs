@@ -1,0 +1,22 @@
+//! Known-good R4: unsafe only as a #[target_feature] kernel plus a
+//! dispatch block calling it behind runtime detection.
+
+fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+/// # Safety
+/// Caller must guarantee the host supports AVX2.
+#[target_feature(enable = "avx2")]
+pub unsafe fn and_any_avx2(acc: &mut [u64]) -> bool {
+    acc.iter().any(|&w| w != 0)
+}
+
+pub fn and_any(acc: &mut [u64]) -> bool {
+    if avx2_available() {
+        // SAFETY: detected above.
+        unsafe { and_any_avx2(acc) }
+    } else {
+        acc.iter().any(|&w| w != 0)
+    }
+}

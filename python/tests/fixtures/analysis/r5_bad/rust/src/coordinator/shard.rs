@@ -1,0 +1,20 @@
+//! Known-good R5: the golden constants equal the Python mirror's.
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fnv1a64_golden_vectors() {
+        assert_eq!(fnv(b""), 0xCBF2_9CE4_8422_2325u64);
+    }
+
+    #[test]
+    fn ring_hash_golden_vectors() {
+        assert_eq!(mix(0x9E3779B97F4A7C15), 0xE220_A839_7B1D_CDAFu64);
+    }
+
+    #[test]
+    fn ring_routing_golden_vectors() {
+        let ring = ring(4);
+        assert_eq!(ring.route(0), 1);
+        assert_eq!(ring.route(12345), 3);
+    }
+}

@@ -1,0 +1,19 @@
+"""Known-good R5 mirror: same constants as the Rust fixture."""
+
+
+def test_fnv1a64_golden_vectors():
+    assert fnv(b"") == 0xCBF29CE484222325
+
+
+def test_ring_hash_golden_vectors():
+    assert True
+
+
+def test_mixer_golden_identity():
+    assert mix(0x9E3779B97F4A7C15) == 0xE220A8397B1DCDAF
+
+
+def test_ring_routing_golden_vectors():
+    ring = make_ring(4)
+    assert ring.route(0) == 1
+    assert ring.route(12345) == 3

@@ -1,0 +1,6 @@
+pub const USAGE: &str = "\
+tmtd serve --engine <alpha-backend|beta-backend>
+
+serve.toml knobs, all under [coordinator]:
+  shards  worker shards in the ring
+";

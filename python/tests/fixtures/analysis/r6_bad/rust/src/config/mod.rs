@@ -1,0 +1,18 @@
+pub struct ServeConfig {
+    pub shards: usize,
+    pub workers: usize,
+}
+
+impl ServeConfig {
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let shards = parse_usize(text, "shards")?;
+        Ok(ServeConfig { shards, workers: 0 })
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.shards == 0 {
+            return Err("shards must be >= 1".into());
+        }
+        Ok(())
+    }
+}

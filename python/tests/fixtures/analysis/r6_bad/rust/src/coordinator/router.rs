@@ -1,0 +1,17 @@
+pub enum Backend {
+    Alpha,
+    Beta,
+    Gamma,
+}
+
+impl Backend {
+    pub const ALL: [Backend; 3] = [Backend::Alpha, Backend::Beta, Backend::Gamma];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Alpha => "alpha-backend",
+            Backend::Beta => "beta-backend",
+            Backend::Gamma => "gamma-backend",
+        }
+    }
+}

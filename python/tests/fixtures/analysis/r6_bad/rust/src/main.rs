@@ -1,0 +1,3 @@
+fn cmd_selfcheck() {
+    println!("backend {} ok", "alpha-backend");
+}

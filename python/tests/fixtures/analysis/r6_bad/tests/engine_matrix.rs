@@ -1,0 +1,4 @@
+#[test]
+fn alpha_only() {
+    run_matrix_row("alpha-backend");
+}

@@ -1,0 +1,7 @@
+//! Known-good R6 USAGE: names every backend and every serve.toml knob.
+pub const USAGE: &str = "\
+tmtd serve --engine <alpha-backend|beta-backend>
+
+serve.toml knobs, all under [coordinator]:
+  shards  worker shards in the ring
+";

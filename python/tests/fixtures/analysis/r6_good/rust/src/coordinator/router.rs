@@ -1,0 +1,16 @@
+//! Known-good R6: a two-backend registry.
+pub enum Backend {
+    Alpha,
+    Beta,
+}
+
+impl Backend {
+    pub const ALL: [Backend; 2] = [Backend::Alpha, Backend::Beta];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Alpha => "alpha-backend",
+            Backend::Beta => "beta-backend",
+        }
+    }
+}

@@ -1,0 +1,5 @@
+fn cmd_selfcheck() {
+    for b in Backend::ALL.iter() {
+        println!("backend {} ok", b.name());
+    }
+}

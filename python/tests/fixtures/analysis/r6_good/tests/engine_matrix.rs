@@ -1,0 +1,6 @@
+#[test]
+fn every_backend_agrees() {
+    for b in Backend::ALL.iter() {
+        run_matrix_row(b);
+    }
+}

@@ -1,0 +1,3 @@
+pub fn first(v: &[u64]) -> u64 {
+    v.first().copied().unwrap()
+}

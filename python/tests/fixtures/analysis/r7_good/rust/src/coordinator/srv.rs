@@ -1,0 +1,4 @@
+//! Known-good R7: one pinned slice-index, nothing else.
+pub fn first(v: &[u64]) -> u64 {
+    v[0]
+}

@@ -1,0 +1,166 @@
+"""The analyzer's own test suite (PR 7).
+
+Three layers:
+
+* fixture conformance — every rule r1-r7 must fire on its known-bad
+  mini-repo under ``fixtures/analysis/`` and stay silent on its
+  known-good twin, so a rule that rots into always-pass (or
+  always-fail) is caught here, not in review;
+* a meta-test — every rule module registers the full contract surface
+  (id, title, fixture pair, check callable) and the fixture pair
+  actually exists on disk;
+* live-tree checks — the real repo is lint-clean end to end, and the
+  r7 ratchet pin matches the tree it claims to describe.
+
+Plain pytest, no JAX, no hypothesis: this file runs on every CI image.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from analysis import engine
+from analysis.rules import ALL_RULES, r1_lock_discipline, r7_ratchet
+
+REPO = Path(__file__).resolve().parents[2]
+FIXTURES = Path(__file__).resolve().parent / "fixtures" / "analysis"
+
+_IDS = [rule.RULE for rule in ALL_RULES]
+
+
+# ---------------------------------------------------------------------------
+# fixture conformance: bad fires, good is silent
+
+
+@pytest.mark.parametrize("rule", ALL_RULES, ids=_IDS)
+def test_rule_fires_on_known_bad_fixture(rule):
+    tree = engine.Tree(FIXTURES / rule.FIXTURE_BAD, fixture=True)
+    findings = rule.check(tree)
+    assert findings, (
+        f"{rule.RULE} reported nothing on its known-bad fixture "
+        f"{rule.FIXTURE_BAD} — the rule has rotted into always-pass"
+    )
+    assert all(f.rule == rule.RULE for f in findings)
+    for f in findings:
+        # Findings must render as clickable file:line references.
+        assert f.render().startswith(f"{f.path}:{f.line} [{rule.RULE}]")
+        assert f.line >= 1
+
+
+@pytest.mark.parametrize("rule", ALL_RULES, ids=_IDS)
+def test_rule_is_silent_on_known_good_fixture(rule):
+    tree = engine.Tree(FIXTURES / rule.FIXTURE_GOOD, fixture=True)
+    findings = rule.check(tree)
+    assert findings == [], (
+        f"{rule.RULE} fired on its known-good fixture "
+        f"{rule.FIXTURE_GOOD}: " + "; ".join(f.render() for f in findings)
+    )
+
+
+# ---------------------------------------------------------------------------
+# meta-test: every rule registers the full contract surface
+
+
+@pytest.mark.parametrize("rule", ALL_RULES, ids=_IDS)
+def test_rule_registers_fixture_pair(rule):
+    for attr in ("RULE", "TITLE", "FIXTURE_GOOD", "FIXTURE_BAD"):
+        assert isinstance(getattr(rule, attr), str) and getattr(rule, attr)
+    assert callable(rule.check)
+    for name in (rule.FIXTURE_GOOD, rule.FIXTURE_BAD):
+        root = FIXTURES / name
+        assert root.is_dir(), f"{rule.RULE} fixture {name} missing"
+        assert any(p.is_file() for p in root.rglob("*")), (
+            f"{rule.RULE} fixture {name} is empty"
+        )
+
+
+def test_rule_ids_and_fixtures_are_unique():
+    assert len(set(_IDS)) == len(ALL_RULES)
+    names = [r.FIXTURE_GOOD for r in ALL_RULES] + [
+        r.FIXTURE_BAD for r in ALL_RULES
+    ]
+    assert len(set(names)) == len(names)
+
+
+# ---------------------------------------------------------------------------
+# suppression semantics
+
+
+def _mini_repo(tmp_path, body):
+    # util/ is outside the r7 ratchet scope, so the only findings are
+    # the ones the body provokes.
+    src = tmp_path / "rust" / "src" / "util"
+    src.mkdir(parents=True)
+    (src / "sync.rs").write_text(body, encoding="utf-8")
+    return engine.Tree(tmp_path, fixture=True)
+
+
+def test_reasoned_allow_suppresses_the_finding(tmp_path):
+    tree = _mini_repo(
+        tmp_path,
+        "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n"
+        "    // lint:allow(r1) this mini-repo exercises suppression\n"
+        "    *m.lock().unwrap()\n"
+        "}\n",
+    )
+    assert engine.run(tree, rules=[r1_lock_discipline]) == []
+
+
+def test_reasonless_allow_is_its_own_finding(tmp_path):
+    tree = _mini_repo(
+        tmp_path,
+        "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n"
+        "    // lint:allow(r1)\n"
+        "    *m.lock().unwrap()\n"
+        "}\n",
+    )
+    findings = engine.run(tree, rules=[r1_lock_discipline])
+    # No reason => no suppression: the original finding survives AND
+    # the naked directive is reported.
+    assert [f.rule for f in findings] == ["allow", "r1"]
+
+
+def test_allow_for_the_wrong_rule_does_not_suppress(tmp_path):
+    tree = _mini_repo(
+        tmp_path,
+        "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n"
+        "    // lint:allow(r4) wrong rule id\n"
+        "    *m.lock().unwrap()\n"
+        "}\n",
+    )
+    assert "r1" in {f.rule for f in engine.run(tree, rules=[r1_lock_discipline])}
+
+
+# ---------------------------------------------------------------------------
+# live tree: the repo itself holds every invariant it documents
+
+
+def test_live_tree_is_lint_clean():
+    findings = engine.run(engine.Tree(REPO))
+    assert findings == [], "live tree has lint findings:\n" + "\n".join(
+        f.render() for f in findings
+    )
+
+
+def test_ratchet_pin_matches_live_tree():
+    pinned = json.loads((REPO / r7_ratchet.RATCHET).read_text("utf-8"))
+    assert pinned == r7_ratchet.live_counts(engine.Tree(REPO)), (
+        "ratchet.json is stale — run python3 -m analysis --update-ratchet "
+        "and review the diff"
+    )
+
+
+def test_cli_entrypoint_exits_zero_on_live_tree():
+    proc = subprocess.run(
+        [sys.executable, "-m", "analysis", str(REPO)],
+        cwd=REPO,
+        env={"PYTHONPATH": str(REPO / "python"), "PATH": "/usr/bin:/bin"},
+        capture_output=True,
+        text=True,
+        check=False,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "lint: OK" in proc.stdout

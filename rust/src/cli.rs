@@ -84,13 +84,13 @@ COMMANDS:
   waveform   Dump VCD waveforms for Figs. 6-8  --out-dir waves/
   serve      Run the serving coordinator demo
              --config serve.toml --requests N [--no-golden] [--shards N]
-             [--simd auto|scalar|portable|avx2|avx512]
+             [--simd auto|scalar|portable|neon|avx2|avx512]
              (--shards N fronts N coordinator shards with a
               deterministic consistent-hash ring; default from config)
   selfcheck  Train + verify every backend agrees on Iris, that the
              packed trainer reproduces the reference trainer
              bit-for-bit, and that every available SIMD lane width
-             (scalar/portable/avx2/avx512) is bit-exact
+             (scalar/portable/neon/avx2/avx512) is bit-exact
   help       Show this text
 
 Backends: golden-multiclass golden-cotm bitpar-multiclass bitpar-cotm
@@ -117,13 +117,26 @@ above that the packed engine (both knobs live under [coordinator] in
 serve.toml). Replies name the concrete engine used; the choice never
 changes the sums.
 
+serve.toml knobs, all under [coordinator]:
+  shards                         front-door shard count (>= 1)
+  workers                        worker threads per coordinator (>= 1)
+  max_batch                      max requests per flushed batch (>= 1)
+  batch_timeout_us               flush deadline for a partial batch
+  queue_depth                    in-flight cap before submit rejects
+  artifacts_dir                  XLA golden-path artifact directory
+  wta                            winner-takes-all arbiter: tba|mesh
+  indexed_density_threshold      auto-* indexed cutoff (0..=1)
+  compressed_density_threshold   auto-* compressed cutoff (0..=1)
+  simd                           lane width (see below)
+
 The packed engines evaluate in SIMD word lanes (`simd` under
 [coordinator], or --simd on serve): \"auto\" (default) picks the widest
 level the host supports at build time — AVX-512 (8x64-bit lanes, needs
-the `avx512` cargo feature), AVX2 (4 lanes), else the portable
-4x-unrolled baseline; \"scalar\" keeps the historic one-word-per-op
-walk. Forcing an undetected level fails at startup. The level only
-changes speed: all levels are bit-exact (see `tmtd selfcheck`).
+the `avx512` cargo feature), AVX2 (4 lanes), NEON on aarch64 (2 lanes),
+else the portable 4x-unrolled baseline; \"scalar\" keeps the historic
+one-word-per-op walk. Forcing an undetected level fails at startup. The
+level only changes speed: all levels are bit-exact (see `tmtd
+selfcheck`).
 ";
 
 #[cfg(test)]

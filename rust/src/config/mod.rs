@@ -45,7 +45,8 @@ pub struct ServeConfig {
     /// [`crate::tm::compressed::PACKED_VS_COMPRESSED_DENSITY`].
     pub compressed_density_threshold: f64,
     /// SIMD lane width the packed engines evaluate through
-    /// (`simd = "auto" | "scalar" | "portable" | "avx2" | "avx512"`).
+    /// (`simd = "auto" | "scalar" | "portable" | "neon" | "avx2" |
+    /// "avx512"`).
     /// `auto` (the default) picks the widest level detected at server
     /// build time; forcing an unavailable level fails the build
     /// cleanly. A speed decision only — the class sums are invariant
@@ -123,7 +124,7 @@ impl ServeConfig {
             let name = v.as_str()?;
             cfg.simd = SimdChoice::parse(name).ok_or_else(|| {
                 crate::Error::config(format!(
-                    "unknown simd level {name:?} (expected auto|scalar|portable|avx2|avx512)"
+                    "unknown simd level {name:?} (expected auto|scalar|portable|neon|avx2|avx512)"
                 ))
             })?;
         }
@@ -228,6 +229,7 @@ mod tests {
             ("auto", SimdChoice::Auto),
             ("scalar", SimdChoice::Forced(SimdLevel::Scalar)),
             ("portable", SimdChoice::Forced(SimdLevel::Portable)),
+            ("neon", SimdChoice::Forced(SimdLevel::Neon)),
             ("avx2", SimdChoice::Forced(SimdLevel::Avx2)),
             ("avx512", SimdChoice::Forced(SimdLevel::Avx512)),
         ] {
@@ -235,7 +237,7 @@ mod tests {
                 TomlDoc::parse(&format!("[coordinator]\nsimd = \"{name}\"\n")).unwrap();
             assert_eq!(ServeConfig::from_toml(&doc).unwrap().simd, want, "{name}");
         }
-        let doc = TomlDoc::parse("[coordinator]\nsimd = \"neon\"\n").unwrap();
+        let doc = TomlDoc::parse("[coordinator]\nsimd = \"sve\"\n").unwrap();
         let err = ServeConfig::from_toml(&doc).unwrap_err();
         assert!(err.to_string().contains("unknown simd level"), "{err}");
         // Default stays auto-dispatch.

@@ -4,8 +4,9 @@
 //! instances with their `Rc` delay codes) lives entirely inside its
 //! thread.
 //!
-//! Panic containment (the `ring_lock` treatment applied to the job
-//! path): a panicking job must not take the serving loop with it. The
+//! Panic containment (the `util::lock_unpoisoned` treatment applied to
+//! the job path): a panicking job must not take the serving loop with
+//! it. The
 //! worker catches the unwind, counts it ([`WorkerPool::panicked`]),
 //! rebuilds its state from the factory (the job may have died halfway
 //! through mutating it), and keeps draining the queue — so one bad
@@ -63,11 +64,7 @@ impl<S: 'static> WorkerPool<S> {
                             // torn the guarded data — recover the guard
                             // instead of cascading the poison into every
                             // later worker iteration.
-                            let guard = match rx.lock() {
-                                Ok(g) => g,
-                                Err(poisoned) => poisoned.into_inner(),
-                            };
-                            guard.recv()
+                            crate::util::lock_unpoisoned(&rx).recv()
                         };
                         match job {
                             Ok(job) => {

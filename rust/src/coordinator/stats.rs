@@ -1,20 +1,10 @@
 //! Serving statistics: lock-light counters + latency accumulators.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, MutexGuard};
+use std::sync::Mutex;
 
 use crate::util::stats::Summary;
-
-/// Lock a sample ring, recovering the guard from a poisoned mutex. The
-/// rings hold plain `f64` samples whose every intermediate state is
-/// valid, so poisoning carries no integrity risk here — but an
-/// unwrapped poisoned lock would turn one panic anywhere in a recording
-/// thread into a panic in *every* later `record_*`/`snapshot`/
-/// `*_samples` call, cascading exactly the failure the batcher's
-/// `catch_unwind` flush guard exists to contain.
-fn ring_lock(ring: &Mutex<SampleRing>) -> MutexGuard<'_, SampleRing> {
-    ring.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
-}
+use crate::util::sync::lock_unpoisoned;
 
 /// Capacity of the bounded sample rings.
 pub const RING: usize = 100_000;
@@ -68,26 +58,26 @@ impl ServerStats {
     }
 
     pub fn record_latency_us(&self, us: f64) {
-        ring_lock(&self.latencies_us).push(us);
+        lock_unpoisoned(&self.latencies_us).push(us);
     }
 
     pub fn record_batch(&self, size: usize) {
         self.batches_flushed.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
-        ring_lock(&self.batch_sizes).push(size as f64);
+        lock_unpoisoned(&self.batch_sizes).push(size as f64);
     }
 
     /// Clone of the retained latency samples — used by the sharded
     /// front door to build an *exact* cross-shard summary instead of
     /// approximating merged percentiles.
     pub fn latency_samples(&self) -> Vec<f64> {
-        ring_lock(&self.latencies_us).buf.clone()
+        lock_unpoisoned(&self.latencies_us).buf.clone()
     }
 
     /// Clone of the retained batch-size samples (see
     /// [`ServerStats::latency_samples`]).
     pub fn batch_size_samples(&self) -> Vec<f64> {
-        ring_lock(&self.batch_sizes).buf.clone()
+        lock_unpoisoned(&self.batch_sizes).buf.clone()
     }
 
     pub fn snapshot(&self) -> StatsSnapshot {
@@ -99,10 +89,10 @@ impl ServerStats {
             batches_flushed: self.batches_flushed.load(Ordering::Relaxed),
             batched_requests: self.batched_requests.load(Ordering::Relaxed),
             mean_batch_size: {
-                let b = ring_lock(&self.batch_sizes);
+                let b = lock_unpoisoned(&self.batch_sizes);
                 Summary::of(&b.buf).map(|s| s.mean).unwrap_or(0.0)
             },
-            latency_us: Summary::of(&ring_lock(&self.latencies_us).buf),
+            latency_us: Summary::of(&lock_unpoisoned(&self.latencies_us).buf),
         }
     }
 }
@@ -217,13 +207,17 @@ mod tests {
         // Deliberately poison both ring mutexes: panic while holding
         // each lock on another thread.
         let s2 = Arc::clone(&s);
+        // lint:allow(r2) the panic IS the test: this thread exists to poison the ring mutex
         let _ = std::thread::spawn(move || {
+            // lint:allow(r1) bare lock held across a deliberate panic is how the ring gets poisoned
             let _guard = s2.latencies_us.lock().unwrap();
             panic!("poison latencies ring");
         })
         .join();
         let s2 = Arc::clone(&s);
+        // lint:allow(r2) the panic IS the test: this thread exists to poison the ring mutex
         let _ = std::thread::spawn(move || {
+            // lint:allow(r1) bare lock held across a deliberate panic is how the ring gets poisoned
             let _guard = s2.batch_sizes.lock().unwrap();
             panic!("poison batch ring");
         })

@@ -21,6 +21,13 @@
 //! Start with [`arch::Architecture`] for the hardware models,
 //! [`tm`] for the ML substrate, and [`coordinator`] for serving.
 
+// Crate-wide panic-safety bar (see docs/INVARIANTS.md): unsafe code is
+// denied everywhere except the audited `#[target_feature]` kernels in
+// `tm/simd.rs`, which opts back in at module level. The same contract
+// is enforced toolchain-less by lint rule R4 and natively by the
+// `[lints.rust]` table in Cargo.toml.
+#![deny(unsafe_code)]
+
 pub mod arch;
 pub mod async_ctrl;
 pub mod cli;

@@ -1,5 +1,7 @@
 //! `tmtd` — the leader binary: train, simulate, evaluate, serve.
 
+#![deny(unsafe_code)]
+
 use tsetlin_td::arch::digital::{
     async_bd_cotm, async_bd_multiclass, sync_cotm, sync_multiclass,
 };
@@ -270,7 +272,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(name) = args.flag("simd") {
         cfg.simd = SimdChoice::parse(name).ok_or_else(|| {
             Error::config(format!(
-                "unknown --simd {name:?} (auto|scalar|portable|avx2|avx512)"
+                "unknown --simd {name:?} (auto|scalar|portable|neon|avx2|avx512)"
             ))
         })?;
     }
@@ -328,6 +330,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_selfcheck(args: &Args) -> Result<()> {
+    // The full backend registry, up front: lint rule R6 holds selfcheck
+    // to covering every routable name, and iterating Backend::ALL keeps
+    // that coverage drift-proof as backends are added.
+    let registered: Vec<&str> = Backend::ALL.iter().map(|b| b.name()).collect();
+    println!("backends registered ({}): {}", registered.len(), registered.join(", "));
     let dataset = data::iris()?;
     let (m, cm) = train_pair(&dataset, 60, 2)?;
     let wta = wta_kind(args)?;

@@ -21,6 +21,10 @@
 //!   the vector paths: the AVX variants are only ever allowed to be
 //!   faster, never different (enforced by `tests/simd_dispatch.rs` and
 //!   the `tmtd selfcheck` lane bars).
+//! * [`SimdLevel::Neon`] — 2×`u64` via `core::arch::aarch64` intrinsics,
+//!   `#[target_feature(enable = "neon")]`-gated, selected only when
+//!   `is_aarch64_feature_detected!("neon")` says the host has it
+//!   (aarch64 servers: Graviton, Ampere, Apple silicon).
 //! * [`SimdLevel::Avx2`] — 4 lanes via `core::arch::x86_64` intrinsics,
 //!   `#[target_feature(enable = "avx2")]`-gated, selected only when
 //!   `is_x86_feature_detected!("avx2")` says the host has it.
@@ -44,6 +48,13 @@
 //! resolves to the portable/scalar pair only, which is what
 //! `scripts/verify.sh`'s portable-only build proves still stands alone.
 
+// The one audited exception to the crate-wide `#![deny(unsafe_code)]`:
+// `#[target_feature]` kernels plus the dispatch blocks that call them
+// behind runtime feature detection. Lint rule R4
+// (`python/analysis/rules/r4_unsafe_audit.py`) checks exactly that
+// shape on every CI image, toolchain or not.
+#![allow(unsafe_code)]
+
 use crate::error::{Error, Result};
 
 /// One evaluation lane width. Ordering is "preference at equal
@@ -55,6 +66,10 @@ pub enum SimdLevel {
     /// Portable 4×`u64` unrolled baseline (bit-exact reference for the
     /// vector paths; compiles on every target).
     Portable,
+    /// NEON, 2×`u64` per 128-bit lane (aarch64, runtime-detected).
+    /// Narrower than the portable unroll but ILP-dense on aarch64
+    /// cores; ordered below AVX2 so x86 hosts never regress.
+    Neon,
     /// AVX2, 4×`u64` per 256-bit lane (x86-64, runtime-detected).
     Avx2,
     /// AVX-512F, 8×`u64` per 512-bit lane (x86-64, runtime-detected,
@@ -63,9 +78,10 @@ pub enum SimdLevel {
 }
 
 impl SimdLevel {
-    pub const ALL: [SimdLevel; 4] = [
+    pub const ALL: [SimdLevel; 5] = [
         SimdLevel::Scalar,
         SimdLevel::Portable,
+        SimdLevel::Neon,
         SimdLevel::Avx2,
         SimdLevel::Avx512,
     ];
@@ -74,6 +90,7 @@ impl SimdLevel {
         match self {
             SimdLevel::Scalar => "scalar",
             SimdLevel::Portable => "portable",
+            SimdLevel::Neon => "neon",
             SimdLevel::Avx2 => "avx2",
             SimdLevel::Avx512 => "avx512",
         }
@@ -83,6 +100,7 @@ impl SimdLevel {
     pub fn lanes(self) -> usize {
         match self {
             SimdLevel::Scalar => 1,
+            SimdLevel::Neon => 2,
             SimdLevel::Portable | SimdLevel::Avx2 => 4,
             SimdLevel::Avx512 => 8,
         }
@@ -93,6 +111,7 @@ impl SimdLevel {
     pub fn is_available(self) -> bool {
         match self {
             SimdLevel::Scalar | SimdLevel::Portable => true,
+            SimdLevel::Neon => neon_available(),
             SimdLevel::Avx2 => avx2_available(),
             SimdLevel::Avx512 => avx512_available(),
         }
@@ -109,6 +128,8 @@ impl SimdLevel {
             SimdLevel::Avx512
         } else if avx2_available() {
             SimdLevel::Avx2
+        } else if neon_available() {
+            SimdLevel::Neon
         } else {
             SimdLevel::Portable
         }
@@ -135,10 +156,21 @@ fn avx512_available() -> bool {
     false
 }
 
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+fn neon_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+#[cfg(not(all(feature = "simd", target_arch = "aarch64")))]
+fn neon_available() -> bool {
+    false
+}
+
 /// The serve-config / CLI dispatch knob (`simd = "auto" | "scalar" |
-/// "portable" | "avx2" | "avx512"`). `Auto` picks the widest detected
-/// level at engine-build time; a forced level errors cleanly at build
-/// time when the host cannot run it (rather than faulting mid-request).
+/// "portable" | "neon" | "avx2" | "avx512"`). `Auto` picks the widest
+/// detected level at engine-build time; a forced level errors cleanly at
+/// build time when the host cannot run it (rather than faulting
+/// mid-request).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum SimdChoice {
     #[default]
@@ -152,6 +184,7 @@ impl SimdChoice {
             "auto" => Some(SimdChoice::Auto),
             "scalar" | "single-word" => Some(SimdChoice::Forced(SimdLevel::Scalar)),
             "portable" | "unrolled" => Some(SimdChoice::Forced(SimdLevel::Portable)),
+            "neon" => Some(SimdChoice::Forced(SimdLevel::Neon)),
             "avx2" => Some(SimdChoice::Forced(SimdLevel::Avx2)),
             "avx512" => Some(SimdChoice::Forced(SimdLevel::Avx512)),
             _ => None,
@@ -238,6 +271,12 @@ impl WordLanes {
         match self.level {
             SimdLevel::Scalar => and_any_scalar(acc, src),
             SimdLevel::Portable => and_any_portable(acc, src),
+            #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+            // SAFETY: WordLanes::new / detect only construct this level
+            // when is_aarch64_feature_detected!("neon") held.
+            SimdLevel::Neon => unsafe { neon::and_any_neon(acc, src) },
+            #[cfg(not(all(feature = "simd", target_arch = "aarch64")))]
+            SimdLevel::Neon => and_any_portable(acc, src),
             #[cfg(all(feature = "simd", target_arch = "x86_64"))]
             // SAFETY: WordLanes::new / detect only construct this level
             // when is_x86_feature_detected!("avx2") held.
@@ -264,6 +303,11 @@ impl WordLanes {
         match self.level {
             SimdLevel::Scalar => violates_scalar(include, literals),
             SimdLevel::Portable => violates_portable(include, literals),
+            #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+            // SAFETY: see and_assign_any.
+            SimdLevel::Neon => unsafe { neon::violates_neon(include, literals) },
+            #[cfg(not(all(feature = "simd", target_arch = "aarch64")))]
+            SimdLevel::Neon => violates_portable(include, literals),
             #[cfg(all(feature = "simd", target_arch = "x86_64"))]
             // SAFETY: see and_assign_any.
             SimdLevel::Avx2 => unsafe { x86::violates_avx2(include, literals) },
@@ -412,6 +456,65 @@ mod x86 {
 }
 
 // ---------------------------------------------------------------------
+// NEON: 2×u64 per 128-bit op (aarch64). Runtime-dispatched; never
+// constructed unless detected.
+// ---------------------------------------------------------------------
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod neon {
+    use core::arch::aarch64::{
+        uint64x2_t, vandq_u64, vbicq_u64, vdupq_n_u64, vgetq_lane_u64, vld1q_u64,
+        vorrq_u64, vst1q_u64,
+    };
+
+    /// # Safety
+    /// Caller must guarantee the host supports NEON.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn and_any_neon(acc: &mut [u64], src: &[u64]) -> bool {
+        let n = acc.len() / 2 * 2;
+        let mut any: uint64x2_t = vdupq_n_u64(0);
+        let mut i = 0;
+        while i < n {
+            let a = vld1q_u64(acc.as_ptr().add(i));
+            let s = vld1q_u64(src.as_ptr().add(i));
+            let r = vandq_u64(a, s);
+            vst1q_u64(acc.as_mut_ptr().add(i), r);
+            any = vorrq_u64(any, r);
+            i += 2;
+        }
+        let mut tail = 0u64;
+        while i < acc.len() {
+            acc[i] &= src[i];
+            tail |= acc[i];
+            i += 1;
+        }
+        (vgetq_lane_u64::<0>(any) | vgetq_lane_u64::<1>(any) | tail) != 0
+    }
+
+    /// # Safety
+    /// Caller must guarantee the host supports NEON.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn violates_neon(include: &[u64], literals: &[u64]) -> bool {
+        let n = include.len() / 2 * 2;
+        let mut i = 0;
+        while i < n {
+            let inc = vld1q_u64(include.as_ptr().add(i));
+            let lw = vld1q_u64(literals.as_ptr().add(i));
+            // vbicq_u64(a, b) computes a & !b, so this is include & !lits.
+            let v = vbicq_u64(inc, lw);
+            if (vgetq_lane_u64::<0>(v) | vgetq_lane_u64::<1>(v)) != 0 {
+                return true;
+            }
+            i += 2;
+        }
+        include[n..]
+            .iter()
+            .zip(&literals[n..])
+            .any(|(&inc, &lw)| inc & !lw != 0)
+    }
+}
+
+// ---------------------------------------------------------------------
 // AVX-512F: 8×u64 per 512-bit op. Behind the off-by-default `avx512`
 // cargo feature (the stabilized intrinsics need rustc >= 1.89).
 // ---------------------------------------------------------------------
@@ -515,12 +618,13 @@ mod tests {
             SimdChoice::parse("scalar"),
             Some(SimdChoice::Forced(SimdLevel::Scalar))
         );
+        assert_eq!(SimdChoice::parse("neon"), Some(SimdChoice::Forced(SimdLevel::Neon)));
         assert_eq!(SimdChoice::parse("avx2"), Some(SimdChoice::Forced(SimdLevel::Avx2)));
         assert_eq!(
             SimdChoice::parse("avx512"),
             Some(SimdChoice::Forced(SimdLevel::Avx512))
         );
-        assert_eq!(SimdChoice::parse("neon"), None);
+        assert_eq!(SimdChoice::parse("sve"), None);
         assert_eq!(SimdChoice::default(), SimdChoice::Auto);
         assert_eq!(SimdChoice::Auto.name(), "auto");
         assert_eq!(SimdChoice::Forced(SimdLevel::Avx2).name(), "avx2");
@@ -534,6 +638,7 @@ mod tests {
     fn lane_widths_are_declared() {
         assert_eq!(SimdLevel::Scalar.lanes(), 1);
         assert_eq!(SimdLevel::Portable.lanes(), 4);
+        assert_eq!(SimdLevel::Neon.lanes(), 2);
         assert_eq!(SimdLevel::Avx2.lanes(), 4);
         assert_eq!(SimdLevel::Avx512.lanes(), 8);
     }

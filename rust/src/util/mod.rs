@@ -1,10 +1,13 @@
 //! Small shared utilities: deterministic PRNG, descriptive statistics,
-//! and plain-text table rendering (no external deps are available offline).
+//! poison-tolerant locking, and plain-text table rendering (no external
+//! deps are available offline).
 
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod table;
 
 pub use rng::SplitMix64;
 pub use stats::Summary;
+pub use sync::lock_unpoisoned;
 pub use table::Table;

@@ -1,0 +1,46 @@
+#!/usr/bin/env bash
+# Native static/dynamic analysis for toolchain-equipped machines — the
+# second enforcement layer behind scripts/lint.sh (which runs the same
+# invariant catalog toolchain-lessly; see docs/INVARIANTS.md):
+#
+#   scripts/analysis.sh            # clippy -D warnings over all targets
+#   RUN_TSAN=1 scripts/analysis.sh # additionally the ThreadSanitizer bar
+#
+# The TSan recipe is the concurrency bar for the direction-1 networked
+# serving work: the coordinator suites (batcher, pool, server, shard,
+# stats) under -Zsanitizer=thread. It needs a nightly toolchain with
+# rust-src (cargo +nightly, -Zbuild-std), so it is opt-in via RUN_TSAN=1
+# and documented here rather than wired into verify.sh.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "analysis.sh: cargo not found on PATH." >&2
+    echo "This image is toolchain-less; the equivalent contracts are" >&2
+    echo "enforced by scripts/lint.sh (python/analysis). Run this script" >&2
+    echo "on a toolchain-equipped machine." >&2
+    exit 1
+fi
+
+echo "== cargo clippy --all-targets -- -D warnings =="
+# [lints.rust]/[lints.clippy] in Cargo.toml carry the per-lint levels;
+# -D warnings promotes everything else that fires.
+cargo clippy --all-targets -- -D warnings
+
+echo "== cargo clippy --no-default-features (portable-only) =="
+cargo clippy --all-targets --no-default-features -- -D warnings
+
+if [ "${RUN_TSAN:-0}" = "1" ]; then
+    echo "== ThreadSanitizer: coordinator suites =="
+    # Nightly-only: TSan instruments std too, hence -Zbuild-std.
+    RUSTFLAGS="-Zsanitizer=thread" \
+        cargo +nightly test -Zbuild-std --target x86_64-unknown-linux-gnu \
+        --lib coordinator::
+    RUSTFLAGS="-Zsanitizer=thread" \
+        cargo +nightly test -Zbuild-std --target x86_64-unknown-linux-gnu \
+        --test coordinator_props
+else
+    echo "(set RUN_TSAN=1 for the ThreadSanitizer pass — needs nightly + rust-src)"
+fi
+
+echo "analysis.sh: OK"

@@ -6,10 +6,10 @@
 #
 #   scripts/bench_record.sh [label] [out-file]
 #
-# The output file defaults to BENCH_PR6.json and can be overridden by
+# The output file defaults to BENCH_PR7.json and can be overridden by
 # the second positional argument or the BENCH_OUT environment variable
-# (argument wins). Earlier PRs recorded to BENCH_PR3.json /
-# BENCH_PR4.json / BENCH_PR5.json; those files stay as recorded history.
+# (argument wins). Earlier PRs recorded to BENCH_PR3.json ..
+# BENCH_PR6.json; those files stay as recorded history.
 #
 # Needs a Rust toolchain; the CI image carries none (see ROADMAP.md), so
 # run this on a toolchain-equipped machine and commit the appended entry.
@@ -17,7 +17,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 LABEL="${1:-$(git rev-parse --short HEAD 2>/dev/null || echo unlabelled)}"
-OUT="${2:-${BENCH_OUT:-BENCH_PR6.json}}"
+OUT="${2:-${BENCH_OUT:-BENCH_PR7.json}}"
 
 if ! command -v cargo >/dev/null 2>&1; then
     echo "bench_record.sh: cargo not found on PATH." >&2

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Toolchain-less static-analysis tier (the first stage of verify.sh):
+#
+#   scripts/lint.sh [-- extra args for python3 -m analysis]
+#
+# Runs the python/analysis rule engine (rules r1-r7, see
+# docs/INVARIANTS.md) over the Rust tree. Needs only python3 — no Rust
+# toolchain, no pip packages — so it is the one machine check of the
+# concurrency/panic-safety/parity contracts that runs on every CI
+# image. Exit 0 means every rule is clean.
+#
+# To re-pin the r7 panic-path ratchet after a reviewed change:
+#   scripts/lint.sh --update-ratchet
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v python3 >/dev/null 2>&1; then
+    echo "lint.sh: python3 not found; the analysis tier cannot run." >&2
+    exit 1
+fi
+
+PYTHONPATH="python${PYTHONPATH:+:$PYTHONPATH}" exec python3 -m analysis "$@"

@@ -1,9 +1,13 @@
 #!/usr/bin/env bash
 # Tier-1 verify + bench compilation, as one command:
 #
-#   scripts/verify.sh
+#   scripts/verify.sh [--python-only]
 #
-# Runs: the Python tier FIRST (JAX kernels, the consistent-hash-ring
+# Runs: the static-analysis lint tier FIRST (scripts/lint.sh — the
+# toolchain-less enforcement of the invariant catalog in
+# docs/INVARIANTS.md: lock discipline, panic containment, slot
+# accounting, unsafe audit, golden-vector parity, registry coverage,
+# the panic-path ratchet), then the Python tier (JAX kernels, the consistent-hash-ring
 # mirror, the inverted-index counter-sweep mirror, the compressed
 # include-list-walk mirror with its shared golden vectors, the
 # packed-trainer mirror with its same-seed bit-identity invariant, and
@@ -18,8 +22,22 @@
 # reference must keep compiling and passing on its own), and cargo
 # bench --no-run (benches are plain `harness = false` mains — `--no-run`
 # proves they compile without paying their full runtime).
+#
+# --python-only exits 0 after the lint + Python tiers, so toolchain-less
+# CI images report a clean pass instead of hard-failing on missing cargo.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+PYTHON_ONLY=0
+for arg in "$@"; do
+    case "$arg" in
+        --python-only) PYTHON_ONLY=1 ;;
+        *) echo "verify.sh: unknown argument $arg" >&2; exit 2 ;;
+    esac
+done
+
+echo "== scripts/lint.sh (static-analysis tier) =="
+scripts/lint.sh
 
 if command -v python3 >/dev/null 2>&1 && python3 -c "import pytest" >/dev/null 2>&1; then
     echo "== pytest python/tests =="
@@ -28,10 +46,16 @@ else
     echo "verify.sh: pytest not found; skipping the Python tier." >&2
 fi
 
+if [ "$PYTHON_ONLY" = "1" ]; then
+    echo "verify.sh: OK (lint + Python tiers; --python-only skipped the Rust tiers)"
+    exit 0
+fi
+
 if ! command -v cargo >/dev/null 2>&1; then
     echo "verify.sh: cargo not found on PATH." >&2
     echo "This image carries only the Python/JAX side of the stack; the" >&2
     echo "Rust tier-1 suite needs a Rust toolchain (rustup default stable)." >&2
+    echo "(Use --python-only for a clean pass on toolchain-less images.)" >&2
     exit 1
 fi
 

@@ -14,6 +14,7 @@ use tsetlin_td::coordinator::shard::{hash_features, hash_key, HashRing, DEFAULT_
 use tsetlin_td::coordinator::stats::ServerStats;
 use tsetlin_td::coordinator::{Backend, CoordinatorServer, InferRequest, ShardedCoordinator};
 use tsetlin_td::testutil::{prop, Gen};
+use tsetlin_td::util::lock_unpoisoned;
 use tsetlin_td::tm::{cotm_train::train_cotm, data, train::train_multiclass, TmParams};
 
 fn models() -> (tsetlin_td::tm::MultiClassTmModel, tsetlin_td::tm::CoTmModel, data::Dataset) {
@@ -68,7 +69,7 @@ fn batcher_never_exceeds_max_batch() {
             stats,
             Arc::new(AtomicU64::new(u64::MAX / 2)),
             move |batch: &[Pending<u64, u64>]| {
-                seen2.lock().unwrap().push(batch.len());
+                lock_unpoisoned(&seen2).push(batch.len());
                 batch.iter().map(|p| Ok(p.item)).collect()
             },
         )
@@ -78,7 +79,7 @@ fn batcher_never_exceeds_max_batch() {
             rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
         }
         b.shutdown();
-        for &size in seen.lock().unwrap().iter() {
+        for &size in lock_unpoisoned(&seen).iter() {
             assert!(size <= max_batch, "batch {size} > max {max_batch}");
             assert!(size >= 1);
         }

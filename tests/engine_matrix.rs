@@ -298,3 +298,22 @@ fn auto_threshold_pairs_never_change_served_outputs() {
         }
     });
 }
+
+/// The registry itself is part of the matrix: every backend the router
+/// registers must round-trip through its public name (the wire/CLI
+/// identity), names must be unique, and the registry must not silently
+/// grow or shrink — lint rule R6 holds USAGE and selfcheck to this same
+/// list, and iterating `Backend::ALL` here keeps the coverage
+/// drift-proof as backends are added.
+#[test]
+fn registry_names_roundtrip_across_all_backends() {
+    let mut seen = std::collections::BTreeSet::new();
+    for b in Backend::ALL {
+        let name = b.name();
+        assert!(!name.is_empty());
+        assert_eq!(Backend::parse(name), Some(b), "{name} must round-trip");
+        assert!(seen.insert(name), "duplicate backend name {name}");
+    }
+    assert_eq!(Backend::ALL.len(), 16, "registry changed: update USAGE, selfcheck and this count");
+    assert_eq!(Backend::parse("no-such-backend"), None);
+}
