@@ -1,0 +1,272 @@
+//! Compiled vs uncompiled serving — does the load-time compile pass
+//! (`tm/compile.rs`) pay for itself at inference time?
+//!
+//! Two synthetic models per family: a fully-live one (the pass can
+//! only help via plan selection / reordering, so parity is the bar)
+//! and a 50 %-dead one, where half the clauses are dead on arrival
+//! (alternating all-exclude and contradictory) — the shape real
+//! trained TMs drift toward, and where dead-clause elimination must
+//! show up directly in µs/sample. "Uncompiled" is `CompileMode::Off`
+//! (dead clauses kept, model order), so both sides run the identical
+//! engine code and the delta isolates the compile products.
+//!
+//! Prints µs/sample for every engine family in all three modes plus a
+//! PASS/FAIL line: prune must be ≥ 1.3× off on the 50 %-dead model
+//! for both packed engines (the dead half is pure overhead there).
+//!
+//! Run: `cargo bench --bench compile_effect`
+
+use std::time::Instant;
+
+use tsetlin_td::tm::infer::{cotm_class_sums, multiclass_class_sums};
+use tsetlin_td::tm::{
+    BatchEngine, BitParallelCotm, BitParallelMulticlass, ClauseMask, CoTmModel,
+    CompileMode, CompressedCotm, CompressedMulticlass, IndexedCotm,
+    IndexedMulticlass, ModelCompiler, MultiClassTmModel, TmParams,
+};
+use tsetlin_td::util::{SplitMix64, Table};
+
+const SPEEDUP_BAR: f64 = 1.3;
+
+/// Time `f` over `reps` repetitions of `samples` samples; µs/sample.
+fn time_us_per_sample(samples: usize, reps: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warm-up
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() * 1e6 / (reps * samples) as f64
+}
+
+fn random_mask(rng: &mut SplitMix64, literals: usize, density: f64) -> ClauseMask {
+    ClauseMask { include: (0..literals).map(|_| rng.chance(density)).collect() }
+}
+
+/// Dead mask in one of the two exact-prune shapes: all-exclude, or a
+/// contradictory pair on top of random includes.
+fn dead_mask(rng: &mut SplitMix64, literals: usize, density: f64, all_exclude: bool) -> ClauseMask {
+    if all_exclude {
+        return ClauseMask { include: vec![false; literals] };
+    }
+    let mut m = random_mask(rng, literals, density);
+    let pair = 2 * (rng.next_below(literals as u64 / 2) as usize);
+    m.include[pair] = true;
+    m.include[pair + 1] = true;
+    m
+}
+
+fn synthetic_multiclass(
+    f: usize,
+    c: usize,
+    k: usize,
+    density: f64,
+    dead_fraction: f64,
+    seed: u64,
+) -> MultiClassTmModel {
+    let p = TmParams { features: f, clauses: c, classes: k, ..TmParams::iris_paper() };
+    let mut rng = SplitMix64::new(seed);
+    let mut m = MultiClassTmModel::zeroed(p);
+    for class in &mut m.clauses {
+        for (j, clause) in class.iter_mut().enumerate() {
+            *clause = if rng.chance(dead_fraction) {
+                dead_mask(&mut rng, 2 * f, density, j % 2 == 0)
+            } else {
+                random_mask(&mut rng, 2 * f, density)
+            };
+        }
+    }
+    m
+}
+
+fn synthetic_cotm(
+    f: usize,
+    c: usize,
+    k: usize,
+    density: f64,
+    dead_fraction: f64,
+    seed: u64,
+) -> CoTmModel {
+    let p = TmParams { features: f, clauses: c, classes: k, ..TmParams::iris_paper() };
+    let mut rng = SplitMix64::new(seed);
+    let mut m = CoTmModel::zeroed(p.clone());
+    for (j, clause) in m.clauses.iter_mut().enumerate() {
+        *clause = if rng.chance(dead_fraction) {
+            dead_mask(&mut rng, 2 * f, density, j % 2 == 0)
+        } else {
+            random_mask(&mut rng, 2 * f, density)
+        };
+    }
+    for row in &mut m.weights {
+        for w in row.iter_mut() {
+            *w = rng.next_below(2 * p.max_weight as u64 + 1) as i32 - p.max_weight;
+        }
+    }
+    m
+}
+
+fn random_samples(f: usize, n: usize, seed: u64) -> Vec<Vec<bool>> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| (0..f).map(|_| rng.next_bool()).collect()).collect()
+}
+
+fn compiler_for(mode: CompileMode, features: usize) -> ModelCompiler {
+    let c = ModelCompiler::new(mode);
+    if mode == CompileMode::Full {
+        c.with_synthetic_calibration(features, 64, 11)
+    } else {
+        c
+    }
+}
+
+const MODES: [CompileMode; 3] = [CompileMode::Off, CompileMode::Prune, CompileMode::Full];
+
+fn main() {
+    println!("== compile_effect: compiled vs uncompiled serving ==");
+    let (f, c, k) = (256usize, 512usize, 4usize);
+    let xs = random_samples(f, 128, 9);
+    let n = xs.len();
+
+    let mut t = Table::new(vec![
+        "model / engine",
+        "off us/sample",
+        "prune",
+        "full",
+        "prune/off",
+        "live/total",
+    ]);
+    // prune-vs-off speedups for the PASS/FAIL verdict, keyed by row label.
+    let mut verdicts: Vec<(String, f64)> = Vec::new();
+
+    for (label, dead_fraction) in [("live", 0.0), ("50%-dead", 0.5)] {
+        let m = synthetic_multiclass(f, c, k, 0.08, dead_fraction, 7);
+        let cm = synthetic_cotm(f, c, k, 0.08, dead_fraction, 21);
+
+        // One compiled artifact pair per mode; all engines share it,
+        // like the server.
+        let mc = MODES.map(|mode| {
+            compiler_for(mode, f).compile_multiclass(&m).expect("valid model")
+        });
+        let co = MODES.map(|mode| {
+            compiler_for(mode, f).compile_cotm(&cm).expect("valid model")
+        });
+        let live = format!(
+            "{}/{}",
+            mc[0].stats.live_clauses, mc[0].stats.total_clauses
+        );
+
+        // Sanity first: a speedup over wrong answers is worthless —
+        // every mode must serve the reference sums.
+        for x in xs.iter().take(4) {
+            let want_mc = multiclass_class_sums(&m, x);
+            let want_co = cotm_class_sums(&cm, x);
+            for (cmc, cco) in mc.iter().zip(co.iter()) {
+                let bp = BitParallelMulticlass::from_compiled(cmc).expect("compiled");
+                assert_eq!(bp.class_sums(x), want_mc, "{label} {:?}", cmc.mode);
+                let bpc = BitParallelCotm::from_compiled(cco).expect("compiled");
+                assert_eq!(bpc.class_sums(x), want_co, "{label} {:?}", cco.mode);
+            }
+        }
+
+        let mut bench = |engine: &str, us: [f64; 3], live: &str| {
+            let speedup = us[0] / us[1];
+            t.row(vec![
+                format!("{label} {engine}"),
+                format!("{:.2}", us[0]),
+                format!("{:.2} ({speedup:.2}x)", us[1]),
+                format!("{:.2} ({:.2}x)", us[2], us[0] / us[2]),
+                format!("{speedup:.2}x"),
+                live.into(),
+            ]);
+            verdicts.push((format!("{label} {engine}"), speedup));
+        };
+
+        bench(
+            "bitpar-mc",
+            mc.each_ref().map(|cmc| {
+                let e = BitParallelMulticlass::from_compiled(cmc).expect("compiled");
+                time_us_per_sample(n, 10, || {
+                    std::hint::black_box(e.infer_batch(&xs));
+                })
+            }),
+            &live,
+        );
+        bench(
+            "bitpar-co",
+            co.each_ref().map(|cco| {
+                let e = BitParallelCotm::from_compiled(cco).expect("compiled");
+                time_us_per_sample(n, 10, || {
+                    std::hint::black_box(e.infer_batch(&xs));
+                })
+            }),
+            &live,
+        );
+        bench(
+            "indexed-mc",
+            mc.each_ref().map(|cmc| {
+                let e = IndexedMulticlass::from_compiled(cmc).expect("compiled");
+                time_us_per_sample(n, 10, || {
+                    std::hint::black_box(e.infer_batch(&xs));
+                })
+            }),
+            &live,
+        );
+        bench(
+            "indexed-co",
+            co.each_ref().map(|cco| {
+                let e = IndexedCotm::from_compiled(cco).expect("compiled");
+                time_us_per_sample(n, 10, || {
+                    std::hint::black_box(e.infer_batch(&xs));
+                })
+            }),
+            &live,
+        );
+        bench(
+            "compressed-mc",
+            mc.each_ref().map(|cmc| {
+                let e = CompressedMulticlass::from_compiled(cmc).expect("compiled");
+                time_us_per_sample(n, 10, || {
+                    std::hint::black_box(e.infer_batch(&xs));
+                })
+            }),
+            &live,
+        );
+        bench(
+            "compressed-co",
+            co.each_ref().map(|cco| {
+                let e = CompressedCotm::from_compiled(cco).expect("compiled");
+                time_us_per_sample(n, 10, || {
+                    std::hint::black_box(e.infer_batch(&xs));
+                })
+            }),
+            &live,
+        );
+    }
+
+    println!("{}", t.render());
+    println!(
+        "model: {f} features, {c} clauses(/class), {k} classes; batch {n}; \
+         include density 0.08; full mode calibrated on 64 synthetic samples"
+    );
+
+    // The bar applies where pruning removes real work: the packed
+    // engines scan every stored clause, so a 50%-dead model must serve
+    // >= {SPEEDUP_BAR}x faster once pruned. (Indexed/compressed walks
+    // already skip empty clauses, so their delta is reported but not
+    // gated — all-exclude dead clauses cost them nothing to begin
+    // with.)
+    let gated: Vec<&(String, f64)> = verdicts
+        .iter()
+        .filter(|(name, _)| name.starts_with("50%-dead bitpar"))
+        .collect();
+    let ok = gated.iter().all(|(_, s)| *s >= SPEEDUP_BAR);
+    for (name, s) in &gated {
+        println!("  {name}: prune/off {s:.2}x (bar {SPEEDUP_BAR}x)");
+    }
+    println!(
+        "verdict: {}",
+        if ok { "PASS" } else { "FAIL" }
+    );
+    if !ok {
+        std::process::exit(1);
+    }
+}

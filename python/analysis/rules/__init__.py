@@ -21,6 +21,7 @@ from . import (
     r5_golden_drift,
     r6_registry_coverage,
     r7_ratchet,
+    r8_compile_pipeline,
 )
 
 ALL_RULES = [
@@ -31,4 +32,5 @@ ALL_RULES = [
     r5_golden_drift,
     r6_registry_coverage,
     r7_ratchet,
+    r8_compile_pipeline,
 ]

@@ -37,6 +37,7 @@ _TYPE_VALIDATED = {
     "wta": "enum parse rejects unknown kinds",
     "simd": "SimdChoice::parse rejects unknown level names",
     "batch_timeout_us": "every u64 is a legal timeout",
+    "compile": "CompileMode::parse rejects unknown mode names",
 }
 
 # Matches raw source ("Backend::ALL") and token-joined fn-body text,

@@ -1,0 +1,121 @@
+"""R8 — compile pipeline: the serving path builds engines from the
+shared compiled artifact, never from raw models.
+
+PR 8 moved dead-clause pruning, fire-order clause reordering, and
+per-clause plan selection into one load-time compile pass
+(``tm/compile.rs``). Two drift hazards follow:
+
+* ``server.rs`` regrows a direct ``<Engine>::from_model(..)`` call —
+  the model is then compiled once per engine family (or not at all),
+  ``auto-*`` selection reads a density the engines don't share, and a
+  non-default ``compile`` mode silently bypasses those backends.
+* an engine's ``from_model`` convenience constructor stops routing
+  through ``from_compiled`` — the engine regrows a private prune/plan
+  heuristic and the bit-for-bit artifact contract splits per family.
+
+So, in non-test code: ``server.rs`` must run ``ModelCompiler`` and
+build engines via ``from_compiled`` only, and every ``from_model``
+constructor in the engine files must delegate to ``from_compiled``.
+Deliberate exceptions carry ``// lint:allow(r8) <reason>``.
+"""
+
+from .. import rslex
+from ..engine import Finding
+
+RULE = "r8"
+TITLE = "compile pipeline: serving engines build from the compiled artifact"
+FIXTURE_GOOD = "r8_good"
+FIXTURE_BAD = "r8_bad"
+
+SERVER = "rust/src/coordinator/server.rs"
+ENGINES = (
+    "rust/src/tm/fast_infer.rs",
+    "rust/src/tm/index.rs",
+    "rust/src/tm/compressed.rs",
+)
+
+
+def _non_test_tokens(tree, rel):
+    toks, _ = tree.lexed(rel)
+    spans = rslex.cfg_test_spans(toks)
+    return toks, spans
+
+
+def _check_server(tree):
+    out = []
+    toks, test_spans = _non_test_tokens(tree, SERVER)
+    live = [t for t in toks if not rslex.in_spans(t.line, test_spans)]
+    for t in live:
+        if t.kind == "ident" and t.text == "from_model":
+            out.append(
+                Finding(
+                    RULE,
+                    SERVER,
+                    t.line,
+                    "serving path builds an engine from a raw model — route "
+                    "through ModelCompiler/from_compiled so prune, reorder "
+                    "and plan selection run once per model, not per engine",
+                )
+            )
+    idents = {t.text for t in live if t.kind == "ident"}
+    if "from_compiled" not in idents:
+        out.append(
+            Finding(
+                RULE,
+                SERVER,
+                1,
+                "server.rs never builds an engine from_compiled — the "
+                "serving path bypasses the compile pass entirely",
+            )
+        )
+    elif "ModelCompiler" not in idents:
+        out.append(
+            Finding(
+                RULE,
+                SERVER,
+                1,
+                "server.rs consumes compiled artifacts but never runs "
+                "ModelCompiler — the compile-mode knob cannot take effect",
+            )
+        )
+    return out
+
+
+def _check_engine(tree, rel):
+    out = []
+    toks, test_spans = _non_test_tokens(tree, rel)
+    for name, fi, b0, b1 in rslex.fn_spans(toks):
+        if name != "from_model" or rslex.in_spans(toks[fi].line, test_spans):
+            continue
+        body = {t.text for t in toks[b0 : b1 + 1] if t.kind == "ident"}
+        if "from_compiled" not in body:
+            out.append(
+                Finding(
+                    RULE,
+                    rel,
+                    toks[fi].line,
+                    "from_model does not delegate to from_compiled — the "
+                    "engine is rebuilding its own prune/plan pipeline "
+                    "outside the shared compile pass",
+                )
+            )
+    return out
+
+
+def check(tree):
+    surfaces = (SERVER,) + ENGINES
+    missing = [rel for rel in surfaces if not tree.exists(rel)]
+    if missing and not tree.fixture:
+        return [
+            Finding(
+                RULE, rel, 1, "compile-pipeline surface missing from the live tree"
+            )
+            for rel in missing
+        ]
+    out = []
+    if tree.exists(SERVER):
+        out.extend(_check_server(tree))
+    for rel in ENGINES:
+        if tree.exists(rel):
+            out.extend(_check_engine(tree, rel))
+    return out

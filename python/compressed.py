@@ -77,8 +77,19 @@ class CompressedModel:
     def postings(self):
         return len(self.literals)
 
+    def live_clauses(self):
+        """Clauses with a non-empty include list (mirrors
+        ``CompressedModel::live_clauses`` over the CSR offsets)."""
+        return sum(
+            1
+            for c in range(self.num_clauses())
+            if self.offsets[c + 1] > self.offsets[c]
+        )
+
     def density(self):
-        total = self.num_clauses() * 2 * self.features
+        """Included-literal density over **live** clauses only (see
+        ``invindex.InvertedIndex.density`` for the rationale)."""
+        total = self.live_clauses() * 2 * self.features
         return self.postings() / total if total else 0.0
 
     def literal_frequencies(self):

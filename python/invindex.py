@@ -56,8 +56,17 @@ class InvertedIndex:
     def postings(self):
         return sum(self.required)
 
+    def live_clauses(self):
+        """Clauses that include at least one literal (dead all-exclude
+        clauses never fire and carry no postings)."""
+        return sum(1 for r in self.required if r > 0)
+
     def density(self):
-        total = self.num_clauses() * 2 * self.features
+        """Included-literal density over **live** clauses only, mirroring
+        ``InvertedIndex::density`` in index.rs: dead clauses contribute
+        no postings, so counting them in the denominator dilutes the
+        density and skews the three-way ``auto-*`` crossover."""
+        total = self.live_clauses() * 2 * self.features
         return self.postings() / total if total else 0.0
 
     def sweep(self, sample):

@@ -1,0 +1,309 @@
+"""Python mirror of the load-time model compilation pass.
+
+Mirrors ``rust/src/tm/compile.rs`` algorithm-for-algorithm so the
+prune/reorder/plan/stats logic can be validated (hand-worked oracles,
+cross-language golden vectors, randomized differential tests against
+the direct evaluator) on CI images that carry no Rust toolchain — the
+same arrangement as ``invindex.py`` / ``compressed.py`` for the serving
+engines. Any change to the Rust compile pass must be replayed here and
+in both golden-vector test suites.
+
+Algorithm (arXiv 2510.15653, model-specialized inference)
+---------------------------------------------------------
+Trained models, not engines, decide the fast representation: the
+compiler turns a trained model into a compiled artifact every engine
+family builds from, with four products:
+
+1. **Dead-clause elimination** — an *all-exclude* clause never fires at
+   inference, and a *contradictory* clause (including both ``x_i`` and
+   ``not x_i``) can never see all its literals satisfied because
+   exactly one of each interleaved pair is set per sample. Both
+   contribute exactly 0 to every class sum, so pruning is exact.
+2. **Fire-probability clause reordering** (mode ``"full"``) over an
+   optional calibration batch: descending fire count, ties broken by
+   ascending source clause id — fully deterministic, output-invariant.
+3. **A per-clause execution plan** (``"skip"`` vs ``"sweep"``) from the
+   clause's include-word density, by the same rule as
+   ``bitpack::prefers_lane_sweep``.
+4. **Compile-time stats** (post-prune density over live clauses,
+   postings, clause-length histogram) — the ``auto-*`` selection input.
+
+The multiclass vote polarity is the **source** index parity (Eq. 1),
+frozen into the artifact so pruning/reordering cannot skew sums; CoTM
+weight columns follow their clause through prune + reorder the same
+way.
+"""
+
+from invindex import make_literals
+from packedtrain import SplitMix64
+
+# Clause-length histogram buckets: bucket min(len * 8 // 2F, 7).
+HIST_BUCKETS = 8
+
+# The shared plan rule (bitpack.rs: LANE_SWEEP_MIN_NONZERO): lane-sweep
+# iff nonzero_words >= 8 and 2 * nonzero_words >= words.
+LANE_SWEEP_MIN_NONZERO = 8
+WORD_BITS = 64
+
+MODES = ("off", "prune", "full")
+PLANS = ("skip", "sweep")
+
+
+def prefers_lane_sweep(nonzero_words, words):
+    """Mirror of ``bitpack::prefers_lane_sweep``."""
+    return (
+        nonzero_words >= LANE_SWEEP_MIN_NONZERO and 2 * nonzero_words >= words
+    )
+
+
+def words_for(bits):
+    return (bits + WORD_BITS - 1) // WORD_BITS
+
+
+def dead_reason(mask):
+    """``"all_exclude"``, ``"contradictory"`` or ``None`` — all-exclude
+    takes precedence, like ``compile::dead_reason``."""
+    if not any(mask):
+        return "all_exclude"
+    for i in range(0, len(mask) - 1, 2):
+        if mask[i] and mask[i + 1]:
+            return "contradictory"
+    return None
+
+
+def plan_for_mask(mask):
+    """Execution plan from include-word density (``plan_for_mask``)."""
+    words = words_for(len(mask))
+    nonzero = sum(
+        1
+        for w in range(words)
+        if any(mask[w * WORD_BITS : (w + 1) * WORD_BITS])
+    )
+    return "sweep" if prefers_lane_sweep(nonzero, words) else "skip"
+
+
+def evaluate_mask(mask, lits):
+    """``ClauseMask::evaluate``: empty clauses output 0 at inference;
+    otherwise AND over the included literals."""
+    if not any(mask):
+        return False
+    return all(lit for inc, lit in zip(mask, lits) if inc)
+
+
+class CompiledClause:
+    """One live clause in execution order: include mask, original
+    (source) clause id, execution plan."""
+
+    def __init__(self, mask, source, plan):
+        self.mask = mask
+        self.source = source
+        self.plan = plan
+
+
+class CompileStats:
+    """Mirror of ``compile::CompileStats`` — an intrinsic property of
+    the model, identical whatever mode ran."""
+
+    def __init__(self):
+        self.total_clauses = 0
+        self.live_clauses = 0
+        self.dead_all_exclude = 0
+        self.dead_contradictory = 0
+        self.postings = 0
+        self.density = 0.0
+        self.lane_sweep_clauses = 0
+        self.skip_list_clauses = 0
+        self.length_histogram = [0] * HIST_BUCKETS
+
+    @classmethod
+    def from_masks(cls, literals, masks):
+        s = cls()
+        for mask in masks:
+            s.total_clauses += 1
+            reason = dead_reason(mask)
+            if reason == "all_exclude":
+                s.dead_all_exclude += 1
+            elif reason == "contradictory":
+                s.dead_contradictory += 1
+            else:
+                s.live_clauses += 1
+                length = sum(1 for b in mask if b)
+                s.postings += length
+                if plan_for_mask(mask) == "sweep":
+                    s.lane_sweep_clauses += 1
+                else:
+                    s.skip_list_clauses += 1
+                bucket = (
+                    0
+                    if literals == 0
+                    else min(length * HIST_BUCKETS // literals, HIST_BUCKETS - 1)
+                )
+                s.length_histogram[bucket] += 1
+        if s.live_clauses > 0 and literals > 0:
+            s.density = s.postings / (s.live_clauses * literals)
+        return s
+
+
+class CompiledMulticlass:
+    """``[class] -> live clauses`` in execution order, with explicit
+    per-clause vote polarity frozen from the source index parity."""
+
+    def __init__(self, features, classes, polarities, stats, mode):
+        self.features = features
+        self.classes = classes
+        self.polarities = polarities
+        self.stats = stats
+        self.mode = mode
+
+    def source_orders(self):
+        """Per-class execution order as source ids — the cross-language
+        reorder golden."""
+        return [[cc.source for cc in cls] for cls in self.classes]
+
+    def class_sums(self, sample):
+        """Direct walk of the compiled artifact (mask evaluate +
+        explicit polarity) — the bit-identity reference."""
+        lits = make_literals(sample)
+        sums = []
+        for cls, pols in zip(self.classes, self.polarities):
+            s = 0
+            for cc, pol in zip(cls, pols):
+                if evaluate_mask(cc.mask, lits):
+                    s += pol
+            sums.append(s)
+        return sums
+
+
+class CompiledCotm:
+    """The shared live clause pool in execution order plus explicit
+    per-clause weight columns (permuted in lockstep)."""
+
+    def __init__(self, features, classes, clauses, weight_cols, stats, mode):
+        self.features = features
+        self.classes = classes
+        self.clauses = clauses
+        self.weight_cols = weight_cols
+        self.stats = stats
+        self.mode = mode
+
+    def source_order(self):
+        return [cc.source for cc in self.clauses]
+
+    def class_sums(self, sample):
+        lits = make_literals(sample)
+        sums = [0] * self.classes
+        for cc, col in zip(self.clauses, self.weight_cols):
+            if evaluate_mask(cc.mask, lits):
+                for k, w in enumerate(col):
+                    sums[k] += w
+        return sums
+
+
+class ModelCompiler:
+    """Mirror of ``compile::ModelCompiler``: construct with a mode,
+    optionally add a calibration batch, then compile."""
+
+    def __init__(self, mode="prune"):
+        if mode not in MODES:
+            raise ValueError(f"unknown compile mode {mode!r}")
+        self.mode = mode
+        self.calibration = None
+
+    def with_calibration(self, rows):
+        self.calibration = rows
+        return self
+
+    def with_synthetic_calibration(self, features, samples, seed):
+        """Deterministic synthetic batch — the same SplitMix64
+        ``next_bool`` stream the Rust server draws for
+        ``compile = "full"``."""
+        rng = SplitMix64(seed)
+        self.calibration = [
+            [rng.next_bool() for _ in range(features)] for _ in range(samples)
+        ]
+        return self
+
+    def _check_calibration(self, features):
+        if self.calibration is not None:
+            for i, row in enumerate(self.calibration):
+                if len(row) != features:
+                    raise ValueError(
+                        f"calibration row {i} width {len(row)} != F={features}"
+                    )
+
+    def _fire_counts(self, clauses):
+        if self.calibration is None:
+            return None
+        lits = [make_literals(r) for r in self.calibration]
+        return [
+            sum(1 for l in lits if evaluate_mask(cc.mask, l)) for cc in clauses
+        ]
+
+    def _reorder(self, clauses):
+        """Descending fire count, ties by ascending source id — the
+        deterministic key of ``ModelCompiler::reorder``."""
+        if self.mode != "full":
+            return clauses
+        fires = self._fire_counts(clauses)
+        if fires is None:
+            return clauses
+        order = sorted(
+            range(len(clauses)), key=lambda i: (-fires[i], clauses[i].source)
+        )
+        return [clauses[i] for i in order]
+
+    def _emit(self, masks):
+        """Live clauses in model order (``"off"`` keeps dead ones)."""
+        return [
+            CompiledClause(list(mask), j, plan_for_mask(mask))
+            for j, mask in enumerate(masks)
+            if self.mode == "off" or dead_reason(mask) is None
+        ]
+
+    def compile_multiclass(self, clauses):
+        # clauses: [K][C][2F] include masks.
+        if not clauses or not clauses[0]:
+            raise ValueError("degenerate shape")
+        if len(clauses[0]) % 2 != 0:
+            raise ValueError("multiclass clause count must be even")
+        features = len(clauses[0][0]) // 2
+        self._check_calibration(features)
+        out_classes = []
+        polarities = []
+        for cls in clauses:
+            for mask in cls:
+                if len(mask) != 2 * features:
+                    raise ValueError("mask width != 2F")
+            emitted = self._reorder(self._emit(cls))
+            out_classes.append(emitted)
+            # Polarity is the *source* index parity (Eq. 1), frozen
+            # into the artifact so prune/reorder cannot skew sums.
+            polarities.append(
+                [1 if cc.source % 2 == 0 else -1 for cc in emitted]
+            )
+        stats = CompileStats.from_masks(
+            2 * features, [m for cls in clauses for m in cls]
+        )
+        return CompiledMulticlass(
+            features, out_classes, polarities, stats, self.mode
+        )
+
+    def compile_cotm(self, clauses, weights):
+        # clauses: [C][2F]; weights: [K][C].
+        if not clauses:
+            raise ValueError("degenerate shape")
+        features = len(clauses[0]) // 2
+        for mask in clauses:
+            if len(mask) != 2 * features:
+                raise ValueError("mask width != 2F")
+        for row in weights:
+            if len(row) != len(clauses):
+                raise ValueError("weight row width != C")
+        self._check_calibration(features)
+        emitted = self._reorder(self._emit(clauses))
+        # Weight columns follow their clause through prune + reorder.
+        weight_cols = [[row[cc.source] for row in weights] for cc in emitted]
+        stats = CompileStats.from_masks(2 * features, clauses)
+        return CompiledCotm(
+            features, len(weights), emitted, weight_cols, stats, self.mode
+        )

@@ -1,0 +1,17 @@
+//! Known-bad r8 fixture: the serving path builds engines straight
+//! from raw models, bypassing the compile pass entirely.
+
+pub struct CoordinatorServer {
+    bp: BitParallelMulticlass,
+    ix: IndexedMulticlass,
+}
+
+impl CoordinatorServer {
+    pub fn new(cfg: &ServeConfig, model: &MultiClassTmModel) -> Result<Self> {
+        let bp = BitParallelMulticlass::from_model(model)?;
+        let ix = IndexedMulticlass::from_model(model)?;
+        let density = ix.density();
+        let _ = select_engine(density, cfg.indexed_threshold, cfg.compressed_threshold);
+        Ok(CoordinatorServer { bp, ix })
+    }
+}

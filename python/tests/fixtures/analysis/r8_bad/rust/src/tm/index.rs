@@ -1,0 +1,17 @@
+//! Known-bad r8 fixture: from_model rebuilds its own pipeline
+//! (mask walk, private density heuristic) instead of delegating to
+//! from_compiled.
+
+impl IndexedMulticlass {
+    pub fn from_model(model: &MultiClassTmModel) -> Result<IndexedMulticlass> {
+        let mut lists = vec![Vec::new(); 2 * model.params.features];
+        for (c, mask) in model.masks().enumerate() {
+            for (lit, inc) in mask.iter().enumerate() {
+                if *inc {
+                    lists[lit].push(c);
+                }
+            }
+        }
+        Ok(IndexedMulticlass { lists })
+    }
+}

@@ -1,0 +1,30 @@
+//! Known-good r8 fixture: one ModelCompiler run per model, every
+//! engine built from the shared compiled artifact.
+
+pub struct CoordinatorServer {
+    bp: BitParallelMulticlass,
+    ix: IndexedMulticlass,
+}
+
+impl CoordinatorServer {
+    pub fn new(cfg: &ServeConfig, model: &MultiClassTmModel) -> Result<Self> {
+        let compiler = ModelCompiler::new(cfg.compile);
+        let compiled = compiler.compile_multiclass(model)?;
+        let bp = BitParallelMulticlass::from_compiled(&compiled)?;
+        let ix = IndexedMulticlass::from_compiled(&compiled)?;
+        let density = compiled.stats.density;
+        let _ = select_engine(density, cfg.indexed_threshold, cfg.compressed_threshold);
+        Ok(CoordinatorServer { bp, ix })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // from_model is fine in tests: the convenience wrapper itself
+    // routes through the compile pass.
+    #[test]
+    fn builds() {
+        let e = IndexedMulticlass::from_model(&tiny_model()).unwrap();
+        assert!(e.density() >= 0.0);
+    }
+}

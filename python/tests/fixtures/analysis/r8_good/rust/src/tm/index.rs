@@ -1,0 +1,15 @@
+//! Known-good r8 fixture: from_model is a thin wrapper over the
+//! compile pass; the real constructor consumes the artifact.
+
+impl IndexedMulticlass {
+    /// Convenience: compile with the default mode, then build.
+    pub fn from_model(model: &MultiClassTmModel) -> Result<IndexedMulticlass> {
+        Self::from_compiled(&ModelCompiler::default().compile_multiclass(model)?)
+    }
+
+    /// The artifact boundary: build from live clauses only.
+    pub fn from_compiled(compiled: &CompiledMulticlass) -> Result<IndexedMulticlass> {
+        compiled.validate()?;
+        Ok(IndexedMulticlass { classes: compiled.classes.clone() })
+    }
+}

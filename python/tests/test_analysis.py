@@ -23,7 +23,12 @@ from pathlib import Path
 import pytest
 
 from analysis import engine
-from analysis.rules import ALL_RULES, r1_lock_discipline, r7_ratchet
+from analysis.rules import (
+    ALL_RULES,
+    r1_lock_discipline,
+    r7_ratchet,
+    r8_compile_pipeline,
+)
 
 REPO = Path(__file__).resolve().parents[2]
 FIXTURES = Path(__file__).resolve().parent / "fixtures" / "analysis"
@@ -132,6 +137,64 @@ def test_allow_for_the_wrong_rule_does_not_suppress(tmp_path):
         "}\n",
     )
     assert "r1" in {f.rule for f in engine.run(tree, rules=[r1_lock_discipline])}
+
+
+# ---------------------------------------------------------------------------
+# r8 specifics: finding placement and the allow escape hatch
+
+
+def _r8_repo(tmp_path, server_body):
+    src = tmp_path / "rust" / "src" / "coordinator"
+    src.mkdir(parents=True)
+    (src / "server.rs").write_text(server_body, encoding="utf-8")
+    return engine.Tree(tmp_path, fixture=True)
+
+
+def test_r8_pins_the_offending_call_line(tmp_path):
+    tree = _r8_repo(
+        tmp_path,
+        "fn build(m: &MultiClassTmModel) -> Result<Engines> {\n"
+        "    let bp = BitParallelMulticlass::from_model(m)?;\n"
+        "    Ok(Engines { bp })\n"
+        "}\n",
+    )
+    findings = r8_compile_pipeline.check(tree)
+    assert [(f.path, f.line) for f in findings] == [
+        ("rust/src/coordinator/server.rs", 2),
+        ("rust/src/coordinator/server.rs", 1),
+    ]
+
+
+def test_r8_reasoned_allow_suppresses_a_direct_from_model(tmp_path):
+    tree = _r8_repo(
+        tmp_path,
+        "fn build(m: &MultiClassTmModel) -> Result<Engines> {\n"
+        "    let compiled = ModelCompiler::default().compile_multiclass(m)?;\n"
+        "    let bp = BitParallelMulticlass::from_compiled(&compiled)?;\n"
+        "    // lint:allow(r8) migration shim until the legacy path retires\n"
+        "    let legacy = IndexedMulticlass::from_model(m)?;\n"
+        "    Ok(Engines { bp, legacy })\n"
+        "}\n",
+    )
+    assert engine.run(tree, rules=[r8_compile_pipeline]) == []
+
+
+def test_r8_ignores_from_model_under_cfg_test(tmp_path):
+    tree = _r8_repo(
+        tmp_path,
+        "fn build(m: &MultiClassTmModel) -> Result<Engines> {\n"
+        "    let compiled = ModelCompiler::default().compile_multiclass(m)?;\n"
+        "    Ok(Engines { bp: BitParallelMulticlass::from_compiled(&compiled)? })\n"
+        "}\n"
+        "#[cfg(test)]\n"
+        "mod tests {\n"
+        "    #[test]\n"
+        "    fn wrapper_still_works() {\n"
+        "        IndexedMulticlass::from_model(&tiny()).unwrap();\n"
+        "    }\n"
+        "}\n",
+    )
+    assert r8_compile_pipeline.check(tree) == []
 
 
 # ---------------------------------------------------------------------------

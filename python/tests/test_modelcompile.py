@@ -1,0 +1,390 @@
+"""Model-compile pass mirror vs the Rust compiler (tm/compile.rs).
+
+Plain pytest (no hypothesis, no JAX) so it runs on every CI image —
+including toolchain-less ones where the Rust suite cannot. The golden
+models, calibration batches, pruned counts, stats, plans and reordered
+source orders below are asserted *identically* in
+``rust/src/tm/compile.rs`` (``golden_models_compile_to_pinned_stats_and_orders``
+and friends); both sides build them from the same closed-form formulas,
+so if either implementation drifts, both suites fail.
+"""
+
+import random
+
+from compressed import CompressedModel, select_engine
+from invindex import (
+    InvertedIndex,
+    ref_cotm_class_sums,
+    ref_multiclass_class_sums,
+)
+from modelcompile import (
+    HIST_BUCKETS,
+    CompileStats,
+    ModelCompiler,
+    dead_reason,
+    plan_for_mask,
+    prefers_lane_sweep,
+)
+
+# ---------------------------------------------------------------------
+# The shared golden scheme (formulas mirrored in compile.rs — the same
+# models the invindex/compressed mirrors pin):
+#   multiclass: F=9, C=4/class, K=3; include(k,j,l) = (3l+5j+7k)%11 == 0
+#   cotm:       F=9, C=6, K=3; include(j,l) = (5l+3j)%7 == 0,
+#               weight(k,j) = (j+2k)%7 - 3
+#   sample s:   feature i = (i*i + 3*i*s + 2*s) % 7 < 3
+#   calibration: samples 0..5
+# ---------------------------------------------------------------------
+
+F = 9
+LITS = 2 * F
+
+GOLDEN_MC_CLAUSES = [
+    [[(3 * l + 5 * j + 7 * k) % 11 == 0 for l in range(LITS)] for j in range(4)]
+    for k in range(3)
+]
+GOLDEN_CO_CLAUSES = [
+    [(5 * l + 3 * j) % 7 == 0 for l in range(LITS)] for j in range(6)
+]
+GOLDEN_CO_WEIGHTS = [[(j + 2 * k) % 7 - 3 for j in range(6)] for k in range(3)]
+
+
+def golden_sample(s):
+    return [(i * i + 3 * i * s + 2 * s) % 7 < 3 for i in range(F)]
+
+
+GOLDEN_CALIBRATION = [golden_sample(s) for s in range(6)]
+
+# Pinned in compile.rs: full-mode execution orders (source ids) under
+# the golden calibration batch.
+GOLDEN_MC_ORDERS = [[1, 2, 0, 3], [1, 0, 3, 2], [0, 2, 3, 1]]
+GOLDEN_CO_ORDER = [3, 0, 1, 4, 5, 2]
+
+
+def mask_of(literals, lits):
+    m = [False] * literals
+    for l in lits:
+        m[l] = True
+    return m
+
+
+# The hand-worked dead-clause models (mirrored in compile.rs):
+# multiclass F=3, K=2, C=4; cotm F=3, C=5, K=2.
+def dead_multiclass():
+    cls0 = [mask_of(6, [1, 4]), mask_of(6, []), mask_of(6, [2, 3]), mask_of(6, [0])]
+    cls1 = [mask_of(6, [0, 1]), mask_of(6, [5]), mask_of(6, [0, 2]), mask_of(6, [])]
+    return [cls0, cls1]
+
+
+def dead_cotm():
+    clauses = [
+        mask_of(6, [4]),
+        mask_of(6, []),
+        mask_of(6, [0, 4]),
+        mask_of(6, [2, 3]),
+        mask_of(6, [1]),
+    ]
+    weights = [[1, 3, -1, 5, 0], [-2, 3, 2, 5, 1]]
+    return clauses, weights
+
+
+def all_combos():
+    """All 8 feature combinations of F=3 — the hand-worked calibration."""
+    return [[(bits >> i) & 1 == 1 for i in range(3)] for bits in range(8)]
+
+
+def test_dead_reason_classifies_the_three_kinds():
+    assert dead_reason(mask_of(6, [])) == "all_exclude"
+    assert dead_reason(mask_of(6, [2, 3])) == "contradictory"
+    assert dead_reason(mask_of(6, [0, 2])) is None
+    # A pair split across features is not a contradiction.
+    assert dead_reason(mask_of(6, [1, 2])) is None
+    # Zero-width masks are the all-exclude degenerate case.
+    assert dead_reason([]) == "all_exclude"
+
+
+def test_plan_rule_matches_the_packed_heuristic_boundaries():
+    # Pinned identically in compile.rs: lane-sweep iff nonzero_words >=
+    # 8 and 2*nonzero >= words.
+    assert not prefers_lane_sweep(7, 14)
+    assert prefers_lane_sweep(8, 16)
+    assert not prefers_lane_sweep(8, 17)
+    assert prefers_lane_sweep(16, 16)
+    assert not prefers_lane_sweep(0, 0)
+    assert plan_for_mask(mask_of(6, [0])) == "skip"
+    assert plan_for_mask(mask_of(1024, list(range(0, 1024, 64)))) == "sweep"
+    assert plan_for_mask(mask_of(1024, list(range(0, 1024, 128)))) == "sweep"
+    assert plan_for_mask(mask_of(1024, list(range(0, 1024, 256)))) == "skip"
+    assert plan_for_mask(mask_of(896, list(range(0, 896, 128)))) == "skip"
+    assert plan_for_mask(mask_of(640, list(range(0, 640, 64)))) == "sweep"
+
+
+def test_dead_multiclass_prunes_exactly_and_keeps_explicit_polarity():
+    c = ModelCompiler("prune").compile_multiclass(dead_multiclass())
+    # Pinned by the Rust suite: stats of the hand-worked model.
+    assert c.stats.total_clauses == 8
+    assert c.stats.dead_all_exclude == 2
+    assert c.stats.dead_contradictory == 2
+    assert c.stats.live_clauses == 4
+    assert c.stats.postings == 6
+    assert abs(c.stats.density - 0.25) < 1e-12
+    assert c.stats.length_histogram == [0, 2, 2, 0, 0, 0, 0, 0]
+    assert c.stats.skip_list_clauses == 4
+    assert c.stats.lane_sweep_clauses == 0
+    assert c.source_orders() == [[0, 3], [1, 2]]
+    assert c.polarities == [[1, -1], [-1, 1]]
+
+
+def test_full_reorder_is_deterministic_and_pinned():
+    # Hand-worked fire counts over all 8 F=3 combos:
+    # class 0: {1,4} fires 2, {0} fires 4 -> order [3, 0].
+    # class 1: {5} fires 4, {0,2} fires 2 -> order [1, 2].
+    c = (
+        ModelCompiler("full")
+        .with_calibration(all_combos())
+        .compile_multiclass(dead_multiclass())
+    )
+    assert c.source_orders() == [[3, 0], [1, 2]]
+    assert c.polarities == [[-1, 1], [-1, 1]]
+
+    clauses, weights = dead_cotm()
+    co = (
+        ModelCompiler("full")
+        .with_calibration(all_combos())
+        .compile_cotm(clauses, weights)
+    )
+    # CoTM fires {4}:4, {0,4}:2, {1}:4 -> order [0, 4, 2]; weight
+    # columns permuted in lockstep.
+    assert co.source_order() == [0, 4, 2]
+    assert co.weight_cols == [[1, -2], [0, 1], [-1, 2]]
+    assert co.stats.total_clauses == 5
+    assert co.stats.dead_all_exclude == 1
+    assert co.stats.dead_contradictory == 1
+    assert co.stats.live_clauses == 3
+    assert co.stats.postings == 4
+    assert abs(co.stats.density - 4 / 18) < 1e-12
+    assert co.stats.length_histogram == [0, 2, 1, 0, 0, 0, 0, 0]
+
+
+def test_golden_models_compile_to_pinned_stats_and_orders():
+    mc = (
+        ModelCompiler("full")
+        .with_calibration(GOLDEN_CALIBRATION)
+        .compile_multiclass(GOLDEN_MC_CLAUSES)
+    )
+    assert mc.stats.total_clauses == 12
+    assert mc.stats.live_clauses == 12
+    assert mc.stats.postings == 21
+    assert abs(mc.stats.density - 21 / (12 * 18)) < 1e-12
+    assert mc.stats.length_histogram == [12, 0, 0, 0, 0, 0, 0, 0]
+    assert mc.source_orders() == GOLDEN_MC_ORDERS
+
+    co = (
+        ModelCompiler("full")
+        .with_calibration(GOLDEN_CALIBRATION)
+        .compile_cotm(GOLDEN_CO_CLAUSES, GOLDEN_CO_WEIGHTS)
+    )
+    assert co.stats.postings == 15
+    assert abs(co.stats.density - 15 / (6 * 18)) < 1e-12
+    assert co.stats.length_histogram == [3, 3, 0, 0, 0, 0, 0, 0]
+    assert co.source_order() == GOLDEN_CO_ORDER
+
+
+def test_compiled_sums_are_bit_identical_in_every_mode():
+    # The exactness bar: the compiled artifact's direct walk matches the
+    # reference evaluator on every F=3 input, whatever mode ran.
+    mc_model = dead_multiclass()
+    co_clauses, co_weights = dead_cotm()
+    for mode in ("off", "prune", "full"):
+        compiler = ModelCompiler(mode).with_calibration(all_combos())
+        mc = compiler.compile_multiclass(mc_model)
+        co = compiler.compile_cotm(co_clauses, co_weights)
+        for x in all_combos():
+            assert mc.class_sums(x) == ref_multiclass_class_sums(mc_model, x)
+            assert co.class_sums(x) == ref_cotm_class_sums(
+                co_clauses, co_weights, x
+            )
+
+
+def test_compiled_artifacts_drive_the_serving_engines_exactly():
+    # The from_compiled construction, mirrored at mask level: build the
+    # inverted-index and compressed engines over the *pruned, reordered*
+    # clause list and vote with the artifact's explicit
+    # polarities/weight columns — sums must stay bit-identical.
+    mc_model = dead_multiclass()
+    mc = (
+        ModelCompiler("full")
+        .with_calibration(all_combos())
+        .compile_multiclass(mc_model)
+    )
+    flat_masks = [cc.mask for cls in mc.classes for cc in cls]
+    votes = [
+        (k, pol)
+        for k, (cls, pols) in enumerate(zip(mc.classes, mc.polarities))
+        for _, pol in zip(cls, pols)
+    ]
+    index = InvertedIndex(3, flat_masks)
+    comp = CompressedModel(3, flat_masks)
+    for x in all_combos():
+        want = ref_multiclass_class_sums(mc_model, x)
+        for fired in (index.sweep(x), comp.sweep(x)):
+            sums = [0, 0]
+            for cid in fired:
+                k, pol = votes[cid]
+                sums[k] += pol
+            assert sums == want, x
+
+
+def test_stats_are_mode_independent_and_off_keeps_model_order():
+    m = dead_multiclass()
+    off = ModelCompiler("off").compile_multiclass(m)
+    pruned = ModelCompiler("prune").compile_multiclass(m)
+    assert off.source_orders() == [[0, 1, 2, 3], [0, 1, 2, 3]]
+    for field in (
+        "total_clauses",
+        "live_clauses",
+        "dead_all_exclude",
+        "dead_contradictory",
+        "postings",
+        "density",
+        "length_histogram",
+    ):
+        assert getattr(off.stats, field) == getattr(pruned.stats, field), field
+    # Full without a calibration batch keeps the prune order.
+    full = ModelCompiler("full").compile_multiclass(m)
+    assert full.source_orders() == pruned.source_orders()
+
+
+def test_all_dead_model_compiles_and_sums_to_zero():
+    # Adversarial: every clause dead. No crash, zero live clauses,
+    # density 0.0, all-zero sums in every mode.
+    clauses = [
+        [mask_of(6, []), mask_of(6, [0, 1]), mask_of(6, [4, 5]), mask_of(6, [])]
+        for _ in range(3)
+    ]
+    for mode in ("off", "prune", "full"):
+        c = (
+            ModelCompiler(mode)
+            .with_calibration(all_combos())
+            .compile_multiclass(clauses)
+        )
+        assert c.stats.live_clauses == 0
+        assert c.stats.density == 0.0
+        for x in all_combos():
+            assert c.class_sums(x) == [0, 0, 0]
+    co = ModelCompiler("prune").compile_cotm(
+        [mask_of(6, []), mask_of(6, [2, 3])], [[5, -5], [1, 1]]
+    )
+    assert co.clauses == []
+    assert co.stats.density == 0.0
+    for x in all_combos():
+        assert co.class_sums(x) == [0, 0]
+
+
+def test_duplicate_clauses_keep_independent_votes():
+    # Adversarial: identical clauses everywhere. Dedup is NOT part of
+    # the contract; ties in fire count fall back to source order.
+    template = mask_of(6, [0, 2])
+    clauses = [[list(template) for _ in range(4)] for _ in range(2)]
+    c = (
+        ModelCompiler("full")
+        .with_calibration(all_combos())
+        .compile_multiclass(clauses)
+    )
+    assert c.source_orders() == [[0, 1, 2, 3], [0, 1, 2, 3]]
+    for x in all_combos():
+        assert c.class_sums(x) == ref_multiclass_class_sums(clauses, x)
+
+
+def test_minimum_shape_models_compile_exactly():
+    # Adversarial: the smallest shapes — one clause pair per class
+    # (multiclass), a single shared clause (CoTM).
+    clauses = [[mask_of(2, [0]), mask_of(2, [1])] for _ in range(2)]
+    for mode in ("off", "prune", "full"):
+        c = (
+            ModelCompiler(mode)
+            .with_calibration([[True], [False]])
+            .compile_multiclass(clauses)
+        )
+        for x in ([True], [False]):
+            assert c.class_sums(x) == ref_multiclass_class_sums(clauses, x)
+    co = ModelCompiler("full").with_calibration([[True], [False]]).compile_cotm(
+        [mask_of(2, [0])], [[3], [-2]]
+    )
+    for x in ([True], [False]):
+        assert co.class_sums(x) == ref_cotm_class_sums(
+            [mask_of(2, [0])], [[3], [-2]], x
+        )
+
+
+def test_reorder_is_output_invariant_under_random_calibration():
+    # Any calibration batch may permute the layout; none may move the
+    # sums.
+    rng = random.Random(0xC0311E)
+    for _ in range(20):
+        f = rng.randrange(2, 12)
+        c = 2 * rng.randrange(1, 4)
+        k = rng.randrange(2, 4)
+        clauses = [
+            [[rng.random() < 0.3 for _ in range(2 * f)] for _ in range(c)]
+            for _ in range(k)
+        ]
+        samples = [[rng.random() < 0.5 for _ in range(f)] for _ in range(8)]
+        calib = [
+            [rng.random() < 0.5 for _ in range(f)]
+            for _ in range(rng.randrange(1, 20))
+        ]
+        compiled = (
+            ModelCompiler("full").with_calibration(calib).compile_multiclass(clauses)
+        )
+        for x in samples:
+            assert compiled.class_sums(x) == ref_multiclass_class_sums(clauses, x)
+
+
+def test_synthetic_calibration_is_deterministic():
+    a = ModelCompiler("full").with_synthetic_calibration(5, 10, 42)
+    b = ModelCompiler("full").with_synthetic_calibration(5, 10, 42)
+    assert a.calibration == b.calibration
+    assert len(a.calibration) == 10
+    assert all(len(row) == 5 for row in a.calibration)
+    c = ModelCompiler("full").with_synthetic_calibration(5, 10, 43)
+    assert a.calibration != c.calibration
+
+
+def test_invalid_inputs_are_rejected():
+    import pytest
+
+    with pytest.raises(ValueError):
+        ModelCompiler("aggressive")
+    with pytest.raises(ValueError):
+        # Odd clause count breaks the +/- polarity pairing.
+        ModelCompiler("prune").compile_multiclass([[mask_of(4, [0])]] * 2)
+    with pytest.raises(ValueError):
+        # Calibration row width mismatch.
+        ModelCompiler("full").with_calibration([[True, False]]).compile_multiclass(
+            [[mask_of(6, [0]), mask_of(6, [1])]] * 2
+        )
+    with pytest.raises(ValueError):
+        # Weight row width != clause count.
+        ModelCompiler("prune").compile_cotm([mask_of(4, [0])], [[1, 2]])
+
+
+def test_live_density_accounting_fixes_the_auto_choice():
+    # The density-accounting regression the compile pass fixed, at the
+    # mirror level (pinned identically in index.rs / compressed.rs):
+    # 9 dead all-exclude clauses + 1 clause including 5 of its 10
+    # literals. Stale accounting (postings / total·2F) said 0.05 ->
+    # "indexed"; live accounting says 0.5 -> "packed".
+    masks = [mask_of(10, [])] * 9 + [mask_of(10, [0, 2, 4, 6, 8])]
+    for model in (InvertedIndex(5, masks), CompressedModel(5, masks)):
+        stale = model.postings() / (model.num_clauses() * 10)
+        assert abs(stale - 0.05) < 1e-12
+        assert model.live_clauses() == 1
+        assert abs(model.density() - 0.5) < 1e-12
+        assert select_engine(stale, 0.05, 0.2) == "indexed"
+        assert select_engine(model.density(), 0.05, 0.2) == "packed"
+    # And the compile stats agree with the live accounting.
+    stats = CompileStats.from_masks(10, masks)
+    assert stats.live_clauses == 1
+    assert abs(stats.density - 0.5) < 1e-12
+    assert stats.length_histogram[HIST_BUCKETS // 2] == 1

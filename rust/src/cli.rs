@@ -82,9 +82,16 @@ COMMANDS:
   table3     State-of-the-art comparison (Table III)
   table4     Alias of `eval`
   waveform   Dump VCD waveforms for Figs. 6-8  --out-dir waves/
+  compile    Compile saved models into serving artifacts (.tmc)
+             --model-dir models/ [--out-dir models/]
+             [--mode off|prune|full] [--calib-samples N --seed N]
+             (prune drops dead clauses bit-exactly; full additionally
+              reorders clauses by fire probability measured on a
+              synthetic calibration batch — outputs stay identical)
   serve      Run the serving coordinator demo
              --config serve.toml --requests N [--no-golden] [--shards N]
              [--simd auto|scalar|portable|neon|avx2|avx512]
+             [--compile off|prune|full]
              (--shards N fronts N coordinator shards with a
               deterministic consistent-hash ring; default from config)
   selfcheck  Train + verify every backend agrees on Iris, that the
@@ -128,6 +135,8 @@ serve.toml knobs, all under [coordinator]:
   indexed_density_threshold      auto-* indexed cutoff (0..=1)
   compressed_density_threshold   auto-* compressed cutoff (0..=1)
   simd                           lane width (see below)
+  compile                        model-compile pass: off|prune|full
+                                 (default prune; see `tmtd compile`)
 
 The packed engines evaluate in SIMD word lanes (`simd` under
 [coordinator], or --simd on serve): \"auto\" (default) picks the widest

@@ -9,6 +9,7 @@ pub use json::Json;
 pub use toml::TomlDoc;
 
 use crate::error::Result;
+use crate::tm::compile::CompileMode;
 use crate::tm::simd::SimdChoice;
 use crate::wta::WtaKind;
 
@@ -52,6 +53,13 @@ pub struct ServeConfig {
     /// cleanly. A speed decision only — the class sums are invariant
     /// under dispatch.
     pub simd: SimdChoice,
+    /// Model-compile pass applied once at server build, feeding every
+    /// engine family (`compile = "off" | "prune" | "full"`). `prune`
+    /// (the default) removes dead clauses — exact, outputs are
+    /// bit-identical; `full` additionally reorders clauses by fire
+    /// probability over a deterministic synthetic calibration batch
+    /// (also output-invariant); `off` serves the model byte-for-byte.
+    pub compile: CompileMode,
 }
 
 impl Default for ServeConfig {
@@ -68,6 +76,7 @@ impl Default for ServeConfig {
             compressed_density_threshold:
                 crate::tm::compressed::PACKED_VS_COMPRESSED_DENSITY,
             simd: SimdChoice::Auto,
+            compile: CompileMode::default(),
         }
     }
 }
@@ -87,6 +96,7 @@ impl ServeConfig {
     /// indexed_density_threshold = 0.05
     /// compressed_density_threshold = 0.2
     /// simd = "auto"
+    /// compile = "prune"
     /// ```
     pub fn from_toml(doc: &TomlDoc) -> Result<ServeConfig> {
         // Counts must reject negative values rather than `as`-casting
@@ -125,6 +135,14 @@ impl ServeConfig {
             cfg.simd = SimdChoice::parse(name).ok_or_else(|| {
                 crate::Error::config(format!(
                     "unknown simd level {name:?} (expected auto|scalar|portable|neon|avx2|avx512)"
+                ))
+            })?;
+        }
+        if let Some(v) = doc.get("coordinator", "compile") {
+            let name = v.as_str()?;
+            cfg.compile = CompileMode::parse(name).ok_or_else(|| {
+                crate::Error::config(format!(
+                    "unknown compile mode {name:?} (expected off|prune|full)"
                 ))
             })?;
         }
@@ -205,10 +223,12 @@ mod tests {
             indexed_density_threshold = 0.12
             compressed_density_threshold = 0.33
             simd = "portable"
+            compile = "full"
             "#,
         )
         .unwrap();
         let cfg = ServeConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.compile, CompileMode::Full);
         assert_eq!(cfg.shards, 3);
         assert_eq!(cfg.workers, 8);
         assert_eq!(cfg.max_batch, 64);
@@ -242,6 +262,25 @@ mod tests {
         assert!(err.to_string().contains("unknown simd level"), "{err}");
         // Default stays auto-dispatch.
         assert_eq!(ServeConfig::default().simd, SimdChoice::Auto);
+    }
+
+    #[test]
+    fn parses_compile_modes_and_rejects_unknown_names() {
+        for (name, want) in [
+            ("off", CompileMode::Off),
+            ("prune", CompileMode::Prune),
+            ("full", CompileMode::Full),
+        ] {
+            let doc =
+                TomlDoc::parse(&format!("[coordinator]\ncompile = \"{name}\"\n")).unwrap();
+            assert_eq!(ServeConfig::from_toml(&doc).unwrap().compile, want, "{name}");
+        }
+        let doc = TomlDoc::parse("[coordinator]\ncompile = \"aggressive\"\n").unwrap();
+        let err = ServeConfig::from_toml(&doc).unwrap_err();
+        assert!(err.to_string().contains("unknown compile mode"), "{err}");
+        // Pruning is exact, so it is the default; reordering needs a
+        // calibration batch and stays opt-in.
+        assert_eq!(ServeConfig::default().compile, CompileMode::Prune);
     }
 
     #[test]

@@ -39,6 +39,7 @@ use crate::coordinator::router::{Backend, InferRequest, InferResponse};
 use crate::coordinator::stats::{ServerStats, StatsSnapshot};
 use crate::error::{Error, Result};
 use crate::runtime::golden::{GoldenModels, GoldenService};
+use crate::tm::compile::{CompileMode, ModelCompiler};
 use crate::tm::compressed::{select_engine, CompressedCotm, CompressedMulticlass, EngineChoice};
 use crate::tm::fast_infer::{BatchEngine, BitParallelCotm, BitParallelMulticlass};
 use crate::tm::index::{IndexedCotm, IndexedMulticlass};
@@ -69,6 +70,12 @@ impl WorkerState {
         }
     }
 }
+
+/// Synthetic calibration batch shape for `compile = "full"` when no
+/// real traffic sample is available at startup (reordering is
+/// output-invariant, so these only steer speed, never sums).
+const CALIB_SAMPLES: usize = 256;
+const CALIB_SEED: u64 = 7;
 
 /// A request travelling to the golden batcher.
 struct GoldenItem {
@@ -250,15 +257,23 @@ impl CoordinatorServer {
             proposed_co: ProposedCotm::new(co.clone(), wta).expect("valid cotm model"),
         })?;
 
-        // Native batched path: one shared Send+Sync engine per (engine
-        // family, model family) pair — compiled once from the trained
-        // models, no per-worker rebuild — each behind its own dynamic
-        // batcher. The indexed engines also carry the density the
-        // auto-select decision reads.
+        // Native batched path: the trained models go through the
+        // model-compile pass exactly once (`cfg.compile` — dead-clause
+        // pruning by default, plus fire-probability reordering under
+        // "full"), and every engine family builds from the shared
+        // compiled artifact; no per-engine re-derivation. The compiled
+        // stats also carry the live-clause density the auto-select
+        // decision reads.
+        let mut compiler = ModelCompiler::new(cfg.compile);
+        if cfg.compile == CompileMode::Full {
+            compiler = compiler.with_synthetic_calibration(features, CALIB_SAMPLES, CALIB_SEED);
+        }
+        let compiled_mc = compiler.clone().compile_multiclass(&mc_model)?;
+        let compiled_co = compiler.compile_cotm(&cotm_model)?;
         let timeout = Duration::from_micros(cfg.batch_timeout_us);
         let shard_threads = cfg.workers.max(1);
         let batcher_bp_mc = native_batcher(
-            Arc::new(BitParallelMulticlass::from_model(&mc_model)?.with_lanes(simd)),
+            Arc::new(BitParallelMulticlass::from_compiled(&compiled_mc)?.with_lanes(simd)),
             Backend::BitParallelMulticlass,
             cfg.max_batch,
             timeout,
@@ -267,7 +282,7 @@ impl CoordinatorServer {
             shard_threads,
         )?;
         let batcher_bp_co = native_batcher(
-            Arc::new(BitParallelCotm::from_model(&cotm_model)?.with_lanes(simd)),
+            Arc::new(BitParallelCotm::from_compiled(&compiled_co)?.with_lanes(simd)),
             Backend::BitParallelCotm,
             cfg.max_batch,
             timeout,
@@ -275,18 +290,20 @@ impl CoordinatorServer {
             Arc::clone(&in_flight),
             shard_threads,
         )?;
-        let ix_mc = Arc::new(IndexedMulticlass::from_model(&mc_model)?);
-        let ix_co = Arc::new(IndexedCotm::from_model(&cotm_model)?);
-        let cp_mc = Arc::new(CompressedMulticlass::from_model(&mc_model)?);
-        let cp_co = Arc::new(CompressedCotm::from_model(&cotm_model)?);
+        let ix_mc = Arc::new(IndexedMulticlass::from_compiled(&compiled_mc)?);
+        let ix_co = Arc::new(IndexedCotm::from_compiled(&compiled_co)?);
+        let cp_mc = Arc::new(CompressedMulticlass::from_compiled(&compiled_mc)?);
+        let cp_co = Arc::new(CompressedCotm::from_compiled(&compiled_co)?);
         // Resolve `auto-*` per compiled model with the three-way density
         // decision: extremely sparse models go through the inverted
         // index, moderately sparse ones through the compressed
         // include-list walk, dense ones through the packed words. The
-        // choice can only affect speed — all three engine families are
-        // held to the same bit-exactness bar by the conformance suite.
+        // density comes from the compile-pass stats, so dead clauses
+        // never dilute the crossover. The choice can only affect speed —
+        // all three engine families are held to the same bit-exactness
+        // bar by the conformance suite.
         let auto_mc = match select_engine(
-            ix_mc.density(),
+            compiled_mc.stats.density,
             cfg.indexed_density_threshold,
             cfg.compressed_density_threshold,
         ) {
@@ -295,7 +312,7 @@ impl CoordinatorServer {
             EngineChoice::Packed => Backend::BitParallelMulticlass,
         };
         let auto_co = match select_engine(
-            ix_co.density(),
+            compiled_co.stats.density,
             cfg.indexed_density_threshold,
             cfg.compressed_density_threshold,
         ) {
@@ -931,6 +948,55 @@ mod tests {
         let (srv, _) = server(false, None);
         assert_eq!(srv.simd_lanes().level(), SimdLevel::detect_best());
         srv.shutdown();
+    }
+
+    #[test]
+    fn compile_modes_serve_bit_exact_through_every_native_backend() {
+        // The serve-time compile knob (off/prune/full) restructures the
+        // clause layout the engines execute, but the sums must stay
+        // bit-identical to the scalar reference through the real
+        // batcher plumbing in every mode, for every native backend.
+        let dset = data::iris().unwrap();
+        let (tr, _) = dset.split(0.8, 42);
+        let m = train_multiclass(TmParams::iris_paper(), &tr, 20, 2).unwrap();
+        let cm = train_cotm(TmParams::iris_paper(), &tr, 20, 3).unwrap();
+        for mode in [CompileMode::Off, CompileMode::Prune, CompileMode::Full] {
+            let cfg = ServeConfig { workers: 2, compile: mode, ..ServeConfig::default() };
+            let (srv, d) = server(false, Some(cfg));
+            for i in [0usize, 60, 149] {
+                for b in [
+                    Backend::BitParallelMulticlass,
+                    Backend::IndexedMulticlass,
+                    Backend::CompressedMulticlass,
+                ] {
+                    let r = srv
+                        .infer(InferRequest { features: d.features[i].clone(), backend: b })
+                        .unwrap();
+                    assert_eq!(
+                        r.class_sums,
+                        crate::tm::infer::multiclass_class_sums(&m, &d.features[i]),
+                        "sample {i} backend {b:?} mode {}",
+                        mode.name()
+                    );
+                }
+                for b in [
+                    Backend::BitParallelCotm,
+                    Backend::IndexedCotm,
+                    Backend::CompressedCotm,
+                ] {
+                    let r = srv
+                        .infer(InferRequest { features: d.features[i].clone(), backend: b })
+                        .unwrap();
+                    assert_eq!(
+                        r.class_sums,
+                        crate::tm::infer::cotm_class_sums(&cm, &d.features[i]),
+                        "sample {i} backend {b:?} mode {}",
+                        mode.name()
+                    );
+                }
+            }
+            srv.shutdown();
+        }
     }
 
     #[test]

@@ -16,7 +16,7 @@ use tsetlin_td::sim::TechParams;
 use tsetlin_td::tm::simd::{SimdChoice, SimdLevel, WordLanes};
 use tsetlin_td::tm::{
     self, cotm_train::train_cotm_with, data, train::train_multiclass_with, BatchEngine,
-    TmParams, TrainerEngine,
+    CompileMode, ModelCompiler, TmParams, TrainerEngine,
 };
 use tsetlin_td::util::SplitMix64;
 use tsetlin_td::wta::{analysis, WtaKind};
@@ -48,6 +48,7 @@ fn run(args: &Args) -> Result<()> {
         "table1" => cmd_table1(args),
         "table3" => cmd_table3(args),
         "waveform" => cmd_waveform(args),
+        "compile" => cmd_compile(args),
         "serve" => cmd_serve(args),
         "selfcheck" => cmd_selfcheck(args),
         "help" | "" => {
@@ -262,6 +263,47 @@ fn cmd_waveform(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_compile(args: &Args) -> Result<()> {
+    let model_dir = args.flag_or("model-dir", "models");
+    let out_dir = args.flag_or("out-dir", &model_dir);
+    let mode_name = args.flag_or("mode", CompileMode::default().name());
+    let mode = CompileMode::parse(&mode_name)
+        .ok_or_else(|| Error::config(format!("unknown --mode {mode_name:?} (off|prune|full)")))?;
+    let calib_samples = args.flag_parse("calib-samples", 256usize)?;
+    let seed = args.flag_parse("seed", 7u64)?;
+    std::fs::create_dir_all(&out_dir)?;
+    let m = tm::serde::load_multiclass(format!("{model_dir}/multiclass.tm"))?;
+    let cm = tm::serde::load_cotm(format!("{model_dir}/cotm.tm"))?;
+    let compiler = |features: usize| {
+        let c = ModelCompiler::new(mode);
+        if mode == CompileMode::Full {
+            c.with_synthetic_calibration(features, calib_samples, seed)
+        } else {
+            c
+        }
+    };
+    let cmc = compiler(m.params.features).compile_multiclass(&m)?;
+    let cco = compiler(cm.params.features).compile_cotm(&cm)?;
+    for (name, stats) in [("multiclass", &cmc.stats), ("cotm", &cco.stats)] {
+        println!(
+            "{name}: {} clauses -> {} live ({} all-exclude + {} contradictory dead), \
+             {} postings, density {:.4}, plans {} sweep / {} skip",
+            stats.total_clauses,
+            stats.live_clauses,
+            stats.dead_all_exclude,
+            stats.dead_contradictory,
+            stats.postings,
+            stats.density,
+            stats.lane_sweep_clauses,
+            stats.skip_list_clauses
+        );
+    }
+    tm::serde::save_compiled_multiclass(&cmc, format!("{out_dir}/multiclass.tmc"))?;
+    tm::serde::save_compiled_cotm(&cco, format!("{out_dir}/cotm.tmc"))?;
+    println!("saved {out_dir}/multiclass.tmc and {out_dir}/cotm.tmc (mode {})", mode.name());
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let mut cfg = match args.flag("config") {
         Some(path) => ServeConfig::load(path)?,
@@ -274,6 +316,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Error::config(format!(
                 "unknown --simd {name:?} (auto|scalar|portable|neon|avx2|avx512)"
             ))
+        })?;
+    }
+    if let Some(name) = args.flag("compile") {
+        cfg.compile = CompileMode::parse(name).ok_or_else(|| {
+            Error::config(format!("unknown --compile {name:?} (off|prune|full)"))
         })?;
     }
     let with_golden = !args.switch("no-golden");
@@ -436,6 +483,41 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
             failures.push(format!(
                 "{bar}: only {}/{} samples bit-exact vs reference",
                 exact.min(batch_exact),
+                dataset.len()
+            ));
+        }
+    }
+    // Compile-pass bar: pruning and fire-probability reordering must
+    // be invisible in the served sums — engines rebuilt from compiled
+    // artifacts match the reference scalar walk bit-for-bit, in every
+    // mode.
+    for mode in [CompileMode::Off, CompileMode::Prune, CompileMode::Full] {
+        let mut compiler = ModelCompiler::new(mode);
+        if mode == CompileMode::Full {
+            compiler = compiler.with_synthetic_calibration(m.params.features, 64, 11);
+        }
+        let cmc = compiler.clone().compile_multiclass(&m)?;
+        let cco = compiler.compile_cotm(&cm)?;
+        let bp = tm::BitParallelMulticlass::from_compiled(&cmc)?;
+        let co = tm::BitParallelCotm::from_compiled(&cco)?;
+        let mut exact = 0usize;
+        for x in &dataset.features {
+            exact += (tm::BatchEngine::class_sums(&bp, x)
+                == tm::infer::multiclass_class_sums(&m, x)
+                && tm::BatchEngine::class_sums(&co, x) == tm::infer::cotm_class_sums(&cm, x))
+                as usize;
+        }
+        let bar = format!("compile-{}", mode.name());
+        println!(
+            "{bar:24} bit-exact sums    {:.1}% ({}/{} live clauses, density {:.3})",
+            100.0 * exact as f64 / dataset.len() as f64,
+            cmc.stats.live_clauses,
+            cmc.stats.total_clauses,
+            cmc.stats.density
+        );
+        if exact != dataset.len() {
+            failures.push(format!(
+                "{bar}: only {exact}/{} samples bit-exact vs reference",
                 dataset.len()
             ));
         }

@@ -66,6 +66,23 @@ pub fn words_for(bits: usize) -> usize {
     bits.div_ceil(WORD_BITS)
 }
 
+/// Minimum non-zero include words before a lane sweep can beat the
+/// skip-list walk (below this, even a full-span clause fits in a
+/// handful of scalar ops).
+pub const LANE_SWEEP_MIN_NONZERO: usize = 8;
+
+/// The skip-list-vs-lane-sweep rule, shared between the compile pass
+/// (`super::compile::plan_for_mask`, which records the decision per
+/// clause) and the packed fallback in [`PackedClause::from_mask`]:
+/// sweep the whole span iff at least [`LANE_SWEEP_MIN_NONZERO`] include
+/// words are non-zero *and* they cover at least half the span — either
+/// way the predicate is identical, because skipped words are all-zero
+/// and can never violate.
+#[inline]
+pub fn prefers_lane_sweep(nonzero_words: usize, words: usize) -> bool {
+    nonzero_words >= LANE_SWEEP_MIN_NONZERO && 2 * nonzero_words >= words
+}
+
 /// Pack a bool slice into little-endian words: element `i` lands in bit
 /// `i % 64` of word `i / 64`. Tail padding bits are zero.
 pub fn pack_bools(bits: &[bool]) -> Vec<u64> {
@@ -132,14 +149,20 @@ pub struct PackedClause {
     pub nonzero_words: Vec<u32>,
     /// Sorted indices of the included literals (for the batched path).
     pub literals: Vec<u32>,
+    /// Single-sample execution plan: `true` = whole-span lane sweep,
+    /// `false` = skip-list walk. Defaulted from [`prefers_lane_sweep`]
+    /// by [`Self::from_mask`]; the compile pass overrides it per clause
+    /// via [`Self::with_lane_sweep`].
+    pub lane_sweep: bool,
 }
 
 impl PackedClause {
     /// Pack a [`ClauseMask`] (include mask over the 2F interleaved
-    /// literals).
+    /// literals). The execution plan defaults to the shared
+    /// [`prefers_lane_sweep`] rule on this mask's word density.
     pub fn from_mask(mask: &ClauseMask) -> PackedClause {
         let include = pack_bools(&mask.include);
-        let nonzero_words = include
+        let nonzero_words: Vec<u32> = include
             .iter()
             .enumerate()
             .filter(|(_, &w)| w != 0)
@@ -152,7 +175,16 @@ impl PackedClause {
             .filter(|(_, &b)| b)
             .map(|(i, _)| i as u32)
             .collect();
-        PackedClause { include, nonzero_words, literals }
+        let lane_sweep = prefers_lane_sweep(nonzero_words.len(), include.len());
+        PackedClause { include, nonzero_words, literals, lane_sweep }
+    }
+
+    /// Override the execution plan (the compile pass records one per
+    /// clause; engines built `from_compiled` honor it here). Either
+    /// plan computes the identical predicate.
+    pub fn with_lane_sweep(mut self, lane_sweep: bool) -> PackedClause {
+        self.lane_sweep = lane_sweep;
+        self
     }
 
     /// Empty clause = all-exclude mask (fires never, matching the
@@ -179,17 +211,19 @@ impl PackedClause {
         })
     }
 
-    /// Lane-dispatched single-sample evaluation. Sparse clauses keep
-    /// the skip-list walk (they touch fewer words than any lane sweep
-    /// would); clauses whose include words are mostly non-zero sweep
-    /// the whole span through `lanes` — identical answer either way,
-    /// because the skipped words are all-zero and can never violate.
+    /// Lane-dispatched single-sample evaluation, branching on the
+    /// clause's recorded plan: sparse clauses keep the skip-list walk
+    /// (they touch fewer words than any lane sweep would); dense ones
+    /// sweep the whole span through `lanes` — identical answer either
+    /// way, because the skipped words are all-zero and can never
+    /// violate. The plan is decided once per clause ([`Self::from_mask`]
+    /// default or the compile pass's override), not re-derived here.
     pub fn evaluate_with(&self, literal_words: &[u64], lanes: WordLanes) -> bool {
         if self.is_empty() {
             return false;
         }
-        let words = self.include.len();
-        if self.nonzero_words.len() >= 8 && 2 * self.nonzero_words.len() >= words {
+        if self.lane_sweep {
+            let words = self.include.len();
             !lanes.violates(&self.include, &literal_words[..words])
         } else {
             self.evaluate(literal_words)
@@ -508,6 +542,38 @@ mod tests {
                     "f={f} level {}",
                     level.name()
                 );
+            }
+        });
+    }
+
+    #[test]
+    fn lane_sweep_rule_boundaries_and_override_are_exact() {
+        // The shared rule: >= 8 non-zero words AND covering >= half the
+        // span. Pinned here and consumed by compile::plan_for_mask.
+        assert!(!prefers_lane_sweep(7, 14));
+        assert!(prefers_lane_sweep(8, 16));
+        assert!(!prefers_lane_sweep(8, 17));
+        assert!(prefers_lane_sweep(16, 16));
+        assert!(!prefers_lane_sweep(0, 0));
+        // from_mask records the rule's verdict on the packed mask.
+        let dense: Vec<bool> = (0..1024).map(|l| l % 64 == 0).collect();
+        assert!(PackedClause::from_mask(&mask(dense.clone())).lane_sweep);
+        let sparse: Vec<bool> = (0..1024).map(|l| l % 256 == 0).collect();
+        assert!(!PackedClause::from_mask(&mask(sparse)).lane_sweep);
+        // Forcing either plan never changes the predicate.
+        use crate::testutil::prop;
+        prop("plan override is output-invariant", 60, |g| {
+            let f = g.usize(1..150);
+            let inc: Vec<bool> = (0..2 * f).map(|_| g.chance(g.f64_unit())).collect();
+            let pc = PackedClause::from_mask(&mask(inc));
+            let lw = pack_literals(&g.bools(f));
+            let want = pc.evaluate(&lw);
+            for forced in [false, true] {
+                let forced_pc = pc.clone().with_lane_sweep(forced);
+                for level in SimdLevel::available() {
+                    let lanes = WordLanes::new(level).unwrap();
+                    assert_eq!(forced_pc.evaluate_with(&lw, lanes), want, "f={f}");
+                }
             }
         });
     }

@@ -1,0 +1,877 @@
+//! Load-time model compilation — the shared pass between trained
+//! models and every serving engine.
+//!
+//! "Fast and Compact Tsetlin Machine Inference on CPUs Using
+//! Instruction-Level Optimization" (arXiv 2510.15653) gets its large
+//! CPU wins by specializing inference to the *trained* model rather
+//! than the engine: clauses that can never fire are deleted outright,
+//! the survivors are reordered by observed fire probability, and the
+//! evaluation strategy is chosen per clause instead of per engine. This
+//! module is that pass for the serving stack: [`ModelCompiler`] turns a
+//! validated [`MultiClassTmModel`] / [`CoTmModel`] into a
+//! [`CompiledMulticlass`] / [`CompiledCotm`] artifact that every engine
+//! family builds from (`from_compiled` in `fast_infer` / `index` /
+//! `compressed`), so representation decisions are made **once per
+//! model** instead of re-derived per engine.
+//!
+//! The pass has four products:
+//!
+//! 1. **Dead-clause elimination.** An *all-exclude* clause never fires
+//!    at inference (the pinned convention of every engine), and a
+//!    *contradictory* clause — one including both `x_i` and `¬x_i` —
+//!    can never see all its literals satisfied because exactly one of
+//!    each interleaved pair is set per sample. Both contribute exactly
+//!    0 to every class sum, so pruning them is **exact**: served sums
+//!    and argmax are bit-identical (`tests/engine_matrix.rs` is the
+//!    bar).
+//! 2. **Fire-probability clause reordering** ([`CompileMode::Full`])
+//!    from an optional calibration batch: clauses are sorted by
+//!    descending fire count with a **deterministic tie-break by
+//!    ascending source clause id**, so early-exit paths (the compressed
+//!    first-miss walk, the WTA-style resolve-early serving goal) do
+//!    their likely work first. Order is a speed decision only — sums
+//!    are invariant under any clause permutation because the compiled
+//!    artifact carries each clause's vote explicitly (see below).
+//! 3. **A per-clause execution plan** ([`ClausePlan`]): skip-list walk
+//!    for sparse clauses, whole-span lane sweep for dense ones, decided
+//!    from the clause's include-word density at compile time. This
+//!    replaces the per-engine heuristic that used to live inline in
+//!    `bitpack::PackedClause::evaluate_with` — the rule is the same
+//!    ([`super::bitpack::prefers_lane_sweep`]), but it is now decided
+//!    once, recorded in the artifact, and honored by the packed engine.
+//! 4. **Compile-time model stats** ([`CompileStats`]): post-prune
+//!    density over *live* clauses, postings count, and a clause-length
+//!    histogram. `coordinator/server.rs` feeds the density straight
+//!    into [`super::compressed::select_engine`] for the `auto-*`
+//!    resolution instead of rebuilding an engine to measure it.
+//!
+//! The multiclass engines used to derive vote polarity from clause
+//! index parity (`j % 2`) and the CoTM engines indexed the weight
+//! matrix by clause id — both break the moment pruning or reordering
+//! permutes ids. The compiled artifact therefore carries **explicit
+//! per-clause polarity** (multiclass) and **explicit per-clause weight
+//! columns** (CoTM), keyed by position, with the original id kept as
+//! [`CompiledClause::source`] for provenance and the reorder tie-break.
+//!
+//! Mirrored bit-for-bit by `python/modelcompile.py` (shared golden
+//! vectors in the tests below and `python/tests/test_modelcompile.py`),
+//! so the prune/reorder/plan logic is validated on toolchain-less CI
+//! images. The serializable form lives in [`super::serde`]
+//! (`tm-compiled v1`).
+
+use super::bitpack::{pack_bools, prefers_lane_sweep, words_for};
+use super::model::{make_literals, ClauseMask, CoTmModel, MultiClassTmModel, TmParams};
+use crate::error::{Error, Result};
+use crate::util::SplitMix64;
+
+/// Buckets in the compile-time clause-length histogram: bucket
+/// `min(len * 8 / 2F, 7)` counts live clauses by include-list length.
+pub const HIST_BUCKETS: usize = 8;
+
+/// How much of the compile pass runs (the `compile` ServeConfig knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CompileMode {
+    /// No pruning, no reordering: every clause is emitted in model
+    /// order. Plans and stats are still computed (both are free and
+    /// output-invariant).
+    Off,
+    /// Dead-clause elimination only — exact, so this is the default.
+    #[default]
+    Prune,
+    /// Prune plus fire-probability reordering from the calibration
+    /// batch (no calibration ⇒ prune order is kept).
+    Full,
+}
+
+impl CompileMode {
+    /// Stable lowercase name (TOML / CLI / artifact header).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompileMode::Off => "off",
+            CompileMode::Prune => "prune",
+            CompileMode::Full => "full",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CompileMode> {
+        match s {
+            "off" => Some(CompileMode::Off),
+            "prune" => Some(CompileMode::Prune),
+            "full" => Some(CompileMode::Full),
+            _ => None,
+        }
+    }
+}
+
+/// Per-clause execution plan for the packed engine, decided at compile
+/// time from include-word density (replacing the inline per-engine
+/// heuristic). Either plan computes the identical predicate — skipped
+/// words are all-zero and can never violate — so the choice is a speed
+/// decision only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClausePlan {
+    /// Walk only the clause's non-zero include words.
+    SkipList,
+    /// Sweep the whole literal span in SIMD lane steps.
+    LaneSweep,
+}
+
+impl ClausePlan {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClausePlan::SkipList => "skip",
+            ClausePlan::LaneSweep => "sweep",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ClausePlan> {
+        match s {
+            "skip" => Some(ClausePlan::SkipList),
+            "sweep" => Some(ClausePlan::LaneSweep),
+            _ => None,
+        }
+    }
+}
+
+/// Why the compile pass considers a clause dead (it can never fire at
+/// inference, so removing it is exact).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeadReason {
+    /// All-exclude mask: outputs 0 at inference by the pinned
+    /// convention of every engine.
+    AllExclude,
+    /// Includes both `x_i` and `¬x_i` for some feature: exactly one of
+    /// each interleaved pair is set per sample, so the AND can never be
+    /// satisfied.
+    Contradictory,
+}
+
+/// Is this clause dead at inference? All-exclude takes precedence in
+/// the report (an empty mask is trivially non-contradictory).
+pub fn dead_reason(mask: &ClauseMask) -> Option<DeadReason> {
+    if mask.is_empty() {
+        return Some(DeadReason::AllExclude);
+    }
+    let contradictory = mask
+        .include
+        .chunks(2)
+        .any(|pair| pair.len() == 2 && pair[0] && pair[1]);
+    if contradictory {
+        Some(DeadReason::Contradictory)
+    } else {
+        None
+    }
+}
+
+/// The compile-time plan decision for one clause: lane sweep iff the
+/// packed include mask is dense enough in words
+/// ([`super::bitpack::prefers_lane_sweep`] — the same rule the packed
+/// engine used to apply inline per evaluation).
+pub fn plan_for_mask(mask: &ClauseMask) -> ClausePlan {
+    let words = words_for(mask.include.len());
+    let nonzero = pack_bools(&mask.include).iter().filter(|&&w| w != 0).count();
+    if prefers_lane_sweep(nonzero, words) {
+        ClausePlan::LaneSweep
+    } else {
+        ClausePlan::SkipList
+    }
+}
+
+/// One live clause of a compiled artifact, in execution order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CompiledClause {
+    /// Include mask over the 2F interleaved literals.
+    pub mask: ClauseMask,
+    /// Original clause id (within its class for multiclass, within the
+    /// shared pool for CoTM) — provenance, and the reorder tie-break.
+    pub source: u32,
+    /// Execution plan for the packed engine.
+    pub plan: ClausePlan,
+}
+
+impl CompiledClause {
+    /// Pack for the bit-parallel engine, carrying this clause's
+    /// compile-time plan instead of the pack-time default.
+    pub fn packed(&self) -> super::bitpack::PackedClause {
+        super::bitpack::PackedClause::from_mask(&self.mask)
+            .with_lane_sweep(self.plan == ClausePlan::LaneSweep)
+    }
+}
+
+/// Compile-time model stats, computed over the model's **live**
+/// clauses (the dead ones contribute zero useful work, so counting
+/// them in the denominator skews the `auto-*` crossover — the density
+/// accounting bug this pass fixed).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompileStats {
+    /// Clauses in the source model (K·C multiclass, C CoTM).
+    pub total_clauses: usize,
+    /// Clauses that can fire (total − dead).
+    pub live_clauses: usize,
+    /// Dead by all-exclude mask.
+    pub dead_all_exclude: usize,
+    /// Dead by contradictory include pair.
+    pub dead_contradictory: usize,
+    /// Included literals across live clauses.
+    pub postings: usize,
+    /// `postings / (live_clauses · 2F)`; 0.0 when no clause is live.
+    /// This is the `auto-*` selection input.
+    pub density: f64,
+    /// Live clauses whose plan is [`ClausePlan::LaneSweep`].
+    pub lane_sweep_clauses: usize,
+    /// Live clauses whose plan is [`ClausePlan::SkipList`].
+    pub skip_list_clauses: usize,
+    /// Live-clause include-list lengths, bucketed as
+    /// `min(len · HIST_BUCKETS / 2F, HIST_BUCKETS − 1)`.
+    pub length_histogram: [usize; HIST_BUCKETS],
+}
+
+impl CompileStats {
+    /// Stats over a model's clause masks (an intrinsic property of the
+    /// model — the same whatever [`CompileMode`] ran).
+    pub fn from_masks<'a>(
+        literals: usize,
+        masks: impl IntoIterator<Item = &'a ClauseMask>,
+    ) -> CompileStats {
+        let mut s = CompileStats {
+            total_clauses: 0,
+            live_clauses: 0,
+            dead_all_exclude: 0,
+            dead_contradictory: 0,
+            postings: 0,
+            density: 0.0,
+            lane_sweep_clauses: 0,
+            skip_list_clauses: 0,
+            length_histogram: [0; HIST_BUCKETS],
+        };
+        for mask in masks {
+            s.total_clauses += 1;
+            match dead_reason(mask) {
+                Some(DeadReason::AllExclude) => s.dead_all_exclude += 1,
+                Some(DeadReason::Contradictory) => s.dead_contradictory += 1,
+                None => {
+                    s.live_clauses += 1;
+                    let len = mask.included_count();
+                    s.postings += len;
+                    match plan_for_mask(mask) {
+                        ClausePlan::LaneSweep => s.lane_sweep_clauses += 1,
+                        ClausePlan::SkipList => s.skip_list_clauses += 1,
+                    }
+                    let bucket = if literals == 0 {
+                        0
+                    } else {
+                        (len * HIST_BUCKETS / literals).min(HIST_BUCKETS - 1)
+                    };
+                    s.length_histogram[bucket] += 1;
+                }
+            }
+        }
+        if s.live_clauses > 0 && literals > 0 {
+            s.density = s.postings as f64 / (s.live_clauses * literals) as f64;
+        }
+        s
+    }
+}
+
+/// Compiled multi-class TM artifact: per class, live clauses in
+/// execution order with **explicit** vote polarity (the source-index
+/// parity rule of Eq. 1, frozen before pruning/reordering permuted
+/// ids).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompiledMulticlass {
+    pub params: TmParams,
+    /// `[class]` → live clauses, in execution order.
+    pub classes: Vec<Vec<CompiledClause>>,
+    /// `[class]` → per live clause, +1/−1 vote polarity (parallel to
+    /// `classes`).
+    pub polarities: Vec<Vec<i32>>,
+    pub stats: CompileStats,
+    pub mode: CompileMode,
+}
+
+impl CompiledMulticlass {
+    /// Structural validation — the artifact boundary check `from_compiled`
+    /// constructors and the serde loader rely on.
+    pub fn validate(&self) -> Result<()> {
+        self.params.validate()?;
+        if self.classes.len() != self.params.classes
+            || self.polarities.len() != self.params.classes
+        {
+            return Err(Error::model("compiled class count mismatch"));
+        }
+        for (k, (class, pols)) in self.classes.iter().zip(&self.polarities).enumerate() {
+            if class.len() != pols.len() {
+                return Err(Error::model(format!("polarity count mismatch in class {k}")));
+            }
+            if class.len() > self.params.clauses {
+                return Err(Error::model(format!("class {k} has more clauses than the model")));
+            }
+            for (cc, &pol) in class.iter().zip(pols) {
+                if cc.mask.include.len() != self.params.literals() {
+                    return Err(Error::model(format!("literal width mismatch in class {k}")));
+                }
+                if cc.source as usize >= self.params.clauses {
+                    return Err(Error::model(format!("source id out of range in class {k}")));
+                }
+                if pol != 1 && pol != -1 {
+                    return Err(Error::model(format!("polarity must be ±1 in class {k}")));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Compiled CoTM artifact: the shared live clause pool in execution
+/// order plus **explicit** per-clause weight columns (pruned and
+/// permuted in lockstep with the clauses).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompiledCotm {
+    pub params: TmParams,
+    /// Live clauses, in execution order.
+    pub clauses: Vec<CompiledClause>,
+    /// `[live clause][class]` signed weight columns (transposed from
+    /// the model's `[class][clause]` rows).
+    pub weight_cols: Vec<Vec<i32>>,
+    pub stats: CompileStats,
+    pub mode: CompileMode,
+}
+
+impl CompiledCotm {
+    /// Structural validation (see [`CompiledMulticlass::validate`]).
+    pub fn validate(&self) -> Result<()> {
+        self.params.validate()?;
+        if self.weight_cols.len() != self.clauses.len() {
+            return Err(Error::model("compiled weight column count mismatch"));
+        }
+        if self.clauses.len() > self.params.clauses {
+            return Err(Error::model("compiled artifact has more clauses than the model"));
+        }
+        for (cc, col) in self.clauses.iter().zip(&self.weight_cols) {
+            if cc.mask.include.len() != self.params.literals() {
+                return Err(Error::model("compiled literal width mismatch"));
+            }
+            if cc.source as usize >= self.params.clauses {
+                return Err(Error::model("compiled source id out of range"));
+            }
+            if col.len() != self.params.classes {
+                return Err(Error::model("compiled weight column width mismatch"));
+            }
+            if col.iter().any(|w| w.abs() > self.params.max_weight) {
+                return Err(Error::model("compiled weight exceeds max_weight"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The model→artifact compiler. Construct with a [`CompileMode`], add
+/// a calibration batch for [`CompileMode::Full`] reordering, then
+/// [`Self::compile_multiclass`] / [`Self::compile_cotm`].
+#[derive(Debug, Clone, Default)]
+pub struct ModelCompiler {
+    mode: CompileMode,
+    calibration: Option<Vec<Vec<bool>>>,
+}
+
+impl ModelCompiler {
+    pub fn new(mode: CompileMode) -> ModelCompiler {
+        ModelCompiler { mode, calibration: None }
+    }
+
+    pub fn mode(&self) -> CompileMode {
+        self.mode
+    }
+
+    /// Reorder clauses by fire probability over `rows` (each a
+    /// length-F feature vector; widths are checked at compile time).
+    pub fn with_calibration(mut self, rows: Vec<Vec<bool>>) -> ModelCompiler {
+        self.calibration = Some(rows);
+        self
+    }
+
+    /// A deterministic synthetic calibration batch (SplitMix64-seeded
+    /// uniform features) — what the server uses for `compile = "full"`
+    /// when no real traffic sample is available. Reordering is
+    /// output-invariant, so a unrepresentative batch can only cost
+    /// speed, never correctness.
+    pub fn with_synthetic_calibration(
+        self,
+        features: usize,
+        samples: usize,
+        seed: u64,
+    ) -> ModelCompiler {
+        let mut rng = SplitMix64::new(seed);
+        let rows = (0..samples)
+            .map(|_| (0..features).map(|_| rng.next_bool()).collect())
+            .collect();
+        self.with_calibration(rows)
+    }
+
+    fn check_calibration(&self, features: usize) -> Result<()> {
+        if let Some(rows) = &self.calibration {
+            for (i, row) in rows.iter().enumerate() {
+                if row.len() != features {
+                    return Err(Error::model(format!(
+                        "calibration row {i} width {} != F={features}",
+                        row.len()
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Fire count of each emitted clause over the calibration batch
+    /// (None when there is no batch — order is then left unchanged).
+    fn fire_counts(&self, clauses: &[CompiledClause]) -> Option<Vec<u32>> {
+        let rows = self.calibration.as_ref()?;
+        let lits: Vec<Vec<bool>> = rows.iter().map(|r| make_literals(r)).collect();
+        Some(
+            clauses
+                .iter()
+                .map(|cc| lits.iter().filter(|l| cc.mask.evaluate(l)).count() as u32)
+                .collect(),
+        )
+    }
+
+    /// Sort `clauses` (and any parallel payload, via the returned
+    /// permutation applied by the caller) by descending fire count,
+    /// ties broken by ascending source id — fully deterministic.
+    fn reorder(&self, clauses: &mut Vec<CompiledClause>) -> Option<Vec<usize>> {
+        if self.mode != CompileMode::Full {
+            return None;
+        }
+        let fires = self.fire_counts(clauses)?;
+        let mut order: Vec<usize> = (0..clauses.len()).collect();
+        order.sort_by_key(|&i| (std::cmp::Reverse(fires[i]), clauses[i].source));
+        let reordered: Vec<CompiledClause> =
+            order.iter().map(|&i| clauses[i].clone()).collect();
+        *clauses = reordered;
+        Some(order)
+    }
+
+    /// Emit the live clauses of one mask list in model order ([`
+    /// CompileMode::Off`] keeps dead clauses too — it exists to serve
+    /// the legacy pipeline byte-for-byte).
+    fn emit(&self, masks: &[ClauseMask]) -> Vec<CompiledClause> {
+        masks
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| self.mode == CompileMode::Off || dead_reason(m).is_none())
+            .map(|(j, m)| CompiledClause {
+                mask: m.clone(),
+                source: j as u32,
+                plan: plan_for_mask(m),
+            })
+            .collect()
+    }
+
+    pub fn compile_multiclass(&self, model: &MultiClassTmModel) -> Result<CompiledMulticlass> {
+        model.validate()?;
+        self.check_calibration(model.params.features)?;
+        let mut classes = Vec::with_capacity(model.params.classes);
+        let mut polarities = Vec::with_capacity(model.params.classes);
+        for class in &model.clauses {
+            let mut emitted = self.emit(class);
+            self.reorder(&mut emitted);
+            // Polarity is the *source* index parity (Eq. 1), frozen
+            // into the artifact so pruning/reordering cannot skew sums.
+            let pols = emitted
+                .iter()
+                .map(|cc| if cc.source % 2 == 0 { 1 } else { -1 })
+                .collect();
+            classes.push(emitted);
+            polarities.push(pols);
+        }
+        let stats = CompileStats::from_masks(
+            model.params.literals(),
+            model.clauses.iter().flatten(),
+        );
+        Ok(CompiledMulticlass {
+            params: model.params.clone(),
+            classes,
+            polarities,
+            stats,
+            mode: self.mode,
+        })
+    }
+
+    pub fn compile_cotm(&self, model: &CoTmModel) -> Result<CompiledCotm> {
+        model.validate()?;
+        self.check_calibration(model.params.features)?;
+        let mut clauses = self.emit(&model.clauses);
+        self.reorder(&mut clauses);
+        // Weight columns follow their clause through prune + reorder.
+        let weight_cols = clauses
+            .iter()
+            .map(|cc| {
+                model
+                    .weights
+                    .iter()
+                    .map(|row| row[cc.source as usize])
+                    .collect()
+            })
+            .collect();
+        let stats = CompileStats::from_masks(model.params.literals(), model.clauses.iter());
+        Ok(CompiledCotm {
+            params: model.params.clone(),
+            clauses,
+            weight_cols,
+            stats,
+            mode: self.mode,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::infer::{cotm_class_sums, multiclass_class_sums};
+
+    fn mask_of(literals: usize, lits: &[usize]) -> ClauseMask {
+        let mut m = ClauseMask::empty(literals);
+        for &l in lits {
+            m.include[l] = true;
+        }
+        m
+    }
+
+    // ------------------------------------------------------------------
+    // Cross-language golden vectors, shared with python/modelcompile.py
+    // (python/tests/test_modelcompile.py asserts the identical prune
+    // counts, stats, plans and reordered source orders). The golden
+    // models and calibration samples are the same closed-form formulas
+    // the invindex/compressed mirrors pin.
+    // ------------------------------------------------------------------
+
+    /// F=9, C=4/class, K=3; include(k, j, l) = (3l + 5j + 7k) % 11 == 0.
+    fn golden_multiclass() -> MultiClassTmModel {
+        let p = TmParams { features: 9, clauses: 4, classes: 3, ..TmParams::iris_paper() };
+        let mut m = MultiClassTmModel::zeroed(p);
+        for (k, class) in m.clauses.iter_mut().enumerate() {
+            for (j, clause) in class.iter_mut().enumerate() {
+                for l in 0..18 {
+                    clause.include[l] = (3 * l + 5 * j + 7 * k) % 11 == 0;
+                }
+            }
+        }
+        m
+    }
+
+    /// F=9, C=6, K=3; include(j, l) = (5l + 3j) % 7 == 0,
+    /// weight(k, j) = (j + 2k) % 7 − 3.
+    fn golden_cotm() -> CoTmModel {
+        let p = TmParams { features: 9, clauses: 6, classes: 3, ..TmParams::iris_paper() };
+        let mut m = CoTmModel::zeroed(p);
+        for (j, clause) in m.clauses.iter_mut().enumerate() {
+            for l in 0..18 {
+                clause.include[l] = (5 * l + 3 * j) % 7 == 0;
+            }
+        }
+        for (k, row) in m.weights.iter_mut().enumerate() {
+            for (j, w) in row.iter_mut().enumerate() {
+                *w = ((j + 2 * k) % 7) as i32 - 3;
+            }
+        }
+        m
+    }
+
+    /// Sample s: feature i = (i² + 3is + 2s) % 7 < 3.
+    fn golden_sample(s: usize) -> Vec<bool> {
+        (0..9).map(|i| (i * i + 3 * i * s + 2 * s) % 7 < 3).collect()
+    }
+
+    fn golden_calibration() -> Vec<Vec<bool>> {
+        (0..6).map(golden_sample).collect()
+    }
+
+    /// The hand-worked dead-clause model (multiclass): F=3, K=2, C=4.
+    /// class 0: {1,4}, all-exclude, {2,3} (contradictory x1/¬x1), {0}.
+    /// class 1: {0,1} (contradictory x0/¬x0), {5}, {0,2}, all-exclude.
+    fn dead_multiclass() -> MultiClassTmModel {
+        let p = TmParams { features: 3, clauses: 4, classes: 2, ..TmParams::iris_paper() };
+        let mut m = MultiClassTmModel::zeroed(p);
+        m.clauses[0][0] = mask_of(6, &[1, 4]);
+        m.clauses[0][2] = mask_of(6, &[2, 3]);
+        m.clauses[0][3] = mask_of(6, &[0]);
+        m.clauses[1][0] = mask_of(6, &[0, 1]);
+        m.clauses[1][1] = mask_of(6, &[5]);
+        m.clauses[1][2] = mask_of(6, &[0, 2]);
+        m
+    }
+
+    /// The hand-worked dead-clause model (CoTM): F=3, C=5, K=2.
+    /// Clauses {4}, all-exclude, {0,4}, {2,3} (contradictory), {1}.
+    fn dead_cotm() -> CoTmModel {
+        let p = TmParams { features: 3, clauses: 5, classes: 2, ..TmParams::iris_paper() };
+        let mut m = CoTmModel::zeroed(p);
+        m.clauses[0] = mask_of(6, &[4]);
+        m.clauses[2] = mask_of(6, &[0, 4]);
+        m.clauses[3] = mask_of(6, &[2, 3]);
+        m.clauses[4] = mask_of(6, &[1]);
+        m.weights = vec![vec![1, 3, -1, 5, 0], vec![-2, 3, 2, 5, 1]];
+        m
+    }
+
+    /// All 8 feature combinations of F=3 — the hand-worked calibration.
+    fn all_combos() -> Vec<Vec<bool>> {
+        (0..8u32)
+            .map(|bits| (0..3).map(|i| (bits >> i) & 1 == 1).collect())
+            .collect()
+    }
+
+    #[test]
+    fn dead_reason_classifies_the_three_kinds() {
+        assert_eq!(dead_reason(&ClauseMask::empty(6)), Some(DeadReason::AllExclude));
+        assert_eq!(
+            dead_reason(&mask_of(6, &[2, 3])),
+            Some(DeadReason::Contradictory)
+        );
+        assert_eq!(dead_reason(&mask_of(6, &[0, 2])), None);
+        // A pair split across features is not a contradiction.
+        assert_eq!(dead_reason(&mask_of(6, &[1, 2])), None);
+        // Zero-width masks are the all-exclude degenerate case.
+        assert_eq!(dead_reason(&ClauseMask::empty(0)), Some(DeadReason::AllExclude));
+    }
+
+    #[test]
+    fn plan_rule_matches_the_packed_heuristic_boundaries() {
+        // Shared with python/tests/test_modelcompile.py: the rule is
+        // lane-sweep iff nonzero_words >= 8 and 2·nonzero >= words.
+        // 1 word, sparse -> skip.
+        assert_eq!(plan_for_mask(&mask_of(6, &[0])), ClausePlan::SkipList);
+        // 16 words, one include per word -> sweep (16 >= 8, 32 >= 16).
+        let dense: Vec<usize> = (0..1024).step_by(64).collect();
+        assert_eq!(plan_for_mask(&mask_of(1024, &dense)), ClausePlan::LaneSweep);
+        // 16 words, every other word -> boundary sweep (8 >= 8, 16 >= 16).
+        let half: Vec<usize> = (0..1024).step_by(128).collect();
+        assert_eq!(plan_for_mask(&mask_of(1024, &half)), ClausePlan::LaneSweep);
+        // 16 words, every 4th word -> skip (4 < 8).
+        let quarter: Vec<usize> = (0..1024).step_by(256).collect();
+        assert_eq!(plan_for_mask(&mask_of(1024, &quarter)), ClausePlan::SkipList);
+        // 14 words, 7 nonzero -> skip (7 < 8 even though 14 >= 14).
+        let seven: Vec<usize> = (0..896).step_by(128).collect();
+        assert_eq!(plan_for_mask(&mask_of(896, &seven)), ClausePlan::SkipList);
+        // 10 words, all nonzero -> sweep.
+        let ten: Vec<usize> = (0..640).step_by(64).collect();
+        assert_eq!(plan_for_mask(&mask_of(640, &ten)), ClausePlan::LaneSweep);
+    }
+
+    #[test]
+    fn mode_and_plan_names_roundtrip() {
+        for mode in [CompileMode::Off, CompileMode::Prune, CompileMode::Full] {
+            assert_eq!(CompileMode::parse(mode.name()), Some(mode));
+        }
+        assert_eq!(CompileMode::parse("bogus"), None);
+        assert_eq!(CompileMode::default(), CompileMode::Prune);
+        for plan in [ClausePlan::SkipList, ClausePlan::LaneSweep] {
+            assert_eq!(ClausePlan::parse(plan.name()), Some(plan));
+        }
+        assert_eq!(ClausePlan::parse("bogus"), None);
+    }
+
+    #[test]
+    fn dead_multiclass_prunes_exactly_and_keeps_explicit_polarity() {
+        let m = dead_multiclass();
+        let c = ModelCompiler::new(CompileMode::Prune).compile_multiclass(&m).unwrap();
+        c.validate().unwrap();
+        // Pinned by the Python mirror: stats of the hand-worked model.
+        assert_eq!(c.stats.total_clauses, 8);
+        assert_eq!(c.stats.dead_all_exclude, 2);
+        assert_eq!(c.stats.dead_contradictory, 2);
+        assert_eq!(c.stats.live_clauses, 4);
+        assert_eq!(c.stats.postings, 6);
+        assert!((c.stats.density - 0.25).abs() < 1e-12);
+        assert_eq!(c.stats.length_histogram, [0, 2, 2, 0, 0, 0, 0, 0]);
+        assert_eq!(c.stats.skip_list_clauses, 4);
+        assert_eq!(c.stats.lane_sweep_clauses, 0);
+        // Live clauses in source order, polarity from source parity.
+        let srcs: Vec<Vec<u32>> = c
+            .classes
+            .iter()
+            .map(|cl| cl.iter().map(|cc| cc.source).collect())
+            .collect();
+        assert_eq!(srcs, vec![vec![0, 3], vec![1, 2]]);
+        assert_eq!(c.polarities, vec![vec![1, -1], vec![-1, 1]]);
+    }
+
+    #[test]
+    fn full_reorder_is_deterministic_and_pinned() {
+        // Hand-worked fire counts over all 8 F=3 combos:
+        // class 0: {1,4} fires 2, {0} fires 4 -> order [3, 0].
+        // class 1: {5} fires 4, {0,2} fires 2 -> order [1, 2].
+        let m = dead_multiclass();
+        let c = ModelCompiler::new(CompileMode::Full)
+            .with_calibration(all_combos())
+            .compile_multiclass(&m)
+            .unwrap();
+        let srcs: Vec<Vec<u32>> = c
+            .classes
+            .iter()
+            .map(|cl| cl.iter().map(|cc| cc.source).collect())
+            .collect();
+        assert_eq!(srcs, vec![vec![3, 0], vec![1, 2]]);
+        assert_eq!(c.polarities, vec![vec![-1, 1], vec![-1, 1]]);
+
+        // CoTM: fires {4}:4, {0,4}:2, {1}:4 -> order [0, 4, 2], weight
+        // columns permuted in lockstep.
+        let co = ModelCompiler::new(CompileMode::Full)
+            .with_calibration(all_combos())
+            .compile_cotm(&dead_cotm())
+            .unwrap();
+        co.validate().unwrap();
+        let srcs: Vec<u32> = co.clauses.iter().map(|cc| cc.source).collect();
+        assert_eq!(srcs, vec![0, 4, 2]);
+        assert_eq!(co.weight_cols, vec![vec![1, -2], vec![0, 1], vec![-1, 2]]);
+        assert_eq!(co.stats.total_clauses, 5);
+        assert_eq!(co.stats.dead_all_exclude, 1);
+        assert_eq!(co.stats.dead_contradictory, 1);
+        assert_eq!(co.stats.live_clauses, 3);
+        assert_eq!(co.stats.postings, 4);
+        assert!((co.stats.density - 4.0 / 18.0).abs() < 1e-12);
+        assert_eq!(co.stats.length_histogram, [0, 2, 1, 0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn golden_models_compile_to_pinned_stats_and_orders() {
+        // Shared with python/tests/test_modelcompile.py — both
+        // languages derive these from the closed-form golden formulas.
+        let mc = ModelCompiler::new(CompileMode::Full)
+            .with_calibration(golden_calibration())
+            .compile_multiclass(&golden_multiclass())
+            .unwrap();
+        assert_eq!(mc.stats.total_clauses, 12);
+        assert_eq!(mc.stats.live_clauses, 12);
+        assert_eq!(mc.stats.postings, 21);
+        assert!((mc.stats.density - 21.0 / (12.0 * 18.0)).abs() < 1e-12);
+        assert_eq!(mc.stats.length_histogram, [12, 0, 0, 0, 0, 0, 0, 0]);
+        let srcs: Vec<Vec<u32>> = mc
+            .classes
+            .iter()
+            .map(|cl| cl.iter().map(|cc| cc.source).collect())
+            .collect();
+        assert_eq!(srcs, vec![vec![1, 2, 0, 3], vec![1, 0, 3, 2], vec![0, 2, 3, 1]]);
+
+        let co = ModelCompiler::new(CompileMode::Full)
+            .with_calibration(golden_calibration())
+            .compile_cotm(&golden_cotm())
+            .unwrap();
+        assert_eq!(co.stats.postings, 15);
+        assert!((co.stats.density - 15.0 / (6.0 * 18.0)).abs() < 1e-12);
+        assert_eq!(co.stats.length_histogram, [3, 3, 0, 0, 0, 0, 0, 0]);
+        let srcs: Vec<u32> = co.clauses.iter().map(|cc| cc.source).collect();
+        assert_eq!(srcs, vec![3, 0, 1, 4, 5, 2]);
+    }
+
+    #[test]
+    fn off_mode_emits_every_clause_in_model_order() {
+        let m = dead_multiclass();
+        let c = ModelCompiler::new(CompileMode::Off).compile_multiclass(&m).unwrap();
+        for (k, class) in c.classes.iter().enumerate() {
+            assert_eq!(class.len(), 4, "class {k}");
+            let srcs: Vec<u32> = class.iter().map(|cc| cc.source).collect();
+            assert_eq!(srcs, vec![0, 1, 2, 3]);
+        }
+        // Stats are mode-independent (a property of the model).
+        let pruned = ModelCompiler::new(CompileMode::Prune).compile_multiclass(&m).unwrap();
+        assert_eq!(c.stats, pruned.stats);
+    }
+
+    #[test]
+    fn full_without_calibration_keeps_prune_order() {
+        let m = dead_cotm();
+        let full = ModelCompiler::new(CompileMode::Full).compile_cotm(&m).unwrap();
+        let pruned = ModelCompiler::new(CompileMode::Prune).compile_cotm(&m).unwrap();
+        assert_eq!(full.clauses, pruned.clauses);
+        assert_eq!(full.weight_cols, pruned.weight_cols);
+    }
+
+    #[test]
+    fn compiled_sums_are_bit_identical_via_direct_walk() {
+        // Walk the compiled artifacts directly (mask evaluate + explicit
+        // polarity/weights) and diff against the scalar reference on
+        // every F=3 input — prune and reorder must be exact.
+        let mc_model = dead_multiclass();
+        let co_model = dead_cotm();
+        for mode in [CompileMode::Off, CompileMode::Prune, CompileMode::Full] {
+            let compiler = ModelCompiler::new(mode).with_calibration(all_combos());
+            let mc = compiler.compile_multiclass(&mc_model).unwrap();
+            let co = compiler.compile_cotm(&co_model).unwrap();
+            for x in all_combos() {
+                let lits = make_literals(&x);
+                let sums: Vec<i32> = mc
+                    .classes
+                    .iter()
+                    .zip(&mc.polarities)
+                    .map(|(class, pols)| {
+                        class
+                            .iter()
+                            .zip(pols)
+                            .filter(|(cc, _)| cc.mask.evaluate(&lits))
+                            .map(|(_, &p)| p)
+                            .sum()
+                    })
+                    .collect();
+                assert_eq!(sums, multiclass_class_sums(&mc_model, &x), "{mode:?} {x:?}");
+                let mut co_sums = vec![0i32; 2];
+                for (cc, col) in co.clauses.iter().zip(&co.weight_cols) {
+                    if cc.mask.evaluate(&lits) {
+                        for (s, &w) in co_sums.iter_mut().zip(col) {
+                            *s += w;
+                        }
+                    }
+                }
+                assert_eq!(co_sums, cotm_class_sums(&co_model, &x), "{mode:?} {x:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_dead_model_compiles_to_zero_live_clauses() {
+        let p = TmParams { features: 3, clauses: 2, classes: 2, ..TmParams::iris_paper() };
+        let mut m = MultiClassTmModel::zeroed(p.clone());
+        m.clauses[1][0] = mask_of(6, &[0, 1]); // contradictory
+        let c = ModelCompiler::new(CompileMode::Prune).compile_multiclass(&m).unwrap();
+        assert_eq!(c.stats.live_clauses, 0);
+        assert_eq!(c.stats.density, 0.0);
+        assert!(c.classes.iter().all(|cl| cl.is_empty()));
+        c.validate().unwrap();
+
+        let co = ModelCompiler::new(CompileMode::Full)
+            .compile_cotm(&CoTmModel::zeroed(p))
+            .unwrap();
+        assert!(co.clauses.is_empty());
+        assert_eq!(co.stats.density, 0.0);
+    }
+
+    #[test]
+    fn synthetic_calibration_is_deterministic() {
+        let a = ModelCompiler::new(CompileMode::Full)
+            .with_synthetic_calibration(9, 16, 42)
+            .compile_cotm(&golden_cotm())
+            .unwrap();
+        let b = ModelCompiler::new(CompileMode::Full)
+            .with_synthetic_calibration(9, 16, 42)
+            .compile_cotm(&golden_cotm())
+            .unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn compile_rejects_invalid_inputs() {
+        let odd = TmParams { features: 2, clauses: 7, classes: 2, ..TmParams::iris_paper() };
+        assert!(ModelCompiler::default()
+            .compile_multiclass(&MultiClassTmModel::zeroed(odd))
+            .is_err());
+        // Calibration width mismatch is a compile error.
+        assert!(ModelCompiler::new(CompileMode::Full)
+            .with_calibration(vec![vec![true; 4]])
+            .compile_cotm(&dead_cotm())
+            .is_err());
+        // Artifact validation catches a tampered polarity.
+        let mut c = ModelCompiler::default().compile_multiclass(&dead_multiclass()).unwrap();
+        c.polarities[0][0] = 2;
+        assert!(c.validate().is_err());
+    }
+}

@@ -41,6 +41,7 @@
 //! `python/compressed.py` (shared golden vectors) so it validates on
 //! toolchain-less CI images.
 
+use super::compile::{CompiledCotm, CompiledMulticlass, ModelCompiler};
 use super::fast_infer::{BatchEngine, BatchResult};
 use super::index::prefer_indexed;
 use super::infer::predict_argmax;
@@ -157,9 +158,20 @@ impl CompressedModel {
         self.literals.len()
     }
 
-    /// Included-literal density of the compressed model.
+    /// Clauses with a non-empty include list (all-exclude clauses never
+    /// fire and do no work, so they don't belong in any density
+    /// denominator).
+    pub fn live_clauses(&self) -> usize {
+        (0..self.num_clauses())
+            .filter(|&c| self.offsets[c + 1] > self.offsets[c])
+            .count()
+    }
+
+    /// Included-literal density of the compressed model, over **live**
+    /// clauses only (see `index::included_density` for why dead clauses
+    /// must not dilute the `auto-*` selection input).
     pub fn density(&self) -> f64 {
-        let total = self.num_clauses() * 2 * self.features;
+        let total = self.live_clauses() * 2 * self.features;
         if total == 0 {
             0.0
         } else {
@@ -224,25 +236,50 @@ impl CompressedModel {
     }
 }
 
-/// Compressed multi-class TM engine: one compressed store over the K·C
-/// flattened clauses (`id = class · C + j`, so each class's clauses are
-/// one contiguous id group), alternating +/− polarity per class
-/// (Eq. 1).
+/// Compressed multi-class TM engine: one compressed store over the
+/// flattened live clauses of the compiled artifact, each id carrying
+/// its **explicit** `(class, polarity)` vote (the compile pass prunes
+/// and reorders, so the old `id = class · C + j` decode no longer
+/// holds; class groups remain contiguous id ranges by construction).
 #[derive(Debug, Clone)]
 pub struct CompressedMulticlass {
     pub params: TmParams,
     model: CompressedModel,
+    /// Flat clause id → `(class, ±1 polarity)`.
+    votes: Vec<(u32, i32)>,
 }
 
 impl CompressedMulticlass {
-    /// Compile a validated model into the compressed store, with the
+    /// Compile a validated model (default [`ModelCompiler`]: exact
+    /// dead-clause pruning) into the compressed store, with the
     /// frequency reorder applied (hot literals first in each walk).
     pub fn from_model(model: &MultiClassTmModel) -> Result<CompressedMulticlass> {
-        model.validate()?;
-        let mut compressed =
-            CompressedModel::build(model.params.features, model.clauses.iter().flatten());
+        Self::from_compiled(&ModelCompiler::default().compile_multiclass(model)?)
+    }
+
+    /// Build from an already-compiled artifact — the shared pipeline
+    /// entry point.
+    pub fn from_compiled(compiled: &CompiledMulticlass) -> Result<CompressedMulticlass> {
+        compiled.validate()?;
+        let mut compressed = CompressedModel::build(
+            compiled.params.features,
+            compiled.classes.iter().flatten().map(|cc| &cc.mask),
+        );
         compressed.reorder_by_frequency();
-        Ok(CompressedMulticlass { params: model.params.clone(), model: compressed })
+        let votes = compiled
+            .classes
+            .iter()
+            .zip(&compiled.polarities)
+            .enumerate()
+            .flat_map(|(k, (class, pols))| {
+                class.iter().zip(pols).map(move |(_, &pol)| (k as u32, pol))
+            })
+            .collect();
+        Ok(CompressedMulticlass {
+            params: compiled.params.clone(),
+            model: compressed,
+            votes,
+        })
     }
 
     /// Included-literal density (the `auto-*` selection input).
@@ -256,11 +293,10 @@ impl CompressedMulticlass {
     }
 
     fn sums_from_fired(&self, fired: &[u32]) -> Vec<i32> {
-        let c = self.params.clauses;
         let mut sums = vec![0i32; self.params.classes];
         for &id in fired {
-            let (class, j) = (id as usize / c, id as usize % c);
-            sums[class] += if j % 2 == 0 { 1 } else { -1 };
+            let (class, polarity) = self.votes[id as usize];
+            sums[class as usize] += polarity;
         }
         sums
     }
@@ -315,17 +351,27 @@ pub struct CompressedCotm {
 }
 
 impl CompressedCotm {
-    /// Compile a validated model into the compressed store, with the
+    /// Compile a validated model (default [`ModelCompiler`]: exact
+    /// dead-clause pruning) into the compressed store, with the
     /// frequency reorder applied.
     pub fn from_model(model: &CoTmModel) -> Result<CompressedCotm> {
-        model.validate()?;
-        let mut compressed =
-            CompressedModel::build(model.params.features, model.clauses.iter());
+        Self::from_compiled(&ModelCompiler::default().compile_cotm(model)?)
+    }
+
+    /// Build from an already-compiled artifact: clause pool and weight
+    /// columns arrive pruned and reordered in lockstep.
+    pub fn from_compiled(compiled: &CompiledCotm) -> Result<CompressedCotm> {
+        compiled.validate()?;
+        let mut compressed = CompressedModel::build(
+            compiled.params.features,
+            compiled.clauses.iter().map(|cc| &cc.mask),
+        );
         compressed.reorder_by_frequency();
-        let weight_cols = (0..model.params.clauses)
-            .map(|j| model.weights.iter().map(|row| row[j]).collect())
-            .collect();
-        Ok(CompressedCotm { params: model.params.clone(), model: compressed, weight_cols })
+        Ok(CompressedCotm {
+            params: compiled.params.clone(),
+            model: compressed,
+            weight_cols: compiled.weight_cols.clone(),
+        })
     }
 
     /// Included-literal density (the `auto-*` selection input).
@@ -693,6 +739,60 @@ mod tests {
         let zeroed = CompressedCotm::from_model(&CoTmModel::zeroed(tiny_params())).unwrap();
         assert_eq!(zeroed.density(), 0.0);
         assert_eq!(zeroed.postings(), 0);
+    }
+
+    #[test]
+    fn dead_clauses_do_not_flip_the_auto_choice() {
+        // Regression (PR 8), compressed-side twin of the index.rs test:
+        // 9 all-exclude clauses + 1 half-dense live clause. The stale
+        // all-clauses denominator measured 5/(10·10) = 0.05 — exactly
+        // the indexed threshold — so auto-* picked the indexed engine
+        // for a model whose only working clause is 50% dense. Live
+        // accounting measures 0.5 and picks packed.
+        let mut masks = vec![ClauseMask::empty(10); 10];
+        for l in [0, 2, 4, 6, 8] {
+            masks[0].include[l] = true;
+        }
+        let c = CompressedModel::build(5, masks.iter());
+        assert_eq!(c.num_clauses(), 10);
+        assert_eq!(c.live_clauses(), 1);
+        assert!((c.density() - 0.5).abs() < 1e-12);
+        let stale = c.postings() as f64 / (c.num_clauses() * 10) as f64;
+        assert_eq!(
+            select_engine(stale, PACKED_VS_INDEXED_DENSITY, PACKED_VS_COMPRESSED_DENSITY),
+            EngineChoice::Indexed
+        );
+        assert_eq!(
+            select_engine(c.density(), PACKED_VS_INDEXED_DENSITY, PACKED_VS_COMPRESSED_DENSITY),
+            EngineChoice::Packed
+        );
+    }
+
+    #[test]
+    fn compiled_artifact_with_pruned_reordered_clauses_stays_exact() {
+        // Full compile of a model with dead clauses: the compressed
+        // engine built from the artifact must match the scalar
+        // reference on every input (explicit votes absorb the id
+        // permutation; the frequency reorder stacks on top).
+        use crate::tm::compile::{CompileMode, ModelCompiler};
+        let p = TmParams { features: 3, clauses: 4, classes: 2, ..tiny_params() };
+        let mut m = MultiClassTmModel::zeroed(p);
+        m.clauses[0][0].include[1] = true; // (+) ¬x0
+        m.clauses[0][2].include[2] = true;
+        m.clauses[0][2].include[3] = true; // contradictory -> dead
+        m.clauses[0][3].include[0] = true; // (−) x0
+        m.clauses[1][1].include[4] = true; // (−) x2
+        let calib: Vec<Vec<bool>> = (0..8u32)
+            .map(|b| (0..3).map(|i| (b >> i) & 1 == 1).collect())
+            .collect();
+        let compiled = ModelCompiler::new(CompileMode::Full)
+            .with_calibration(calib.clone())
+            .compile_multiclass(&m)
+            .unwrap();
+        let e = CompressedMulticlass::from_compiled(&compiled).unwrap();
+        for x in &calib {
+            assert_eq!(e.class_sums(x), multiclass_class_sums(&m, x), "{x:?}");
+        }
     }
 
     #[test]

@@ -25,6 +25,7 @@
 //! `tests/bitparallel_equivalence.rs`.
 
 use super::bitpack::{pack_literals, words_for, BitSlicedBatch, PackedClause, WORD_BITS};
+use super::compile::{CompiledCotm, CompiledMulticlass, ModelCompiler};
 use super::infer::predict_argmax;
 use super::model::{CoTmModel, MultiClassTmModel, TmParams};
 use super::simd::{self, SimdLevel, WordLanes};
@@ -132,29 +133,47 @@ fn scatter_clause_words<P: Copy>(
 }
 
 /// Bit-parallel multi-class TM engine: per class, packed clause plans
-/// with alternating +/− polarity (Eq. 1).
+/// each carrying its **explicit** vote polarity from the compiled
+/// artifact (Eq. 1's parity rule frozen at compile time — the pass may
+/// have pruned or reordered clauses, so position parity is meaningless
+/// here).
 #[derive(Debug, Clone)]
 pub struct BitParallelMulticlass {
     pub params: TmParams,
-    /// `[class][clause]` packed plans.
-    clauses: Vec<Vec<PackedClause>>,
+    /// `[class][clause]` packed plans with their ±1 vote polarity.
+    clauses: Vec<Vec<(PackedClause, i32)>>,
     /// Lane width every evaluation dispatches through.
     lanes: WordLanes,
 }
 
 impl BitParallelMulticlass {
-    /// Compile a validated model into packed clause plans, evaluating
+    /// Compile a validated model (default [`ModelCompiler`]: exact
+    /// dead-clause pruning) into packed clause plans, evaluating
     /// through the widest detected lane width
     /// ([`simd::default_lanes`]); override with [`Self::with_lanes`].
     pub fn from_model(model: &MultiClassTmModel) -> Result<BitParallelMulticlass> {
-        model.validate()?;
-        let clauses = model
-            .clauses
+        Self::from_compiled(&ModelCompiler::default().compile_multiclass(model)?)
+    }
+
+    /// Build from an already-compiled artifact — the shared pipeline
+    /// entry point (`coordinator/server.rs` compiles once and builds
+    /// every engine family from the same artifact).
+    pub fn from_compiled(compiled: &CompiledMulticlass) -> Result<BitParallelMulticlass> {
+        compiled.validate()?;
+        let clauses = compiled
+            .classes
             .iter()
-            .map(|class| class.iter().map(PackedClause::from_mask).collect())
+            .zip(&compiled.polarities)
+            .map(|(class, pols)| {
+                class
+                    .iter()
+                    .zip(pols)
+                    .map(|(cc, &pol)| (cc.packed(), pol))
+                    .collect()
+            })
             .collect();
         Ok(BitParallelMulticlass {
-            params: model.params.clone(),
+            params: compiled.params.clone(),
             clauses,
             lanes: simd::default_lanes(),
         })
@@ -181,9 +200,9 @@ impl BitParallelMulticlass {
             .iter()
             .map(|class| {
                 let mut sum = 0i32;
-                for (j, pc) in class.iter().enumerate() {
+                for (pc, polarity) in class {
                     if pc.evaluate_with(literal_words, self.lanes) {
-                        sum += if j % 2 == 0 { 1 } else { -1 };
+                        sum += polarity;
                     }
                 }
                 sum
@@ -219,10 +238,7 @@ impl BatchEngine for BitParallelMulticlass {
             .iter()
             .enumerate()
             .flat_map(|(ci, class)| {
-                class
-                    .iter()
-                    .enumerate()
-                    .map(move |(j, pc)| (pc, (ci, if j % 2 == 0 { 1 } else { -1 })))
+                class.iter().map(move |(pc, pol)| (pc, (ci, *pol)))
             })
             .collect();
         // Sample-major accumulator: sums[s*k + class].
@@ -249,19 +265,21 @@ pub struct BitParallelCotm {
 }
 
 impl BitParallelCotm {
-    /// Compile a validated model into packed clause plans (widest
-    /// detected lanes; override with [`Self::with_lanes`]).
+    /// Compile a validated model (default [`ModelCompiler`]: exact
+    /// dead-clause pruning) into packed clause plans (widest detected
+    /// lanes; override with [`Self::with_lanes`]).
     pub fn from_model(model: &CoTmModel) -> Result<BitParallelCotm> {
-        model.validate()?;
-        let clauses: Vec<PackedClause> =
-            model.clauses.iter().map(PackedClause::from_mask).collect();
-        let weight_cols = (0..model.params.clauses)
-            .map(|j| model.weights.iter().map(|row| row[j]).collect())
-            .collect();
+        Self::from_compiled(&ModelCompiler::default().compile_cotm(model)?)
+    }
+
+    /// Build from an already-compiled artifact: the clause pool and its
+    /// weight columns arrive pruned and reordered in lockstep.
+    pub fn from_compiled(compiled: &CompiledCotm) -> Result<BitParallelCotm> {
+        compiled.validate()?;
         Ok(BitParallelCotm {
-            params: model.params.clone(),
-            clauses,
-            weight_cols,
+            params: compiled.params.clone(),
+            clauses: compiled.clauses.iter().map(|cc| cc.packed()).collect(),
+            weight_cols: compiled.weight_cols.clone(),
             lanes: simd::default_lanes(),
         })
     }
@@ -464,6 +482,45 @@ mod tests {
         assert!(e.infer_batch(&Vec::<Vec<bool>>::new()).is_empty());
         let scalar = e.with_lanes(WordLanes::scalar());
         assert!(scalar.infer_batch(&Vec::<Vec<bool>>::new()).is_empty());
+    }
+
+    #[test]
+    fn compiled_artifacts_serve_bit_identical_sums() {
+        // Full compile (prune + reorder) of models with dead clauses:
+        // the engine built from the compiled artifact must match the
+        // scalar reference on every input — explicit polarity / weight
+        // columns absorb the id permutation.
+        use crate::tm::compile::{CompileMode, ModelCompiler};
+        let p = TmParams { features: 3, clauses: 4, classes: 2, ..tiny_params() };
+        let mut m = MultiClassTmModel::zeroed(p.clone());
+        m.clauses[0][0].include[1] = true; // class0 c0 (+): ¬x0
+        m.clauses[0][2].include[2] = true; // class0 c2 (+): x1
+        m.clauses[0][2].include[3] = true; // ... and ¬x1 -> contradictory
+        m.clauses[0][3].include[0] = true; // class0 c3 (−): x0
+        m.clauses[1][1].include[4] = true; // class1 c1 (−): x2
+        let calib: Vec<Vec<bool>> = (0..8u32)
+            .map(|b| (0..3).map(|i| (b >> i) & 1 == 1).collect())
+            .collect();
+        let compiler = ModelCompiler::new(CompileMode::Full).with_calibration(calib.clone());
+        let e = BitParallelMulticlass::from_compiled(
+            &compiler.compile_multiclass(&m).unwrap(),
+        )
+        .unwrap();
+        for x in &calib {
+            assert_eq!(e.class_sums(x), multiclass_class_sums(&m, x), "{x:?}");
+        }
+        assert_eq!(e.infer_batch(&calib).len(), 8);
+
+        let mut cm = CoTmModel::zeroed(p);
+        cm.clauses[0].include[5] = true; // ¬x2
+        cm.clauses[2].include[0] = true; // x0
+        cm.clauses[3].include[2] = true;
+        cm.clauses[3].include[3] = true; // contradictory
+        cm.weights = vec![vec![2, -1, 3, 5], vec![-2, 1, -3, 5]];
+        let ce = BitParallelCotm::from_compiled(&compiler.compile_cotm(&cm).unwrap()).unwrap();
+        for x in &calib {
+            assert_eq!(ce.class_sums(x), cotm_class_sums(&cm, x), "{x:?}");
+        }
     }
 
     #[test]

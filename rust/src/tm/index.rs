@@ -45,6 +45,7 @@
 //! golden vectors) so the counter sweep is validated even on
 //! toolchain-less CI images.
 
+use super::compile::{CompiledCotm, CompiledMulticlass, ModelCompiler};
 use super::fast_infer::{BatchEngine, BatchResult};
 use super::infer::predict_argmax;
 use super::model::{ClauseMask, CoTmModel, MultiClassTmModel, TmParams};
@@ -62,13 +63,24 @@ pub fn prefer_indexed(density: f64, threshold: f64) -> bool {
     density <= threshold
 }
 
-/// Fraction of included literals across a set of clause masks
-/// (`included / (clauses · 2F)`); 0.0 for an empty model.
+/// Fraction of included literals across the **live** clause masks
+/// (`included / (live clauses · 2F)`); 0.0 when no clause is live.
+///
+/// Dead (all-exclude) clauses do zero work in every engine, so counting
+/// their zero contributions in the denominator used to drag measured
+/// density toward 0 and flip `auto-*` crossovers for sparse trained
+/// models — a model whose live clauses are dense would masquerade as
+/// sparse. Live-clause accounting matches what the engines actually
+/// execute (and `compile::CompileStats::density`, which additionally
+/// excludes contradictory clauses the compile pass prunes).
 pub fn included_density<'a>(masks: impl IntoIterator<Item = &'a ClauseMask>) -> f64 {
     let (mut included, mut total) = (0usize, 0usize);
     for m in masks {
-        included += m.included_count();
-        total += m.include.len();
+        let count = m.included_count();
+        if count > 0 {
+            included += count;
+            total += m.include.len();
+        }
     }
     if total == 0 {
         0.0
@@ -126,9 +138,18 @@ impl InvertedIndex {
         self.required.iter().map(|&r| r as usize).sum()
     }
 
-    /// Included-literal density of the indexed model.
+    /// Clauses with at least one posting (all-exclude clauses appear in
+    /// no literal list and never fire — they are dead weight in every
+    /// accounting).
+    pub fn live_clauses(&self) -> usize {
+        self.required.iter().filter(|&&r| r > 0).count()
+    }
+
+    /// Included-literal density of the indexed model, over **live**
+    /// clauses only (see [`included_density`] for why dead clauses must
+    /// not dilute the denominator).
     pub fn density(&self) -> f64 {
-        let total = self.num_clauses() * 2 * self.features;
+        let total = self.live_clauses() * 2 * self.features;
         if total == 0 {
             0.0
         } else {
@@ -177,24 +198,45 @@ impl InvertedIndex {
     }
 }
 
-/// Indexed multi-class TM engine: one inverted index over the K·C
-/// flattened clauses (`id = class · C + j`), alternating +/− polarity
-/// per class (Eq. 1).
+/// Indexed multi-class TM engine: one inverted index over the
+/// flattened live clauses of the compiled artifact, each id carrying
+/// its **explicit** `(class, polarity)` vote. The old `id ↦ (id/C,
+/// parity of id%C)` decode assumed the model's full clause grid; the
+/// compile pass prunes and reorders, so votes are frozen per id at
+/// build time instead.
 #[derive(Debug, Clone)]
 pub struct IndexedMulticlass {
     pub params: TmParams,
     index: InvertedIndex,
+    /// Flat clause id → `(class, ±1 polarity)`.
+    votes: Vec<(u32, i32)>,
 }
 
 impl IndexedMulticlass {
-    /// Compile a validated model into the inverted index.
+    /// Compile a validated model (default [`ModelCompiler`]: exact
+    /// dead-clause pruning) into the inverted index.
     pub fn from_model(model: &MultiClassTmModel) -> Result<IndexedMulticlass> {
-        model.validate()?;
+        Self::from_compiled(&ModelCompiler::default().compile_multiclass(model)?)
+    }
+
+    /// Build from an already-compiled artifact — the shared pipeline
+    /// entry point.
+    pub fn from_compiled(compiled: &CompiledMulticlass) -> Result<IndexedMulticlass> {
+        compiled.validate()?;
         let index = InvertedIndex::build(
-            model.params.features,
-            model.clauses.iter().flatten(),
+            compiled.params.features,
+            compiled.classes.iter().flatten().map(|cc| &cc.mask),
         );
-        Ok(IndexedMulticlass { params: model.params.clone(), index })
+        let votes = compiled
+            .classes
+            .iter()
+            .zip(&compiled.polarities)
+            .enumerate()
+            .flat_map(|(k, (class, pols))| {
+                class.iter().zip(pols).map(move |(_, &pol)| (k as u32, pol))
+            })
+            .collect();
+        Ok(IndexedMulticlass { params: compiled.params.clone(), index, votes })
     }
 
     /// Included-literal density (the `auto-*` selection input).
@@ -203,11 +245,10 @@ impl IndexedMulticlass {
     }
 
     fn sums_from_fired(&self, fired: &[u32]) -> Vec<i32> {
-        let c = self.params.clauses;
         let mut sums = vec![0i32; self.params.classes];
         for &id in fired {
-            let (class, j) = (id as usize / c, id as usize % c);
-            sums[class] += if j % 2 == 0 { 1 } else { -1 };
+            let (class, polarity) = self.votes[id as usize];
+            sums[class as usize] += polarity;
         }
         sums
     }
@@ -265,14 +306,25 @@ pub struct IndexedCotm {
 }
 
 impl IndexedCotm {
-    /// Compile a validated model into the inverted index.
+    /// Compile a validated model (default [`ModelCompiler`]: exact
+    /// dead-clause pruning) into the inverted index.
     pub fn from_model(model: &CoTmModel) -> Result<IndexedCotm> {
-        model.validate()?;
-        let index = InvertedIndex::build(model.params.features, model.clauses.iter());
-        let weight_cols = (0..model.params.clauses)
-            .map(|j| model.weights.iter().map(|row| row[j]).collect())
-            .collect();
-        Ok(IndexedCotm { params: model.params.clone(), index, weight_cols })
+        Self::from_compiled(&ModelCompiler::default().compile_cotm(model)?)
+    }
+
+    /// Build from an already-compiled artifact: clause pool and weight
+    /// columns arrive pruned and reordered in lockstep.
+    pub fn from_compiled(compiled: &CompiledCotm) -> Result<IndexedCotm> {
+        compiled.validate()?;
+        let index = InvertedIndex::build(
+            compiled.params.features,
+            compiled.clauses.iter().map(|cc| &cc.mask),
+        );
+        Ok(IndexedCotm {
+            params: compiled.params.clone(),
+            index,
+            weight_cols: compiled.weight_cols.clone(),
+        })
     }
 
     /// Included-literal density (the `auto-*` selection input).
@@ -556,6 +608,57 @@ mod tests {
         assert_eq!(included_density(std::iter::empty::<&ClauseMask>()), 0.0);
         let zeroed = IndexedCotm::from_model(&CoTmModel::zeroed(tiny_params())).unwrap();
         assert_eq!(zeroed.density(), 0.0);
+    }
+
+    #[test]
+    fn dead_clauses_do_not_dilute_density_accounting() {
+        // Regression (PR 8): 9 all-exclude clauses + 1 half-dense live
+        // clause. The old denominator (all clauses) measured
+        // 5/(10·10) = 0.05 — exactly the default threshold — so the
+        // auto-* choice flipped to the indexed engine even though the
+        // only clause that does any work is 50% dense. Live-clause
+        // accounting measures 0.5 and keeps the packed engine.
+        let features = 5;
+        let mut masks = vec![ClauseMask::empty(10); 10];
+        for l in [0, 2, 4, 6, 8] {
+            masks[0].include[l] = true;
+        }
+        let idx = InvertedIndex::build(features, masks.iter());
+        assert_eq!(idx.num_clauses(), 10);
+        assert_eq!(idx.live_clauses(), 1);
+        assert_eq!(idx.postings(), 5);
+        assert!((idx.density() - 0.5).abs() < 1e-12);
+        assert!((included_density(masks.iter()) - 0.5).abs() < 1e-12);
+        assert!(!prefer_indexed(idx.density(), PACKED_VS_INDEXED_DENSITY));
+        // The stale accounting would have chosen the other engine.
+        let stale = idx.postings() as f64 / (idx.num_clauses() * 2 * features) as f64;
+        assert!(prefer_indexed(stale, PACKED_VS_INDEXED_DENSITY));
+    }
+
+    #[test]
+    fn compiled_artifact_with_pruned_reordered_clauses_stays_exact() {
+        // Full compile of a model with dead clauses: the indexed engine
+        // built from the artifact must match the scalar reference on
+        // every input (explicit votes absorb the id permutation).
+        use crate::tm::compile::{CompileMode, ModelCompiler};
+        let p = TmParams { features: 3, clauses: 4, classes: 2, ..tiny_params() };
+        let mut m = MultiClassTmModel::zeroed(p);
+        m.clauses[0][0].include[1] = true; // (+) ¬x0
+        m.clauses[0][2].include[2] = true;
+        m.clauses[0][2].include[3] = true; // contradictory -> dead
+        m.clauses[0][3].include[0] = true; // (−) x0
+        m.clauses[1][1].include[4] = true; // (−) x2
+        let calib: Vec<Vec<bool>> = (0..8u32)
+            .map(|b| (0..3).map(|i| (b >> i) & 1 == 1).collect())
+            .collect();
+        let compiled = ModelCompiler::new(CompileMode::Full)
+            .with_calibration(calib.clone())
+            .compile_multiclass(&m)
+            .unwrap();
+        let e = IndexedMulticlass::from_compiled(&compiled).unwrap();
+        for x in &calib {
+            assert_eq!(e.class_sums(x), multiclass_class_sums(&m, x), "{x:?}");
+        }
     }
 
     #[test]

@@ -3,7 +3,8 @@
 //! evaluated in multi-word [`simd`] lanes behind runtime dispatch),
 //! event-driven inverted-index inference for sparse models ([`index`]),
 //! compressed include-list inference for the ETHEREAL clause regime
-//! ([`compressed`]), training (multi-class TM and Coalesced TM, both with a shared
+//! ([`compressed`]), the load-time model-compile pass every serving
+//! engine builds from ([`compile`]), training (multi-class TM and Coalesced TM, both with a shared
 //! feedback core and packed-evaluation or reference clause engines via
 //! [`trainer_engine`]), feature booleanisation, datasets, and model
 //! (de)serialisation.
@@ -15,6 +16,7 @@
 
 pub mod bitpack;
 pub mod booleanize;
+pub mod compile;
 pub mod compressed;
 pub mod cotm_train;
 pub mod data;
@@ -30,6 +32,10 @@ pub mod trainer_engine;
 
 pub use bitpack::{BitSlicedBatch, PackedClause};
 pub use booleanize::Booleanizer;
+pub use compile::{
+    ClausePlan, CompileMode, CompileStats, CompiledClause, CompiledCotm,
+    CompiledMulticlass, ModelCompiler,
+};
 pub use compressed::{CompressedCotm, CompressedModel, CompressedMulticlass, EngineChoice};
 pub use data::Dataset;
 pub use fast_infer::{BatchEngine, BitParallelCotm, BitParallelMulticlass};

@@ -10,10 +10,31 @@
 //!
 //! CoTM adds `weights <class> w0 w1 ...` rows and omits the class index
 //! on `clause` rows.
+//!
+//! Compiled artifacts (`tm-compiled v1 ...`, conventionally `.tmc`
+//! files — the cheap serializable form for per-shard model pinning) add
+//! a `mode` line, a `stats` line (the compile-time stats of the
+//! *source* model, which a pruned artifact could not otherwise
+//! recover), and per-clause records carrying source id, execution plan,
+//! and the explicit vote (polarity for multiclass; per-clause `weights`
+//! rows for CoTM):
+//!
+//! ```text
+//! tm-compiled v1 multiclass
+//! params features=3 clauses=4 classes=2 ...
+//! mode full
+//! stats total=8 dead_ae=2 dead_contra=2 postings=6 density=0.25 sweep=0 skip=4 hist=0,2,2,0,0,0,0,0
+//! clause 0 3 -1 skip 100000       # class, source id, polarity, plan, 2F bits
+//! ...
+//! ```
 
 use std::fmt::Write as _;
 use std::path::Path;
 
+use super::compile::{
+    ClausePlan, CompileMode, CompileStats, CompiledClause, CompiledCotm,
+    CompiledMulticlass, HIST_BUCKETS,
+};
 use super::model::{ClauseMask, CoTmModel, MultiClassTmModel, TmParams};
 use crate::error::{Error, Result};
 
@@ -199,6 +220,246 @@ pub fn cotm_from_str(text: &str) -> Result<CoTmModel> {
     Ok(model)
 }
 
+fn stats_line(s: &CompileStats) -> String {
+    let hist: Vec<String> = s.length_histogram.iter().map(|n| n.to_string()).collect();
+    format!(
+        "stats total={} dead_ae={} dead_contra={} postings={} density={} sweep={} skip={} hist={}",
+        s.total_clauses,
+        s.dead_all_exclude,
+        s.dead_contradictory,
+        s.postings,
+        s.density,
+        s.lane_sweep_clauses,
+        s.skip_list_clauses,
+        hist.join(",")
+    )
+}
+
+fn parse_stats(line: &str) -> Result<CompileStats> {
+    let mut s = CompileStats {
+        total_clauses: 0,
+        live_clauses: 0,
+        dead_all_exclude: 0,
+        dead_contradictory: 0,
+        postings: 0,
+        density: 0.0,
+        lane_sweep_clauses: 0,
+        skip_list_clauses: 0,
+        length_histogram: [0; HIST_BUCKETS],
+    };
+    for tok in line.split_whitespace().skip(1) {
+        let (k, v) = tok
+            .split_once('=')
+            .ok_or_else(|| Error::model(format!("bad stats token {tok:?}")))?;
+        let fail = |_| Error::model(format!("bad stats value for {k}: {v:?}"));
+        match k {
+            "total" => s.total_clauses = v.parse().map_err(fail)?,
+            "dead_ae" => s.dead_all_exclude = v.parse().map_err(fail)?,
+            "dead_contra" => s.dead_contradictory = v.parse().map_err(fail)?,
+            "postings" => s.postings = v.parse().map_err(fail)?,
+            "density" => {
+                s.density = v.parse::<f64>().map_err(|_| Error::model("bad density"))?
+            }
+            "sweep" => s.lane_sweep_clauses = v.parse().map_err(fail)?,
+            "skip" => s.skip_list_clauses = v.parse().map_err(fail)?,
+            "hist" => {
+                let buckets: Vec<usize> = v
+                    .split(',')
+                    .map(|t| t.parse().map_err(|_| Error::model("bad hist bucket")))
+                    .collect::<Result<_>>()?;
+                if buckets.len() != HIST_BUCKETS {
+                    return Err(Error::model("stats hist must have 8 buckets"));
+                }
+                s.length_histogram.copy_from_slice(&buckets);
+            }
+            _ => return Err(Error::model(format!("unknown stats key {k:?}"))),
+        }
+    }
+    if s.dead_all_exclude + s.dead_contradictory > s.total_clauses {
+        return Err(Error::model("stats dead count exceeds total"));
+    }
+    s.live_clauses = s.total_clauses - s.dead_all_exclude - s.dead_contradictory;
+    Ok(s)
+}
+
+fn parse_mode(line: &str) -> Result<CompileMode> {
+    let name = line
+        .split_whitespace()
+        .nth(1)
+        .ok_or_else(|| Error::model("missing compile mode"))?;
+    CompileMode::parse(name)
+        .ok_or_else(|| Error::model(format!("compile mode must be off|prune|full, got {name:?}")))
+}
+
+fn parse_plan(tok: &str) -> Result<ClausePlan> {
+    ClausePlan::parse(tok)
+        .ok_or_else(|| Error::model(format!("clause plan must be skip|sweep, got {tok:?}")))
+}
+
+/// Serialise a compiled multiclass artifact.
+pub fn compiled_multiclass_to_string(c: &CompiledMulticlass) -> String {
+    let mut s = String::new();
+    s.push_str("tm-compiled v1 multiclass\n");
+    s.push_str(&params_line(&c.params));
+    s.push('\n');
+    let _ = writeln!(s, "mode {}", c.mode.name());
+    s.push_str(&stats_line(&c.stats));
+    s.push('\n');
+    for (k, (class, pols)) in c.classes.iter().zip(&c.polarities).enumerate() {
+        for (cc, pol) in class.iter().zip(pols) {
+            let _ = writeln!(
+                s,
+                "clause {k} {} {pol} {} {}",
+                cc.source,
+                cc.plan.name(),
+                mask_bits(&cc.mask)
+            );
+        }
+    }
+    s
+}
+
+/// Parse a compiled multiclass artifact (validated before return, so a
+/// tampered file cannot reach an engine constructor).
+pub fn compiled_multiclass_from_str(text: &str) -> Result<CompiledMulticlass> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = lines.next().ok_or_else(|| Error::model("empty artifact file"))?;
+    if header.trim() != "tm-compiled v1 multiclass" {
+        return Err(Error::model(format!("bad header {header:?}")));
+    }
+    let params = parse_params(
+        lines.next().ok_or_else(|| Error::model("missing params line"))?,
+    )?;
+    let mode = parse_mode(lines.next().ok_or_else(|| Error::model("missing mode line"))?)?;
+    let stats = parse_stats(lines.next().ok_or_else(|| Error::model("missing stats line"))?)?;
+    let mut classes: Vec<Vec<CompiledClause>> = vec![Vec::new(); params.classes];
+    let mut polarities: Vec<Vec<i32>> = vec![Vec::new(); params.classes];
+    for line in lines {
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("clause") => {
+                let k: usize = it
+                    .next()
+                    .and_then(|t| t.parse().ok())
+                    .ok_or_else(|| Error::model("bad clause class idx"))?;
+                let source: u32 = it
+                    .next()
+                    .and_then(|t| t.parse().ok())
+                    .ok_or_else(|| Error::model("bad clause source id"))?;
+                let pol: i32 = it
+                    .next()
+                    .and_then(|t| t.parse().ok())
+                    .ok_or_else(|| Error::model("bad clause polarity"))?;
+                let plan = parse_plan(it.next().ok_or_else(|| Error::model("missing plan"))?)?;
+                let bits = it.next().ok_or_else(|| Error::model("missing mask"))?;
+                if k >= params.classes {
+                    return Err(Error::model(format!("clause class {k} out of range")));
+                }
+                let mask = parse_mask(bits, params.literals())?;
+                classes[k].push(CompiledClause { mask, source, plan });
+                polarities[k].push(pol);
+            }
+            Some(other) => return Err(Error::model(format!("unknown record {other:?}"))),
+            None => {}
+        }
+    }
+    let compiled = CompiledMulticlass { params, classes, polarities, stats, mode };
+    compiled.validate()?;
+    Ok(compiled)
+}
+
+/// Serialise a compiled CoTM artifact (per-clause `weights` rows are
+/// the clause's weight *column*, in live-clause order).
+pub fn compiled_cotm_to_string(c: &CompiledCotm) -> String {
+    let mut s = String::new();
+    s.push_str("tm-compiled v1 cotm\n");
+    s.push_str(&params_line(&c.params));
+    s.push('\n');
+    let _ = writeln!(s, "mode {}", c.mode.name());
+    s.push_str(&stats_line(&c.stats));
+    s.push('\n');
+    for (i, (cc, col)) in c.clauses.iter().zip(&c.weight_cols).enumerate() {
+        let _ = writeln!(
+            s,
+            "clause {} {} {}",
+            cc.source,
+            cc.plan.name(),
+            mask_bits(&cc.mask)
+        );
+        let ws: Vec<String> = col.iter().map(|w| w.to_string()).collect();
+        let _ = writeln!(s, "weights {i} {}", ws.join(" "));
+    }
+    s
+}
+
+/// Parse a compiled CoTM artifact (validated before return).
+pub fn compiled_cotm_from_str(text: &str) -> Result<CompiledCotm> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header = lines.next().ok_or_else(|| Error::model("empty artifact file"))?;
+    if header.trim() != "tm-compiled v1 cotm" {
+        return Err(Error::model(format!("bad header {header:?}")));
+    }
+    let params = parse_params(
+        lines.next().ok_or_else(|| Error::model("missing params line"))?,
+    )?;
+    let mode = parse_mode(lines.next().ok_or_else(|| Error::model("missing mode line"))?)?;
+    let stats = parse_stats(lines.next().ok_or_else(|| Error::model("missing stats line"))?)?;
+    let mut clauses = Vec::new();
+    let mut weight_cols: Vec<Vec<i32>> = Vec::new();
+    for line in lines {
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("clause") => {
+                let source: u32 = it
+                    .next()
+                    .and_then(|t| t.parse().ok())
+                    .ok_or_else(|| Error::model("bad clause source id"))?;
+                let plan = parse_plan(it.next().ok_or_else(|| Error::model("missing plan"))?)?;
+                let bits = it.next().ok_or_else(|| Error::model("missing mask"))?;
+                let mask = parse_mask(bits, params.literals())?;
+                clauses.push(CompiledClause { mask, source, plan });
+            }
+            Some("weights") => {
+                let i: usize = it
+                    .next()
+                    .and_then(|t| t.parse().ok())
+                    .ok_or_else(|| Error::model("bad weight row idx"))?;
+                if i != weight_cols.len() {
+                    return Err(Error::model(format!("weights row {i} out of order")));
+                }
+                let col: Vec<i32> = it
+                    .map(|t| t.parse().map_err(|_| Error::model("bad weight")))
+                    .collect::<Result<_>>()?;
+                weight_cols.push(col);
+            }
+            Some(other) => return Err(Error::model(format!("unknown record {other:?}"))),
+            None => {}
+        }
+    }
+    let compiled = CompiledCotm { params, clauses, weight_cols, stats, mode };
+    compiled.validate()?;
+    Ok(compiled)
+}
+
+/// Save a compiled multiclass artifact (`.tmc` by convention).
+pub fn save_compiled_multiclass(c: &CompiledMulticlass, path: impl AsRef<Path>) -> Result<()> {
+    std::fs::write(path, compiled_multiclass_to_string(c))?;
+    Ok(())
+}
+
+pub fn save_compiled_cotm(c: &CompiledCotm, path: impl AsRef<Path>) -> Result<()> {
+    std::fs::write(path, compiled_cotm_to_string(c))?;
+    Ok(())
+}
+
+pub fn load_compiled_multiclass(path: impl AsRef<Path>) -> Result<CompiledMulticlass> {
+    compiled_multiclass_from_str(&std::fs::read_to_string(path)?)
+}
+
+pub fn load_compiled_cotm(path: impl AsRef<Path>) -> Result<CompiledCotm> {
+    compiled_cotm_from_str(&std::fs::read_to_string(path)?)
+}
+
 /// Save either model kind to a file.
 pub fn save_multiclass(m: &MultiClassTmModel, path: impl AsRef<Path>) -> Result<()> {
     std::fs::write(path, multiclass_to_string(m))?;
@@ -323,6 +584,64 @@ mod tests {
             assert_eq!(BatchEngine::class_sums(&cix, x), cwant);
             assert_eq!(BatchEngine::class_sums(&ccp, x), cwant);
         }
+    }
+
+    #[test]
+    fn compiled_roundtrip_exact() {
+        // Train → compile (full mode, deterministic calibration) →
+        // serialize → parse: the artifact must round-trip field-for-
+        // field (mode, stats, clause order, plans, polarities/weights),
+        // and the engine built from the parsed artifact must serve the
+        // same sums as one built from the in-memory artifact.
+        use crate::tm::compile::{CompileMode, ModelCompiler};
+        use crate::tm::{BatchEngine, BitParallelCotm, BitParallelMulticlass};
+        let d = data::xor_noise(100, 4, 0.0, 2);
+        let compiler = ModelCompiler::new(CompileMode::Full)
+            .with_synthetic_calibration(4, 16, 7);
+        let m = train_multiclass(small_params(), &d, 5, 1).unwrap();
+        let c = compiler.compile_multiclass(&m).unwrap();
+        let back = compiled_multiclass_from_str(&compiled_multiclass_to_string(&c)).unwrap();
+        assert_eq!(c, back);
+        let cm = train_cotm(small_params(), &d, 5, 1).unwrap();
+        let cc = compiler.compile_cotm(&cm).unwrap();
+        let cback = compiled_cotm_from_str(&compiled_cotm_to_string(&cc)).unwrap();
+        assert_eq!(cc, cback);
+        let e = BitParallelMulticlass::from_compiled(&back).unwrap();
+        let ce = BitParallelCotm::from_compiled(&cback).unwrap();
+        for x in d.features.iter().take(16) {
+            assert_eq!(
+                BatchEngine::class_sums(&e, x),
+                crate::tm::infer::multiclass_class_sums(&m, x)
+            );
+            assert_eq!(
+                BatchEngine::class_sums(&ce, x),
+                crate::tm::infer::cotm_class_sums(&cm, x)
+            );
+        }
+    }
+
+    #[test]
+    fn compiled_parse_rejects_tampered_artifacts() {
+        use crate::tm::compile::ModelCompiler;
+        let d = data::xor_noise(60, 4, 0.0, 2);
+        let m = train_multiclass(small_params(), &d, 3, 1).unwrap();
+        let c = ModelCompiler::default().compile_multiclass(&m).unwrap();
+        let text = compiled_multiclass_to_string(&c);
+        // Wrong header kind.
+        assert!(compiled_cotm_from_str(&text).is_err());
+        // Unknown compile mode.
+        assert!(compiled_multiclass_from_str(&text.replace("mode prune", "mode mystery"))
+            .is_err());
+        // Polarity out of {±1} fails artifact validation.
+        let bad = text.replacen(" 1 skip", " 3 skip", 1);
+        if bad != text {
+            assert!(compiled_multiclass_from_str(&bad).is_err());
+        }
+        // Truncated stats histogram.
+        assert!(compiled_multiclass_from_str(
+            &text.replace("hist=0,", "hist=")
+        )
+        .is_err());
     }
 
     #[test]

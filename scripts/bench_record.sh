@@ -6,10 +6,10 @@
 #
 #   scripts/bench_record.sh [label] [out-file]
 #
-# The output file defaults to BENCH_PR7.json and can be overridden by
+# The output file defaults to BENCH_PR8.json and can be overridden by
 # the second positional argument or the BENCH_OUT environment variable
 # (argument wins). Earlier PRs recorded to BENCH_PR3.json ..
-# BENCH_PR6.json; those files stay as recorded history.
+# BENCH_PR7.json; those files stay as recorded history.
 #
 # Needs a Rust toolchain; the CI image carries none (see ROADMAP.md), so
 # run this on a toolchain-equipped machine and commit the appended entry.
@@ -17,7 +17,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 LABEL="${1:-$(git rev-parse --short HEAD 2>/dev/null || echo unlabelled)}"
-OUT="${2:-${BENCH_OUT:-BENCH_PR7.json}}"
+OUT="${2:-${BENCH_OUT:-BENCH_PR8.json}}"
 
 if ! command -v cargo >/dev/null 2>&1; then
     echo "bench_record.sh: cargo not found on PATH." >&2
@@ -25,6 +25,10 @@ if ! command -v cargo >/dev/null 2>&1; then
     echo "image carries only the Python/JAX tier." >&2
     exit 1
 fi
+
+echo "== cargo bench --bench compile_effect =="
+COMPILE_OUT="$(cargo bench --bench compile_effect)"
+echo "$COMPILE_OUT"
 
 echo "== cargo bench --bench compressed_vs_all =="
 COMPRESSED_OUT="$(cargo bench --bench compressed_vs_all)"
@@ -52,8 +56,9 @@ if ! command -v python3 >/dev/null 2>&1; then
     echo "bench_record.sh: python3 not found; cannot append $OUT." >&2
     exit 1
 fi
-LABEL="$LABEL" COMPRESSED_OUT="$COMPRESSED_OUT" INDEXED_OUT="$INDEXED_OUT" \
-BITPAR_OUT="$BITPAR_OUT" TRAIN_OUT="$TRAIN_OUT" SIMD_OUT="$SIMD_OUT" OUT="$OUT" \
+LABEL="$LABEL" COMPILE_OUT="$COMPILE_OUT" COMPRESSED_OUT="$COMPRESSED_OUT" \
+INDEXED_OUT="$INDEXED_OUT" BITPAR_OUT="$BITPAR_OUT" TRAIN_OUT="$TRAIN_OUT" \
+SIMD_OUT="$SIMD_OUT" OUT="$OUT" \
 python3 - <<'EOF'
 import datetime
 import json
@@ -64,6 +69,7 @@ entry = {
     "recorded_utc": datetime.datetime.now(datetime.timezone.utc).isoformat(
         timespec="seconds"
     ),
+    "compile_effect": os.environ["COMPILE_OUT"].splitlines(),
     "compressed_vs_all": os.environ["COMPRESSED_OUT"].splitlines(),
     "indexed_vs_bitpar": os.environ["INDEXED_OUT"].splitlines(),
     "bitparallel_vs_ref": os.environ["BITPAR_OUT"].splitlines(),

@@ -7,16 +7,20 @@
 # toolchain-less enforcement of the invariant catalog in
 # docs/INVARIANTS.md: lock discipline, panic containment, slot
 # accounting, unsafe audit, golden-vector parity, registry coverage,
-# the panic-path ratchet), then the Python tier (JAX kernels, the consistent-hash-ring
+# the panic-path ratchet, the compile-pipeline shape), then the Python
+# tier (JAX kernels, the consistent-hash-ring
 # mirror, the inverted-index counter-sweep mirror, the compressed
 # include-list-walk mirror with its shared golden vectors, the
-# packed-trainer mirror with its same-seed bit-identity invariant, and
-# the tiled bit-sliced batch-layout mirror — so toolchain-less images
+# packed-trainer mirror with its same-seed bit-identity invariant, the
+# tiled bit-sliced batch-layout mirror, and the model-compile-pass
+# mirror with its prune/reorder/plan oracles — so toolchain-less images
 # still validate the shard-routing, indexed-inference,
-# compressed-inference, packed-training and SIMD-tile algorithms), then
+# compressed-inference, packed-training, SIMD-tile and model-compile
+# algorithms), then
 # cargo build --release && cargo test -q, the shard / coordinator /
-# indexed / compressed / engine-matrix / trainer / SIMD conformance
-# suites by name (so a routing, engine, trainer or lane-dispatch
+# indexed / compressed / compile / engine-matrix / trainer / SIMD
+# conformance suites by name (so a routing, engine, compile-pass,
+# trainer or lane-dispatch
 # regression is visible at a glance), one portable-only build with the
 # vector paths compiled out (--no-default-features: the portable
 # reference must keep compiling and passing on its own), and cargo
@@ -76,8 +80,13 @@ cargo test -q --test equivalence compressed
 cargo test -q --test bitparallel_equivalence indexed
 cargo test -q --test bitparallel_equivalence auto
 
-echo "== cross-engine differential conformance matrix =="
+echo "== model-compile pass (prune/reorder/plan exactness + artifact serde) =="
+cargo test -q --lib tm::compile
+cargo test -q --lib tm::serde
+
+echo "== cross-engine differential conformance matrix (incl. compiled-artifact rows) =="
 cargo test -q --test engine_matrix
+cargo test -q --test engine_matrix compiled
 
 echo "== trainer suites (packed-evaluation bit-identity) =="
 cargo test -q --lib tm::trainer_engine

@@ -29,8 +29,8 @@ use tsetlin_td::tm::infer::{cotm_class_sums, multiclass_class_sums, predict_argm
 use tsetlin_td::tm::simd::{SimdLevel, WordLanes};
 use tsetlin_td::tm::{
     BatchEngine, BitParallelCotm, BitParallelMulticlass, ClauseMask, CoTmModel,
-    CompressedCotm, CompressedMulticlass, IndexedCotm, IndexedMulticlass,
-    MultiClassTmModel, TmParams,
+    CompileMode, CompiledCotm, CompiledMulticlass, CompressedCotm, CompressedMulticlass,
+    IndexedCotm, IndexedMulticlass, ModelCompiler, MultiClassTmModel, TmParams,
 };
 
 /// Word-boundary feature widths: one below, at, and above the half-word
@@ -296,6 +296,339 @@ fn auto_threshold_pairs_never_change_served_outputs() {
         for w in by_pair.windows(2) {
             assert_eq!(w[0], w[1], "threshold pairs must be interchangeable");
         }
+    });
+}
+
+/// The compile-pass counterpart of the matrices above: every engine
+/// family × available SIMD level built from a shared compiled artifact
+/// instead of the raw model.
+fn multiclass_matrix_compiled(compiled: &CompiledMulticlass) -> Vec<MatrixEngine> {
+    let mut v: Vec<MatrixEngine> = Vec::new();
+    for level in SimdLevel::available() {
+        let e = BitParallelMulticlass::from_compiled(compiled)
+            .unwrap()
+            .with_lanes(WordLanes::new(level).unwrap());
+        v.push((
+            format!("bitpar/{}", level.name()),
+            Box::new(move |rows: &[Vec<bool>]| e.infer_batch(rows)),
+        ));
+    }
+    let ix = IndexedMulticlass::from_compiled(compiled).unwrap();
+    v.push(("indexed".into(), Box::new(move |rows: &[Vec<bool>]| ix.infer_batch(rows))));
+    let cp = CompressedMulticlass::from_compiled(compiled).unwrap();
+    v.push(("compressed".into(), Box::new(move |rows: &[Vec<bool>]| cp.infer_batch(rows))));
+    v
+}
+
+fn cotm_matrix_compiled(compiled: &CompiledCotm) -> Vec<MatrixEngine> {
+    let mut v: Vec<MatrixEngine> = Vec::new();
+    for level in SimdLevel::available() {
+        let e = BitParallelCotm::from_compiled(compiled)
+            .unwrap()
+            .with_lanes(WordLanes::new(level).unwrap());
+        v.push((
+            format!("bitpar/{}", level.name()),
+            Box::new(move |rows: &[Vec<bool>]| e.infer_batch(rows)),
+        ));
+    }
+    let ix = IndexedCotm::from_compiled(compiled).unwrap();
+    v.push(("indexed".into(), Box::new(move |rows: &[Vec<bool>]| ix.infer_batch(rows))));
+    let cp = CompressedCotm::from_compiled(compiled).unwrap();
+    v.push(("compressed".into(), Box::new(move |rows: &[Vec<bool>]| cp.infer_batch(rows))));
+    v
+}
+
+/// One compiler per compile mode; "full" gets a drawn synthetic
+/// calibration batch so the reorder path actually runs.
+fn compilers(g: &mut Gen, f: usize) -> Vec<(&'static str, ModelCompiler)> {
+    vec![
+        ("off", ModelCompiler::new(CompileMode::Off)),
+        ("prune", ModelCompiler::new(CompileMode::Prune)),
+        (
+            "full",
+            ModelCompiler::new(CompileMode::Full).with_synthetic_calibration(
+                f,
+                g.usize(1..64),
+                g.u64(0..u64::MAX),
+            ),
+        ),
+    ]
+}
+
+#[test]
+fn compiled_multiclass_matrix_is_bit_identical_on_boundary_widths() {
+    // The headline compile-pass bar: compiled vs uncompiled serving is
+    // bit-identical (sums and argmax) across every engine family ×
+    // SIMD level, at word-boundary widths, on tile-crossing batches,
+    // in every compile mode. The drawn models always carry the pinned
+    // all-exclude (slot 0) and contradictory (slot 1) clauses, so
+    // pruning really removes clauses in every case.
+    prop("compiled engine matrix multiclass", 12, |g| {
+        let f = *g.pick(&BOUNDARY_WIDTHS);
+        let c = 2 * g.usize(1..4);
+        let k = g.usize(2..5);
+        let m = random_multiclass(g, f, c, k);
+        let n = *g.pick(&BATCH_SIZES);
+        let rows: Vec<Vec<bool>> = (0..n).map(|_| g.bools(f)).collect();
+        let want: Vec<BatchResult> = rows
+            .iter()
+            .map(|x| {
+                let sums = multiclass_class_sums(&m, x);
+                (sums.clone(), predict_argmax(&sums))
+            })
+            .collect();
+        for (mode, compiler) in compilers(g, f) {
+            let compiled = compiler.compile_multiclass(&m).unwrap();
+            // Slots 0 and 1 of every class are dead by construction.
+            assert!(
+                compiled.stats.dead_all_exclude >= k && compiled.stats.dead_contradictory >= k,
+                "f={f} c={c} k={k} mode {mode}: {:?}",
+                compiled.stats
+            );
+            for (name, eval) in multiclass_matrix_compiled(&compiled) {
+                assert_eq!(
+                    eval(&rows),
+                    want,
+                    "f={f} c={c} k={k} n={n} mode {mode} engine {name}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn compiled_cotm_matrix_is_bit_identical_on_boundary_widths() {
+    prop("compiled engine matrix cotm", 12, |g| {
+        let f = *g.pick(&BOUNDARY_WIDTHS);
+        let c = g.usize(2..9);
+        let k = g.usize(2..5);
+        let m = random_cotm(g, f, c, k);
+        let n = *g.pick(&BATCH_SIZES);
+        let rows: Vec<Vec<bool>> = (0..n).map(|_| g.bools(f)).collect();
+        let want: Vec<BatchResult> = rows
+            .iter()
+            .map(|x| {
+                let sums = cotm_class_sums(&m, x);
+                (sums.clone(), predict_argmax(&sums))
+            })
+            .collect();
+        for (mode, compiler) in compilers(g, f) {
+            let compiled = compiler.compile_cotm(&m).unwrap();
+            assert!(
+                compiled.stats.dead_all_exclude >= 1 && compiled.stats.dead_contradictory >= 1,
+                "f={f} c={c} k={k} mode {mode}: {:?}",
+                compiled.stats
+            );
+            for (name, eval) in cotm_matrix_compiled(&compiled) {
+                assert_eq!(
+                    eval(&rows),
+                    want,
+                    "f={f} c={c} k={k} n={n} mode {mode} engine {name}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn all_dead_models_compile_and_serve_all_zero_sums() {
+    // Adversarial compile input: a model whose every clause is dead
+    // (alternating all-exclude and contradictory). The compiler must
+    // not panic, the artifact validates with zero live clauses and
+    // density 0.0, and every engine family serves all-zero sums.
+    for &f in &BOUNDARY_WIDTHS {
+        let p = TmParams { features: f, clauses: 4, classes: 3, ..TmParams::iris_paper() };
+        let mut m = MultiClassTmModel::zeroed(p.clone());
+        for class in &mut m.clauses {
+            for (j, clause) in class.iter_mut().enumerate() {
+                clause.include = vec![j % 2 == 1; 2 * f];
+            }
+        }
+        let mut cm = CoTmModel::zeroed(p);
+        for (j, clause) in cm.clauses.iter_mut().enumerate() {
+            clause.include = vec![j % 2 == 1; 2 * f];
+        }
+        for row in &mut cm.weights {
+            row.fill(3);
+        }
+        let rows: Vec<Vec<bool>> = (0..65usize)
+            .map(|s| (0..f).map(|i| (s + i) % 3 == 0).collect())
+            .collect();
+        for mode in [CompileMode::Off, CompileMode::Prune, CompileMode::Full] {
+            let compiler =
+                ModelCompiler::new(mode).with_synthetic_calibration(f, 8, 5);
+            let compiled = compiler.compile_multiclass(&m).unwrap();
+            assert!(compiled.validate().is_ok(), "f={f}");
+            assert_eq!(compiled.stats.live_clauses, 0, "f={f}");
+            assert_eq!(compiled.stats.density, 0.0, "f={f}");
+            let want: Vec<BatchResult> = rows.iter().map(|_| (vec![0; 3], 0)).collect();
+            for (name, eval) in multiclass_matrix_compiled(&compiled) {
+                assert_eq!(eval(&rows), want, "f={f} mode {:?} engine {name}", mode);
+            }
+            let compiled = compiler.compile_cotm(&cm).unwrap();
+            assert_eq!(compiled.stats.live_clauses, 0, "f={f}");
+            let want: Vec<BatchResult> = rows.iter().map(|_| (vec![0; 3], 0)).collect();
+            for (name, eval) in cotm_matrix_compiled(&compiled) {
+                assert_eq!(eval(&rows), want, "f={f} mode {:?} engine {name}", mode);
+            }
+        }
+    }
+}
+
+#[test]
+fn duplicate_clauses_survive_compilation_exactly() {
+    // Adversarial compile input: every clause in the model identical.
+    // Deduplication is NOT part of the contract (duplicate clauses
+    // carry independent votes), so the compiled engines must count the
+    // duplicates exactly as the reference does — and full-mode
+    // reordering (all fire counts tie) must fall back to the
+    // deterministic source-id order.
+    prop("duplicate clauses", 8, |g| {
+        let f = *g.pick(&BOUNDARY_WIDTHS);
+        let template: Vec<bool> = (0..2 * f).map(|_| g.chance(0.2)).collect();
+        let p = TmParams { features: f, clauses: 6, classes: 3, ..TmParams::iris_paper() };
+        let mut m = MultiClassTmModel::zeroed(p.clone());
+        for class in &mut m.clauses {
+            for clause in class.iter_mut() {
+                clause.include = template.clone();
+            }
+        }
+        let mut cm = CoTmModel::zeroed(p.clone());
+        for clause in cm.clauses.iter_mut() {
+            clause.include = template.clone();
+        }
+        for row in &mut cm.weights {
+            for w in row.iter_mut() {
+                *w = g.i64(-(p.max_weight as i64)..p.max_weight as i64 + 1) as i32;
+            }
+        }
+        let rows: Vec<Vec<bool>> = (0..65).map(|_| g.bools(f)).collect();
+        let compiler = ModelCompiler::new(CompileMode::Full)
+            .with_synthetic_calibration(f, 16, g.u64(0..u64::MAX));
+        let compiled = compiler.compile_multiclass(&m).unwrap();
+        // All duplicates tie on fire count: execution order falls back
+        // to source ids, deterministically.
+        for class in &compiled.classes {
+            let srcs: Vec<u32> = class.iter().map(|cc| cc.source).collect();
+            let mut sorted = srcs.clone();
+            sorted.sort_unstable();
+            assert_eq!(srcs, sorted, "tie-break must keep source order");
+        }
+        let want: Vec<BatchResult> = rows
+            .iter()
+            .map(|x| {
+                let sums = multiclass_class_sums(&m, x);
+                (sums.clone(), predict_argmax(&sums))
+            })
+            .collect();
+        for (name, eval) in multiclass_matrix_compiled(&compiled) {
+            assert_eq!(eval(&rows), want, "f={f} engine {name}");
+        }
+        let compiled = compiler.compile_cotm(&cm).unwrap();
+        let want: Vec<BatchResult> = rows
+            .iter()
+            .map(|x| {
+                let sums = cotm_class_sums(&cm, x);
+                (sums.clone(), predict_argmax(&sums))
+            })
+            .collect();
+        for (name, eval) in cotm_matrix_compiled(&compiled) {
+            assert_eq!(eval(&rows), want, "f={f} engine {name}");
+        }
+    });
+}
+
+#[test]
+fn minimum_shape_models_compile_exactly() {
+    // Adversarial compile input: the smallest shapes the model
+    // validator admits — one clause pair (multiclass), one shared
+    // clause (CoTM), two classes. No slack for off-by-one id or
+    // polarity decode bugs.
+    for &f in &[1usize, 31, 64] {
+        let p = TmParams { features: f, clauses: 2, classes: 2, ..TmParams::iris_paper() };
+        let mut m = MultiClassTmModel::zeroed(p);
+        for class in &mut m.clauses {
+            // One live positive-polarity clause and one live negative.
+            class[0].include = (0..2 * f).map(|l| l % 2 == 0).collect();
+            class[1].include = (0..2 * f).map(|l| l % 2 == 1).collect();
+        }
+        let p1 = TmParams { features: f, clauses: 1, classes: 2, ..TmParams::iris_paper() };
+        let mut cm = CoTmModel::zeroed(p1);
+        cm.clauses[0].include = (0..2 * f).map(|l| l % 2 == 0).collect();
+        cm.weights[0][0] = 3;
+        cm.weights[1][0] = -2;
+        let rows: Vec<Vec<bool>> = (0..16usize)
+            .map(|s| (0..f).map(|i| (s >> (i % 4)) & 1 == 1).collect())
+            .collect();
+        for mode in [CompileMode::Off, CompileMode::Prune, CompileMode::Full] {
+            let compiler = ModelCompiler::new(mode).with_synthetic_calibration(f, 8, 3);
+            let compiled = compiler.compile_multiclass(&m).unwrap();
+            let want: Vec<BatchResult> = rows
+                .iter()
+                .map(|x| {
+                    let sums = multiclass_class_sums(&m, x);
+                    (sums.clone(), predict_argmax(&sums))
+                })
+                .collect();
+            for (name, eval) in multiclass_matrix_compiled(&compiled) {
+                assert_eq!(eval(&rows), want, "f={f} mode {:?} engine {name}", mode);
+            }
+            let compiled = compiler.compile_cotm(&cm).unwrap();
+            let want: Vec<BatchResult> = rows
+                .iter()
+                .map(|x| {
+                    let sums = cotm_class_sums(&cm, x);
+                    (sums.clone(), predict_argmax(&sums))
+                })
+                .collect();
+            for (name, eval) in cotm_matrix_compiled(&compiled) {
+                assert_eq!(eval(&rows), want, "f={f} mode {:?} engine {name}", mode);
+            }
+        }
+    }
+}
+
+#[test]
+fn reorder_is_output_invariant_under_random_calibration_batches() {
+    // Full-mode reordering may permute the clause layout arbitrarily
+    // (any calibration batch, any size), but the served sums never
+    // move: an unrepresentative batch can only cost speed.
+    prop("reorder output invariance", 10, |g| {
+        let f = g.usize(4..40);
+        let c = 2 * g.usize(1..5);
+        let k = g.usize(2..4);
+        let m = random_multiclass(g, f, c, k);
+        let rows: Vec<Vec<bool>> = (0..30).map(|_| g.bools(f)).collect();
+        let want: Vec<BatchResult> = rows
+            .iter()
+            .map(|x| {
+                let sums = multiclass_class_sums(&m, x);
+                (sums.clone(), predict_argmax(&sums))
+            })
+            .collect();
+        let mut orders_seen = std::collections::BTreeSet::new();
+        for _ in 0..4 {
+            let calib: Vec<Vec<bool>> =
+                (0..g.usize(1..40)).map(|_| g.bools(f)).collect();
+            let compiled = ModelCompiler::new(CompileMode::Full)
+                .with_calibration(calib)
+                .compile_multiclass(&m)
+                .unwrap();
+            orders_seen.insert(
+                compiled
+                    .classes
+                    .iter()
+                    .map(|class| class.iter().map(|cc| cc.source).collect::<Vec<_>>())
+                    .collect::<Vec<_>>(),
+            );
+            for (name, eval) in multiclass_matrix_compiled(&compiled) {
+                assert_eq!(eval(&rows), want, "f={f} c={c} k={k} engine {name}");
+            }
+        }
+        // The batches were free to disagree on the order (usually they
+        // do); the assertion above proved none of that reached the
+        // outputs.
+        assert!(!orders_seen.is_empty());
     });
 }
 
