@@ -1,0 +1,113 @@
+//! Loopback bench for the networked serving tier: the TCP front door
+//! ([`RemoteCoordinator`] → `ShardServer` processes-in-miniature on
+//! 127.0.0.1) vs the in-process sharded coordinator on the same
+//! models, same backends, same request stream — the per-request price
+//! of the wire (framing + syscalls + one RTT) and how it amortises
+//! over shard counts.
+//!
+//! Run: `cargo bench --bench net_loopback`
+
+use std::time::Instant;
+
+use tsetlin_td::config::ServeConfig;
+use tsetlin_td::coordinator::net::{RemoteCoordinator, ShardServer};
+use tsetlin_td::coordinator::{Backend, CoordinatorServer, InferRequest, ShardedCoordinator};
+use tsetlin_td::tm::{
+    cotm_train::train_cotm, data, train::train_multiclass, ModelCompiler, TmParams,
+};
+use tsetlin_td::util::{SplitMix64, Table};
+
+const REQUESTS: usize = 2_000;
+const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
+const BACKENDS: [Backend; 2] = [Backend::AutoMulticlass, Backend::AutoCotm];
+
+fn main() {
+    let dataset = data::iris().unwrap();
+    let (tr, _) = dataset.split(0.8, 42);
+    let m = train_multiclass(TmParams::iris_paper(), &tr, 20, 2).unwrap();
+    let cm = train_cotm(TmParams::iris_paper(), &tr, 60, 3).unwrap();
+    let base = ServeConfig { workers: 1, ..ServeConfig::default() };
+    let compiler = ModelCompiler::new(base.compile);
+    let cmc = compiler.compile_multiclass(&m).unwrap();
+    let cco = compiler.compile_cotm(&cm).unwrap();
+
+    let mut table = Table::new(vec![
+        "shards".into(),
+        "front door".into(),
+        "req/s".into(),
+        "p50 us".into(),
+        "p99 us".into(),
+    ]);
+
+    for &n in &SHARD_COUNTS {
+        // In-process baseline.
+        let cfg = ServeConfig { shards: n, ..base.clone() };
+        let local = ShardedCoordinator::new(&cfg, m.clone(), cm.clone(), false).unwrap();
+        let (rps, p50, p99) = drive(|x, b| {
+            local
+                .infer(InferRequest { features: x.to_vec(), backend: b })
+                .map(|_| ())
+                .unwrap()
+        });
+        local.shutdown();
+        table.row(vec![
+            n.to_string(),
+            "in-process".into(),
+            format!("{rps:.0}"),
+            format!("{p50:.1}"),
+            format!("{p99:.1}"),
+        ]);
+
+        // Loopback TCP.
+        let shards: Vec<ShardServer> = (0..n)
+            .map(|_| {
+                let srv =
+                    CoordinatorServer::from_compiled_artifacts(&base, cmc.clone(), cco.clone())
+                        .unwrap();
+                ShardServer::bind(srv, "127.0.0.1:0").unwrap()
+            })
+            .collect();
+        let addrs: Vec<String> = shards.iter().map(|s| s.local_addr().to_string()).collect();
+        let router = RemoteCoordinator::connect(&addrs, 2, 0).unwrap();
+        let (rps, p50, p99) = drive(|x, b| router.infer(x, b).map(|_| ()).unwrap());
+        router.shutdown();
+        for s in shards {
+            s.shutdown();
+        }
+        table.row(vec![
+            n.to_string(),
+            "loopback tcp".into(),
+            format!("{rps:.0}"),
+            format!("{p50:.1}"),
+            format!("{p99:.1}"),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "({REQUESTS} sequential auto-backend requests per cell; loopback overhead = \
+         framing + 2 syscalls + RTT per request)"
+    );
+}
+
+/// Drive the request stream; returns (req/s, p50 us, p99 us).
+fn drive(mut f: impl FnMut(&[bool], Backend)) -> (f64, f64, f64) {
+    let dataset = data::iris().unwrap();
+    let mut rng = SplitMix64::new(1);
+    // Warm-up: batchers, connection pools, page cache.
+    for i in 0..100 {
+        f(&dataset.features[i % dataset.len()], BACKENDS[i % BACKENDS.len()]);
+    }
+    let mut lat = Vec::with_capacity(REQUESTS);
+    let t0 = Instant::now();
+    for i in 0..REQUESTS {
+        let x = &dataset.features[rng.index(dataset.len())];
+        let b = BACKENDS[i % BACKENDS.len()];
+        let r0 = Instant::now();
+        f(x, b);
+        lat.push(r0.elapsed().as_secs_f64() * 1e6);
+    }
+    let total = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pick = |q: f64| lat[((lat.len() - 1) as f64 * q) as usize];
+    (REQUESTS as f64 / total, pick(0.50), pick(0.99))
+}

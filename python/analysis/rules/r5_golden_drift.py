@@ -234,10 +234,25 @@ PROBES = [
     dict(
         name="hashring routing pairs",
         rust="rust/src/coordinator/shard.rs",
-        rust_spans=[("fn", "ring_routing_golden_vectors", 1)],
+        rust_spans=[
+            ("fn", "ring_routing_golden_vectors", 1),
+            ("fn", "ring_walk_golden_vectors", 1),
+        ],
         py="python/tests/test_hashring.py",
-        py_spans=[("def", "test_ring_routing_golden_vectors", 1)],
+        py_spans=[
+            ("def", "test_ring_routing_golden_vectors", 1),
+            ("def", "test_ring_walk_golden_vectors", 1),
+        ],
         extract="ints",
+        compare="exact",
+    ),
+    dict(
+        name="netproto golden frames",
+        rust="rust/src/coordinator/net/msg.rs",
+        rust_spans=[("fn", "netproto_golden_frames_match_python_mirror", 1)],
+        py="python/tests/test_netproto.py",
+        py_spans=[("anchor", "GOLDEN_FRAMES = ", 1)],
+        extract="hex_ints",
         compare="exact",
     ),
     dict(

@@ -10,6 +10,12 @@ that is the preferred, drift-proof form.
 Every ``ServeConfig`` field must have a TOML parse in ``from_toml``, a
 check in ``validate`` (or be on the type-level allowlist below, where
 parsing itself is the validation), and a USAGE mention.
+
+Every subcommand routed by ``main.rs``'s ``run`` dispatcher (the
+string-literal match arms) must appear in the USAGE text — a command
+that exists but is undocumented is unreachable by anyone reading
+``tmtd help``. Trees without a ``run`` dispatcher (fixtures) skip this
+check.
 """
 
 import re
@@ -38,6 +44,7 @@ _TYPE_VALIDATED = {
     "simd": "SimdChoice::parse rejects unknown level names",
     "batch_timeout_us": "every u64 is a legal timeout",
     "compile": "CompileMode::parse rejects unknown mode names",
+    "listen": "free-form bind address; `tmtd shard` errors on bind",
 }
 
 # Matches raw source ("Backend::ALL") and token-joined fn-body text,
@@ -63,6 +70,31 @@ def _fn_body_text(tree, rel, fn_name):
     for name, _, b0, b1 in rslex.fn_spans(toks):
         if name == fn_name:
             return " ".join(t.text for t in toks[b0 : b1 + 1])
+    return None
+
+
+def _run_subcommands(tree):
+    """String-literal match arms of main.rs's ``run`` dispatcher.
+
+    A literal counts when followed by ``=>`` (single-char lexed as
+    ``=`` ``>``) or ``|`` (multi-pattern arm). Returns ``None`` when no
+    ``run`` fn exists so fixture trees skip the check.
+    """
+    toks, _ = tree.lexed(MAIN)
+    for name, _, b0, b1 in rslex.fn_spans(toks):
+        if name != "run":
+            continue
+        subs = []
+        for k in range(b0, b1):
+            t = toks[k]
+            if t.kind != "str" or k + 1 > b1:
+                continue
+            nxt = toks[k + 1].text
+            if nxt in ("=", "|"):
+                sub = t.text.strip('"')
+                if sub:
+                    subs.append(sub)
+        return subs
     return None
 
 
@@ -147,6 +179,19 @@ def check(tree):
                         "(print it, or iterate Backend::ALL)",
                     )
                 )
+
+    subs = _run_subcommands(tree)
+    for sub in subs or []:
+        if sub not in usage_text:
+            out.append(
+                Finding(
+                    RULE,
+                    CLI,
+                    1,
+                    f"subcommand '{sub}' is dispatched by main.rs run() but "
+                    "absent from the CLI USAGE text",
+                )
+            )
 
     fields = _serve_fields(tree)
     if not fields:

@@ -91,3 +91,24 @@ class HashRing:
 
     def shard_for_features(self, features):
         return self.shard_for_hash(hash_features(features))
+
+    def shards(self):
+        """Number of distinct shards on the ring."""
+        return max(s for _, s in self.points) + 1 if self.points else 0
+
+    def walk_from_hash(self, h):
+        """Every distinct shard in ring order starting at ``h``'s owner
+        — the deterministic failover sequence the networked router
+        (``rust/src/coordinator/net/client.rs``) tries when earlier
+        shards are marked unhealthy. ``walk_from_hash(h)[0] ==
+        shard_for_hash(h)`` always."""
+        n = self.shards()
+        out = []
+        start = bisect.bisect_left(self.points, (h, -1))
+        for k in range(len(self.points)):
+            s = self.points[(start + k) % len(self.points)][1]
+            if s not in out:
+                out.append(s)
+                if len(out) == n:
+                    break
+        return out

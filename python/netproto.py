@@ -1,0 +1,395 @@
+"""Bit-for-bit mirror of the serving wire protocol
+(`rust/src/coordinator/net/frame.rs` + `net/msg.rs`).
+
+The networked serving tier speaks a hand-rolled length-prefixed binary
+protocol over TCP (std::net only — the Rust crate stays
+dependency-free). Because the CI image carries no Rust toolchain, this
+module re-implements the frame codec and every message's payload
+layout byte-for-byte, and `python/tests/test_netproto.py` pins the
+same golden byte-vectors the Rust unit tests assert — so the wire
+format validates on toolchain-less images, exactly like the hash ring
+in `python/hashring.py`.
+
+Frame layout (all integers little-endian):
+
+    offset  size  field
+    0       4     magic  b"tmtd"
+    4       1     protocol version (1)
+    5       1     message type
+    6       4     payload length (u32, <= MAX_PAYLOAD)
+    10      n     payload
+
+Message payloads (strings are u16 length + UTF-8 bytes):
+
+    type  message        payload
+    1     InferRequest   str backend, u32 nfeat, nfeat x u8 (0/1)
+    2     InferResponse  str backend, u32 predicted, u32 nsums,
+                         nsums x i32, f64 service_us
+    3     Reject         str reason       (backpressure, not swallowed)
+    4     Failed         str reason       (server-side error)
+    5     Heartbeat      u64 nonce
+    6     HeartbeatAck   u64 nonce
+    7     StatsRequest   (empty)
+    8     StatsReply     u64 submitted, completed, rejected, failed,
+                         batches_flushed, batched_requests,
+                         u32 nlat, nlat x f64, u32 nbatch, nbatch x f64
+                         (the raw latency / batch-size sample rings —
+                         shipped whole so the router aggregates exact
+                         percentiles, not merged approximations)
+    9     Drain          (empty)
+    10    DrainAck       (empty)
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass, field
+
+MAGIC = b"tmtd"
+VERSION = 1
+HEADER_LEN = 10
+# 16 MiB: far above any real message (the stats rings cap at 100k f64
+# samples ~ 800 KB each) while bounding a hostile length prefix.
+MAX_PAYLOAD = 1 << 24
+
+MSG_INFER_REQUEST = 1
+MSG_INFER_RESPONSE = 2
+MSG_REJECT = 3
+MSG_FAILED = 4
+MSG_HEARTBEAT = 5
+MSG_HEARTBEAT_ACK = 6
+MSG_STATS_REQUEST = 7
+MSG_STATS_REPLY = 8
+MSG_DRAIN = 9
+MSG_DRAIN_ACK = 10
+
+
+class NetProtoError(ValueError):
+    """A malformed frame or payload (mirror of the Rust codec's
+    coordinator errors — decoding must fail cleanly, never hang or
+    crash)."""
+
+
+# ---------------------------------------------------------------------------
+# messages
+
+
+@dataclass(frozen=True)
+class InferRequest:
+    backend: str
+    features: tuple[bool, ...]
+
+
+@dataclass(frozen=True)
+class InferResponse:
+    backend: str
+    predicted: int
+    class_sums: tuple[int, ...]
+    service_us: float
+
+
+@dataclass(frozen=True)
+class Reject:
+    reason: str
+
+
+@dataclass(frozen=True)
+class Failed:
+    reason: str
+
+
+@dataclass(frozen=True)
+class Heartbeat:
+    nonce: int
+
+
+@dataclass(frozen=True)
+class HeartbeatAck:
+    nonce: int
+
+
+@dataclass(frozen=True)
+class StatsRequest:
+    pass
+
+
+@dataclass(frozen=True)
+class StatsReply:
+    submitted: int
+    completed: int
+    rejected: int
+    failed: int
+    batches_flushed: int
+    batched_requests: int
+    latency_samples: tuple[float, ...] = field(default=())
+    batch_size_samples: tuple[float, ...] = field(default=())
+
+
+@dataclass(frozen=True)
+class Drain:
+    pass
+
+
+@dataclass(frozen=True)
+class DrainAck:
+    pass
+
+
+# ---------------------------------------------------------------------------
+# payload primitives
+
+
+def _put_str(out: bytearray, s: str) -> None:
+    raw = s.encode("utf-8")
+    if len(raw) > 0xFFFF:
+        raise NetProtoError("net: string too long for u16 length prefix")
+    out += struct.pack("<H", len(raw))
+    out += raw
+
+
+class _Reader:
+    """Bounds-checked cursor over a payload (mirror of the Rust
+    `PayloadReader`): every take validates remaining length and raises
+    instead of slicing past the end."""
+
+    def __init__(self, data: bytes):
+        self.data = data
+        self.pos = 0
+
+    def take(self, n: int) -> bytes:
+        if self.pos + n > len(self.data):
+            raise NetProtoError(
+                f"net: truncated payload (wanted {n} bytes, "
+                f"{len(self.data) - self.pos} left)"
+            )
+        chunk = self.data[self.pos : self.pos + n]
+        self.pos += n
+        return chunk
+
+    def u16(self) -> int:
+        return struct.unpack("<H", self.take(2))[0]
+
+    def u32(self) -> int:
+        return struct.unpack("<I", self.take(4))[0]
+
+    def i32(self) -> int:
+        return struct.unpack("<i", self.take(4))[0]
+
+    def u64(self) -> int:
+        return struct.unpack("<Q", self.take(8))[0]
+
+    def f64(self) -> float:
+        return struct.unpack("<d", self.take(8))[0]
+
+    def string(self) -> str:
+        n = self.u16()
+        try:
+            return self.take(n).decode("utf-8")
+        except UnicodeDecodeError as e:
+            raise NetProtoError(f"net: invalid UTF-8 in string: {e}") from e
+
+    def finish(self) -> None:
+        if self.pos != len(self.data):
+            raise NetProtoError(
+                f"net: {len(self.data) - self.pos} trailing bytes after message"
+            )
+
+
+# ---------------------------------------------------------------------------
+# message <-> payload
+
+def msg_type(msg) -> int:
+    types = {
+        InferRequest: MSG_INFER_REQUEST,
+        InferResponse: MSG_INFER_RESPONSE,
+        Reject: MSG_REJECT,
+        Failed: MSG_FAILED,
+        Heartbeat: MSG_HEARTBEAT,
+        HeartbeatAck: MSG_HEARTBEAT_ACK,
+        StatsRequest: MSG_STATS_REQUEST,
+        StatsReply: MSG_STATS_REPLY,
+        Drain: MSG_DRAIN,
+        DrainAck: MSG_DRAIN_ACK,
+    }
+    return types[type(msg)]
+
+
+def encode_payload(msg) -> bytes:
+    out = bytearray()
+    if isinstance(msg, InferRequest):
+        _put_str(out, msg.backend)
+        out += struct.pack("<I", len(msg.features))
+        out += bytes(1 if f else 0 for f in msg.features)
+    elif isinstance(msg, InferResponse):
+        _put_str(out, msg.backend)
+        out += struct.pack("<I", msg.predicted)
+        out += struct.pack("<I", len(msg.class_sums))
+        for s in msg.class_sums:
+            out += struct.pack("<i", s)
+        out += struct.pack("<d", msg.service_us)
+    elif isinstance(msg, (Reject, Failed)):
+        _put_str(out, msg.reason)
+    elif isinstance(msg, (Heartbeat, HeartbeatAck)):
+        out += struct.pack("<Q", msg.nonce)
+    elif isinstance(msg, StatsReply):
+        for c in (
+            msg.submitted,
+            msg.completed,
+            msg.rejected,
+            msg.failed,
+            msg.batches_flushed,
+            msg.batched_requests,
+        ):
+            out += struct.pack("<Q", c)
+        out += struct.pack("<I", len(msg.latency_samples))
+        for x in msg.latency_samples:
+            out += struct.pack("<d", x)
+        out += struct.pack("<I", len(msg.batch_size_samples))
+        for x in msg.batch_size_samples:
+            out += struct.pack("<d", x)
+    elif isinstance(msg, (StatsRequest, Drain, DrainAck)):
+        pass
+    else:
+        raise NetProtoError(f"net: unencodable message {msg!r}")
+    return bytes(out)
+
+
+def decode_payload(mtype: int, payload: bytes):
+    r = _Reader(payload)
+    if mtype == MSG_INFER_REQUEST:
+        backend = r.string()
+        n = r.u32()
+        raw = r.take(n)
+        feats = []
+        for b in raw:
+            if b > 1:
+                raise NetProtoError(f"net: feature byte {b} not 0/1")
+            feats.append(b == 1)
+        msg = InferRequest(backend, tuple(feats))
+    elif mtype == MSG_INFER_RESPONSE:
+        backend = r.string()
+        predicted = r.u32()
+        n = r.u32()
+        if n > MAX_PAYLOAD // 4:
+            raise NetProtoError(f"net: class-sum count {n} too large")
+        sums = tuple(r.i32() for _ in range(n))
+        msg = InferResponse(backend, predicted, sums, r.f64())
+    elif mtype == MSG_REJECT:
+        msg = Reject(r.string())
+    elif mtype == MSG_FAILED:
+        msg = Failed(r.string())
+    elif mtype == MSG_HEARTBEAT:
+        msg = Heartbeat(r.u64())
+    elif mtype == MSG_HEARTBEAT_ACK:
+        msg = HeartbeatAck(r.u64())
+    elif mtype == MSG_STATS_REQUEST:
+        msg = StatsRequest()
+    elif mtype == MSG_STATS_REPLY:
+        counters = [r.u64() for _ in range(6)]
+        nlat = r.u32()
+        if nlat > MAX_PAYLOAD // 8:
+            raise NetProtoError(f"net: latency sample count {nlat} too large")
+        lat = tuple(r.f64() for _ in range(nlat))
+        nbat = r.u32()
+        if nbat > MAX_PAYLOAD // 8:
+            raise NetProtoError(f"net: batch sample count {nbat} too large")
+        bat = tuple(r.f64() for _ in range(nbat))
+        msg = StatsReply(*counters, lat, bat)
+    elif mtype == MSG_DRAIN:
+        msg = Drain()
+    elif mtype == MSG_DRAIN_ACK:
+        msg = DrainAck()
+    else:
+        raise NetProtoError(f"net: unknown message type {mtype}")
+    r.finish()
+    return msg
+
+
+# ---------------------------------------------------------------------------
+# frame codec
+
+
+def encode_frame(mtype: int, payload: bytes) -> bytes:
+    if len(payload) > MAX_PAYLOAD:
+        raise NetProtoError(
+            f"net: payload of {len(payload)} bytes exceeds MAX_PAYLOAD"
+        )
+    return MAGIC + struct.pack("<BBI", VERSION, mtype, len(payload)) + payload
+
+
+def encode_msg(msg) -> bytes:
+    """One message as a complete frame (header + payload)."""
+    return encode_frame(msg_type(msg), encode_payload(msg))
+
+
+def decode_frame(data: bytes) -> tuple[int, bytes, int]:
+    """Parse one frame from the head of `data`; returns
+    `(msg_type, payload, bytes_consumed)`. Raises `NetProtoError` on a
+    malformed header and on truncation (a stream reader retries with
+    more bytes; a fixed buffer treats it as a hard error)."""
+    if len(data) < HEADER_LEN:
+        raise NetProtoError(
+            f"net: truncated frame header ({len(data)} of {HEADER_LEN} bytes)"
+        )
+    if data[:4] != MAGIC:
+        raise NetProtoError(f"net: bad magic {data[:4]!r} (expected {MAGIC!r})")
+    version, mtype, length = struct.unpack("<BBI", data[4:HEADER_LEN])
+    if version != VERSION:
+        raise NetProtoError(f"net: unsupported protocol version {version}")
+    if length > MAX_PAYLOAD:
+        raise NetProtoError(
+            f"net: frame length {length} exceeds MAX_PAYLOAD ({MAX_PAYLOAD})"
+        )
+    if len(data) < HEADER_LEN + length:
+        raise NetProtoError(
+            f"net: truncated payload ({len(data) - HEADER_LEN} of {length} bytes)"
+        )
+    return mtype, data[HEADER_LEN : HEADER_LEN + length], HEADER_LEN + length
+
+
+def decode_msg(data: bytes):
+    """Decode exactly one full-frame message from `data` (must consume
+    every byte)."""
+    mtype, payload, consumed = decode_frame(data)
+    if consumed != len(data):
+        raise NetProtoError(f"net: {len(data) - consumed} trailing bytes after frame")
+    return decode_payload(mtype, payload)
+
+
+# ---------------------------------------------------------------------------
+# blocking stream helpers (used by the socket-pair tests)
+
+
+def recv_exact(sock, n: int) -> bytes:
+    """Read exactly `n` bytes from a socket; raises `NetProtoError` on
+    EOF mid-read (the mid-frame-disconnect case)."""
+    chunks = []
+    got = 0
+    while got < n:
+        chunk = sock.recv(n - got)
+        if not chunk:
+            raise NetProtoError(
+                f"net: connection closed mid-frame ({got} of {n} bytes)"
+            )
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def read_msg(sock):
+    """Read one framed message from a blocking socket."""
+    header = recv_exact(sock, HEADER_LEN)
+    if header[:4] != MAGIC:
+        raise NetProtoError(f"net: bad magic {header[:4]!r} (expected {MAGIC!r})")
+    version, mtype, length = struct.unpack("<BBI", header[4:])
+    if version != VERSION:
+        raise NetProtoError(f"net: unsupported protocol version {version}")
+    if length > MAX_PAYLOAD:
+        raise NetProtoError(
+            f"net: frame length {length} exceeds MAX_PAYLOAD ({MAX_PAYLOAD})"
+        )
+    return decode_payload(mtype, recv_exact(sock, length))
+
+
+def write_msg(sock, msg) -> None:
+    sock.sendall(encode_msg(msg))

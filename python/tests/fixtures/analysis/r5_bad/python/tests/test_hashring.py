@@ -17,3 +17,8 @@ def test_ring_routing_golden_vectors():
     ring = make_ring(4)
     assert ring.route(0) == 1
     assert ring.route(12345) == 3
+
+
+def test_ring_walk_golden_vectors():
+    ring = make_ring(4)
+    assert ring.walk(0) == [0, 2, 1, 3]

@@ -17,4 +17,10 @@ mod tests {
         assert_eq!(ring.route(0), 1);
         assert_eq!(ring.route(12345), 3);
     }
+
+    #[test]
+    fn ring_walk_golden_vectors() {
+        let ring = ring(4);
+        assert_eq!(ring.walk(0), vec![0, 2, 1, 3]);
+    }
 }

@@ -49,6 +49,31 @@ def test_ring_routing_golden_vectors():
         assert ring3.shard_for_key(key) == want, key
 
 
+def test_ring_walk_golden_vectors():
+    ring4 = HashRing(4, DEFAULT_VNODES)
+    for key, want in [(0, [0, 2, 1, 3]), (1, [1, 0, 2, 3]),
+                      (12345, [3, 0, 2, 1])]:
+        assert ring4.walk_from_hash(hash_key(key)) == want, key
+    feats = [True, False, True, True, False, False, True, False]
+    assert ring4.walk_from_hash(hash_features(feats)) == [3, 1, 2, 0]
+    ring3 = HashRing(3, DEFAULT_VNODES)
+    for key, want in [(0, [0, 2, 1]), (7, [1, 0, 2]), (100, [2, 0, 1])]:
+        assert ring3.walk_from_hash(hash_key(key)) == want, key
+    assert HashRing(1, DEFAULT_VNODES).walk_from_hash(hash_key(0)) == [0]
+
+
+def test_walk_starts_at_owner_and_is_a_permutation():
+    # The failover order must begin at the routing owner and visit
+    # every shard exactly once.
+    for shards in [1, 2, 3, 5, 8]:
+        ring = HashRing(shards, 32)
+        for k in range(500):
+            h = hash_key(k)
+            walk = ring.walk_from_hash(h)
+            assert walk[0] == ring.shard_for_hash(h)
+            assert sorted(walk) == list(range(shards)), (shards, k)
+
+
 def test_ring_is_deterministic():
     a = HashRing(5, 32)
     b = HashRing(5, 32)

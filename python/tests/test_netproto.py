@@ -1,0 +1,337 @@
+"""Wire-protocol mirror vs the Rust serving tier
+(``rust/src/coordinator/net/``).
+
+Plain pytest (no hypothesis, no JAX) so it runs on every CI image.
+``GOLDEN_FRAMES`` below is asserted *identically* in
+``rust/src/coordinator/net/msg.rs`` (``netproto_golden_frames_match_
+python_mirror``); the r5 lint probe cross-checks the hex byte
+constants, so if either side changes, both fail.
+"""
+
+import socket
+import struct
+import threading
+
+import pytest
+
+from netproto import (
+    HEADER_LEN,
+    MAGIC,
+    MAX_PAYLOAD,
+    MSG_HEARTBEAT,
+    VERSION,
+    Drain,
+    DrainAck,
+    Failed,
+    Heartbeat,
+    HeartbeatAck,
+    InferRequest,
+    InferResponse,
+    NetProtoError,
+    Reject,
+    StatsReply,
+    StatsRequest,
+    decode_frame,
+    decode_msg,
+    encode_frame,
+    encode_msg,
+    encode_payload,
+    msg_type,
+    read_msg,
+    write_msg,
+)
+
+# One (message, framed bytes) pair per message type, duplicated by hand
+# in the Rust suite. Frame bytes are written in hex, every message
+# field in decimal — the r5 probe extracts only the hex literals.
+GOLDEN_FRAMES = [
+    (
+        InferRequest(
+            "bitparallel-mc",
+            (True, False, True, True, False, False, True, False),
+        ),
+        [
+            0x74, 0x6D, 0x74, 0x64, 0x01, 0x01, 0x1C, 0x00, 0x00, 0x00,
+            0x0E, 0x00, 0x62, 0x69, 0x74, 0x70, 0x61, 0x72, 0x61, 0x6C,
+            0x6C, 0x65, 0x6C, 0x2D, 0x6D, 0x63, 0x08, 0x00, 0x00, 0x00,
+            0x01, 0x00, 0x01, 0x01, 0x00, 0x00, 0x01, 0x00,
+        ],
+    ),
+    (
+        InferResponse("auto", 2, (-5, 3, 17), 123.5),
+        [
+            0x74, 0x6D, 0x74, 0x64, 0x01, 0x02, 0x22, 0x00, 0x00, 0x00,
+            0x04, 0x00, 0x61, 0x75, 0x74, 0x6F, 0x02, 0x00, 0x00, 0x00,
+            0x03, 0x00, 0x00, 0x00, 0xFB, 0xFF, 0xFF, 0xFF, 0x03, 0x00,
+            0x00, 0x00, 0x11, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00,
+            0x00, 0xE0, 0x5E, 0x40,
+        ],
+    ),
+    (
+        Reject("backpressure: queue depth exceeded"),
+        [
+            0x74, 0x6D, 0x74, 0x64, 0x01, 0x03, 0x24, 0x00, 0x00, 0x00,
+            0x22, 0x00, 0x62, 0x61, 0x63, 0x6B, 0x70, 0x72, 0x65, 0x73,
+            0x73, 0x75, 0x72, 0x65, 0x3A, 0x20, 0x71, 0x75, 0x65, 0x75,
+            0x65, 0x20, 0x64, 0x65, 0x70, 0x74, 0x68, 0x20, 0x65, 0x78,
+            0x63, 0x65, 0x65, 0x64, 0x65, 0x64,
+        ],
+    ),
+    (
+        Failed("engine dead"),
+        [
+            0x74, 0x6D, 0x74, 0x64, 0x01, 0x04, 0x0D, 0x00, 0x00, 0x00,
+            0x0B, 0x00, 0x65, 0x6E, 0x67, 0x69, 0x6E, 0x65, 0x20, 0x64,
+            0x65, 0x61, 0x64,
+        ],
+    ),
+    (
+        Heartbeat(81985529216486895),
+        [
+            0x74, 0x6D, 0x74, 0x64, 0x01, 0x05, 0x08, 0x00, 0x00, 0x00,
+            0xEF, 0xCD, 0xAB, 0x89, 0x67, 0x45, 0x23, 0x01,
+        ],
+    ),
+    (
+        HeartbeatAck(81985529216486895),
+        [
+            0x74, 0x6D, 0x74, 0x64, 0x01, 0x06, 0x08, 0x00, 0x00, 0x00,
+            0xEF, 0xCD, 0xAB, 0x89, 0x67, 0x45, 0x23, 0x01,
+        ],
+    ),
+    (
+        StatsRequest(),
+        [0x74, 0x6D, 0x74, 0x64, 0x01, 0x07, 0x00, 0x00, 0x00, 0x00],
+    ),
+    (
+        StatsReply(7, 5, 1, 1, 2, 5, (1.5, 2.25), (3.0,)),
+        [
+            0x74, 0x6D, 0x74, 0x64, 0x01, 0x08, 0x50, 0x00, 0x00, 0x00,
+            0x07, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x05, 0x00,
+            0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x01, 0x00, 0x00, 0x00,
+            0x00, 0x00, 0x00, 0x00, 0x01, 0x00, 0x00, 0x00, 0x00, 0x00,
+            0x00, 0x00, 0x02, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00,
+            0x05, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x02, 0x00,
+            0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xF8, 0x3F,
+            0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x02, 0x40, 0x01, 0x00,
+            0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x08, 0x40,
+        ],
+    ),
+    (
+        Drain(),
+        [0x74, 0x6D, 0x74, 0x64, 0x01, 0x09, 0x00, 0x00, 0x00, 0x00],
+    ),
+    (
+        DrainAck(),
+        [0x74, 0x6D, 0x74, 0x64, 0x01, 0x0A, 0x00, 0x00, 0x00, 0x00],
+    ),
+]
+
+
+# ---------------------------------------------------------------------------
+# goldens + roundtrips
+
+
+def test_golden_frames():
+    assert len(GOLDEN_FRAMES) == 10, "one golden per message type"
+    for msg, want in GOLDEN_FRAMES:
+        assert list(encode_msg(msg)) == want, msg
+        assert decode_msg(bytes(want)) == msg
+
+
+def test_roundtrip_every_message_type():
+    for msg, _ in GOLDEN_FRAMES:
+        assert decode_msg(encode_msg(msg)) == msg
+
+
+def test_roundtrip_edge_values():
+    for msg in [
+        InferRequest("", ()),
+        InferRequest("x", tuple(i % 2 == 0 for i in range(1000))),
+        InferResponse("auto-mc", 0, (), 0.0),
+        InferResponse("a", 4294967295, (-2147483648, 2147483647), -1.25),
+        Reject(""),
+        Failed("x" * 65535),
+        Heartbeat(0),
+        Heartbeat(18446744073709551615),
+        StatsReply(0, 0, 0, 0, 0, 0, (), ()),
+        StatsReply(
+            18446744073709551615, 1, 2, 3, 4, 5,
+            tuple(float(i) for i in range(100)), (0.5,),
+        ),
+    ]:
+        assert decode_msg(encode_msg(msg)) == msg
+
+
+def test_frame_header_layout():
+    frame = encode_msg(Heartbeat(5))
+    assert frame[:4] == MAGIC
+    assert frame[4] == VERSION
+    assert frame[5] == MSG_HEARTBEAT
+    assert struct.unpack("<I", frame[6:10])[0] == len(frame) - HEADER_LEN
+
+
+def test_decode_frame_reports_consumed():
+    frame = encode_msg(Drain())
+    mtype, payload, consumed = decode_frame(frame + b"extra")
+    assert consumed == len(frame)
+    assert payload == b""
+
+
+# ---------------------------------------------------------------------------
+# adversarial decoding — errors must be clean NetProtoError, never a
+# struct.error / IndexError crash, never a hang
+
+
+def test_truncated_frames_every_prefix():
+    for msg, _ in GOLDEN_FRAMES:
+        frame = encode_msg(msg)
+        for cut in range(len(frame)):
+            with pytest.raises(NetProtoError):
+                decode_msg(frame[:cut])
+
+
+def test_bad_magic_rejected():
+    frame = bytearray(encode_msg(Drain()))
+    frame[0] ^= 0xFF
+    with pytest.raises(NetProtoError, match="bad magic"):
+        decode_msg(bytes(frame))
+
+
+def test_bad_version_rejected():
+    frame = bytearray(encode_msg(Drain()))
+    frame[4] = 99
+    with pytest.raises(NetProtoError, match="version"):
+        decode_msg(bytes(frame))
+
+
+def test_unknown_message_type_rejected():
+    frame = bytearray(encode_msg(Drain()))
+    frame[5] = 0xEE
+    with pytest.raises(NetProtoError, match="unknown message type"):
+        decode_msg(bytes(frame))
+
+
+def test_oversized_length_prefix_rejected():
+    header = MAGIC + struct.pack("<BBI", VERSION, MSG_HEARTBEAT, MAX_PAYLOAD + 1)
+    with pytest.raises(NetProtoError, match="MAX_PAYLOAD"):
+        decode_frame(header)
+    with pytest.raises(NetProtoError):
+        encode_frame(MSG_HEARTBEAT, b"\0" * (MAX_PAYLOAD + 1))
+
+
+def test_zero_length_prefix_on_nonempty_message_rejected():
+    # A zero-payload heartbeat is a truncated-payload decode error, not
+    # a crash.
+    header = MAGIC + struct.pack("<BBI", VERSION, MSG_HEARTBEAT, 0)
+    with pytest.raises(NetProtoError, match="truncated payload"):
+        decode_msg(header)
+
+
+def test_trailing_garbage_rejected():
+    for msg, _ in GOLDEN_FRAMES:
+        with pytest.raises(NetProtoError, match="trailing"):
+            decode_msg(encode_msg(msg) + b"\0")
+
+
+def test_payload_internal_truncation_rejected():
+    # Shorten the *payload* while keeping the declared length honest:
+    # every inner cut must fail (reader bounds), none may crash.
+    for msg, _ in GOLDEN_FRAMES:
+        payload = encode_payload(msg)
+        for cut in range(len(payload)):
+            with pytest.raises(NetProtoError):
+                decode_msg(encode_frame(msg_type(msg), payload[:cut]))
+
+
+def test_non_boolean_feature_byte_rejected():
+    payload = bytearray(encode_payload(InferRequest("a", (True,))))
+    payload[-1] = 2
+    with pytest.raises(NetProtoError, match="not 0/1"):
+        decode_msg(encode_frame(1, bytes(payload)))
+
+
+def test_invalid_utf8_backend_rejected():
+    payload = struct.pack("<H", 2) + b"\xff\xfe" + struct.pack("<I", 0)
+    with pytest.raises(NetProtoError, match="UTF-8"):
+        decode_msg(encode_frame(1, payload))
+
+
+def test_hostile_inner_counts_rejected():
+    # Inner element counts larger than the payload could ever carry
+    # must fail fast, not allocate or loop MAX_PAYLOAD times.
+    sums = struct.pack("<H", 1) + b"a" + struct.pack("<II", 0, 0xFFFFFFFF)
+    with pytest.raises(NetProtoError):
+        decode_msg(encode_frame(2, sums))
+    stats = struct.pack("<6Q", 0, 0, 0, 0, 0, 0) + struct.pack("<I", 0xFFFFFFFF)
+    with pytest.raises(NetProtoError):
+        decode_msg(encode_frame(8, stats))
+
+
+# ---------------------------------------------------------------------------
+# stream behaviour over a real socket pair
+
+
+def _sock_pair():
+    a, b = socket.socketpair()
+    a.settimeout(5.0)
+    b.settimeout(5.0)
+    return a, b
+
+
+def test_stream_roundtrip_and_interleaved_heartbeats():
+    a, b = _sock_pair()
+    try:
+        sent = [
+            Heartbeat(1),
+            InferRequest("auto", (True, False)),
+            Heartbeat(2),
+            StatsRequest(),
+            Heartbeat(3),
+            Drain(),
+        ]
+        for m in sent:
+            write_msg(a, m)
+        got = [read_msg(b) for _ in sent]
+        assert got == sent
+    finally:
+        a.close()
+        b.close()
+
+
+def test_stream_split_delivery():
+    # One frame trickled in 1-byte writes must still decode.
+    a, b = _sock_pair()
+    try:
+        frame = encode_msg(InferRequest("bitparallel-co", (True,) * 9))
+        writer = threading.Thread(
+            target=lambda: [a.sendall(bytes([x])) for x in frame]
+        )
+        writer.start()
+        assert read_msg(b) == InferRequest("bitparallel-co", (True,) * 9)
+        writer.join()
+    finally:
+        a.close()
+        b.close()
+
+
+def test_mid_frame_disconnect_is_clean_error():
+    a, b = _sock_pair()
+    try:
+        frame = encode_msg(Heartbeat(7))
+        a.sendall(frame[: len(frame) - 3])
+        a.close()
+        with pytest.raises(NetProtoError, match="mid-frame"):
+            read_msg(b)
+    finally:
+        b.close()
+
+
+def test_disconnect_before_any_bytes_is_clean_error():
+    a, b = _sock_pair()
+    try:
+        a.close()
+        with pytest.raises(NetProtoError, match="mid-frame"):
+            read_msg(b)
+    finally:
+        b.close()

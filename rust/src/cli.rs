@@ -92,8 +92,19 @@ COMMANDS:
              --config serve.toml --requests N [--no-golden] [--shards N]
              [--simd auto|scalar|portable|neon|avx2|avx512]
              [--compile off|prune|full]
+             [--remote-shards host:port,host:port,...] [--drain]
              (--shards N fronts N coordinator shards with a
-              deterministic consistent-hash ring; default from config)
+              deterministic consistent-hash ring; default from config.
+              --remote-shards routes over TCP to running `tmtd shard`
+              processes instead — same ring, same routing; --drain
+              gracefully stops the remote shards afterwards)
+  shard      Serve one coordinator shard over TCP (see docs/DEPLOY.md)
+             --listen host:port [--config serve.toml]
+             [--model multiclass.tmc --cotm-model cotm.tmc]
+             [--simd ...] [--compile off|prune|full]
+             (pins the compiled .tmc artifact pair from `tmtd compile`;
+              without them a demo iris pair is trained in-process.
+              Runs until a Drain message arrives)
   selfcheck  Train + verify every backend agrees on Iris, that the
              packed trainer reproduces the reference trainer
              bit-for-bit, and that every available SIMD lane width
@@ -137,6 +148,16 @@ serve.toml knobs, all under [coordinator]:
   simd                           lane width (see below)
   compile                        model-compile pass: off|prune|full
                                  (default prune; see `tmtd compile`)
+  remote_shards                  comma list of host:port shard
+                                 addresses; non-empty switches `serve`
+                                 to the networked front door
+  listen                         default --listen address for `shard`
+  net_connections                pooled TCP connections per remote
+                                 shard (>= 1)
+  net_heartbeat_ms               shard health-probe period (>= 1;
+                                 unhealthy shards are probed with
+                                 exponential backoff and rejoin on the
+                                 first acked beat)
 
 The packed engines evaluate in SIMD word lanes (`simd` under
 [coordinator], or --simd on serve): \"auto\" (default) picks the widest

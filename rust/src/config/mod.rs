@@ -60,6 +60,21 @@ pub struct ServeConfig {
     /// probability over a deterministic synthetic calibration batch
     /// (also output-invariant); `off` serves the model byte-for-byte.
     pub compile: CompileMode,
+    /// Remote shard addresses (`host:port`, comma-separated in TOML /
+    /// on the CLI). Non-empty switches `tmtd serve` from in-process
+    /// shards to the networked router (`coordinator::net`): requests
+    /// route over TCP to `tmtd shard` processes on these addresses.
+    pub remote_shards: Vec<String>,
+    /// Listen address for `tmtd shard` (`host:port`; empty = not a
+    /// shard process). Also settable with `tmtd shard --listen`.
+    pub listen: String,
+    /// TCP connections pooled per remote shard (request parallelism
+    /// toward one shard process). Must be >= 1.
+    pub net_connections: usize,
+    /// Heartbeat period in milliseconds for remote-shard health
+    /// tracking; a shard that misses a heartbeat is routed around
+    /// until it acks again. Must be >= 1.
+    pub net_heartbeat_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -77,6 +92,10 @@ impl Default for ServeConfig {
                 crate::tm::compressed::PACKED_VS_COMPRESSED_DENSITY,
             simd: SimdChoice::Auto,
             compile: CompileMode::default(),
+            remote_shards: Vec::new(),
+            listen: String::new(),
+            net_connections: 2,
+            net_heartbeat_ms: 500,
         }
     }
 }
@@ -97,6 +116,10 @@ impl ServeConfig {
     /// compressed_density_threshold = 0.2
     /// simd = "auto"
     /// compile = "prune"
+    /// remote_shards = "127.0.0.1:7401,127.0.0.1:7402"
+    /// listen = ""
+    /// net_connections = 2
+    /// net_heartbeat_ms = 500
     /// ```
     pub fn from_toml(doc: &TomlDoc) -> Result<ServeConfig> {
         // Counts must reject negative values rather than `as`-casting
@@ -145,6 +168,18 @@ impl ServeConfig {
                     "unknown compile mode {name:?} (expected off|prune|full)"
                 ))
             })?;
+        }
+        if let Some(v) = doc.get("coordinator", "remote_shards") {
+            cfg.remote_shards = parse_remote_shards(v.as_str()?)?;
+        }
+        if let Some(v) = doc.get("coordinator", "listen") {
+            cfg.listen = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.get("coordinator", "net_connections") {
+            cfg.net_connections = non_negative(v, "net_connections")?;
+        }
+        if let Some(v) = doc.get("coordinator", "net_heartbeat_ms") {
+            cfg.net_heartbeat_ms = non_negative(v, "net_heartbeat_ms")?;
         }
         if let Some(v) = doc.get("coordinator", "wta") {
             cfg.wta = match v.as_str()? {
@@ -195,8 +230,39 @@ impl ServeConfig {
                 "compressed_density_threshold must be in [0, 1]",
             ));
         }
+        if self.remote_shards.iter().any(|a| a.is_empty()) {
+            return Err(crate::Error::config(
+                "remote_shards entries must be non-empty host:port addresses",
+            ));
+        }
+        if self.net_connections == 0 {
+            return Err(crate::Error::config("net_connections must be >= 1"));
+        }
+        if self.net_heartbeat_ms == 0 {
+            return Err(crate::Error::config("net_heartbeat_ms must be >= 1"));
+        }
         Ok(())
     }
+}
+
+/// Split a comma-separated `host:port` list, trimming whitespace and
+/// dropping empty segments from trailing commas; fully-empty input
+/// yields no shards (local serving).
+pub fn parse_remote_shards(text: &str) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    for part in text.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if !part.contains(':') {
+            return Err(crate::Error::config(format!(
+                "remote shard address {part:?} is not host:port"
+            )));
+        }
+        out.push(part.to_string());
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -224,6 +290,10 @@ mod tests {
             compressed_density_threshold = 0.33
             simd = "portable"
             compile = "full"
+            remote_shards = "127.0.0.1:7401, 127.0.0.1:7402"
+            listen = "0.0.0.0:7400"
+            net_connections = 3
+            net_heartbeat_ms = 250
             "#,
         )
         .unwrap();
@@ -234,6 +304,10 @@ mod tests {
         assert_eq!(cfg.max_batch, 64);
         assert_eq!(cfg.wta, WtaKind::Mesh);
         assert_eq!(cfg.artifacts_dir, "custom/artifacts");
+        assert_eq!(cfg.remote_shards, vec!["127.0.0.1:7401", "127.0.0.1:7402"]);
+        assert_eq!(cfg.listen, "0.0.0.0:7400");
+        assert_eq!(cfg.net_connections, 3);
+        assert_eq!(cfg.net_heartbeat_ms, 250);
         assert_eq!(cfg.indexed_density_threshold, 0.12);
         assert_eq!(cfg.compressed_density_threshold, 0.33);
         assert_eq!(
@@ -300,7 +374,7 @@ mod tests {
         // Regression (the new knob must get the same total-comparison
         // guard as the indexed one): NaN and out-of-range values must
         // fail validation, not silently skew the three-way auto select.
-        for t in ["-0.1", "1.5", "nan"] {
+        for t in ["-0.1", "1.5"] {
             let doc = TomlDoc::parse(&format!(
                 "[coordinator]\ncompressed_density_threshold = {t}\n"
             ))
@@ -311,6 +385,15 @@ mod tests {
                 "{t}: {err}"
             );
         }
+        // "nan" no longer reaches from_toml at all — the TOML layer
+        // rejects non-finite literals — but the validate() guard stays
+        // for programmatic construction.
+        assert!(TomlDoc::parse("[coordinator]\ncompressed_density_threshold = nan\n").is_err());
+        let cfg = ServeConfig {
+            compressed_density_threshold: f64::NAN,
+            ..ServeConfig::default()
+        };
+        assert!(cfg.validate().is_err());
         // Integer 0 and 1 coerce to float and are valid boundaries, and
         // the two knobs validate independently (inverted pairs are
         // legal — selection stays total).
@@ -330,13 +413,18 @@ mod tests {
 
     #[test]
     fn rejects_out_of_range_density_threshold() {
-        for t in ["-0.1", "1.5", "nan"] {
+        for t in ["-0.1", "1.5"] {
             let doc = TomlDoc::parse(&format!(
                 "[coordinator]\nindexed_density_threshold = {t}\n"
             ))
             .unwrap();
             assert!(ServeConfig::from_toml(&doc).is_err(), "{t}");
         }
+        // Non-finite literals are now a TOML-layer parse error; the
+        // validate() range guard still covers programmatic NaN.
+        assert!(TomlDoc::parse("[coordinator]\nindexed_density_threshold = nan\n").is_err());
+        let cfg = ServeConfig { indexed_density_threshold: f64::NAN, ..ServeConfig::default() };
+        assert!(cfg.validate().is_err());
         // Integer 0 and 1 coerce to float and are valid boundaries.
         for t in ["0", "1", "0.5"] {
             let doc = TomlDoc::parse(&format!(
@@ -375,5 +463,33 @@ mod tests {
         let doc =
             TomlDoc::parse("[coordinator]\nmax_batch = 64\nqueue_depth = 8\n").unwrap();
         assert!(ServeConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn parses_remote_shard_lists() {
+        // Trailing commas and whitespace are tolerated; empty input
+        // means local in-process serving.
+        assert_eq!(
+            parse_remote_shards(" a:1, b:2 ,").unwrap(),
+            vec!["a:1", "b:2"]
+        );
+        assert_eq!(parse_remote_shards("").unwrap(), Vec::<String>::new());
+        // A segment without a port is a config error, not a late
+        // connect failure.
+        let err = parse_remote_shards("a:1,nocolon").unwrap_err();
+        assert!(err.to_string().contains("host:port"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_net_knobs() {
+        let doc = TomlDoc::parse("[coordinator]\nnet_connections = 0\n").unwrap();
+        assert!(ServeConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[coordinator]\nnet_heartbeat_ms = 0\n").unwrap();
+        assert!(ServeConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[coordinator]\nremote_shards = \"a:1,b\"\n").unwrap();
+        assert!(ServeConfig::from_toml(&doc).is_err());
+        // An empty remote_shards string is the local-serving default.
+        let doc = TomlDoc::parse("[coordinator]\nremote_shards = \"\"\n").unwrap();
+        assert!(ServeConfig::from_toml(&doc).unwrap().remote_shards.is_empty());
     }
 }

@@ -55,6 +55,7 @@ impl TomlDoc {
     pub fn parse(text: &str) -> Result<TomlDoc> {
         let mut doc = TomlDoc::default();
         let mut section = String::new();
+        let mut declared: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
         for (lineno, raw) in text.lines().enumerate() {
             let line = strip_comment(raw).trim();
             if line.is_empty() {
@@ -65,6 +66,12 @@ impl TomlDoc {
                     .strip_suffix(']')
                     .ok_or_else(|| Error::config(format!("line {}: unterminated section", lineno + 1)))?;
                 section = name.trim().to_string();
+                if !declared.insert(section.clone()) {
+                    return Err(Error::config(format!(
+                        "line {}: section [{section}] reopened (TOML forbids redefining a table)",
+                        lineno + 1
+                    )));
+                }
                 doc.sections.entry(section.clone()).or_default();
                 continue;
             }
@@ -73,10 +80,15 @@ impl TomlDoc {
             })?;
             let value = parse_value(value.trim())
                 .map_err(|e| Error::config(format!("line {}: {e}", lineno + 1)))?;
-            doc.sections
-                .entry(section.clone())
-                .or_default()
-                .insert(key.trim().to_string(), value);
+            let key = key.trim().to_string();
+            let entry = doc.sections.entry(section.clone()).or_default();
+            if entry.contains_key(&key) {
+                return Err(Error::config(format!(
+                    "line {}: duplicate key {key:?} in section [{section}]",
+                    lineno + 1
+                )));
+            }
+            entry.insert(key, value);
         }
         Ok(doc)
     }
@@ -91,24 +103,57 @@ impl TomlDoc {
 }
 
 fn strip_comment(line: &str) -> &str {
-    // A '#' inside a quoted string does not start a comment.
+    // A '#' inside a quoted string does not start a comment, and an
+    // escaped '\"' inside a string does not close it (a naive
+    // quote-toggle would truncate `path = "say \"hi\" # tag"` at the
+    // '#' between the escaped quotes).
     let mut in_str = false;
+    let mut escaped = false;
     for (i, c) in line.char_indices() {
-        match c {
-            '"' => in_str = !in_str,
-            '#' if !in_str => return &line[..i],
-            _ => {}
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+        } else if c == '"' {
+            in_str = true;
+        } else if c == '#' {
+            return &line[..i];
         }
     }
     line
 }
 
 fn parse_value(text: &str) -> std::result::Result<TomlValue, String> {
-    if let Some(stripped) = text.strip_prefix('"') {
-        let inner = stripped
-            .strip_suffix('"')
-            .ok_or_else(|| "unterminated string".to_string())?;
-        return Ok(TomlValue::String(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    if let Some(rest) = text.strip_prefix('"') {
+        // Escape-aware scan: `strip_suffix('"')` would treat the
+        // escaped quote in `"ends with \""` as the terminator and
+        // mangle the value.
+        let mut out = String::new();
+        let mut chars = rest.chars();
+        loop {
+            match chars.next() {
+                None => return Err("unterminated string".to_string()),
+                Some('"') => break,
+                Some('\\') => match chars.next() {
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some(other) => return Err(format!("unsupported escape \\{other}")),
+                    None => return Err("unterminated string (escape at end of line)".to_string()),
+                },
+                Some(c) => out.push(c),
+            }
+        }
+        let trailing = chars.as_str();
+        if !trailing.is_empty() {
+            return Err(format!("trailing characters {trailing:?} after string"));
+        }
+        return Ok(TomlValue::String(out));
     }
     match text {
         "true" => return Ok(TomlValue::Bool(true)),
@@ -119,6 +164,13 @@ fn parse_value(text: &str) -> std::result::Result<TomlValue, String> {
         return Ok(TomlValue::Int(i));
     }
     if let Ok(f) = text.parse::<f64>() {
+        // TOML has no inf/nan literals, and `f64::from_str` happily
+        // accepts "inf", "nan" and overflowing forms like "1e999";
+        // letting them through would dodge every downstream range
+        // check that compares with `<`/`>`.
+        if !f.is_finite() {
+            return Err(format!("non-finite float {text:?} (TOML forbids inf/nan)"));
+        }
         return Ok(TomlValue::Float(f));
     }
     Err(format!("cannot parse value {text:?}"))
@@ -163,6 +215,66 @@ mod tests {
         assert!(TomlDoc::parse("[unclosed\n").is_err());
         assert!(TomlDoc::parse("novalue\n").is_err());
         assert!(TomlDoc::parse("x = \"open\n").is_err());
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_open_comments_or_close_strings() {
+        let doc = TomlDoc::parse(
+            "p = \"say \\\"hi\\\" # tag\"   # real comment\n\
+             q = \"ends with \\\"\"\n\
+             r = \"back\\\\slash\"\n\
+             t = \"trailing backslash\\\\\"\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "p").unwrap().as_str().unwrap(), "say \"hi\" # tag");
+        assert_eq!(doc.get("", "q").unwrap().as_str().unwrap(), "ends with \"");
+        assert_eq!(doc.get("", "r").unwrap().as_str().unwrap(), "back\\slash");
+        assert_eq!(doc.get("", "t").unwrap().as_str().unwrap(), "trailing backslash\\");
+    }
+
+    #[test]
+    fn rejects_bad_strings_with_reasons() {
+        // Escape at end of line leaves the string unterminated.
+        let err = TomlDoc::parse("x = \"dangling\\").unwrap_err().to_string();
+        assert!(err.contains("unterminated"), "{err}");
+        // Junk after the closing quote is not silently dropped.
+        let err = TomlDoc::parse("x = \"a\" b\n").unwrap_err().to_string();
+        assert!(err.contains("trailing characters"), "{err}");
+        // Unknown escapes are an error, not a pass-through.
+        let err = TomlDoc::parse("x = \"\\q\"\n").unwrap_err().to_string();
+        assert!(err.contains("unsupported escape"), "{err}");
+    }
+
+    #[test]
+    fn rejects_duplicate_keys_and_reopened_sections() {
+        let err = TomlDoc::parse("[a]\nx = 1\nx = 2\n").unwrap_err().to_string();
+        assert!(err.contains("line 3") && err.contains("duplicate key"), "{err}");
+        let err = TomlDoc::parse("x = 1\nx = 2\n").unwrap_err().to_string();
+        assert!(err.contains("line 2") && err.contains("duplicate key"), "{err}");
+        let err = TomlDoc::parse("[a]\nx = 1\n[b]\ny = 2\n[a]\nz = 3\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 5") && err.contains("reopened"), "{err}");
+        // Same key in different sections stays legal.
+        let doc = TomlDoc::parse("[a]\nx = 1\n[b]\nx = 2\n").unwrap();
+        assert_eq!(doc.get("a", "x").unwrap().as_int().unwrap(), 1);
+        assert_eq!(doc.get("b", "x").unwrap().as_int().unwrap(), 2);
+    }
+
+    #[test]
+    fn rejects_non_finite_floats() {
+        for text in ["inf", "-inf", "+inf", "infinity", "nan", "NaN", "1e999", "-1e999"] {
+            let err = TomlDoc::parse(&format!("x = {text}\n")).unwrap_err().to_string();
+            assert!(
+                err.contains("line 1")
+                    && (err.contains("non-finite") || err.contains("cannot parse")),
+                "{text}: {err}"
+            );
+        }
+        // Ordinary floats (incl. exponents within range) still parse.
+        let doc = TomlDoc::parse("x = 1e10\ny = -2.5e-3\n").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_float().unwrap(), 1e10);
+        assert_eq!(doc.get("", "y").unwrap().as_float().unwrap(), -2.5e-3);
     }
 
     #[test]

@@ -49,6 +49,16 @@
 //! across shards from the raw sample rings; shutdown drains every
 //! shard.
 //!
+//! Networked scale-out ([`net`]): the same sharded topology across
+//! *processes* — `tmtd shard` serves one [`CoordinatorServer`] (with a
+//! pinned `.tmc` model pair) over a hand-rolled length-prefixed TCP
+//! protocol (`std::net` only), and [`net::RemoteCoordinator`] routes
+//! with the identical [`shard::HashRing`], fails over along the
+//! deterministic ring walk on transport errors only, propagates
+//! per-shard backpressure over the wire, and aggregates exact stats
+//! from shipped raw sample rings. Wire format mirrored bit-for-bit by
+//! `python/netproto.py`.
+//!
 //! Concurrency ([`pool`]): hardware models are not `Send` (they embed
 //! `Rc`-coded delay elements), so each worker thread *builds its own*
 //! architecture set from the (Send) trained models and pulls jobs from
@@ -61,12 +71,14 @@
 //! counts them).
 
 pub mod batcher;
+pub mod net;
 pub mod pool;
 pub mod router;
 pub mod server;
 pub mod shard;
 pub mod stats;
 
+pub use net::{RemoteCoordinator, ShardServer};
 pub use router::{Backend, InferRequest, InferResponse};
 pub use server::CoordinatorServer;
 pub use shard::{HashRing, ShardedCoordinator};

@@ -1,0 +1,450 @@
+//! Router-side client for the networked serving tier: a
+//! [`RemoteCoordinator`] fronts N shard processes (see
+//! [`super::server::ShardServer`]) behind the same consistent-hash
+//! ring the in-process [`ShardedCoordinator`] uses, so the TCP front
+//! door routes requests to the same shard the in-process front door
+//! would.
+//!
+//! [`ShardedCoordinator`]: crate::coordinator::shard::ShardedCoordinator
+//!
+//! Failure semantics:
+//!
+//! * **Failover only on transport failure.** A connect/read/write
+//!   error ([`Error::Io`]) marks the shard unhealthy and the request
+//!   retries on the next shard in the ring walk
+//!   ([`HashRing::walk_from_hash`] — deterministic, starts at the
+//!   owner). A [`Msg::Reject`] (backpressure) or [`Msg::Failed`]
+//!   (serving error) is a *shard answering correctly* and propagates
+//!   to the caller without failover — retrying a rejection elsewhere
+//!   would silently defeat per-shard backpressure.
+//! * **Reconnect with backoff.** A heartbeat thread probes every
+//!   shard; an unhealthy shard is probed on an exponentially growing
+//!   tick schedule (capped) and rejoins the healthy set on the first
+//!   acked beat. Requests skip unhealthy shards while any healthy one
+//!   remains, so a dead shard costs one failed probe per backoff
+//!   window, not one timeout per request.
+//! * **Exact stats.** [`RemoteCoordinator::cluster_stats`] merges the
+//!   shards' counters and rebuilds latency/batch percentiles from the
+//!   raw sample rings shipped in [`Msg::StatsReply`] — the same exact
+//!   aggregation `ShardedCoordinator::stats` performs in-process.
+
+use std::io::ErrorKind;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use crate::coordinator::net::msg::Msg;
+use crate::coordinator::router::{Backend, InferResponse};
+use crate::coordinator::shard::{hash_features, HashRing, DEFAULT_VNODES};
+use crate::coordinator::stats::{ServerStats, StatsSnapshot};
+use crate::error::{Error, Result};
+use crate::util::stats::Summary;
+use crate::util::sync::lock_unpoisoned;
+
+/// Cap on the heartbeat backoff: an unhealthy shard is probed at least
+/// every `2^MAX_BACKOFF_EXP` heartbeat ticks.
+const MAX_BACKOFF_EXP: u32 = 4;
+/// Transport timeouts: a shard that accepts but never answers must
+/// surface as an [`Error::Io`] (failover), never a hang.
+const CONNECT_TIMEOUT: Duration = Duration::from_millis(1_000);
+const REPLY_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// One remote shard: address, bounded connection pool, health bit.
+pub struct RemoteShard {
+    addr: String,
+    /// Idle pooled connections (bounded by `max_conns`).
+    pool: Mutex<Vec<TcpStream>>,
+    max_conns: usize,
+    healthy: AtomicBool,
+    /// Consecutive failed heartbeat probes (drives the backoff).
+    misses: AtomicU32,
+    /// Heartbeat ticks to skip before the next probe of an unhealthy
+    /// shard.
+    skip_ticks: AtomicU32,
+}
+
+impl RemoteShard {
+    fn new(addr: String, max_conns: usize) -> RemoteShard {
+        RemoteShard {
+            addr,
+            pool: Mutex::new(Vec::new()),
+            max_conns,
+            healthy: AtomicBool::new(true),
+            misses: AtomicU32::new(0),
+            skip_ticks: AtomicU32::new(0),
+        }
+    }
+
+    /// The `host:port` this shard was configured with.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Current health belief (updated by heartbeats and by request
+    /// outcomes).
+    pub fn is_healthy(&self) -> bool {
+        self.healthy.load(Ordering::SeqCst)
+    }
+
+    fn connect(&self) -> Result<TcpStream> {
+        let sockaddr = self
+            .addr
+            .to_socket_addrs()
+            .map_err(Error::Io)?
+            .next()
+            .ok_or_else(|| Error::coordinator(format!("net: {:?} resolves to nothing", self.addr)))?;
+        let stream = TcpStream::connect_timeout(&sockaddr, CONNECT_TIMEOUT)?;
+        stream.set_read_timeout(Some(REPLY_TIMEOUT))?;
+        stream.set_nodelay(true)?;
+        Ok(stream)
+    }
+
+    fn checkout(&self) -> Result<TcpStream> {
+        if let Some(s) = lock_unpoisoned(&self.pool).pop() {
+            return Ok(s);
+        }
+        self.connect()
+    }
+
+    fn checkin(&self, stream: TcpStream) {
+        let mut pool = lock_unpoisoned(&self.pool);
+        if pool.len() < self.max_conns {
+            pool.push(stream);
+        }
+    }
+
+    /// One request/reply exchange. A transport error on a *pooled*
+    /// connection retries once on a fresh connect (the pooled socket
+    /// may be stale after a shard restart); a fresh-connection failure
+    /// is the shard's answer. Updates the health bit on both outcomes.
+    pub fn call(&self, msg: &Msg) -> Result<Msg> {
+        let mut fresh = false;
+        let mut stream = match self.checkout() {
+            Ok(s) => s,
+            Err(e) => {
+                self.mark_unhealthy();
+                return Err(e);
+            }
+        };
+        loop {
+            match exchange(&mut stream, msg) {
+                Ok(reply) => {
+                    self.mark_healthy();
+                    self.checkin(stream);
+                    return Ok(reply);
+                }
+                Err(Error::Io(_)) if !fresh => {
+                    // Stale pooled socket: retry exactly once on a
+                    // fresh connection before declaring the shard down.
+                    fresh = true;
+                    stream = match self.connect() {
+                        Ok(s) => s,
+                        Err(e) => {
+                            self.mark_unhealthy();
+                            return Err(e);
+                        }
+                    };
+                }
+                Err(e @ Error::Io(_)) => {
+                    self.mark_unhealthy();
+                    return Err(e);
+                }
+                Err(e) => {
+                    // Protocol error: the stream offset is unknowable,
+                    // drop the connection but don't blame the shard's
+                    // health — it answered, just not with protocol.
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    fn mark_healthy(&self) {
+        self.healthy.store(true, Ordering::SeqCst);
+        self.misses.store(0, Ordering::SeqCst);
+        self.skip_ticks.store(0, Ordering::SeqCst);
+    }
+
+    fn mark_unhealthy(&self) {
+        self.healthy.store(false, Ordering::SeqCst);
+        // Drop pooled sockets — they point at a dead peer.
+        lock_unpoisoned(&self.pool).clear();
+    }
+
+    /// One heartbeat tick: probe if due, honouring the backoff
+    /// schedule for unhealthy shards. `nonce` must be echoed back.
+    fn heartbeat_tick(&self, nonce: u64) {
+        if !self.is_healthy() {
+            let skip = self.skip_ticks.load(Ordering::SeqCst);
+            if skip > 0 {
+                self.skip_ticks.store(skip - 1, Ordering::SeqCst);
+                return;
+            }
+        }
+        match self.call(&Msg::Heartbeat { nonce }) {
+            Ok(Msg::HeartbeatAck { nonce: echoed }) if echoed == nonce => {}
+            _ => {
+                let misses = self.misses.fetch_add(1, Ordering::SeqCst) + 1;
+                let exp = misses.min(MAX_BACKOFF_EXP);
+                self.healthy.store(false, Ordering::SeqCst);
+                self.skip_ticks.store((1 << exp) - 1, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+fn exchange(stream: &mut TcpStream, msg: &Msg) -> Result<Msg> {
+    msg.write_to(stream)?;
+    match Msg::read_from(stream) {
+        // A reply timeout is transport failure for routing purposes.
+        Err(Error::Io(e)) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+            Err(Error::Io(std::io::Error::new(
+                ErrorKind::TimedOut,
+                "net: shard reply timed out",
+            )))
+        }
+        other => other,
+    }
+}
+
+/// TCP front door over N remote shards.
+pub struct RemoteCoordinator {
+    shards: Vec<Arc<RemoteShard>>,
+    ring: HashRing,
+    /// Router-side accounting: submitted/completed/rejected/failed of
+    /// requests *through this router* (shard-side counters are
+    /// aggregated separately by [`RemoteCoordinator::cluster_stats`]).
+    stats: Arc<ServerStats>,
+    failovers: Arc<AtomicU64>,
+    hb_stop: Arc<AtomicBool>,
+    hb_thread: Option<thread::JoinHandle<()>>,
+}
+
+impl RemoteCoordinator {
+    /// Connect to `addrs` (one `host:port` per shard, ring order =
+    /// list order). `connections` bounds the idle pool per shard;
+    /// `heartbeat_ms` is the probe period (0 disables the heartbeat
+    /// thread — health then updates only from request outcomes).
+    pub fn connect(addrs: &[String], connections: usize, heartbeat_ms: u64) -> Result<RemoteCoordinator> {
+        if addrs.is_empty() {
+            return Err(Error::coordinator("net: no remote shards given"));
+        }
+        let ring = HashRing::new(addrs.len(), DEFAULT_VNODES)?;
+        let shards: Vec<Arc<RemoteShard>> = addrs
+            .iter()
+            .map(|a| Arc::new(RemoteShard::new(a.clone(), connections.max(1))))
+            .collect();
+        let hb_stop = Arc::new(AtomicBool::new(false));
+        let hb_thread = if heartbeat_ms == 0 {
+            None
+        } else {
+            let shards = shards.clone();
+            let stop = Arc::clone(&hb_stop);
+            Some(thread::spawn(move || {
+                // Health probing is advisory: contain panics so a
+                // heartbeat bug degrades to request-outcome health
+                // tracking instead of killing the router (r2).
+                let _ = catch_unwind(AssertUnwindSafe(|| {
+                    let mut nonce: u64 = 0;
+                    while !stop.load(Ordering::SeqCst) {
+                        for s in &shards {
+                            nonce = nonce.wrapping_add(1);
+                            s.heartbeat_tick(nonce);
+                        }
+                        thread::sleep(Duration::from_millis(heartbeat_ms));
+                    }
+                }));
+            }))
+        };
+        Ok(RemoteCoordinator {
+            shards,
+            ring,
+            stats: Arc::new(ServerStats::new()),
+            failovers: Arc::new(AtomicU64::new(0)),
+            hb_stop,
+            hb_thread,
+        })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Health bits in shard order (heartbeat + request-outcome view).
+    pub fn healthy_shards(&self) -> Vec<bool> {
+        self.shards.iter().map(|s| s.is_healthy()).collect()
+    }
+
+    /// Requests that were transparently retried on another shard
+    /// after a transport failure.
+    pub fn failovers(&self) -> u64 {
+        self.failovers.load(Ordering::Relaxed)
+    }
+
+    /// The shard that owns `features` — identical routing to the
+    /// in-process `ShardedCoordinator::shard_for_features`.
+    pub fn shard_for_features(&self, features: &[bool]) -> usize {
+        self.ring.shard_for_hash(hash_features(features))
+    }
+
+    /// Route one inference: owner shard first, deterministic ring-walk
+    /// failover on transport errors, rejection/failure propagated from
+    /// the first shard that *answers*.
+    pub fn infer(&self, features: &[bool], backend: Backend) -> Result<InferResponse> {
+        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        let walk = self.ring.walk_from_hash(hash_features(features));
+        // Healthy shards first (in walk order), then the unhealthy
+        // rest: when everything is marked down we still try the full
+        // walk rather than refusing outright — a recovered shard gets
+        // found by the request itself, not only by the next heartbeat.
+        let in_walk = |healthy: bool| {
+            walk.iter()
+                .filter_map(|&i| self.shards.get(i))
+                .filter(move |s| s.is_healthy() == healthy)
+        };
+        let ordered: Vec<&Arc<RemoteShard>> = in_walk(true).chain(in_walk(false)).collect();
+        let req = Msg::InferRequest {
+            backend: backend.name().to_string(),
+            features: features.to_vec(),
+        };
+        let mut first_err: Option<Error> = None;
+        for (attempt, shard) in ordered.iter().enumerate() {
+            if attempt > 0 {
+                self.failovers.fetch_add(1, Ordering::Relaxed);
+            }
+            match shard.call(&req) {
+                Ok(Msg::InferResponse { backend, predicted, class_sums, service_us }) => {
+                    let backend = Backend::parse(&backend).ok_or_else(|| {
+                        self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                        Error::coordinator(format!("net: shard replied with unknown backend {backend:?}"))
+                    })?;
+                    self.stats.completed.fetch_add(1, Ordering::Relaxed);
+                    self.stats.record_latency_us(service_us);
+                    return Ok(InferResponse {
+                        backend,
+                        predicted: predicted as usize,
+                        class_sums,
+                        hw_latency: None,
+                        hw_energy_fj: None,
+                        service_us,
+                    });
+                }
+                Ok(Msg::Reject { reason }) => {
+                    // Backpressure is an answer, not an outage.
+                    self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                    return Err(Error::coordinator(reason));
+                }
+                Ok(Msg::Failed { reason }) => {
+                    self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                    return Err(Error::coordinator(reason));
+                }
+                Ok(other) => {
+                    self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                    return Err(Error::coordinator(format!(
+                        "net: unexpected reply to inference: {other:?}"
+                    )));
+                }
+                Err(Error::Io(e)) => {
+                    // Transport failure: walk on. call() already
+                    // marked the shard unhealthy.
+                    first_err.get_or_insert(Error::Io(e));
+                }
+                Err(e) => {
+                    self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                    return Err(e);
+                }
+            }
+        }
+        self.stats.failed.fetch_add(1, Ordering::Relaxed);
+        Err(first_err.unwrap_or_else(|| Error::coordinator("net: all shards unreachable")))
+    }
+
+    /// Router-side counters (requests routed through this process).
+    pub fn router_stats(&self) -> StatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Aggregate shard-side stats across the cluster: counters summed,
+    /// latency/batch percentiles rebuilt from the raw sample rings
+    /// shipped over the wire — exact, like `ShardedCoordinator::stats`.
+    /// Errors if any shard is unreachable (partial sums would silently
+    /// break the conservation checks the stats exist to support).
+    pub fn cluster_stats(&self) -> Result<StatsSnapshot> {
+        let mut snap = StatsSnapshot {
+            submitted: 0,
+            completed: 0,
+            rejected: 0,
+            failed: 0,
+            batches_flushed: 0,
+            batched_requests: 0,
+            mean_batch_size: 0.0,
+            latency_us: None,
+        };
+        let mut latencies = Vec::new();
+        let mut batch_sizes = Vec::new();
+        for shard in &self.shards {
+            match shard.call(&Msg::StatsRequest)? {
+                Msg::StatsReply {
+                    submitted,
+                    completed,
+                    rejected,
+                    failed,
+                    batches_flushed,
+                    batched_requests,
+                    latency_samples,
+                    batch_size_samples,
+                } => {
+                    snap.submitted += submitted;
+                    snap.completed += completed;
+                    snap.rejected += rejected;
+                    snap.failed += failed;
+                    snap.batches_flushed += batches_flushed;
+                    snap.batched_requests += batched_requests;
+                    latencies.extend(latency_samples);
+                    batch_sizes.extend(batch_size_samples);
+                }
+                other => {
+                    return Err(Error::coordinator(format!(
+                        "net: unexpected reply to stats request: {other:?}"
+                    )))
+                }
+            }
+        }
+        snap.mean_batch_size = Summary::of(&batch_sizes).map(|s| s.mean).unwrap_or(0.0);
+        snap.latency_us = Summary::of(&latencies);
+        Ok(snap)
+    }
+
+    /// Gracefully drain every reachable shard (each acks and stops
+    /// accepting). Returns the number of shards that acked.
+    pub fn drain(&self) -> usize {
+        let mut acked = 0;
+        for shard in &self.shards {
+            if matches!(shard.call(&Msg::Drain), Ok(Msg::DrainAck)) {
+                acked += 1;
+            }
+        }
+        acked
+    }
+
+    /// Stop the heartbeat thread and drop the connection pools.
+    pub fn shutdown(mut self) {
+        self.stop_heartbeat();
+    }
+
+    fn stop_heartbeat(&mut self) {
+        self.hb_stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.hb_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RemoteCoordinator {
+    fn drop(&mut self) {
+        self.stop_heartbeat();
+    }
+}

@@ -1,0 +1,170 @@
+//! Length-prefixed binary frame codec for the networked serving tier.
+//!
+//! Every message on the wire is one frame (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"tmtd"
+//! 4       1     protocol version (1)
+//! 5       1     message type (see net::msg)
+//! 6       4     payload length (u32, <= MAX_PAYLOAD)
+//! 10      n     payload
+//! ```
+//!
+//! Mirrored bit-for-bit by `python/netproto.py` (same constants, same
+//! validation order) and pinned by shared golden byte-vectors in both
+//! test suites, so the wire format validates on toolchain-less CI
+//! images.
+//!
+//! Error discipline: a malformed header or payload is a *protocol*
+//! error ([`Error::coordinator`], message prefixed `net:`); a socket
+//! failure (disconnect, timeout) passes through as [`Error::Io`] — so
+//! callers can distinguish a peer speaking garbage from a peer that
+//! went away, and the remote router only fails over on the latter.
+
+use std::io::{Read, Write};
+
+use crate::error::{Error, Result};
+
+/// Frame magic — `b"tmtd"` on the wire.
+pub const MAGIC: [u8; 4] = *b"tmtd";
+/// Protocol version byte; bumped on any wire-format change.
+pub const VERSION: u8 = 1;
+/// Fixed frame header size in bytes.
+pub const HEADER_LEN: usize = 10;
+/// 16 MiB: far above any real message (the stats rings cap at 100k f64
+/// samples ~ 800 KB each) while bounding a hostile length prefix — a
+/// corrupt or adversarial length can never make a reader allocate or
+/// block for gigabytes.
+pub const MAX_PAYLOAD: usize = 1 << 24;
+
+/// Write one frame (header + payload) to `w`.
+pub fn write_frame(w: &mut impl Write, msg_type: u8, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_PAYLOAD {
+        return Err(Error::coordinator(format!(
+            "net: payload of {} bytes exceeds MAX_PAYLOAD",
+            payload.len()
+        )));
+    }
+    let mut header = [0u8; HEADER_LEN];
+    header[..4].copy_from_slice(&MAGIC);
+    header[4] = VERSION;
+    header[5] = msg_type;
+    header[6..].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame from `r`; returns `(msg_type, payload)`.
+///
+/// Header validation order matches the Python mirror: magic, version,
+/// length bound, then the length-checked payload read. IO failures
+/// (EOF mid-frame, timeouts) surface as [`Error::Io`].
+pub fn read_frame(r: &mut impl Read) -> Result<(u8, Vec<u8>)> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header)?;
+    if header[..4] != MAGIC {
+        return Err(Error::coordinator(format!(
+            "net: bad magic {:?} (expected {MAGIC:?})",
+            &header[..4]
+        )));
+    }
+    let version = header[4];
+    if version != VERSION {
+        return Err(Error::coordinator(format!(
+            "net: unsupported protocol version {version}"
+        )));
+    }
+    let msg_type = header[5];
+    let mut len_bytes = [0u8; 4];
+    len_bytes.copy_from_slice(&header[6..]);
+    let length = u32::from_le_bytes(len_bytes) as usize;
+    if length > MAX_PAYLOAD {
+        return Err(Error::coordinator(format!(
+            "net: frame length {length} exceeds MAX_PAYLOAD ({MAX_PAYLOAD})"
+        )));
+    }
+    let mut payload = vec![0u8; length];
+    r.read_exact(&mut payload)?;
+    Ok((msg_type, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrips_header_and_payload() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 5, &[1, 2, 3]).unwrap();
+        assert_eq!(buf.len(), HEADER_LEN + 3);
+        assert_eq!(&buf[..4], b"tmtd");
+        assert_eq!(buf[4], VERSION);
+        assert_eq!(buf[5], 5);
+        let (t, p) = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(t, 5);
+        assert_eq!(p, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_payload_roundtrips() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 9, &[]).unwrap();
+        assert_eq!(buf.len(), HEADER_LEN);
+        let (t, p) = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(t, 9);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn truncated_frames_are_io_errors() {
+        // Truncation = the peer disconnected mid-frame; that's an IO
+        // error (failover-eligible), not a protocol violation.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 5, &[1, 2, 3, 4]).unwrap();
+        for cut in 0..buf.len() {
+            match read_frame(&mut &buf[..cut]) {
+                Err(Error::Io(_)) => {}
+                other => panic!("cut {cut}: expected Io error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_is_protocol_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 5, &[]).unwrap();
+        buf[0] ^= 0xff;
+        match read_frame(&mut buf.as_slice()) {
+            Err(Error::Coordinator(m)) => assert!(m.contains("bad magic"), "{m}"),
+            other => panic!("expected protocol error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_version_is_protocol_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 5, &[]).unwrap();
+        buf[4] = 99;
+        match read_frame(&mut buf.as_slice()) {
+            Err(Error::Coordinator(m)) => assert!(m.contains("version"), "{m}"),
+            other => panic!("expected protocol error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_without_allocating() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 5, &[]).unwrap();
+        buf[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+        match read_frame(&mut buf.as_slice()) {
+            Err(Error::Coordinator(m)) => assert!(m.contains("MAX_PAYLOAD"), "{m}"),
+            other => panic!("expected protocol error, got {other:?}"),
+        }
+        // The writer enforces the same bound.
+        let huge = vec![0u8; MAX_PAYLOAD + 1];
+        assert!(write_frame(&mut Vec::new(), 5, &huge).is_err());
+    }
+}

@@ -1,0 +1,47 @@
+//! Networked serving tier: shards as processes, a router in front,
+//! `std::net` only.
+//!
+//! ```text
+//!                          tmtd serve --remote-shards a:p,b:p,c:p
+//!                        +--------------------------------------+
+//!   client requests ---> |  RemoteCoordinator                   |
+//!                        |   HashRing (identical to in-process) |
+//!                        |   health + heartbeat + failover      |
+//!                        +----+-----------+------------+--------+
+//!                             | TCP frames (net::frame/msg)
+//!                   +---------+   +-------+    +-------+
+//!                   v             v             v
+//!            tmtd shard      tmtd shard     tmtd shard
+//!            --listen a:p    --listen b:p   --listen c:p
+//!            --model x.tmc   --model x.tmc  --model x.tmc
+//!            (ShardServer over one CoordinatorServer each)
+//! ```
+//!
+//! Layers:
+//!
+//! * [`frame`] — length-prefixed binary frame codec (magic, version,
+//!   bounded length; IO vs protocol error discipline).
+//! * [`msg`] — the ten message types and their payload layouts,
+//!   mirrored bit-for-bit by `python/netproto.py` and pinned by shared
+//!   golden byte-vectors in both test suites.
+//! * [`server`] — [`ShardServer`]: a [`CoordinatorServer`] behind a
+//!   TCP listener; propagates backpressure as wire-level rejections,
+//!   answers heartbeats and stats, drains gracefully.
+//! * [`client`] — [`RemoteShard`] / [`RemoteCoordinator`]: connection
+//!   pooling, reconnect-with-backoff health tracking, deterministic
+//!   ring-walk failover, exact cross-process stats aggregation.
+//!
+//! See `docs/DEPLOY.md` for the operational walkthrough (pinned `.tmc`
+//! models per shard, drain semantics, failure modes).
+//!
+//! [`CoordinatorServer`]: crate::coordinator::server::CoordinatorServer
+
+pub mod client;
+pub mod frame;
+pub mod msg;
+pub mod server;
+
+pub use client::{RemoteCoordinator, RemoteShard};
+pub use frame::{HEADER_LEN, MAGIC, MAX_PAYLOAD, VERSION};
+pub use msg::Msg;
+pub use server::ShardServer;

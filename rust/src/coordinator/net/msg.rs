@@ -1,0 +1,511 @@
+//! Wire messages for the networked serving tier.
+//!
+//! One [`Msg`] variant per message type; payload layouts are mirrored
+//! bit-for-bit by `python/netproto.py` (strings are u16 length + UTF-8,
+//! everything little-endian):
+//!
+//! | type | message        | payload                                        |
+//! |------|----------------|------------------------------------------------|
+//! | 1    | InferRequest   | str backend, u32 nfeat, nfeat x u8 (0/1)       |
+//! | 2    | InferResponse  | str backend, u32 predicted, u32 n, n x i32, f64 service_us |
+//! | 3    | Reject         | str reason (backpressure, never swallowed)     |
+//! | 4    | Failed         | str reason (server-side failure)               |
+//! | 5    | Heartbeat      | u64 nonce                                      |
+//! | 6    | HeartbeatAck   | u64 nonce                                      |
+//! | 7    | StatsRequest   | (empty)                                        |
+//! | 8    | StatsReply     | 6 x u64 counters, u32 nlat, nlat x f64, u32 nbatch, nbatch x f64 |
+//! | 9    | Drain          | (empty)                                        |
+//! | 10   | DrainAck       | (empty)                                        |
+//!
+//! The [`Msg::StatsReply`] ships the shard's *raw* latency /
+//! batch-size sample rings, not a pre-digested summary — the router
+//! rebuilds exact cross-shard percentiles from the concatenated
+//! samples, the same contract `ShardedCoordinator::stats` keeps
+//! in-process.
+
+use std::io::{Read, Write};
+
+use crate::coordinator::net::frame::{read_frame, write_frame, MAX_PAYLOAD};
+use crate::error::{Error, Result};
+
+/// One protocol message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    InferRequest {
+        backend: String,
+        features: Vec<bool>,
+    },
+    InferResponse {
+        backend: String,
+        predicted: u32,
+        class_sums: Vec<i32>,
+        service_us: f64,
+    },
+    /// Backpressure: the shard's queue depth is exhausted. Propagated
+    /// over the wire so the caller sees the same rejection it would
+    /// in-process.
+    Reject { reason: String },
+    /// The shard accepted the request but serving it failed.
+    Failed { reason: String },
+    Heartbeat { nonce: u64 },
+    HeartbeatAck { nonce: u64 },
+    StatsRequest,
+    StatsReply {
+        submitted: u64,
+        completed: u64,
+        rejected: u64,
+        failed: u64,
+        batches_flushed: u64,
+        batched_requests: u64,
+        latency_samples: Vec<f64>,
+        batch_size_samples: Vec<f64>,
+    },
+    /// Graceful drain: finish in-flight work, ack, stop accepting.
+    Drain,
+    DrainAck,
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) -> Result<()> {
+    let raw = s.as_bytes();
+    if raw.len() > u16::MAX as usize {
+        return Err(Error::coordinator("net: string too long for u16 length prefix"));
+    }
+    out.extend_from_slice(&(raw.len() as u16).to_le_bytes());
+    out.extend_from_slice(raw);
+    Ok(())
+}
+
+/// Bounds-checked cursor over a payload: every take validates the
+/// remaining length and errors instead of slicing past the end, so a
+/// truncated or hostile payload can never panic the decoder.
+struct PayloadReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> PayloadReader<'a> {
+    fn new(data: &'a [u8]) -> PayloadReader<'a> {
+        PayloadReader { data, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).ok_or_else(|| {
+            Error::coordinator("net: payload length overflow")
+        })?;
+        let chunk = self.data.get(self.pos..end).ok_or_else(|| {
+            Error::coordinator(format!(
+                "net: truncated payload (wanted {n} bytes, {} left)",
+                self.data.len().saturating_sub(self.pos)
+            ))
+        })?;
+        self.pos = end;
+        Ok(chunk)
+    }
+
+    fn array<const N: usize>(&mut self) -> Result<[u8; N]> {
+        self.take(N)?
+            .try_into()
+            .map_err(|_| Error::coordinator("net: internal length mismatch"))
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.array()?))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.array()?))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.array()?))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.array()?))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.array()?))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.u16()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|e| Error::coordinator(format!("net: invalid UTF-8 in string: {e}")))
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.pos != self.data.len() {
+            return Err(Error::coordinator(format!(
+                "net: {} trailing bytes after message",
+                self.data.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl Msg {
+    /// The wire type byte for this message.
+    pub fn msg_type(&self) -> u8 {
+        match self {
+            Msg::InferRequest { .. } => 1,
+            Msg::InferResponse { .. } => 2,
+            Msg::Reject { .. } => 3,
+            Msg::Failed { .. } => 4,
+            Msg::Heartbeat { .. } => 5,
+            Msg::HeartbeatAck { .. } => 6,
+            Msg::StatsRequest => 7,
+            Msg::StatsReply { .. } => 8,
+            Msg::Drain => 9,
+            Msg::DrainAck => 10,
+        }
+    }
+
+    /// Encode just the payload (no frame header).
+    pub fn encode_payload(&self) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        match self {
+            Msg::InferRequest { backend, features } => {
+                put_str(&mut out, backend)?;
+                out.extend_from_slice(&(features.len() as u32).to_le_bytes());
+                out.extend(features.iter().map(|&b| b as u8));
+            }
+            Msg::InferResponse { backend, predicted, class_sums, service_us } => {
+                put_str(&mut out, backend)?;
+                out.extend_from_slice(&predicted.to_le_bytes());
+                out.extend_from_slice(&(class_sums.len() as u32).to_le_bytes());
+                for s in class_sums {
+                    out.extend_from_slice(&s.to_le_bytes());
+                }
+                out.extend_from_slice(&service_us.to_le_bytes());
+            }
+            Msg::Reject { reason } | Msg::Failed { reason } => {
+                put_str(&mut out, reason)?;
+            }
+            Msg::Heartbeat { nonce } | Msg::HeartbeatAck { nonce } => {
+                out.extend_from_slice(&nonce.to_le_bytes());
+            }
+            Msg::StatsRequest | Msg::Drain | Msg::DrainAck => {}
+            Msg::StatsReply {
+                submitted,
+                completed,
+                rejected,
+                failed,
+                batches_flushed,
+                batched_requests,
+                latency_samples,
+                batch_size_samples,
+            } => {
+                for c in [submitted, completed, rejected, failed, batches_flushed, batched_requests]
+                {
+                    out.extend_from_slice(&c.to_le_bytes());
+                }
+                out.extend_from_slice(&(latency_samples.len() as u32).to_le_bytes());
+                for x in latency_samples {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+                out.extend_from_slice(&(batch_size_samples.len() as u32).to_le_bytes());
+                for x in batch_size_samples {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Decode a payload for `msg_type`; rejects trailing bytes, bad
+    /// inner counts, non-boolean feature bytes and invalid UTF-8 with
+    /// clean protocol errors.
+    pub fn decode(msg_type: u8, payload: &[u8]) -> Result<Msg> {
+        let mut r = PayloadReader::new(payload);
+        let msg = match msg_type {
+            1 => {
+                let backend = r.string()?;
+                let n = r.u32()? as usize;
+                let raw = r.take(n)?;
+                let mut features = Vec::with_capacity(n);
+                for &b in raw {
+                    match b {
+                        0 => features.push(false),
+                        1 => features.push(true),
+                        other => {
+                            return Err(Error::coordinator(format!(
+                                "net: feature byte {other} not 0/1"
+                            )))
+                        }
+                    }
+                }
+                Msg::InferRequest { backend, features }
+            }
+            2 => {
+                let backend = r.string()?;
+                let predicted = r.u32()?;
+                let n = r.u32()? as usize;
+                if n > MAX_PAYLOAD / 4 {
+                    return Err(Error::coordinator(format!(
+                        "net: class-sum count {n} too large"
+                    )));
+                }
+                let mut class_sums = Vec::with_capacity(n);
+                for _ in 0..n {
+                    class_sums.push(r.i32()?);
+                }
+                let service_us = r.f64()?;
+                Msg::InferResponse { backend, predicted, class_sums, service_us }
+            }
+            3 => Msg::Reject { reason: r.string()? },
+            4 => Msg::Failed { reason: r.string()? },
+            5 => Msg::Heartbeat { nonce: r.u64()? },
+            6 => Msg::HeartbeatAck { nonce: r.u64()? },
+            7 => Msg::StatsRequest,
+            8 => {
+                let submitted = r.u64()?;
+                let completed = r.u64()?;
+                let rejected = r.u64()?;
+                let failed = r.u64()?;
+                let batches_flushed = r.u64()?;
+                let batched_requests = r.u64()?;
+                let nlat = r.u32()? as usize;
+                if nlat > MAX_PAYLOAD / 8 {
+                    return Err(Error::coordinator(format!(
+                        "net: latency sample count {nlat} too large"
+                    )));
+                }
+                let mut latency_samples = Vec::with_capacity(nlat);
+                for _ in 0..nlat {
+                    latency_samples.push(r.f64()?);
+                }
+                let nbatch = r.u32()? as usize;
+                if nbatch > MAX_PAYLOAD / 8 {
+                    return Err(Error::coordinator(format!(
+                        "net: batch sample count {nbatch} too large"
+                    )));
+                }
+                let mut batch_size_samples = Vec::with_capacity(nbatch);
+                for _ in 0..nbatch {
+                    batch_size_samples.push(r.f64()?);
+                }
+                Msg::StatsReply {
+                    submitted,
+                    completed,
+                    rejected,
+                    failed,
+                    batches_flushed,
+                    batched_requests,
+                    latency_samples,
+                    batch_size_samples,
+                }
+            }
+            9 => Msg::Drain,
+            10 => Msg::DrainAck,
+            other => {
+                return Err(Error::coordinator(format!(
+                    "net: unknown message type {other}"
+                )))
+            }
+        };
+        r.finish()?;
+        Ok(msg)
+    }
+
+    /// Write this message as one frame.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        write_frame(w, self.msg_type(), &self.encode_payload()?)
+    }
+
+    /// Read one framed message.
+    pub fn read_from(r: &mut impl Read) -> Result<Msg> {
+        let (t, payload) = read_frame(r)?;
+        Msg::decode(t, &payload)
+    }
+
+    /// Encode as one complete frame (header + payload).
+    pub fn encode_frame(&self) -> Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        self.write_to(&mut buf)?;
+        Ok(buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn goldens() -> Vec<Msg> {
+        vec![
+            Msg::InferRequest {
+                backend: "bitparallel-mc".into(),
+                features: vec![true, false, true, true, false, false, true, false],
+            },
+            Msg::InferResponse {
+                backend: "auto".into(),
+                predicted: 2,
+                class_sums: vec![-5, 3, 17],
+                service_us: 123.5,
+            },
+            Msg::Reject { reason: "backpressure: queue depth exceeded".into() },
+            Msg::Failed { reason: "engine dead".into() },
+            Msg::Heartbeat { nonce: 81985529216486895 },
+            Msg::HeartbeatAck { nonce: 81985529216486895 },
+            Msg::StatsRequest,
+            Msg::StatsReply {
+                submitted: 7,
+                completed: 5,
+                rejected: 1,
+                failed: 1,
+                batches_flushed: 2,
+                batched_requests: 5,
+                latency_samples: vec![1.5, 2.25],
+                batch_size_samples: vec![3.0],
+            },
+            Msg::Drain,
+            Msg::DrainAck,
+        ]
+    }
+
+    #[test]
+    fn netproto_golden_frames_match_python_mirror() {
+        // Pinned against GOLDEN_FRAMES in python/tests/test_netproto.py
+        // (the r5 probe cross-checks the hex constants): one frame per
+        // message type, byte for byte.
+        let want: Vec<Vec<u8>> = vec![
+            vec![
+                0x74, 0x6d, 0x74, 0x64, 0x01, 0x01, 0x1c, 0x00, 0x00, 0x00,
+                0x0e, 0x00, 0x62, 0x69, 0x74, 0x70, 0x61, 0x72, 0x61, 0x6c,
+                0x6c, 0x65, 0x6c, 0x2d, 0x6d, 0x63, 0x08, 0x00, 0x00, 0x00,
+                0x01, 0x00, 0x01, 0x01, 0x00, 0x00, 0x01, 0x00,
+            ],
+            vec![
+                0x74, 0x6d, 0x74, 0x64, 0x01, 0x02, 0x22, 0x00, 0x00, 0x00,
+                0x04, 0x00, 0x61, 0x75, 0x74, 0x6f, 0x02, 0x00, 0x00, 0x00,
+                0x03, 0x00, 0x00, 0x00, 0xfb, 0xff, 0xff, 0xff, 0x03, 0x00,
+                0x00, 0x00, 0x11, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00,
+                0x00, 0xe0, 0x5e, 0x40,
+            ],
+            vec![
+                0x74, 0x6d, 0x74, 0x64, 0x01, 0x03, 0x24, 0x00, 0x00, 0x00,
+                0x22, 0x00, 0x62, 0x61, 0x63, 0x6b, 0x70, 0x72, 0x65, 0x73,
+                0x73, 0x75, 0x72, 0x65, 0x3a, 0x20, 0x71, 0x75, 0x65, 0x75,
+                0x65, 0x20, 0x64, 0x65, 0x70, 0x74, 0x68, 0x20, 0x65, 0x78,
+                0x63, 0x65, 0x65, 0x64, 0x65, 0x64,
+            ],
+            vec![
+                0x74, 0x6d, 0x74, 0x64, 0x01, 0x04, 0x0d, 0x00, 0x00, 0x00,
+                0x0b, 0x00, 0x65, 0x6e, 0x67, 0x69, 0x6e, 0x65, 0x20, 0x64,
+                0x65, 0x61, 0x64,
+            ],
+            vec![
+                0x74, 0x6d, 0x74, 0x64, 0x01, 0x05, 0x08, 0x00, 0x00, 0x00,
+                0xef, 0xcd, 0xab, 0x89, 0x67, 0x45, 0x23, 0x01,
+            ],
+            vec![
+                0x74, 0x6d, 0x74, 0x64, 0x01, 0x06, 0x08, 0x00, 0x00, 0x00,
+                0xef, 0xcd, 0xab, 0x89, 0x67, 0x45, 0x23, 0x01,
+            ],
+            vec![0x74, 0x6d, 0x74, 0x64, 0x01, 0x07, 0x00, 0x00, 0x00, 0x00],
+            vec![
+                0x74, 0x6d, 0x74, 0x64, 0x01, 0x08, 0x50, 0x00, 0x00, 0x00,
+                0x07, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x05, 0x00,
+                0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x01, 0x00, 0x00, 0x00,
+                0x00, 0x00, 0x00, 0x00, 0x01, 0x00, 0x00, 0x00, 0x00, 0x00,
+                0x00, 0x00, 0x02, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00,
+                0x05, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x02, 0x00,
+                0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xf8, 0x3f,
+                0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x02, 0x40, 0x01, 0x00,
+                0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x08, 0x40,
+            ],
+            vec![0x74, 0x6d, 0x74, 0x64, 0x01, 0x09, 0x00, 0x00, 0x00, 0x00],
+            vec![0x74, 0x6d, 0x74, 0x64, 0x01, 0x0a, 0x00, 0x00, 0x00, 0x00],
+        ];
+        let msgs = goldens();
+        assert_eq!(msgs.len(), want.len(), "one golden per message type");
+        for (m, w) in msgs.iter().zip(&want) {
+            assert_eq!(&m.encode_frame().unwrap(), w, "{m:?}");
+            assert_eq!(&Msg::read_from(&mut w.as_slice()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        for m in goldens() {
+            let buf = m.encode_frame().unwrap();
+            assert_eq!(Msg::read_from(&mut buf.as_slice()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn edge_values_roundtrip() {
+        let msgs = vec![
+            Msg::InferRequest { backend: String::new(), features: vec![] },
+            Msg::InferRequest {
+                backend: "x".into(),
+                features: (0..1000).map(|i| i % 2 == 0).collect(),
+            },
+            Msg::InferResponse {
+                backend: "a".into(),
+                predicted: u32::MAX,
+                class_sums: vec![i32::MIN, i32::MAX],
+                service_us: -1.25,
+            },
+            Msg::Heartbeat { nonce: u64::MAX },
+            Msg::StatsReply {
+                submitted: u64::MAX,
+                completed: 1,
+                rejected: 2,
+                failed: 3,
+                batches_flushed: 4,
+                batched_requests: 5,
+                latency_samples: (0..100).map(f64::from).collect(),
+                batch_size_samples: vec![0.5],
+            },
+        ];
+        for m in msgs {
+            let buf = m.encode_frame().unwrap();
+            assert_eq!(Msg::read_from(&mut buf.as_slice()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn truncated_payloads_error_cleanly_at_every_cut() {
+        for m in goldens() {
+            let payload = m.encode_payload().unwrap();
+            for cut in 0..payload.len() {
+                assert!(
+                    Msg::decode(m.msg_type(), &payload[..cut]).is_err(),
+                    "{m:?} cut {cut}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        for m in goldens() {
+            let mut payload = m.encode_payload().unwrap();
+            payload.push(0);
+            assert!(Msg::decode(m.msg_type(), &payload).is_err(), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn unknown_type_and_bad_bytes_are_rejected() {
+        assert!(Msg::decode(0xee, &[]).is_err());
+        // Feature byte 2.
+        let mut p = Vec::new();
+        put_str(&mut p, "a").unwrap();
+        p.extend_from_slice(&1u32.to_le_bytes());
+        p.push(2);
+        assert!(Msg::decode(1, &p).is_err());
+        // Invalid UTF-8 backend name.
+        let bad = [2u8, 0, 0xff, 0xfe, 0, 0, 0, 0];
+        assert!(Msg::decode(1, &bad).is_err());
+        // Hostile inner count: claims u32::MAX class sums.
+        let mut p = Vec::new();
+        put_str(&mut p, "a").unwrap();
+        p.extend_from_slice(&0u32.to_le_bytes());
+        p.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Msg::decode(2, &p).is_err());
+    }
+}

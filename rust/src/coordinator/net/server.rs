@@ -1,0 +1,270 @@
+//! Shard-side TCP server: one process serving one
+//! [`CoordinatorServer`] over the framed protocol in [`super::msg`].
+//!
+//! Design:
+//!
+//! * The accept loop runs on its own thread with a non-blocking
+//!   listener so it can poll the stop flag; each accepted connection
+//!   gets a handler thread with a short read timeout for the same
+//!   reason. Both threads contain panics — one poisoned connection
+//!   must never take down the shard process.
+//! * Requests are served **synchronously per connection** (one frame
+//!   in, one frame out, in order). Routers open several connections
+//!   per shard to get pipelining; the per-connection ordering is what
+//!   lets a client match replies to requests without request IDs.
+//! * Backpressure is propagated, not swallowed: a queue-depth
+//!   rejection from [`CoordinatorServer::submit`] becomes a
+//!   [`Msg::Reject`] on the wire; any other serving error becomes
+//!   [`Msg::Failed`]. The TCP connection stays up either way.
+//! * [`Msg::Drain`] answers [`Msg::DrainAck`] and then stops the whole
+//!   shard: the accept loop exits, connection handlers finish their
+//!   in-flight frame and close, and [`ShardServer::shutdown`] drains
+//!   the inner server's pools and batchers.
+//! * A peer speaking garbage (bad magic/version/length, malformed
+//!   payload) gets its connection closed and counted in
+//!   `protocol_errors`; a peer disconnecting mid-frame is closed
+//!   silently. Neither can hang or crash the shard.
+
+use std::io::ErrorKind;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::coordinator::net::msg::Msg;
+use crate::coordinator::router::{Backend, InferRequest};
+use crate::coordinator::server::CoordinatorServer;
+use crate::error::{Error, Result};
+
+/// How long a connection handler blocks in `read` before re-checking
+/// the stop flag.
+const READ_POLL: Duration = Duration::from_millis(100);
+/// Accept-loop poll interval while no connection is pending.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// A [`CoordinatorServer`] listening on a TCP socket.
+pub struct ShardServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    protocol_errors: Arc<AtomicU64>,
+    accept_thread: Option<thread::JoinHandle<()>>,
+    server: Arc<CoordinatorServer>,
+}
+
+impl ShardServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral test port) and
+    /// start serving `server` in background threads.
+    pub fn bind(server: CoordinatorServer, addr: &str) -> Result<ShardServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::coordinator(format!("net: bind {addr}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| Error::coordinator(format!("net: local_addr: {e}")))?;
+        listener.set_nonblocking(true)?;
+        let server = Arc::new(server);
+        let stop = Arc::new(AtomicBool::new(false));
+        let protocol_errors = Arc::new(AtomicU64::new(0));
+        let accept_thread = {
+            let server = Arc::clone(&server);
+            let stop = Arc::clone(&stop);
+            let protocol_errors = Arc::clone(&protocol_errors);
+            thread::spawn(move || {
+                // Contain panics: the accept loop owns no lock, so a
+                // contained panic just stops accepting (r2).
+                let _ = catch_unwind(AssertUnwindSafe(|| {
+                    accept_loop(&listener, &server, &stop, &protocol_errors);
+                }));
+            })
+        };
+        Ok(ShardServer {
+            addr: local,
+            stop,
+            protocol_errors,
+            accept_thread: Some(accept_thread),
+            server,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// True once a drain was received or [`ShardServer::stop`] was
+    /// called.
+    pub fn is_stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Malformed-frame count (observability for the adversarial
+    /// tests: garbage must be *counted*, not silently dropped).
+    pub fn protocol_errors(&self) -> u64 {
+        self.protocol_errors.load(Ordering::Relaxed)
+    }
+
+    /// Ask the server to stop accepting and close idle connections
+    /// (the same path a wire-level [`Msg::Drain`] takes).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Block until the accept loop exits (i.e. until a drain arrives
+    /// or [`ShardServer::stop`] is called), then drain the inner
+    /// server. This is what `tmtd shard` parks on.
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        self.shutdown();
+    }
+
+    /// Stop serving and drain the inner [`CoordinatorServer`] (pools
+    /// and batchers flush before their threads join).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        // The accept loop joins every connection handler before it
+        // returns, so this unwrap of the Arc cannot race a live clone.
+        if let Ok(server) = Arc::try_unwrap(self.server) {
+            server.shutdown();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    server: &Arc<CoordinatorServer>,
+    stop: &Arc<AtomicBool>,
+    protocol_errors: &Arc<AtomicU64>,
+) {
+    let mut handlers = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let server = Arc::clone(server);
+                let stop = Arc::clone(stop);
+                let protocol_errors = Arc::clone(protocol_errors);
+                handlers.push(thread::spawn(move || {
+                    // One hostile or crashing connection must not take
+                    // down the shard: contain the panic, drop the
+                    // socket (r2).
+                    let _ = catch_unwind(AssertUnwindSafe(|| {
+                        serve_connection(stream, &server, &stop, &protocol_errors);
+                    }));
+                }));
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => thread::sleep(ACCEPT_POLL),
+        }
+        // Reap finished handlers so a long-lived shard doesn't
+        // accumulate joined-but-unreleased threads.
+        handlers.retain(|h| !h.is_finished());
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+/// Serve one connection until drain/stop, disconnect, or a protocol
+/// violation.
+fn serve_connection(
+    stream: TcpStream,
+    server: &CoordinatorServer,
+    stop: &AtomicBool,
+    protocol_errors: &AtomicU64,
+) {
+    let mut stream = stream;
+    if stream.set_read_timeout(Some(READ_POLL)).is_err() {
+        return;
+    }
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let msg = match Msg::read_from(&mut stream) {
+            Ok(m) => m,
+            Err(Error::Io(e))
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                // Idle read timeout: re-check the stop flag and wait
+                // for the next frame.
+                continue;
+            }
+            Err(Error::Io(_)) => return, // peer went away
+            Err(_) => {
+                // Protocol garbage: the stream offset is unknowable
+                // now, so the only safe move is to close. Counted for
+                // the adversarial suite.
+                protocol_errors.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        };
+        let reply = match msg {
+            Msg::InferRequest { backend, features } => infer_reply(server, &backend, features),
+            Msg::Heartbeat { nonce } => Msg::HeartbeatAck { nonce },
+            Msg::StatsRequest => stats_reply(server),
+            Msg::Drain => {
+                let _ = Msg::DrainAck.write_to(&mut stream);
+                stop.store(true, Ordering::SeqCst);
+                return;
+            }
+            // Server-to-client message types arriving at the server
+            // are a protocol violation.
+            _ => {
+                protocol_errors.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        };
+        if reply.write_to(&mut stream).is_err() {
+            return;
+        }
+    }
+}
+
+fn infer_reply(server: &CoordinatorServer, backend: &str, features: Vec<bool>) -> Msg {
+    let Some(backend) = Backend::parse(backend) else {
+        // An unknown backend never entered the queue, so it must not
+        // disturb the conservation counters — report it as a wire
+        // failure only.
+        return Msg::Failed { reason: format!("unknown backend {backend:?}") };
+    };
+    match server.infer(InferRequest { features, backend }) {
+        Ok(resp) => Msg::InferResponse {
+            backend: resp.backend.name().to_string(),
+            predicted: resp.predicted as u32,
+            class_sums: resp.class_sums,
+            service_us: resp.service_us,
+        },
+        Err(e) => {
+            let reason = e.to_string();
+            if reason.contains("backpressure") {
+                Msg::Reject { reason }
+            } else {
+                Msg::Failed { reason }
+            }
+        }
+    }
+}
+
+/// Ship the raw counters and sample rings — the router rebuilds exact
+/// cross-shard percentiles from these, identical to the in-process
+/// `ShardedCoordinator::stats` contract.
+fn stats_reply(server: &CoordinatorServer) -> Msg {
+    let h = server.stats_handle();
+    Msg::StatsReply {
+        submitted: h.submitted.load(Ordering::Relaxed),
+        completed: h.completed.load(Ordering::Relaxed),
+        rejected: h.rejected.load(Ordering::Relaxed),
+        failed: h.failed.load(Ordering::Relaxed),
+        batches_flushed: h.batches_flushed.load(Ordering::Relaxed),
+        batched_requests: h.batched_requests.load(Ordering::Relaxed),
+        latency_samples: h.latency_samples(),
+        batch_size_samples: h.batch_size_samples(),
+    }
+}

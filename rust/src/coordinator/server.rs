@@ -39,7 +39,7 @@ use crate::coordinator::router::{Backend, InferRequest, InferResponse};
 use crate::coordinator::stats::{ServerStats, StatsSnapshot};
 use crate::error::{Error, Result};
 use crate::runtime::golden::{GoldenModels, GoldenService};
-use crate::tm::compile::{CompileMode, ModelCompiler};
+use crate::tm::compile::{CompileMode, CompiledCotm, CompiledMulticlass, ModelCompiler};
 use crate::tm::compressed::{select_engine, CompressedCotm, CompressedMulticlass, EngineChoice};
 use crate::tm::fast_infer::{BatchEngine, BitParallelCotm, BitParallelMulticlass};
 use crate::tm::index::{IndexedCotm, IndexedMulticlass};
@@ -148,6 +148,128 @@ fn native_batcher<E: BatchEngine + Send + 'static>(
                 .collect()
         },
     )
+}
+
+/// The always-available native serving tier built from compiled
+/// artifacts: six batchers (three engine families x two model
+/// families) plus the per-model `auto-*` resolutions. Both
+/// [`CoordinatorServer::new`] (compile-at-build) and
+/// [`CoordinatorServer::from_compiled_artifacts`] (pinned `.tmc`
+/// artifacts, the networked shard path) build through this.
+struct NativeTier {
+    batcher_bp_mc: DynamicBatcher<NativeItem, InferResponse>,
+    batcher_bp_co: DynamicBatcher<NativeItem, InferResponse>,
+    batcher_ix_mc: DynamicBatcher<NativeItem, InferResponse>,
+    batcher_ix_co: DynamicBatcher<NativeItem, InferResponse>,
+    batcher_cp_mc: DynamicBatcher<NativeItem, InferResponse>,
+    batcher_cp_co: DynamicBatcher<NativeItem, InferResponse>,
+    auto_mc: Backend,
+    auto_co: Backend,
+}
+
+fn build_native_tier(
+    cfg: &ServeConfig,
+    compiled_mc: &CompiledMulticlass,
+    compiled_co: &CompiledCotm,
+    simd: WordLanes,
+    stats: &Arc<ServerStats>,
+    in_flight: &Arc<AtomicU64>,
+) -> Result<NativeTier> {
+    let timeout = Duration::from_micros(cfg.batch_timeout_us);
+    let shard_threads = cfg.workers.max(1);
+    let batcher_bp_mc = native_batcher(
+        Arc::new(BitParallelMulticlass::from_compiled(compiled_mc)?.with_lanes(simd)),
+        Backend::BitParallelMulticlass,
+        cfg.max_batch,
+        timeout,
+        Arc::clone(stats),
+        Arc::clone(in_flight),
+        shard_threads,
+    )?;
+    let batcher_bp_co = native_batcher(
+        Arc::new(BitParallelCotm::from_compiled(compiled_co)?.with_lanes(simd)),
+        Backend::BitParallelCotm,
+        cfg.max_batch,
+        timeout,
+        Arc::clone(stats),
+        Arc::clone(in_flight),
+        shard_threads,
+    )?;
+    let ix_mc = Arc::new(IndexedMulticlass::from_compiled(compiled_mc)?);
+    let ix_co = Arc::new(IndexedCotm::from_compiled(compiled_co)?);
+    let cp_mc = Arc::new(CompressedMulticlass::from_compiled(compiled_mc)?);
+    let cp_co = Arc::new(CompressedCotm::from_compiled(compiled_co)?);
+    // Resolve `auto-*` per compiled model with the three-way density
+    // decision: extremely sparse models go through the inverted index,
+    // moderately sparse ones through the compressed include-list walk,
+    // dense ones through the packed words. The density comes from the
+    // compile-pass stats, so dead clauses never dilute the crossover.
+    // The choice can only affect speed — all three engine families are
+    // held to the same bit-exactness bar by the conformance suite.
+    let auto_mc = match select_engine(
+        compiled_mc.stats.density,
+        cfg.indexed_density_threshold,
+        cfg.compressed_density_threshold,
+    ) {
+        EngineChoice::Indexed => Backend::IndexedMulticlass,
+        EngineChoice::Compressed => Backend::CompressedMulticlass,
+        EngineChoice::Packed => Backend::BitParallelMulticlass,
+    };
+    let auto_co = match select_engine(
+        compiled_co.stats.density,
+        cfg.indexed_density_threshold,
+        cfg.compressed_density_threshold,
+    ) {
+        EngineChoice::Indexed => Backend::IndexedCotm,
+        EngineChoice::Compressed => Backend::CompressedCotm,
+        EngineChoice::Packed => Backend::BitParallelCotm,
+    };
+    let batcher_ix_mc = native_batcher(
+        ix_mc,
+        Backend::IndexedMulticlass,
+        cfg.max_batch,
+        timeout,
+        Arc::clone(stats),
+        Arc::clone(in_flight),
+        shard_threads,
+    )?;
+    let batcher_ix_co = native_batcher(
+        ix_co,
+        Backend::IndexedCotm,
+        cfg.max_batch,
+        timeout,
+        Arc::clone(stats),
+        Arc::clone(in_flight),
+        shard_threads,
+    )?;
+    let batcher_cp_mc = native_batcher(
+        cp_mc,
+        Backend::CompressedMulticlass,
+        cfg.max_batch,
+        timeout,
+        Arc::clone(stats),
+        Arc::clone(in_flight),
+        shard_threads,
+    )?;
+    let batcher_cp_co = native_batcher(
+        cp_co,
+        Backend::CompressedCotm,
+        cfg.max_batch,
+        timeout,
+        Arc::clone(stats),
+        Arc::clone(in_flight),
+        shard_threads,
+    )?;
+    Ok(NativeTier {
+        batcher_bp_mc,
+        batcher_bp_co,
+        batcher_ix_mc,
+        batcher_ix_co,
+        batcher_cp_mc,
+        batcher_cp_co,
+        auto_mc,
+        auto_co,
+    })
 }
 
 /// The coordinator server.
@@ -271,91 +393,7 @@ impl CoordinatorServer {
         let compiled_mc = compiler.clone().compile_multiclass(&mc_model)?;
         let compiled_co = compiler.compile_cotm(&cotm_model)?;
         let timeout = Duration::from_micros(cfg.batch_timeout_us);
-        let shard_threads = cfg.workers.max(1);
-        let batcher_bp_mc = native_batcher(
-            Arc::new(BitParallelMulticlass::from_compiled(&compiled_mc)?.with_lanes(simd)),
-            Backend::BitParallelMulticlass,
-            cfg.max_batch,
-            timeout,
-            Arc::clone(&stats),
-            Arc::clone(&in_flight),
-            shard_threads,
-        )?;
-        let batcher_bp_co = native_batcher(
-            Arc::new(BitParallelCotm::from_compiled(&compiled_co)?.with_lanes(simd)),
-            Backend::BitParallelCotm,
-            cfg.max_batch,
-            timeout,
-            Arc::clone(&stats),
-            Arc::clone(&in_flight),
-            shard_threads,
-        )?;
-        let ix_mc = Arc::new(IndexedMulticlass::from_compiled(&compiled_mc)?);
-        let ix_co = Arc::new(IndexedCotm::from_compiled(&compiled_co)?);
-        let cp_mc = Arc::new(CompressedMulticlass::from_compiled(&compiled_mc)?);
-        let cp_co = Arc::new(CompressedCotm::from_compiled(&compiled_co)?);
-        // Resolve `auto-*` per compiled model with the three-way density
-        // decision: extremely sparse models go through the inverted
-        // index, moderately sparse ones through the compressed
-        // include-list walk, dense ones through the packed words. The
-        // density comes from the compile-pass stats, so dead clauses
-        // never dilute the crossover. The choice can only affect speed —
-        // all three engine families are held to the same bit-exactness
-        // bar by the conformance suite.
-        let auto_mc = match select_engine(
-            compiled_mc.stats.density,
-            cfg.indexed_density_threshold,
-            cfg.compressed_density_threshold,
-        ) {
-            EngineChoice::Indexed => Backend::IndexedMulticlass,
-            EngineChoice::Compressed => Backend::CompressedMulticlass,
-            EngineChoice::Packed => Backend::BitParallelMulticlass,
-        };
-        let auto_co = match select_engine(
-            compiled_co.stats.density,
-            cfg.indexed_density_threshold,
-            cfg.compressed_density_threshold,
-        ) {
-            EngineChoice::Indexed => Backend::IndexedCotm,
-            EngineChoice::Compressed => Backend::CompressedCotm,
-            EngineChoice::Packed => Backend::BitParallelCotm,
-        };
-        let batcher_ix_mc = native_batcher(
-            ix_mc,
-            Backend::IndexedMulticlass,
-            cfg.max_batch,
-            timeout,
-            Arc::clone(&stats),
-            Arc::clone(&in_flight),
-            shard_threads,
-        )?;
-        let batcher_ix_co = native_batcher(
-            ix_co,
-            Backend::IndexedCotm,
-            cfg.max_batch,
-            timeout,
-            Arc::clone(&stats),
-            Arc::clone(&in_flight),
-            shard_threads,
-        )?;
-        let batcher_cp_mc = native_batcher(
-            cp_mc,
-            Backend::CompressedMulticlass,
-            cfg.max_batch,
-            timeout,
-            Arc::clone(&stats),
-            Arc::clone(&in_flight),
-            shard_threads,
-        )?;
-        let batcher_cp_co = native_batcher(
-            cp_co,
-            Backend::CompressedCotm,
-            cfg.max_batch,
-            timeout,
-            Arc::clone(&stats),
-            Arc::clone(&in_flight),
-            shard_threads,
-        )?;
+        let native = build_native_tier(cfg, &compiled_mc, &compiled_co, simd, &stats, &in_flight)?;
 
         // Golden path: one PJRT service thread + a batcher per family.
         // Same relay-free shape as the bit-parallel path: the flush
@@ -457,14 +495,59 @@ impl CoordinatorServer {
             _golden: golden,
             batcher_mc,
             batcher_co,
-            batcher_bp_mc: Some(batcher_bp_mc),
-            batcher_bp_co: Some(batcher_bp_co),
-            batcher_ix_mc: Some(batcher_ix_mc),
-            batcher_ix_co: Some(batcher_ix_co),
-            batcher_cp_mc: Some(batcher_cp_mc),
-            batcher_cp_co: Some(batcher_cp_co),
-            auto_mc,
-            auto_co,
+            batcher_bp_mc: Some(native.batcher_bp_mc),
+            batcher_bp_co: Some(native.batcher_bp_co),
+            batcher_ix_mc: Some(native.batcher_ix_mc),
+            batcher_ix_co: Some(native.batcher_ix_co),
+            batcher_cp_mc: Some(native.batcher_cp_mc),
+            batcher_cp_co: Some(native.batcher_cp_co),
+            auto_mc: native.auto_mc,
+            auto_co: native.auto_co,
+            simd,
+            stats,
+            in_flight,
+            queue_depth: cfg.queue_depth as u64,
+            features,
+        })
+    }
+
+    /// Build a native-tier-only server directly from pinned compiled
+    /// artifacts (`.tmc` files via [`crate::tm::serde`]) — the `tmtd
+    /// shard` startup path: a shard process serves exactly the compiled
+    /// model it was pinned to, skipping training, re-compilation, the
+    /// hardware-simulation worker pool and the golden/PJRT tier.
+    /// Requests for golden or hardware backends fail cleanly with the
+    /// same errors a shut-down pool reports; the six native batchers
+    /// and the `auto-*` density resolutions behave exactly as in
+    /// [`CoordinatorServer::new`] because they build from the same
+    /// compiled artifacts through the same code path.
+    pub fn from_compiled_artifacts(
+        cfg: &ServeConfig,
+        compiled_mc: CompiledMulticlass,
+        compiled_co: CompiledCotm,
+    ) -> Result<CoordinatorServer> {
+        cfg.validate()?;
+        let features = compiled_mc.params.features;
+        if compiled_co.params.features != features {
+            return Err(Error::coordinator("compiled artifact feature widths differ"));
+        }
+        let stats = Arc::new(ServerStats::new());
+        let in_flight = Arc::new(AtomicU64::new(0));
+        let simd = cfg.simd.resolve()?;
+        let native = build_native_tier(cfg, &compiled_mc, &compiled_co, simd, &stats, &in_flight)?;
+        Ok(CoordinatorServer {
+            pool: None,
+            _golden: None,
+            batcher_mc: None,
+            batcher_co: None,
+            batcher_bp_mc: Some(native.batcher_bp_mc),
+            batcher_bp_co: Some(native.batcher_bp_co),
+            batcher_ix_mc: Some(native.batcher_ix_mc),
+            batcher_ix_co: Some(native.batcher_ix_co),
+            batcher_cp_mc: Some(native.batcher_cp_mc),
+            batcher_cp_co: Some(native.batcher_cp_co),
+            auto_mc: native.auto_mc,
+            auto_co: native.auto_co,
             simd,
             stats,
             in_flight,
@@ -807,6 +890,61 @@ mod tests {
             );
         }
         srv.shutdown();
+    }
+
+    #[test]
+    fn from_compiled_artifacts_matches_full_server_on_native_tier() {
+        // The pinned-artifact shard path: a server built straight from
+        // compiled artifacts must serve the native backends bit-
+        // identically to a full `new()` server over the same models
+        // (same compile pass, same engines), resolve `auto-*` the same
+        // way, and fail golden/hardware requests cleanly rather than
+        // panic.
+        let d = data::iris().unwrap();
+        let (tr, _) = d.split(0.8, 42);
+        let m = train_multiclass(TmParams::iris_paper(), &tr, 20, 2).unwrap();
+        let cm = train_cotm(TmParams::iris_paper(), &tr, 20, 3).unwrap();
+        let cfg = ServeConfig { workers: 2, ..ServeConfig::default() };
+        let compiler = ModelCompiler::new(cfg.compile);
+        let compiled_mc = compiler.clone().compile_multiclass(&m).unwrap();
+        let compiled_co = compiler.compile_cotm(&cm).unwrap();
+        let pinned =
+            CoordinatorServer::from_compiled_artifacts(&cfg, compiled_mc, compiled_co).unwrap();
+        let full = CoordinatorServer::new(&cfg, m, cm, false).unwrap();
+        assert_eq!(pinned.auto_backends(), full.auto_backends());
+        for b in [
+            Backend::BitParallelMulticlass,
+            Backend::IndexedMulticlass,
+            Backend::CompressedMulticlass,
+            Backend::AutoMulticlass,
+            Backend::BitParallelCotm,
+            Backend::IndexedCotm,
+            Backend::CompressedCotm,
+            Backend::AutoCotm,
+        ] {
+            for i in [0usize, 17, 80, 149] {
+                let a = pinned
+                    .infer(InferRequest { features: d.features[i].clone(), backend: b })
+                    .unwrap();
+                let bres = full
+                    .infer(InferRequest { features: d.features[i].clone(), backend: b })
+                    .unwrap();
+                assert_eq!(a.class_sums, bres.class_sums, "{b:?} sample {i}");
+                assert_eq!(a.predicted, bres.predicted, "{b:?} sample {i}");
+                assert_eq!(a.backend, bres.backend, "{b:?} sample {i}");
+            }
+        }
+        // Unsupported tiers: a clean error and conserved counters.
+        for b in [Backend::GoldenMulticlass, Backend::SyncMulticlass] {
+            assert!(pinned
+                .submit(InferRequest { features: d.features[0].clone(), backend: b })
+                .is_err());
+        }
+        let snap = pinned.stats();
+        assert_eq!(snap.submitted + snap.rejected, snap.completed + snap.failed + snap.rejected);
+        assert_eq!(snap.completed + snap.failed, snap.submitted);
+        pinned.shutdown();
+        full.shutdown();
     }
 
     #[test]

@@ -127,6 +127,28 @@ impl HashRing {
         let i = self.points.partition_point(|&(p, _)| p < h);
         self.points[i % self.points.len()].1 as usize
     }
+
+    /// Every distinct shard in ring order starting at `h`'s owner — the
+    /// deterministic failover sequence for networked routing: the
+    /// remote router tries the owner first, then each next distinct
+    /// shard clockwise while earlier ones are marked unhealthy. First
+    /// element always equals [`HashRing::shard_for_hash`]. Mirrored by
+    /// `walk_from_hash` in `python/hashring.py`.
+    pub fn walk_from_hash(&self, h: u64) -> Vec<usize> {
+        let n = self.shards();
+        let mut out = Vec::with_capacity(n);
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        for k in 0..self.points.len() {
+            let s = self.points[(start + k) % self.points.len()].1 as usize;
+            if !out.contains(&s) {
+                out.push(s);
+                if out.len() == n {
+                    break;
+                }
+            }
+        }
+        out
+    }
 }
 
 /// N coordinator shards behind a consistent-hash front door.
@@ -308,6 +330,44 @@ mod tests {
         let ring3 = HashRing::new(3, DEFAULT_VNODES).unwrap();
         for (key, want) in [(0u64, 0usize), (7, 1), (100, 2)] {
             assert_eq!(ring3.shard_for_hash(hash_key(key)), want, "key {key}");
+        }
+    }
+
+    #[test]
+    fn ring_walk_golden_vectors() {
+        let ring4 = HashRing::new(4, DEFAULT_VNODES).unwrap();
+        for (key, want) in [
+            (0u64, vec![0usize, 2, 1, 3]),
+            (1, vec![1, 0, 2, 3]),
+            (12345, vec![3, 0, 2, 1]),
+        ] {
+            assert_eq!(ring4.walk_from_hash(hash_key(key)), want, "key {key}");
+        }
+        assert_eq!(
+            ring4.walk_from_hash(hash_features(&[
+                true, false, true, true, false, false, true, false
+            ])),
+            vec![3, 1, 2, 0]
+        );
+        let ring3 = HashRing::new(3, DEFAULT_VNODES).unwrap();
+        for (key, want) in [(0u64, vec![0usize, 2, 1]), (7, vec![1, 0, 2]), (100, vec![2, 0, 1])] {
+            assert_eq!(ring3.walk_from_hash(hash_key(key)), want, "key {key}");
+        }
+        assert_eq!(HashRing::new(1, DEFAULT_VNODES).unwrap().walk_from_hash(hash_key(0)), vec![0]);
+    }
+
+    #[test]
+    fn walk_starts_at_owner_and_is_a_permutation() {
+        for shards in [1usize, 2, 3, 5, 8] {
+            let ring = HashRing::new(shards, 32).unwrap();
+            for k in 0..500u64 {
+                let h = hash_key(k);
+                let walk = ring.walk_from_hash(h);
+                assert_eq!(walk.first().copied(), Some(ring.shard_for_hash(h)));
+                let mut sorted = walk.clone();
+                sorted.sort_unstable();
+                assert_eq!(sorted, (0..shards).collect::<Vec<_>>(), "key {k}");
+            }
         }
     }
 

@@ -10,8 +10,10 @@ use tsetlin_td::arch::proposed_cotm::ProposedCotm;
 use tsetlin_td::arch::proposed_tm::ProposedMulticlass;
 use tsetlin_td::arch::Architecture;
 use tsetlin_td::cli::{Args, USAGE};
-use tsetlin_td::config::ServeConfig;
-use tsetlin_td::coordinator::{Backend, CoordinatorServer, InferRequest, ShardedCoordinator};
+use tsetlin_td::config::{parse_remote_shards, ServeConfig};
+use tsetlin_td::coordinator::{
+    Backend, CoordinatorServer, InferRequest, RemoteCoordinator, ShardServer, ShardedCoordinator,
+};
 use tsetlin_td::sim::TechParams;
 use tsetlin_td::tm::simd::{SimdChoice, SimdLevel, WordLanes};
 use tsetlin_td::tm::{
@@ -50,6 +52,7 @@ fn run(args: &Args) -> Result<()> {
         "waveform" => cmd_waveform(args),
         "compile" => cmd_compile(args),
         "serve" => cmd_serve(args),
+        "shard" => cmd_shard(args),
         "selfcheck" => cmd_selfcheck(args),
         "help" | "" => {
             println!("{USAGE}");
@@ -304,7 +307,9 @@ fn cmd_compile(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
+/// Load the serve config and apply the CLI overrides shared by
+/// `serve` and `shard`.
+fn serve_config(args: &Args) -> Result<ServeConfig> {
     let mut cfg = match args.flag("config") {
         Some(path) => ServeConfig::load(path)?,
         None => ServeConfig::default(),
@@ -322,6 +327,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.compile = CompileMode::parse(name).ok_or_else(|| {
             Error::config(format!("unknown --compile {name:?} (off|prune|full)"))
         })?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = serve_config(args)?;
+    // `--remote-shards a:p,b:p` (or `remote_shards` in serve.toml)
+    // switches the front door to the networked tier: this process
+    // routes over TCP instead of hosting the shards itself.
+    let remote = match args.flag("remote-shards") {
+        Some(list) => parse_remote_shards(list)?,
+        None => cfg.remote_shards.clone(),
+    };
+    if !remote.is_empty() {
+        return cmd_serve_remote(&cfg, &remote, args);
     }
     let with_golden = !args.switch("no-golden");
     let n_requests = args.flag_parse("requests", 200usize)?;
@@ -373,6 +393,107 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     srv.shutdown();
+    Ok(())
+}
+
+/// The networked `serve` branch: route demo traffic over TCP to
+/// already-running `tmtd shard` processes.
+fn cmd_serve_remote(cfg: &ServeConfig, addrs: &[String], args: &Args) -> Result<()> {
+    let n_requests = args.flag_parse("requests", 200usize)?;
+    let dataset = data::iris()?;
+    let router = RemoteCoordinator::connect(addrs, cfg.net_connections, cfg.net_heartbeat_ms)?;
+    println!(
+        "routing {n_requests} requests across {} remote shard(s): {}",
+        router.num_shards(),
+        addrs.join(", ")
+    );
+    // Remote shards serve the native tier (shards pin compiled .tmc
+    // artifacts; golden and hardware backends need in-process state).
+    let backends: Vec<Backend> = Backend::ALL
+        .iter()
+        .copied()
+        .filter(|b| b.is_native_batched() || b.is_auto())
+        .collect();
+    let mut rng = SplitMix64::new(1);
+    let t0 = std::time::Instant::now();
+    let mut ok = 0usize;
+    for i in 0..n_requests {
+        let b = backends[rng.index(backends.len())];
+        match router.infer(&dataset.features[i % dataset.len()], b) {
+            Ok(_) => ok += 1,
+            Err(e) => eprintln!("request failed: {e}"),
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "done: {ok}/{n_requests} ok in {:.1} ms ({:.0} req/s), {} failover(s)",
+        dt.as_secs_f64() * 1e3,
+        ok as f64 / dt.as_secs_f64(),
+        router.failovers()
+    );
+    println!("router:  {}", router.router_stats().render());
+    match router.cluster_stats() {
+        Ok(s) => println!("cluster: {}", s.render()),
+        Err(e) => eprintln!("cluster stats unavailable: {e}"),
+    }
+    if args.switch("drain") {
+        println!("drained {}/{} shards", router.drain(), router.num_shards());
+    }
+    router.shutdown();
+    Ok(())
+}
+
+/// One shard process: serve a [`CoordinatorServer`] over TCP until a
+/// drain arrives. Models are pinned from compiled `.tmc` artifacts
+/// (`--model` + `--cotm-model`, see `tmtd compile`); with neither
+/// flag, a demo pair is trained and compiled in-process.
+fn cmd_shard(args: &Args) -> Result<()> {
+    let mut cfg = serve_config(args)?;
+    // One process = one shard; in-process sharding stays available by
+    // running more shard processes.
+    cfg.shards = 1;
+    let listen = match args.flag("listen") {
+        Some(a) => a.to_string(),
+        None if !cfg.listen.is_empty() => cfg.listen.clone(),
+        None => {
+            return Err(Error::config(
+                "shard needs --listen host:port (or `listen` under [coordinator] in serve.toml)",
+            ))
+        }
+    };
+    let (cmc, cco) = match (args.flag("model"), args.flag("cotm-model")) {
+        (Some(mc_path), Some(co_path)) => {
+            let cmc = tm::serde::load_compiled_multiclass(mc_path)?;
+            let cco = tm::serde::load_compiled_cotm(co_path)?;
+            println!("pinned models: {mc_path} + {co_path}");
+            (cmc, cco)
+        }
+        (None, None) => {
+            println!("no --model/--cotm-model given; training a demo iris pair");
+            let dataset = data::iris()?;
+            let (m, cm) = train_pair(&dataset, 60, 2)?;
+            let compiler = ModelCompiler::new(cfg.compile);
+            (compiler.compile_multiclass(&m)?, compiler.compile_cotm(&cm)?)
+        }
+        _ => {
+            return Err(Error::config(
+                "--model and --cotm-model must be given together (a compiled .tmc pair)",
+            ))
+        }
+    };
+    let server = CoordinatorServer::from_compiled_artifacts(&cfg, cmc, cco)?;
+    let (auto_mc, auto_co) = server.auto_backends();
+    let lanes = server.simd_lanes();
+    let shard = ShardServer::bind(server, &listen)?;
+    println!(
+        "shard listening on {} (simd {}, auto -> {}/{}); send Drain to stop",
+        shard.local_addr(),
+        lanes.name(),
+        auto_mc.name(),
+        auto_co.name()
+    );
+    shard.wait();
+    println!("shard drained; exiting");
     Ok(())
 }
 

@@ -6,10 +6,10 @@
 #
 #   scripts/bench_record.sh [label] [out-file]
 #
-# The output file defaults to BENCH_PR8.json and can be overridden by
+# The output file defaults to BENCH_PR9.json and can be overridden by
 # the second positional argument or the BENCH_OUT environment variable
 # (argument wins). Earlier PRs recorded to BENCH_PR3.json ..
-# BENCH_PR7.json; those files stay as recorded history.
+# BENCH_PR8.json; those files stay as recorded history.
 #
 # Needs a Rust toolchain; the CI image carries none (see ROADMAP.md), so
 # run this on a toolchain-equipped machine and commit the appended entry.
@@ -17,7 +17,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 LABEL="${1:-$(git rev-parse --short HEAD 2>/dev/null || echo unlabelled)}"
-OUT="${2:-${BENCH_OUT:-BENCH_PR8.json}}"
+OUT="${2:-${BENCH_OUT:-BENCH_PR9.json}}"
 
 if ! command -v cargo >/dev/null 2>&1; then
     echo "bench_record.sh: cargo not found on PATH." >&2
@@ -50,6 +50,10 @@ echo "== cargo bench --bench simd_vs_scalar =="
 SIMD_OUT="$(cargo bench --bench simd_vs_scalar)"
 echo "$SIMD_OUT"
 
+echo "== cargo bench --bench net_loopback =="
+NET_OUT="$(cargo bench --bench net_loopback)"
+echo "$NET_OUT"
+
 # JSON-escape via python3 (present wherever the Python tier runs); fall
 # back to a warning rather than writing malformed JSON by hand.
 if ! command -v python3 >/dev/null 2>&1; then
@@ -58,7 +62,7 @@ if ! command -v python3 >/dev/null 2>&1; then
 fi
 LABEL="$LABEL" COMPILE_OUT="$COMPILE_OUT" COMPRESSED_OUT="$COMPRESSED_OUT" \
 INDEXED_OUT="$INDEXED_OUT" BITPAR_OUT="$BITPAR_OUT" TRAIN_OUT="$TRAIN_OUT" \
-SIMD_OUT="$SIMD_OUT" OUT="$OUT" \
+SIMD_OUT="$SIMD_OUT" NET_OUT="$NET_OUT" OUT="$OUT" \
 python3 - <<'EOF'
 import datetime
 import json
@@ -75,6 +79,7 @@ entry = {
     "bitparallel_vs_ref": os.environ["BITPAR_OUT"].splitlines(),
     "train_packed_vs_ref": os.environ["TRAIN_OUT"].splitlines(),
     "simd_vs_scalar": os.environ["SIMD_OUT"].splitlines(),
+    "net_loopback": os.environ["NET_OUT"].splitlines(),
 }
 path = os.environ["OUT"]
 with open(path, "a", encoding="utf-8") as f:

@@ -12,15 +12,18 @@
 # mirror, the inverted-index counter-sweep mirror, the compressed
 # include-list-walk mirror with its shared golden vectors, the
 # packed-trainer mirror with its same-seed bit-identity invariant, the
-# tiled bit-sliced batch-layout mirror, and the model-compile-pass
-# mirror with its prune/reorder/plan oracles — so toolchain-less images
+# tiled bit-sliced batch-layout mirror, the model-compile-pass
+# mirror with its prune/reorder/plan oracles, and the wire-protocol
+# mirror (python/netproto.py: shared golden frames + adversarial
+# decoding + socket-pair streaming) — so toolchain-less images
 # still validate the shard-routing, indexed-inference,
-# compressed-inference, packed-training, SIMD-tile and model-compile
-# algorithms), then
+# compressed-inference, packed-training, SIMD-tile, model-compile and
+# network-framing algorithms), then
 # cargo build --release && cargo test -q, the shard / coordinator /
-# indexed / compressed / compile / engine-matrix / trainer / SIMD
+# networked-serving / indexed / compressed / compile / engine-matrix /
+# trainer / SIMD
 # conformance suites by name (so a routing, engine, compile-pass,
-# trainer or lane-dispatch
+# trainer, lane-dispatch or wire-protocol
 # regression is visible at a glance), one portable-only build with the
 # vector paths compiled out (--no-default-features: the portable
 # reference must keep compiling and passing on its own), and cargo
@@ -79,6 +82,10 @@ cargo test -q --test equivalence indexed
 cargo test -q --test equivalence compressed
 cargo test -q --test bitparallel_equivalence indexed
 cargo test -q --test bitparallel_equivalence auto
+
+echo "== networked serving tier (frame codec, messages, loopback conformance) =="
+cargo test -q --lib coordinator::net
+cargo test -q --test net_serving
 
 echo "== model-compile pass (prune/reorder/plan exactness + artifact serde) =="
 cargo test -q --lib tm::compile

@@ -1,0 +1,401 @@
+//! End-to-end tests of the networked serving tier (loopback TCP):
+//! differential conformance against the in-process sharded
+//! coordinator, counter conservation across the process boundary,
+//! degraded-but-correct service while a shard is down (and recovery
+//! when it returns), adversarial bytes on the wire, and graceful
+//! drain.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tsetlin_td::config::ServeConfig;
+use tsetlin_td::coordinator::net::frame::{HEADER_LEN, MAGIC, MAX_PAYLOAD, VERSION};
+use tsetlin_td::coordinator::net::msg::Msg;
+use tsetlin_td::coordinator::net::{RemoteCoordinator, ShardServer};
+use tsetlin_td::coordinator::{Backend, CoordinatorServer, InferRequest, ShardedCoordinator};
+use tsetlin_td::tm::compile::{CompiledCotm, CompiledMulticlass};
+use tsetlin_td::tm::{
+    cotm_train::train_cotm, data, train::train_multiclass, ModelCompiler, TmParams,
+};
+
+/// The backends a pinned-artifact shard serves (no golden artifacts,
+/// no hardware pool in the shard process).
+const NATIVE: [Backend; 8] = [
+    Backend::BitParallelMulticlass,
+    Backend::BitParallelCotm,
+    Backend::IndexedMulticlass,
+    Backend::IndexedCotm,
+    Backend::CompressedMulticlass,
+    Backend::CompressedCotm,
+    Backend::AutoMulticlass,
+    Backend::AutoCotm,
+];
+
+struct Fixture {
+    cfg: ServeConfig,
+    cmc: CompiledMulticlass,
+    cco: CompiledCotm,
+    m: tsetlin_td::tm::MultiClassTmModel,
+    cm: tsetlin_td::tm::CoTmModel,
+    dataset: data::Dataset,
+}
+
+fn fixture() -> Fixture {
+    let dataset = data::iris().unwrap();
+    let (tr, _) = dataset.split(0.8, 42);
+    let m = train_multiclass(TmParams::iris_paper(), &tr, 20, 2).unwrap();
+    let cm = train_cotm(TmParams::iris_paper(), &tr, 60, 3).unwrap();
+    let cfg = ServeConfig { workers: 1, net_heartbeat_ms: 50, ..ServeConfig::default() };
+    let compiler = ModelCompiler::new(cfg.compile);
+    let cmc = compiler.compile_multiclass(&m).unwrap();
+    let cco = compiler.compile_cotm(&cm).unwrap();
+    Fixture { cfg, cmc, cco, m, cm, dataset }
+}
+
+impl Fixture {
+    fn spawn_shard(&self) -> ShardServer {
+        let server = CoordinatorServer::from_compiled_artifacts(
+            &self.cfg,
+            self.cmc.clone(),
+            self.cco.clone(),
+        )
+        .unwrap();
+        ShardServer::bind(server, "127.0.0.1:0").unwrap()
+    }
+
+    fn spawn_cluster(&self, n: usize) -> (Vec<ShardServer>, Vec<String>) {
+        let shards: Vec<ShardServer> = (0..n).map(|_| self.spawn_shard()).collect();
+        let addrs = shards.iter().map(|s| s.local_addr().to_string()).collect();
+        (shards, addrs)
+    }
+}
+
+fn wait_for<F: Fn() -> bool>(what: &str, deadline: Duration, f: F) {
+    let t0 = Instant::now();
+    while !f() {
+        assert!(t0.elapsed() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn tcp_front_door_is_bit_identical_to_in_process_coordinator() {
+    let fx = fixture();
+    let (shards, addrs) = fx.spawn_cluster(3);
+    let router = RemoteCoordinator::connect(&addrs, 2, 0).unwrap();
+
+    // The in-process reference: same config, same shard count, models
+    // compiled by the same pass.
+    let cfg = ServeConfig { shards: 3, ..fx.cfg.clone() };
+    let local = ShardedCoordinator::new(&cfg, fx.m.clone(), fx.cm.clone(), false).unwrap();
+
+    for (i, x) in fx.dataset.features.iter().enumerate() {
+        // Identical ring, identical routing decision.
+        assert_eq!(
+            router.shard_for_features(x),
+            local.shard_for_features(x),
+            "sample {i} routed differently over TCP"
+        );
+        let backend = NATIVE[i % NATIVE.len()];
+        let remote = router.infer(x, backend).unwrap();
+        let reference = local.infer(InferRequest { features: x.clone(), backend }).unwrap();
+        assert_eq!(remote.class_sums, reference.class_sums, "sample {i} sums diverge");
+        assert_eq!(remote.predicted, reference.predicted, "sample {i} argmax diverges");
+        // Both fronts must resolve auto-* to the same concrete engine.
+        assert_eq!(remote.backend, reference.backend, "sample {i} backend diverges");
+    }
+
+    router.shutdown();
+    local.shutdown();
+    for s in shards {
+        s.shutdown();
+    }
+}
+
+#[test]
+fn counters_are_conserved_across_the_process_boundary() {
+    let fx = fixture();
+    let (shards, addrs) = fx.spawn_cluster(2);
+    let router = RemoteCoordinator::connect(&addrs, 2, 0).unwrap();
+
+    let n = 120usize;
+    let mut ok = 0u64;
+    for i in 0..n {
+        let x = &fx.dataset.features[i % fx.dataset.len()];
+        if router.infer(x, NATIVE[i % NATIVE.len()]).is_ok() {
+            ok += 1;
+        }
+    }
+    assert_eq!(ok, n as u64, "loopback cluster with idle queues must serve everything");
+
+    // Shard-side conservation, summed over the wire from both
+    // processes' raw counters.
+    let cluster = router.cluster_stats().unwrap();
+    assert_eq!(cluster.submitted, n as u64);
+    assert_eq!(
+        cluster.submitted,
+        cluster.completed + cluster.rejected + cluster.failed,
+        "shard-side counters leak across the process boundary"
+    );
+    // Exact latency aggregation: every completed request's sample ring
+    // entry survived the trip.
+    assert_eq!(cluster.latency_us.as_ref().map(|l| l.count), Some(n));
+
+    // Router-side conservation.
+    let rs = router.router_stats();
+    assert_eq!(rs.submitted, n as u64);
+    assert_eq!(rs.submitted, rs.completed + rs.rejected + rs.failed);
+
+    router.shutdown();
+    for s in shards {
+        s.shutdown();
+    }
+}
+
+#[test]
+fn killing_a_shard_degrades_service_and_recovery_reintegrates_it() {
+    let fx = fixture();
+    let (mut shards, addrs) = fx.spawn_cluster(2);
+    let router = RemoteCoordinator::connect(&addrs, 2, 50).unwrap();
+
+    // Warm stream: everything works.
+    for i in 0..20 {
+        let x = &fx.dataset.features[i % fx.dataset.len()];
+        router.infer(x, Backend::AutoMulticlass).unwrap();
+    }
+
+    // Kill shard 1 abruptly (no drain): its listener and connections
+    // drop mid-stream.
+    let killed_addr = addrs[1].clone();
+    shards.remove(1).shutdown();
+
+    // The stream must keep serving every request — the ring walk fails
+    // over to shard 0 on transport errors.
+    for i in 0..40 {
+        let x = &fx.dataset.features[i % fx.dataset.len()];
+        let r = router.infer(x, Backend::AutoMulticlass);
+        assert!(r.is_ok(), "request {i} failed during single-shard outage: {r:?}");
+    }
+    assert!(router.failovers() > 0, "a two-shard ring must have routed around the dead shard");
+    wait_for("heartbeat to flag the dead shard", Duration::from_secs(5), || {
+        !router.healthy_shards()[1]
+    });
+
+    // Restart the shard on the same address: the heartbeat must
+    // reintegrate it without touching the router.
+    let server = CoordinatorServer::from_compiled_artifacts(&fx.cfg, fx.cmc.clone(), fx.cco.clone())
+        .unwrap();
+    let revived = ShardServer::bind(server, &killed_addr).unwrap();
+    wait_for("heartbeat to reintegrate the revived shard", Duration::from_secs(10), || {
+        router.healthy_shards()[1]
+    });
+    for i in 0..20 {
+        let x = &fx.dataset.features[i % fx.dataset.len()];
+        router.infer(x, Backend::AutoCotm).unwrap();
+    }
+    // Router-side conservation held through the outage and recovery.
+    let rs = router.router_stats();
+    assert_eq!(rs.submitted, rs.completed + rs.rejected + rs.failed);
+
+    router.shutdown();
+    revived.shutdown();
+    for s in shards {
+        s.shutdown();
+    }
+}
+
+#[test]
+fn adversarial_bytes_cannot_crash_or_hang_a_shard() {
+    let fx = fixture();
+    let shard = fx.spawn_shard();
+    let addr = shard.local_addr();
+
+    // 1. Wrong magic.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+    expect_closed(s);
+
+    // 2. Wrong version.
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut frame = Msg::Heartbeat { nonce: 1 }.encode_frame().unwrap();
+    frame[4] = 9;
+    s.write_all(&frame).unwrap();
+    expect_closed(s);
+
+    // 3. Oversized length prefix (shard must not allocate or block).
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut header = Vec::from(MAGIC);
+    header.push(VERSION);
+    header.push(5);
+    header.extend_from_slice(&(MAX_PAYLOAD as u32 + 1).to_le_bytes());
+    assert_eq!(header.len(), HEADER_LEN);
+    s.write_all(&header).unwrap();
+    expect_closed(s);
+
+    // 4. Unknown message type.
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut frame = Msg::Drain.encode_frame().unwrap();
+    frame[5] = 0xEE;
+    s.write_all(&frame).unwrap();
+    expect_closed(s);
+
+    // 5. Truncated frame then disconnect (client dies mid-send).
+    let mut s = TcpStream::connect(addr).unwrap();
+    let frame = Msg::Heartbeat { nonce: 2 }.encode_frame().unwrap();
+    s.write_all(&frame[..frame.len() - 3]).unwrap();
+    drop(s);
+
+    // Malformed traffic was counted, and the shard still serves a
+    // well-formed client afterwards.
+    wait_for("protocol errors to be counted", Duration::from_secs(5), || {
+        shard.protocol_errors() >= 4
+    });
+    let mut s = TcpStream::connect(addr).unwrap();
+    Msg::Heartbeat { nonce: 7 }.write_to(&mut s).unwrap();
+    assert_eq!(Msg::read_from(&mut s).unwrap(), Msg::HeartbeatAck { nonce: 7 });
+
+    shard.shutdown();
+}
+
+fn expect_closed(mut s: TcpStream) {
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut buf = [0u8; 64];
+    // The shard answers garbage by closing; EOF (Ok(0)) or a reset
+    // both prove it did not hang. A timeout fails the test.
+    match s.read(&mut buf) {
+        Ok(0) | Err(_) => {}
+        Ok(n) => panic!("shard answered garbage with {n} bytes instead of closing"),
+    }
+}
+
+#[test]
+fn one_connection_interleaves_heartbeats_stats_and_inference() {
+    let fx = fixture();
+    let shard = fx.spawn_shard();
+    let mut s = TcpStream::connect(shard.local_addr()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    let x = &fx.dataset.features[0];
+    for round in 0..5u64 {
+        Msg::Heartbeat { nonce: round }.write_to(&mut s).unwrap();
+        assert_eq!(Msg::read_from(&mut s).unwrap(), Msg::HeartbeatAck { nonce: round });
+
+        Msg::InferRequest {
+            backend: "bitpar-multiclass".into(),
+            features: x.clone(),
+        }
+        .write_to(&mut s)
+        .unwrap();
+        match Msg::read_from(&mut s).unwrap() {
+            Msg::InferResponse { backend, class_sums, .. } => {
+                assert_eq!(backend, "bitpar-multiclass");
+                assert!(!class_sums.is_empty());
+            }
+            other => panic!("round {round}: unexpected reply {other:?}"),
+        }
+
+        Msg::StatsRequest.write_to(&mut s).unwrap();
+        match Msg::read_from(&mut s).unwrap() {
+            Msg::StatsReply { submitted, completed, rejected, failed, .. } => {
+                assert_eq!(submitted, round + 1);
+                assert_eq!(submitted, completed + rejected + failed);
+            }
+            other => panic!("round {round}: unexpected stats reply {other:?}"),
+        }
+    }
+
+    // Unknown backend: a clean wire-level failure, connection stays up.
+    Msg::InferRequest { backend: "no-such-engine".into(), features: x.clone() }
+        .write_to(&mut s)
+        .unwrap();
+    match Msg::read_from(&mut s).unwrap() {
+        Msg::Failed { reason } => assert!(reason.contains("no-such-engine"), "{reason}"),
+        other => panic!("unexpected reply {other:?}"),
+    }
+    // Wrong feature width: propagated as Failed, not a crash.
+    Msg::InferRequest { backend: "bitpar-multiclass".into(), features: vec![true; 3] }
+        .write_to(&mut s)
+        .unwrap();
+    match Msg::read_from(&mut s).unwrap() {
+        Msg::Failed { reason } => assert!(reason.contains("feature width"), "{reason}"),
+        other => panic!("unexpected reply {other:?}"),
+    }
+
+    shard.shutdown();
+}
+
+#[test]
+fn backpressure_is_propagated_not_swallowed() {
+    let fx = fixture();
+    let cfg = ServeConfig { queue_depth: 1, ..fx.cfg.clone() };
+    let server =
+        CoordinatorServer::from_compiled_artifacts(&cfg, fx.cmc.clone(), fx.cco.clone()).unwrap();
+    let shard = ShardServer::bind(server, "127.0.0.1:0").unwrap();
+    let addr = shard.local_addr();
+
+    // Hammer a queue_depth=1 shard from several connections at once:
+    // overlapping submissions must surface as wire-level rejections
+    // carrying the coordinator's own backpressure message.
+    let rejections = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let served = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let x = fx.dataset.features[0].clone();
+    let threads: Vec<_> = (0..4)
+        .map(|_| {
+            let (rejections, served, x) = (Arc::clone(&rejections), Arc::clone(&served), x.clone());
+            std::thread::spawn(move || {
+                let mut s = TcpStream::connect(addr).unwrap();
+                s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+                for _ in 0..200 {
+                    if rejections.load(Ordering::Relaxed) > 0 {
+                        return;
+                    }
+                    Msg::InferRequest { backend: "bitpar-multiclass".into(), features: x.clone() }
+                        .write_to(&mut s)
+                        .unwrap();
+                    match Msg::read_from(&mut s).unwrap() {
+                        Msg::InferResponse { .. } => {
+                            served.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Msg::Reject { reason } => {
+                            assert!(reason.contains("backpressure"), "{reason}");
+                            rejections.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Msg::Failed { reason } => panic!("unexpected failure: {reason}"),
+                        other => panic!("unexpected reply {other:?}"),
+                    }
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert!(
+        rejections.load(Ordering::Relaxed) > 0,
+        "4 writers against queue_depth=1 never collided ({} served)",
+        served.load(Ordering::Relaxed)
+    );
+    shard.shutdown();
+}
+
+#[test]
+fn drain_is_graceful_and_acknowledged() {
+    let fx = fixture();
+    let (shards, addrs) = fx.spawn_cluster(2);
+    let router = RemoteCoordinator::connect(&addrs, 1, 0).unwrap();
+
+    for i in 0..10 {
+        router.infer(&fx.dataset.features[i], NATIVE[i % NATIVE.len()]).unwrap();
+    }
+    assert_eq!(router.drain(), 2, "every shard must ack the drain");
+    for s in &shards {
+        wait_for("shard to stop after drain", Duration::from_secs(5), || s.is_stopped());
+    }
+    router.shutdown();
+    for s in shards {
+        s.shutdown();
+    }
+}
