@@ -1,0 +1,138 @@
+//! Thread-scaling bench for the async clause-parallel trainer — the
+//! PR 10 perf-trajectory bench (the multicore counterpart of
+//! `train_packed_vs_ref`, which pins the sequential tiers).
+//!
+//! The async tier's promise is throughput, bought with deliberate
+//! nondeterminism (stale relaxed-atomic vote snapshots — see
+//! docs/TRAINING.md). A scaling number over a tier that learns a
+//! *worse* model would be meaningless, so the statistical
+//! accuracy-parity bar is asserted **before** anything is timed: on a
+//! seeded blobs problem the async trainer's accuracy must land within
+//! epsilon of the packed reference trainer's, and the reference must
+//! have actually learned. Only then does the bench time threaded
+//! epochs on the large synthetic regime (256 features, 512 clauses,
+//! 4 classes) at 1/2/4/8 workers.
+//!
+//! Target: >=4x ms/epoch speedup at 8 threads over the same tier at 1
+//! thread (the 1-thread baseline IS the deterministic schedule, so
+//! this is the cost of the schedule going parallel, nothing else).
+//!
+//! Run: `cargo bench --bench train_async_scaling`
+
+use std::time::Instant;
+
+use tsetlin_td::tm::infer::multiclass_accuracy;
+use tsetlin_td::tm::train::train_multiclass_with;
+use tsetlin_td::tm::{
+    data, train_multiclass_async, AsyncMultiClassTrainer, TmParams, TrainerEngine,
+};
+use tsetlin_td::util::Table;
+
+/// Same epsilon as `tmtd selfcheck` and the conformance suites.
+const PARITY_EPS: f64 = 0.15;
+
+/// Steady-state epochs: converge untimed first (the early epochs are
+/// Type I–dominated in every tier), then time.
+const CONVERGE_EPOCHS: usize = 3;
+
+const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+fn time_epochs_ms(reps: usize, mut epoch: impl FnMut()) -> f64 {
+    epoch(); // warm-up
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        epoch();
+    }
+    t0.elapsed().as_secs_f64() * 1e3 / reps as f64
+}
+
+/// The accuracy-parity gate. Panics (failing the bench) on a miss —
+/// a scaling table over a broken trainer must not be recordable.
+fn assert_parity() {
+    let p = TmParams {
+        features: 20,
+        clauses: 10,
+        classes: 3,
+        ta_states: 32,
+        threshold: 8,
+        specificity: 3.0,
+        max_weight: 5,
+    };
+    for seed in [1u64, 2, 3] {
+        let d = data::prototype_blobs(90, 20, 3, 0.05, seed);
+        let m_ref = train_multiclass_with(p.clone(), &d, 10, seed, TrainerEngine::Packed)
+            .expect("reference train");
+        let m_async =
+            train_multiclass_async(p.clone(), &d, 10, seed, 4, false).expect("async train");
+        let ra = multiclass_accuracy(&m_ref, &d.features, &d.labels);
+        let aa = multiclass_accuracy(&m_async, &d.features, &d.labels);
+        assert!(ra > 0.6, "seed {seed}: reference tier failed to learn (acc {ra})");
+        assert!(
+            (ra - aa).abs() <= PARITY_EPS,
+            "seed {seed}: async accuracy {aa} vs reference {ra} exceeds eps {PARITY_EPS}"
+        );
+        println!("  parity seed {seed}: reference {ra:.3}, async {aa:.3}");
+    }
+}
+
+fn main() {
+    println!("== async clause-parallel trainer: thread scaling ==");
+    println!("accuracy-parity gate (eps {PARITY_EPS}, 3 seeds) before timing:");
+    assert_parity();
+
+    // The large synthetic regime: 256 features, 512 clauses, 4 classes.
+    let (bf, bc, bk) = (256usize, 512usize, 4usize);
+    let big = data::prototype_blobs(192, bf, bk, 0.1, 9);
+    let big_p = TmParams {
+        features: bf,
+        clauses: bc,
+        classes: bk,
+        ta_states: 64,
+        threshold: 16,
+        specificity: 3.0,
+        max_weight: 7,
+    };
+
+    let mut table = Table::new(vec![
+        "threads",
+        "packed ms/epoch",
+        "indexed ms/epoch",
+        "speedup vs 1",
+    ]);
+    let mut base_ms = 0.0f64;
+    let mut speedup_at_8 = 0.0f64;
+    for &threads in &THREAD_SWEEP {
+        let mut packed = AsyncMultiClassTrainer::new(big_p.clone(), 5, threads, false)
+            .expect("valid params");
+        let mut indexed = AsyncMultiClassTrainer::new(big_p.clone(), 5, threads, true)
+            .expect("valid params");
+        for _ in 0..CONVERGE_EPOCHS {
+            packed.epoch(&big.features, &big.labels).expect("epoch");
+            indexed.epoch(&big.features, &big.labels).expect("epoch");
+        }
+        let packed_ms =
+            time_epochs_ms(2, || packed.epoch(&big.features, &big.labels).expect("epoch"));
+        let indexed_ms =
+            time_epochs_ms(2, || indexed.epoch(&big.features, &big.labels).expect("epoch"));
+        packed.check_invariants().expect("async invariants");
+        indexed.check_invariants().expect("async invariants");
+        if threads == 1 {
+            base_ms = packed_ms;
+        }
+        let speedup = base_ms / packed_ms;
+        if threads == 8 {
+            speedup_at_8 = speedup;
+        }
+        table.row(vec![
+            threads.to_string(),
+            format!("{packed_ms:.2}"),
+            format!("{indexed_ms:.2}"),
+            format!("{speedup:.1}x"),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "scaling target (>=4x ms/epoch at 8 threads vs 1 thread): {}",
+        if speedup_at_8 >= 4.0 { "PASS" } else { "FAIL" }
+    );
+}

@@ -22,6 +22,7 @@ from . import (
     r6_registry_coverage,
     r7_ratchet,
     r8_compile_pipeline,
+    r9_atomic_ordering,
 )
 
 ALL_RULES = [
@@ -33,4 +34,5 @@ ALL_RULES = [
     r6_registry_coverage,
     r7_ratchet,
     r8_compile_pipeline,
+    r9_atomic_ordering,
 ]

@@ -327,6 +327,39 @@ PROBES = [
         compare="exact",
     ),
     dict(
+        name="asynctrain stream seeds",
+        rust="rust/src/tm/async_train.rs",
+        rust_spans=[("anchor", "let golden_streams = ", 1)],
+        py="python/tests/test_asynctrain.py",
+        py_spans=[("anchor", "GOLDEN_STREAMS = ", 1)],
+        extract="wide_ints",
+        compare="exact",
+    ),
+    dict(
+        name="asynctrain multiclass masks",
+        rust="rust/src/tm/async_train.rs",
+        rust_spans=[("anchor", "let golden_async = ", 1)],
+        py="python/tests/test_asynctrain.py",
+        py_spans=[("anchor", "GOLDEN_ASYNC_MC_MASKS = ", 1)],
+        extract="bitstrings",
+        compare="exact",
+    ),
+    dict(
+        name="asynctrain cotm masks and weights",
+        rust="rust/src/tm/async_train.rs",
+        rust_spans=[
+            ("anchor", "let golden_async_co = ", 1),
+            ("anchor", "let golden_async_co_weights = vec!", 1),
+        ],
+        py="python/tests/test_asynctrain.py",
+        py_spans=[
+            ("anchor", "GOLDEN_ASYNC_CO_MASKS = ", 1),
+            ("anchor", "GOLDEN_ASYNC_CO_WEIGHTS = ", 1),
+        ],
+        extract="ints_and_bitstrings",
+        compare="exact",
+    ),
+    dict(
         name="simdtile layout goldens",
         rust="rust/src/tm/bitpack.rs",
         rust_spans=[("fn", "tiled_layout_golden_vectors_match_python_mirror", 1)],

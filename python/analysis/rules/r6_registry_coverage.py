@@ -45,6 +45,7 @@ _TYPE_VALIDATED = {
     "batch_timeout_us": "every u64 is a legal timeout",
     "compile": "CompileMode::parse rejects unknown mode names",
     "listen": "free-form bind address; `tmtd shard` errors on bind",
+    "trainer": "TrainerChoice::parse rejects unknown trainer names",
 }
 
 # Matches raw source ("Backend::ALL") and token-joined fn-body text,

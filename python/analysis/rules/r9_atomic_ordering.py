@@ -1,0 +1,126 @@
+"""R9 — atomic-ordering discipline in the async clause-parallel trainer.
+
+PR 10's ``tm/async_train.rs`` is correct *because* its memory-ordering
+story is trivial: workers publish vote deltas and read class-sum
+snapshots with ``Relaxed`` (staleness is the design, not a bug), and
+the only synchronization point is the partition join, where an
+``Acquire`` load pairs with the implicit release of thread join to
+check the vote conservation law.  Anything stronger hides a latent
+dependency on ordering the algorithm must not have; anything weaker at
+the join turns the lost-update check into a race.
+
+So, everywhere in ``tm/async_train.rs``:
+
+* every ``Ordering::<X>`` must use ``Relaxed``, ``Acquire`` or
+  ``Release`` — ``SeqCst`` and ``AcqRel`` are banned outright (if the
+  tier needs them, the snapshot contract in the module doc is wrong
+  and must be re-argued, not patched around);
+* ``Acquire``/``Release`` may appear only inside a ``fn`` whose name
+  contains ``join`` — the hot publish/read path stays ``Relaxed``;
+* at least one ``Acquire`` must exist inside a join fn, or the
+  conservation check has been silently downgraded to a relaxed read.
+
+Deliberate exceptions carry ``// lint:allow(r9) <reason>``.
+"""
+
+from .. import rslex
+from ..engine import Finding
+
+RULE = "r9"
+TITLE = "atomic orderings in async_train.rs follow the snapshot contract"
+FIXTURE_GOOD = "r9_good"
+FIXTURE_BAD = "r9_bad"
+
+TARGET = "rust/src/tm/async_train.rs"
+
+_ALLOWED = {"Relaxed", "Acquire", "Release"}
+_JOIN_ONLY = {"Acquire", "Release"}
+
+
+def _orderings(toks):
+    """Every ``Ordering::<name>`` use as ``(token_index, name_token)``.
+
+    rslex emits ``::`` as two ``:`` puncts, so the shape is four
+    tokens: ident ``Ordering``, ``:``, ``:``, ident.
+    """
+    out = []
+    for i in range(len(toks) - 3):
+        if (
+            toks[i].kind == "ident"
+            and toks[i].text == "Ordering"
+            and toks[i + 1].kind == "punct"
+            and toks[i + 1].text == ":"
+            and toks[i + 2].kind == "punct"
+            and toks[i + 2].text == ":"
+            and toks[i + 3].kind == "ident"
+        ):
+            out.append((i + 3, toks[i + 3]))
+    return out
+
+
+def _enclosing_fns(spans, idx):
+    """Names of every fn whose body token-span contains ``idx``."""
+    return [name for name, _fi, b0, b1 in spans if b0 <= idx <= b1]
+
+
+def check(tree):
+    if not tree.exists(TARGET):
+        if tree.fixture:
+            return []
+        return [
+            Finding(
+                RULE,
+                TARGET,
+                1,
+                "async trainer surface missing from the live tree — the "
+                "atomic-ordering contract has nothing to bind to",
+            )
+        ]
+    toks, _ = tree.lexed(TARGET)
+    spans = rslex.fn_spans(toks)
+    out = []
+    join_has_acquire = False
+    for idx, tok in _orderings(toks):
+        name = tok.text
+        fns = _enclosing_fns(spans, idx)
+        in_join = any("join" in f for f in fns)
+        if name not in _ALLOWED:
+            out.append(
+                Finding(
+                    RULE,
+                    TARGET,
+                    tok.line,
+                    f"Ordering::{name} is outside the snapshot contract — "
+                    "the async tier runs on Relaxed vote traffic plus one "
+                    "Acquire at the partition join; SeqCst/AcqRel signal a "
+                    "hidden ordering dependency the design forbids",
+                )
+            )
+            continue
+        if name in _JOIN_ONLY and not in_join:
+            where = fns[-1] if fns else "module scope"
+            out.append(
+                Finding(
+                    RULE,
+                    TARGET,
+                    tok.line,
+                    f"Ordering::{name} in `{where}` — Acquire/Release are "
+                    "reserved for the partition join (fns named *join*); "
+                    "the publish/read hot path must stay Relaxed",
+                )
+            )
+            continue
+        if name == "Acquire" and in_join:
+            join_has_acquire = True
+    if not join_has_acquire:
+        out.append(
+            Finding(
+                RULE,
+                TARGET,
+                1,
+                "no Ordering::Acquire inside a join fn — the vote "
+                "conservation check no longer synchronizes with the "
+                "workers' publishes and cannot detect lost updates",
+            )
+        )
+    return out

@@ -1,0 +1,489 @@
+"""Python mirror of the asynchronous clause-parallel TM training tier.
+
+Mirrors ``rust/src/tm/async_train.rs`` — the partitioning, stale-vote
+snapshot, and RNG-stream contract — so the toolchain-less CI image can
+validate the async trainer's algorithm the same way ``packedtrain.py``
+validates the deterministic trainers.
+
+What exactly is mirrored
+------------------------
+
+The Rust tier has two schedules over the *same* per-(worker, sample)
+step function:
+
+* the **threaded** schedule (``std::thread::scope`` workers racing over
+  a shared relaxed-atomic vote array) — deliberately nondeterministic,
+  validated statistically and by invariant fuzzing;
+* the **deterministic** schedule (sample-major round-robin replay of
+  the identical step sequence) — bit-reproducible, and the thing this
+  file mirrors literal-for-literal.
+
+At ``threads == 1`` the two schedules coincide (one worker, no
+interleaving), so the deterministic contract pins the threaded code
+path too — that degenerate case is asserted on the Rust side.
+
+The contract, shared golden-for-golden with the Rust unit tests:
+
+* **Partitioning** — global clause slot ``j`` is owned by worker
+  ``j % threads``; initial TA states are drawn from a single
+  ``SplitMix64(seed)`` in exactly the reference trainer's order
+  (class-major, clause order), *then* distributed, so partitioning
+  never perturbs initialisation.
+* **RNG streams** — ``stream_seed(seed, epoch, lane)`` derives one
+  independent SplitMix64 stream per (epoch, lane): lane 0 is the shared
+  sample-order shuffle, lane 1 the negative-class draw (every worker
+  replays its own copy, so all workers agree on the two touched classes
+  of each sample without communicating), lanes 2.. are the per-worker
+  feedback streams.
+* **Stale votes** — each worker publishes its partition's class-sum
+  contribution by differencing against its previous contribution
+  (``votes[c] += contrib - last[c]``), then reads the shared total for
+  the update probability. Between refreshes other workers' entries are
+  stale *by design*; the conservation law ``votes[c] == sum_w last_w[c]``
+  must still hold at epoch join (no lost updates on partition
+  boundaries).
+* **Indexed feedback** — the ``indexed`` engine evaluates owned clauses
+  through per-worker literal->clause postings with unsatisfied-literal
+  counters (the ``tm/index.rs`` sweep, training-time empty-clause-FIRES
+  semantics) kept in sync incrementally after every feedback. Evaluation
+  is exact, so ``indexed`` and ``packed`` produce **bit-identical**
+  models under the deterministic schedule — asserted in both languages.
+"""
+
+from packedtrain import (
+    MASK64,
+    WORD_BITS,
+    ClauseState,
+    SplitMix64,
+    make_literals,
+    pack_literals,
+    type_i,
+    type_ii,
+)
+
+# Fixed odd mixing constants for the stream-seed closed form. These are
+# part of the cross-language contract (see the r5 probe): changing them
+# changes every async golden vector in both languages at once.
+STREAM_EPOCH_MIX = 0xA0761D6478BD642F
+STREAM_LANE_MIX = 0xE7037ED1A0B428DB
+
+LANE_ORDER = 0
+LANE_NEG = 1
+LANE_WORKER0 = 2
+
+
+def stream_seed(seed, epoch, lane):
+    """Closed-form per-(epoch, lane) stream derivation.
+
+    Deliberately *not* ``rng.fork()``: a closed form lets any worker
+    (or either language) derive any stream independently, with no
+    draw-order coupling between workers.
+    """
+    root = SplitMix64(seed).next_u64()
+    mix = (
+        root
+        ^ ((epoch * STREAM_EPOCH_MIX) & MASK64)
+        ^ ((lane * STREAM_LANE_MIX) & MASK64)
+    )
+    return SplitMix64(mix).next_u64()
+
+
+class TrainIndex:
+    """Per-worker inverted index over the worker's *owned* clauses.
+
+    Literal -> local-clause postings plus persistent unsatisfied-literal
+    counters, exactly the ``tm/index.rs`` sweep structure but with
+    training-time semantics (a clause with zero included literals
+    FIRES) and incremental maintenance: after every feedback the
+    changed include bits are replayed into the postings, so an update
+    pays O(touched literals), never O(model).
+    """
+
+    def __init__(self, states, n, literals):
+        self.n = n
+        self.postings = [[] for _ in range(literals)]
+        self.required = [0] * len(states)
+        for ci, cl in enumerate(states):
+            for l, inc in enumerate(cl.include_mask(n)):
+                if inc:
+                    self.postings[l].append(ci)
+                    self.required[ci] += 1
+        # Persistent counters, decremented during a sweep and restored
+        # afterwards (index.rs convention) — never rebuilt per sample.
+        self.counts = list(self.required)
+
+    def fired_flags(self, lits):
+        """One sweep: fired flags for every owned clause on this sample.
+
+        A counter can never go below zero: a clause receives at most
+        ``required`` decrements (one per included literal that is set).
+        """
+        fired = [r == 0 for r in self.required]
+        for l, on in enumerate(lits):
+            if not on:
+                continue
+            for ci in self.postings[l]:
+                self.counts[ci] -= 1
+                if self.counts[ci] == 0:
+                    fired[ci] = True
+        for l, on in enumerate(lits):
+            if not on:
+                continue
+            for ci in self.postings[l]:
+                self.counts[ci] += 1
+        return fired
+
+    def apply_diff(self, ci, old_words, new_words):
+        """Replay one clause's include-mask change into the postings."""
+        for w, (ow, nw) in enumerate(zip(old_words, new_words)):
+            diff = ow ^ nw
+            while diff:
+                bit = diff & -diff
+                l = w * WORD_BITS + bit.bit_length() - 1
+                diff ^= bit
+                if nw & bit:
+                    self.postings[l].append(ci)
+                    self.required[ci] += 1
+                    self.counts[ci] += 1
+                else:
+                    self.postings[l].remove(ci)
+                    self.required[ci] -= 1
+                    self.counts[ci] -= 1
+
+    def coherent(self, states):
+        """Incrementally-maintained index == a fresh build."""
+        fresh = TrainIndex(states, self.n, len(self.postings))
+        return (
+            [sorted(p) for p in self.postings] == fresh.postings
+            and self.required == fresh.required
+            and self.counts == fresh.required
+        )
+
+
+class _Owned:
+    """One clause moved into a worker partition (Rust: ``OwnedClause``)."""
+
+    __slots__ = ("class_", "slot", "state", "weights")
+
+    def __init__(self, class_, slot, state, weights=None):
+        self.class_ = class_
+        self.slot = slot
+        self.state = state
+        self.weights = weights  # CoTM only: per-class weight column
+
+
+class AsyncMultiClassTrainer:
+    """Clause-parallel multi-class trainer, deterministic schedule."""
+
+    def __init__(self, params, seed, threads, engine="packed"):
+        assert engine in ("packed", "indexed"), engine
+        assert threads >= 1
+        assert params.clauses % 2 == 0
+        self.params = params
+        self.seed = seed
+        self.threads = threads
+        self.engine = engine
+        self.epochs_run = 0
+        n = params.ta_states
+        init_rng = SplitMix64(seed)
+        self.parts = [[] for _ in range(threads)]
+        for k in range(params.classes):
+            for j in range(params.clauses):
+                st = ClauseState.init(params.literals(), n, init_rng)
+                self.parts[j % threads].append(_Owned(k, j, st))
+        self.indexes = None
+        if engine == "indexed":
+            self.indexes = [
+                TrainIndex([oc.state for oc in part], n, params.literals())
+                for part in self.parts
+            ]
+
+    def epoch(self, features, labels):
+        """Sample-major round-robin replay of the threaded schedule."""
+        p = self.params
+        e = self.epochs_run
+        order = list(range(len(features)))
+        SplitMix64(stream_seed(self.seed, e, LANE_ORDER)).shuffle(order)
+        votes = [0] * p.classes
+        last = [[0] * p.classes for _ in range(self.threads)]
+        rngs = [
+            SplitMix64(stream_seed(self.seed, e, LANE_WORKER0 + w))
+            for w in range(self.threads)
+        ]
+        neg_rngs = [
+            SplitMix64(stream_seed(self.seed, e, LANE_NEG))
+            for _ in range(self.threads)
+        ]
+        lits_all = [make_literals(x) for x in features]
+        words_all = [pack_literals(x) for x in features]
+        for i in order:
+            for w in range(self.threads):
+                self._step(
+                    w, lits_all[i], words_all[i], labels[i],
+                    votes, last[w], rngs[w], neg_rngs[w],
+                )
+        # join_votes: no lost updates on partition boundaries.
+        for c in range(p.classes):
+            assert votes[c] == sum(last[w][c] for w in range(self.threads))
+        self.epochs_run += 1
+
+    def _step(self, w, lits, words, y, votes, last, rng, neg_rng):
+        p = self.params
+        n, s, t = p.ta_states, p.specificity, p.threshold
+        part = self.parts[w]
+        neg = None
+        if p.classes > 1:
+            neg = neg_rng.index(p.classes - 1)
+            if neg >= y:
+                neg += 1
+        fired_all = None
+        if self.indexes is not None:
+            fired_all = self.indexes[w].fired_flags(lits)
+        targets = [(y, True)]
+        if neg is not None:
+            targets.append((neg, False))
+        for class_, positive in targets:
+            # Evaluate this worker's clauses of the touched class and
+            # publish the fresh partial sum (stale-vote refresh).
+            contrib = 0
+            fired = {}
+            for k, oc in enumerate(part):
+                if oc.class_ != class_:
+                    continue
+                f = (
+                    fired_all[k]
+                    if fired_all is not None
+                    else oc.state.fires_packed(words)
+                )
+                fired[k] = f
+                if f:
+                    contrib += 1 if oc.slot % 2 == 0 else -1
+            votes[class_] += contrib - last[class_]
+            last[class_] = contrib
+            sum_ = max(-t, min(t, votes[class_]))
+            if positive:
+                p_update = (t - sum_) / (2 * t)
+            else:
+                p_update = (t + sum_) / (2 * t)
+            for k, oc in enumerate(part):
+                if oc.class_ != class_:
+                    continue
+                if not rng.chance(p_update):
+                    continue
+                f = fired[k]
+                old = (
+                    list(oc.state.include_words)
+                    if self.indexes is not None
+                    else None
+                )
+                touched = False
+                if positive == (oc.slot % 2 == 0):
+                    type_i(oc.state, lits, f, n, s, rng)
+                    touched = True
+                elif f:
+                    type_ii(oc.state, lits, n)
+                    touched = True
+                if touched and old is not None:
+                    self.indexes[w].apply_diff(k, old, oc.state.include_words)
+
+    def train(self, features, labels, epochs):
+        for _ in range(epochs):
+            self.epoch(features, labels)
+        return self.export()
+
+    def export(self):
+        n = self.params.ta_states
+        masks = [
+            [None] * self.params.clauses for _ in range(self.params.classes)
+        ]
+        for part in self.parts:
+            for oc in part:
+                masks[oc.class_][oc.slot] = oc.state.include_mask(n)
+        return masks
+
+    def coherent(self):
+        n = self.params.ta_states
+        if not all(oc.state.coherent(n) for part in self.parts for oc in part):
+            return False
+        if self.indexes is not None:
+            return all(
+                idx.coherent([oc.state for oc in part])
+                for idx, part in zip(self.indexes, self.parts)
+            )
+        return True
+
+    def states_in_bounds(self):
+        n = self.params.ta_states
+        return all(
+            1 <= st <= 2 * n
+            for part in self.parts
+            for oc in part
+            for st in oc.state.states
+        )
+
+
+class AsyncCoTmTrainer:
+    """Clause-parallel coalesced trainer, deterministic schedule.
+
+    Weight column ``j`` travels with clause ``j``: the owning worker is
+    the only writer of both, so feedback stays lock-free. Unlike the
+    multi-class step, every class update touches *all* owned clauses,
+    and the reference trainer re-evaluates clause outputs per class
+    update (the positive update's feedback changes the shared clauses
+    before the negative update) — so the sweep runs once per class
+    update here, not once per sample.
+    """
+
+    def __init__(self, params, seed, threads, engine="packed"):
+        assert engine in ("packed", "indexed"), engine
+        assert threads >= 1
+        self.params = params
+        self.seed = seed
+        self.threads = threads
+        self.engine = engine
+        self.epochs_run = 0
+        n = params.ta_states
+        init_rng = SplitMix64(seed)
+        self.parts = [[] for _ in range(threads)]
+        for j in range(params.clauses):
+            st = ClauseState.init(params.literals(), n, init_rng)
+            weights = [
+                1 if (j + k) % 2 == 0 else -1 for k in range(params.classes)
+            ]
+            self.parts[j % threads].append(_Owned(None, j, st, weights))
+        self.indexes = None
+        if engine == "indexed":
+            self.indexes = [
+                TrainIndex([oc.state for oc in part], n, params.literals())
+                for part in self.parts
+            ]
+
+    def epoch(self, features, labels):
+        p = self.params
+        e = self.epochs_run
+        order = list(range(len(features)))
+        SplitMix64(stream_seed(self.seed, e, LANE_ORDER)).shuffle(order)
+        votes = [0] * p.classes
+        last = [[0] * p.classes for _ in range(self.threads)]
+        rngs = [
+            SplitMix64(stream_seed(self.seed, e, LANE_WORKER0 + w))
+            for w in range(self.threads)
+        ]
+        neg_rngs = [
+            SplitMix64(stream_seed(self.seed, e, LANE_NEG))
+            for _ in range(self.threads)
+        ]
+        lits_all = [make_literals(x) for x in features]
+        words_all = [pack_literals(x) for x in features]
+        for i in order:
+            for w in range(self.threads):
+                self._step(
+                    w, lits_all[i], words_all[i], labels[i],
+                    votes, last[w], rngs[w], neg_rngs[w],
+                )
+        for c in range(p.classes):
+            assert votes[c] == sum(last[w][c] for w in range(self.threads))
+        self.epochs_run += 1
+
+    def _step(self, w, lits, words, y, votes, last, rng, neg_rng):
+        p = self.params
+        n, s, t = p.ta_states, p.specificity, p.threshold
+        wmax = p.max_weight
+        part = self.parts[w]
+        neg = None
+        if p.classes > 1:
+            neg = neg_rng.index(p.classes - 1)
+            if neg >= y:
+                neg += 1
+        targets = [(y, True)]
+        if neg is not None:
+            targets.append((neg, False))
+        for class_, positive in targets:
+            if self.indexes is not None:
+                fired = self.indexes[w].fired_flags(lits)
+            else:
+                fired = [oc.state.fires_packed(words) for oc in part]
+            contrib = sum(
+                oc.weights[class_]
+                for k, oc in enumerate(part)
+                if fired[k]
+            )
+            votes[class_] += contrib - last[class_]
+            last[class_] = contrib
+            sum_ = max(-t, min(t, votes[class_]))
+            if positive:
+                p_update = (t - sum_) / (2 * t)
+            else:
+                p_update = (t + sum_) / (2 * t)
+            for k, oc in enumerate(part):
+                if not rng.chance(p_update):
+                    continue
+                f = fired[k]
+                wgt = oc.weights[class_]  # pre-update sign decides role
+                old = (
+                    list(oc.state.include_words)
+                    if self.indexes is not None
+                    else None
+                )
+                touched = False
+                if positive:
+                    if f:
+                        oc.weights[class_] = min(wgt + 1, wmax)
+                        if wgt >= 0:
+                            type_i(oc.state, lits, True, n, s, rng)
+                        else:
+                            type_ii(oc.state, lits, n)
+                        touched = True
+                    elif wgt >= 0:
+                        type_i(oc.state, lits, False, n, s, rng)
+                        touched = True
+                elif f:
+                    oc.weights[class_] = max(wgt - 1, -wmax)
+                    if wgt > 0:
+                        type_ii(oc.state, lits, n)
+                    else:
+                        type_i(oc.state, lits, True, n, s, rng)
+                    touched = True
+                elif wgt < 0:
+                    type_i(oc.state, lits, False, n, s, rng)
+                    touched = True
+                if touched and old is not None:
+                    self.indexes[w].apply_diff(k, old, oc.state.include_words)
+
+    def train(self, features, labels, epochs):
+        for _ in range(epochs):
+            self.epoch(features, labels)
+        return self.export()
+
+    def export(self):
+        n = self.params.ta_states
+        masks = [None] * self.params.clauses
+        weights = [
+            [0] * self.params.clauses for _ in range(self.params.classes)
+        ]
+        for part in self.parts:
+            for oc in part:
+                masks[oc.slot] = oc.state.include_mask(n)
+                for k in range(self.params.classes):
+                    weights[k][oc.slot] = oc.weights[k]
+        return masks, weights
+
+    def coherent(self):
+        n = self.params.ta_states
+        if not all(oc.state.coherent(n) for part in self.parts for oc in part):
+            return False
+        if self.indexes is not None:
+            return all(
+                idx.coherent([oc.state for oc in part])
+                for idx, part in zip(self.indexes, self.parts)
+            )
+        return True
+
+    def states_in_bounds(self):
+        n = self.params.ta_states
+        return all(
+            1 <= st <= 2 * n
+            for part in self.parts
+            for oc in part
+            for st in oc.state.states
+        )

@@ -1,0 +1,17 @@
+//! Known-bad r9 fixture: every way the async trainer's memory-ordering
+//! story can rot — SeqCst on the hot path, Acquire outside the join,
+//! and a join downgraded to Relaxed (no Acquire anywhere in a join fn).
+
+use std::sync::atomic::{AtomicI32, Ordering};
+
+fn publish_and_read(votes: &[AtomicI32], class: usize, contrib: i32) -> i32 {
+    // SeqCst is banned: the tier must tolerate stale snapshots.
+    votes[class].fetch_add(contrib, Ordering::SeqCst);
+    // Acquire outside a join fn: the hot path must stay Relaxed.
+    votes[class].load(Ordering::Acquire)
+}
+
+fn join_votes(votes: &[AtomicI32]) -> i32 {
+    // Relaxed at the join: the conservation check can miss updates.
+    votes.iter().map(|v| v.load(Ordering::Relaxed)).sum()
+}

@@ -1,0 +1,13 @@
+//! Known-good r9 fixture: Relaxed vote traffic on the hot path, one
+//! Acquire at the partition join — the documented snapshot contract.
+
+use std::sync::atomic::{AtomicI32, Ordering};
+
+fn publish_and_read(votes: &[AtomicI32], class: usize, contrib: i32) -> i32 {
+    votes[class].fetch_add(contrib, Ordering::Relaxed);
+    votes[class].load(Ordering::Relaxed)
+}
+
+fn join_votes(votes: &[AtomicI32]) -> i32 {
+    votes.iter().map(|v| v.load(Ordering::Acquire)).sum()
+}

@@ -71,9 +71,19 @@ USAGE: tmtd <command> [options]
 COMMANDS:
   train      Train models on a dataset and save them
              --dataset iris|xor|blobs  --out-dir models/ --epochs N --seed N
-             [--trainer packed|reference] (default packed: clause
-              evaluation through incrementally-maintained packed include
-              words; bit-identical to the reference trainer per seed)
+             [--trainer packed|reference|async|async-indexed]
+             [--threads N] [--config serve.toml]
+             (default packed: clause evaluation through incrementally-
+              maintained packed include words; bit-identical to the
+              reference trainer per seed. async partitions clauses
+              across --threads workers that train against stale
+              relaxed-atomic class sums — near-linear multicore
+              scaling, statistically equivalent rather than
+              bit-reproducible; async-indexed additionally routes
+              feedback through per-worker literal->clause postings so
+              sparse models pay O(touched literals) per update.
+              --config reads trainer/train_threads defaults from
+              serve.toml; the flags override)
   infer      Run one inference through a backend
              --backend <name> --model-dir models/ --sample N
   eval       Evaluate all six architectures (Table IV)
@@ -107,7 +117,10 @@ COMMANDS:
               Runs until a Drain message arrives)
   selfcheck  Train + verify every backend agrees on Iris, that the
              packed trainer reproduces the reference trainer
-             bit-for-bit, and that every available SIMD lane width
+             bit-for-bit, that the async clause-parallel trainer stays
+             within epsilon of the reference tier's accuracy over
+             seeded runs (printing the configured trainer + thread
+             count), and that every available SIMD lane width
              (scalar/portable/neon/avx2/avx512) is bit-exact
   help       Show this text
 
@@ -152,6 +165,11 @@ serve.toml knobs, all under [coordinator]:
                                  addresses; non-empty switches `serve`
                                  to the networked front door
   listen                         default --listen address for `shard`
+  trainer                        training tier: packed|reference|
+                                 async|async-indexed (default packed;
+                                 see `tmtd train`)
+  train_threads                  clause-partition workers for the
+                                 async trainer tiers (>= 1)
   net_connections                pooled TCP connections per remote
                                  shard (>= 1)
   net_heartbeat_ms               shard health-probe period (>= 1;

@@ -9,6 +9,7 @@ pub use json::Json;
 pub use toml::TomlDoc;
 
 use crate::error::Result;
+use crate::tm::async_train::TrainerChoice;
 use crate::tm::compile::CompileMode;
 use crate::tm::simd::SimdChoice;
 use crate::wta::WtaKind;
@@ -68,6 +69,19 @@ pub struct ServeConfig {
     /// Listen address for `tmtd shard` (`host:port`; empty = not a
     /// shard process). Also settable with `tmtd shard --listen`.
     pub listen: String,
+    /// Trainer tier `tmtd train` (and the in-process demo training in
+    /// `serve`/`shard` without pinned models) runs
+    /// (`trainer = "packed" | "reference" | "async" | "async-indexed"`).
+    /// `packed`/`reference` are the deterministic bit-exact tiers;
+    /// `async`/`async-indexed` are the clause-parallel stale-vote tiers
+    /// (`tm::async_train`), nondeterministic under threading and held
+    /// to a statistical accuracy-parity bar instead. Also settable with
+    /// `tmtd train --trainer`.
+    pub trainer: TrainerChoice,
+    /// Worker threads for the async trainer tiers (clause partitions).
+    /// Must be >= 1; ignored by the deterministic tiers. Also settable
+    /// with `tmtd train --threads`.
+    pub train_threads: usize,
     /// TCP connections pooled per remote shard (request parallelism
     /// toward one shard process). Must be >= 1.
     pub net_connections: usize,
@@ -94,6 +108,8 @@ impl Default for ServeConfig {
             compile: CompileMode::default(),
             remote_shards: Vec::new(),
             listen: String::new(),
+            trainer: TrainerChoice::default(),
+            train_threads: 4,
             net_connections: 2,
             net_heartbeat_ms: 500,
         }
@@ -118,6 +134,8 @@ impl ServeConfig {
     /// compile = "prune"
     /// remote_shards = "127.0.0.1:7401,127.0.0.1:7402"
     /// listen = ""
+    /// trainer = "packed"
+    /// train_threads = 4
     /// net_connections = 2
     /// net_heartbeat_ms = 500
     /// ```
@@ -174,6 +192,17 @@ impl ServeConfig {
         }
         if let Some(v) = doc.get("coordinator", "listen") {
             cfg.listen = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.get("coordinator", "trainer") {
+            let name = v.as_str()?;
+            cfg.trainer = TrainerChoice::parse(name).ok_or_else(|| {
+                crate::Error::config(format!(
+                    "unknown trainer {name:?} (expected packed|reference|async|async-indexed)"
+                ))
+            })?;
+        }
+        if let Some(v) = doc.get("coordinator", "train_threads") {
+            cfg.train_threads = non_negative(v, "train_threads")?;
         }
         if let Some(v) = doc.get("coordinator", "net_connections") {
             cfg.net_connections = non_negative(v, "net_connections")?;
@@ -234,6 +263,9 @@ impl ServeConfig {
             return Err(crate::Error::config(
                 "remote_shards entries must be non-empty host:port addresses",
             ));
+        }
+        if self.train_threads == 0 {
+            return Err(crate::Error::config("train_threads must be >= 1"));
         }
         if self.net_connections == 0 {
             return Err(crate::Error::config("net_connections must be >= 1"));
@@ -478,6 +510,38 @@ mod tests {
         // connect failure.
         let err = parse_remote_shards("a:1,nocolon").unwrap_err();
         assert!(err.to_string().contains("host:port"), "{err}");
+    }
+
+    #[test]
+    fn parses_trainer_choices_and_rejects_unknown_names() {
+        for (name, want) in [
+            ("packed", TrainerChoice::Packed),
+            ("reference", TrainerChoice::Reference),
+            ("async", TrainerChoice::Async),
+            ("async-indexed", TrainerChoice::AsyncIndexed),
+        ] {
+            let doc =
+                TomlDoc::parse(&format!("[coordinator]\ntrainer = \"{name}\"\n")).unwrap();
+            assert_eq!(ServeConfig::from_toml(&doc).unwrap().trainer, want, "{name}");
+        }
+        let doc = TomlDoc::parse("[coordinator]\ntrainer = \"gpu\"\n").unwrap();
+        let err = ServeConfig::from_toml(&doc).unwrap_err();
+        assert!(err.to_string().contains("unknown trainer"), "{err}");
+        // The deterministic packed tier stays the default: async is a
+        // throughput opt-in, not a semantics change by surprise.
+        assert_eq!(ServeConfig::default().trainer, TrainerChoice::Packed);
+    }
+
+    #[test]
+    fn rejects_bad_train_threads() {
+        let doc = TomlDoc::parse("[coordinator]\ntrain_threads = 0\n").unwrap();
+        let err = ServeConfig::from_toml(&doc).unwrap_err();
+        assert!(err.to_string().contains("train_threads"), "{err}");
+        let doc = TomlDoc::parse("[coordinator]\ntrain_threads = -3\n").unwrap();
+        assert!(ServeConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[coordinator]\ntrain_threads = 8\n").unwrap();
+        assert_eq!(ServeConfig::from_toml(&doc).unwrap().train_threads, 8);
+        assert!(ServeConfig::default().train_threads >= 1);
     }
 
     #[test]

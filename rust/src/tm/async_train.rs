@@ -1,0 +1,1182 @@
+//! Asynchronous clause-parallel training — the throughput tier.
+//!
+//! The deterministic trainers ([`super::train`] / [`super::cotm_train`])
+//! are the bit-exact bar: packed and reference engines produce identical
+//! models per seed, pinned by golden vectors in two languages. They are
+//! also single-threaded, and the ROADMAP names million-sample training
+//! runs as the hard ceiling. This module is the throughput multiplier:
+//! clause-level parallel training in the style of the massively-parallel
+//! TM architecture (*"Massively Parallel and Asynchronous Tsetlin
+//! Machine Architecture"*, arXiv 2009.04861), where clauses train
+//! against **stale** class-sum votes and the accuracy cost is noise-level.
+//!
+//! # The snapshot contract
+//!
+//! * **Partitioning** — global clause slot `j` is owned by worker
+//!   `j % threads`. Initial TA states are drawn from a single
+//!   `SplitMix64(seed)` in exactly the reference trainer's order
+//!   (class-major, clause order) *before* being moved into per-worker
+//!   owned storage, so partitioning never perturbs initialisation. Each
+//!   worker owns its clauses (and, for CoTM, their weight columns)
+//!   outright — feedback is lock-free because nothing is shared, not
+//!   because anything is cleverly synchronised. No `unsafe`, no slice
+//!   splitting.
+//! * **Stale votes** — the only shared state is one `AtomicI32` per
+//!   class. A worker refreshes its partition's contribution once per
+//!   (sample, touched class) by *differencing*:
+//!   `votes[c].fetch_add(contrib - last[c], Relaxed)`, then reads the
+//!   shared total with a `Relaxed` load for the update probability.
+//!   Between refreshes, other partitions' entries are stale by design —
+//!   that is the paper's asynchronism. All vote traffic is
+//!   `Ordering::Relaxed`: each cell is an independent commutative
+//!   counter, and no control flow depends on cross-cell ordering.
+//!   `Acquire`/`Release` appear **only** at the partition join
+//!   ([`join_votes`], after `thread::scope` has already synchronised),
+//!   where the conservation law `votes[c] == Σ_w last_w[c]` proves no
+//!   update was lost on a partition boundary. Lint rule r9 enforces
+//!   this discipline mechanically.
+//! * **RNG streams** — [`stream_seed`]`(seed, epoch, lane)` derives an
+//!   independent SplitMix64 stream per (epoch, lane) in closed form
+//!   (deliberately not `fork()`: any worker, in either language, can
+//!   derive any stream with no draw-order coupling). Lane 0 is the
+//!   shared sample-order shuffle, lane 1 the negative-class draw —
+//!   every worker replays its own copy, so all workers agree on the two
+//!   touched classes of each sample without communicating — and lanes
+//!   2.. are the per-worker feedback streams.
+//! * **Indexed feedback** — [`TrainerChoice::AsyncIndexed`] evaluates
+//!   owned clauses through per-worker literal→clause postings with
+//!   unsatisfied-literal counters (the [`super::index`] sweep, reusing
+//!   its decrement kernel, but with training-time empty-clause-FIRES
+//!   semantics), kept in sync incrementally after every feedback — an
+//!   update pays O(touched literals), never O(model). Evaluation is
+//!   exact, so `async-indexed` and `async` produce **bit-identical**
+//!   models under the same schedule.
+//!
+//! # Two schedules, one step function
+//!
+//! The threaded epoch (`std::thread::scope` workers racing over the
+//! shared votes) is deliberately nondeterministic and is validated by
+//! the statistical accuracy-parity bar (`tmtd selfcheck`,
+//! `tests/train_equivalence.rs`) plus concurrency-invariant fuzzing.
+//! The deterministic epoch replays the *identical* per-(worker, sample)
+//! step in sample-major round-robin order — bit-reproducible, mirrored
+//! literal-for-literal by `python/asynctrain.py`, and pinned by shared
+//! golden vectors (r5). At `threads == 1` the two schedules coincide,
+//! so the deterministic contract pins the threaded code path too.
+//! See `docs/TRAINING.md` for which bars apply to which tier.
+
+use std::sync::atomic::{AtomicI32, Ordering};
+use std::thread;
+
+use super::bitpack::{pack_literals, WORD_BITS};
+use super::data::Dataset;
+use super::index::{decrement_run, restore_run};
+use super::model::{make_literals, CoTmModel, MultiClassTmModel, TmParams};
+use super::trainer_engine::{type_i, type_ii, ClauseState, TrainerEngine};
+use crate::error::{Error, Result};
+use crate::util::SplitMix64;
+
+/// Which trainer `tmtd train` runs. The first two are the deterministic
+/// bit-exact tiers (see [`TrainerEngine`]); the async tiers trade
+/// bit-reproducibility under threading for core-count throughput.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TrainerChoice {
+    /// Per-literal reference evaluation, single-threaded, bit-exact.
+    Reference,
+    /// Packed-word evaluation, single-threaded, bit-exact (default).
+    #[default]
+    Packed,
+    /// Clause-parallel async trainer, packed evaluation.
+    Async,
+    /// Clause-parallel async trainer, indexed (sweep) evaluation.
+    AsyncIndexed,
+}
+
+impl TrainerChoice {
+    /// Parse a CLI/TOML name (`--trainer packed|reference|async|async-indexed`).
+    pub fn parse(name: &str) -> Option<TrainerChoice> {
+        match name {
+            "reference" | "ref" => Some(TrainerChoice::Reference),
+            "packed" => Some(TrainerChoice::Packed),
+            "async" => Some(TrainerChoice::Async),
+            "async-indexed" => Some(TrainerChoice::AsyncIndexed),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrainerChoice::Reference => "reference",
+            TrainerChoice::Packed => "packed",
+            TrainerChoice::Async => "async",
+            TrainerChoice::AsyncIndexed => "async-indexed",
+        }
+    }
+
+    /// The deterministic engine this choice maps to, when it is one of
+    /// the bit-exact single-threaded tiers.
+    pub fn engine(&self) -> Option<TrainerEngine> {
+        match self {
+            TrainerChoice::Reference => Some(TrainerEngine::Reference),
+            TrainerChoice::Packed => Some(TrainerEngine::Packed),
+            TrainerChoice::Async | TrainerChoice::AsyncIndexed => None,
+        }
+    }
+
+    /// Is this one of the clause-parallel async tiers?
+    pub fn is_async(&self) -> bool {
+        matches!(self, TrainerChoice::Async | TrainerChoice::AsyncIndexed)
+    }
+
+    /// Does the async tier evaluate through the inverted index?
+    pub fn indexed(&self) -> bool {
+        matches!(self, TrainerChoice::AsyncIndexed)
+    }
+}
+
+// ---------------------------------------------------------------------
+// RNG stream derivation.
+// ---------------------------------------------------------------------
+
+/// Stream lane for the shared sample-order shuffle.
+pub const LANE_ORDER: u64 = 0;
+/// Stream lane for the negative-class draw (replayed by every worker).
+pub const LANE_NEG: u64 = 1;
+/// First per-worker feedback lane; worker `w` uses `LANE_WORKER0 + w`.
+pub const LANE_WORKER0: u64 = 2;
+
+/// Fixed odd mixing constants for the stream-seed closed form — part of
+/// the cross-language contract (r5 probe "async stream seeds"):
+/// changing either changes every async golden vector in both languages.
+const STREAM_EPOCH_MIX: u64 = 0xA076_1D64_78BD_642F;
+const STREAM_LANE_MIX: u64 = 0xE703_7ED1_A0B4_28DB;
+
+/// Closed-form per-(epoch, lane) stream seed, mirrored by
+/// `python/asynctrain.py::stream_seed`.
+pub fn stream_seed(seed: u64, epoch: u64, lane: u64) -> u64 {
+    let root = SplitMix64::new(seed).next_u64();
+    let mix = root
+        ^ epoch.wrapping_mul(STREAM_EPOCH_MIX)
+        ^ lane.wrapping_mul(STREAM_LANE_MIX);
+    SplitMix64::new(mix).next_u64()
+}
+
+// ---------------------------------------------------------------------
+// Per-worker training index (the indexed feedback path).
+// ---------------------------------------------------------------------
+
+/// Literal→clause postings over one worker's *owned* clauses, with
+/// persistent unsatisfied-literal counters — the [`super::index`] sweep
+/// structure, sharing its decrement kernel, but with **training-time**
+/// semantics (a clause with zero included literals FIRES, so it can
+/// receive Type I feedback and grow) and incremental maintenance: after
+/// every feedback the changed include bits are replayed into the
+/// postings instead of rebuilding anything.
+#[derive(Debug, Clone)]
+struct TrainIndex {
+    /// `postings[lit]` = local ids of owned clauses including `lit`.
+    /// Mutable (unlike the CSR serving index): feedback edits it.
+    postings: Vec<Vec<u32>>,
+    /// Per-clause included-literal count — the counter reset value.
+    required: Vec<u32>,
+    /// Persistent counters, decremented during a sweep and restored
+    /// afterwards; kept equal to `required` between sweeps.
+    counts: Vec<u32>,
+}
+
+impl TrainIndex {
+    fn build<'a>(states: impl Iterator<Item = &'a ClauseState>, literals: usize) -> TrainIndex {
+        let mut postings = vec![Vec::new(); literals];
+        let mut required = Vec::new();
+        for (ci, cl) in states.enumerate() {
+            let mut req = 0u32;
+            for (w, &word) in cl.include_words().iter().enumerate() {
+                let mut bits = word;
+                while bits != 0 {
+                    let l = w * WORD_BITS + bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    postings[l].push(ci as u32);
+                    req += 1;
+                }
+            }
+            required.push(req);
+        }
+        let counts = required.clone();
+        TrainIndex { postings, required, counts }
+    }
+
+    /// One sweep: fired flags for every owned clause on this sample.
+    /// A counter can never go below zero (a clause receives at most
+    /// `required` decrements — one per included literal that is set).
+    fn fired_flags(&mut self, lits: &[bool], flags: &mut Vec<bool>) {
+        flags.clear();
+        flags.extend(self.required.iter().map(|&r| r == 0));
+        for (l, _) in lits.iter().enumerate().filter(|&(_, &on)| on) {
+            decrement_run(&self.postings[l], &mut self.counts, |c| {
+                flags[c as usize] = true;
+            });
+        }
+        for (l, _) in lits.iter().enumerate().filter(|&(_, &on)| on) {
+            restore_run(&self.postings[l], &mut self.counts);
+        }
+    }
+
+    /// Replay one clause's include-mask change into the postings:
+    /// O(changed bits), which Type I/II bound by O(touched literals).
+    fn apply_diff(&mut self, ci: u32, old_words: &[u64], new_words: &[u64]) {
+        for (w, (&ow, &nw)) in old_words.iter().zip(new_words).enumerate() {
+            let mut diff = ow ^ nw;
+            while diff != 0 {
+                let b = diff.trailing_zeros() as usize;
+                let l = w * WORD_BITS + b;
+                diff &= diff - 1;
+                if (nw >> b) & 1 == 1 {
+                    self.postings[l].push(ci);
+                    self.required[ci as usize] += 1;
+                    self.counts[ci as usize] += 1;
+                } else {
+                    self.postings[l].retain(|&c| c != ci);
+                    self.required[ci as usize] -= 1;
+                    self.counts[ci as usize] -= 1;
+                }
+            }
+        }
+    }
+
+    /// Incrementally-maintained index == a fresh build (posting order
+    /// within a literal is immaterial to the sweep).
+    fn coherent<'a>(&self, states: impl Iterator<Item = &'a ClauseState>) -> bool {
+        let fresh = TrainIndex::build(states, self.postings.len());
+        let sorted = |p: &Vec<u32>| {
+            let mut s = p.clone();
+            s.sort_unstable();
+            s
+        };
+        self.postings.iter().map(sorted).eq(fresh.postings.iter().cloned())
+            && self.required == fresh.required
+            && self.counts == fresh.required
+    }
+}
+
+// ---------------------------------------------------------------------
+// Partitions and the shared per-(worker, sample) step.
+// ---------------------------------------------------------------------
+
+/// One clause moved into a worker's partition: its global (class, slot)
+/// coordinates, training state, and — CoTM only — its per-class weight
+/// column. The owning worker is the only reader and writer.
+#[derive(Debug, Clone)]
+struct OwnedClause {
+    /// Class index (multi-class trainer; 0 for the shared CoTM pool).
+    class: usize,
+    /// Global clause slot within the class (polarity = slot parity).
+    slot: usize,
+    state: ClauseState,
+    /// CoTM per-class weight column; empty for the multi-class trainer.
+    weights: Vec<i32>,
+}
+
+/// One worker's owned clauses plus evaluation scratch.
+#[derive(Debug, Clone)]
+struct Partition {
+    clauses: Vec<OwnedClause>,
+    /// Indexed evaluation state, when the indexed engine is selected.
+    index: Option<TrainIndex>,
+    /// Scratch fired flags, one per owned clause.
+    fired: Vec<bool>,
+}
+
+impl Partition {
+    fn rebuild_index(&mut self, literals: usize) {
+        self.index =
+            Some(TrainIndex::build(self.clauses.iter().map(|oc| &oc.state), literals));
+    }
+
+    fn check(&self, n: u32) -> Result<()> {
+        for oc in &self.clauses {
+            oc.state.check(n)?;
+        }
+        if let Some(index) = &self.index {
+            if !index.coherent(self.clauses.iter().map(|oc| &oc.state)) {
+                return Err(Error::model(
+                    "async trainer index diverged from clause states",
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-worker per-epoch mutable state: the feedback stream, the
+/// replayed negative-class stream, the last published contribution per
+/// class, and reusable scratch.
+struct WorkerCtx {
+    rng: SplitMix64,
+    neg_rng: SplitMix64,
+    last: Vec<i32>,
+    old_words: Vec<u64>,
+}
+
+impl WorkerCtx {
+    fn new(seed: u64, epoch: u64, worker: usize, classes: usize) -> WorkerCtx {
+        WorkerCtx {
+            rng: SplitMix64::new(stream_seed(seed, epoch, LANE_WORKER0 + worker as u64)),
+            neg_rng: SplitMix64::new(stream_seed(seed, epoch, LANE_NEG)),
+            last: vec![0; classes],
+            old_words: Vec::new(),
+        }
+    }
+}
+
+type StepFn = fn(&TmParams, &mut Partition, &mut WorkerCtx, &[AtomicI32], &[bool], &[u64], usize);
+
+/// Publish a partition's fresh contribution for one class and read back
+/// the (stale) global sum — the snapshot refresh. All Relaxed: each
+/// cell is an independent commutative counter.
+#[inline]
+fn publish_and_read(votes: &[AtomicI32], last: &mut [i32], class: usize, contrib: i32) -> i32 {
+    let prev = last[class];
+    votes[class].fetch_add(contrib - prev, Ordering::Relaxed);
+    last[class] = contrib;
+    votes[class].load(Ordering::Relaxed)
+}
+
+/// The two classes a sample touches: its label (positive update) and a
+/// uniformly-sampled other class (negative update). Every worker
+/// replays the same lane-1 stream, so all agree without communicating.
+#[inline]
+fn sample_targets(classes: usize, y: usize, neg_rng: &mut SplitMix64) -> [Option<(usize, bool)>; 2] {
+    let neg = if classes > 1 {
+        let mut c = neg_rng.index(classes - 1);
+        if c >= y {
+            c += 1;
+        }
+        Some((c, false))
+    } else {
+        None
+    };
+    [Some((y, true)), neg]
+}
+
+/// One (worker, sample) step of the multi-class trainer. Multi-class
+/// feedback only touches the positive class's clauses, which are
+/// disjoint from the sampled negative class's — so the indexed sweep
+/// runs once per sample and serves both class updates.
+fn step_mc(
+    p: &TmParams,
+    part: &mut Partition,
+    ctx: &mut WorkerCtx,
+    votes: &[AtomicI32],
+    lits: &[bool],
+    words: &[u64],
+    y: usize,
+) {
+    let (n, s, t) = (p.ta_states, p.specificity, p.threshold);
+    let targets = sample_targets(p.classes, y, &mut ctx.neg_rng);
+    if let Some(index) = part.index.as_mut() {
+        index.fired_flags(lits, &mut part.fired);
+    }
+    for (class, positive) in targets.into_iter().flatten() {
+        if part.index.is_none() {
+            // Packed evaluation of this class's owned clauses only —
+            // evaluation consumes no RNG, so engines stay in lockstep.
+            part.fired.clear();
+            part.fired.resize(part.clauses.len(), false);
+            for (k, oc) in part.clauses.iter().enumerate() {
+                if oc.class == class {
+                    part.fired[k] = oc.state.fires_packed(words);
+                }
+            }
+        }
+        let mut contrib = 0i32;
+        for (k, oc) in part.clauses.iter().enumerate() {
+            if oc.class == class && part.fired[k] {
+                contrib += if oc.slot % 2 == 0 { 1 } else { -1 };
+            }
+        }
+        let sum = publish_and_read(votes, &mut ctx.last, class, contrib).clamp(-t, t);
+        let p_update = if positive {
+            (t - sum) as f64 / (2 * t) as f64
+        } else {
+            (t + sum) as f64 / (2 * t) as f64
+        };
+        let mut index = part.index.take();
+        for (k, oc) in part.clauses.iter_mut().enumerate() {
+            if oc.class != class {
+                continue;
+            }
+            if !ctx.rng.chance(p_update) {
+                continue;
+            }
+            let fired = part.fired[k];
+            if index.is_some() {
+                ctx.old_words.clear();
+                ctx.old_words.extend_from_slice(oc.state.include_words());
+            }
+            let positive_clause = oc.slot % 2 == 0;
+            let touched = if positive == positive_clause {
+                type_i(&mut oc.state, lits, fired, n, s, &mut ctx.rng);
+                true
+            } else if fired {
+                type_ii(&mut oc.state, lits, n);
+                true
+            } else {
+                false
+            };
+            if touched {
+                if let Some(idx) = index.as_mut() {
+                    idx.apply_diff(k as u32, &ctx.old_words, oc.state.include_words());
+                }
+            }
+        }
+        part.index = index;
+    }
+}
+
+/// One (worker, sample) step of the CoTM trainer. Every class update
+/// touches *all* owned clauses, and the reference trainer re-evaluates
+/// clause outputs per class update (the positive update's feedback
+/// changes the shared pool before the negative update) — so evaluation
+/// runs once per class update here, not once per sample.
+fn step_co(
+    p: &TmParams,
+    part: &mut Partition,
+    ctx: &mut WorkerCtx,
+    votes: &[AtomicI32],
+    lits: &[bool],
+    words: &[u64],
+    y: usize,
+) {
+    let (n, s, t) = (p.ta_states, p.specificity, p.threshold);
+    let wmax = p.max_weight;
+    let targets = sample_targets(p.classes, y, &mut ctx.neg_rng);
+    for (class, positive) in targets.into_iter().flatten() {
+        if let Some(index) = part.index.as_mut() {
+            index.fired_flags(lits, &mut part.fired);
+        } else {
+            part.fired.clear();
+            for oc in &part.clauses {
+                part.fired.push(oc.state.fires_packed(words));
+            }
+        }
+        let mut contrib = 0i32;
+        for (k, oc) in part.clauses.iter().enumerate() {
+            if part.fired[k] {
+                contrib += oc.weights[class];
+            }
+        }
+        let sum = publish_and_read(votes, &mut ctx.last, class, contrib).clamp(-t, t);
+        let p_update = if positive {
+            (t - sum) as f64 / (2 * t) as f64
+        } else {
+            (t + sum) as f64 / (2 * t) as f64
+        };
+        let mut index = part.index.take();
+        for (k, oc) in part.clauses.iter_mut().enumerate() {
+            if !ctx.rng.chance(p_update) {
+                continue;
+            }
+            let fired = part.fired[k];
+            let w = oc.weights[class]; // pre-update sign decides the role
+            if index.is_some() {
+                ctx.old_words.clear();
+                ctx.old_words.extend_from_slice(oc.state.include_words());
+            }
+            let touched = if positive {
+                if fired {
+                    oc.weights[class] = (w + 1).min(wmax);
+                    if w >= 0 {
+                        type_i(&mut oc.state, lits, true, n, s, &mut ctx.rng);
+                    } else {
+                        type_ii(&mut oc.state, lits, n);
+                    }
+                    true
+                } else if w >= 0 {
+                    type_i(&mut oc.state, lits, false, n, s, &mut ctx.rng);
+                    true
+                } else {
+                    false
+                }
+            } else if fired {
+                oc.weights[class] = (w - 1).max(-wmax);
+                if w > 0 {
+                    type_ii(&mut oc.state, lits, n);
+                } else {
+                    type_i(&mut oc.state, lits, true, n, s, &mut ctx.rng);
+                }
+                true
+            } else if w < 0 {
+                type_i(&mut oc.state, lits, false, n, s, &mut ctx.rng);
+                true
+            } else {
+                false
+            };
+            if touched {
+                if let Some(idx) = index.as_mut() {
+                    idx.apply_diff(k as u32, &ctx.old_words, oc.state.include_words());
+                }
+            }
+        }
+        part.index = index;
+    }
+}
+
+/// Partition-join conservation check: after every worker has joined,
+/// the shared accumulators must equal the sum of the workers' final
+/// published contributions. A lost update on a partition boundary
+/// (two workers clobbering one cell) shows up as an inequality here.
+/// The `Acquire` loads pair with the `thread::scope` join that already
+/// happened; all vote *traffic* is Relaxed (module snapshot contract).
+fn join_votes(votes: &[AtomicI32], finals: &[Vec<i32>]) -> Result<()> {
+    for (c, vote) in votes.iter().enumerate() {
+        let got = vote.load(Ordering::Acquire);
+        let want: i32 = finals.iter().map(|f| f[c]).sum();
+        if got != want {
+            return Err(Error::model(format!(
+                "async trainer lost updates: class {c} votes {got} != joined {want}"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Run one epoch over the partitions: threaded (`std::thread::scope`,
+/// nondeterministic) or deterministic (sample-major round-robin replay
+/// of the identical step sequence).
+fn run_epoch(
+    params: &TmParams,
+    parts: &mut [Partition],
+    seed: u64,
+    epoch: u64,
+    xs: &[Vec<bool>],
+    ys: &[usize],
+    deterministic: bool,
+    step: StepFn,
+) -> Result<()> {
+    if xs.len() != ys.len() {
+        return Err(Error::model("training features/labels length mismatch"));
+    }
+    let mut order: Vec<usize> = (0..xs.len()).collect();
+    SplitMix64::new(stream_seed(seed, epoch, LANE_ORDER)).shuffle(&mut order);
+    let lits_all: Vec<Vec<bool>> = xs.iter().map(|x| make_literals(x)).collect();
+    let words_all: Vec<Vec<u64>> = xs.iter().map(|x| pack_literals(x)).collect();
+    let votes: Vec<AtomicI32> = (0..params.classes).map(|_| AtomicI32::new(0)).collect();
+    let finals: Vec<Vec<i32>> = if deterministic {
+        let mut ctxs: Vec<WorkerCtx> = (0..parts.len())
+            .map(|w| WorkerCtx::new(seed, epoch, w, params.classes))
+            .collect();
+        for &i in &order {
+            for (w, part) in parts.iter_mut().enumerate() {
+                step(params, part, &mut ctxs[w], &votes, &lits_all[i], &words_all[i], ys[i]);
+            }
+        }
+        ctxs.into_iter().map(|c| c.last).collect()
+    } else {
+        let (order, lits_all, words_all, votes_ref) =
+            (&order, &lits_all, &words_all, &votes);
+        thread::scope(|scope| {
+            let handles: Vec<_> = parts
+                .iter_mut()
+                .enumerate()
+                .map(|(w, part)| {
+                    scope.spawn(move || {
+                        let mut ctx = WorkerCtx::new(seed, epoch, w, params.classes);
+                        for &i in order {
+                            step(params, part, &mut ctx, votes_ref, &lits_all[i], &words_all[i], ys[i]);
+                        }
+                        ctx.last
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .map_err(|_| Error::model("async trainer worker panicked"))
+                })
+                .collect::<Result<Vec<Vec<i32>>>>()
+        })?
+    };
+    join_votes(&votes, &finals)
+}
+
+fn validate_async(params: &TmParams, threads: usize) -> Result<()> {
+    params.validate()?;
+    if threads == 0 {
+        return Err(Error::config("async trainer needs at least 1 thread"));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// The trainers.
+// ---------------------------------------------------------------------
+
+/// Clause-parallel multi-class trainer (see the module contract).
+pub struct AsyncMultiClassTrainer {
+    params: TmParams,
+    seed: u64,
+    epochs_run: u64,
+    parts: Vec<Partition>,
+}
+
+impl AsyncMultiClassTrainer {
+    pub fn new(
+        params: TmParams,
+        seed: u64,
+        threads: usize,
+        indexed: bool,
+    ) -> Result<AsyncMultiClassTrainer> {
+        validate_async(&params, threads)?;
+        if params.clauses % 2 != 0 {
+            return Err(Error::model(format!(
+                "multi-class TM needs an even clause count, got {}",
+                params.clauses
+            )));
+        }
+        let n = params.ta_states;
+        let literals = params.literals();
+        let mut rng = SplitMix64::new(seed);
+        let mut parts: Vec<Partition> = (0..threads)
+            .map(|_| Partition { clauses: Vec::new(), index: None, fired: Vec::new() })
+            .collect();
+        for class in 0..params.classes {
+            for slot in 0..params.clauses {
+                let state = ClauseState::init(literals, n, &mut rng);
+                parts[slot % threads].clauses.push(OwnedClause {
+                    class,
+                    slot,
+                    state,
+                    weights: Vec::new(),
+                });
+            }
+        }
+        if indexed {
+            for part in &mut parts {
+                part.rebuild_index(literals);
+            }
+        }
+        Ok(AsyncMultiClassTrainer { params, seed, epochs_run: 0, parts })
+    }
+
+    pub fn threads(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// One threaded (nondeterministic) epoch.
+    pub fn epoch(&mut self, xs: &[Vec<bool>], ys: &[usize]) -> Result<()> {
+        self.run(xs, ys, false)
+    }
+
+    /// One deterministic round-robin epoch (the mirrored contract).
+    pub fn epoch_deterministic(&mut self, xs: &[Vec<bool>], ys: &[usize]) -> Result<()> {
+        self.run(xs, ys, true)
+    }
+
+    fn run(&mut self, xs: &[Vec<bool>], ys: &[usize], deterministic: bool) -> Result<()> {
+        run_epoch(
+            &self.params,
+            &mut self.parts,
+            self.seed,
+            self.epochs_run,
+            xs,
+            ys,
+            deterministic,
+            step_mc,
+        )?;
+        self.epochs_run += 1;
+        Ok(())
+    }
+
+    /// Train with threaded epochs, check invariants, export.
+    pub fn train(
+        &mut self,
+        xs: &[Vec<bool>],
+        ys: &[usize],
+        epochs: usize,
+    ) -> Result<MultiClassTmModel> {
+        for _ in 0..epochs {
+            self.epoch(xs, ys)?;
+        }
+        self.check_invariants()?;
+        Ok(self.export())
+    }
+
+    /// Train with deterministic epochs (golden-vector path).
+    pub fn train_deterministic(
+        &mut self,
+        xs: &[Vec<bool>],
+        ys: &[usize],
+        epochs: usize,
+    ) -> Result<MultiClassTmModel> {
+        for _ in 0..epochs {
+            self.epoch_deterministic(xs, ys)?;
+        }
+        self.check_invariants()?;
+        Ok(self.export())
+    }
+
+    /// Scatter the owned clauses back into model (class, slot) order.
+    pub fn export(&self) -> MultiClassTmModel {
+        let n = self.params.ta_states;
+        let mut model = MultiClassTmModel::zeroed(self.params.clone());
+        for part in &self.parts {
+            for oc in &part.clauses {
+                model.clauses[oc.class][oc.slot] = oc.state.include_mask(n);
+            }
+        }
+        model
+    }
+
+    /// TA bounds, incremental-mask coherence, and (indexed) index
+    /// coherence across every partition.
+    pub fn check_invariants(&self) -> Result<()> {
+        for part in &self.parts {
+            part.check(self.params.ta_states)?;
+        }
+        Ok(())
+    }
+}
+
+/// Clause-parallel coalesced trainer. Weight column `j` travels with
+/// clause `j`: the owning worker is the only writer of both.
+pub struct AsyncCoTmTrainer {
+    params: TmParams,
+    seed: u64,
+    epochs_run: u64,
+    parts: Vec<Partition>,
+}
+
+impl AsyncCoTmTrainer {
+    pub fn new(
+        params: TmParams,
+        seed: u64,
+        threads: usize,
+        indexed: bool,
+    ) -> Result<AsyncCoTmTrainer> {
+        validate_async(&params, threads)?;
+        let n = params.ta_states;
+        let literals = params.literals();
+        let mut rng = SplitMix64::new(seed);
+        let mut parts: Vec<Partition> = (0..threads)
+            .map(|_| Partition { clauses: Vec::new(), index: None, fired: Vec::new() })
+            .collect();
+        for slot in 0..params.clauses {
+            let state = ClauseState::init(literals, n, &mut rng);
+            // Weights start at +/-1 alternating per class (symmetry
+            // breaking), exactly the deterministic trainer's init.
+            let weights = (0..params.classes)
+                .map(|k| if (slot + k) % 2 == 0 { 1 } else { -1 })
+                .collect();
+            parts[slot % threads].clauses.push(OwnedClause { class: 0, slot, state, weights });
+        }
+        if indexed {
+            for part in &mut parts {
+                part.rebuild_index(literals);
+            }
+        }
+        Ok(AsyncCoTmTrainer { params, seed, epochs_run: 0, parts })
+    }
+
+    pub fn threads(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn epoch(&mut self, xs: &[Vec<bool>], ys: &[usize]) -> Result<()> {
+        self.run(xs, ys, false)
+    }
+
+    pub fn epoch_deterministic(&mut self, xs: &[Vec<bool>], ys: &[usize]) -> Result<()> {
+        self.run(xs, ys, true)
+    }
+
+    fn run(&mut self, xs: &[Vec<bool>], ys: &[usize], deterministic: bool) -> Result<()> {
+        run_epoch(
+            &self.params,
+            &mut self.parts,
+            self.seed,
+            self.epochs_run,
+            xs,
+            ys,
+            deterministic,
+            step_co,
+        )?;
+        self.epochs_run += 1;
+        Ok(())
+    }
+
+    pub fn train(
+        &mut self,
+        xs: &[Vec<bool>],
+        ys: &[usize],
+        epochs: usize,
+    ) -> Result<CoTmModel> {
+        for _ in 0..epochs {
+            self.epoch(xs, ys)?;
+        }
+        self.check_invariants()?;
+        Ok(self.export())
+    }
+
+    pub fn train_deterministic(
+        &mut self,
+        xs: &[Vec<bool>],
+        ys: &[usize],
+        epochs: usize,
+    ) -> Result<CoTmModel> {
+        for _ in 0..epochs {
+            self.epoch_deterministic(xs, ys)?;
+        }
+        self.check_invariants()?;
+        Ok(self.export())
+    }
+
+    pub fn export(&self) -> CoTmModel {
+        let n = self.params.ta_states;
+        let mut model = CoTmModel::zeroed(self.params.clone());
+        for part in &self.parts {
+            for oc in &part.clauses {
+                model.clauses[oc.slot] = oc.state.include_mask(n);
+                for (k, &w) in oc.weights.iter().enumerate() {
+                    model.weights[k][oc.slot] = w;
+                }
+            }
+        }
+        model
+    }
+
+    pub fn check_invariants(&self) -> Result<()> {
+        for part in &self.parts {
+            part.check(self.params.ta_states)?;
+            for oc in &part.clauses {
+                if let Some(&bad) =
+                    oc.weights.iter().find(|w| w.abs() > self.params.max_weight)
+                {
+                    return Err(Error::model(format!(
+                        "CoTM weight {bad} outside +/-{}",
+                        self.params.max_weight
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dataset-level conveniences (CLI / selfcheck / bench entry points).
+// ---------------------------------------------------------------------
+
+/// Train a multi-class TM with the async tier (threaded epochs).
+pub fn train_multiclass_async(
+    params: TmParams,
+    d: &Dataset,
+    epochs: usize,
+    seed: u64,
+    threads: usize,
+    indexed: bool,
+) -> Result<MultiClassTmModel> {
+    let mut tr = AsyncMultiClassTrainer::new(params, seed, threads, indexed)?;
+    tr.train(&d.features, &d.labels, epochs)
+}
+
+/// Train a CoTM with the async tier (threaded epochs).
+pub fn train_cotm_async(
+    params: TmParams,
+    d: &Dataset,
+    epochs: usize,
+    seed: u64,
+    threads: usize,
+    indexed: bool,
+) -> Result<CoTmModel> {
+    let mut tr = AsyncCoTmTrainer::new(params, seed, threads, indexed)?;
+    tr.train(&d.features, &d.labels, epochs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+    use crate::tm::model::ClauseMask;
+
+    /// Closed-form dataset shared verbatim with the Python tests.
+    fn synth(f: usize, n_samples: usize, classes: usize) -> Dataset {
+        let features = (0..n_samples)
+            .map(|s| (0..f).map(|i| (i * i + 3 * i * s + 2 * s) % 7 < 3).collect())
+            .collect();
+        let labels = (0..n_samples).map(|s| s % classes).collect();
+        Dataset { features, labels, classes, name: "synth".into() }
+    }
+
+    fn mask_bits(m: &ClauseMask) -> String {
+        m.include.iter().map(|&b| if b { '1' } else { '0' }).collect()
+    }
+
+    fn mc_params() -> TmParams {
+        TmParams {
+            features: 5,
+            clauses: 4,
+            classes: 2,
+            ta_states: 8,
+            threshold: 3,
+            specificity: 3.0,
+            max_weight: 7,
+        }
+    }
+
+    fn co_params() -> TmParams {
+        TmParams {
+            features: 5,
+            clauses: 5,
+            classes: 3,
+            ta_states: 8,
+            threshold: 3,
+            specificity: 3.0,
+            max_weight: 3,
+        }
+    }
+
+    #[test]
+    fn trainer_choice_parse_names() {
+        assert_eq!(TrainerChoice::parse("packed"), Some(TrainerChoice::Packed));
+        assert_eq!(TrainerChoice::parse("reference"), Some(TrainerChoice::Reference));
+        assert_eq!(TrainerChoice::parse("ref"), Some(TrainerChoice::Reference));
+        assert_eq!(TrainerChoice::parse("async"), Some(TrainerChoice::Async));
+        assert_eq!(
+            TrainerChoice::parse("async-indexed"),
+            Some(TrainerChoice::AsyncIndexed)
+        );
+        assert_eq!(TrainerChoice::parse("golden"), None);
+        assert_eq!(TrainerChoice::default(), TrainerChoice::Packed);
+        assert_eq!(TrainerChoice::Async.name(), "async");
+        assert_eq!(TrainerChoice::AsyncIndexed.name(), "async-indexed");
+        assert!(TrainerChoice::Async.is_async() && !TrainerChoice::Packed.is_async());
+        assert!(TrainerChoice::AsyncIndexed.indexed() && !TrainerChoice::Async.indexed());
+        assert_eq!(TrainerChoice::Packed.engine(), Some(TrainerEngine::Packed));
+        assert_eq!(TrainerChoice::Reference.engine(), Some(TrainerEngine::Reference));
+        assert_eq!(TrainerChoice::Async.engine(), None);
+    }
+
+    #[test]
+    fn stream_seed_matches_python_mirror() {
+        // Pinned identically in python/tests/test_asynctrain.py
+        // (GOLDEN_STREAMS); the r5 probe compares the constants.
+        let golden_streams = [
+            0x57E1_FABA_6510_7204u64, // stream_seed(42, 0, 0)
+            0x0778_2989_815C_29E4,    // stream_seed(42, 0, 1)
+            0x98B3_AA39_0587_5FB8,    // stream_seed(42, 0, 2)
+            0xE704_EB6B_C0A1_009A,    // stream_seed(42, 0, 3)
+            0x5A0E_CCCE_1EDF_2C68,    // stream_seed(42, 1, 0)
+            0x8C74_E472_FFA0_9510,    // stream_seed(42, 2, 5)
+            0xBCBA_FD09_516C_DD67,    // stream_seed(7, 0, 2)
+            0x4A03_5AA2_D920_6AF7,    // stream_seed(9, 3, 4)
+        ];
+        let triples =
+            [(42, 0, 0), (42, 0, 1), (42, 0, 2), (42, 0, 3), (42, 1, 0), (42, 2, 5), (7, 0, 2), (9, 3, 4)];
+        for ((seed, epoch, lane), want) in triples.into_iter().zip(golden_streams) {
+            assert_eq!(
+                stream_seed(seed, epoch, lane),
+                want,
+                "stream_seed({seed}, {epoch}, {lane})"
+            );
+        }
+        // Distinct lanes/epochs give distinct streams on the goldens.
+        let mut seen: Vec<u64> = golden_streams.to_vec();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), golden_streams.len());
+    }
+
+    #[test]
+    fn async_multiclass_golden_matches_python_mirror() {
+        // threads=2, deterministic schedule, 3 epochs, seed 42 —
+        // generated by python/asynctrain.py, asserted identically in
+        // python/tests/test_asynctrain.py (GOLDEN_ASYNC_MC_MASKS).
+        let golden_async = [
+            ["0010001001", "0000100001", "0000110000", "0100110000"], // class 0
+            ["0000110000", "0110101010", "0000000000", "1001000001"], // class 1
+        ];
+        let d = synth(5, 12, 2);
+        for indexed in [false, true] {
+            let mut tr = AsyncMultiClassTrainer::new(mc_params(), 42, 2, indexed).unwrap();
+            let m = tr.train_deterministic(&d.features, &d.labels, 3).unwrap();
+            for (k, class) in m.clauses.iter().enumerate() {
+                for (j, cl) in class.iter().enumerate() {
+                    assert_eq!(
+                        mask_bits(cl),
+                        golden_async[k][j],
+                        "indexed={indexed} class {k} clause {j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn async_cotm_golden_matches_python_mirror() {
+        // threads=2, deterministic schedule, 3 epochs, seed 43 —
+        // shared with test_asynctrain.py (GOLDEN_ASYNC_CO_*).
+        let golden_async_co = [
+            "0000000001",
+            "1000000100",
+            "0000001100",
+            "0000010010",
+            "0100010100",
+        ];
+        let golden_async_co_weights = vec![
+            vec![1, -2, 2, -1, 2],
+            vec![0, 1, 0, 0, -1],
+            vec![0, 0, 1, 0, 0],
+        ];
+        let d = synth(5, 12, 3);
+        for indexed in [false, true] {
+            let mut tr = AsyncCoTmTrainer::new(co_params(), 43, 2, indexed).unwrap();
+            let m = tr.train_deterministic(&d.features, &d.labels, 3).unwrap();
+            for (j, cl) in m.clauses.iter().enumerate() {
+                assert_eq!(mask_bits(cl), golden_async_co[j], "indexed={indexed} clause {j}");
+            }
+            assert_eq!(m.weights, golden_async_co_weights, "indexed={indexed}");
+        }
+    }
+
+    #[test]
+    fn threads_one_threaded_equals_deterministic() {
+        // With a single worker the threaded schedule degenerates to the
+        // deterministic one — same step sequence, same model, bit for
+        // bit. This pins the threaded code path to the mirrored contract.
+        let d = synth(6, 14, 2);
+        let p = TmParams { features: 6, ..mc_params() };
+        let mut threaded = AsyncMultiClassTrainer::new(p.clone(), 11, 1, false).unwrap();
+        let mut replay = AsyncMultiClassTrainer::new(p, 11, 1, false).unwrap();
+        let a = threaded.train(&d.features, &d.labels, 3).unwrap();
+        let b = replay.train_deterministic(&d.features, &d.labels, 3).unwrap();
+        assert_eq!(a, b);
+        let dc = synth(6, 14, 3);
+        let pc = TmParams { features: 6, ..co_params() };
+        let mut threaded = AsyncCoTmTrainer::new(pc.clone(), 11, 1, true).unwrap();
+        let mut replay = AsyncCoTmTrainer::new(pc, 11, 1, true).unwrap();
+        let a = threaded.train(&dc.features, &dc.labels, 3).unwrap();
+        let b = replay.train_deterministic(&dc.features, &dc.labels, 3).unwrap();
+        assert_eq!(a.clauses, b.clauses);
+        assert_eq!(a.weights, b.weights);
+    }
+
+    #[test]
+    fn indexed_equals_packed_under_deterministic_schedule() {
+        // Evaluation is exact, so the two async engines are bit-identical
+        // whenever the schedule is — across shapes and thread counts.
+        prop("async indexed vs packed", 12, |g| {
+            let f = g.usize(1..12);
+            let clauses = 2 * g.usize(1..5);
+            let classes = g.usize(1..4);
+            let threads = g.usize(1..5);
+            let seed = g.u64(0..1 << 40);
+            let p = TmParams {
+                features: f,
+                clauses,
+                classes,
+                ta_states: 8,
+                threshold: 3,
+                specificity: 3.0,
+                max_weight: 3,
+            };
+            let d = synth(f, 10, classes);
+            let mut packed =
+                AsyncMultiClassTrainer::new(p.clone(), seed, threads, false).unwrap();
+            let mut indexed =
+                AsyncMultiClassTrainer::new(p.clone(), seed, threads, true).unwrap();
+            let a = packed.train_deterministic(&d.features, &d.labels, 2).unwrap();
+            let b = indexed.train_deterministic(&d.features, &d.labels, 2).unwrap();
+            assert_eq!(a, b, "multiclass f={f} threads={threads}");
+            let mut packed = AsyncCoTmTrainer::new(p.clone(), seed, threads, false).unwrap();
+            let mut indexed = AsyncCoTmTrainer::new(p, seed, threads, true).unwrap();
+            let a = packed.train_deterministic(&d.features, &d.labels, 2).unwrap();
+            let b = indexed.train_deterministic(&d.features, &d.labels, 2).unwrap();
+            assert_eq!(a.clauses, b.clauses, "cotm f={f} threads={threads}");
+            assert_eq!(a.weights, b.weights, "cotm f={f} threads={threads}");
+        });
+    }
+
+    #[test]
+    fn concurrency_invariants_hold_after_threaded_epochs() {
+        // The real (racing) schedule: TA counters stay in bounds, the
+        // incremental include masks equal a recompute after join, the
+        // per-worker indexes stay coherent, and join_votes' conservation
+        // law holds (a lost update fails the epoch itself).
+        for threads in [2, 3, 8] {
+            for indexed in [false, true] {
+                let d = synth(7, 20, 3);
+                let p = TmParams {
+                    features: 7,
+                    clauses: 8,
+                    classes: 3,
+                    ta_states: 16,
+                    threshold: 4,
+                    specificity: 3.0,
+                    max_weight: 4,
+                };
+                let mut tr =
+                    AsyncMultiClassTrainer::new(p.clone(), 99, threads, indexed).unwrap();
+                tr.train(&d.features, &d.labels, 4).unwrap();
+                tr.check_invariants().unwrap();
+                let mut co = AsyncCoTmTrainer::new(p, 99, threads, indexed).unwrap();
+                co.train(&d.features, &d.labels, 4).unwrap();
+                co.check_invariants().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn more_threads_than_clauses_leaves_empty_partitions_working() {
+        let d = synth(4, 8, 2);
+        let p = TmParams { features: 4, clauses: 2, ..mc_params() };
+        let mut tr = AsyncMultiClassTrainer::new(p, 3, 6, true).unwrap();
+        assert_eq!(tr.threads(), 6);
+        let m = tr.train(&d.features, &d.labels, 2).unwrap();
+        m.validate().unwrap();
+        tr.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn rejects_invalid_configurations() {
+        assert!(AsyncMultiClassTrainer::new(mc_params(), 1, 0, false).is_err());
+        let odd = TmParams { clauses: 3, ..mc_params() };
+        assert!(AsyncMultiClassTrainer::new(odd, 1, 2, false).is_err());
+        assert!(AsyncCoTmTrainer::new(co_params(), 1, 0, true).is_err());
+        let mut tr = AsyncMultiClassTrainer::new(mc_params(), 1, 2, false).unwrap();
+        let d = synth(5, 6, 2);
+        assert!(tr.epoch(&d.features, &d.labels[..3]).is_err());
+    }
+
+    #[test]
+    fn train_index_incremental_maintenance_matches_rebuild() {
+        prop("train index diff coherence", 30, |g| {
+            let f = g.usize(1..20);
+            let n = 8u32;
+            let mut rng = SplitMix64::new(g.u64(0..u64::MAX));
+            let mut states: Vec<ClauseState> =
+                (0..g.usize(1..6)).map(|_| ClauseState::init(2 * f, n, &mut rng)).collect();
+            let mut index = TrainIndex::build(states.iter(), 2 * f);
+            let mut flags = Vec::new();
+            for _ in 0..40 {
+                let x: Vec<bool> = (0..f).map(|_| g.bool()).collect();
+                let lits = make_literals(&x);
+                index.fired_flags(&lits, &mut flags);
+                // Fired flags match direct training-time evaluation.
+                for (ci, cl) in states.iter().enumerate() {
+                    assert_eq!(flags[ci], cl.fires_reference(&lits, n), "clause {ci}");
+                }
+                // Random feedback, replayed into the index.
+                let ci = g.usize(0..states.len());
+                let old = states[ci].include_words().to_vec();
+                if g.bool() {
+                    type_i(&mut states[ci], &lits, g.bool(), n, 3.0, &mut rng);
+                } else {
+                    type_ii(&mut states[ci], &lits, n);
+                }
+                index.apply_diff(ci as u32, &old, states[ci].include_words());
+                assert!(index.coherent(states.iter()));
+            }
+        });
+    }
+}

@@ -7,13 +7,15 @@
 //! engine builds from ([`compile`]), training (multi-class TM and Coalesced TM, both with a shared
 //! feedback core and packed-evaluation or reference clause engines via
 //! [`trainer_engine`]), feature booleanisation, datasets, and model
-//! (de)serialisation.
+//! (de)serialisation. [`async_train`] adds the clause-parallel
+//! stale-vote training tier on top of the same feedback core.
 //!
 //! This is the ML-algorithm layer the paper's hardware implements. The
 //! software inference here is the L3-local golden reference (checked
 //! against the AOT-compiled L2 JAX model and against every hardware
 //! architecture in `tests/equivalence.rs`, mirroring §III-A).
 
+pub mod async_train;
 pub mod bitpack;
 pub mod booleanize;
 pub mod compile;
@@ -30,6 +32,10 @@ pub mod simd;
 pub mod train;
 pub mod trainer_engine;
 
+pub use async_train::{
+    train_cotm_async, train_multiclass_async, AsyncCoTmTrainer, AsyncMultiClassTrainer,
+    TrainerChoice,
+};
 pub use bitpack::{BitSlicedBatch, PackedClause};
 pub use booleanize::Booleanizer;
 pub use compile::{

@@ -6,10 +6,10 @@
 #
 #   scripts/bench_record.sh [label] [out-file]
 #
-# The output file defaults to BENCH_PR9.json and can be overridden by
+# The output file defaults to BENCH_PR10.json and can be overridden by
 # the second positional argument or the BENCH_OUT environment variable
 # (argument wins). Earlier PRs recorded to BENCH_PR3.json ..
-# BENCH_PR8.json; those files stay as recorded history.
+# BENCH_PR9.json; those files stay as recorded history.
 #
 # Needs a Rust toolchain; the CI image carries none (see ROADMAP.md), so
 # run this on a toolchain-equipped machine and commit the appended entry.
@@ -17,7 +17,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 LABEL="${1:-$(git rev-parse --short HEAD 2>/dev/null || echo unlabelled)}"
-OUT="${2:-${BENCH_OUT:-BENCH_PR9.json}}"
+OUT="${2:-${BENCH_OUT:-BENCH_PR10.json}}"
 
 if ! command -v cargo >/dev/null 2>&1; then
     echo "bench_record.sh: cargo not found on PATH." >&2
@@ -46,6 +46,10 @@ echo "== cargo bench --bench train_packed_vs_ref =="
 TRAIN_OUT="$(cargo bench --bench train_packed_vs_ref)"
 echo "$TRAIN_OUT"
 
+echo "== cargo bench --bench train_async_scaling =="
+ASYNC_OUT="$(cargo bench --bench train_async_scaling)"
+echo "$ASYNC_OUT"
+
 echo "== cargo bench --bench simd_vs_scalar =="
 SIMD_OUT="$(cargo bench --bench simd_vs_scalar)"
 echo "$SIMD_OUT"
@@ -62,7 +66,7 @@ if ! command -v python3 >/dev/null 2>&1; then
 fi
 LABEL="$LABEL" COMPILE_OUT="$COMPILE_OUT" COMPRESSED_OUT="$COMPRESSED_OUT" \
 INDEXED_OUT="$INDEXED_OUT" BITPAR_OUT="$BITPAR_OUT" TRAIN_OUT="$TRAIN_OUT" \
-SIMD_OUT="$SIMD_OUT" NET_OUT="$NET_OUT" OUT="$OUT" \
+ASYNC_OUT="$ASYNC_OUT" SIMD_OUT="$SIMD_OUT" NET_OUT="$NET_OUT" OUT="$OUT" \
 python3 - <<'EOF'
 import datetime
 import json
@@ -78,6 +82,7 @@ entry = {
     "indexed_vs_bitpar": os.environ["INDEXED_OUT"].splitlines(),
     "bitparallel_vs_ref": os.environ["BITPAR_OUT"].splitlines(),
     "train_packed_vs_ref": os.environ["TRAIN_OUT"].splitlines(),
+    "train_async_scaling": os.environ["ASYNC_OUT"].splitlines(),
     "simd_vs_scalar": os.environ["SIMD_OUT"].splitlines(),
     "net_loopback": os.environ["NET_OUT"].splitlines(),
 }

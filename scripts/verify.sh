@@ -7,7 +7,8 @@
 # toolchain-less enforcement of the invariant catalog in
 # docs/INVARIANTS.md: lock discipline, panic containment, slot
 # accounting, unsafe audit, golden-vector parity, registry coverage,
-# the panic-path ratchet, the compile-pipeline shape), then the Python
+# the panic-path ratchet, the compile-pipeline shape, the async
+# atomic-ordering discipline), then the Python
 # tier (JAX kernels, the consistent-hash-ring
 # mirror, the inverted-index counter-sweep mirror, the compressed
 # include-list-walk mirror with its shared golden vectors, the
@@ -15,9 +16,13 @@
 # tiled bit-sliced batch-layout mirror, the model-compile-pass
 # mirror with its prune/reorder/plan oracles, and the wire-protocol
 # mirror (python/netproto.py: shared golden frames + adversarial
-# decoding + socket-pair streaming) — so toolchain-less images
+# decoding + socket-pair streaming), and the async clause-parallel
+# trainer mirror (python/asynctrain.py: stream-seed + trained-model
+# goldens, indexed==packed fuzz, and the statistical accuracy-parity
+# bar) — so toolchain-less images
 # still validate the shard-routing, indexed-inference,
-# compressed-inference, packed-training, SIMD-tile, model-compile and
+# compressed-inference, packed-training, async-training, SIMD-tile,
+# model-compile and
 # network-framing algorithms), then
 # cargo build --release && cargo test -q, the shard / coordinator /
 # networked-serving / indexed / compressed / compile / engine-matrix /
@@ -100,6 +105,10 @@ cargo test -q --lib tm::trainer_engine
 cargo test -q --lib tm::train::
 cargo test -q --lib tm::cotm_train
 cargo test -q --test train_equivalence
+
+echo "== async clause-parallel trainer (concurrency invariants + accuracy parity) =="
+cargo test -q --lib tm::async_train
+cargo test -q --test train_equivalence async
 
 echo "== SIMD lane suites (dispatch bit-identity across lane widths) =="
 cargo test -q --lib tm::simd

@@ -16,14 +16,24 @@
 //! and a trained-Iris model is pushed end-to-end through the serving
 //! engines (scalar reference, bit-parallel, inverted-index) to show
 //! accuracy parity is preserved all the way to the tiers users hit.
+//!
+//! PR 10 extends the suite to the async clause-parallel tier, whose
+//! bar is deliberately split: structural invariants must hold under
+//! real concurrency (TA bounds, mask == recompute after the partition
+//! join, vote conservation — checked inside every epoch), the
+//! `--threads 1` degenerate case must equal the deterministic
+//! schedule bit-for-bit, indexed feedback must equal packed feedback
+//! whenever the schedule is deterministic, and accuracy (not bits)
+//! must land within epsilon of the reference tier over seeded runs.
 
 use tsetlin_td::testutil::prop;
 use tsetlin_td::tm::cotm_train::{train_cotm_with, CoTmTrainer};
 use tsetlin_td::tm::infer::{cotm_accuracy, multiclass_accuracy, predict_argmax};
 use tsetlin_td::tm::train::{train_multiclass_with, MultiClassTrainer};
 use tsetlin_td::tm::{
-    data, BatchEngine, BitParallelCotm, BitParallelMulticlass, Dataset, IndexedCotm,
-    IndexedMulticlass, TmParams, TrainerEngine,
+    data, train_multiclass_async, AsyncCoTmTrainer, AsyncMultiClassTrainer, BatchEngine,
+    BitParallelCotm, BitParallelMulticlass, Dataset, IndexedCotm, IndexedMulticlass, TmParams,
+    TrainerEngine,
 };
 
 /// The acceptance sweep: literal-space word boundaries.
@@ -181,4 +191,138 @@ fn trained_iris_parity_end_to_end_through_serving_engines() {
     assert_eq!(acc_through(&|x| ix_mc.class_sums(x)), want_mc, "indexed multiclass");
     assert_eq!(acc_through(&|x| bp_co.class_sums(x)), want_co, "bitpar cotm");
     assert_eq!(acc_through(&|x| ix_co.class_sums(x)), want_co, "indexed cotm");
+}
+
+// ---------------------------------------------------------------------------
+// The async clause-parallel tier (PR 10).
+
+#[test]
+fn async_trainer_invariants_hold_under_real_concurrency() {
+    // Threaded (racing) epochs across random shapes, thread counts and
+    // both feedback engines: every TA in 1..=2N, every incremental
+    // include mask equal to the recompute after the join, every
+    // per-worker index coherent. The vote conservation law (no lost
+    // updates on partition boundaries) is asserted inside epoch()
+    // itself — a violated law fails the Result, not just the check.
+    prop("async invariants under threads", 10, |g| {
+        let f = g.usize(1..40);
+        let classes = g.usize(2..4);
+        let clauses = 2 * g.usize(1..5);
+        let threads = g.usize(1..9);
+        let indexed = g.bool();
+        let seed = g.u64(0..u64::MAX);
+        let d = data::prototype_blobs(24, f, classes, 0.2, g.u64(0..u64::MAX));
+        let p = TmParams {
+            features: f,
+            clauses,
+            classes,
+            ta_states: 16,
+            threshold: 3,
+            specificity: 3.0,
+            max_weight: 4,
+        };
+        let mut mc = AsyncMultiClassTrainer::new(p.clone(), seed, threads, indexed).unwrap();
+        let mut co = AsyncCoTmTrainer::new(p, seed, threads, indexed).unwrap();
+        for _ in 0..g.usize(1..4) {
+            mc.epoch(&d.features, &d.labels).expect("multiclass epoch");
+            mc.check_invariants().expect("multiclass async invariants");
+            co.epoch(&d.features, &d.labels).expect("cotm epoch");
+            co.check_invariants().expect("cotm async invariants");
+        }
+    });
+}
+
+#[test]
+fn async_threads_one_degenerate_case_equals_deterministic_schedule() {
+    // `--threads 1` regression bar: with a single worker the threaded
+    // schedule IS the deterministic round-robin schedule (one worker,
+    // sample-major order, same RNG streams), so the two paths must
+    // produce bit-identical models — the async tier at one thread has
+    // reference semantics, not merely reference-like statistics.
+    for &f in &[5usize, 33, 64] {
+        let d = blobs(f, 3, f as u64 + 7);
+        let p = params(f, 6, 3);
+        for &indexed in &[false, true] {
+            let mut a = AsyncMultiClassTrainer::new(p.clone(), 11, 1, indexed).unwrap();
+            let mut b = AsyncMultiClassTrainer::new(p.clone(), 11, 1, indexed).unwrap();
+            let ma = a.train(&d.features, &d.labels, 3).unwrap();
+            let mb = b.train_deterministic(&d.features, &d.labels, 3).unwrap();
+            assert_eq!(ma, mb, "multiclass f={f} indexed={indexed}");
+            let mut ca = AsyncCoTmTrainer::new(p.clone(), 12, 1, indexed).unwrap();
+            let mut cb = AsyncCoTmTrainer::new(p.clone(), 12, 1, indexed).unwrap();
+            let wa = ca.train(&d.features, &d.labels, 3).unwrap();
+            let wb = cb.train_deterministic(&d.features, &d.labels, 3).unwrap();
+            assert_eq!(wa, wb, "cotm f={f} indexed={indexed}");
+        }
+    }
+}
+
+#[test]
+fn async_indexed_feedback_equals_packed_under_deterministic_schedule() {
+    // Evaluation through the inverted index is exact and consumes no
+    // randomness, so with the schedule pinned the indexed engine must
+    // be bit-identical to the packed engine at any thread count.
+    prop("async indexed == packed", 12, |g| {
+        let f = g.usize(1..48);
+        let classes = g.usize(1..4);
+        let clauses = 2 * g.usize(1..5);
+        let threads = g.usize(1..6);
+        let seed = g.u64(0..u64::MAX);
+        let epochs = g.usize(1..3);
+        let d = data::prototype_blobs(20, f, classes, 0.2, g.u64(0..u64::MAX));
+        let p = TmParams {
+            features: f,
+            clauses,
+            classes,
+            ta_states: 16,
+            threshold: 3,
+            specificity: 3.0,
+            max_weight: 4,
+        };
+        let mut a = AsyncMultiClassTrainer::new(p.clone(), seed, threads, false).unwrap();
+        let mut b = AsyncMultiClassTrainer::new(p.clone(), seed, threads, true).unwrap();
+        assert_eq!(
+            a.train_deterministic(&d.features, &d.labels, epochs).unwrap(),
+            b.train_deterministic(&d.features, &d.labels, epochs).unwrap(),
+            "multiclass f={f} threads={threads}"
+        );
+        let mut ca = AsyncCoTmTrainer::new(p.clone(), seed, threads, false).unwrap();
+        let mut cb = AsyncCoTmTrainer::new(p, seed, threads, true).unwrap();
+        assert_eq!(
+            ca.train_deterministic(&d.features, &d.labels, epochs).unwrap(),
+            cb.train_deterministic(&d.features, &d.labels, epochs).unwrap(),
+            "cotm f={f} threads={threads}"
+        );
+    });
+}
+
+#[test]
+fn async_accuracy_within_epsilon_of_reference_trainer() {
+    // The async tier's statistical bar (same epsilon as `tmtd
+    // selfcheck` and the Python mirror's pytest suite): racing workers
+    // against stale class sums must not cost real accuracy. Bits are
+    // deliberately NOT compared — nondeterminism is the design.
+    const EPS: f64 = 0.15;
+    let p = TmParams {
+        features: 20,
+        clauses: 10,
+        classes: 3,
+        ta_states: 32,
+        threshold: 8,
+        specificity: 3.0,
+        max_weight: 5,
+    };
+    for seed in [1u64, 2, 3] {
+        let d = data::prototype_blobs(90, 20, 3, 0.05, seed);
+        let m_ref =
+            train_multiclass_with(p.clone(), &d, 10, seed, TrainerEngine::Packed).unwrap();
+        let m_async = train_multiclass_async(p.clone(), &d, 10, seed, 4, false).unwrap();
+        let ra = multiclass_accuracy(&m_ref, &d.features, &d.labels);
+        let aa = multiclass_accuracy(&m_async, &d.features, &d.labels);
+        assert!(ra > 0.6, "seed {seed}: reference tier failed to learn (acc {ra})");
+        assert!(
+            (ra - aa).abs() <= EPS,
+            "seed {seed}: async accuracy {aa} drifted from reference {ra} (eps {EPS})"
+        );
+    }
 }
